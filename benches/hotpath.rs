@@ -1,0 +1,178 @@
+//! `cargo bench --bench hotpath`
+//!
+//! Micro-benchmarks of the L3 hot paths (criterion is not in the offline
+//! crate set; this is a manual median-of-N harness with warmup):
+//! RULEGEN feature extraction, LW regressor inference, UP priority
+//! computation, scheduler push/pop, consolidation, and the simulator
+//! engine itself.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rtlm::config::{DeviceProfile, Manifest, SchedParams};
+use rtlm::runtime::ArtifactStore;
+use rtlm::scheduler::{up_priority, Lane, PolicyKind, Task};
+use rtlm::sim::{run_sim, LatencyModel};
+use rtlm::uncertainty::{rules, Estimator};
+use rtlm::util::rng::Pcg64;
+
+/// median-of-samples timing: returns (median secs/iter, iters run).
+fn bench<F: FnMut()>(name: &str, iters_per_sample: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters_per_sample.min(100) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(15);
+    for _ in 0..15 {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let unit = if median < 1e-6 {
+        format!("{:8.1} ns", median * 1e9)
+    } else if median < 1e-3 {
+        format!("{:8.2} us", median * 1e6)
+    } else {
+        format!("{:8.3} ms", median * 1e3)
+    };
+    println!("{name:<44} {unit}/iter  (median of 15x{iters_per_sample})");
+}
+
+fn mk_task(rng: &mut Pcg64, id: u64) -> Task {
+    Task {
+        id,
+        text: String::new(),
+        prompt: vec![],
+        arrival: rng.f64() * 30.0,
+        priority_point: rng.f64() * 30.0 + 2.0,
+        uncertainty: 4.0 + rng.f64() * 92.0,
+        true_len: 4 + rng.range_usize(0, 92),
+        input_len: 4 + rng.range_usize(0, 40),
+        utype: "plain".into(),
+        malicious: false,
+        deferrals: 0,
+    }
+}
+
+fn main() {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", root.display());
+        std::process::exit(0);
+    }
+    let store = Arc::new(ArtifactStore::open(&root).expect("open artifacts"));
+    let m = store.manifest.clone();
+    let estimator = Estimator::new(
+        store.lexicon.clone(),
+        store.regressor.clone(),
+        m.max_input_len,
+        m.min_output_len as f64,
+        m.max_output_len as f64,
+    );
+
+    println!("== L3 hot-path micro-benchmarks ==");
+
+    let text = "What are the causes and consequences of poverty in developing countries?";
+    bench("rulegen features (tokenize+tag+6 scorers)", 2000, || {
+        std::hint::black_box(rules::features(&store.lexicon, text, m.max_input_len));
+    });
+
+    let feats = rules::features(&store.lexicon, text, m.max_input_len);
+    bench("LW regressor predict (native)", 2000, || {
+        std::hint::black_box(store.regressor.predict(&feats).unwrap());
+    });
+
+    bench("estimator score (features+regressor)", 2000, || {
+        std::hint::black_box(estimator.score(text).unwrap());
+    });
+
+    let params = SchedParams::default();
+    let mut rng = Pcg64::new(1);
+    let task = mk_task(&mut rng, 0);
+    bench("UP priority (Eq. 3)", 100_000, || {
+        std::hint::black_box(up_priority(&task, &params, 0.05, 0.0));
+    });
+
+    // scheduler push+drain at queue depth ~200
+    let tasks: Vec<Task> = (0..200).map(|i| mk_task(&mut rng, i)).collect();
+    bench("UASCHED push+drain 200 tasks", 20, || {
+        let p = SchedParams { batch_size: 16, ..Default::default() };
+        let mut policy = PolicyKind::RtLm.build(&p, 0.05, 60.0);
+        for t in tasks.iter().cloned() {
+            policy.push(t);
+        }
+        while policy.queue_len() > 0 {
+            std::hint::black_box(policy.pop_batch(Lane::Gpu, 0.0, true));
+            std::hint::black_box(policy.pop_batch(Lane::Cpu, 0.0, true));
+        }
+    });
+
+    // full simulator run, 400 tasks
+    let lat = LatencyModel::load_or_analytic(&m).expect("latency model");
+    let model = m.model("dialogpt").expect("model").clone();
+    let dev = DeviceProfile::edge_server();
+    let sim_tasks: Vec<Task> = (0..400).map(|i| mk_task(&mut rng, i)).collect();
+    bench("sim engine 400 tasks (RT-LM)", 5, || {
+        let p = SchedParams { batch_size: 16, ..Default::default() };
+        let mut policy = PolicyKind::RtLm.build(&p, model.eta, 60.0);
+        std::hint::black_box(run_sim(
+            sim_tasks.clone(),
+            &mut *policy,
+            &lat,
+            &model,
+            &dev,
+            &p,
+        ));
+    });
+
+    bench("sim engine 400 tasks (FIFO)", 5, || {
+        let p = SchedParams { batch_size: 16, ..Default::default() };
+        let mut policy = PolicyKind::Fifo.build(&p, model.eta, f64::INFINITY);
+        std::hint::black_box(run_sim(
+            sim_tasks.clone(),
+            &mut *policy,
+            &lat,
+            &model,
+            &dev,
+            &p,
+        ));
+    });
+
+    println!("\n== L1/L2 PJRT execution (real artifacts) ==");
+    let session = rtlm::model::LmSession::new(store.clone(), "t5").expect("session");
+    for b in [1usize, 8, 32] {
+        let secs = session.time_decode_step(b, 5).expect("time");
+        println!("t5 decode step b={b:<3} {:8.2} ms ({:.1} tok/s)", secs * 1e3, b as f64 / secs);
+    }
+    let secs = session.time_prefill((8, 64), 5).expect("time");
+    println!("t5 prefill b=8 s=64 {:8.2} ms", secs * 1e3);
+
+    // end-to-end generate: chunked vs single-step (the §Perf comparison)
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| store.vocab.encode(&format!("tell me about the history of art {i} ."), Some(64)))
+        .collect();
+    let lens = vec![48usize; 8];
+    std::env::set_var("RTLM_USE_CHUNKS", "1");
+    let t0 = Instant::now();
+    let g = session.generate(&prompts, &lens).expect("gen");
+    let chunked_secs = t0.elapsed().as_secs_f64();
+    std::env::remove_var("RTLM_USE_CHUNKS");
+    let mut single = rtlm::model::LmSession::new(store.clone(), "t5").expect("session");
+    single.entry.chunk_k = 0;
+    let t0 = Instant::now();
+    let g2 = single.generate(&prompts, &lens).expect("gen");
+    let single_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(g.tokens, g2.tokens);
+    println!(
+        "t5 generate 8x48 tokens: chunked {:.0} ms ({:.1} ms/tok) vs single-step {:.0} ms ({:.1} ms/tok) -> {:.2}x",
+        chunked_secs * 1e3,
+        chunked_secs * 1e3 / 48.0,
+        single_secs * 1e3,
+        single_secs * 1e3 / 48.0,
+        single_secs / chunked_secs
+    );
+}

@@ -1,0 +1,35 @@
+//! `cargo bench --bench paper_tables [-- <experiment>]`
+//!
+//! Regenerates every table and figure of the paper's evaluation section
+//! (Fig. 1-3, 4-6, 8-14, Tables III, IV, VI, VII) from the calibrated
+//! simulator + real corpus/regressor artifacts. Run a single experiment
+//! by name, or everything with no argument / 'all'.
+
+use std::sync::Arc;
+
+use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx};
+use rtlm::config::Manifest;
+use rtlm::runtime::ArtifactStore;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let exp = args.first().map(String::as_str).unwrap_or("all");
+
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("no artifacts at {} — run `make artifacts` first", root.display());
+        std::process::exit(0); // don't fail `cargo bench` on fresh clones
+    }
+    let store = Arc::new(ArtifactStore::open(&root).expect("open artifacts"));
+    let n = std::env::var("RTLM_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let ctx = ExperimentCtx::new(store, n, 7).expect("experiment context");
+    let t0 = std::time::Instant::now();
+    if let Err(e) = run_experiment(&ctx, exp) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+    eprintln!("\n[paper_tables: '{exp}' regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,81 @@
+//! Quickstart: score utterances for uncertainty, then serve a small
+//! batch through a real LM session with the full RT-LM scheduler.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use rtlm::config::{Manifest, SchedParams};
+use rtlm::model::{session::encode_prompt, LmSession};
+use rtlm::runtime::ArtifactStore;
+use rtlm::scheduler::{Lane, PolicyKind, Task};
+use rtlm::uncertainty::Estimator;
+
+fn main() -> Result<()> {
+    let store = Arc::new(ArtifactStore::open(&Manifest::default_root())?);
+    let m = &store.manifest;
+    let estimator = Estimator::new(
+        store.lexicon.clone(),
+        store.regressor.clone(),
+        m.max_input_len,
+        m.min_output_len as f64,
+        m.max_output_len as f64,
+    );
+
+    // 1) Application level: quantify uncertainty (Eq. 1).
+    let utterances = [
+        "I love pizza.",
+        "John saw a boy in the park with a telescope.",
+        "Tell me about the history of art.",
+        "What are the causes and consequences of poverty in developing countries?",
+        "How do cats and dogs differ in behavior, diet, and social interaction?",
+    ];
+    println!("=== uncertainty scores (predicted output tokens) ===");
+    let mut tasks = Vec::new();
+    for (i, text) in utterances.iter().enumerate() {
+        let (u, feats) = estimator.score_with_features(text)?;
+        println!("u = {u:5.1}  {text}");
+        tasks.push(Task {
+            id: i as u64,
+            text: text.to_string(),
+            prompt: encode_prompt(&store, text),
+            arrival: 0.0,
+            priority_point: 2.0 + 0.08 * feats[6],
+            uncertainty: u,
+            true_len: (u.round() as usize).clamp(m.min_output_len, m.max_output_len),
+            input_len: feats[6] as usize,
+            utype: "quickstart".into(),
+            malicious: false,
+            deferrals: 0,
+        });
+    }
+
+    // 2) System level: schedule with UASCHED (UP + consolidation).
+    let params = SchedParams { batch_size: 4, ..Default::default() };
+    let mut policy = PolicyKind::RtLm.build(&params, 0.05, f64::INFINITY);
+    for task in tasks {
+        policy.push(task);
+    }
+
+    // 3) Execute batches on a real PJRT session.
+    let model = "t5";
+    println!("\n=== serving on {model} (real PJRT execution) ===");
+    let session = LmSession::new(store.clone(), model)?;
+    let session = Arc::new(session);
+    while let Some(batch) = policy.pop_batch(Lane::Gpu, 0.0, true) {
+        let texts: Vec<_> = batch.tasks.iter().map(|t| t.text.clone()).collect();
+        let report = rtlm::executor::execute_gpu(&session, &batch)?;
+        println!(
+            "batch of {} in {:.0} ms ({} decode steps):",
+            report.task_ids.len(),
+            report.infer_secs * 1e3,
+            report.steps
+        );
+        for (text, out) in texts.iter().zip(&report.outputs) {
+            println!("  [{} tokens] {} -> {}", out.len(), text, store.vocab.decode(out));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Uncertainty-quantification explorer: walks the paper's application
+//! level (Sec. III-B) — the six RULEGEN scorers, the single/weighted
+//! rule baselines and the LW regressor — over the benchmark corpus and
+//! prints how well each heuristic predicts output length (Fig. 2).
+//!
+//!     cargo run --release --example uncertainty_explorer [utterance..]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use rtlm::bench_harness::scenarios::ExperimentCtx;
+use rtlm::config::Manifest;
+use rtlm::metrics::summary::pearson;
+use rtlm::metrics::table::fmt_f;
+use rtlm::metrics::Table;
+use rtlm::runtime::ArtifactStore;
+use rtlm::uncertainty::single_rule_score;
+
+fn main() -> Result<()> {
+    let store = Arc::new(ArtifactStore::open(&Manifest::default_root())?);
+    let ctx = ExperimentCtx::new(store.clone(), 200, 5)?;
+    let m = ctx.manifest();
+
+    // interactive: score user-provided utterances
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if !args.is_empty() {
+        let text = args.join(" ");
+        let (u, feats) = ctx.estimator.score_with_features(&text)?;
+        println!("text: {text}");
+        for (name, v) in m.feature_names.iter().zip(feats.iter()) {
+            println!("  {name:<12} {v:>7.2}");
+        }
+        println!("LW prediction: {u:.1} tokens");
+        return Ok(());
+    }
+
+    // corpus study: heuristic quality per uncertainty type
+    let items = ctx.all_test_items();
+    let mut table = Table::new(
+        "per-type mean LW prediction vs mean true output length",
+        &["type", "n", "mean true len", "mean LW pred", "bias"],
+    );
+    for utype in &m.uncertainty_types {
+        let of_type: Vec<_> = items.iter().filter(|i| &i.utype == utype).collect();
+        if of_type.is_empty() {
+            continue;
+        }
+        let true_mean: f64 =
+            of_type.iter().map(|i| i.mean_len()).sum::<f64>() / of_type.len() as f64;
+        let pred_mean: f64 = of_type
+            .iter()
+            .map(|i| ctx.estimator.score_features(&i.features).unwrap())
+            .sum::<f64>()
+            / of_type.len() as f64;
+        table.row(vec![
+            utype.clone(),
+            of_type.len().to_string(),
+            fmt_f(true_mean, 1),
+            fmt_f(pred_mean, 1),
+            format!("{:+.1}", pred_mean - true_mean),
+        ]);
+    }
+    table.print();
+
+    let truth: Vec<f64> = items.iter().map(|i| i.mean_len()).collect();
+    let lw: Vec<f64> = items
+        .iter()
+        .map(|i| ctx.estimator.score_features(&i.features).unwrap())
+        .collect();
+    let input_len: Vec<f64> = items.iter().map(|i| i.input_len as f64).collect();
+    let single: Vec<f64> = items
+        .iter()
+        .map(|i| single_rule_score(ctx.estimator.lexicon(), &i.text, m.max_input_len))
+        .collect();
+    println!("\ncorrelation with true output length (Fig. 2 summary):");
+    println!("  input length : r = {}", fmt_f(pearson(&input_len, &truth), 3));
+    println!("  single rule  : r = {}", fmt_f(pearson(&single, &truth), 3));
+    println!("  LW model     : r = {}", fmt_f(pearson(&lw, &truth), 3));
+    println!("\n(tip: pass an utterance as arguments to score it interactively)");
+    Ok(())
+}

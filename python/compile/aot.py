@@ -1,0 +1,399 @@
+"""AOT build: python runs ONCE here, never on the request path.
+
+``python -m compile.aot --out-dir ../artifacts`` produces everything the
+rust coordinator needs:
+
+- ``lexicon.json``        word lists + vocab + tagger rules (rust mirror input)
+- ``corpus/*.jsonl``      synthetic train/test splits + Fig.1a observation set
+- ``goldens/*.jsonl``     tokenizer/PoS/RULEGEN cross-checks for the rust tests
+- ``regressor.bin``       trained LW-regressor weights (tensor bundle)
+- ``regressor_b*.hlo.txt``  LW regressor forward, AOT-lowered per batch bucket
+- ``models/<name>/weights.bin`` + ``prefill_b*_s*.hlo.txt`` / ``decode_b*.hlo.txt``
+- ``manifest.json``       the contract: shapes, param order, file map, coefficients
+
+HLO *text* is the interchange format (not ``.serialize()``): jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+"""
+
+import argparse
+import zlib
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, lexicon, model, regressor, rulegen
+from .bundle import write_bundle
+from .common import (
+    BOS_ID,
+    DATASET_NAMES,
+    DECODE_BATCH_BUCKETS,
+    EOS_ID,
+    FEATURE_NAMES,
+    FEATURE_SCALES,
+    LENGTH_INPUT_COEF,
+    LENGTH_MODEL,
+    LENGTH_NOISE_STD,
+    MAX_INPUT_LEN,
+    MAX_OUTPUT_LEN,
+    MIN_OUTPUT_LEN,
+    MODEL_CONFIGS,
+    N_FEATURES,
+    OBSERVATION_PER_TYPE,
+    PAD_ID,
+    PREFILL_BATCH_BUCKETS,
+    PREFILL_SEQ_BUCKETS,
+    REGRESSOR_BATCH_BUCKETS,
+    REGRESSOR_HIDDEN,
+    SEED,
+    SEQ_MAX,
+    TEST_PER_DATASET,
+    TRAIN_PER_DATASET,
+    UNCERTAINTY_TYPES,
+    UNK_ID,
+    VOCAB_SIZE,
+)
+from .kernels.regressor import regressor_mlp
+from .textproc import Vocab, pos_tag, tokenize, _SUFFIX_RULES
+
+# in-graph decode chunk length (perf: cache round-trips once per K tokens)
+CHUNK_K = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_jsonl(path, records):
+    with open(path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+def export_lexicon(out_dir):
+    vocab = Vocab()
+    data = {
+        "vocab": vocab.id_to_word,
+        "pos_lexicon": lexicon.pos_lexicon(),
+        "suffix_rules": [[s, t] for s, t in _SUFFIX_RULES],
+        "nv_ambiguous": list(lexicon.NV_AMBIGUOUS),
+        "homonyms": lexicon.HOMONYMS,
+        "vague_topics": list(lexicon.VAGUE_TOPICS),
+        "vague_phrases": [list(p) for p in lexicon.VAGUE_PHRASES],
+        "open_markers": list(lexicon.OPEN_MARKERS),
+        "multipart_markers": list(lexicon.MULTIPART_MARKERS),
+        "relativizers": list(lexicon.RELATIVIZERS),
+        "wh_words": list(lexicon.WH_WORDS),
+        "vague_adjectives": ["general", "overall", "broad"],
+        "open_wh_starters": ["what", "why", "how"],
+    }
+    with open(os.path.join(out_dir, "lexicon.json"), "w") as f:
+        json.dump(data, f, sort_keys=True)
+    return vocab
+
+
+def _with_features(records):
+    for rec in records:
+        rec["features"] = rulegen.features(rec["text"])
+    return records
+
+
+def build_corpus(out_dir, quick=False):
+    cdir = os.path.join(out_dir, "corpus")
+    os.makedirs(cdir, exist_ok=True)
+    n_train = 100 if quick else TRAIN_PER_DATASET
+    n_test = 50 if quick else TEST_PER_DATASET
+    n_obs = 50 if quick else OBSERVATION_PER_TYPE
+
+    files = {"train": {}, "test": {}}
+    train_records = []
+    for i, ds in enumerate(DATASET_NAMES):
+        tr = _with_features(corpus.generate_split(ds, n_train, SEED + 11 * i))
+        te = _with_features(corpus.generate_split(ds, n_test, SEED + 11 * i + 5))
+        write_jsonl(os.path.join(cdir, f"train_{ds}.jsonl"), tr)
+        write_jsonl(os.path.join(cdir, f"test_{ds}.jsonl"), te)
+        files["train"][ds] = f"corpus/train_{ds}.jsonl"
+        files["test"][ds] = f"corpus/test_{ds}.jsonl"
+        train_records.extend(tr)
+
+    obs = _with_features(corpus.generate_observation_set(n_obs, SEED + 999))
+    write_jsonl(os.path.join(cdir, "observation.jsonl"), obs)
+    files["observation"] = "corpus/observation.jsonl"
+    return files, train_records
+
+
+def build_goldens(out_dir, vocab):
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+
+    # A sample covering every generator plus hand-written edge cases.
+    samples = [
+        "Can you tell me the history of art?",
+        "John saw a boy in the park with a telescope.",
+        "Rice flies like sand.",
+        "What's the best way to deal with bats?",
+        "What are the causes and consequences of poverty in developing countries?",
+        "How do cats and dogs differ in behavior, diet, and social interaction?",
+        "I love pizza.",
+        "",
+        "  multiple   spaces  and, punctuation!! here?",
+        "tell me about the philosophy of time .",
+    ]
+    import random as _random
+
+    rng = _random.Random(SEED + 777)
+    for utype in UNCERTAINTY_TYPES:
+        for _ in range(30):
+            samples.append(corpus.GENERATORS[utype](rng))
+
+    records = []
+    for text in samples:
+        toks = tokenize(text)
+        records.append(
+            {
+                "text": text,
+                "tokens": toks,
+                "tags": pos_tag(toks),
+                "ids": vocab.encode(text),
+                "features": rulegen.features(text),
+            }
+        )
+    write_jsonl(os.path.join(gdir, "textproc_golden.jsonl"), records)
+    return {"textproc": "goldens/textproc_golden.jsonl"}
+
+
+def train_regressor_stage(out_dir, train_records, quick=False):
+    feats = np.asarray([r["features"] for r in train_records], np.float32)
+    # Target: mean output length across the five LMs (the paper's Fig. 2
+    # correlates against the cross-LM average output length).
+    targets = np.asarray(
+        [np.mean(list(r["lens"].values())) for r in train_records], np.float32
+    )
+    epochs = 10 if quick else 100
+    t0 = time.time()
+    params, history = regressor.train(feats, targets, seed=SEED & 0xFFFF, epochs=epochs)
+    train_secs = time.time() - t0
+
+    tensors = []
+    param_names = []
+    for i, (w, b) in enumerate(params):
+        tensors.append((f"w{i}", np.asarray(w)))
+        tensors.append((f"b{i}", np.asarray(b)))
+        param_names += [f"w{i}", f"b{i}"]
+    write_bundle(os.path.join(out_dir, "regressor.bin"), tensors)
+
+    # Fit the 'weighted rule' linear model (Fig. 2c baseline) on the same
+    # split: output_len ~ w . features + c, via least squares.
+    a = np.concatenate([feats, np.ones((feats.shape[0], 1), np.float32)], axis=1)
+    coef, *_ = np.linalg.lstsq(a, targets, rcond=None)
+
+    # Lower the regressor forward per batch bucket, weights as parameters.
+    def fwd(params_flat, raw_feats):
+        ps = [(params_flat[2 * i], params_flat[2 * i + 1]) for i in range(len(params_flat) // 2)]
+        normed = raw_feats / jnp.asarray(FEATURE_SCALES, jnp.float32)
+        return (regressor_mlp(normed, ps),)
+
+    hlo_files = {}
+    for b in REGRESSOR_BATCH_BUCKETS:
+        specs = [jax.ShapeDtypeStruct(np.asarray(t).shape, jnp.float32) for _, t in tensors]
+        feat_spec = jax.ShapeDtypeStruct((b, N_FEATURES), jnp.float32)
+        lowered = jax.jit(fwd).lower(specs, feat_spec)
+        path = f"regressor_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        hlo_files[str(b)] = path
+
+    final_loss = history[-1] if history else float("nan")
+    return {
+        "weights": "regressor.bin",
+        "param_names": param_names,
+        "layer_sizes": list(regressor.LAYER_SIZES),
+        "hlo": hlo_files,
+        "train_seconds": train_secs,
+        "train_epochs": epochs,
+        "final_train_mse": final_loss,
+        "weighted_rule": {"coef": coef[:-1].tolist(), "intercept": float(coef[-1])},
+    }
+
+
+def build_model_stage(out_dir, name, quick=False):
+    cfg = MODEL_CONFIGS[name]
+    mdir = os.path.join(out_dir, "models", name)
+    os.makedirs(mdir, exist_ok=True)
+
+    name_seed = zlib.crc32(name.encode()) & 0xFFFF
+    params = model.init_params(cfg, SEED ^ name_seed)
+    names = model.param_names(cfg)
+    write_bundle(
+        os.path.join(mdir, "weights.bin"),
+        [(n, np.asarray(p)) for n, p in zip(names, params)],
+    )
+
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    entry = {
+        "config": {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+        },
+        "eta": cfg.eta,
+        "phi": cfg.phi,
+        "gamma": cfg.gamma,
+        "delta": cfg.delta,
+        "weights": f"models/{name}/weights.bin",
+        "param_names": names,
+        "prefill": {},
+        "decode": {},
+    }
+
+    prefill_bs = PREFILL_BATCH_BUCKETS[:2] if quick else PREFILL_BATCH_BUCKETS
+    prefill_ss = PREFILL_SEQ_BUCKETS[:1] if quick else PREFILL_SEQ_BUCKETS
+    decode_bs = DECODE_BATCH_BUCKETS[:2] if quick else DECODE_BATCH_BUCKETS
+
+    pf = functools.partial(model.prefill, cfg)
+    for b in prefill_bs:
+        for s in prefill_ss:
+            t0 = time.time()
+            lowered = jax.jit(pf).lower(
+                param_specs,
+                jax.ShapeDtypeStruct((b, s), jnp.int32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+            )
+            rel = f"models/{name}/prefill_b{b}_s{s}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entry["prefill"][f"{b},{s}"] = rel
+            print(f"  prefill b={b} s={s}: {time.time()-t0:.1f}s")
+
+    dc = functools.partial(model.decode_step, cfg)
+    for b in decode_bs:
+        t0 = time.time()
+        cache = jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, cfg.n_heads, SEQ_MAX, cfg.head_dim), jnp.float32
+        )
+        lowered = jax.jit(dc).lower(
+            param_specs,
+            cache,
+            cache,
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        rel = f"models/{name}/decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["decode"][str(b)] = rel
+        print(f"  decode b={b}: {time.time()-t0:.1f}s")
+
+    # multi-token chunks: K steps in-graph, cache stays on-device
+    entry["decode_chunk"] = {}
+    entry["chunk_k"] = CHUNK_K
+    dchunk = functools.partial(model.decode_chunk, cfg, CHUNK_K)
+    for b in decode_bs:
+        t0 = time.time()
+        cache = jax.ShapeDtypeStruct(
+            (cfg.n_layers, b, cfg.n_heads, SEQ_MAX, cfg.head_dim), jnp.float32
+        )
+        lowered = jax.jit(dchunk).lower(
+            param_specs,
+            cache,
+            cache,
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        rel = f"models/{name}/decode_chunk_b{b}_k{CHUNK_K}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["decode_chunk"][str(b)] = rel
+        print(f"  decode_chunk b={b} k={CHUNK_K}: {time.time()-t0:.1f}s")
+
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", nargs="*", default=list(MODEL_CONFIGS))
+    ap.add_argument("--quick", action="store_true", help="small corpus / few buckets (tests only)")
+    ap.add_argument("--skip-models", action="store_true", help="corpus + regressor only")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+
+    print("[1/5] lexicon + vocab")
+    vocab = export_lexicon(out_dir)
+
+    print("[2/5] corpus")
+    corpus_files, train_records = build_corpus(out_dir, quick=args.quick)
+
+    print("[3/5] goldens")
+    golden_files = build_goldens(out_dir, vocab)
+
+    print("[4/5] LW regressor (train + lower)")
+    regressor_entry = train_regressor_stage(out_dir, train_records, quick=args.quick)
+    print(f"  final train MSE: {regressor_entry['final_train_mse']:.2f}")
+
+    models_entry = {}
+    if not args.skip_models:
+        for i, name in enumerate(args.models):
+            print(f"[5/5] model {name} ({i+1}/{len(args.models)})")
+            models_entry[name] = build_model_stage(out_dir, name, quick=args.quick)
+
+    manifest = {
+        "version": 1,
+        "seed": SEED,
+        "vocab_size": VOCAB_SIZE,
+        "pad_id": PAD_ID,
+        "bos_id": BOS_ID,
+        "eos_id": EOS_ID,
+        "unk_id": UNK_ID,
+        "seq_max": SEQ_MAX,
+        "max_input_len": MAX_INPUT_LEN,
+        "max_output_len": MAX_OUTPUT_LEN,
+        "min_output_len": MIN_OUTPUT_LEN,
+        "feature_names": list(FEATURE_NAMES),
+        "feature_scales": list(FEATURE_SCALES),
+        "uncertainty_types": list(UNCERTAINTY_TYPES),
+        "length_model": {k: list(v) for k, v in LENGTH_MODEL.items()},
+        "length_input_coef": LENGTH_INPUT_COEF,
+        "length_noise_std": LENGTH_NOISE_STD,
+        "regressor_hidden": list(REGRESSOR_HIDDEN),
+        "buckets": {
+            "prefill_batch": list(PREFILL_BATCH_BUCKETS),
+            "prefill_seq": list(PREFILL_SEQ_BUCKETS),
+            "decode_batch": list(DECODE_BATCH_BUCKETS),
+            "regressor_batch": list(REGRESSOR_BATCH_BUCKETS),
+        },
+        "corpus": corpus_files,
+        "goldens": golden_files,
+        "regressor": regressor_entry,
+        "models": models_entry,
+        "lexicon": "lexicon.json",
+        "quick": args.quick,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, sort_keys=True, indent=1)
+
+    print(f"artifacts written to {out_dir} in {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Tensor-bundle binary format (``*.bin``) shared with the rust runtime.
+
+Layout (little-endian):
+
+    magic   8 bytes  b"RTLMTB01"
+    count   u32      number of tensors
+    per tensor:
+        name_len  u16
+        name      name_len bytes (utf-8)
+        dtype     u8   (0 = f32, 1 = i32)
+        ndim      u8
+        dims      ndim * u32
+        data      prod(dims) * 4 bytes raw
+
+The rust reader lives in ``rust/src/runtime/bundle.rs``; keep the two in
+lockstep.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"RTLMTB01"
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_bundle(path, tensors):
+    """tensors: list of (name, np.ndarray with dtype float32 or int32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float32:
+                dt = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dt = DTYPE_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_bundle(path):
+    """Inverse of write_bundle -> list of (name, np.ndarray)."""
+    out = []
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError("bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = 1
+            for d in dims:
+                n *= d
+            dtype = np.float32 if dt == DTYPE_F32 else np.int32
+            arr = np.frombuffer(f.read(4 * n), dtype=dtype).reshape(dims)
+            out.append((name, arr))
+    return out

@@ -1,0 +1,175 @@
+"""Shared build-time constants for the RT-LM reproduction.
+
+Everything the rust runtime needs to agree on (model shapes, bucket sets,
+vocabulary layout, feature scales) is defined here once and exported into
+``artifacts/manifest.json`` by ``aot.py``.
+"""
+
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Global sequence / vocab layout
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 2048
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+UNK_ID = 3
+N_SPECIAL = 4
+
+MAX_INPUT_LEN = 64  # tokens, inputs longer than this are truncated
+MAX_OUTPUT_LEN = 96  # tokens, the length oracle clamps here
+SEQ_MAX = 176  # KV-cache capacity: input + output + slack
+
+# Static shape buckets compiled ahead of time. The rust runtime pads a
+# request (or batch) up to the nearest bucket.
+PREFILL_SEQ_BUCKETS = (16, 32, 64)
+PREFILL_BATCH_BUCKETS = (1, 4, 8)
+DECODE_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32)
+REGRESSOR_BATCH_BUCKETS = (1, 16)
+
+# ---------------------------------------------------------------------------
+# Model variants (stand-ins for the paper's five HuggingFace LMs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration for one LM variant."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    # Length-oracle calibration: actual output length for this LM is
+    # round(gamma * base_len + delta) + noise, mirroring that the paper's
+    # five LMs generate systematically different lengths (Fig. 1a).
+    gamma: float
+    delta: float
+    # Paper's scheduling coefficients (Sec. V-A): eta projects output
+    # tokens to seconds, phi projects input tokens to the priority point.
+    eta: float
+    phi: float
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Sizes are chosen so the per-token latency ordering matches the paper's
+# eta coefficients (blenderbot slowest, godel/t5 fastest).
+MODEL_CONFIGS = {
+    "dialogpt": ModelConfig("dialogpt", 4, 256, 4, 1024, 1.00, 0.0, 0.05, 0.08),
+    "godel": ModelConfig("godel", 3, 256, 4, 1024, 1.05, 1.0, 0.04, 0.10),
+    "blenderbot": ModelConfig("blenderbot", 6, 320, 5, 1280, 1.10, 2.0, 0.10, 0.13),
+    "bart": ModelConfig("bart", 4, 256, 4, 1280, 0.85, -1.0, 0.05, 0.08),
+    "t5": ModelConfig("t5", 3, 192, 3, 768, 0.90, 0.0, 0.04, 0.07),
+}
+
+MODEL_NAMES = tuple(MODEL_CONFIGS)
+
+# ---------------------------------------------------------------------------
+# Uncertainty quantification
+# ---------------------------------------------------------------------------
+
+UNCERTAINTY_TYPES = (
+    "plain",
+    "structural",
+    "syntactic",
+    "semantic",
+    "vague",
+    "open",
+    "multipart",
+)
+
+# Feature vector layout fed to the LW regressor: six rule scores plus the
+# input length (the paper substitutes input length as the score for
+# pattern-free sentences; we expose it as an explicit seventh feature).
+FEATURE_NAMES = (
+    "structural",
+    "syntactic",
+    "semantic",
+    "vague",
+    "open",
+    "multipart",
+    "input_len",
+)
+N_FEATURES = len(FEATURE_NAMES)
+
+# Fixed normalisation scales applied before the MLP (features / scale).
+FEATURE_SCALES = (10.0, 10.0, 10.0, 10.0, 10.0, 10.0, float(MAX_INPUT_LEN))
+
+# LW regressor hidden sizes (paper Sec. V-A: [100, 200, 200, 100]).
+REGRESSOR_HIDDEN = (100, 200, 200, 100)
+
+# Ground-truth length model per uncertainty type: (mean, std) of the base
+# output length before the input-length contribution. Ordering follows
+# Fig. 1a: plain < structural ~ syntactic < semantic < vague < multipart
+# < open.
+LENGTH_MODEL = {
+    "plain": (12.0, 3.0),
+    "structural": (22.0, 5.0),
+    "syntactic": (20.0, 5.0),
+    "semantic": (30.0, 7.0),
+    "vague": (38.0, 6.0),
+    "open": (42.0, 7.0),
+    "multipart": (40.0, 6.0),
+}
+# Additional contribution of the input length to the output length.
+LENGTH_INPUT_COEF = 0.35
+LENGTH_NOISE_STD = 3.0
+MIN_OUTPUT_LEN = 4
+
+# ---------------------------------------------------------------------------
+# Benchmark dataset mixtures (synthetic stand-ins for the four HF corpora)
+# ---------------------------------------------------------------------------
+
+# type -> sampling weight per dataset flavour.
+DATASET_MIXTURES = {
+    "blended_skill_talk": {
+        "plain": 0.30,
+        "structural": 0.12,
+        "syntactic": 0.10,
+        "semantic": 0.12,
+        "vague": 0.12,
+        "open": 0.12,
+        "multipart": 0.12,
+    },
+    "personachat": {
+        "plain": 0.45,
+        "structural": 0.10,
+        "syntactic": 0.08,
+        "semantic": 0.10,
+        "vague": 0.10,
+        "open": 0.09,
+        "multipart": 0.08,
+    },
+    "convai2": {
+        "plain": 0.40,
+        "structural": 0.10,
+        "syntactic": 0.10,
+        "semantic": 0.10,
+        "vague": 0.10,
+        "open": 0.10,
+        "multipart": 0.10,
+    },
+    "empathetic_dialogues": {
+        "plain": 0.25,
+        "structural": 0.08,
+        "syntactic": 0.07,
+        "semantic": 0.10,
+        "vague": 0.15,
+        "open": 0.25,
+        "multipart": 0.10,
+    },
+}
+
+DATASET_NAMES = tuple(DATASET_MIXTURES)
+
+TRAIN_PER_DATASET = 1000
+TEST_PER_DATASET = 400
+OBSERVATION_PER_TYPE = 1000  # Fig. 1a study size
+
+SEED = 0x52544C4D  # "RTLM"

@@ -1,0 +1,191 @@
+"""Synthetic dialogue corpus generator.
+
+Substitute for the paper's four HuggingFace benchmark datasets (Blended
+Skill Talk, PersonaChat, ConvAI2, Empathetic Dialogues), which are not
+available offline. Each generated utterance carries:
+
+- a primary uncertainty type and template-generated text whose RULEGEN
+  features genuinely reflect that type,
+- a ground-truth *base* output length drawn from the per-type length model
+  (calibrated to the relative ordering in the paper's Fig. 1a),
+- per-LM actual output lengths (round(gamma_f * base + delta_f) + noise),
+  mirroring that the five LMs respond with systematically different
+  verbosity.
+
+The LM decode loop then generates exactly that many real tokens (the
+"length oracle") — see DESIGN.md §Substitutions.
+"""
+
+import random
+
+from . import lexicon
+from .common import (
+    DATASET_MIXTURES,
+    LENGTH_INPUT_COEF,
+    LENGTH_MODEL,
+    LENGTH_NOISE_STD,
+    MAX_OUTPUT_LEN,
+    MIN_OUTPUT_LEN,
+    MODEL_CONFIGS,
+    UNCERTAINTY_TYPES,
+)
+from .textproc import tokenize
+
+# ---------------------------------------------------------------------------
+# Utterance templates per uncertainty type
+# ---------------------------------------------------------------------------
+
+
+def _gen_plain(rng):
+    subj = rng.choice(lexicon.PLAIN_SUBJECTS)
+    verb = rng.choice(lexicon.PLAIN_VERBS)
+    obj = rng.choice(lexicon.PLAIN_OBJECTS)
+    forms = [
+        f"{subj} {verb} {obj} .",
+        f"{subj} really {verb} {obj} .",
+        f"{subj} {verb} {obj} and {rng.choice(lexicon.PLAIN_OBJECTS)} .",
+        f"do you {verb} {obj} ?",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_structural(rng):
+    subj = rng.choice(lexicon.PLAIN_SUBJECTS)
+    n1 = rng.choice(lexicon.CONCRETE_NOUNS)
+    place = rng.choice(lexicon.PLACES)
+    n2 = rng.choice(lexicon.CONCRETE_NOUNS)
+    forms = [
+        f"{subj} saw a {n1} in the {place} with a {n2} .",
+        f"{subj} saw the {n1} near the {place} with a {n2} on the bench .",
+        f"{subj} watched a {n1} by the {place} with a {n2} from the {rng.choice(lexicon.PLACES)} .",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_syntactic(rng):
+    w1 = rng.choice(lexicon.NV_AMBIGUOUS)
+    w2 = rng.choice(lexicon.NV_AMBIGUOUS)
+    n = rng.choice(lexicon.CONCRETE_NOUNS)
+    forms = [
+        f"rice {w1} like sand .",
+        f"{n} {w1} {w2} fast .",
+        f"the {w1} {w2} near water .",
+        f"{w1} {w2} can {rng.choice(lexicon.NV_AMBIGUOUS)} .",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_semantic(rng):
+    h = rng.choice(list(lexicon.HOMONYMS))
+    h2 = rng.choice(list(lexicon.HOMONYMS))
+    forms = [
+        f"what's the best way to deal with {h} ?",
+        f"i found a {h} next to the {h2} yesterday .",
+        f"can you help me with the {h} ?",
+        f"the {h} was right by the {h2} .",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_vague(rng):
+    topic = rng.choice(lexicon.VAGUE_TOPICS)
+    topic2 = rng.choice(lexicon.VAGUE_TOPICS)
+    forms = [
+        f"tell me about the {topic} of {topic2} .",
+        f"what do you think about {topic} ?",
+        f"describe the {topic} of {topic2} in general .",
+        f"tell me about {topic} .",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_open(rng):
+    topic = rng.choice(lexicon.VAGUE_TOPICS)
+    marker = rng.choice(lexicon.OPEN_MARKERS)
+    where = rng.choice(lexicon.COUNTRY_TOPICS)
+    forms = [
+        f"what are the {marker} and {rng.choice(lexicon.OPEN_MARKERS)} of poverty in {where} ?",
+        f"why does {topic} have such {marker} for {where} ?",
+        f"what is the {marker} of {topic} ?",
+        f"how do you think {topic} shapes the {marker} of {where} ?",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_multipart(rng):
+    a, b = rng.choice(lexicon.COMPARE_PAIRS)
+    aspects = rng.sample(list(lexicon.COMPARE_ASPECTS), 3)
+    forms = [
+        f"how do {a} and {b} differ in {aspects[0]} , {aspects[1]} , and {aspects[2]} ?",
+        f"compare {a} and {b} in terms of {aspects[0]} and {aspects[1]} ?",
+        f"what are {a} like , and how do they compare with {b} in {aspects[0]} ?",
+    ]
+    return rng.choice(forms)
+
+
+GENERATORS = {
+    "plain": _gen_plain,
+    "structural": _gen_structural,
+    "syntactic": _gen_syntactic,
+    "semantic": _gen_semantic,
+    "vague": _gen_vague,
+    "open": _gen_open,
+    "multipart": _gen_multipart,
+}
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth length model
+# ---------------------------------------------------------------------------
+
+
+def base_length(utype: str, input_len: int, rng) -> int:
+    mean, std = LENGTH_MODEL[utype]
+    raw = rng.gauss(mean, std) + LENGTH_INPUT_COEF * input_len
+    return int(max(MIN_OUTPUT_LEN, min(MAX_OUTPUT_LEN, round(raw))))
+
+
+def model_lengths(base: int, rng):
+    """Per-LM actual output length derived from the base length."""
+    lens = {}
+    for name, cfg in MODEL_CONFIGS.items():
+        raw = cfg.gamma * base + cfg.delta + rng.gauss(0.0, LENGTH_NOISE_STD)
+        lens[name] = int(max(MIN_OUTPUT_LEN, min(MAX_OUTPUT_LEN, round(raw))))
+    return lens
+
+
+def make_utterance(utype: str, rng):
+    """One corpus record (dict ready for JSONL)."""
+    text = GENERATORS[utype](rng)
+    input_len = len(tokenize(text))
+    base = base_length(utype, input_len, rng)
+    return {
+        "text": text,
+        "type": utype,
+        "input_len": input_len,
+        "base_len": base,
+        "lens": model_lengths(base, rng),
+    }
+
+
+def generate_split(dataset: str, n: int, seed: int):
+    """n utterances sampled from the dataset's type mixture."""
+    rng = random.Random(seed)
+    mixture = DATASET_MIXTURES[dataset]
+    types = list(mixture)
+    weights = [mixture[t] for t in types]
+    out = []
+    for _ in range(n):
+        utype = rng.choices(types, weights=weights, k=1)[0]
+        out.append(make_utterance(utype, rng))
+    return out
+
+
+def generate_observation_set(n_per_type: int, seed: int):
+    """Fig. 1a study corpus: n utterances for each uncertainty type."""
+    rng = random.Random(seed)
+    out = []
+    for utype in UNCERTAINTY_TYPES:
+        for _ in range(n_per_type):
+            out.append(make_utterance(utype, rng))
+    return out

@@ -1,0 +1,112 @@
+"""Pallas attention kernels (L1).
+
+TPU-idiomatic structure: the grid walks batch rows (decode) or
+(batch, head) pairs (prefill), each step staging one query/cache block
+from HBM into VMEM via BlockSpec. The softmax is computed in fp32 inside
+the block (numerically-stable max-subtraction), and the contraction is a
+single MXU-shaped matmul per block.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The BlockSpecs are
+still the real HBM↔VMEM schedule a TPU build would use (see DESIGN.md
+§Kernel-roofline for the VMEM/MXU estimates).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    """One batch row: q [H, Dh] against cache [H, S, Dh]."""
+    q = q_ref[0]  # [H, Dh]
+    k = k_ref[0]  # [H, S, Dh]
+    v = v_ref[0]  # [H, S, Dh]
+    n_valid = len_ref[0]  # scalar int32
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # scores[h, s] = q[h, :] . k[h, s, :]
+    scores = jnp.einsum("hd,hsd->hs", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    s = k.shape[1]
+    positions = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1)
+    scores = jnp.where(positions < n_valid, scores, NEG_INF)
+
+    # stable softmax in fp32
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[0] = jnp.einsum("hs,hsd->hd", p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="decode_attention")
+def decode_attention(q, k_cache, v_cache, lengths):
+    """Single-step attention over a KV cache (see ref.decode_attention_ref).
+
+    q: [B, H, Dh]; k_cache/v_cache: [B, H, S, Dh]; lengths: [B] int32.
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(q, k_cache, v_cache, lengths)
+
+
+def _prefill_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    """One (batch, head) pair: causal attention over the full block."""
+    q = q_ref[0, 0]  # [S, Dh]
+    k = k_ref[0, 0]  # [S, Dh]
+    v = v_ref[0, 0]  # [S, Dh]
+    n_valid = len_ref[0]
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    mask = (cols <= rows) & (cols < n_valid)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="prefill_attention")
+def prefill_attention(q, k, v, lengths):
+    """Causal self-attention over padded prefill inputs.
+
+    q/k/v: [B, H, S, Dh]; lengths: [B] int32.
+    """
+    b, h, s, dh = q.shape
+    return pl.pallas_call(
+        _prefill_attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0)),
+        interpret=True,
+    )(q, k, v, lengths)

@@ -1,0 +1,53 @@
+"""Pallas fused transformer FFN kernel (L1): gelu(x@w1+b1)@w2+b2.
+
+Row-tiled: the grid walks tiles of input rows; both weight matrices are
+staged whole into VMEM (they fit comfortably for every model variant —
+see DESIGN.md §Kernel-roofline), so each grid step performs two
+MXU-shaped matmuls and the GELU without touching HBM in between. This is
+exactly the fusion the paper's GPU implementation gets from a fused
+epilogue; on TPU it is the natural VMEM-resident schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # [R, D]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = jax.nn.gelu(h, approximate=True)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _row_tile(n: int) -> int:
+    """Largest power-of-two tile <= 128 that divides n."""
+    tile = min(n, 128)
+    while n % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+@functools.partial(jax.named_call, name="ffn")
+def ffn(x, w1, b1, w2, b2):
+    """x: [N, D] -> [N, D] (see ref.ffn_ref)."""
+    n, d = x.shape
+    f = w1.shape[1]
+    tile = _row_tile(n)
+    return pl.pallas_call(
+        _ffn_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,49 @@
+"""Pallas fused residual-add + LayerNorm kernel (L1).
+
+Fuses the residual add into the normalisation so the intermediate
+``x + res`` tensor never round-trips to HBM — the standard fusion for
+transformer blocks. Row-tiled like the FFN kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, res_ref, g_ref, b_ref, o_ref):
+    y = x_ref[...] + res_ref[...]  # [R, D]
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mean), axis=-1, keepdims=True)
+    normed = (y - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (normed * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _row_tile(n: int) -> int:
+    tile = min(n, 128)
+    while n % tile != 0:
+        tile //= 2
+    return max(tile, 1)
+
+
+@functools.partial(jax.named_call, name="layernorm_residual")
+def layernorm_residual(x, res, gamma, beta):
+    """LayerNorm(x + res) * gamma + beta; x/res: [N, D]."""
+    n, d = x.shape
+    tile = _row_tile(n)
+    return pl.pallas_call(
+        _ln_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, res, gamma, beta)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` mirrors the semantics of the corresponding kernel in this
+package; ``python/tests`` sweeps shapes/dtypes with hypothesis and asserts
+``allclose`` between the two. The L2 model may call either implementation
+(``model.py`` uses the kernels; tests use these)."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-step attention over a KV cache.
+
+    q: [B, H, Dh] query for the current position.
+    k_cache/v_cache: [B, H, S, Dh] with valid entries in [0, lengths[b]).
+    lengths: [B] int32 number of valid cache slots per row.
+    returns: [B, H, Dh].
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale
+    s = k_cache.shape[2]
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache)
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Causal self-attention over padded prefill inputs.
+
+    q/k/v: [B, H, S, Dh]; positions >= lengths[b] are padding.
+    returns: [B, H, S, Dh] (padding query rows are computed but ignored by
+    callers).
+    """
+    dh = q.shape[-1]
+    s = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    mask = causal[None, None, :, :] & valid
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused transformer FFN: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: [N, D]; w1: [D, F]; b1: [F]; w2: [F, D]; b2: [D].
+    """
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def layernorm_residual_ref(x, res, gamma, beta, eps=1e-5):
+    """LayerNorm(x + res) * gamma + beta over the last axis."""
+    y = x + res
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mean), axis=-1, keepdims=True)
+    return (y - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def regressor_mlp_ref(feats, params):
+    """LW uncertainty regressor: ReLU MLP, linear scalar head.
+
+    feats: [B, F_in] normalised features.
+    params: [(w, b), ...] with the last layer mapping to 1 unit.
+    returns: [B] predicted output lengths.
+    """
+    h = feats
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h[:, 0]

@@ -1,0 +1,50 @@
+"""Pallas kernel for the LW uncertainty regressor (L1).
+
+The whole MLP ([7 -> 100 -> 200 -> 200 -> 100 -> 1], ReLU) runs in one
+grid step with every weight resident in VMEM (~130 KB total) — the model
+is small enough that a single fused kernel is the optimal schedule; the
+paper reports the same observation (Table VII: prioritisation cost is
+dominated by feature extraction, not the MLP).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _regressor_kernel(*refs):
+    # refs = (feats, w0, b0, w1, b1, ..., out)
+    f_ref = refs[0]
+    o_ref = refs[-1]
+    weight_refs = refs[1:-1]
+    h = f_ref[...]
+    n_layers = len(weight_refs) // 2
+    for i in range(n_layers):
+        w = weight_refs[2 * i][...]
+        b = weight_refs[2 * i + 1][...]
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if i + 1 < n_layers:
+            h = jnp.maximum(h, 0.0)
+    o_ref[...] = h[:, 0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="regressor_mlp")
+def regressor_mlp(feats, params):
+    """feats: [B, F_in]; params: [(w, b), ...] -> [B] predictions."""
+    b = feats.shape[0]
+    flat = []
+    specs = [pl.BlockSpec(feats.shape, lambda: (0,) * 2)]
+    for w, bias in params:
+        flat.extend([w, bias])
+        specs.append(pl.BlockSpec(w.shape, lambda: (0, 0)))
+        specs.append(pl.BlockSpec(bias.shape, lambda: (0,)))
+    return pl.pallas_call(
+        _regressor_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), feats.dtype),
+        grid=(),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((b,), lambda: (0,)),
+        interpret=True,
+    )(feats, *flat)

@@ -1,0 +1,231 @@
+"""Lexicons shared by the corpus generator, the rule scorers (RULEGEN) and
+the PoS-lite tagger.
+
+The paper uses spaCy for tokenisation/PoS tagging inside RULEGEN
+(Listing 1). spaCy is not available offline, so RT-LM substitutes a
+deterministic lexicon + suffix-heuristic tagger; this module is the single
+source of truth for its word lists. ``aot.py`` exports everything here to
+``artifacts/lexicon.json`` so the rust runtime mirror
+(``rust/src/textgen``) stays byte-identical with the python build path.
+"""
+
+# --- PoS-lite tag inventory -------------------------------------------------
+
+TAG_NOUN = "NOUN"
+TAG_VERB = "VERB"
+TAG_ADJ = "ADJ"
+TAG_ADV = "ADV"
+TAG_PRON = "PRON"
+TAG_DET = "DET"
+TAG_ADP = "ADP"  # prepositions
+TAG_CONJ = "CONJ"
+TAG_WH = "WH"
+TAG_PUNCT = "PUNCT"
+TAG_OTHER = "OTHER"
+
+WH_WORDS = ("what", "why", "how", "who", "whom", "whose", "which", "when", "where")
+
+PREPOSITIONS = (
+    "in", "on", "at", "with", "by", "for", "from", "to", "of", "about",
+    "into", "over", "under", "between", "through", "during", "against",
+    "across", "behind", "beyond", "near", "without", "within",
+)
+
+DETERMINERS = ("the", "a", "an", "this", "that", "these", "those", "some", "any", "each", "every", "no")
+
+CONJUNCTIONS = ("and", "or", "but", "nor", "so", "yet", "both", "either", "neither")
+
+PRONOUNS = (
+    "i", "you", "he", "she", "it", "we", "they", "me", "him", "her", "us",
+    "them", "my", "your", "his", "its", "our", "their", "myself", "yourself",
+)
+
+COMMON_VERBS = (
+    "is", "am", "are", "was", "were", "be", "been", "being", "do", "does",
+    "did", "have", "has", "had", "can", "could", "will", "would", "shall",
+    "should", "may", "might", "must", "saw", "see", "seen", "tell", "told",
+    "say", "said", "think", "thought", "know", "knew", "want", "wanted",
+    "go", "went", "gone", "get", "got", "make", "made", "take", "took",
+    "eat", "ate", "love", "loved", "hate", "talk", "talked", "deal", "ask",
+    "asked", "describe", "explain", "compare", "differ", "feel", "felt",
+    "give", "gave", "find", "found", "help", "look", "looked", "come",
+    "came", "work", "worked", "live", "lived", "enjoy", "enjoyed",
+)
+
+COMMON_ADJECTIVES = (
+    "good", "bad", "big", "small", "new", "old", "long", "short", "best",
+    "worst", "favorite", "great", "nice", "happy", "sad", "young", "broad",
+    "general", "overall", "main", "major", "common", "different", "similar",
+    "important", "interesting", "difficult", "easy", "beautiful", "strange",
+)
+
+COMMON_ADVERBS = ("very", "really", "quite", "always", "never", "often", "sometimes", "usually", "also", "too", "not")
+
+# --- Ambiguity lexicons -----------------------------------------------------
+
+# Words that read as noun OR verb (syntactic / part-of-speech ambiguity).
+NV_AMBIGUOUS = (
+    "flies", "like", "watch", "play", "run", "walk", "duck", "rose", "saw",
+    "park", "bear", "train", "fly", "ship", "point", "light", "fire",
+    "cook", "dance", "plant", "hide", "wave", "stick", "ring", "swing",
+)
+
+# Homonyms with their (approximate) sense counts — semantic ambiguity.
+HOMONYMS = {
+    "bat": 3,
+    "bats": 3,
+    "trunk": 4,
+    "monitor": 3,
+    "bank": 3,
+    "spring": 4,
+    "crane": 3,
+    "pitcher": 2,
+    "bark": 3,
+    "seal": 3,
+    "bolt": 3,
+    "match": 3,
+    "mouse": 2,
+    "key": 3,
+    "note": 3,
+    "club": 3,
+    "scale": 4,
+    "organ": 2,
+    "palm": 2,
+    "ruler": 2,
+    "letter": 2,
+    "wave": 2,
+    "right": 3,
+    "kind": 2,
+    "mine": 2,
+    "bright": 2,
+}
+
+# Broad/vague topic nouns (vague expressions, Listing 1 style).
+VAGUE_TOPICS = (
+    "history", "art", "culture", "life", "society", "science", "future",
+    "nature", "technology", "philosophy", "music", "politics", "economy",
+    "education", "world", "universe", "humanity", "progress", "freedom",
+    "happiness", "knowledge", "reality", "time", "existence",
+)
+
+# Trigger phrases for vague expressions (token sequences).
+VAGUE_PHRASES = (
+    ("tell", "me", "about"),
+    ("what", "do", "you", "think", "about"),
+    ("talk", "about"),
+    ("describe",),
+    ("explain",),
+)
+
+# Open-endedness markers.
+OPEN_MARKERS = (
+    "causes", "consequences", "effects", "impact", "implications",
+    "meaning", "purpose", "significance", "origins", "reasons",
+)
+
+# Multi-part / enumeration markers.
+MULTIPART_MARKERS = ("both", "respectively", "differ", "compare", "aspects", "ways")
+
+# Relativizers used by the structural-ambiguity scorer.
+RELATIVIZERS = ("that", "which", "who")
+
+# --- Corpus-generation word pools -------------------------------------------
+
+PLAIN_SUBJECTS = ("i", "you", "we", "they", "he", "she", "my friend", "my sister", "my brother", "the teacher")
+PLAIN_VERBS = ("like", "love", "enjoy", "want", "have", "see", "know", "remember", "need", "prefer")
+PLAIN_OBJECTS = (
+    "pizza", "coffee", "books", "movies", "music", "dogs", "cats", "games",
+    "tea", "flowers", "sports", "cooking", "reading", "hiking", "puzzles",
+    "gardens", "photos", "trains", "bikes", "stories",
+)
+
+CONCRETE_NOUNS = (
+    "boy", "girl", "man", "woman", "dog", "cat", "bird", "telescope",
+    "telescope", "hat", "book", "ball", "kite", "camera", "umbrella",
+    "ladder", "basket", "bench", "boat", "lamp", "jacket", "drum",
+)
+
+PLACES = ("park", "garden", "street", "house", "school", "office", "market", "beach", "forest", "station")
+
+COUNTRY_TOPICS = (
+    "developing countries", "modern cities", "rural areas", "small towns",
+    "coastal regions", "big families", "old villages", "global markets",
+)
+
+COMPARE_PAIRS = (
+    ("cats", "dogs"),
+    ("trains", "planes"),
+    ("books", "movies"),
+    ("coffee", "tea"),
+    ("summer", "winter"),
+    ("cities", "villages"),
+    ("phones", "laptops"),
+    ("rivers", "lakes"),
+)
+
+COMPARE_ASPECTS = (
+    "behavior", "diet", "social interaction", "cost", "speed", "comfort",
+    "culture", "climate", "size", "history", "noise", "taste",
+)
+
+FILLER_WORDS = (
+    "maybe", "perhaps", "honestly", "actually", "basically", "certainly",
+    "probably", "apparently", "definitely", "surely",
+)
+
+# Words used by corpus templates that no other pool covers (the vocab
+# must contain every word any generator can emit — tested by
+# `vocab_covers_corpus`).
+TEMPLATE_WORDS = (
+    "fast", "interaction", "next", "poverty", "rice", "sand", "shapes",
+    "social", "such", "terms", "watched", "water", "way", "what's",
+    "yesterday", "more", "like", "lot", "up",
+)
+
+
+def pos_lexicon():
+    """word -> tag map for the PoS-lite tagger (first match wins)."""
+    lex = {}
+    for w in WH_WORDS:
+        lex[w] = TAG_WH
+    for w in PREPOSITIONS:
+        lex.setdefault(w, TAG_ADP)
+    for w in DETERMINERS:
+        lex.setdefault(w, TAG_DET)
+    for w in CONJUNCTIONS:
+        lex.setdefault(w, TAG_CONJ)
+    for w in PRONOUNS:
+        lex.setdefault(w, TAG_PRON)
+    for w in COMMON_VERBS:
+        lex.setdefault(w, TAG_VERB)
+    for w in COMMON_ADJECTIVES:
+        lex.setdefault(w, TAG_ADJ)
+    for w in COMMON_ADVERBS:
+        lex.setdefault(w, TAG_ADV)
+    return lex
+
+
+def all_words():
+    """Every word any generator or lexicon can emit (vocabulary seed).
+
+    Multi-word pool entries (e.g. "social interaction") are split so the
+    vocabulary holds individual tokens.
+    """
+    words = set()
+    for pool in (
+        WH_WORDS, PREPOSITIONS, DETERMINERS, CONJUNCTIONS, PRONOUNS,
+        COMMON_VERBS, COMMON_ADJECTIVES, COMMON_ADVERBS, NV_AMBIGUOUS,
+        VAGUE_TOPICS, OPEN_MARKERS, MULTIPART_MARKERS, RELATIVIZERS,
+        CONCRETE_NOUNS, PLACES, PLAIN_VERBS, PLAIN_OBJECTS, COMPARE_ASPECTS,
+        FILLER_WORDS, TEMPLATE_WORDS, PLAIN_SUBJECTS, COUNTRY_TOPICS,
+    ):
+        for entry in pool:
+            words.update(entry.split())
+    words.update(HOMONYMS)
+    for phrase in VAGUE_PHRASES:
+        words.update(phrase)
+    for a, b in COMPARE_PAIRS:
+        words.update(a.split())
+        words.update(b.split())
+    words.update([",", "?", ".", "!", "'s", "s"])
+    return sorted(words)

@@ -1,0 +1,203 @@
+"""L2 — the JAX transformer LM (decoder-only) built on the L1 kernels.
+
+Five configurations (``common.MODEL_CONFIGS``) stand in for the paper's
+five HuggingFace LMs. Two entrypoints are AOT-lowered per (batch, seq)
+bucket:
+
+- ``prefill``: consume the padded prompt batch, build the KV cache, and
+  return the logits at each row's last real token.
+- ``decode_step``: one autoregressive step over the KV cache for every
+  row in the batch.
+
+Weights are *parameters* of the lowered computation (never baked
+constants): the rust runtime feeds them from ``weights.bin`` in the
+canonical order given by ``param_names`` (recorded in the manifest).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import SEQ_MAX, VOCAB_SIZE, ModelConfig
+from .kernels.attention import decode_attention, prefill_attention
+from .kernels.ffn import ffn
+from .kernels.layernorm import layernorm_residual
+
+
+def param_names(cfg: ModelConfig):
+    """Canonical parameter order (must match init_params and weights.bin)."""
+    names = ["tok_emb", "pos_emb"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"layer{l}.ln1_g",
+            f"layer{l}.ln1_b",
+            f"layer{l}.wq",
+            f"layer{l}.wk",
+            f"layer{l}.wv",
+            f"layer{l}.wo",
+            f"layer{l}.ln2_g",
+            f"layer{l}.ln2_b",
+            f"layer{l}.w1",
+            f"layer{l}.b1",
+            f"layer{l}.w2",
+            f"layer{l}.b2",
+        ]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig):
+    """name -> shape, following param_names order."""
+    d, f = cfg.d_model, cfg.d_ff
+    shapes = {"tok_emb": (VOCAB_SIZE, d), "pos_emb": (SEQ_MAX, d)}
+    for l in range(cfg.n_layers):
+        shapes[f"layer{l}.ln1_g"] = (d,)
+        shapes[f"layer{l}.ln1_b"] = (d,)
+        shapes[f"layer{l}.wq"] = (d, d)
+        shapes[f"layer{l}.wk"] = (d, d)
+        shapes[f"layer{l}.wv"] = (d, d)
+        shapes[f"layer{l}.wo"] = (d, d)
+        shapes[f"layer{l}.ln2_g"] = (d,)
+        shapes[f"layer{l}.ln2_b"] = (d,)
+        shapes[f"layer{l}.w1"] = (d, f)
+        shapes[f"layer{l}.b1"] = (f,)
+        shapes[f"layer{l}.w2"] = (f, d)
+        shapes[f"layer{l}.b2"] = (d,)
+    shapes["lnf_g"] = (d,)
+    shapes["lnf_b"] = (d,)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int):
+    """Seeded random init, returned as a list in param_names order."""
+    rng = np.random.default_rng(seed)
+    shapes = param_shapes(cfg)
+    params = []
+    for name in param_names(cfg):
+        shape = shapes[name]
+        if name.endswith("_g"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            arr = np.zeros(shape, np.float32)
+        else:
+            scale = 0.02 if "emb" in name else 1.0 / np.sqrt(shape[0])
+            arr = (rng.standard_normal(shape) * scale).astype(np.float32)
+        params.append(jnp.asarray(arr))
+    return params
+
+
+def _unpack(cfg: ModelConfig, params):
+    """list -> (tok_emb, pos_emb, layers[...], lnf_g, lnf_b)."""
+    tok_emb, pos_emb = params[0], params[1]
+    layers = []
+    i = 2
+    for _ in range(cfg.n_layers):
+        layers.append(params[i : i + 12])
+        i += 12
+    lnf_g, lnf_b = params[i], params[i + 1]
+    return tok_emb, pos_emb, layers, lnf_g, lnf_b
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)  # [B,H,S,Dh]
+
+
+def prefill(cfg: ModelConfig, params, tokens, lengths):
+    """Prompt batch -> (last-token logits, KV cache).
+
+    tokens: [B, S] int32 (padded with PAD); lengths: [B] int32.
+    returns: logits [B, V], cache_k/cache_v [L, B, H, SEQ_MAX, Dh].
+    """
+    tok_emb, pos_emb, layers, lnf_g, lnf_b = _unpack(cfg, params)
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    x = tok_emb[tokens] + pos_emb[:s][None, :, :]  # [B,S,D]
+
+    cache_k = jnp.zeros((cfg.n_layers, b, h, SEQ_MAX, dh), jnp.float32)
+    cache_v = jnp.zeros((cfg.n_layers, b, h, SEQ_MAX, dh), jnp.float32)
+
+    for l, lp in enumerate(layers):
+        ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2 = lp
+        flat = x.reshape(b * s, cfg.d_model)
+        normed = layernorm_residual(flat, jnp.zeros_like(flat), ln1_g, ln1_b)
+        normed = normed.reshape(b, s, cfg.d_model)
+        q = _split_heads(normed @ wq, h)
+        k = _split_heads(normed @ wk, h)
+        v = _split_heads(normed @ wv, h)
+        attn = prefill_attention(q, k, v, lengths)  # [B,H,S,Dh]
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + attn @ wo
+        cache_k = cache_k.at[l, :, :, :s, :].set(k)
+        cache_v = cache_v.at[l, :, :, :s, :].set(v)
+
+        flat = x.reshape(b * s, cfg.d_model)
+        normed = layernorm_residual(flat, jnp.zeros_like(flat), ln2_g, ln2_b)
+        x = (flat + ffn(normed, w1, b1, w2, b2)).reshape(b, s, cfg.d_model)
+
+    flat = x.reshape(b * s, cfg.d_model)
+    x = layernorm_residual(flat, jnp.zeros_like(flat), lnf_g, lnf_b).reshape(b, s, cfg.d_model)
+
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    x_last = x[jnp.arange(b), last]  # [B,D]
+    logits = x_last @ tok_emb.T  # tied head
+    return logits, cache_k, cache_v
+
+
+def decode_step(cfg: ModelConfig, params, cache_k, cache_v, pos, tokens):
+    """One autoregressive step.
+
+    pos: [B] int32 — the cache slot to write (current sequence length).
+    tokens: [B] int32 — the previously generated token per row.
+    returns: logits [B, V], updated cache_k, cache_v.
+    """
+    tok_emb, pos_emb, layers, lnf_g, lnf_b = _unpack(cfg, params)
+    b = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    x = tok_emb[tokens] + pos_emb[pos]  # [B,D]
+    rows = jnp.arange(b)
+
+    for l, lp in enumerate(layers):
+        ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, b1, w2, b2 = lp
+        normed = layernorm_residual(x, jnp.zeros_like(x), ln1_g, ln1_b)
+        q = (normed @ wq).reshape(b, h, dh)
+        k = (normed @ wk).reshape(b, h, dh)
+        v = (normed @ wv).reshape(b, h, dh)
+        cache_k = cache_k.at[l, rows, :, pos, :].set(k)
+        cache_v = cache_v.at[l, rows, :, pos, :].set(v)
+        attn = decode_attention(q, cache_k[l], cache_v[l], pos + 1)  # [B,H,Dh]
+        x = x + attn.reshape(b, cfg.d_model) @ wo
+
+        normed = layernorm_residual(x, jnp.zeros_like(x), ln2_g, ln2_b)
+        x = x + ffn(normed, w1, b1, w2, b2)
+
+    x = layernorm_residual(x, jnp.zeros_like(x), lnf_g, lnf_b)
+    logits = x @ tok_emb.T
+    return logits, cache_k, cache_v
+
+
+def decode_chunk(cfg: ModelConfig, k: int, params, cache_k, cache_v, pos, tokens):
+    """K autoregressive steps in one lowered computation.
+
+    Greedy sampling happens in-graph (`argmax` feeds the next step), so
+    the KV cache never leaves the device between the K steps — the
+    host<->device round trip is paid once per chunk instead of once per
+    token. This is the L2-level perf optimization recorded in
+    EXPERIMENTS.md §Perf.
+
+    returns: tokens_out [B, K], cache_k, cache_v, new_pos.
+    """
+
+    def body(carry, _):
+        ck, cv, p, toks = carry
+        logits, ck, cv = decode_step(cfg, params, ck, cv, p, toks)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        p = jnp.minimum(p + 1, SEQ_MAX - 1)
+        return (ck, cv, p, nxt), nxt
+
+    (cache_k, cache_v, pos, _), outs = jax.lax.scan(
+        body, (cache_k, cache_v, pos, tokens), None, length=k
+    )
+    return outs.T, cache_k, cache_v, pos

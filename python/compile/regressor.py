@@ -1,0 +1,97 @@
+"""The LW uncertainty regressor (Sec. III-B "Lightweight model").
+
+A [7 -> 100 -> 200 -> 200 -> 100 -> 1] ReLU MLP mapping normalised RULEGEN
+features to the predicted output length. Training is pure JAX (Adam,
+hand-rolled — optax is not available offline), mirroring Algorithm 1's
+offline-profiling phase: minimise MSE against the LM output lengths on
+the training split.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import FEATURE_SCALES, N_FEATURES, REGRESSOR_HIDDEN
+from .kernels.ref import regressor_mlp_ref
+
+LAYER_SIZES = (N_FEATURES,) + REGRESSOR_HIDDEN + (1,)
+
+
+def init_regressor(seed: int):
+    """[(w, b), ...] with He init, in layer order."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for fan_in, fan_out in zip(LAYER_SIZES[:-1], LAYER_SIZES[1:]):
+        w = (rng.standard_normal((fan_in, fan_out)) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+        b = np.zeros((fan_out,), np.float32)
+        params.append((jnp.asarray(w), jnp.asarray(b)))
+    return params
+
+
+def normalize_features(feats):
+    """feats: [..., N_FEATURES] raw RULEGEN features -> normalised."""
+    return feats / jnp.asarray(FEATURE_SCALES, jnp.float32)
+
+
+def predict(params, raw_feats):
+    """raw (unnormalised) features [B, F] -> predicted lengths [B]."""
+    return regressor_mlp_ref(normalize_features(raw_feats), params)
+
+
+def _loss(params, x, y):
+    pred = regressor_mlp_ref(x, params)
+    return jnp.mean(jnp.square(pred - y))
+
+
+def train(features, targets, seed=0, epochs=100, batch_size=256, lr=1e-3):
+    """Adam training loop. features: [N, F] raw; targets: [N] lengths.
+
+    Returns (params, history) where history is the per-epoch train loss.
+    """
+    x = normalize_features(jnp.asarray(features, jnp.float32))
+    y = jnp.asarray(targets, jnp.float32)
+    params = init_regressor(seed)
+
+    flat = []
+    for w, b in params:
+        flat += [w, b]
+
+    def unflatten(flat):
+        return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda fl, xb, yb: _loss(unflatten(fl), xb, yb)))
+
+    @jax.jit
+    def adam_step(flat, m, v, grads, t):
+        new_flat, new_m, new_v = [], [], []
+        for p, mi, vi, g in zip(flat, m, v, grads):
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * jnp.square(g)
+            mhat = mi / (1 - b1**t)
+            vhat = vi / (1 - b2**t)
+            new_flat.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mi)
+            new_v.append(vi)
+        return new_flat, new_m, new_v
+
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    history = []
+    t = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        epoch_loss = 0.0
+        n_batches = 0
+        for start in range(0, n, batch_size):
+            idx = order[start : start + batch_size]
+            t += 1
+            loss, grads = grad_fn(flat, x[idx], y[idx])
+            flat, m, v = adam_step(flat, m, v, grads, t)
+            epoch_loss += float(loss)
+            n_batches += 1
+        history.append(epoch_loss / max(n_batches, 1))
+    return unflatten(flat), history

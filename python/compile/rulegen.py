@@ -1,0 +1,125 @@
+"""RULEGEN — the six rule-based linguistic-uncertainty scorers (Sec. III-B).
+
+Each scorer measures the intensity of one uncertainty source from tokens +
+PoS-lite tags (the paper's Listing 1 does the same with spaCy + regexes).
+Scores are plain floats built from integer counts, so the rust mirror
+(``rust/src/uncertainty/rules``) can reproduce them bit-exactly; the
+goldens emitted by ``aot.py`` assert that.
+
+The full feature vector for the LW regressor is the six scores plus the
+input length (see common.FEATURE_NAMES).
+"""
+
+from . import lexicon
+from .common import MAX_INPUT_LEN
+from .textproc import pos_tag, tokenize
+
+
+def _contains_phrase(tokens, phrase):
+    n = len(phrase)
+    for i in range(len(tokens) - n + 1):
+        if tuple(tokens[i : i + n]) == phrase:
+            return True
+    return False
+
+
+def structural_score(tokens, tags):
+    """PP-attachment chains + relative clauses -> parse-structure ambiguity.
+
+    "John saw a boy in the park with a telescope": every prepositional
+    phrase beyond the first adds an attachment choice.
+    """
+    n_pp = sum(1 for t in tags if t == lexicon.TAG_ADP)
+    n_rel = 0
+    for i, tok in enumerate(tokens):
+        if tok in lexicon.RELATIVIZERS and i > 0 and tags[i - 1] == lexicon.TAG_NOUN:
+            n_rel += 1
+    return 4.0 * max(0, n_pp - 1) + 2.0 * n_rel
+
+
+def syntactic_score(tokens, tags):
+    """Noun/verb-ambiguous words ("Rice flies like sand")."""
+    n_ambig = sum(1 for t in tokens if t in lexicon.NV_AMBIGUOUS)
+    score = 3.0 * n_ambig
+    if n_ambig > 0 and not any(t == lexicon.TAG_VERB for t in tags):
+        # no unambiguous verb anchors the parse
+        score += 2.0
+    return score
+
+
+def semantic_score(tokens, tags):
+    """Homonyms weighted by sense count ("bats", "trunk", "monitor")."""
+    score = 0.0
+    for t in tokens:
+        senses = lexicon.HOMONYMS.get(t)
+        if senses is not None:
+            score += 3.0 * (senses - 1)
+    return score
+
+
+def vague_score(tokens, tags):
+    """Broad topics and 'tell me about'-style prompts (paper Listing 1)."""
+    score = 0.0
+    for phrase in lexicon.VAGUE_PHRASES:
+        if _contains_phrase(tokens, phrase):
+            score += 5.0
+    score += 4.0 * sum(1 for t in tokens if t in lexicon.VAGUE_TOPICS)
+    score += 2.0 * sum(1 for t in tokens if t in ("general", "overall", "broad"))
+    return score
+
+
+def open_score(tokens, tags):
+    """Open-ended questions lacking a single definitive answer."""
+    score = 0.0
+    if tokens and tokens[0] in ("what", "why", "how"):
+        score += 3.0
+        if "of" in tokens:
+            score += 2.0
+    score += 3.0 * sum(1 for t in tokens if t in lexicon.OPEN_MARKERS)
+    if _contains_phrase(tokens, ("do", "you", "think")):
+        score += 3.0
+    return score
+
+
+def multipart_score(tokens, tags):
+    """Multiple sub-questions/topics demanding compound answers."""
+    n_comma = sum(1 for t in tokens if t == ",")
+    n_q = sum(1 for t in tokens if t == "?")
+    is_question = n_q > 0 or (tokens and tokens[0] in lexicon.WH_WORDS)
+    n_and = sum(1 for t in tokens if t == "and") if is_question else 0
+    n_marker = sum(1 for t in tokens if t in lexicon.MULTIPART_MARKERS)
+    return 2.0 * n_comma + 2.0 * n_and + 4.0 * max(0, n_q - 1) + 3.0 * n_marker
+
+
+SCORERS = (
+    structural_score,
+    syntactic_score,
+    semantic_score,
+    vague_score,
+    open_score,
+    multipart_score,
+)
+
+
+def rule_scores(text: str):
+    """Six raw rule scores for an input text."""
+    tokens = tokenize(text)
+    tags = pos_tag(tokens)
+    return [scorer(tokens, tags) for scorer in SCORERS]
+
+
+def features(text: str):
+    """Full (unnormalised) feature vector: six scores + input length."""
+    tokens = tokenize(text)
+    tags = pos_tag(tokens)
+    feats = [scorer(tokens, tags) for scorer in SCORERS]
+    feats.append(float(min(len(tokens), MAX_INPUT_LEN)))
+    return feats
+
+
+def single_rule_score(text: str):
+    """The paper's 'single rule' heuristic (Fig. 2b): the dominant rule
+    score, falling back to input length when no pattern fires."""
+    feats = features(text)
+    best = max(feats[:6])
+    return best if best > 0.0 else feats[6]

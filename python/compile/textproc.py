@@ -1,0 +1,110 @@
+"""Tokenizer, vocabulary, and PoS-lite tagger (python build-path half).
+
+The rust runtime carries an exact mirror in ``rust/src/textgen``; the two
+are cross-checked through golden files emitted by ``aot.py``. Keep every
+rule here dead simple and deterministic — any change must be replicated in
+rust and will invalidate the goldens.
+"""
+
+from . import lexicon
+from .common import BOS_ID, EOS_ID, N_SPECIAL, PAD_ID, UNK_ID, VOCAB_SIZE
+
+_PUNCT = ".,!?;:\"()"
+
+
+def tokenize(text: str):
+    """Lowercase, split on whitespace, split off punctuation as tokens.
+
+    ``"Let's talk, OK?"`` -> ``["let's", "talk", ",", "ok", "?"]``
+    """
+    out = []
+    for raw in text.lower().split():
+        # strip leading punctuation
+        start = 0
+        while start < len(raw) and raw[start] in _PUNCT:
+            out.append(raw[start])
+            start += 1
+        end = len(raw)
+        trailing = []
+        while end > start and raw[end - 1] in _PUNCT:
+            trailing.append(raw[end - 1])
+            end -= 1
+        if end > start:
+            out.append(raw[start:end])
+        out.extend(reversed(trailing))
+    return out
+
+
+_POS_LEX = lexicon.pos_lexicon()
+
+# (suffix, tag) checked in order; first match wins.
+_SUFFIX_RULES = (
+    ("ly", lexicon.TAG_ADV),
+    ("ing", lexicon.TAG_VERB),
+    ("ed", lexicon.TAG_VERB),
+    ("ize", lexicon.TAG_VERB),
+    ("tion", lexicon.TAG_NOUN),
+    ("ness", lexicon.TAG_NOUN),
+    ("ity", lexicon.TAG_NOUN),
+    ("ment", lexicon.TAG_NOUN),
+    ("ous", lexicon.TAG_ADJ),
+    ("ful", lexicon.TAG_ADJ),
+    ("ive", lexicon.TAG_ADJ),
+    ("ical", lexicon.TAG_ADJ),
+)
+
+
+def pos_tag(tokens):
+    """Tag each token: lexicon lookup, then suffix heuristics, else NOUN."""
+    tags = []
+    for tok in tokens:
+        if tok and tok[0] in _PUNCT:
+            tags.append(lexicon.TAG_PUNCT)
+            continue
+        tag = _POS_LEX.get(tok)
+        if tag is None:
+            for suffix, t in _SUFFIX_RULES:
+                if len(tok) > len(suffix) + 1 and tok.endswith(suffix):
+                    tag = t
+                    break
+        tags.append(tag or lexicon.TAG_NOUN)
+    return tags
+
+
+def build_vocab():
+    """id -> word list of size VOCAB_SIZE.
+
+    Slots 0..3 are special tokens; known words follow in sorted order;
+    the tail is padded with synthetic filler words so the LM has a full
+    vocabulary to sample from.
+    """
+    words = lexicon.all_words()
+    vocab = ["<pad>", "<bos>", "<eos>", "<unk>"]
+    vocab.extend(words)
+    i = 0
+    while len(vocab) < VOCAB_SIZE:
+        vocab.append(f"tok{i}")
+        i += 1
+    if len(vocab) > VOCAB_SIZE:
+        raise ValueError(f"lexicon too large: {len(vocab)} > {VOCAB_SIZE}")
+    return vocab
+
+
+class Vocab:
+    def __init__(self):
+        self.id_to_word = build_vocab()
+        self.word_to_id = {w: i for i, w in enumerate(self.id_to_word)}
+
+    def encode(self, text: str, max_len=None):
+        ids = [self.word_to_id.get(t, UNK_ID) for t in tokenize(text)]
+        if max_len is not None:
+            ids = ids[:max_len]
+        return ids
+
+    def decode(self, ids):
+        words = []
+        for i in ids:
+            if i in (PAD_ID, BOS_ID, EOS_ID):
+                continue
+            words.append(self.id_to_word[i] if 0 <= i < len(self.id_to_word) else "<unk>")
+        return " ".join(words)

@@ -1,0 +1,65 @@
+"""End-to-end AOT smoke: a --quick --skip-models build into a temp dir
+produces a parseable manifest, a valid lexicon, corpus files, goldens,
+and a loadable regressor bundle."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+PY_ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_quick")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick", "--skip-models"],
+        cwd=PY_ROOT,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_parses(quick_artifacts):
+    m = json.loads((quick_artifacts / "manifest.json").read_text())
+    assert m["vocab_size"] == 2048
+    assert m["quick"] is True
+    assert m["feature_names"][-1] == "input_len"
+    assert set(m["corpus"]["train"]) == set(m["corpus"]["test"])
+
+
+def test_lexicon_and_vocab(quick_artifacts):
+    lex = json.loads((quick_artifacts / "lexicon.json").read_text())
+    assert len(lex["vocab"]) == 2048
+    assert lex["vocab"][:4] == ["<pad>", "<bos>", "<eos>", "<unk>"]
+    assert "bat" in lex["homonyms"]
+
+
+def test_corpus_files_exist_and_parse(quick_artifacts):
+    m = json.loads((quick_artifacts / "manifest.json").read_text())
+    for rel in list(m["corpus"]["train"].values()) + [m["corpus"]["observation"]]:
+        lines = (quick_artifacts / rel).read_text().strip().splitlines()
+        assert lines
+        rec = json.loads(lines[0])
+        assert {"text", "type", "lens", "features"} <= set(rec)
+
+
+def test_goldens_exist(quick_artifacts):
+    m = json.loads((quick_artifacts / "manifest.json").read_text())
+    lines = (quick_artifacts / m["goldens"]["textproc"]).read_text().strip().splitlines()
+    assert len(lines) > 100
+
+
+def test_regressor_bundle_round_trips(quick_artifacts):
+    from compile.bundle import read_bundle
+
+    tensors = dict(read_bundle(quick_artifacts / "regressor.bin"))
+    m = json.loads((quick_artifacts / "manifest.json").read_text())
+    assert set(m["regressor"]["param_names"]) == set(tensors)
+    sizes = m["regressor"]["layer_sizes"]
+    assert tensors["w0"].shape == (sizes[0], sizes[1])
+    assert tensors[f"w{len(sizes) - 2}"].shape[-1] == 1

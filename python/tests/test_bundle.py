@@ -1,0 +1,41 @@
+"""Tensor-bundle round trip (the rust reader's contract)."""
+
+import numpy as np
+import pytest
+
+from compile.bundle import MAGIC, read_bundle, write_bundle
+
+
+def test_round_trip(tmp_path, rng):
+    tensors = [
+        ("a", rng.normal(size=(3, 4)).astype(np.float32)),
+        ("b.nested/name", np.arange(7, dtype=np.int32)),
+        ("scalarish", np.ones((1,), np.float32)),
+        ("big", rng.normal(size=(64, 128)).astype(np.float32)),
+    ]
+    path = tmp_path / "t.bin"
+    write_bundle(path, tensors)
+    back = read_bundle(path)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, want), (_, got) in zip(tensors, back):
+        assert want.dtype == got.dtype
+        np.testing.assert_array_equal(want, got)
+
+
+def test_magic_checked(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        read_bundle(path)
+
+
+def test_rejects_f64(tmp_path):
+    with pytest.raises(ValueError):
+        write_bundle(tmp_path / "x.bin", [("x", np.ones((2,), np.float64))])
+
+
+def test_empty_bundle(tmp_path):
+    path = tmp_path / "e.bin"
+    write_bundle(path, [])
+    assert read_bundle(path) == []
+    assert path.read_bytes()[:8] == MAGIC

@@ -1,0 +1,84 @@
+"""Corpus generator: determinism, mixtures, length-model calibration."""
+
+import numpy as np
+
+from compile import corpus
+from compile.common import (
+    DATASET_NAMES,
+    LENGTH_MODEL,
+    MAX_OUTPUT_LEN,
+    MIN_OUTPUT_LEN,
+    MODEL_CONFIGS,
+    UNCERTAINTY_TYPES,
+)
+
+
+def test_generate_split_deterministic():
+    a = corpus.generate_split("personachat", 50, seed=3)
+    b = corpus.generate_split("personachat", 50, seed=3)
+    assert a == b
+
+
+def test_generate_split_seed_sensitivity():
+    a = corpus.generate_split("personachat", 50, seed=3)
+    b = corpus.generate_split("personachat", 50, seed=4)
+    assert a != b
+
+
+def test_record_schema():
+    recs = corpus.generate_split("convai2", 20, seed=0)
+    for r in recs:
+        assert set(r) == {"text", "type", "input_len", "base_len", "lens"}
+        assert r["type"] in UNCERTAINTY_TYPES
+        assert MIN_OUTPUT_LEN <= r["base_len"] <= MAX_OUTPUT_LEN
+        assert set(r["lens"]) == set(MODEL_CONFIGS)
+        for v in r["lens"].values():
+            assert MIN_OUTPUT_LEN <= v <= MAX_OUTPUT_LEN
+
+
+def test_observation_set_covers_all_types():
+    obs = corpus.generate_observation_set(10, seed=0)
+    types = {r["type"] for r in obs}
+    assert types == set(UNCERTAINTY_TYPES)
+    assert len(obs) == 10 * len(UNCERTAINTY_TYPES)
+
+
+def test_length_ordering_matches_fig1a():
+    """Fig. 1a: plain < structural/syntactic < semantic < vague/multipart/open."""
+    obs = corpus.generate_observation_set(300, seed=1)
+    means = {}
+    for utype in UNCERTAINTY_TYPES:
+        lens = [r["base_len"] for r in obs if r["type"] == utype]
+        means[utype] = float(np.mean(lens))
+    assert means["plain"] < means["structural"]
+    assert means["plain"] < means["syntactic"]
+    assert means["structural"] < means["semantic"]
+    assert means["syntactic"] < means["semantic"]
+    assert means["semantic"] < means["vague"]
+    assert means["vague"] < means["open"]
+
+
+def test_dataset_mixtures_differ():
+    splits = {ds: corpus.generate_split(ds, 400, seed=9) for ds in DATASET_NAMES}
+    plain_frac = {
+        ds: sum(1 for r in recs if r["type"] == "plain") / len(recs)
+        for ds, recs in splits.items()
+    }
+    assert plain_frac["personachat"] > plain_frac["empathetic_dialogues"]
+
+
+def test_model_lengths_track_gamma():
+    """blenderbot (gamma=1.1) must produce longer outputs than bart (0.85)."""
+    recs = corpus.generate_split("blended_skill_talk", 500, seed=2)
+    bb = np.mean([r["lens"]["blenderbot"] for r in recs])
+    bart = np.mean([r["lens"]["bart"] for r in recs])
+    assert bb > bart + 2.0
+
+
+def test_input_length_contributes():
+    import random
+
+    rng = random.Random(0)
+    short = np.mean([corpus.base_length("plain", 4, rng) for _ in range(300)])
+    long = np.mean([corpus.base_length("plain", 40, rng) for _ in range(300)])
+    assert long > short + 8.0

@@ -1,0 +1,65 @@
+"""decode_chunk (K steps in-graph) must equal K sequential decode_steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.common import MODEL_CONFIGS, SEQ_MAX
+
+CFG = MODEL_CONFIGS["t5"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 42)
+
+
+def _empty_cache(b):
+    shape = (CFG.n_layers, b, CFG.n_heads, SEQ_MAX, CFG.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_chunk_equals_sequential(params, k):
+    b = 2
+    ck, cv = _empty_cache(b)
+    pos = jnp.asarray([3, 5], jnp.int32)
+    toks = jnp.asarray([10, 20], jnp.int32)
+
+    ck1, cv1, p1, t1 = ck, cv, pos, toks
+    seq_out = []
+    for _ in range(k):
+        logits, ck1, cv1 = model.decode_step(CFG, params, ck1, cv1, p1, t1)
+        t1 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        p1 = jnp.minimum(p1 + 1, SEQ_MAX - 1)
+        seq_out.append(np.asarray(t1))
+    seq_out = np.stack(seq_out, axis=1)
+
+    chunk_out, ck2, cv2, p2 = jax.jit(lambda *a: model.decode_chunk(CFG, k, *a))(
+        params, ck, cv, pos, toks
+    )
+    np.testing.assert_array_equal(np.asarray(chunk_out), seq_out)
+    np.testing.assert_allclose(np.asarray(ck1), np.asarray(ck2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cv1), np.asarray(cv2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_chunk_positions_clamp_at_seq_max(params):
+    b = 1
+    ck, cv = _empty_cache(b)
+    pos = jnp.asarray([SEQ_MAX - 2], jnp.int32)
+    toks = jnp.asarray([10], jnp.int32)
+    _, _, _, p2 = model.decode_chunk(CFG, 6, params, ck, cv, pos, toks)
+    assert int(p2[0]) == SEQ_MAX - 1
+
+
+def test_chunk_output_shape(params):
+    b, k = 4, 5
+    ck, cv = _empty_cache(b)
+    out, _, _, _ = model.decode_chunk(
+        CFG, k, params, ck, cv, jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32)
+    )
+    assert out.shape == (b, k)
+    assert out.dtype == jnp.int32

@@ -1,0 +1,66 @@
+"""L1 FFN and layernorm kernels vs oracles (hypothesis shape sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ffn import _row_tile, ffn
+from compile.kernels.layernorm import layernorm_residual
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 3, 8, 48, 96, 128, 256, 384]),
+    d=st.sampled_from([16, 64, 192]),
+    f=st.sampled_from([32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(n, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w1 = jnp.asarray((rng.normal(size=(d, f)) * 0.05).astype(np.float32))
+    b1 = jnp.asarray(rng.normal(size=(f,)).astype(np.float32))
+    w2 = jnp.asarray((rng.normal(size=(f, d)) * 0.05).astype(np.float32))
+    b2 = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    got = ffn(x, w1, b1, w2, b2)
+    want = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 5, 16, 48, 128, 512]),
+    d=st.sampled_from([8, 64, 320]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_residual_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    res = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    got = layernorm_residual(x, res, g, b)
+    want = ref.layernorm_residual_ref(x, res, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_row_tile_divides():
+    for n in range(1, 600):
+        t = _row_tile(n)
+        assert n % t == 0
+        assert 1 <= t <= 128
+
+
+def test_layernorm_zero_residual_is_plain_ln():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    z = jnp.zeros_like(x)
+    g = jnp.ones((32,), jnp.float32)
+    b = jnp.zeros((32,), jnp.float32)
+    got = np.asarray(layernorm_residual(x, z, g, b))
+    assert np.allclose(got.mean(axis=-1), 0.0, atol=1e-5)
+    assert np.allclose(got.std(axis=-1), 1.0, atol=1e-3)

@@ -1,0 +1,54 @@
+"""L1 regressor kernel vs oracle + training sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import regressor
+from compile.kernels.ref import regressor_mlp_ref
+from compile.kernels.regressor import regressor_mlp
+
+
+def _params(rng, sizes):
+    out = []
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        w = jnp.asarray((rng.normal(size=(a, b)) * 0.1).astype(np.float32))
+        bias = jnp.asarray((rng.normal(size=(b,)) * 0.1).astype(np.float32))
+        out.append((w, bias))
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 16, 64]),
+    hidden=st.sampled_from([(8,), (16, 32), (100, 200, 200, 100)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_regressor_kernel_matches_ref(b, hidden, seed):
+    rng = np.random.default_rng(seed)
+    sizes = (7,) + hidden + (1,)
+    params = _params(rng, sizes)
+    feats = jnp.asarray(rng.normal(size=(b, 7)).astype(np.float32))
+    got = regressor_mlp(feats, params)
+    want = regressor_mlp_ref(feats, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_training_reduces_loss():
+    rng = np.random.default_rng(0)
+    n = 512
+    feats = rng.uniform(0, 10, size=(n, regressor.LAYER_SIZES[0])).astype(np.float32)
+    # linear-ish ground truth the MLP must be able to fit
+    w = rng.uniform(0.5, 2.0, size=(regressor.LAYER_SIZES[0],)).astype(np.float32)
+    targets = feats @ w + 5.0
+    params, history = regressor.train(feats, targets, seed=0, epochs=30)
+    assert history[-1] < history[0] * 0.2, history[:3] + history[-3:]
+
+
+def test_predict_shape_and_finite():
+    params = regressor.init_regressor(0)
+    feats = jnp.asarray(np.random.default_rng(0).uniform(0, 10, size=(5, 7)).astype(np.float32))
+    pred = np.asarray(regressor.predict(params, feats))
+    assert pred.shape == (5,)
+    assert np.all(np.isfinite(pred))

@@ -1,0 +1,102 @@
+"""L2 model: shapes, prefill/decode consistency, cache semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.common import MODEL_CONFIGS, SEQ_MAX, VOCAB_SIZE
+
+CFG = MODEL_CONFIGS["t5"]  # smallest variant keeps tests fast
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 42)
+
+
+def test_param_names_match_shapes(params):
+    names = model.param_names(CFG)
+    shapes = model.param_shapes(CFG)
+    assert len(names) == len(params)
+    for name, p in zip(names, params):
+        assert tuple(p.shape) == shapes[name], name
+
+
+def test_param_count_is_reasonable(params):
+    total = sum(int(np.prod(p.shape)) for p in params)
+    # embedding + 3 layers of d=192 — roughly 2.3M params
+    assert 1_000_000 < total < 10_000_000
+
+
+def test_prefill_shapes(params):
+    b, s = 2, 16
+    tokens = jnp.zeros((b, s), jnp.int32)
+    lengths = jnp.asarray([3, 16], jnp.int32)
+    logits, ck, cv = model.prefill(CFG, params, tokens, lengths)
+    assert logits.shape == (b, VOCAB_SIZE)
+    assert ck.shape == (CFG.n_layers, b, CFG.n_heads, SEQ_MAX, CFG.head_dim)
+    assert cv.shape == ck.shape
+
+
+def test_decode_shapes(params):
+    b = 4
+    ck = jnp.zeros((CFG.n_layers, b, CFG.n_heads, SEQ_MAX, CFG.head_dim), jnp.float32)
+    logits, ck2, cv2 = model.decode_step(
+        CFG, params, ck, ck, jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32)
+    )
+    assert logits.shape == (b, VOCAB_SIZE)
+    assert ck2.shape == ck.shape
+
+
+def test_prefill_matches_sequential_decode(params):
+    """The core autoregressive invariant: prefill(t[0..n]) last-token
+    logits == decode_step applied token by token."""
+    rng = np.random.default_rng(7)
+    b, s = 2, 8
+    tokens = jnp.asarray(rng.integers(4, VOCAB_SIZE, size=(b, s)).astype(np.int32))
+    lengths = jnp.asarray([5, 8], jnp.int32)
+    logits_p, _, _ = jax.jit(lambda p, t, l: model.prefill(CFG, p, t, l))(params, tokens, lengths)
+
+    ck = jnp.zeros((CFG.n_layers, b, CFG.n_heads, SEQ_MAX, CFG.head_dim), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    dec = jax.jit(lambda p, ck, cv, pos, t: model.decode_step(CFG, p, ck, cv, pos, t))
+    last = [None] * b
+    for i in range(int(lengths.max())):
+        pos = jnp.full((b,), i, jnp.int32)
+        logits_d, ck, cv = dec(params, ck, cv, pos, tokens[:, i])
+        for bi in range(b):
+            if i == int(lengths[bi]) - 1:
+                last[bi] = np.asarray(logits_d[bi])
+    for bi in range(b):
+        np.testing.assert_allclose(last[bi], np.asarray(logits_p[bi]), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_deterministic(params):
+    b = 2
+    ck = jnp.zeros((CFG.n_layers, b, CFG.n_heads, SEQ_MAX, CFG.head_dim), jnp.float32)
+    pos = jnp.zeros((b,), jnp.int32)
+    toks = jnp.asarray([10, 20], jnp.int32)
+    l1, _, _ = model.decode_step(CFG, params, ck, ck, pos, toks)
+    l2, _, _ = model.decode_step(CFG, params, ck, ck, pos, toks)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_decode_rows_independent(params):
+    """Row b's logits must not depend on other rows in the batch."""
+    ck = jnp.zeros((CFG.n_layers, 2, CFG.n_heads, SEQ_MAX, CFG.head_dim), jnp.float32)
+    pos = jnp.zeros((2,), jnp.int32)
+    l_pair, _, _ = model.decode_step(CFG, params, ck, ck, pos, jnp.asarray([10, 20], jnp.int32))
+    ck1 = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, SEQ_MAX, CFG.head_dim), jnp.float32)
+    l_solo, _, _ = model.decode_step(
+        CFG, params, ck1, ck1, jnp.zeros((1,), jnp.int32), jnp.asarray([10], jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(l_pair)[0], np.asarray(l_solo)[0], rtol=1e-4, atol=1e-4)
+
+
+def test_all_configs_init():
+    for name, cfg in MODEL_CONFIGS.items():
+        params = model.init_params(cfg, 1)
+        assert len(params) == len(model.param_names(cfg)), name
+        assert cfg.d_model % cfg.n_heads == 0, name

@@ -1,0 +1,81 @@
+"""RULEGEN scorers: each uncertainty type must light up its own scorer."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import corpus, rulegen
+from compile.common import FEATURE_NAMES, N_FEATURES, UNCERTAINTY_TYPES
+
+
+def test_feature_vector_shape():
+    f = rulegen.features("tell me about the history of art .")
+    assert len(f) == N_FEATURES
+    assert all(isinstance(x, float) for x in f)
+
+
+def test_paper_examples_fire_expected_rules():
+    # Table I's example sentences, scored by their own category.
+    cases = {
+        "structural": "John saw a boy in the park with a telescope.",
+        "syntactic": "Rice flies like sand.",
+        "semantic": "What's the best way to deal with bats?",
+        "vague": "Tell me about the history of art.",
+        "open": "What are the causes and consequences of poverty in developing countries?",
+        "multipart": "How do cats and dogs differ in behavior, diet, and social interaction?",
+    }
+    idx = {name: i for i, name in enumerate(FEATURE_NAMES)}
+    for utype, text in cases.items():
+        feats = rulegen.features(text)
+        assert feats[idx[utype]] > 0.0, (utype, feats)
+
+
+def test_plain_sentences_score_low():
+    f = rulegen.features("i love pizza .")
+    assert sum(f[:6]) <= 2.0, f
+
+
+def test_scores_nonnegative_on_generated_corpus():
+    import random
+
+    rng = random.Random(0)
+    for utype in UNCERTAINTY_TYPES:
+        for _ in range(50):
+            text = corpus.GENERATORS[utype](rng)
+            feats = rulegen.features(text)
+            assert all(x >= 0.0 for x in feats), (utype, text, feats)
+
+
+def test_generated_type_scores_higher_on_average():
+    """Across the corpus, each non-plain generator must on average score
+    higher on its own rule than plain sentences do."""
+    import random
+
+    rng = random.Random(1)
+    idx = {name: i for i, name in enumerate(FEATURE_NAMES)}
+    plain_scores = np.zeros(6)
+    n = 100
+    for _ in range(n):
+        plain_scores += np.asarray(rulegen.features(corpus.GENERATORS["plain"](rng))[:6])
+    plain_scores /= n
+    for utype in ("structural", "syntactic", "semantic", "vague", "open", "multipart"):
+        own = 0.0
+        for _ in range(n):
+            own += rulegen.features(corpus.GENERATORS[utype](rng))[idx[utype]]
+        own /= n
+        assert own > plain_scores[idx[utype]] + 1.0, (utype, own, plain_scores)
+
+
+def test_single_rule_fallback_is_input_length():
+    text = "zebra zebra zebra"
+    feats = rulegen.features(text)
+    assert sum(feats[:6]) == 0.0
+    assert rulegen.single_rule_score(text) == 3.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet=st.characters(codec="ascii"), max_size=120))
+def test_features_total_function(s):
+    feats = rulegen.features(s)
+    assert len(feats) == N_FEATURES
+    assert all(np.isfinite(x) and x >= 0.0 for x in feats)

@@ -1,0 +1,80 @@
+"""Tokenizer / PoS-lite / vocab unit tests (the rust mirror contract)."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import lexicon
+from compile.common import UNK_ID, VOCAB_SIZE
+from compile.textproc import Vocab, build_vocab, pos_tag, tokenize
+
+
+def test_tokenize_basic():
+    assert tokenize("I love pizza.") == ["i", "love", "pizza", "."]
+    assert tokenize("what?  really!") == ["what", "?", "really", "!"]
+    assert tokenize("") == []
+
+
+def test_tokenize_splits_punctuation_order():
+    # trailing punctuation must come out in string order
+    assert tokenize("ok?!") == ["ok", "?", "!"]
+    assert tokenize('"quoted"') == ['"', "quoted", '"']
+
+
+def test_tokenize_lowercases():
+    assert tokenize("John SAW") == ["john", "saw"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet=st.characters(codec="ascii"), max_size=80))
+def test_tokenize_never_crashes_and_no_empty_tokens(s):
+    toks = tokenize(s)
+    assert all(t for t in toks)
+
+
+def test_pos_tag_lexicon_hits():
+    toks = ["what", "in", "the", "and", "i", "is", "good", "very"]
+    tags = pos_tag(toks)
+    assert tags == [
+        lexicon.TAG_WH,
+        lexicon.TAG_ADP,
+        lexicon.TAG_DET,
+        lexicon.TAG_CONJ,
+        lexicon.TAG_PRON,
+        lexicon.TAG_VERB,
+        lexicon.TAG_ADJ,
+        lexicon.TAG_ADV,
+    ]
+
+
+def test_pos_tag_suffix_rules():
+    assert pos_tag(["quickly"]) == [lexicon.TAG_ADV]
+    assert pos_tag(["jumping"]) == [lexicon.TAG_VERB]
+    assert pos_tag(["education"]) == [lexicon.TAG_NOUN]
+    assert pos_tag(["marvelous"]) == [lexicon.TAG_ADJ]
+    assert pos_tag(["zebra"]) == [lexicon.TAG_NOUN]  # default
+    assert pos_tag(["?"]) == [lexicon.TAG_PUNCT]
+
+
+def test_vocab_size_and_round_trip():
+    v = Vocab()
+    assert len(v.id_to_word) == VOCAB_SIZE
+    ids = v.encode("i love pizza .")
+    assert UNK_ID not in ids  # all corpus words must be in-vocab
+    assert v.decode(ids) == "i love pizza ."
+
+
+def test_vocab_specials():
+    v = build_vocab()
+    assert v[:4] == ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+
+def test_all_corpus_words_in_vocab():
+    v = Vocab()
+    for w in lexicon.all_words():
+        assert w in v.word_to_id, w
+
+
+def test_encode_truncates():
+    v = Vocab()
+    ids = v.encode("a " * 200, max_len=64)
+    assert len(ids) == 64

@@ -1,0 +1,10 @@
+//! Paper-reproduction harness: one runner per table/figure in the
+//! evaluation section. Each runner prints the same rows/series the paper
+//! reports (tables as ASCII tables, figures as labelled series/bars).
+//!
+//! Invoked by `rtlm bench <experiment>` and the `paper_tables` bench.
+
+pub mod internal;
+pub mod scenarios;
+
+pub use scenarios::{run_experiment, ExperimentCtx};

@@ -1,0 +1,1038 @@
+//! Experiment runners — one per table/figure of the paper's evaluation.
+//!
+//! Each runner prints the same rows/series the paper reports. Absolute
+//! numbers reflect *this* testbed (CPU-PJRT calibration, see DESIGN.md
+//! §Hardware-Adaptation); the claims being reproduced are the shapes:
+//! who wins, by roughly what factor, and where the crossovers fall.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{DeviceProfile, ModelEntry, SchedParams};
+use crate::metrics::summary::{linregress, pearson};
+use crate::metrics::table::{bar_chart, fmt_f};
+use crate::metrics::{Samples, Table};
+use crate::runtime::ArtifactStore;
+use crate::scheduler::{PolicyKind, Task};
+use crate::sim::{run_sim, LatencyModel, SimResult};
+use crate::uncertainty::Estimator;
+use crate::workload::subsets::{self, Variance};
+use crate::workload::{corpus, malicious, ArrivalTrace, TaskFactory, WorkItem};
+
+/// Shared context for all experiments.
+pub struct ExperimentCtx {
+    pub store: Arc<ArtifactStore>,
+    pub lat: LatencyModel,
+    pub params: SchedParams,
+    pub estimator: Estimator,
+    /// Tasks per simulated run (paper uses full test sets; scale knob).
+    pub n_tasks: usize,
+    pub seed: u64,
+    /// Per-model optimal batch size C_f (Fig. 8a decision).
+    pub batch_sizes: BTreeMap<String, usize>,
+    /// Per-model malicious threshold tau (Fig. 8b / Eq. 4 decision).
+    pub taus: BTreeMap<String, f64>,
+    train_items: Vec<WorkItem>,
+    test_items: BTreeMap<String, Vec<WorkItem>>,
+    observation: Vec<WorkItem>,
+}
+
+impl ExperimentCtx {
+    pub fn new(store: Arc<ArtifactStore>, n_tasks: usize, seed: u64) -> Result<ExperimentCtx> {
+        let m = &store.manifest;
+        let lat = LatencyModel::load_or_analytic(m)?;
+        let estimator = Estimator::new(
+            store.lexicon.clone(),
+            store.regressor.clone(),
+            m.max_input_len,
+            m.min_output_len as f64,
+            m.max_output_len as f64,
+        );
+        let train_items = corpus::load_many(m.corpus_train.values())?;
+        let mut test_items = BTreeMap::new();
+        for (ds, path) in &m.corpus_test {
+            test_items.insert(ds.clone(), corpus::load(path)?);
+        }
+        let observation = corpus::load(&m.corpus_observation)?;
+
+        // Offline decisions (Algorithm 1 lines 7-9).
+        let mut batch_sizes = BTreeMap::new();
+        let mut taus = BTreeMap::new();
+        let train_scores: Vec<f64> = train_items
+            .iter()
+            .map(|it| estimator.score_features(&it.features))
+            .collect::<Result<_>>()?;
+        let params = SchedParams::default();
+        let mut sorted_scores = Samples::from_vec(train_scores.clone());
+        let tau = sorted_scores.quantile(params.k);
+        for (name, _) in &m.models {
+            batch_sizes.insert(name.clone(), optimal_batch(&lat, name));
+            taus.insert(name.clone(), tau);
+        }
+
+        Ok(ExperimentCtx {
+            store,
+            lat,
+            params,
+            estimator,
+            n_tasks,
+            seed,
+            batch_sizes,
+            taus,
+            train_items,
+            test_items,
+            observation,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::config::Manifest {
+        &self.store.manifest
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.store.manifest.model(name)
+    }
+
+    pub fn all_test_items(&self) -> Vec<WorkItem> {
+        self.test_items.values().flatten().cloned().collect()
+    }
+
+    pub fn test_items(&self, dataset: &str) -> Result<&[WorkItem]> {
+        self.test_items
+            .get(dataset)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("unknown dataset {dataset}"))
+    }
+
+    pub fn train_items(&self) -> &[WorkItem] {
+        &self.train_items
+    }
+
+    pub fn observation_items(&self) -> &[WorkItem] {
+        &self.observation
+    }
+
+    pub fn params_for(&self, model: &str) -> SchedParams {
+        SchedParams {
+            batch_size: self.batch_sizes.get(model).copied().unwrap_or(16),
+            ..self.params.clone()
+        }
+    }
+
+    /// Simulated single-task latency at batch 1 (Fig. 1b's y-axis).
+    pub fn solo_latency(&self, model: &str, input_len: usize, out_len: usize) -> f64 {
+        self.lat.prefill_secs(model, 1, input_len.max(1))
+            + out_len as f64 * self.lat.decode_step(model, 1)
+    }
+
+    /// Per-model beta range (arrivals/min): the paper sweeps 10..150 on
+    /// hardware whose peak rate comfortably exceeds 150/min; this
+    /// testbed's calibrated service rates differ per LM, so the sweep is
+    /// rescaled to peak at ~90% of the model's service capacity —
+    /// preserving the light-load-to-peak *shape* (DESIGN.md
+    /// §Hardware-Adaptation).
+    pub fn beta_range(&self, model: &ModelEntry, dev: &DeviceProfile) -> (u32, u32) {
+        let c = self.batch_sizes.get(&model.name).copied().unwrap_or(16);
+        // An uncertainty-oblivious batch decodes for the MAX output
+        // length of its members (~E[max of C draws] ≈ 55 tokens on this
+        // corpus), not the mean — capacity is estimated for the *worst*
+        // (FIFO) batching so the peak stresses but does not permanently
+        // saturate any policy.
+        let batch_len = 55.0;
+        let batch_secs = dev.gpu_speed
+            * (self.lat.prefill_secs_dev(&model.name, c, 64, dev)
+                + batch_len * self.lat.decode_step_dev(&model.name, c, dev))
+            + dev.dispatch_overhead;
+        let thr_per_min = 60.0 * c as f64 / batch_secs.max(1e-6);
+        // peak transiently exceeds capacity (1.15x) — as real traffic
+        // spikes do — so ordering policies actually bind; the sweep's
+        // light phases let the backlog drain
+        let beta_hi = (1.15 * thr_per_min).max(15.0) as u32;
+        let beta_lo = (beta_hi / 15).max(1);
+        (beta_lo, beta_hi)
+    }
+
+    /// Build the task set for one (model, variance) cell on the edge
+    /// profile (see [`Self::scenario_tasks_on`]).
+    pub fn scenario_tasks(
+        &self,
+        model: &ModelEntry,
+        variance: Variance,
+        seed: u64,
+    ) -> Result<Vec<Task>> {
+        self.scenario_tasks_on(model, variance, &DeviceProfile::edge_server(), seed)
+    }
+
+    /// Build the task set for one (model, variance, device) cell.
+    pub fn scenario_tasks_on(
+        &self,
+        model: &ModelEntry,
+        variance: Variance,
+        dev: &DeviceProfile,
+        seed: u64,
+    ) -> Result<Vec<Task>> {
+        let items = self.all_test_items();
+        let scores: Vec<f64> = items
+            .iter()
+            .map(|it| self.estimator.score_features(&it.features))
+            .collect::<Result<_>>()?;
+        let chosen = subsets::select(&items, &scores, variance, self.n_tasks, seed);
+        // compressed beta sweep: n arrivals cover the full light-to-peak
+        // range of the (capacity-rescaled) paper workload
+        let (lo, hi) = self.beta_range(model, dev);
+        let step = ArrivalTrace::sweep_step_for(self.n_tasks, lo, hi);
+        let trace =
+            ArrivalTrace::poisson_sweep_scaled(self.n_tasks, lo, hi, step, seed ^ 0xA11);
+        let factory = TaskFactory::new(self.estimator.clone(), 2.0);
+        factory.build_all(&chosen, &trace, model, false)
+    }
+
+    /// Run one policy over a prepared task set.
+    pub fn run_policy(
+        &self,
+        model: &ModelEntry,
+        tasks: Vec<Task>,
+        kind: PolicyKind,
+        dev: &DeviceProfile,
+    ) -> SimResult {
+        let params = self.params_for(&model.name);
+        let tau = self.taus.get(&model.name).copied().unwrap_or(f64::INFINITY);
+        let mut policy = kind.build(&params, model.eta, tau);
+        run_sim(tasks, &mut *policy, &self.lat, model, dev, &params)
+    }
+}
+
+/// Fig. 8a decision: smallest decode bucket whose normalised batching
+/// utilisation reaches 90% (the paper picks the smallest batch reaching
+/// 100% GPU usage).
+pub fn optimal_batch(lat: &LatencyModel, model: &str) -> usize {
+    let util = lat.batching_utilisation(model, &DeviceProfile::edge_server());
+    util.iter()
+        .find(|(_, u)| *u >= 0.90)
+        .map(|(b, _)| *b)
+        .or_else(|| util.last().map(|(b, _)| *b))
+        .unwrap_or(16)
+}
+
+// ===========================================================================
+// experiment dispatch
+// ===========================================================================
+
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1a", "fig1b", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "table3",
+    "table4", "fig10", "fig11", "fig12", "fig13", "fig14", "table6", "table7", "internal",
+];
+
+pub fn run_experiment(ctx: &ExperimentCtx, name: &str) -> Result<()> {
+    match name {
+        "fig1a" => fig1a(ctx),
+        "fig1b" => fig1b(ctx),
+        "fig2" => fig2(ctx),
+        "fig3" => fig3(ctx),
+        "fig4" => fig4(ctx),
+        "fig5" => fig5(ctx),
+        "fig6" => fig6(ctx),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9_table3(ctx, false),
+        "table3" => fig9_table3(ctx, true),
+        "table4" => table4(ctx),
+        "fig10" => ablation(ctx, &DeviceProfile::edge_server(), "Fig. 10 ablation (edge server)"),
+        "fig11" => fig11(ctx),
+        "fig12" => ablation(ctx, &DeviceProfile::agx_xavier(), "Fig. 12 ablation (AGX Xavier)"),
+        "fig13" => fig13(ctx),
+        "fig14" => fig14(ctx),
+        "table6" => table6(ctx),
+        "table7" => table7(ctx),
+        "internal" => super::internal::run_internal(ctx),
+        "all" => {
+            for e in EXPERIMENTS {
+                run_experiment(ctx, e)?;
+                println!();
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown experiment '{other}' (have {EXPERIMENTS:?} or 'all')")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1a — output-length distribution per uncertainty type
+// ---------------------------------------------------------------------------
+
+fn fig1a(ctx: &ExperimentCtx) -> Result<()> {
+    let m = ctx.manifest();
+    let types = &m.uncertainty_types;
+    let mut table = Table::new(
+        "Fig. 1a — mean output length (tokens) per uncertainty type",
+        &[&"type".to_string()[..], "mean", "std", "p95"],
+    );
+    let mut bars = Vec::new();
+    for utype in types {
+        let mut lens = Samples::new();
+        for item in ctx.observation_items().iter().filter(|i| &i.utype == utype) {
+            lens.push(item.mean_len());
+        }
+        table.row(vec![
+            utype.clone(),
+            fmt_f(lens.mean(), 1),
+            fmt_f(lens.std(), 1),
+            fmt_f(lens.p95(), 1),
+        ]);
+        bars.push((utype.clone(), lens.mean()));
+    }
+    table.print();
+    print!("{}", bar_chart("mean output length by type", &bars, 40));
+
+    let mut per_model = Table::new(
+        "Fig. 1a (cont.) — mean output length per LM",
+        &["type", "dialogpt", "godel", "blenderbot", "bart", "t5"],
+    );
+    for utype in types {
+        let mut row = vec![utype.clone()];
+        for model in ["dialogpt", "godel", "blenderbot", "bart", "t5"] {
+            let mut lens = Samples::new();
+            for item in ctx.observation_items().iter().filter(|i| &i.utype == utype) {
+                lens.push(item.len_for(model) as f64);
+            }
+            row.push(fmt_f(lens.mean(), 1));
+        }
+        per_model.row(row);
+    }
+    per_model.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1b — inference latency is proportional to output length
+// ---------------------------------------------------------------------------
+
+fn fig1b(ctx: &ExperimentCtx) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 1b — latency (ms) vs output length (batch-1, calibrated model)",
+        &["model", "len=8", "len=24", "len=48", "len=96", "pearson(len,lat)"],
+    );
+    for name in ctx.manifest().model_names() {
+        let lens: Vec<f64> = ctx
+            .observation_items()
+            .iter()
+            .map(|i| i.len_for(&name) as f64)
+            .collect();
+        let lats: Vec<f64> = ctx
+            .observation_items()
+            .iter()
+            .map(|i| ctx.solo_latency(&name, i.input_len, i.len_for(&name)) * 1e3)
+            .collect();
+        let r = pearson(&lens, &lats);
+        table.row(vec![
+            name.clone(),
+            fmt_f(ctx.solo_latency(&name, 12, 8) * 1e3, 1),
+            fmt_f(ctx.solo_latency(&name, 12, 24) * 1e3, 1),
+            fmt_f(ctx.solo_latency(&name, 12, 48) * 1e3, 1),
+            fmt_f(ctx.solo_latency(&name, 12, 96) * 1e3, 1),
+            fmt_f(r, 3),
+        ]);
+    }
+    table.print();
+    println!("(paper: latency grows linearly with output length; uncertain sentences 2-4x normal)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — correlation of heuristics with output length
+// ---------------------------------------------------------------------------
+
+fn fig2(ctx: &ExperimentCtx) -> Result<()> {
+    let items = ctx.all_test_items();
+    let mean_lens: Vec<f64> = items.iter().map(|i| i.mean_len()).collect();
+    let wr = &ctx.manifest().regressor;
+
+    let input_lens: Vec<f64> = items.iter().map(|i| i.input_len as f64).collect();
+    let single: Vec<f64> = items
+        .iter()
+        .map(|i| {
+            crate::uncertainty::single_rule_score(
+                ctx.estimator.lexicon(),
+                &i.text,
+                ctx.manifest().max_input_len,
+            )
+        })
+        .collect();
+    let weighted: Vec<f64> = items
+        .iter()
+        .map(|i| {
+            i.features
+                .iter()
+                .zip(&wr.weighted_rule_coef)
+                .map(|(f, c)| f * c)
+                .sum::<f64>()
+                + wr.weighted_rule_intercept
+        })
+        .collect();
+    let lw: Vec<f64> = items
+        .iter()
+        .map(|i| ctx.estimator.score_features(&i.features))
+        .collect::<Result<_>>()?;
+
+    let mut table = Table::new(
+        "Fig. 2 — correlation of each heuristic with mean output length",
+        &["panel", "heuristic", "pearson r", "slope"],
+    );
+    for (panel, name, xs) in [
+        ("a", "input length", &input_lens),
+        ("b", "single rule", &single),
+        ("c", "weighted rule", &weighted),
+        ("d", "LW model", &lw),
+    ] {
+        let r = pearson(xs, &mean_lens);
+        let (slope, _) = linregress(xs, &mean_lens);
+        table.row(vec![panel.into(), name.into(), fmt_f(r, 3), fmt_f(slope, 3)]);
+    }
+    table.print();
+
+    let mut ds_table = Table::new(
+        "Fig. 2e — input length vs output length per dataset",
+        &["dataset", "pearson r"],
+    );
+    for (ds, items) in &ctx.manifest().corpus_test {
+        let items = corpus::load(items)?;
+        let xs: Vec<f64> = items.iter().map(|i| i.input_len as f64).collect();
+        let ys: Vec<f64> = items.iter().map(|i| i.mean_len()).collect();
+        ds_table.row(vec![ds.clone(), fmt_f(pearson(&xs, &ys), 3)]);
+    }
+    ds_table.print();
+    println!("(paper: r increases a -> d, LW model near-linear)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — predicted uncertainty tracks latency on each dataset
+// ---------------------------------------------------------------------------
+
+fn fig3(ctx: &ExperimentCtx) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 3 — LW score vs simulated latency, per benchmark dataset",
+        &["dataset", "pearson(score, latency)", "mean latency ms", "mean score"],
+    );
+    for ds in ctx.manifest().corpus_test.keys() {
+        let items = ctx.test_items(ds)?;
+        let mut scores = Vec::new();
+        let mut lats = Vec::new();
+        for item in items {
+            scores.push(ctx.estimator.score_features(&item.features)?);
+            // average latency across the five LMs (paper's Fig. 3 setup)
+            let lat: f64 = ctx
+                .manifest()
+                .model_names()
+                .iter()
+                .map(|m| ctx.solo_latency(m, item.input_len, item.len_for(m)))
+                .sum::<f64>()
+                / ctx.manifest().models.len() as f64;
+            lats.push(lat * 1e3);
+        }
+        table.row(vec![
+            ds.clone(),
+            fmt_f(pearson(&scores, &lats), 3),
+            fmt_f(lats.iter().sum::<f64>() / lats.len() as f64, 1),
+            fmt_f(scores.iter().sum::<f64>() / scores.len() as f64, 1),
+        ]);
+    }
+    table.print();
+    println!("(paper: predicted scores highly consistent with latency on all four datasets)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — prioritisation toy example (HPF vs LUF vs UP)
+// ---------------------------------------------------------------------------
+
+fn fig4(ctx: &ExperimentCtx) -> Result<()> {
+    // Reconstruct the paper's 5-task example on a unit latency model
+    // (0.1 s/token, sequential execution). The paper hand-picks a task
+    // set where HPF and LUF each strand tasks while UP balances both
+    // signals; we search the same space for an instance exhibiting that
+    // pattern under *our* exact scheduler semantics, then print it.
+    let _ = ctx;
+    let lat = unit_latency_model();
+    let model = unit_model();
+    let dev = unit_device();
+    let mut params = SchedParams::default();
+    params.batch_size = 1;
+
+    let mut rng = crate::util::rng::Pcg64::new(0xF164);
+    for _attempt in 0..5000 {
+        let tasks: Vec<Task> = (0..5)
+            .map(|i| {
+                let u = 10.0 + rng.f64() * 70.0;
+                let exec = 0.1 * u;
+                // deadlines tight relative to total work: the sequential
+                // server is overloaded, where EDF-style HPF falters
+                let d = exec * (0.4 + rng.f64() * 2.2);
+                unit_task(i + 1, d, u)
+            })
+            .collect();
+        let mut misses = Vec::new();
+        let mut orders = Vec::new();
+        for kind in [PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Up] {
+            let mut policy = kind.build(&params, 0.1, f64::INFINITY);
+            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            let mut order: Vec<(f64, u64)> =
+                r.outcomes.iter().map(|o| (o.completion, o.id)).collect();
+            order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            misses.push(r.miss_count());
+            orders.push(
+                order.iter().map(|(_, id)| format!("J{id}")).collect::<Vec<_>>().join(" "),
+            );
+        }
+        // paper pattern: UP best (balancing both signals), LUF worst
+        if misses[2] < misses[1]
+            && misses[2] <= misses[0]
+            && misses[1] > misses[0]
+            && misses[2] >= 1
+        {
+            let mut table = Table::new(
+                "Fig. 4 — priority-point misses on a 5-task example (0.1 s/token)",
+                &["policy", "missed", "order"],
+            );
+            for (i, kind) in [PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Up]
+                .iter()
+                .enumerate()
+            {
+                table.row(vec![kind.label().into(), misses[i].to_string(), orders[i].clone()]);
+            }
+            table.print();
+            println!("tasks (id, deadline s, est. exec s):");
+            for t in &tasks {
+                println!("  J{}: d={:.2}  exec={:.2}", t.id, t.priority_point, 0.1 * t.uncertainty);
+            }
+            println!("(paper example: HPF misses 2, LUF misses 3, UP misses 1)");
+            return Ok(());
+        }
+    }
+    println!("Fig. 4: no instance found (unexpected — check scheduler semantics)");
+    Ok(())
+}
+
+/// Unit-model helpers for the Fig. 4/5 mechanism illustrations.
+fn unit_latency_model() -> LatencyModel {
+    let mut c = crate::sim::calib::Calibration::default();
+    let mut d = BTreeMap::new();
+    for b in [1usize, 2, 4, 8, 16, 32] {
+        // perfect batching: a batch step costs the same as a single row
+        d.insert(b, 0.1);
+    }
+    c.decode.insert("unit".into(), d);
+    let mut pf = BTreeMap::new();
+    pf.insert((1usize, 16usize), 0.0);
+    pf.insert((32usize, 64usize), 0.0);
+    c.prefill.insert("unit".into(), pf);
+    LatencyModel::from_calibration(&c)
+}
+
+fn unit_model() -> ModelEntry {
+    ModelEntry {
+        name: "unit".into(),
+        n_layers: 1,
+        d_model: 64,
+        n_heads: 1,
+        d_ff: 64,
+        eta: 0.1,
+        phi: 0.0,
+        gamma: 1.0,
+        delta: 0.0,
+        weights: std::path::PathBuf::new(),
+        param_names: vec![],
+        prefill: BTreeMap::new(),
+        decode: BTreeMap::new(),
+        decode_chunk: BTreeMap::new(),
+        chunk_k: 0,
+    }
+}
+
+fn unit_device() -> DeviceProfile {
+    DeviceProfile {
+        name: "unit".into(),
+        gpu_speed: 1.0,
+        cpu_speed: 1.0,
+        batching_exp: 0.0,
+        dispatch_overhead: 0.0,
+        offload_overhead: 0.0,
+        cpu_workers: 1,
+        batch_knee: 1e9, // perfect batching in the unit examples
+    }
+}
+
+fn unit_task(id: u64, d: f64, u: f64) -> Task {
+    Task {
+        id,
+        text: String::new(),
+        prompt: vec![],
+        arrival: 0.0,
+        priority_point: d,
+        uncertainty: u,
+        true_len: u.round() as usize,
+        input_len: 8,
+        utype: "plain".into(),
+        malicious: false,
+        deferrals: 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — consolidation toy example (8 tasks, C = 4)
+// ---------------------------------------------------------------------------
+
+fn fig5(ctx: &ExperimentCtx) -> Result<()> {
+    // 8 tasks, C = 4, unit latency model: uncertainty-oblivious batching
+    // (similar priority points together) vs uncertainty-aware batching
+    // (similar execution times together). As in Fig. 4, we search for an
+    // instance exhibiting the paper's pattern under our semantics.
+    let _ = ctx;
+    let lat = unit_latency_model();
+    let model = unit_model();
+    let dev = unit_device();
+    let mut params = SchedParams::default();
+    params.batch_size = 4;
+
+    let mut rng = crate::util::rng::Pcg64::new(0xF165);
+    for _attempt in 0..5000 {
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| {
+                // two natural length groups, interleaved deadlines
+                let u = if rng.f64() < 0.5 {
+                    8.0 + rng.f64() * 10.0
+                } else {
+                    40.0 + rng.f64() * 30.0
+                };
+                let d = 1.0 + rng.f64() * 9.0;
+                unit_task(i + 1, d, u)
+            })
+            .collect();
+        let mut rows = Vec::new();
+        let mut misses = Vec::new();
+        let mut makespans = Vec::new();
+        for kind in [PolicyKind::Hpf, PolicyKind::UpC] {
+            let mut policy = kind.build(&params, 0.1, f64::INFINITY);
+            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            misses.push(r.miss_count());
+            makespans.push(r.makespan);
+            let busy: f64 = {
+                let mut durs: Vec<f64> = r.outcomes.iter().map(|o| o.infer_secs).collect();
+                durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                durs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+                durs.iter().sum()
+            };
+            let label = if kind == PolicyKind::Hpf {
+                "priority-point batching"
+            } else {
+                "uncertainty batching"
+            };
+            rows.push(vec![
+                label.to_string(),
+                r.miss_count().to_string(),
+                fmt_f(r.makespan, 2),
+                fmt_f(busy / r.makespan.max(1e-9), 2),
+            ]);
+        }
+        if misses[1] < misses[0] && makespans[1] <= makespans[0] + 1e-9 {
+            let mut table = Table::new(
+                "Fig. 5 — uncertainty-oblivious vs uncertainty-aware batching (8 tasks, C=4)",
+                &["batching", "missed", "makespan s", "gpu util"],
+            );
+            for row in rows {
+                table.row(row);
+            }
+            table.print();
+            println!("tasks (id, deadline s, est. exec s):");
+            for t in &tasks {
+                println!("  J{}: d={:.2}  exec={:.2}", t.id, t.priority_point, 0.1 * t.uncertainty);
+            }
+            println!("(paper example: 4 misses oblivious vs 2 consolidated, higher util)");
+            return Ok(());
+        }
+    }
+    println!("Fig. 5: no instance found (unexpected — check consolidation semantics)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — offload transfer cost vs execution time
+// ---------------------------------------------------------------------------
+
+fn fig6(ctx: &ExperimentCtx) -> Result<()> {
+    let dev = DeviceProfile::edge_server();
+    let mut table = Table::new(
+        "Fig. 6 — offload transfer overhead vs execution time per task",
+        &["model", "exec ms (len=24)", "transfer ms", "transfer/exec"],
+    );
+    for name in ctx.manifest().model_names() {
+        let exec = ctx.solo_latency(&name, 12, 24);
+        let transfer = dev.offload_overhead;
+        table.row(vec![
+            name.clone(),
+            fmt_f(exec * 1e3, 1),
+            fmt_f(transfer * 1e3, 1),
+            fmt_f(transfer / exec.max(1e-12), 2),
+        ]);
+    }
+    table.print();
+    println!("(paper: transfer is a comparable fraction of execution -> offload only demanding tasks)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — offline decisions: optimal batch size and malicious threshold
+// ---------------------------------------------------------------------------
+
+fn fig8(ctx: &ExperimentCtx) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 8a — batching utilisation per decode bucket (1.0 = best rows/sec)",
+        &["model", "b=1", "b=2", "b=4", "b=8", "b=16", "b=32", "C_f"],
+    );
+    for name in ctx.manifest().model_names() {
+        let util: BTreeMap<usize, f64> = ctx
+            .lat
+            .batching_utilisation(&name, &DeviceProfile::edge_server())
+            .into_iter()
+            .collect();
+        let mut row = vec![name.clone()];
+        for b in [1usize, 2, 4, 8, 16, 32] {
+            row.push(util.get(&b).map(|u| fmt_f(*u, 2)).unwrap_or_else(|| "-".into()));
+        }
+        row.push(ctx.batch_sizes.get(&name).copied().unwrap_or(0).to_string());
+        table.row(row);
+    }
+    table.print();
+
+    let mut t2 = Table::new(
+        "Fig. 8b — training-set uncertainty distribution and tau (k=0.9)",
+        &["model", "u p50", "u p90", "tau"],
+    );
+    let scores: Vec<f64> = ctx
+        .train_items()
+        .iter()
+        .map(|i| ctx.estimator.score_features(&i.features))
+        .collect::<Result<_>>()?;
+    let mut s = Samples::from_vec(scores);
+    for name in ctx.manifest().model_names() {
+        t2.row(vec![
+            name.clone(),
+            fmt_f(s.p50(), 1),
+            fmt_f(s.quantile(0.9), 1),
+            fmt_f(ctx.taus.get(&name).copied().unwrap_or(f64::NAN), 1),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 + Table III — response time per (model, variance, policy), edge
+// ---------------------------------------------------------------------------
+
+fn fig9_table3(ctx: &ExperimentCtx, as_table3: bool) -> Result<()> {
+    run_grid(ctx, &DeviceProfile::edge_server(), as_table3, "edge server")
+}
+
+fn fig11(ctx: &ExperimentCtx) -> Result<()> {
+    run_grid(ctx, &DeviceProfile::agx_xavier(), false, "AGX Xavier")
+}
+
+fn run_grid(
+    ctx: &ExperimentCtx,
+    dev: &DeviceProfile,
+    as_table3: bool,
+    label: &str,
+) -> Result<()> {
+    let title = if as_table3 {
+        format!("Table III — maximum response time (s), {label}")
+    } else {
+        format!("Fig. 9/11 — response time distribution (mean / p95 s), {label}")
+    };
+    let mut table = Table::new(
+        &title,
+        &["model", "variance", "FIFO", "HPF", "LUF", "MUF", "RT-LM", "RT-LM vs FIFO"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        for variance in Variance::ALL {
+            let tasks = ctx.scenario_tasks_on(model, variance, dev, ctx.seed)?;
+            let mut cells = Vec::new();
+            let mut fifo_val = 0.0;
+            let mut rtlm_val = 0.0;
+            for kind in PolicyKind::ALL_BASELINES {
+                let r = ctx.run_policy(model, tasks.clone(), kind, dev);
+                let val = if as_table3 {
+                    r.max_response()
+                } else {
+                    r.mean_response()
+                };
+                if kind == PolicyKind::Fifo {
+                    fifo_val = val;
+                }
+                if kind == PolicyKind::RtLm {
+                    rtlm_val = val;
+                }
+                cells.push(if as_table3 {
+                    fmt_f(val, 2)
+                } else {
+                    let mut s = r.response_times();
+                    format!("{}/{}", fmt_f(s.mean(), 2), fmt_f(s.p95(), 2))
+                });
+            }
+            let improvement = (fifo_val - rtlm_val) / fifo_val.max(1e-9) * 100.0;
+            let mut row = vec![name.clone(), variance.label().into()];
+            row.extend(cells);
+            row.push(format!("{:+.1}%", -improvement * -1.0));
+            table.row(row);
+        }
+    }
+    table.print();
+    println!("(paper: uncertainty-aware wins grow with variance; RT-LM up to 30% better max RT)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — throughput per (model, variance, policy)
+// ---------------------------------------------------------------------------
+
+fn table4(ctx: &ExperimentCtx) -> Result<()> {
+    let dev = DeviceProfile::edge_server();
+    let mut table = Table::new(
+        "Table IV — peak-period throughput (tasks/min), edge server",
+        &["model", "variance", "FIFO", "HPF", "LUF", "MUF", "RT-LM"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        for variance in Variance::ALL {
+            let tasks = ctx.scenario_tasks(model, variance, ctx.seed)?;
+            let mut row = vec![name.clone(), variance.label().into()];
+            for kind in PolicyKind::ALL_BASELINES {
+                let r = ctx.run_policy(model, tasks.clone(), kind, &dev);
+                row.push(fmt_f(r.peak_throughput_per_min(), 2));
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    println!("(paper: RT-LM consistently highest; LUF > MUF)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 / Fig. 12 — component ablation
+// ---------------------------------------------------------------------------
+
+fn ablation(ctx: &ExperimentCtx, dev: &DeviceProfile, title: &str) -> Result<()> {
+    let mut table = Table::new(
+        title,
+        &["model", "FIFO", "UP", "UP+C", "RT-LM (=UP+C+Off)"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        let tasks = ctx.scenario_tasks_on(model, Variance::Normal, dev, ctx.seed ^ 0xAB1)?;
+        let mut row = vec![name.clone()];
+        for kind in [PolicyKind::Fifo, PolicyKind::Up, PolicyKind::UpC, PolicyKind::RtLm] {
+            let r = ctx.run_policy(model, tasks.clone(), kind, dev);
+            row.push(fmt_f(r.mean_response(), 2));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("(paper: every component helps; prioritisation+consolidation > offloading)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — parameter study (alpha, b)
+// ---------------------------------------------------------------------------
+
+fn fig13(ctx: &ExperimentCtx) -> Result<()> {
+    let dev = DeviceProfile::edge_server();
+    let alphas: Vec<f64> = (1..=20).map(|i| i as f64 * 0.1).collect();
+    let mut table = Table::new(
+        "Fig. 13a — peak-period mean response (s) vs alpha (b = 2.0)",
+        &["model", "a=0.1", "a=0.5", "a=1.0", "a=1.5", "a=2.0", "max dev"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        let tasks = ctx.scenario_tasks(model, Variance::Normal, ctx.seed ^ 0x13A)?;
+        let mut series = Vec::new();
+        for &alpha in &alphas {
+            let mut params = ctx.params_for(&name);
+            params.alpha = alpha;
+            params.b = 2.0;
+            let tau = ctx.taus[&name];
+            let mut policy = PolicyKind::RtLm.build(&params, model.eta, tau);
+            let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
+            series.push(r.peak_mean_response());
+        }
+        let max_dev = series.iter().cloned().fold(f64::MIN, f64::max)
+            - series.iter().cloned().fold(f64::MAX, f64::min);
+        table.row(vec![
+            name.clone(),
+            fmt_f(series[0], 2),
+            fmt_f(series[4], 2),
+            fmt_f(series[9], 2),
+            fmt_f(series[14], 2),
+            fmt_f(series[19], 2),
+            fmt_f(max_dev, 2),
+        ]);
+    }
+    table.print();
+
+    let bs: Vec<f64> = (10..=30).map(|i| i as f64 * 0.1).collect();
+    let mut tb = Table::new(
+        "Fig. 13b — peak-period mean response (s) vs b (alpha = 1.0)",
+        &["model", "b=1.0", "b=1.5", "b=1.8", "b=2.5", "b=3.0", "max dev"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        let tasks = ctx.scenario_tasks(model, Variance::Normal, ctx.seed ^ 0x13B)?;
+        let mut series = Vec::new();
+        for &b in &bs {
+            let mut params = ctx.params_for(&name);
+            params.b = b;
+            let tau = ctx.taus[&name];
+            let mut policy = PolicyKind::RtLm.build(&params, model.eta, tau);
+            let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
+            series.push(r.peak_mean_response());
+        }
+        let max_dev = series.iter().cloned().fold(f64::MIN, f64::max)
+            - series.iter().cloned().fold(f64::MAX, f64::min);
+        tb.row(vec![
+            name.clone(),
+            fmt_f(series[0], 2),
+            fmt_f(series[5], 2),
+            fmt_f(series[8], 2),
+            fmt_f(series[15], 2),
+            fmt_f(series[20], 2),
+            fmt_f(max_dev, 2),
+        ]);
+    }
+    tb.print();
+    println!("(paper: robust to alpha [max dev <= 0.35s]; b matters more [<= 0.75s], optimum ~1.8)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — malicious-task ratio sweep
+// ---------------------------------------------------------------------------
+
+fn fig14(ctx: &ExperimentCtx) -> Result<()> {
+    let dev = DeviceProfile::edge_server();
+    let model = ctx.model("dialogpt")?;
+    let factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
+    let items = ctx.all_test_items();
+    let scores: Vec<f64> = items
+        .iter()
+        .map(|i| ctx.estimator.score_features(&i.features))
+        .collect::<Result<_>>()?;
+    let base = subsets::select(&items, &scores, Variance::Normal, ctx.n_tasks, ctx.seed ^ 0x14);
+
+    let mut table = Table::new(
+        "Fig. 14 — mean response time (s) vs malicious ratio (dialogpt)",
+        &["ratio %", "FIFO", "RT-LM", "FIFO infer", "RT-LM infer"],
+    );
+    for pct in (0..=100).step_by(10) {
+        let ratio = pct as f64 / 100.0;
+        let (crafted, _) =
+            malicious::inject(&base, ratio, ctx.manifest().max_output_len, ctx.seed ^ pct as u64);
+        let (lo, hi) = ctx.beta_range(model, &dev);
+        let step = ArrivalTrace::sweep_step_for(crafted.len(), lo, hi);
+        let trace =
+            ArrivalTrace::poisson_sweep_scaled(crafted.len(), lo, hi, step, ctx.seed ^ 0x141);
+        // crafted items need rescoring from text (features are stale)
+        let tasks = factory.build_all(&crafted, &trace, model, true)?;
+        let mut row = vec![pct.to_string()];
+        let mut infers = Vec::new();
+        for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+            let r = ctx.run_policy(model, tasks.clone(), kind, &dev);
+            row.push(fmt_f(r.mean_response(), 2));
+            infers.push(fmt_f(r.mean_infer_secs(), 2));
+        }
+        row.extend(infers);
+        table.row(row);
+    }
+    table.print();
+    println!("(paper: FIFO degrades sharply past 30% malicious; RT-LM stays flat)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table VI — offline profiling overhead
+// ---------------------------------------------------------------------------
+
+fn table6(ctx: &ExperimentCtx) -> Result<()> {
+    let reg = &ctx.manifest().regressor;
+    let mut table = Table::new(
+        "Table VI — offline profiling cost",
+        &["model", "LW train s", "LM inference s (train set)", "ratio %", "LW params"],
+    );
+    let n_params: usize = {
+        let sizes = &reg.layer_sizes;
+        sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    };
+    for name in ctx.manifest().model_names() {
+        // simulated total inference time of the training corpus on this LM
+        let total_infer: f64 = ctx
+            .train_items()
+            .iter()
+            .map(|i| ctx.solo_latency(&name, i.input_len, i.len_for(&name)))
+            .sum();
+        table.row(vec![
+            name.clone(),
+            fmt_f(reg.train_seconds, 1),
+            fmt_f(total_infer, 1),
+            fmt_f(reg.train_seconds / total_infer.max(1e-9) * 100.0, 2),
+            n_params.to_string(),
+        ]);
+    }
+    table.print();
+    println!("(paper: LW training is ~3-4% of LM inference time)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table VII — online scheduling overhead
+// ---------------------------------------------------------------------------
+
+fn table7(ctx: &ExperimentCtx) -> Result<()> {
+    use std::time::Instant;
+    let dev = DeviceProfile::edge_server();
+    let mut table = Table::new(
+        "Table VII — online scheduling overhead per task",
+        &["model", "prior. us", "consol.+off. us", "total us", "vs inference %"],
+    );
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name)?;
+        // prioritisation: feature extraction + regressor, measured on text
+        let items = ctx.all_test_items();
+        let texts: Vec<&str> = items.iter().take(400).map(|i| i.text.as_str()).collect();
+        let t0 = Instant::now();
+        for text in &texts {
+            let _ = ctx.estimator.score(text)?;
+        }
+        let prior_us = t0.elapsed().as_secs_f64() / texts.len() as f64 * 1e6;
+
+        // consolidation + offload: policy push/pop wall time from a sim run
+        let tasks = ctx.scenario_tasks(model, Variance::Normal, ctx.seed ^ 0x77)?;
+        let n = tasks.len();
+        let r = ctx.run_policy(model, tasks, PolicyKind::RtLm, &dev);
+        let sched_us = r.sched_wall_secs / n as f64 * 1e6;
+
+        let mean_infer_ms = ctx.solo_latency(&name, 12, 24) * 1e3;
+        let total_us = prior_us + sched_us;
+        table.row(vec![
+            name.clone(),
+            fmt_f(prior_us, 1),
+            fmt_f(sched_us, 1),
+            fmt_f(total_us, 1),
+            fmt_f(total_us / 1e3 / mean_infer_ms * 100.0, 3),
+        ]);
+    }
+    table.print();
+    println!("(paper: <3% overhead vs inference; prioritisation dominates)");
+    Ok(())
+}

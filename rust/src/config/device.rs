@@ -1,0 +1,101 @@
+//! Device profiles for the simulator — the paper's two testbeds
+//! (Table II) mapped onto calibrated multipliers of the measured CPU-PJRT
+//! latencies. See DESIGN.md §Hardware-Adaptation.
+
+/// A simulated execution platform.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Multiplier on the accelerator-lane latency model (1.0 = the
+    /// calibrated edge-server profile).
+    pub gpu_speed: f64,
+    /// Multiplier on the CPU-lane latency model.
+    pub cpu_speed: f64,
+    /// Batching efficiency exponent: a batch of size B costs
+    /// `t1 * B^batching_exp` per step (1.0 = no batching benefit,
+    /// 0.0 = perfect batching). Calibration overrides this when real
+    /// measurements exist.
+    pub batching_exp: f64,
+    /// Fixed per-dispatch overhead in seconds (kernel launch, transfer).
+    pub dispatch_overhead: f64,
+    /// CPU-lane offload transfer overhead per task in seconds (Fig. 6:
+    /// transfer time is comparable to execution for most layers).
+    pub offload_overhead: f64,
+    /// Parallel CPU-lane workers (the paper's edge server has a 96-core
+    /// EPYC; offloaded tasks run batch-1 but several at a time).
+    pub cpu_workers: usize,
+    /// Accelerator batching knee: batches up to this size cost the same
+    /// as batch-1 (the GPU's parallel lanes amortise them); beyond it
+    /// cost grows linearly. CPU-PJRT executes rows serially, so the
+    /// simulator restores the accelerator's batching behaviour on top of
+    /// the calibrated batch-1 anchor (DESIGN.md §Hardware-Adaptation).
+    pub batch_knee: f64,
+}
+
+impl DeviceProfile {
+    /// The paper's edge server (RTX A4500, 96-core EPYC).
+    pub fn edge_server() -> DeviceProfile {
+        DeviceProfile {
+            name: "edge-server".into(),
+            // Maps the calibrated CPU-PJRT batch-1 anchor into the
+            // paper's serving regime: the A4500 serves the paper's
+            // 100M-400M LMs at ~0.4 s/task; x6 puts our five variants at
+            // 0.29-0.83 s/task with the same relative ordering, so the
+            // paper's time constants (xi = 2 s, deadlines ~2-4 s) apply
+            // natively. See DESIGN.md §Hardware-Adaptation.
+            gpu_speed: 6.0,
+            cpu_speed: 6.0,
+            batching_exp: 0.55,
+            dispatch_overhead: 2.0e-3,
+            offload_overhead: 8.0e-3,
+            cpu_workers: 8,
+            batch_knee: 12.0,
+        }
+    }
+
+    /// The paper's embedded platform (NVIDIA AGX Xavier): ~3.5x slower
+    /// accelerator, weaker CPU, less batching headroom.
+    pub fn agx_xavier() -> DeviceProfile {
+        DeviceProfile {
+            name: "agx-xavier".into(),
+            // 3.5x slower than the edge accelerator, 5x weaker CPU
+            gpu_speed: 21.0,
+            cpu_speed: 30.0,
+            batching_exp: 0.70,
+            dispatch_overhead: 6.0e-3,
+            offload_overhead: 20.0e-3,
+            cpu_workers: 2,
+            batch_knee: 6.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<DeviceProfile> {
+        match name {
+            "edge-server" | "edge" => Ok(Self::edge_server()),
+            "agx-xavier" | "xavier" | "agx" => Ok(Self::agx_xavier()),
+            other => Err(anyhow::anyhow!(
+                "unknown device profile '{other}' (edge-server | agx-xavier)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xavier_is_slower() {
+        let edge = DeviceProfile::edge_server();
+        let agx = DeviceProfile::agx_xavier();
+        assert!(agx.gpu_speed > edge.gpu_speed);
+        assert!(agx.batching_exp > edge.batching_exp);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(DeviceProfile::by_name("edge").is_ok());
+        assert!(DeviceProfile::by_name("xavier").is_ok());
+        assert!(DeviceProfile::by_name("tpu-v9000").is_err());
+    }
+}

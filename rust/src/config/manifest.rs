@@ -1,0 +1,285 @@
+//! `artifacts/manifest.json` — the contract between the python AOT build
+//! and the rust runtime: model shapes, bucket sets, parameter order,
+//! file locations, and the length-model constants the workload generator
+//! mirrors.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One transformer LM variant.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Output-tokens -> seconds coefficient (paper's eta_f).
+    pub eta: f64,
+    /// Input-tokens -> priority-point coefficient (paper's phi_f).
+    pub phi: f64,
+    /// Length-oracle calibration (see corpus.py).
+    pub gamma: f64,
+    pub delta: f64,
+    pub weights: PathBuf,
+    pub param_names: Vec<String>,
+    /// (batch, seq) -> HLO path.
+    pub prefill: BTreeMap<(usize, usize), PathBuf>,
+    /// batch -> HLO path.
+    pub decode: BTreeMap<usize, PathBuf>,
+    /// batch -> multi-token chunk HLO path (perf variant; optional).
+    pub decode_chunk: BTreeMap<usize, PathBuf>,
+    /// Tokens per chunk execution (0 when chunks are absent).
+    pub chunk_k: usize,
+}
+
+impl ModelEntry {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Approximate per-token FLOPs of a decode step at batch 1 (used as
+    /// the analytic latency-model fallback when calibration is absent).
+    pub fn decode_flops_per_row(&self, kv_len: usize) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let att = 4.0 * d * d + 2.0 * (kv_len as f64) * d;
+        let ffn = 2.0 * d * f;
+        (self.n_layers as f64) * 2.0 * (att + ffn)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RegressorEntry {
+    pub weights: PathBuf,
+    pub param_names: Vec<String>,
+    pub layer_sizes: Vec<usize>,
+    pub hlo: BTreeMap<usize, PathBuf>,
+    pub weighted_rule_coef: Vec<f64>,
+    pub weighted_rule_intercept: f64,
+    pub train_seconds: f64,
+    pub final_train_mse: f64,
+}
+
+/// Per-uncertainty-type length model (mean, std) mirrored from python.
+#[derive(Clone, Debug)]
+pub struct LengthModel {
+    pub per_type: BTreeMap<String, (f64, f64)>,
+    pub input_coef: f64,
+    pub noise_std: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_size: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub unk_id: i32,
+    pub seq_max: usize,
+    pub max_input_len: usize,
+    pub max_output_len: usize,
+    pub min_output_len: usize,
+    pub feature_names: Vec<String>,
+    pub feature_scales: Vec<f64>,
+    pub uncertainty_types: Vec<String>,
+    pub length_model: LengthModel,
+    pub prefill_batch_buckets: Vec<usize>,
+    pub prefill_seq_buckets: Vec<usize>,
+    pub decode_batch_buckets: Vec<usize>,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub regressor: RegressorEntry,
+    pub lexicon: PathBuf,
+    pub corpus_train: BTreeMap<String, PathBuf>,
+    pub corpus_test: BTreeMap<String, PathBuf>,
+    pub corpus_observation: PathBuf,
+    pub golden_textproc: PathBuf,
+    pub quick: bool,
+}
+
+fn f64_list(v: &Json, key: &str) -> Result<Vec<f64>> {
+    v.need_arr(key)?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow!("'{key}': non-numeric entry")))
+        .collect()
+}
+
+fn usize_list(v: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(f64_list(v, key)?.into_iter().map(|x| x as usize).collect())
+}
+
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
+    v.need_arr(key)?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("'{key}': non-string entry"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json` and resolve all paths against root.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        Self::from_json(root, &v)
+    }
+
+    fn from_json(root: &Path, v: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in v.need_obj("models")? {
+            let cfg = m.get("config");
+            let mut prefill = BTreeMap::new();
+            for (key, path) in m.need_obj("prefill")? {
+                let (b, s) = key
+                    .split_once(',')
+                    .ok_or_else(|| anyhow!("bad prefill bucket key '{key}'"))?;
+                prefill.insert(
+                    (b.parse()?, s.parse()?),
+                    root.join(path.as_str().ok_or_else(|| anyhow!("bad path"))?),
+                );
+            }
+            let mut decode = BTreeMap::new();
+            for (key, path) in m.need_obj("decode")? {
+                decode.insert(
+                    key.parse::<usize>()?,
+                    root.join(path.as_str().ok_or_else(|| anyhow!("bad path"))?),
+                );
+            }
+            let mut decode_chunk = BTreeMap::new();
+            if let Some(chunks) = m.get("decode_chunk").as_obj() {
+                for (key, path) in chunks {
+                    decode_chunk.insert(
+                        key.parse::<usize>()?,
+                        root.join(path.as_str().ok_or_else(|| anyhow!("bad path"))?),
+                    );
+                }
+            }
+            let chunk_k = m.get("chunk_k").as_usize().unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    n_layers: cfg.need_f64("n_layers")? as usize,
+                    d_model: cfg.need_f64("d_model")? as usize,
+                    n_heads: cfg.need_f64("n_heads")? as usize,
+                    d_ff: cfg.need_f64("d_ff")? as usize,
+                    eta: m.need_f64("eta")?,
+                    phi: m.need_f64("phi")?,
+                    gamma: m.need_f64("gamma")?,
+                    delta: m.need_f64("delta")?,
+                    weights: root.join(m.need_str("weights")?),
+                    param_names: str_list(m, "param_names")?,
+                    prefill,
+                    decode,
+                    decode_chunk,
+                    chunk_k,
+                },
+            );
+        }
+
+        let r = v.get("regressor");
+        let wr = r.get("weighted_rule");
+        let mut reg_hlo = BTreeMap::new();
+        for (key, path) in r.need_obj("hlo")? {
+            reg_hlo.insert(
+                key.parse::<usize>()?,
+                root.join(path.as_str().ok_or_else(|| anyhow!("bad path"))?),
+            );
+        }
+        let regressor = RegressorEntry {
+            weights: root.join(r.need_str("weights")?),
+            param_names: str_list(r, "param_names")?,
+            layer_sizes: usize_list(r, "layer_sizes")?,
+            hlo: reg_hlo,
+            weighted_rule_coef: f64_list(wr, "coef")?,
+            weighted_rule_intercept: wr.need_f64("intercept")?,
+            train_seconds: r.need_f64("train_seconds")?,
+            final_train_mse: r.need_f64("final_train_mse")?,
+        };
+
+        let lm = v.get("length_model");
+        let mut per_type = BTreeMap::new();
+        for (utype, pair) in lm.as_obj().ok_or_else(|| anyhow!("missing length_model"))? {
+            per_type.insert(
+                utype.clone(),
+                (
+                    pair.idx(0).as_f64().ok_or_else(|| anyhow!("bad length mean"))?,
+                    pair.idx(1).as_f64().ok_or_else(|| anyhow!("bad length std"))?,
+                ),
+            );
+        }
+        let length_model = LengthModel {
+            per_type,
+            input_coef: v.need_f64("length_input_coef")?,
+            noise_std: v.need_f64("length_noise_std")?,
+        };
+
+        let buckets = v.get("buckets");
+        let corpus = v.get("corpus");
+        let path_map = |j: &Json, key: &str| -> Result<BTreeMap<String, PathBuf>> {
+            let mut out = BTreeMap::new();
+            for (k, p) in j.need_obj(key)? {
+                out.insert(
+                    k.clone(),
+                    root.join(p.as_str().ok_or_else(|| anyhow!("bad corpus path"))?),
+                );
+            }
+            Ok(out)
+        };
+
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            vocab_size: v.need_f64("vocab_size")? as usize,
+            pad_id: v.need_f64("pad_id")? as i32,
+            bos_id: v.need_f64("bos_id")? as i32,
+            eos_id: v.need_f64("eos_id")? as i32,
+            unk_id: v.need_f64("unk_id")? as i32,
+            seq_max: v.need_f64("seq_max")? as usize,
+            max_input_len: v.need_f64("max_input_len")? as usize,
+            max_output_len: v.need_f64("max_output_len")? as usize,
+            min_output_len: v.need_f64("min_output_len")? as usize,
+            feature_names: str_list(v, "feature_names")?,
+            feature_scales: f64_list(v, "feature_scales")?,
+            uncertainty_types: str_list(v, "uncertainty_types")?,
+            length_model,
+            prefill_batch_buckets: usize_list(buckets, "prefill_batch")?,
+            prefill_seq_buckets: usize_list(buckets, "prefill_seq")?,
+            decode_batch_buckets: usize_list(buckets, "decode_batch")?,
+            models,
+            regressor,
+            lexicon: root.join(v.need_str("lexicon")?),
+            corpus_train: path_map(corpus, "train")?,
+            corpus_test: path_map(corpus, "test")?,
+            corpus_observation: root.join(corpus.need_str("observation")?),
+            golden_textproc: root.join(v.get("goldens").need_str("textproc")?),
+            quick: v.get("quick").as_bool().unwrap_or(false),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys()))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Default artifacts root: `$RTLM_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("RTLM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: the artifact manifest (the python-AOT contract), the
+//! scheduler hyper-parameters, and device profiles for the simulator.
+
+pub mod device;
+pub mod manifest;
+pub mod sched;
+
+pub use device::DeviceProfile;
+pub use manifest::{Manifest, ModelEntry, RegressorEntry};
+pub use sched::SchedParams;

@@ -1,0 +1,75 @@
+//! Scheduler hyper-parameters (paper Sec. IV / V-A).
+
+/// All tunables of UASCHED (Algorithm 1) plus workload-level knobs.
+#[derive(Clone, Debug)]
+pub struct SchedParams {
+    /// Uncertainty weight in the UP priority (Eq. 3). Paper optimum: 1.0.
+    pub alpha: f64,
+    /// Max allowed uncertainty ratio between adjacent batched tasks
+    /// (dynamic consolidation). Paper: 1.5.
+    pub lambda: f64,
+    /// Batch-accumulation factor: consolidation examines b*C queued
+    /// tasks before forming a batch. Paper optimum: 1.8.
+    pub b: f64,
+    /// Malicious quantile (Eq. 4): tau = quantile_k of training-set
+    /// uncertainty scores. Paper: 0.9.
+    pub k: f64,
+    /// Wait-interval: tasks arriving within xi seconds are batched
+    /// together (paper Sec. V-A: 2 s).
+    pub xi: f64,
+    /// Fixed batch size used by the uncertainty-oblivious baselines and
+    /// as the per-model optimal C_f once calibrated.
+    pub batch_size: usize,
+    /// Scale for normalising uncertainty scores (predicted tokens) into
+    /// [0, 1] for the UP numerator; set to the max output length.
+    pub u_scale: f64,
+    /// Floor for the slack denominator in Eq. 3 (seconds): an overdue
+    /// task saturates at maximal priority instead of dividing by <= 0.
+    pub min_slack: f64,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        SchedParams {
+            alpha: 1.0,
+            lambda: 1.5,
+            b: 1.8,
+            k: 0.9,
+            xi: 2.0,
+            batch_size: 16,
+            u_scale: 96.0,
+            min_slack: 1e-3,
+        }
+    }
+}
+
+impl SchedParams {
+    /// Number of tasks consolidation accumulates before reordering.
+    pub fn accumulate_len(&self) -> usize {
+        ((self.b * self.batch_size as f64).floor() as usize).max(self.batch_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = SchedParams::default();
+        assert_eq!(p.alpha, 1.0);
+        assert_eq!(p.lambda, 1.5);
+        assert_eq!(p.b, 1.8);
+        assert_eq!(p.k, 0.9);
+        assert_eq!(p.xi, 2.0);
+    }
+
+    #[test]
+    fn accumulate_len_scales_with_b() {
+        let mut p = SchedParams { batch_size: 10, ..Default::default() };
+        p.b = 1.8;
+        assert_eq!(p.accumulate_len(), 18);
+        p.b = 0.5; // never below one batch
+        assert_eq!(p.accumulate_len(), 10);
+    }
+}

@@ -1,0 +1,60 @@
+//! Real execution lanes over the PJRT artifacts.
+//!
+//! The accelerator lane runs batches through [`LmSession::generate`]
+//! (bucketed batched decode); the quarantine lane executes tasks one by
+//! one at batch 1 — the honest on-this-hardware analogue of the paper's
+//! CPU offload lane: no batching amortisation, strictly slower per task.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::LmSession;
+use crate::scheduler::{Batch, Lane};
+
+/// Execution record for one completed batch.
+#[derive(Debug)]
+pub struct ExecReport {
+    pub lane: Lane,
+    pub task_ids: Vec<u64>,
+    /// Generated token ids per task (order matches `task_ids`).
+    pub outputs: Vec<Vec<i32>>,
+    /// Pure model time (prefill + decode) for the whole batch.
+    pub infer_secs: f64,
+    /// Decode steps executed.
+    pub steps: usize,
+}
+
+/// Run a batch on the accelerator lane (batched prefill + decode).
+pub fn execute_gpu(session: &Arc<LmSession>, batch: &Batch) -> Result<ExecReport> {
+    let prompts: Vec<Vec<i32>> = batch.tasks.iter().map(|t| t.prompt.clone()).collect();
+    let lens: Vec<usize> = batch.tasks.iter().map(|t| t.true_len.max(1)).collect();
+    let gen = session.generate(&prompts, &lens)?;
+    Ok(ExecReport {
+        lane: Lane::Gpu,
+        task_ids: batch.tasks.iter().map(|t| t.id).collect(),
+        outputs: gen.tokens,
+        infer_secs: gen.prefill_secs + gen.decode_secs,
+        steps: gen.steps,
+    })
+}
+
+/// Run a batch on the quarantine lane: tasks sequentially at batch 1.
+/// Returns one report per task so completions stream out one at a time.
+pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecReport>> {
+    let mut reports = Vec::with_capacity(batch.tasks.len());
+    for task in &batch.tasks {
+        let gen = session.generate(
+            std::slice::from_ref(&task.prompt),
+            &[task.true_len.max(1)],
+        )?;
+        reports.push(ExecReport {
+            lane: Lane::Cpu,
+            task_ids: vec![task.id],
+            outputs: gen.tokens,
+            infer_secs: gen.prefill_secs + gen.decode_secs,
+            steps: gen.steps,
+        });
+    }
+    Ok(reports)
+}

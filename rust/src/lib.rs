@@ -1,0 +1,32 @@
+//! RT-LM — uncertainty-aware resource management for real-time LM serving.
+//!
+//! Reproduction of "RT-LM: Uncertainty-Aware Resource Management for
+//! Real-Time Inference of Language Models" (Li et al., 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's system contribution: the
+//!   uncertainty-aware scheduler ([`scheduler`]), dual execution lanes
+//!   ([`executor`]), workload engine ([`workload`]), real-time serving
+//!   loop ([`server`]) and the calibrated discrete-event simulator
+//!   ([`sim`]) used to regenerate the paper's tables and figures.
+//! - **L2/L1 (build-time python)** — the transformer LM variants and the
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/` and executed
+//!   through [`runtime`] (PJRT CPU client; python never runs at serve
+//!   time).
+//!
+//! See `DESIGN.md` for the paper-to-module map and the substitutions made
+//! for unavailable hardware/data.
+
+pub mod bench_harness;
+pub mod config;
+pub mod executor;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod textgen;
+pub mod uncertainty;
+pub mod util;
+pub mod workload;

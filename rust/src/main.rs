@@ -1,0 +1,337 @@
+//! `rtlm` — the RT-LM coordinator CLI.
+//!
+//! Subcommands:
+//!   check                 validate artifacts + run a smoke inference
+//!   calibrate             measure PJRT latencies -> artifacts/calib.json
+//!   bench <experiment>    regenerate a paper table/figure ('all' = every one)
+//!   sim                   one simulated serving run with printed summary
+//!   serve                 real-mode serving run over a Poisson trace
+//!   tcp                   interactive line-protocol TCP server
+//!   score <text..>        score a single utterance (features + u_J)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
+use rtlm::config::{DeviceProfile, Manifest, SchedParams};
+use rtlm::metrics::table::fmt_f;
+use rtlm::model::LmSession;
+use rtlm::runtime::ArtifactStore;
+use rtlm::scheduler::PolicyKind;
+use rtlm::server::{serve, ServeOptions};
+use rtlm::sim::{Calibration, LatencyModel};
+use rtlm::uncertainty::Estimator;
+use rtlm::util::cli::Args;
+use rtlm::workload::subsets::Variance;
+use rtlm::workload::{corpus, subsets, ArrivalTrace, TaskFactory};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_root(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_root)
+}
+
+fn estimator_for(store: &Arc<ArtifactStore>) -> Estimator {
+    let m = &store.manifest;
+    Estimator::new(
+        store.lexicon.clone(),
+        store.regressor.clone(),
+        m.max_input_len,
+        m.min_output_len as f64,
+        m.max_output_len as f64,
+    )
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "check" => check(args),
+        "calibrate" => calibrate(args),
+        "bench" => bench(args),
+        "sim" => sim(args),
+        "serve" => serve_cmd(args),
+        "tcp" => tcp(args),
+        "score" => score(args),
+        _ => {
+            println!(
+                "rtlm — uncertainty-aware resource management for real-time LM serving\n\n\
+                 usage: rtlm <command> [--artifacts DIR] [options]\n\n\
+                 commands:\n\
+                 \x20 check                      validate artifacts, smoke inference\n\
+                 \x20 calibrate [--reps N]       measure PJRT latencies -> calib.json\n\
+                 \x20 bench <exp|all> [--n N]    regenerate paper experiments: {exps}\n\
+                 \x20 sim [--model M] [--policy P] [--n N] [--device D] [--variance V]\n\
+                 \x20 serve [--model M] [--policy P] [--n N] [--time-scale S]\n\
+                 \x20 tcp [--model M] [--addr A] [--policy P]\n\
+                 \x20 score <text...>            print RULEGEN features + u_J",
+                exps = EXPERIMENTS.join(",")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn check(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    println!("artifacts: {}", root.display());
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let m = &store.manifest;
+    println!(
+        "manifest ok: {} models, vocab {}, seq_max {}, quick={}",
+        m.models.len(),
+        m.vocab_size,
+        m.seq_max,
+        m.quick
+    );
+    println!("PJRT platform: {}", store.client.platform_name());
+
+    let est = estimator_for(&store);
+    let demo = "What are the causes and consequences of poverty in developing countries?";
+    let (u, feats) = est.score_with_features(demo)?;
+    println!("score(\"{demo}\") = {u:.1} tokens, features {feats:?}");
+
+    let model = m.model_names().into_iter().next().ok_or_else(|| anyhow!("no models"))?;
+    let session = LmSession::new(store.clone(), &model)?;
+    let prompt = rtlm::model::session::encode_prompt(&store, demo);
+    let out = session.generate(&[prompt], &[8])?;
+    println!(
+        "smoke inference on {model}: 8 tokens in {:.1} ms prefill + {:.1} ms decode -> \"{}\"",
+        out.prefill_secs * 1e3,
+        out.decode_secs * 1e3,
+        store.vocab.decode(&out.tokens[0])
+    );
+    println!("check OK");
+    Ok(())
+}
+
+fn calibrate(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let reps = args.get_usize("reps", 5)?;
+    let mut calib = Calibration {
+        note: format!("cpu-pjrt reps={reps}"),
+        ..Default::default()
+    };
+
+    // regressor native latency
+    let est = estimator_for(&store);
+    let t0 = std::time::Instant::now();
+    let n_reg = 2000;
+    for i in 0..n_reg {
+        let _ = est.score_features(&[1.0, 2.0, 3.0, 0.0, 5.0, 1.0, (i % 40) as f64])?;
+    }
+    calib.regressor_secs = t0.elapsed().as_secs_f64() / n_reg as f64;
+    println!("regressor: {:.1} us/task", calib.regressor_secs * 1e6);
+
+    for name in store.manifest.model_names() {
+        println!("calibrating {name}...");
+        let session = LmSession::new(store.clone(), &name)?;
+        let entry = store.manifest.model(&name)?.clone();
+        let mut decode = std::collections::BTreeMap::new();
+        for &b in entry.decode.keys() {
+            let secs = session.time_decode_step(b, reps)?;
+            println!("  decode b={b}: {:.2} ms/step", secs * 1e3);
+            decode.insert(b, secs);
+        }
+        // physical-consistency smoothing: a bigger batch is never faster
+        // than a smaller one, and never worse than linear in rows.
+        let mut prev: Option<(usize, f64)> = None;
+        for (&b, secs) in decode.iter_mut() {
+            if let Some((pb, pt)) = prev {
+                *secs = secs.max(pt).min(pt * b as f64 / pb as f64);
+            }
+            prev = Some((b, *secs));
+        }
+        calib.decode.insert(name.clone(), decode);
+        let mut prefill = std::collections::BTreeMap::new();
+        for &bucket in entry.prefill.keys() {
+            let secs = session.time_prefill(bucket, reps)?;
+            println!("  prefill b={} s={}: {:.2} ms", bucket.0, bucket.1, secs * 1e3);
+            prefill.insert(bucket, secs);
+        }
+        calib.prefill.insert(name.clone(), prefill);
+    }
+
+    let path = root.join("calib.json");
+    calib.save(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let n = args.get_usize("n", 400)?;
+    let seed = args.get_u64("seed", 7)?;
+    let ctx = ExperimentCtx::new(store, n, seed)?;
+    let exp = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    run_experiment(&ctx, exp)
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let n = args.get_usize("n", 400)?;
+    let seed = args.get_u64("seed", 7)?;
+    let ctx = ExperimentCtx::new(store, n, seed)?;
+    let model_name = args.get_or("model", "dialogpt").to_string();
+    let model = ctx.model(&model_name)?;
+    let kind = PolicyKind::parse(args.get_or("policy", "rtlm"))?;
+    let dev = DeviceProfile::by_name(args.get_or("device", "edge-server"))?;
+    let variance = match args.get_or("variance", "normal") {
+        "small" => Variance::Small,
+        "large" => Variance::Large,
+        _ => Variance::Normal,
+    };
+    let tasks = ctx.scenario_tasks(model, variance, seed)?;
+    let r = ctx.run_policy(model, tasks, kind, &dev);
+    let mut s = r.response_times();
+    println!(
+        "sim: model={model_name} policy={} device={} n={} variance={:?}",
+        kind.label(),
+        dev.name,
+        n,
+        variance
+    );
+    println!(
+        "response time s: mean {} p50 {} p95 {} max {}",
+        fmt_f(s.mean(), 3),
+        fmt_f(s.p50(), 3),
+        fmt_f(s.p95(), 3),
+        fmt_f(s.max(), 3)
+    );
+    println!(
+        "throughput {}/min  misses {} ({:.1}%)  batches gpu={} cpu={}  sched {:.1} us/task",
+        fmt_f(r.throughput_per_min(), 1),
+        r.miss_count(),
+        r.miss_rate() * 100.0,
+        r.n_batches_gpu,
+        r.n_batches_cpu,
+        r.sched_wall_secs / r.outcomes.len().max(1) as f64 * 1e6,
+    );
+    if let Some(path) = args.get("export") {
+        r.export_jsonl(std::path::Path::new(path))?;
+        println!("per-task outcomes exported to {path}");
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let n = args.get_usize("n", 48)?;
+    let seed = args.get_u64("seed", 7)?;
+    let model_name = args.get_or("model", "t5").to_string();
+    let kind = PolicyKind::parse(args.get_or("policy", "rtlm"))?;
+    let time_scale = args.get_f64("time-scale", 20.0)?;
+    let beta = args.get_f64("beta", 120.0)?;
+
+    let est = estimator_for(&store);
+    let items = corpus::load_many(store.manifest.corpus_test.values())?;
+    let scores: Vec<f64> = items
+        .iter()
+        .map(|i| est.score_features(&i.features))
+        .collect::<Result<_>>()?;
+    let chosen = subsets::select(&items, &scores, Variance::Normal, n, seed);
+    let trace = ArrivalTrace::poisson_fixed(n, beta, seed);
+    let model = store.manifest.model(&model_name)?.clone();
+    let factory = TaskFactory::new(est, 2.0);
+    let mut tasks = factory.build_all(&chosen, &trace, &model, false)?;
+    rtlm::server::engine::encode_prompts(&store, &mut tasks);
+
+    // offline decisions
+    let lat = LatencyModel::load_or_analytic(&store.manifest)?;
+    let mut train_scores = rtlm::metrics::Samples::from_vec(scores);
+    let params = SchedParams {
+        batch_size: rtlm::bench_harness::scenarios::optimal_batch(&lat, &model_name),
+        ..Default::default()
+    };
+    let tau = train_scores.quantile(params.k);
+    let mut policy = kind.build(&params, model.eta, tau);
+
+    println!(
+        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={}",
+        kind.label(),
+        params.batch_size
+    );
+    let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
+    let opts = ServeOptions { time_scale, verbose: args.flag("verbose") };
+    let report = serve(session, tasks, &mut *policy, &params, &opts)?;
+    let mut s = report.response_times();
+    println!(
+        "completed {} tasks in {:.1}s wall | response s: mean {} p50 {} p95 {} max {}",
+        report.outcomes.len(),
+        report.wall_secs,
+        fmt_f(s.mean(), 3),
+        fmt_f(s.p50(), 3),
+        fmt_f(s.p95(), 3),
+        fmt_f(s.max(), 3)
+    );
+    println!(
+        "throughput {}/min | batches gpu={} cpu={} | infer {:.1}s | sched {:.1} us/task",
+        fmt_f(report.throughput_per_min(), 1),
+        report.n_batches_gpu,
+        report.n_batches_cpu,
+        report.infer_secs,
+        report.sched_secs / report.outcomes.len().max(1) as f64 * 1e6
+    );
+    Ok(())
+}
+
+fn tcp(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let model_name = args.get_or("model", "t5").to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7490").to_string();
+    let kind = PolicyKind::parse(args.get_or("policy", "rtlm"))?;
+    let est = estimator_for(&store);
+
+    let items = corpus::load_many(store.manifest.corpus_train.values())?;
+    let scores: Vec<f64> = items
+        .iter()
+        .map(|i| est.score_features(&i.features))
+        .collect::<Result<_>>()?;
+    let mut s = rtlm::metrics::Samples::from_vec(scores);
+    let params = SchedParams { batch_size: 4, xi: 0.25, ..Default::default() };
+    let tau = s.quantile(params.k);
+    let model = store.manifest.model(&model_name)?;
+    let policy = kind.build(&params, model.eta, tau);
+
+    let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
+    rtlm::server::tcp::serve_tcp(session, est, policy, params, &addr)
+}
+
+fn score(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    let store = Arc::new(ArtifactStore::open(&root)?);
+    let text = args.positional[1..].join(" ");
+    if text.is_empty() {
+        return Err(anyhow!("usage: rtlm score <text...>"));
+    }
+    let est = estimator_for(&store);
+    let (u, feats) = est.score_with_features(&text)?;
+    let names = &store.manifest.feature_names;
+    println!("text: {text}");
+    for (name, value) in names.iter().zip(feats.iter()) {
+        println!("  {name:<12} {value:>7.2}");
+    }
+    println!("uncertainty score (predicted output tokens): {u:.1}");
+    for (name, entry) in &store.manifest.models {
+        println!("  est. latency on {name:<11}: {:>6.1} ms", entry.eta * u * 1e3);
+    }
+    Ok(())
+}

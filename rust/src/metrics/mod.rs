@@ -1,0 +1,9 @@
+//! Measurement utilities: sample summaries, quantiles, ASCII tables and
+//! text histograms used by the bench harness to print paper-style
+//! tables/figures.
+
+pub mod summary;
+pub mod table;
+
+pub use summary::Samples;
+pub use table::{histogram, Table};

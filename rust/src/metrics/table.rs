@@ -1,0 +1,138 @@
+//! ASCII table and text-histogram rendering for the bench harness
+//! (stands in for the paper's plotted figures — each figure becomes a
+//! printed series the shape of which can be compared to the paper).
+
+/// Simple column-aligned ASCII table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render a labelled horizontal bar chart (max width `width` chars).
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let max = entries.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("-- {title} --\n");
+    for (label, value) in entries {
+        let n = ((value / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<label_w$} | {}{} {:.3}\n",
+            label,
+            "#".repeat(n),
+            " ".repeat(width - n),
+            value,
+        ));
+    }
+    out
+}
+
+pub fn fmt_f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Render a compact text histogram of samples (the paper's violin/CDF
+/// plots become printable distributions).
+pub fn histogram(title: &str, values: &[f64], n_bins: usize, width: usize) -> String {
+    if values.is_empty() {
+        return format!("-- {title} -- (no samples)\n");
+    }
+    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut bins = vec![0usize; n_bins.max(1)];
+    for &v in values {
+        let idx = (((v - lo) / span) * n_bins as f64) as usize;
+        bins[idx.min(n_bins - 1)] += 1;
+    }
+    let max_count = bins.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = format!("-- {title} (n={}) --\n", values.len());
+    for (i, count) in bins.iter().enumerate() {
+        let b_lo = lo + span * i as f64 / n_bins as f64;
+        let b_hi = lo + span * (i + 1) as f64 / n_bins as f64;
+        let bar = "#".repeat(count * width / max_count);
+        out.push_str(&format!("[{b_lo:6.2}, {b_hi:6.2}) |{bar:<width$}| {count}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1.0".into()]);
+        t.row(vec!["b".into(), "123.456".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines equal width columns
+        assert!(lines[1].starts_with("name"));
+        assert!(lines[3].starts_with("alpha"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("t", &[("a".into(), 1.0), ("bb".into(), 2.0)], 10);
+        assert!(s.contains("##########")); // the max bar hits full width
+    }
+}

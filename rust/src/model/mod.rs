@@ -1,0 +1,6 @@
+//! LM inference sessions: prefill + autoregressive decode over the AOT
+//! artifacts, with shape bucketing and host-side KV-cache management.
+
+pub mod session;
+
+pub use session::{GenOutput, LmSession};

@@ -1,0 +1,430 @@
+//! A serving session for one LM variant.
+//!
+//! Weights upload to the device once at construction; each `generate`
+//! call runs bucketed prefill (chunked to the largest prefill batch
+//! bucket), assembles the decode-bucket KV cache, and then steps the
+//! batched decode executable until every row has produced its target
+//! number of tokens.
+//!
+//! The *length oracle* (how many tokens a row generates) comes from the
+//! workload record — see DESIGN.md §Substitutions: with synthetic
+//! weights the EOS head carries no signal, so the corpus supplies
+//! per-(input, model) output lengths calibrated to the paper's Fig. 1a,
+//! and the session runs exactly that many real decode steps.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::ModelEntry;
+use crate::runtime::client::i32_literal;
+use crate::runtime::ArtifactStore;
+
+/// Result of one batched generation call.
+#[derive(Debug)]
+pub struct GenOutput {
+    /// Generated token ids per input row (length = its target length).
+    pub tokens: Vec<Vec<i32>>,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    /// Number of decode steps executed (= max target length).
+    pub steps: usize,
+    pub decode_bucket: usize,
+}
+
+pub struct LmSession {
+    store: Arc<ArtifactStore>,
+    pub entry: ModelEntry,
+    /// Weights as device buffers, in canonical param order.
+    param_buffers: Vec<xla::PjRtBuffer>,
+    /// Weights as host literals — kept alive for the whole session:
+    /// `buffer_from_host_literal` transfers asynchronously, so the
+    /// source of every device-resident weight buffer must outlive it.
+    #[allow(dead_code)]
+    param_literals: Vec<xla::Literal>,
+}
+
+impl LmSession {
+    pub fn new(store: Arc<ArtifactStore>, model: &str) -> Result<LmSession> {
+        let entry = store.manifest.model(model)?.clone();
+        let bundle = store.bundle(&entry.weights)?;
+        let mut param_literals = Vec::with_capacity(entry.param_names.len());
+        let mut param_buffers = Vec::with_capacity(entry.param_names.len());
+        for name in &entry.param_names {
+            let tensor = bundle
+                .get(name)
+                .ok_or_else(|| anyhow!("weights.bin missing tensor '{name}'"))?;
+            let lit = tensor.to_literal()?;
+            param_buffers.push(store.client.upload(&lit)?);
+            param_literals.push(lit);
+        }
+        Ok(LmSession { store, entry, param_buffers, param_literals })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.entry.name
+    }
+
+    pub fn store(&self) -> Arc<ArtifactStore> {
+        self.store.clone()
+    }
+
+    /// Generate `target_lens[i]` tokens for each prompt. Prompts must be
+    /// pre-encoded and pre-truncated to `max_input_len`.
+    pub fn generate(&self, prompts: &[Vec<i32>], target_lens: &[usize]) -> Result<GenOutput> {
+        ensure!(!prompts.is_empty(), "empty batch");
+        ensure!(prompts.len() == target_lens.len(), "prompts/target_lens mismatch");
+        let m = &self.store.manifest;
+        let n = prompts.len();
+        let max_decode_bucket = *self
+            .entry
+            .decode
+            .keys()
+            .max()
+            .ok_or_else(|| anyhow!("no decode buckets"))?;
+        ensure!(
+            n <= max_decode_bucket,
+            "batch {n} exceeds max decode bucket {max_decode_bucket}"
+        );
+        for p in prompts {
+            ensure!(p.len() <= m.max_input_len, "prompt exceeds max_input_len");
+        }
+
+        let decode_bucket = self.store.decode_bucket(&self.entry.name, n)?;
+        let (cache_elems_per_row, row_stride, layer_stride) = self.cache_geometry();
+
+        // --- prefill, chunked to available prefill buckets -------------
+        let t0 = Instant::now();
+        let max_prefill_b = *self
+            .entry
+            .prefill
+            .keys()
+            .map(|(b, _)| b)
+            .max()
+            .ok_or_else(|| anyhow!("no prefill buckets"))?;
+
+        // Assemble the decode-bucket cache host-side from per-chunk
+        // prefill outputs.
+        let n_layers = self.entry.n_layers;
+        let mut cache_k = vec![0f32; n_layers * decode_bucket * row_stride];
+        let mut cache_v = vec![0f32; n_layers * decode_bucket * row_stride];
+        let mut next_tokens = vec![m.pad_id; decode_bucket];
+        let mut positions = vec![0i32; decode_bucket];
+
+        let mut row = 0usize;
+        while row < n {
+            let chunk = (n - row).min(max_prefill_b);
+            let longest = prompts[row..row + chunk]
+                .iter()
+                .map(|p| p.len().max(1))
+                .max()
+                .unwrap();
+            let (bb, sb) = self.store.prefill_bucket(&self.entry.name, chunk, longest)?;
+            let exe = self.store.prefill_hlo(&self.entry.name, (bb, sb))?;
+
+            let mut toks = vec![m.pad_id; bb * sb];
+            let mut lens = vec![1i32; bb];
+            for (i, p) in prompts[row..row + chunk].iter().enumerate() {
+                let take = p.len().min(sb);
+                toks[i * sb..i * sb + take].copy_from_slice(&p[..take]);
+                lens[i] = take.max(1) as i32;
+            }
+            // source literals must outlive the execute: the transfer
+            // behind buffer_from_host_literal is asynchronous
+            let toks_lit = i32_literal(&toks, &[bb as i64, sb as i64])?;
+            let lens_lit = i32_literal(&lens, &[bb as i64])?;
+            let toks_buf = self.store.client.upload(&toks_lit)?;
+            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 2);
+            args.extend(self.param_buffers.iter());
+            args.push(&toks_buf);
+            args.push(&lens_buf);
+            let outs = exe.run_buffers(&args)?;
+            ensure!(outs.len() == 3, "prefill returned {} outputs", outs.len());
+            let logits = outs[0].to_vec::<f32>()?;
+            let ck = outs[1].to_vec::<f32>()?;
+            let cv = outs[2].to_vec::<f32>()?;
+
+            // chunk cache layout: [L, bb, H, S, Dh]
+            let vocab = m.vocab_size;
+            for i in 0..chunk {
+                let dst_row = row + i;
+                next_tokens[dst_row] = argmax(&logits[i * vocab..(i + 1) * vocab]) as i32;
+                positions[dst_row] = lens[i];
+                for l in 0..n_layers {
+                    let src = (l * bb + i) * row_stride;
+                    let dst = l * (decode_bucket * row_stride) + dst_row * row_stride;
+                    cache_k[dst..dst + row_stride].copy_from_slice(&ck[src..src + row_stride]);
+                    cache_v[dst..dst + row_stride].copy_from_slice(&cv[src..src + row_stride]);
+                }
+            }
+            row += chunk;
+        }
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let _ = (cache_elems_per_row, layer_stride);
+
+        // --- decode loop ------------------------------------------------
+        let t1 = Instant::now();
+        let exe = self.store.decode_hlo(&self.entry.name, decode_bucket)?;
+        let cache_dims = [
+            n_layers as i64,
+            decode_bucket as i64,
+            self.entry.n_heads as i64,
+            m.seq_max as i64,
+            self.entry.head_dim() as i64,
+        ];
+        let steps = target_lens.iter().copied().max().unwrap_or(0);
+        let mut outputs: Vec<Vec<i32>> = (0..n).map(|i| Vec::with_capacity(target_lens[i])) .collect();
+        // the prefill's next-token prediction is the first generated token
+        for i in 0..n {
+            if target_lens[i] > 0 {
+                outputs[i].push(next_tokens[i]);
+            }
+        }
+
+        // weights stay device-resident (param_buffers); the KV cache
+        // round-trips host<->device once per step (the tuple output of
+        // the xla crate cannot be re-fed without decomposing to
+        // literals) — see EXPERIMENTS.md §Perf for the measured cost.
+        let mut ck_lit = crate::runtime::client::f32_literal(&cache_k, &cache_dims)?;
+        let mut cv_lit = crate::runtime::client::f32_literal(&cache_v, &cache_dims)?;
+        let vocab = m.vocab_size;
+
+        // --- bulk of the generation: K-token in-graph chunks -------------
+        // (argmax + cache update inside the lowered scan; one cache
+        // round trip per K tokens instead of per token)
+        let mut step = 1usize;
+        // Measured result (EXPERIMENTS.md §Perf): through the HLO-text
+        // interchange the scan's carried KV cache loses buffer donation,
+        // so every in-graph step copies the full cache and the chunk is
+        // ~4x SLOWER than single-step on CPU-PJRT. Kept for TPU targets
+        // (where donation survives jax.export); opt in via env.
+        let chunk_k = if std::env::var("RTLM_USE_CHUNKS").is_ok() {
+            self.entry.chunk_k
+        } else {
+            0
+        };
+        if chunk_k > 1 {
+            if let Some(chunk_exe) =
+                self.store.decode_chunk_hlo(&self.entry.name, decode_bucket)?
+            {
+                while steps.saturating_sub(step) >= chunk_k {
+                    let pos_lit = i32_literal(&positions, &[decode_bucket as i64])?;
+                    let tok_lit = i32_literal(&next_tokens, &[decode_bucket as i64])?;
+                    let ck_buf = self.store.client.upload(&ck_lit)?;
+                    let cv_buf = self.store.client.upload(&cv_lit)?;
+                    let pos_buf = self.store.client.upload(&pos_lit)?;
+                    let tok_buf = self.store.client.upload(&tok_lit)?;
+                    let mut args: Vec<&xla::PjRtBuffer> =
+                        Vec::with_capacity(self.param_buffers.len() + 4);
+                    args.extend(self.param_buffers.iter());
+                    args.push(&ck_buf);
+                    args.push(&cv_buf);
+                    args.push(&pos_buf);
+                    args.push(&tok_buf);
+                    let mut outs = chunk_exe.run_buffers(&args)?;
+                    ensure!(outs.len() == 4, "chunk returned {} outputs", outs.len());
+                    let new_pos = outs.pop().unwrap().to_vec::<i32>()?;
+                    cv_lit = outs.pop().unwrap();
+                    ck_lit = outs.pop().unwrap();
+                    let toks = outs.pop().unwrap().to_vec::<i32>()?; // [B, K]
+                    for i in 0..n {
+                        for j in 0..chunk_k {
+                            if step + j < target_lens[i] {
+                                outputs[i].push(toks[i * chunk_k + j]);
+                            }
+                        }
+                        next_tokens[i] = toks[i * chunk_k + chunk_k - 1];
+                        positions[i] = new_pos[i];
+                    }
+                    for i in n..decode_bucket {
+                        next_tokens[i] = toks[i * chunk_k + chunk_k - 1];
+                        positions[i] = new_pos[i];
+                    }
+                    step += chunk_k;
+                }
+            }
+        }
+
+        // --- remainder: single-token steps --------------------------------
+        for step in step..steps {
+            let pos_lit = i32_literal(&positions, &[decode_bucket as i64])?;
+            let tok_lit = i32_literal(&next_tokens, &[decode_bucket as i64])?;
+            let ck_buf = self.store.client.upload(&ck_lit)?;
+            let cv_buf = self.store.client.upload(&cv_lit)?;
+            let pos_buf = self.store.client.upload(&pos_lit)?;
+            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 4);
+            args.extend(self.param_buffers.iter());
+            args.push(&ck_buf);
+            args.push(&cv_buf);
+            args.push(&pos_buf);
+            args.push(&tok_buf);
+            let mut outs = exe.run_buffers(&args)?;
+            ensure!(outs.len() == 3, "decode returned {} outputs", outs.len());
+            cv_lit = outs.pop().unwrap();
+            ck_lit = outs.pop().unwrap();
+            let logits = outs.pop().unwrap().to_vec::<f32>()?;
+            for i in 0..n {
+                if step < target_lens[i] {
+                    let tok = argmax(&logits[i * vocab..(i + 1) * vocab]) as i32;
+                    outputs[i].push(tok);
+                    next_tokens[i] = tok;
+                    positions[i] = (positions[i] + 1).min(m.seq_max as i32 - 1);
+                }
+            }
+        }
+        let decode_secs = t1.elapsed().as_secs_f64();
+
+        Ok(GenOutput { tokens: outputs, prefill_secs, decode_secs, steps, decode_bucket })
+    }
+
+    /// (elements per cache row per layer, row stride, layer stride).
+    fn cache_geometry(&self) -> (usize, usize, usize) {
+        let m = &self.store.manifest;
+        let row = self.entry.n_heads * m.seq_max * self.entry.head_dim();
+        (row, row, row)
+    }
+
+    /// Time one decode step at the given bucket (calibration helper).
+    pub fn time_decode_step(&self, bucket: usize, reps: usize) -> Result<f64> {
+        let m = &self.store.manifest;
+        let exe = self.store.decode_hlo(&self.entry.name, bucket)?;
+        let cache_dims = [
+            self.entry.n_layers as i64,
+            bucket as i64,
+            self.entry.n_heads as i64,
+            m.seq_max as i64,
+            self.entry.head_dim() as i64,
+        ];
+        let elems: usize = cache_dims.iter().map(|d| *d as usize).product();
+        let mut ck = crate::runtime::client::f32_literal(&vec![0f32; elems], &cache_dims)?;
+        let mut cv = crate::runtime::client::f32_literal(&vec![0f32; elems], &cache_dims)?;
+        let positions = vec![4i32; bucket];
+        let toks = vec![5i32; bucket];
+        // warmup: absorb one-time lazy-compile/allocation costs
+        for _ in 0..2 {
+            let pos_lit = i32_literal(&positions, &[bucket as i64])?;
+            let tok_lit = i32_literal(&toks, &[bucket as i64])?;
+            let ck_buf = self.store.client.upload(&ck)?;
+            let cv_buf = self.store.client.upload(&cv)?;
+            let pos_buf = self.store.client.upload(&pos_lit)?;
+            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 4);
+            args.extend(self.param_buffers.iter());
+            args.push(&ck_buf);
+            args.push(&cv_buf);
+            args.push(&pos_buf);
+            args.push(&tok_buf);
+            let mut outs = exe.run_buffers(&args)?;
+            cv = outs.pop().unwrap();
+            ck = outs.pop().unwrap();
+        }
+        // min-of-reps: robust to scheduler interference on a busy host.
+        // Timed region includes the cache upload — the serving decode
+        // loop pays it every step, so the calibration must too.
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let pos_lit = i32_literal(&positions, &[bucket as i64])?;
+            let tok_lit = i32_literal(&toks, &[bucket as i64])?;
+            let t0 = Instant::now();
+            let ck_buf = self.store.client.upload(&ck)?;
+            let cv_buf = self.store.client.upload(&cv)?;
+            let pos_buf = self.store.client.upload(&pos_lit)?;
+            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 4);
+            args.extend(self.param_buffers.iter());
+            args.push(&ck_buf);
+            args.push(&cv_buf);
+            args.push(&pos_buf);
+            args.push(&tok_buf);
+            let mut outs = exe.run_buffers(&args)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            cv = outs.pop().unwrap();
+            ck = outs.pop().unwrap();
+        }
+        Ok(best)
+    }
+
+    /// Time one prefill at the given bucket (calibration helper).
+    pub fn time_prefill(&self, bucket: (usize, usize), reps: usize) -> Result<f64> {
+        let exe = self.store.prefill_hlo(&self.entry.name, bucket)?;
+        let (b, s) = bucket;
+        let toks = vec![5i32; b * s];
+        let lens = vec![s as i32; b];
+        // warmup: absorb one-time lazy-compile/allocation costs
+        for _ in 0..2 {
+            let toks_lit = i32_literal(&toks, &[b as i64, s as i64])?;
+            let lens_lit = i32_literal(&lens, &[b as i64])?;
+            let toks_buf = self.store.client.upload(&toks_lit)?;
+            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 2);
+            args.extend(self.param_buffers.iter());
+            args.push(&toks_buf);
+            args.push(&lens_buf);
+            let _ = exe.run_buffers(&args)?;
+        }
+        // min-of-reps: robust to scheduler interference on a busy host
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let toks_lit = i32_literal(&toks, &[b as i64, s as i64])?;
+            let lens_lit = i32_literal(&lens, &[b as i64])?;
+            let t0 = Instant::now();
+            let toks_buf = self.store.client.upload(&toks_lit)?;
+            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.param_buffers.len() + 2);
+            args.extend(self.param_buffers.iter());
+            args.push(&toks_buf);
+            args.push(&lens_buf);
+            let outs = exe.run_buffers(&args)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            ensure!(outs.len() == 3, "prefill returned {} outputs", outs.len());
+        }
+        Ok(best)
+    }
+
+    pub fn param_buffers(&self) -> &[xla::PjRtBuffer] {
+        &self.param_buffers
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Encode + truncate a prompt for a session (empty prompts become a
+/// single BOS so shapes stay valid).
+pub fn encode_prompt(store: &ArtifactStore, text: &str) -> Vec<i32> {
+    let m = &store.manifest;
+    let mut ids = store.vocab.encode(text, Some(m.max_input_len));
+    if ids.is_empty() {
+        ids.push(m.bos_id);
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_finds_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0, -5.0]), 0);
+    }
+}

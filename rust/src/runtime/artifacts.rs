@@ -1,0 +1,145 @@
+//! The artifact store: one-stop runtime context owning the manifest,
+//! the PJRT client, lazily-compiled executables, and loaded weight
+//! bundles.
+//!
+//! Executables compile on first use and are cached for the process
+//! lifetime (one compiled executable per (model, entrypoint, bucket),
+//! matching the "compile once per variant" serving design).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::bundle::Bundle;
+use super::client::{Executable, RtClient};
+use crate::config::Manifest;
+use crate::textgen::{Lexicon, Vocab};
+use crate::uncertainty::Regressor;
+
+pub struct ArtifactStore {
+    pub manifest: Manifest,
+    pub client: RtClient,
+    pub lexicon: Arc<Lexicon>,
+    pub vocab: Arc<Vocab>,
+    pub regressor: Arc<Regressor>,
+    executables: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+    bundles: Mutex<HashMap<PathBuf, Arc<Bundle>>>,
+}
+
+impl ArtifactStore {
+    /// Open the artifacts directory (validates the manifest + lexicon +
+    /// regressor eagerly; HLO compiles lazily).
+    pub fn open(root: &Path) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(root)?;
+        let client = RtClient::cpu()?;
+        let lexicon = Arc::new(Lexicon::load(&manifest.lexicon)?);
+        let vocab = Arc::new(Vocab::from_lexicon(&lexicon, manifest.vocab_size)?);
+        let reg_bundle = Bundle::load(&manifest.regressor.weights)?;
+        let regressor = Arc::new(Regressor::from_bundle(&reg_bundle, &manifest.feature_scales)?);
+        Ok(ArtifactStore {
+            manifest,
+            client,
+            lexicon,
+            vocab,
+            regressor,
+            executables: Mutex::new(HashMap::new()),
+            bundles: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Open `$RTLM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactStore> {
+        Self::open(&Manifest::default_root())
+    }
+
+    /// Compile (or fetch the cached) executable for an HLO file.
+    pub fn executable(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: compiles can take hundreds of ms and
+        // other lanes should not stall on an unrelated bucket.
+        let exe = Arc::new(self.client.compile_file(path)?);
+        let mut cache = self.executables.lock().unwrap();
+        Ok(cache.entry(path.to_path_buf()).or_insert(exe).clone())
+    }
+
+    /// Load (or fetch the cached) tensor bundle.
+    pub fn bundle(&self, path: &Path) -> Result<Arc<Bundle>> {
+        if let Some(b) = self.bundles.lock().unwrap().get(path) {
+            return Ok(b.clone());
+        }
+        let bundle = Arc::new(Bundle::load(path)?);
+        let mut cache = self.bundles.lock().unwrap();
+        Ok(cache.entry(path.to_path_buf()).or_insert(bundle).clone())
+    }
+
+    /// Pick the smallest decode batch bucket >= n for a model.
+    pub fn decode_bucket(&self, model: &str, n: usize) -> Result<usize> {
+        let entry = self.manifest.model(model)?;
+        entry
+            .decode
+            .keys()
+            .copied()
+            .find(|b| *b >= n)
+            .or_else(|| entry.decode.keys().copied().max())
+            .ok_or_else(|| anyhow!("model {model} has no decode buckets"))
+    }
+
+    /// Pick the smallest (batch, seq) prefill bucket covering (n, s).
+    pub fn prefill_bucket(&self, model: &str, n: usize, s: usize) -> Result<(usize, usize)> {
+        let entry = self.manifest.model(model)?;
+        let mut best: Option<(usize, usize)> = None;
+        for &(b, bs) in entry.prefill.keys() {
+            if b >= n && bs >= s {
+                let cand = (b, bs);
+                best = Some(match best {
+                    None => cand,
+                    Some(prev) => {
+                        if (b * bs) < (prev.0 * prev.1) {
+                            cand
+                        } else {
+                            prev
+                        }
+                    }
+                });
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow!("no prefill bucket for model {model} covering batch={n} seq={s}")
+        })
+    }
+
+    pub fn decode_hlo(&self, model: &str, bucket: usize) -> Result<Arc<Executable>> {
+        let entry = self.manifest.model(model)?;
+        let path = entry
+            .decode
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("model {model}: no decode bucket {bucket}"))?;
+        self.executable(path).context("compiling decode HLO")
+    }
+
+    /// Multi-token chunk executable (None when artifacts lack chunks).
+    pub fn decode_chunk_hlo(
+        &self,
+        model: &str,
+        bucket: usize,
+    ) -> Result<Option<Arc<Executable>>> {
+        let entry = self.manifest.model(model)?;
+        match entry.decode_chunk.get(&bucket) {
+            None => Ok(None),
+            Some(path) => Ok(Some(self.executable(path).context("compiling chunk HLO")?)),
+        }
+    }
+
+    pub fn prefill_hlo(&self, model: &str, bucket: (usize, usize)) -> Result<Arc<Executable>> {
+        let entry = self.manifest.model(model)?;
+        let path = entry
+            .prefill
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("model {model}: no prefill bucket {bucket:?}"))?;
+        self.executable(path).context("compiling prefill HLO")
+    }
+}

@@ -1,0 +1,219 @@
+//! Tensor-bundle reader (mirror of `python/compile/bundle.py`).
+//!
+//! Layout (little-endian): magic "RTLMTB01", u32 count, then per tensor
+//! u16 name_len, name, u8 dtype (0=f32, 1=i32), u8 ndim, ndim*u32 dims,
+//! raw data.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+const MAGIC: &[u8; 8] = b"RTLMTB01";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { name: name.to_string(), dtype: Dtype::F32, dims, data: Data::F32(data) }
+    }
+
+    pub fn i32(name: &str, dims: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { name: name.to_string(), dtype: Dtype::I32, dims, data: Data::I32(data) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor '{}' is not f32", self.name)),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor '{}' is not i32", self.name)),
+        }
+    }
+
+    /// Convert to an xla literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|d| *d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v.as_slice()),
+            Data::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Bundle {
+    pub fn from_tensors(tensors: Vec<Tensor>) -> Bundle {
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        Bundle { tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading bundle {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing bundle {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Bundle> {
+        let mut r = Reader { bytes, pos: 0 };
+        ensure!(r.take(8)? == MAGIC, "bad bundle magic");
+        let count = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .map_err(|_| anyhow!("non-utf8 tensor name"))?;
+            let dtype = match r.u8()? {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                other => bail!("unknown dtype {other}"),
+            };
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = r.take(4 * n)?;
+            let data = match dtype {
+                Dtype::F32 => Data::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                Dtype::I32 => Data::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+            };
+            tensors.push(Tensor { name, dtype, dims, data });
+        }
+        ensure!(r.pos == bytes.len(), "trailing bytes in bundle");
+        Ok(Bundle::from_tensors(tensors))
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.bytes.len(), "truncated bundle");
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, u8, Vec<u32>, Vec<u8>)]) -> Vec<u8> {
+        let mut out = MAGIC.to_vec();
+        out.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dtype, dims, data) in tensors {
+            out.extend((name.len() as u16).to_le_bytes());
+            out.extend(name.as_bytes());
+            out.push(*dtype);
+            out.push(dims.len() as u8);
+            for d in dims {
+                out.extend(d.to_le_bytes());
+            }
+            out.extend(data);
+        }
+        out
+    }
+
+    #[test]
+    fn parses_f32_and_i32() {
+        let f = [1.5f32, -2.0];
+        let i = [7i32];
+        let bytes = encode(&[
+            ("a", 0, vec![2], f.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            ("b", 1, vec![1], i.iter().flat_map(|x| x.to_le_bytes()).collect()),
+        ]);
+        let bundle = Bundle::parse(&bytes).unwrap();
+        assert_eq!(bundle.get("a").unwrap().as_f32().unwrap(), &[1.5, -2.0]);
+        assert_eq!(bundle.get("b").unwrap().as_i32().unwrap(), &[7]);
+        assert!(bundle.get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Bundle::parse(b"WRONG!!!").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bytes = encode(&[("a", 0, vec![4], vec![0u8; 4])]); // claims 4 elems, has 1
+        assert!(Bundle::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        let mut bytes = encode(&[]);
+        bytes.push(0);
+        assert!(Bundle::parse(&bytes).is_err());
+    }
+}

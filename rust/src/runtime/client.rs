@@ -1,0 +1,129 @@
+//! PJRT client wrapper: compile HLO text, execute with literals or
+//! device-resident buffers.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serialises protos with 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Output convention: the AOT path lowers with `return_tuple=True`, so
+//! every executable returns a single tuple buffer; [`Executable::run`]
+//! decomposes it into per-output literals.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct RtClient {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl RtClient {
+    pub fn cpu() -> Result<RtClient> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RtClient { client: Arc::new(client) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Upload a literal to device 0 (weights live on-device across calls).
+    pub fn upload(&self, literal: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let device = self
+            .client
+            .devices()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no PJRT devices"))?;
+        Ok(self.client.buffer_from_host_literal(Some(&device), literal)?)
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    /// Accepts owned or borrowed literals (pass `&Literal`s to avoid the
+    /// deep copy `Literal::clone` performs).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let outputs = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.collect(outputs)
+    }
+
+    /// Execute with device-resident buffers (no host copies for inputs).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outputs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.collect(outputs)
+    }
+
+    /// Execute with device buffers, returning the raw output buffers
+    /// (still tupled) — used when the caller chains executions.
+    pub fn run_buffers_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut outputs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        if outputs.is_empty() {
+            return Err(anyhow!("{}: no output replicas", self.name));
+        }
+        Ok(outputs.swap_remove(0))
+    }
+
+    fn collect(&self, mut outputs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        if outputs.is_empty() {
+            return Err(anyhow!("{}: no output replicas", self.name));
+        }
+        let replica = outputs.swap_remove(0);
+        let mut literals = Vec::new();
+        for buffer in &replica {
+            let lit = buffer.to_literal_sync()?;
+            // return_tuple=True wraps outputs in one tuple; decompose it.
+            if lit.shape()?.is_tuple() {
+                literals.extend(lit.to_tuple()?);
+            } else {
+                literals.push(lit);
+            }
+        }
+        Ok(literals)
+    }
+}
+
+/// Build an i32 vector literal with the given shape.
+pub fn i32_literal(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}
+
+/// Build an f32 vector literal with the given shape.
+pub fn f32_literal(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(values).reshape(dims)?)
+}

@@ -1,0 +1,13 @@
+//! Runtime bridge: load AOT artifacts (HLO text + tensor bundles) and
+//! execute them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs here — everything below consumes files produced
+//! once by `make artifacts`.
+
+pub mod artifacts;
+pub mod bundle;
+pub mod client;
+
+pub use artifacts::ArtifactStore;
+pub use bundle::{Bundle, Dtype, Tensor};
+pub use client::{Executable, RtClient};

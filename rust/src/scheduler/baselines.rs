@@ -1,0 +1,229 @@
+//! Uncertainty-oblivious / single-signal baselines (Sec. V-B):
+//! FIFO, HPF (highest priority-point first), LUF (least uncertainty
+//! first), MUF (maximum uncertainty first). All use fixed-size batching.
+
+use std::collections::VecDeque;
+
+use super::policy::{Batch, Lane, Policy};
+use super::task::Task;
+
+/// First-In-First-Out with fixed-size batches.
+pub struct Fifo {
+    queue: VecDeque<Task>,
+    batch_size: usize,
+}
+
+impl Fifo {
+    pub fn new(batch_size: usize) -> Fifo {
+        Fifo { queue: VecDeque::new(), batch_size: batch_size.max(1) }
+    }
+}
+
+impl Policy for Fifo {
+    fn name(&self) -> String {
+        "FIFO".into()
+    }
+
+    fn push(&mut self, task: Task) {
+        self.queue.push_back(task);
+    }
+
+    fn pop_batch(&mut self, lane: Lane, _now: f64, force: bool) -> Option<Batch> {
+        if lane == Lane::Cpu {
+            return None; // baselines are uncertainty-oblivious: GPU only
+        }
+        if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
+            return None;
+        }
+        let n = self.queue.len().min(self.batch_size);
+        let tasks = self.queue.drain(..n).collect();
+        Some(Batch { lane: Lane::Gpu, tasks })
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Sorted-queue policy: keeps tasks ordered by a key, dispatches the
+/// first `batch_size` (tasks with similar keys batch together).
+struct Sorted<K: Fn(&Task) -> f64 + Send> {
+    name: &'static str,
+    queue: Vec<Task>,
+    key: K,
+    batch_size: usize,
+}
+
+impl<K: Fn(&Task) -> f64 + Send> Sorted<K> {
+    fn new(name: &'static str, key: K, batch_size: usize) -> Self {
+        Sorted { name, queue: Vec::new(), key, batch_size: batch_size.max(1) }
+    }
+}
+
+impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
+    fn name(&self) -> String {
+        self.name.into()
+    }
+
+    fn push(&mut self, task: Task) {
+        // binary insert keeps the queue ordered; ties break by arrival.
+        let k = (self.key)(&task);
+        let pos = self
+            .queue
+            .partition_point(|t| ((self.key)(t), t.arrival) <= (k, task.arrival));
+        self.queue.insert(pos, task);
+    }
+
+    fn pop_batch(&mut self, lane: Lane, _now: f64, force: bool) -> Option<Batch> {
+        if lane == Lane::Cpu {
+            return None;
+        }
+        if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
+            return None;
+        }
+        let n = self.queue.len().min(self.batch_size);
+        let tasks = self.queue.drain(..n).collect();
+        Some(Batch { lane: Lane::Gpu, tasks })
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Highest Priority-Point First: earliest d_J dispatches first.
+pub struct Hpf(Sorted<fn(&Task) -> f64>);
+
+impl Hpf {
+    pub fn new(batch_size: usize) -> Hpf {
+        Hpf(Sorted::new("HPF", |t: &Task| t.priority_point, batch_size))
+    }
+}
+
+impl Policy for Hpf {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn push(&mut self, task: Task) {
+        self.0.push(task)
+    }
+    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+        self.0.pop_batch(lane, now, force)
+    }
+    fn queue_len(&self) -> usize {
+        self.0.queue_len()
+    }
+}
+
+/// Least Uncertainty First.
+pub struct Luf(Sorted<fn(&Task) -> f64>);
+
+impl Luf {
+    pub fn new(batch_size: usize) -> Luf {
+        Luf(Sorted::new("LUF", |t: &Task| t.uncertainty, batch_size))
+    }
+}
+
+impl Policy for Luf {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn push(&mut self, task: Task) {
+        self.0.push(task)
+    }
+    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+        self.0.pop_batch(lane, now, force)
+    }
+    fn queue_len(&self) -> usize {
+        self.0.queue_len()
+    }
+}
+
+/// Maximum Uncertainty First.
+pub struct Muf(Sorted<fn(&Task) -> f64>);
+
+impl Muf {
+    pub fn new(batch_size: usize) -> Muf {
+        Muf(Sorted::new("MUF", |t: &Task| -t.uncertainty, batch_size))
+    }
+}
+
+impl Policy for Muf {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn push(&mut self, task: Task) {
+        self.0.push(task)
+    }
+    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+        self.0.pop_batch(lane, now, force)
+    }
+    fn queue_len(&self) -> usize {
+        self.0.queue_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let mut f = Fifo::new(2);
+        f.push(test_task(1, 0.0, 10.0, 5.0));
+        f.push(test_task(2, 1.0, 5.0, 50.0));
+        f.push(test_task(3, 2.0, 1.0, 20.0));
+        let b = f.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(f.queue_len(), 1);
+    }
+
+    #[test]
+    fn fifo_waits_for_full_batch_unless_forced() {
+        let mut f = Fifo::new(4);
+        f.push(test_task(1, 0.0, 1.0, 1.0));
+        assert!(f.pop_batch(Lane::Gpu, 0.0, false).is_none());
+        let b = f.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert_eq!(b.tasks.len(), 1);
+    }
+
+    #[test]
+    fn hpf_orders_by_priority_point() {
+        let mut h = Hpf::new(2);
+        h.push(test_task(1, 0.0, 9.0, 5.0));
+        h.push(test_task(2, 0.0, 3.0, 5.0));
+        h.push(test_task(3, 0.0, 6.0, 5.0));
+        let b = h.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn luf_orders_ascending_uncertainty() {
+        let mut l = Luf::new(3);
+        l.push(test_task(1, 0.0, 1.0, 40.0));
+        l.push(test_task(2, 0.0, 1.0, 10.0));
+        l.push(test_task(3, 0.0, 1.0, 25.0));
+        let b = l.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn muf_orders_descending_uncertainty() {
+        let mut m = Muf::new(3);
+        m.push(test_task(1, 0.0, 1.0, 40.0));
+        m.push(test_task(2, 0.0, 1.0, 10.0));
+        m.push(test_task(3, 0.0, 1.0, 25.0));
+        let b = m.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn sorted_ties_break_by_arrival() {
+        let mut l = Luf::new(4);
+        l.push(test_task(2, 1.0, 1.0, 10.0));
+        l.push(test_task(1, 0.0, 1.0, 10.0));
+        let b = l.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Dynamic consolidation (Sec. IV-C): batch tasks with *similar*
+//! uncertainty so no single long task holds the whole batch hostage.
+//!
+//! Pure segmentation logic, shared by [`super::uasched::UaSched`] and the
+//! Fig. 5 illustration harness.
+
+use super::task::Task;
+
+/// Given tasks sorted by ascending uncertainty, return how many to
+//  execute as one batch: walk the list and stop at the first task whose
+/// uncertainty exceeds `lambda` times the previous one's, or when the
+/// batch size `c` is reached (Algorithm 1, lines 20-25).
+pub fn split_point(sorted: &[Task], lambda: f64, c: usize) -> usize {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let c = c.max(1);
+    let mut count = 1;
+    let mut u_prev = sorted[0].uncertainty;
+    while count < sorted.len() && count < c {
+        let u = sorted[count].uncertainty;
+        if u > lambda * u_prev.max(1e-9) {
+            break;
+        }
+        u_prev = u;
+        count += 1;
+    }
+    count
+}
+
+/// Sort tasks by ascending uncertainty (stable; ties keep queue order).
+pub fn sort_by_uncertainty(tasks: &mut [Task]) {
+    tasks.sort_by(|a, b| a.uncertainty.partial_cmp(&b.uncertainty).unwrap());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+    use crate::util::prop;
+
+    fn tasks_with_u(us: &[f64]) -> Vec<Task> {
+        us.iter()
+            .enumerate()
+            .map(|(i, &u)| test_task(i as u64, 0.0, 10.0, u))
+            .collect()
+    }
+
+    #[test]
+    fn splits_at_ratio_violation() {
+        let t = tasks_with_u(&[10.0, 12.0, 14.0, 40.0, 45.0]);
+        // 40 > 1.5 * 14 -> split after 3
+        assert_eq!(split_point(&t, 1.5, 8), 3);
+    }
+
+    #[test]
+    fn respects_batch_size_cap() {
+        let t = tasks_with_u(&[10.0, 10.0, 10.0, 10.0, 10.0]);
+        assert_eq!(split_point(&t, 1.5, 3), 3);
+    }
+
+    #[test]
+    fn single_task_batches_alone() {
+        let t = tasks_with_u(&[99.0]);
+        assert_eq!(split_point(&t, 1.5, 4), 1);
+    }
+
+    #[test]
+    fn first_task_always_included_even_if_huge() {
+        let t = tasks_with_u(&[1000.0, 1001.0]);
+        assert_eq!(split_point(&t, 1.5, 4), 2); // 1001 <= 1.5*1000
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(split_point(&[], 1.5, 4), 0);
+    }
+
+    #[test]
+    fn prop_split_in_bounds_and_ratio_holds() {
+        prop::check_result(
+            "split-point-invariants",
+            300,
+            |rng| {
+                let n = rng.range_usize(1, 20);
+                let us: Vec<f64> = (0..n).map(|_| rng.f64() * 90.0 + 4.0).collect();
+                let lambda = 1.0 + rng.f64() * 2.0;
+                let c = rng.range_usize(1, 12);
+                (us, lambda, c)
+            },
+            |(us, lambda, c)| {
+                let mut tasks = tasks_with_u(us);
+                sort_by_uncertainty(&mut tasks);
+                let split = split_point(&tasks, *lambda, *c);
+                if split == 0 || split > tasks.len() || split > *c {
+                    return Err(format!("split {split} out of bounds"));
+                }
+                // every adjacent pair inside the batch respects lambda
+                for w in tasks[..split].windows(2) {
+                    if w[1].uncertainty > lambda * w[0].uncertainty.max(1e-9) + 1e-12 {
+                        return Err(format!(
+                            "ratio violated inside batch: {} > {lambda} * {}",
+                            w[1].uncertainty, w[0].uncertainty
+                        ));
+                    }
+                }
+                // maximality: if we stopped early (not at c, not at end),
+                // the next task must violate the ratio
+                if split < *c && split < tasks.len() {
+                    let u_prev = tasks[split - 1].uncertainty;
+                    if tasks[split].uncertainty <= lambda * u_prev.max(1e-9) {
+                        return Err("stopped early without a violation".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's system contribution (Sec. IV): uncertainty-aware
+//! prioritization (UP, Eq. 3), dynamic consolidation, strategic CPU
+//! offloading, and the uncertainty-oblivious baselines (FIFO, HPF, LUF,
+//! MUF) it is evaluated against.
+//!
+//! All policies implement [`Policy`]; the serving loop / simulator is
+//! policy-agnostic. Scheduling itself is pure logic with no runtime
+//! dependencies, so this module is fully unit- and property-tested.
+
+pub mod baselines;
+pub mod consolidation;
+pub mod policy;
+pub mod task;
+pub mod uasched;
+pub mod up;
+
+pub use baselines::{Fifo, Hpf, Luf, Muf};
+pub use policy::{Batch, Lane, Policy, PolicyKind};
+pub use task::Task;
+pub use uasched::UaSched;
+pub use up::up_priority;

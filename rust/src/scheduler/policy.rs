@@ -1,0 +1,123 @@
+//! The scheduling-policy interface shared by the real-time server and
+//! the discrete-event simulator.
+
+use super::task::Task;
+use crate::config::SchedParams;
+
+/// Which execution lane a batch is dispatched to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// The accelerator lane (paper: GPU).
+    Gpu,
+    /// The quarantine lane (paper: CPU cores) used by strategic offloading.
+    Cpu,
+}
+
+/// A dispatched batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub lane: Lane,
+    pub tasks: Vec<Task>,
+}
+
+impl Batch {
+    pub fn max_true_len(&self) -> usize {
+        self.tasks.iter().map(|t| t.true_len).max().unwrap_or(0)
+    }
+
+    pub fn max_input_len(&self) -> usize {
+        self.tasks.iter().map(|t| t.input_len.max(1)).max().unwrap_or(1)
+    }
+}
+
+/// A scheduling policy: accepts arrivals, emits batches per lane.
+///
+/// `pop_batch(lane, force)` may return `None` to wait for more arrivals
+/// (e.g. the queue holds fewer than a full batch); with `force = true`
+/// the policy must dispatch whatever it has for that lane (the engine
+/// sets this when the lane is idle and the wait interval xi has
+/// elapsed). Baselines never use the CPU lane.
+pub trait Policy: Send {
+    fn name(&self) -> String;
+    fn push(&mut self, task: Task);
+    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch>;
+    fn queue_len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.queue_len() == 0
+    }
+}
+
+/// Enumeration of every policy evaluated in the paper, for CLI/bench use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Hpf,
+    Luf,
+    Muf,
+    /// Slack-based priority (Eq. 2) with static batching — the paper's
+    /// "straightforward" variant discussed in Sec. IV-B.
+    Slack,
+    /// UP only (static batching) — ablation arm.
+    Up,
+    /// UP + dynamic consolidation — ablation arm.
+    UpC,
+    /// Full RT-LM: UP + consolidation + strategic offloading.
+    RtLm,
+}
+
+impl PolicyKind {
+    pub const ALL_BASELINES: [PolicyKind; 5] =
+        [PolicyKind::Fifo, PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Muf, PolicyKind::RtLm];
+
+    pub const ABLATION: [PolicyKind; 4] =
+        [PolicyKind::Fifo, PolicyKind::Up, PolicyKind::UpC, PolicyKind::RtLm];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "FIFO",
+            PolicyKind::Hpf => "HPF",
+            PolicyKind::Luf => "LUF",
+            PolicyKind::Muf => "MUF",
+            PolicyKind::Slack => "Slack",
+            PolicyKind::Up => "UP",
+            PolicyKind::UpC => "UP+C",
+            PolicyKind::RtLm => "RT-LM",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fifo" => PolicyKind::Fifo,
+            "hpf" => PolicyKind::Hpf,
+            "luf" => PolicyKind::Luf,
+            "muf" => PolicyKind::Muf,
+            "slack" => PolicyKind::Slack,
+            "up" => PolicyKind::Up,
+            "up+c" | "upc" => PolicyKind::UpC,
+            "rtlm" | "rt-lm" => PolicyKind::RtLm,
+            other => anyhow::bail!("unknown policy '{other}'"),
+        })
+    }
+
+    /// Instantiate the policy. `eta` is the serving model's
+    /// output-length-to-seconds coefficient; `tau` the offload threshold
+    /// (only RT-LM uses it).
+    pub fn build(&self, params: &SchedParams, eta: f64, tau: f64) -> Box<dyn Policy> {
+        use super::baselines::*;
+        use super::uasched::UaSched;
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo::new(params.batch_size)),
+            PolicyKind::Hpf => Box::new(Hpf::new(params.batch_size)),
+            PolicyKind::Luf => Box::new(Luf::new(params.batch_size)),
+            PolicyKind::Muf => Box::new(Muf::new(params.batch_size)),
+            PolicyKind::Slack => {
+                // alpha = 0 turns Eq. 3 into Eq. 2 exactly
+                let p = SchedParams { alpha: 0.0, ..params.clone() };
+                Box::new(UaSched::new(p, eta, f64::INFINITY, false))
+            }
+            PolicyKind::Up => Box::new(UaSched::new(params.clone(), eta, f64::INFINITY, false)),
+            PolicyKind::UpC => Box::new(UaSched::new(params.clone(), eta, f64::INFINITY, true)),
+            PolicyKind::RtLm => Box::new(UaSched::new(params.clone(), eta, tau, true)),
+        }
+    }
+}

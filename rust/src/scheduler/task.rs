@@ -1,0 +1,72 @@
+//! The unit of work: one LM request with its uncertainty metadata.
+
+/// A scheduled LM request (paper's task J).
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    /// Raw input text (kept for diagnostics; execution uses `prompt`).
+    pub text: String,
+    /// Encoded prompt (empty in pure-simulation runs).
+    pub prompt: Vec<i32>,
+    /// Arrival time r_J (seconds on the engine clock).
+    pub arrival: f64,
+    /// Priority point d_J (absolute seconds): user deadline when given,
+    /// else r_J + phi_f * |J| (Sec. IV-B).
+    pub priority_point: f64,
+    /// Uncertainty score u_J: predicted output length in tokens (Eq. 1).
+    pub uncertainty: f64,
+    /// Ground-truth output length for the serving model (length oracle).
+    pub true_len: usize,
+    /// Input length in tokens.
+    pub input_len: usize,
+    /// Primary uncertainty type (diagnostics / figures).
+    pub utype: String,
+    /// Whether this task was adversarially crafted (Sec. V-G).
+    pub malicious: bool,
+    /// How many times consolidation has re-queued this task (bounded-
+    /// deferral anti-starvation, see uasched.rs).
+    pub deferrals: u32,
+}
+
+impl Task {
+    /// Estimated slack zeta_J = d_J - r_J - eta_f * u_J (Eq. 2 denominator)
+    /// evaluated at arrival.
+    pub fn slack(&self, eta: f64) -> f64 {
+        self.slack_at(eta, self.arrival)
+    }
+
+    /// Slack at scheduling time `now`: the remaining time until the
+    /// priority point minus the estimated execution time.
+    pub fn slack_at(&self, eta: f64, now: f64) -> f64 {
+        self.priority_point - now - eta * self.uncertainty
+    }
+}
+
+#[cfg(test)]
+pub fn test_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
+    Task {
+        id,
+        text: String::new(),
+        prompt: vec![],
+        arrival,
+        priority_point,
+        uncertainty,
+        true_len: uncertainty.max(1.0) as usize,
+        input_len: 8,
+        utype: "plain".into(),
+        malicious: false,
+        deferrals: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slack_formula() {
+        let t = test_task(1, 10.0, 13.0, 20.0);
+        // d - r - eta*u = 13 - 10 - 0.05*20 = 2.0
+        assert!((t.slack(0.05) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,352 @@
+//! UASCHED (Algorithm 1) — the full RT-LM scheduler: UP priority queue
+//! + dynamic consolidation + strategic CPU offloading. The `UP` and
+//! `UP+C` ablation arms are the same machine with offloading and/or
+//! consolidation disabled.
+//!
+//! Priorities are *dynamic* (Eq. 2/3's slack is the remaining time until
+//! the priority point at scheduling time), so waiting tasks age upward
+//! and cannot be starved by a stream of lower-uncertainty arrivals.
+
+use crate::config::SchedParams;
+
+use super::consolidation::{sort_by_uncertainty, split_point};
+use super::policy::{Batch, Lane, Policy};
+use super::task::Task;
+use super::up::up_priority;
+
+pub struct UaSched {
+    params: SchedParams,
+    /// Output-tokens -> seconds coefficient of the serving model.
+    eta: f64,
+    /// Malicious threshold tau (Eq. 4); +inf disables offloading.
+    tau: f64,
+    /// Dynamic consolidation on/off (off = UP with static batching).
+    consolidate: bool,
+    /// Waiting tasks; priorities are recomputed at pop time.
+    queue: Vec<Task>,
+    /// Tasks quarantined for the CPU lane (u > tau), FIFO.
+    cpu_queue: Vec<Task>,
+}
+
+impl UaSched {
+    pub fn new(params: SchedParams, eta: f64, tau: f64, consolidate: bool) -> UaSched {
+        UaSched { params, eta, tau, consolidate, queue: Vec::new(), cpu_queue: Vec::new() }
+    }
+
+    /// Sort the queue by descending UP priority at time `now`
+    /// (ties broken by arrival order).
+    fn sort_queue(&mut self, now: f64) {
+        let params = &self.params;
+        let eta = self.eta;
+        self.queue.sort_by(|a, b| {
+            let pa = up_priority(a, params, eta, now);
+            let pb = up_priority(b, params, eta, now);
+            pb.partial_cmp(&pa)
+                .unwrap()
+                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+        });
+    }
+
+    fn pop_gpu(&mut self, now: f64, force: bool) -> Option<Batch> {
+        let c = self.params.batch_size.max(1);
+        if self.queue.is_empty() {
+            return None;
+        }
+        if !self.consolidate {
+            // UP with static batching: first C by priority.
+            if !force && self.queue.len() < c {
+                return None;
+            }
+            self.sort_queue(now);
+            let n = self.queue.len().min(c);
+            let tasks: Vec<Task> = self.queue.drain(..n).collect();
+            return Some(Batch { lane: Lane::Gpu, tasks });
+        }
+
+        // Dynamic consolidation: reorder a window of up to b*C tasks by
+        // uncertainty and segment by lambda. A full batch C suffices to
+        // dispatch — Algorithm 1 "ensures there is always a batch of
+        // tasks ready for execution"; b only widens the reorder window
+        // when the queue runs deeper.
+        let accumulate = self.params.accumulate_len();
+        if !force && self.queue.len() < c {
+            return None;
+        }
+        self.sort_queue(now);
+        let take = self.queue.len().min(accumulate);
+        let mut tmp: Vec<Task> = self.queue.drain(..take).collect();
+        sort_by_uncertainty(&mut tmp);
+
+        // Bounded deferral (anti-starvation, see module docs): if the
+        // lambda-split has already re-queued some task MAX_DEFERRALS
+        // times, this round serves the u-sorted window *ending at* the
+        // most-starved task, so it is guaranteed to dispatch.
+        const MAX_DEFERRALS: u32 = 3;
+        let starved_idx = tmp
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.deferrals >= MAX_DEFERRALS)
+            .max_by_key(|(_, t)| t.deferrals)
+            .map(|(i, _)| i);
+        let (batch, rest): (Vec<Task>, Vec<Task>) = if let Some(i) = starved_idx {
+            let start = (i + 1).saturating_sub(c);
+            let mut batch: Vec<Task> = tmp.drain(start..=i).collect();
+            debug_assert!(batch.iter().any(|t| t.deferrals >= MAX_DEFERRALS));
+            batch.shrink_to_fit();
+            (batch, tmp)
+        } else {
+            let split = split_point(&tmp, self.params.lambda, c);
+            let rest = tmp.split_off(split);
+            (tmp, rest)
+        };
+        for mut task in rest {
+            task.deferrals += 1;
+            self.queue.push(task); // re-queued; re-prioritised next pop
+        }
+        Some(Batch { lane: Lane::Gpu, tasks: batch })
+    }
+
+    fn pop_cpu(&mut self, force: bool) -> Option<Batch> {
+        let c = self.params.batch_size.max(1);
+        if self.cpu_queue.is_empty() || (!force && self.cpu_queue.len() < c) {
+            return None;
+        }
+        let n = self.cpu_queue.len().min(c);
+        let tasks = self.cpu_queue.drain(..n).collect();
+        Some(Batch { lane: Lane::Cpu, tasks })
+    }
+
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+}
+
+impl Policy for UaSched {
+    fn name(&self) -> String {
+        match (self.consolidate, self.tau.is_finite()) {
+            (false, _) => "UP".into(),
+            (true, false) => "UP+C".into(),
+            (true, true) => "RT-LM".into(),
+        }
+    }
+
+    fn push(&mut self, task: Task) {
+        if task.uncertainty > self.tau {
+            self.cpu_queue.push(task); // strategic offloading (Eq. 4)
+        } else {
+            self.queue.push(task);
+        }
+    }
+
+    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+        match lane {
+            Lane::Gpu => self.pop_gpu(now, force),
+            Lane::Cpu => self.pop_cpu(force),
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len() + self.cpu_queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn params(c: usize) -> SchedParams {
+        SchedParams { batch_size: c, ..Default::default() }
+    }
+
+    fn rand_task(rng: &mut Pcg64, id: u64) -> Task {
+        let arrival = rng.f64() * 10.0;
+        let u = 4.0 + rng.f64() * 92.0;
+        let d = arrival + 0.5 + rng.f64() * 5.0;
+        test_task(id, arrival, d, u)
+    }
+
+    #[test]
+    fn up_static_batching_orders_by_priority() {
+        let mut s = UaSched::new(params(2), 0.05, f64::INFINITY, false);
+        // same uncertainty, different deadlines -> earliest deadline first
+        s.push(test_task(1, 0.0, 9.0, 10.0));
+        s.push(test_task(2, 0.0, 1.0, 10.0));
+        s.push(test_task(3, 0.0, 4.0, 10.0));
+        let b = s.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn offload_quarantines_above_tau() {
+        let mut s = UaSched::new(params(2), 0.05, 50.0, true);
+        s.push(test_task(1, 0.0, 5.0, 80.0)); // malicious
+        s.push(test_task(2, 0.0, 5.0, 10.0));
+        s.push(test_task(3, 0.0, 5.0, 60.0)); // malicious
+        assert_eq!(s.queue_len(), 3);
+        let cpu = s.pop_batch(Lane::Cpu, 0.0, false).unwrap();
+        assert_eq!(cpu.lane, Lane::Cpu);
+        let mut ids: Vec<u64> = cpu.tasks.iter().map(|t| t.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 3]);
+        let gpu = s.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert_eq!(gpu.tasks[0].id, 2);
+    }
+
+    #[test]
+    fn consolidation_returns_leftovers_to_queue() {
+        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        // 8 tasks: 4 similar-u, 4 much larger u (accumulate = 7 with b=1.8)
+        for i in 0..4 {
+            s.push(test_task(i, 0.0, 5.0, 10.0 + i as f64));
+        }
+        for i in 4..8 {
+            s.push(test_task(i, 0.0, 5.0, 80.0 + i as f64));
+        }
+        let b = s.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        // the low-uncertainty group forms the batch
+        assert!(b.tasks.iter().all(|t| t.uncertainty < 20.0), "{:?}", b.tasks);
+        assert_eq!(b.tasks.len(), 4);
+        assert_eq!(s.queue_len(), 4);
+    }
+
+    #[test]
+    fn waits_for_full_batch_unless_forced() {
+        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        for i in 0..3 {
+            s.push(test_task(i, 0.0, 5.0, 10.0));
+        }
+        // fewer than C=4 queued -> wait for more arrivals unless forced
+        assert!(s.pop_batch(Lane::Gpu, 0.0, false).is_none());
+        assert!(s.pop_batch(Lane::Gpu, 0.0, true).is_some());
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_waiting_for_accumulation() {
+        // Algorithm 1 keeps a batch ready: C tasks suffice even though
+        // the reorder window b*C is larger.
+        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        for i in 0..4 {
+            s.push(test_task(i, 0.0, 5.0, 10.0));
+        }
+        let b = s.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        assert_eq!(b.tasks.len(), 4);
+    }
+
+    #[test]
+    fn aged_task_eventually_dispatches_first() {
+        // A high-uncertainty task left waiting long enough must outrank
+        // fresh low-uncertainty arrivals (no starvation).
+        let mut s = UaSched::new(params(1), 0.05, f64::INFINITY, false);
+        s.push(test_task(1, 0.0, 2.0, 90.0)); // old, uncertain
+        s.push(test_task(2, 50.0, 60.0, 5.0)); // fresh, certain, far deadline
+        let b = s.pop_batch(Lane::Gpu, 50.0, true).unwrap();
+        assert_eq!(b.tasks[0].id, 1, "aged task must win");
+    }
+
+    #[test]
+    fn prop_conservation_no_loss_no_dup() {
+        prop::check_result(
+            "uasched-conservation",
+            200,
+            |rng| {
+                let n = rng.range_usize(1, 40);
+                let c = rng.range_usize(1, 8);
+                let tau = if rng.f64() < 0.5 { 60.0 } else { f64::INFINITY };
+                let tasks: Vec<Task> =
+                    (0..n).map(|i| rand_task(rng, i as u64)).collect();
+                (tasks, c, tau)
+            },
+            |(tasks, c, tau)| {
+                let mut s = UaSched::new(params(*c), 0.05, *tau, true);
+                for t in tasks.clone() {
+                    s.push(t);
+                }
+                let mut seen = std::collections::HashSet::new();
+                let mut guard = 0;
+                let mut now = 0.0;
+                while s.queue_len() > 0 {
+                    guard += 1;
+                    now += 1.0;
+                    if guard > 1000 {
+                        return Err("scheduler did not drain".into());
+                    }
+                    for lane in [Lane::Gpu, Lane::Cpu] {
+                        if let Some(b) = s.pop_batch(lane, now, true) {
+                            if b.tasks.is_empty() {
+                                return Err("empty batch emitted".into());
+                            }
+                            if b.tasks.len() > *c {
+                                return Err(format!("batch over size: {}", b.tasks.len()));
+                            }
+                            for t in &b.tasks {
+                                if !seen.insert(t.id) {
+                                    return Err(format!("task {} dispatched twice", t.id));
+                                }
+                                match b.lane {
+                                    Lane::Cpu if t.uncertainty <= *tau => {
+                                        return Err("non-malicious task on CPU lane".into())
+                                    }
+                                    Lane::Gpu if t.uncertainty > *tau => {
+                                        return Err("malicious task on GPU lane".into())
+                                    }
+                                    _ => {}
+                                }
+                            }
+                        }
+                    }
+                }
+                if seen.len() != tasks.len() {
+                    return Err(format!("lost tasks: {} of {}", seen.len(), tasks.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_consolidated_batches_respect_lambda() {
+        prop::check_result(
+            "uasched-lambda",
+            200,
+            |rng| {
+                let n = rng.range_usize(2, 40);
+                (0..n).map(|i| rand_task(rng, i as u64)).collect::<Vec<_>>()
+            },
+            |tasks| {
+                let p = params(6);
+                let lambda = p.lambda;
+                let mut s = UaSched::new(p, 0.05, f64::INFINITY, true);
+                for t in tasks.clone() {
+                    s.push(t);
+                }
+                let mut guard = 0;
+                let mut now = 0.0;
+                while s.queue_len() > 0 {
+                    guard += 1;
+                    now += 1.0;
+                    if guard > 1000 {
+                        return Err("did not drain".into());
+                    }
+                    if let Some(b) = s.pop_batch(Lane::Gpu, now, true) {
+                        // the bounded-deferral rescue batch intentionally
+                        // ignores lambda; every ordinary batch must obey it
+                        if b.tasks.iter().any(|t| t.deferrals >= 3) {
+                            continue;
+                        }
+                        let mut us: Vec<f64> = b.tasks.iter().map(|t| t.uncertainty).collect();
+                        us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        for w in us.windows(2) {
+                            if w[1] > lambda * w[0].max(1e-9) + 1e-9 {
+                                return Err(format!("lambda violated: {} > {lambda}*{}", w[1], w[0]));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

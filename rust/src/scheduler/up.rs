@@ -1,0 +1,111 @@
+//! Uncertainty-aware Prioritization (UP) — Eq. 2 and Eq. 3.
+
+use crate::config::SchedParams;
+
+use super::task::Task;
+
+/// Slack-based priority (Eq. 2): p = 1 / zeta, with zeta evaluated at
+/// scheduling time `now` ("the remaining time until the priority
+/// point") so waiting tasks age upward and cannot starve.
+pub fn slack_priority(task: &Task, eta: f64, now: f64, min_slack: f64) -> f64 {
+    1.0 / task.slack_at(eta, now).max(min_slack)
+}
+
+/// UP priority (Eq. 3): p = (1 - alpha * u_hat) / zeta, where u_hat is
+/// the uncertainty score normalised to [0, 1] by `u_scale` (the paper's
+/// formula mixes token counts and seconds; normalising the numerator
+/// keeps alpha's 0..2 sweep meaningful — see DESIGN.md).
+///
+/// The slack is evaluated at scheduling time `now` (the paper's
+/// "remaining time until the priority point"), so priorities age: a task
+/// left waiting climbs toward the front and cannot starve. A task past
+/// its priority point (zeta <= 0) saturates at the maximal priority for
+/// its numerator sign instead of dividing by a negative number.
+pub fn up_priority(task: &Task, params: &SchedParams, eta: f64, now: f64) -> f64 {
+    let u_hat = (task.uncertainty / params.u_scale).clamp(0.0, 1.0);
+    let numerator = 1.0 - params.alpha * u_hat;
+    let raw_slack = task.slack_at(eta, now);
+    if raw_slack >= params.min_slack {
+        return numerator / raw_slack;
+    }
+    // Overdue: clamping alone would tie every late task at the same
+    // slack, letting low-uncertainty arrivals starve a long-waiting
+    // high-uncertainty task forever. Add a lateness term that grows
+    // without bound so every task eventually reaches the front.
+    let lateness = params.min_slack - raw_slack;
+    (numerator + lateness) / params.min_slack
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+
+    fn params() -> SchedParams {
+        SchedParams::default()
+    }
+
+    #[test]
+    fn lower_uncertainty_wins_at_equal_slack() {
+        let p = params();
+        let hi = test_task(1, 0.0, 5.0, 80.0);
+        let lo = test_task(2, 0.0, 5.0 - 0.05 * (80.0 - 10.0), 10.0); // equalise slack
+        assert!((lo.slack(0.05) - hi.slack(0.05)).abs() < 1e-9);
+        assert!(up_priority(&lo, &p, 0.05, 0.0) > up_priority(&hi, &p, 0.05, 0.0));
+    }
+
+    #[test]
+    fn tighter_slack_wins_at_equal_uncertainty() {
+        let p = params();
+        let tight = test_task(1, 0.0, 1.0, 20.0);
+        let loose = test_task(2, 0.0, 9.0, 20.0);
+        assert!(up_priority(&tight, &p, 0.05, 0.0) > up_priority(&loose, &p, 0.05, 0.0));
+    }
+
+    #[test]
+    fn overdue_task_saturates_not_flips() {
+        let p = params();
+        // d < r: negative slack must clamp, yielding a huge positive
+        // priority (for positive numerator), not a negative one.
+        let overdue = test_task(1, 10.0, 9.0, 10.0);
+        let pr = up_priority(&overdue, &p, 0.05, 10.0);
+        assert!(pr > 0.0 && pr.is_finite());
+        let fresh = test_task(2, 10.0, 20.0, 10.0);
+        assert!(pr > up_priority(&fresh, &p, 0.05, 10.0));
+    }
+
+    #[test]
+    fn alpha_zero_reduces_to_slack_priority() {
+        let mut p = params();
+        p.alpha = 0.0;
+        let t = test_task(1, 0.0, 3.0, 40.0);
+        let up = up_priority(&t, &p, 0.05, 0.0);
+        let slack = slack_priority(&t, 0.05, 0.0, p.min_slack);
+        assert!((up - slack).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_alpha_deprioritises_uncertain_tasks() {
+        let mut p = params();
+        p.alpha = 2.0;
+        let certain = test_task(1, 0.0, 5.0, 5.0);
+        let uncertain = test_task(2, 0.0, 5.0, 90.0); // u_hat ~ 0.94 -> numerator < 0
+        assert!(up_priority(&uncertain, &p, 0.05, 0.0) < 0.0);
+        assert!(up_priority(&certain, &p, 0.05, 0.0) > up_priority(&uncertain, &p, 0.05, 0.0));
+    }
+}
+
+#[cfg(test)]
+mod aging_tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+
+    #[test]
+    fn waiting_raises_priority() {
+        let p = SchedParams::default();
+        let t = test_task(1, 0.0, 6.0, 20.0);
+        let fresh = up_priority(&t, &p, 0.05, 0.0);
+        let aged = up_priority(&t, &p, 0.05, 5.0);
+        assert!(aged > fresh, "aging must raise priority: {fresh} -> {aged}");
+    }
+}

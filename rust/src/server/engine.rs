@@ -1,0 +1,301 @@
+//! Wall-clock serving engine: replay an arrival trace against the real
+//! PJRT artifacts under any scheduling policy.
+//!
+//! The `xla` crate's PJRT handles are not `Send` (Rc-based internals),
+//! so each lane worker thread constructs its *own* client + session from
+//! the artifacts directory — the same "one engine per lane" shape a
+//! GPU+CPU deployment has, and no PJRT state ever crosses threads.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::SchedParams;
+use crate::executor::{execute_cpu, execute_gpu, ExecReport};
+use crate::metrics::Samples;
+use crate::model::LmSession;
+use crate::runtime::ArtifactStore;
+use crate::scheduler::{Batch, Lane, Policy, Task};
+use crate::sim::results::TaskOutcome;
+
+/// Knobs for a real serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Compress arrival gaps by this factor (10 = 10x faster replay).
+    pub time_scale: f64,
+    /// Print per-batch progress.
+    pub verbose: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { time_scale: 1.0, verbose: false }
+    }
+}
+
+/// Outcome of a real serving run.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub policy: String,
+    pub outcomes: Vec<TaskOutcome>,
+    pub wall_secs: f64,
+    /// Wall time spent inside policy push/pop calls (Table VII).
+    pub sched_secs: f64,
+    pub n_batches_gpu: usize,
+    pub n_batches_cpu: usize,
+    /// Pure model-inference seconds, summed over batches.
+    pub infer_secs: f64,
+}
+
+impl ServeReport {
+    pub fn response_times(&self) -> Samples {
+        Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
+    }
+
+    pub fn throughput_per_min(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes.len() as f64 / (self.wall_secs / 60.0)
+    }
+}
+
+enum Event {
+    LaneReady(#[allow(dead_code)] Lane),
+    Arrival(Task, f64),
+    Done(Lane, Vec<ExecReport>, f64),
+    LaneError(Lane, String),
+}
+
+fn lane_worker(
+    lane: Lane,
+    root: PathBuf,
+    model: String,
+    batch_rx: mpsc::Receiver<Batch>,
+    tx: mpsc::Sender<Event>,
+    start: Instant,
+) {
+    let init = || -> Result<(Arc<ArtifactStore>, Arc<LmSession>)> {
+        let store = Arc::new(ArtifactStore::open(&root)?);
+        let session = Arc::new(LmSession::new(store.clone(), &model)?);
+        // warm up: compile the common buckets before the clock matters
+        let warm = vec![session.store().manifest.bos_id];
+        session.generate(&[warm], &[2])?;
+        Ok((store, session))
+    };
+    let session = match init() {
+        Ok((_store, session)) => {
+            let _ = tx.send(Event::LaneReady(lane));
+            session
+        }
+        Err(e) => {
+            let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(batch) = batch_rx.recv() {
+        let result = match lane {
+            Lane::Gpu => execute_gpu(&session, &batch).map(|r| vec![r]),
+            Lane::Cpu => execute_cpu(&session, &batch),
+        };
+        let done = start.elapsed().as_secs_f64();
+        match result {
+            Ok(reps) => {
+                if tx.send(Event::Done(lane, reps, done)).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
+                return;
+            }
+        }
+    }
+}
+
+/// Serve `tasks` (arrival times already set, prompts encoded) with the
+/// given policy against real PJRT sessions of `model`.
+pub fn serve_from_root(
+    artifacts_root: &std::path::Path,
+    model: &str,
+    mut tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let n_total = tasks.len();
+    let mut report = ServeReport { policy: policy.name(), ..Default::default() };
+
+    let (event_tx, event_rx) = mpsc::channel::<Event>();
+    let (gpu_tx, gpu_rx) = mpsc::channel::<Batch>();
+    let (cpu_tx, cpu_rx) = mpsc::channel::<Batch>();
+
+    let start = Instant::now();
+
+    let gpu_worker = {
+        let tx = event_tx.clone();
+        let root = artifacts_root.to_path_buf();
+        let model = model.to_string();
+        thread::spawn(move || lane_worker(Lane::Gpu, root, model, gpu_rx, tx, start))
+    };
+    let cpu_worker = {
+        let tx = event_tx.clone();
+        let root = artifacts_root.to_path_buf();
+        let model = model.to_string();
+        thread::spawn(move || lane_worker(Lane::Cpu, root, model, cpu_rx, tx, start))
+    };
+
+    // wait for both lanes to finish compiling before starting the clock
+    let mut ready = 0;
+    while ready < 2 {
+        match event_rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(Event::LaneReady(_)) => ready += 1,
+            Ok(Event::LaneError(lane, e)) => {
+                return Err(anyhow!("{lane:?} lane failed to initialise: {e}"))
+            }
+            Ok(_) => {}
+            Err(e) => return Err(anyhow!("lane initialisation timed out: {e}")),
+        }
+    }
+
+    // --- injector: replay the (scaled) arrival trace ------------------------
+    let epoch = Instant::now();
+    let injector = {
+        let tx = event_tx.clone();
+        let time_scale = opts.time_scale.max(1e-9);
+        thread::spawn(move || {
+            for task in tasks {
+                let due = task.arrival / time_scale;
+                let now = epoch.elapsed().as_secs_f64();
+                if due > now {
+                    thread::sleep(Duration::from_secs_f64(due - now));
+                }
+                let arrived = epoch.elapsed().as_secs_f64();
+                if tx.send(Event::Arrival(task, arrived)).is_err() {
+                    return;
+                }
+            }
+        })
+    };
+    drop(event_tx);
+
+    // --- dispatcher ----------------------------------------------------------
+    let mut meta: std::collections::HashMap<u64, Task> = std::collections::HashMap::new();
+    let mut gpu_busy = false;
+    let mut cpu_busy = false;
+    let mut arrivals_done = false;
+    let mut completed = 0usize;
+    let xi_scaled = params.xi / opts.time_scale.max(1e-9);
+
+    while completed < n_total {
+        match event_rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(Event::Arrival(mut task, arrived)) => {
+                // rebase to the dispatcher clock so response times are real
+                task.priority_point = arrived + (task.priority_point - task.arrival);
+                task.arrival = arrived;
+                meta.insert(task.id, task.clone());
+                let t0 = Instant::now();
+                policy.push(task);
+                report.sched_secs += t0.elapsed().as_secs_f64();
+            }
+            Ok(Event::Done(lane, reps, done)) => {
+                match lane {
+                    Lane::Gpu => gpu_busy = false,
+                    Lane::Cpu => cpu_busy = false,
+                }
+                for rep in reps {
+                    report.infer_secs += rep.infer_secs;
+                    for &id in &rep.task_ids {
+                        let task = meta.remove(&id).expect("unknown task completed");
+                        report.outcomes.push(TaskOutcome {
+                            id,
+                            arrival: task.arrival,
+                            completion: done,
+                            priority_point: task.priority_point,
+                            uncertainty: task.uncertainty,
+                            true_len: task.true_len,
+                            lane: rep.lane,
+                            utype: task.utype.clone(),
+                            malicious: task.malicious,
+                            infer_secs: rep.infer_secs,
+                        });
+                        completed += 1;
+                    }
+                }
+                if opts.verbose {
+                    eprintln!("[{:7.2}s] {lane:?} done: {completed}/{n_total}", done);
+                }
+            }
+            Ok(Event::LaneReady(_)) => {}
+            Ok(Event::LaneError(lane, e)) => {
+                return Err(anyhow!("{lane:?} lane failed mid-run: {e}"));
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => arrivals_done = true,
+        }
+        if !arrivals_done && injector.is_finished() && policy.queue_len() <= meta.len() {
+            arrivals_done = true;
+        }
+
+        // oldest task still waiting in the queue (meta minus in-flight is
+        // a superset; xi forcing only needs a lower bound, so this is safe)
+        let now = epoch.elapsed().as_secs_f64();
+        let oldest = meta.values().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
+        let force = arrivals_done || (oldest.is_finite() && now - oldest >= xi_scaled);
+
+        if !gpu_busy {
+            let t0 = Instant::now();
+            let batch = policy.pop_batch(Lane::Gpu, now, force);
+            report.sched_secs += t0.elapsed().as_secs_f64();
+            if let Some(batch) = batch {
+                report.n_batches_gpu += 1;
+                gpu_busy = true;
+                gpu_tx.send(batch).map_err(|_| anyhow!("gpu lane died"))?;
+            }
+        }
+        if !cpu_busy {
+            let t0 = Instant::now();
+            let batch = policy.pop_batch(Lane::Cpu, now, force);
+            report.sched_secs += t0.elapsed().as_secs_f64();
+            if let Some(batch) = batch {
+                report.n_batches_cpu += 1;
+                cpu_busy = true;
+                cpu_tx.send(batch).map_err(|_| anyhow!("cpu lane died"))?;
+            }
+        }
+    }
+
+    report.wall_secs = epoch.elapsed().as_secs_f64();
+    drop(gpu_tx);
+    drop(cpu_tx);
+    injector.join().ok();
+    gpu_worker.join().ok();
+    cpu_worker.join().ok();
+    report.outcomes.sort_by_key(|o| o.id);
+    Ok(report)
+}
+
+/// Convenience wrapper taking an open store (dispatcher side only).
+pub fn serve(
+    session: Arc<LmSession>,
+    tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let root = session.store().manifest.root.clone();
+    let model = session.model_name().to_string();
+    serve_from_root(&root, &model, tasks, policy, params, opts)
+}
+
+/// Encode prompts into tasks (real-mode preparation).
+pub fn encode_prompts(store: &ArtifactStore, tasks: &mut [Task]) {
+    for task in tasks.iter_mut() {
+        task.prompt = crate::model::session::encode_prompt(store, &task.text);
+    }
+}

@@ -1,0 +1,13 @@
+//! The real-time serving loop (wall clock, real PJRT execution) and the
+//! line-protocol TCP front-end.
+//!
+//! Architecture (std threads — see DESIGN.md §Substitutions for why not
+//! tokio): an injector thread replays the arrival trace, two lane worker
+//! threads own the LM session executions, and the dispatcher thread owns
+//! the policy — the same `Policy` objects the simulator drives, so
+//! scheduling behaviour is identical in both modes.
+
+pub mod engine;
+pub mod tcp;
+
+pub use engine::{serve, ServeOptions, ServeReport};

@@ -1,0 +1,189 @@
+//! Minimal line-protocol TCP front-end (the "chatbot server" face of
+//! RT-LM).
+//!
+//! Protocol: one request per line — the raw utterance. The server
+//! replies with one JSON line: `{"id":..,"tokens":..,"text":..,
+//! "response_ms":..,"lane":..}`. Requests from all connections funnel
+//! into the shared RT-LM scheduler, so concurrent clients exercise
+//! batching and prioritisation exactly like the benchmark workloads.
+//!
+//! PJRT handles are not `Send`, so the LM session lives on the
+//! dispatcher thread and batches execute inline; connection threads only
+//! tokenize/score (pure rust, Send).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::SchedParams;
+use crate::executor::{execute_cpu, execute_gpu};
+use crate::model::LmSession;
+use crate::scheduler::{Lane, Policy, Task};
+use crate::textgen::Vocab;
+use crate::uncertainty::Estimator;
+use crate::util::json::{obj, Json};
+
+struct Pending {
+    reply_tx: mpsc::Sender<String>,
+    submitted: Instant,
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7490").
+pub fn serve_tcp(
+    session: Arc<LmSession>,
+    estimator: Estimator,
+    mut policy: Box<dyn Policy>,
+    params: SchedParams,
+    addr: &str,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "rtlm tcp server on {addr} (model={}, policy={})",
+        session.model_name(),
+        policy.name()
+    );
+    let store = session.store();
+    let vocab = store.vocab.clone();
+    let max_input_len = store.manifest.max_input_len;
+    let phi = session.entry.phi;
+
+    let (req_tx, req_rx) = mpsc::channel::<(Task, Pending)>();
+    let next_id = Arc::new(AtomicU64::new(0));
+    let epoch = Instant::now();
+
+    // acceptor thread: connection handlers only touch Send-safe state
+    {
+        let vocab = vocab.clone();
+        thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let req_tx = req_tx.clone();
+                let estimator = estimator.clone();
+                let next_id = next_id.clone();
+                let vocab = vocab.clone();
+                thread::spawn(move || {
+                    if let Err(e) = handle_conn(
+                        stream,
+                        req_tx,
+                        estimator,
+                        next_id,
+                        vocab,
+                        max_input_len,
+                        phi,
+                        epoch,
+                    ) {
+                        eprintln!("connection error: {e:#}");
+                    }
+                });
+            }
+        });
+    }
+
+    // dispatcher loop: owns the policy and runs lanes inline
+    let mut pending: std::collections::HashMap<u64, Pending> = std::collections::HashMap::new();
+    let mut oldest: Option<Instant> = None;
+    loop {
+        match req_rx.recv_timeout(Duration::from_millis(25)) {
+            Ok((task, info)) => {
+                oldest = Some(oldest.unwrap_or(info.submitted).min(info.submitted));
+                pending.insert(task.id, info);
+                policy.push(task);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+        let force = oldest
+            .map(|t| t.elapsed().as_secs_f64() >= params.xi)
+            .unwrap_or(false);
+        for lane in [Lane::Gpu, Lane::Cpu] {
+            let now = epoch.elapsed().as_secs_f64();
+            let Some(batch) = policy.pop_batch(lane, now, force) else { continue };
+            let reports = match lane {
+                Lane::Gpu => execute_gpu(&session, &batch).map(|r| vec![r]),
+                Lane::Cpu => execute_cpu(&session, &batch),
+            };
+            match reports {
+                Ok(reports) => {
+                    for rep in reports {
+                        for (i, &id) in rep.task_ids.iter().enumerate() {
+                            if let Some(info) = pending.remove(&id) {
+                                let text = vocab.decode(&rep.outputs[i]);
+                                let ms = info.submitted.elapsed().as_secs_f64() * 1e3;
+                                let reply = obj(vec![
+                                    ("id", Json::Num(id as f64)),
+                                    ("tokens", Json::Num(rep.outputs[i].len() as f64)),
+                                    ("text", Json::Str(text)),
+                                    ("response_ms", Json::Num(ms)),
+                                    ("lane", Json::Str(format!("{:?}", rep.lane))),
+                                ]);
+                                let _ = info.reply_tx.send(reply.to_string());
+                            }
+                        }
+                    }
+                    if pending.is_empty() {
+                        oldest = None;
+                    }
+                }
+                Err(e) => eprintln!("lane error: {e:#}"),
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_conn(
+    stream: TcpStream,
+    req_tx: mpsc::Sender<(Task, Pending)>,
+    estimator: Estimator,
+    next_id: Arc<AtomicU64>,
+    vocab: Arc<Vocab>,
+    max_input_len: usize,
+    phi: f64,
+    epoch: Instant,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let text = line?;
+        if text.trim().is_empty() {
+            continue;
+        }
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        let (u, feats) = estimator.score_with_features(&text)?;
+        let input_len = feats[feats.len() - 1] as usize;
+        let mut prompt = vocab.encode(&text, Some(max_input_len));
+        if prompt.is_empty() {
+            prompt.push(crate::textgen::vocab::BOS_ID);
+        }
+        let now = epoch.elapsed().as_secs_f64();
+        let task = Task {
+            id,
+            text: text.clone(),
+            prompt,
+            arrival: now,
+            priority_point: now + 2.0 + phi * input_len as f64,
+            uncertainty: u,
+            // interactive requests have no oracle: serve the predicted length
+            true_len: (u.round() as usize).clamp(4, 96),
+            input_len,
+            utype: "interactive".into(),
+            malicious: false,
+            deferrals: 0,
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        req_tx.send((task, Pending { reply_tx, submitted: Instant::now() })).ok();
+        match reply_rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(reply) => writeln!(writer, "{reply}")?,
+            Err(_) => {
+                writeln!(writer, "{{\"error\":\"timeout\"}}")?;
+                eprintln!("request from {peer} timed out");
+            }
+        }
+    }
+    Ok(())
+}

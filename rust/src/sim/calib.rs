@@ -1,0 +1,117 @@
+//! Calibration data: measured PJRT latencies of the real artifacts,
+//! written by `rtlm calibrate` to `artifacts/calib.json` and consumed by
+//! the simulator's latency model.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+#[derive(Clone, Debug, Default)]
+pub struct Calibration {
+    /// model -> decode bucket -> seconds per step.
+    pub decode: BTreeMap<String, BTreeMap<usize, f64>>,
+    /// model -> (batch, seq) -> prefill seconds.
+    pub prefill: BTreeMap<String, BTreeMap<(usize, usize), f64>>,
+    /// Measured native-regressor latency per task (seconds).
+    pub regressor_secs: f64,
+    /// Host the calibration was taken on (informational).
+    pub note: String,
+}
+
+impl Calibration {
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing calibration: {e}"))?;
+        let mut decode = BTreeMap::new();
+        let mut prefill = BTreeMap::new();
+        for (model, entry) in v.need_obj("models")? {
+            let mut d = BTreeMap::new();
+            for (bucket, secs) in entry.need_obj("decode")? {
+                d.insert(
+                    bucket.parse::<usize>()?,
+                    secs.as_f64().ok_or_else(|| anyhow!("bad decode secs"))?,
+                );
+            }
+            decode.insert(model.clone(), d);
+            let mut p = BTreeMap::new();
+            for (key, secs) in entry.need_obj("prefill")? {
+                let (b, s) = key.split_once(',').ok_or_else(|| anyhow!("bad prefill key"))?;
+                p.insert(
+                    (b.parse()?, s.parse()?),
+                    secs.as_f64().ok_or_else(|| anyhow!("bad prefill secs"))?,
+                );
+            }
+            prefill.insert(model.clone(), p);
+        }
+        Ok(Calibration {
+            decode,
+            prefill,
+            regressor_secs: v.get("regressor_secs").as_f64().unwrap_or(0.0),
+            note: v.get("note").as_str().unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut models = Vec::new();
+        for (model, d) in &self.decode {
+            let decode_obj = Json::Obj(
+                d.iter().map(|(b, t)| (b.to_string(), Json::Num(*t))).collect(),
+            );
+            let prefill_obj = Json::Obj(
+                self.prefill
+                    .get(model)
+                    .map(|p| {
+                        p.iter()
+                            .map(|((b, s), t)| (format!("{b},{s}"), Json::Num(*t)))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            );
+            models.push((
+                model.clone(),
+                obj(vec![("decode", decode_obj), ("prefill", prefill_obj)]),
+            ));
+        }
+        let root = obj(vec![
+            (
+                "models",
+                Json::Obj(models.into_iter().collect()),
+            ),
+            ("regressor_secs", Json::Num(self.regressor_secs)),
+            ("note", Json::Str(self.note.clone())),
+        ]);
+        std::fs::write(path, root.to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        let mut c = Calibration {
+            regressor_secs: 1e-5,
+            note: "test".into(),
+            ..Default::default()
+        };
+        c.decode
+            .insert("t5".into(), BTreeMap::from([(1, 0.01), (8, 0.02)]));
+        c.prefill
+            .insert("t5".into(), BTreeMap::from([((1, 16), 0.03), ((8, 64), 0.1)]));
+        let dir = std::env::temp_dir().join("rtlm_calib_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("calib.json");
+        c.save(&path).unwrap();
+        let back = Calibration::load(&path).unwrap();
+        assert_eq!(back.decode["t5"][&8], 0.02);
+        assert_eq!(back.prefill["t5"][&(8, 64)], 0.1);
+        assert_eq!(back.note, "test");
+    }
+}

@@ -1,0 +1,384 @@
+//! The discrete-event serving engine: Poisson arrivals feed the policy;
+//! two lanes (accelerator + CPU quarantine) execute batches with
+//! durations from the latency model; virtual time advances event by
+//! event.
+//!
+//! The same policy objects drive the real-time server (`server`), so
+//! scheduling behaviour in simulation and on the wire is identical by
+//! construction.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::{DeviceProfile, ModelEntry, SchedParams};
+use crate::scheduler::{Lane, Policy, Task};
+
+use super::latency::LatencyModel;
+use super::results::{SimResult, TaskOutcome};
+
+/// Alias kept for the public API surface.
+pub type SimOutcome = SimResult;
+
+/// Run one simulated serving session.
+///
+/// `tasks` carry their arrival times; the engine sorts them. Returns
+/// per-task outcomes plus aggregate counters.
+pub fn run_sim(
+    mut tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    lat: &LatencyModel,
+    model: &ModelEntry,
+    dev: &DeviceProfile,
+    params: &SchedParams,
+) -> SimResult {
+    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let n_total = tasks.len();
+
+    let mut result = SimResult { policy: policy.name(), ..Default::default() };
+    let mut idx = 0usize;
+    let mut now = 0.0f64;
+    let mut gpu_free = 0.0f64;
+    // CPU-lane worker pool: offloaded tasks run batch-1, several in
+    // parallel (dev.cpu_workers); the lane accepts a new batch when any
+    // worker is free.
+    let mut cpu_workers = vec![0.0f64; dev.cpu_workers.max(1)];
+    // arrival time of every task currently inside the policy
+    let mut waiting: HashMap<u64, f64> = HashMap::new();
+    let mut sched_wall = 0.0f64;
+
+    let guard_limit = 1000 + 100 * n_total;
+    let mut iterations = 0usize;
+
+    loop {
+        iterations += 1;
+        assert!(
+            iterations < guard_limit,
+            "simulation did not converge (policy {} stuck with {} waiting)",
+            result.policy,
+            waiting.len()
+        );
+
+        // -- admit arrivals --------------------------------------------------
+        while idx < tasks.len() && tasks[idx].arrival <= now {
+            let task = tasks[idx].clone();
+            waiting.insert(task.id, task.arrival);
+            let t0 = Instant::now();
+            policy.push(task);
+            sched_wall += t0.elapsed().as_secs_f64();
+            idx += 1;
+        }
+
+        // -- dispatch idle lanes ---------------------------------------------
+        let oldest = waiting.values().copied().fold(f64::INFINITY, f64::min);
+        let no_more_arrivals = idx >= tasks.len();
+        let force = no_more_arrivals || (now - oldest >= params.xi);
+
+        if gpu_free <= now {
+            let t0 = Instant::now();
+            let batch = policy.pop_batch(Lane::Gpu, now, force);
+            sched_wall += t0.elapsed().as_secs_f64();
+            if let Some(batch) = batch {
+                let duration = lat.gpu_batch_secs(model, &batch, dev);
+                gpu_free = now + duration;
+                result.n_batches_gpu += 1;
+                for task in batch.tasks {
+                    waiting.remove(&task.id);
+                    result.outcomes.push(TaskOutcome {
+                        id: task.id,
+                        arrival: task.arrival,
+                        completion: gpu_free,
+                        priority_point: task.priority_point,
+                        uncertainty: task.uncertainty,
+                        true_len: task.true_len,
+                        lane: Lane::Gpu,
+                        utype: task.utype,
+                        malicious: task.malicious,
+                        infer_secs: duration,
+                    });
+                }
+            }
+        }
+
+        let cpu_free = cpu_workers.iter().copied().fold(f64::INFINITY, f64::min);
+        if cpu_free <= now {
+            let t0 = Instant::now();
+            let batch = policy.pop_batch(Lane::Cpu, now, force);
+            sched_wall += t0.elapsed().as_secs_f64();
+            if let Some(batch) = batch {
+                result.n_batches_cpu += 1;
+                for task in batch.tasks {
+                    // earliest-free worker takes the task
+                    let w = (0..cpu_workers.len())
+                        .min_by(|&a, &b| {
+                            cpu_workers[a].partial_cmp(&cpu_workers[b]).unwrap()
+                        })
+                        .unwrap();
+                    let start = cpu_workers[w].max(now);
+                    let dur = lat.cpu_task_secs(model, task.true_len, task.input_len, dev);
+                    cpu_workers[w] = start + dur;
+                    waiting.remove(&task.id);
+                    result.outcomes.push(TaskOutcome {
+                        id: task.id,
+                        arrival: task.arrival,
+                        completion: cpu_workers[w],
+                        priority_point: task.priority_point,
+                        uncertainty: task.uncertainty,
+                        true_len: task.true_len,
+                        lane: Lane::Cpu,
+                        utype: task.utype,
+                        malicious: task.malicious,
+                        infer_secs: dur,
+                    });
+                }
+            }
+        }
+
+        // -- advance to the next strictly-future event -----------------------
+        let mut next = f64::INFINITY;
+        if idx < tasks.len() {
+            next = next.min(tasks[idx].arrival);
+        }
+        if gpu_free > now {
+            next = next.min(gpu_free);
+        }
+        let cpu_free = cpu_workers.iter().copied().fold(f64::INFINITY, f64::min);
+        if cpu_free > now && cpu_free.is_finite() {
+            next = next.min(cpu_free);
+        }
+        if !waiting.is_empty() {
+            // xi expiry wakes the dispatcher for a forced dispatch; if it
+            // is already in the past the forced attempt above already ran,
+            // so only a future expiry counts as an event.
+            let oldest = waiting.values().copied().fold(f64::INFINITY, f64::min);
+            if oldest + params.xi > now {
+                next = next.min(oldest + params.xi);
+            } else if next.is_infinite() {
+                // both lanes idle, force already attempted, still stuck:
+                // the policy refuses to emit — that's a bug, not a wait.
+                panic!(
+                    "policy {} deadlocked with {} waiting tasks",
+                    result.policy,
+                    waiting.len()
+                );
+            }
+        }
+        if next.is_infinite() {
+            break; // no arrivals, nothing waiting, lanes idle
+        }
+        now = next.max(now);
+    }
+
+    result.makespan = result
+        .outcomes
+        .iter()
+        .map(|o| o.completion)
+        .fold(0.0, f64::max);
+    result.sched_wall_secs = sched_wall;
+    assert_eq!(
+        result.outcomes.len(),
+        n_total,
+        "policy {} lost tasks",
+        result.policy
+    );
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceProfile, SchedParams};
+    use crate::scheduler::{Fifo, PolicyKind, Task};
+    use crate::sim::latency::LatencyModel;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+    use std::collections::BTreeMap;
+
+    fn test_model() -> ModelEntry {
+        ModelEntry {
+            name: "m".into(),
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            eta: 0.05,
+            phi: 0.08,
+            gamma: 1.0,
+            delta: 0.0,
+            weights: "/dev/null".into(),
+            param_names: vec![],
+            prefill: BTreeMap::new(),
+            decode: BTreeMap::new(),
+            decode_chunk: BTreeMap::new(),
+            chunk_k: 0,
+        }
+    }
+
+    fn test_lat() -> LatencyModel {
+        // hand-built via calibration struct for determinism
+        let mut c = crate::sim::calib::Calibration::default();
+        c.decode.insert(
+            "m".into(),
+            BTreeMap::from([(1, 0.01), (4, 0.018), (16, 0.04)]),
+        );
+        c.prefill.insert(
+            "m".into(),
+            BTreeMap::from([((1, 16), 0.02), ((8, 64), 0.08)]),
+        );
+        LatencyModel::from_calibration(&c)
+    }
+
+    fn mk_task(id: u64, arrival: f64, u: f64, len: usize) -> Task {
+        Task {
+            id,
+            text: String::new(),
+            prompt: vec![],
+            arrival,
+            priority_point: arrival + 2.0,
+            uncertainty: u,
+            true_len: len,
+            input_len: 8,
+            utype: "plain".into(),
+            malicious: false,
+            deferrals: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_single_task_completes() {
+        let tasks = vec![mk_task(0, 0.0, 10.0, 10)];
+        let mut policy = Fifo::new(4);
+        let r = run_sim(
+            tasks,
+            &mut policy,
+            &test_lat(),
+            &test_model(),
+            &DeviceProfile::edge_server(),
+            &SchedParams::default(),
+        );
+        assert_eq!(r.outcomes.len(), 1);
+        // forced dispatch happens immediately (no more arrivals)
+        let rt = r.outcomes[0].response_time();
+        assert!(rt > 0.0 && rt < 1.0, "rt {rt}");
+    }
+
+    #[test]
+    fn completes_all_tasks_every_policy() {
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+        let model = test_model();
+        let lat = test_lat();
+        let dev = DeviceProfile::edge_server();
+        let mut rng = Pcg64::new(5);
+        let tasks: Vec<Task> = (0..60)
+            .map(|i| {
+                mk_task(
+                    i,
+                    rng.f64() * 20.0,
+                    4.0 + rng.f64() * 90.0,
+                    4 + rng.range_usize(0, 90),
+                )
+            })
+            .collect();
+        for kind in PolicyKind::ALL_BASELINES {
+            let mut policy = kind.build(&params, model.eta, 60.0);
+            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            assert_eq!(r.outcomes.len(), 60, "{}", kind.label());
+            assert!(r.makespan > 0.0);
+            assert!(r.throughput_per_min() > 0.0);
+        }
+    }
+
+    #[test]
+    fn completion_after_arrival_invariant() {
+        prop::check_result(
+            "sim-causality",
+            50,
+            |rng| {
+                let n = rng.range_usize(1, 80);
+                (0..n)
+                    .map(|i| {
+                        mk_task(
+                            i as u64,
+                            rng.f64() * 30.0,
+                            4.0 + rng.f64() * 90.0,
+                            4 + rng.range_usize(0, 90),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |tasks| {
+                let params = SchedParams { batch_size: 4, ..Default::default() };
+                let mut policy =
+                    PolicyKind::RtLm.build(&params, 0.05, 60.0);
+                let r = run_sim(
+                    tasks.clone(),
+                    &mut *policy,
+                    &test_lat(),
+                    &test_model(),
+                    &DeviceProfile::edge_server(),
+                    &params,
+                );
+                for o in &r.outcomes {
+                    if o.completion <= o.arrival {
+                        return Err(format!("task {} completed before arrival", o.id));
+                    }
+                }
+                if r.outcomes.len() != tasks.len() {
+                    return Err("task count mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn high_uncertainty_tasks_take_cpu_lane_under_rtlm() {
+        let params = SchedParams { batch_size: 2, ..Default::default() };
+        let mut policy = PolicyKind::RtLm.build(&params, 0.05, 50.0);
+        let tasks = vec![
+            mk_task(0, 0.0, 90.0, 90), // malicious
+            mk_task(1, 0.0, 10.0, 10),
+            mk_task(2, 0.1, 12.0, 12),
+        ];
+        let r = run_sim(
+            tasks,
+            &mut *policy,
+            &test_lat(),
+            &test_model(),
+            &DeviceProfile::edge_server(),
+            &params,
+        );
+        let by_id: HashMap<u64, &TaskOutcome> = r.outcomes.iter().map(|o| (o.id, o)).collect();
+        assert_eq!(by_id[&0].lane, Lane::Cpu);
+        assert_eq!(by_id[&1].lane, Lane::Gpu);
+    }
+
+    #[test]
+    fn xavier_profile_is_slower() {
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+        let model = test_model();
+        let lat = test_lat();
+        let mut rng = Pcg64::new(9);
+        let tasks: Vec<Task> = (0..40)
+            .map(|i| mk_task(i, rng.f64() * 10.0, 20.0, 20 + rng.range_usize(0, 40)))
+            .collect();
+        let mut p1 = PolicyKind::Fifo.build(&params, model.eta, f64::INFINITY);
+        let edge = run_sim(
+            tasks.clone(),
+            &mut *p1,
+            &lat,
+            &model,
+            &DeviceProfile::edge_server(),
+            &params,
+        );
+        let mut p2 = PolicyKind::Fifo.build(&params, model.eta, f64::INFINITY);
+        let agx = run_sim(
+            tasks,
+            &mut *p2,
+            &lat,
+            &model,
+            &DeviceProfile::agx_xavier(),
+            &params,
+        );
+        assert!(agx.mean_response() > edge.mean_response());
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulator with a calibrated latency model.
+//!
+//! Paper-scale experiments (five LMs x three variance subsets x five
+//! policies x minutes of Poisson arrivals at beta up to 150/min) cannot
+//! run wall-clock on this testbed; the simulator replays them in virtual
+//! time, with per-batch durations taken from *measured* PJRT latencies
+//! of the real artifacts (`rtlm calibrate` -> `artifacts/calib.json`) or
+//! an analytic FLOPs model when no calibration exists.
+
+pub mod calib;
+pub mod engine;
+pub mod latency;
+pub mod results;
+
+pub use calib::Calibration;
+pub use engine::{run_sim, SimOutcome};
+pub use latency::LatencyModel;
+pub use results::{SimResult, TaskOutcome};

@@ -1,0 +1,150 @@
+//! Simulation outcomes: per-task records and the aggregate metrics the
+//! paper reports (response-time distribution, maximum response time,
+//! throughput, priority-point misses).
+
+use crate::metrics::Samples;
+use crate::scheduler::Lane;
+use crate::util::json::{obj, Json};
+
+#[derive(Clone, Debug)]
+pub struct TaskOutcome {
+    pub id: u64,
+    pub arrival: f64,
+    pub completion: f64,
+    pub priority_point: f64,
+    pub uncertainty: f64,
+    pub true_len: usize,
+    pub lane: Lane,
+    pub utype: String,
+    pub malicious: bool,
+    /// Pure model-inference time of the batch this task rode in.
+    pub infer_secs: f64,
+}
+
+impl TaskOutcome {
+    pub fn response_time(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    pub fn missed(&self) -> bool {
+        self.completion > self.priority_point
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub policy: String,
+    pub outcomes: Vec<TaskOutcome>,
+    /// Virtual time at which the last task completed.
+    pub makespan: f64,
+    /// Wall-clock seconds the policy itself consumed (scheduling
+    /// overhead — Table VII measures this for the real implementation).
+    pub sched_wall_secs: f64,
+    pub n_batches_gpu: usize,
+    pub n_batches_cpu: usize,
+}
+
+impl SimResult {
+    pub fn response_times(&self) -> Samples {
+        Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
+    }
+
+    pub fn mean_response(&self) -> f64 {
+        self.response_times().mean()
+    }
+
+    pub fn max_response(&self) -> f64 {
+        self.response_times().max()
+    }
+
+    /// Average completed tasks per minute (Sec. V-C).
+    pub fn throughput_per_min(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes.len() as f64 / (self.makespan / 60.0)
+    }
+
+    /// Mean response time of tasks arriving in the peak third of the
+    /// sweep (where scheduling decisions actually bind).
+    pub fn peak_mean_response(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return f64::NAN;
+        }
+        let mut arrivals: Vec<f64> = self.outcomes.iter().map(|o| o.arrival).collect();
+        arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = arrivals[(arrivals.len() * 2) / 3];
+        let peak: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.arrival >= cut)
+            .map(|o| o.response_time())
+            .collect();
+        peak.iter().sum::<f64>() / peak.len().max(1) as f64
+    }
+
+    /// Throughput over the *peak* third of the arrival sweep — where the
+    /// paper's policies actually separate (off-peak, every policy clears
+    /// the queue and throughput equals the arrival rate).
+    pub fn peak_throughput_per_min(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let mut arrivals: Vec<f64> = self.outcomes.iter().map(|o| o.arrival).collect();
+        arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = arrivals[(arrivals.len() * 2) / 3];
+        let peak: Vec<&TaskOutcome> =
+            self.outcomes.iter().filter(|o| o.arrival >= cut).collect();
+        if peak.is_empty() {
+            return 0.0;
+        }
+        let start = peak.iter().map(|o| o.arrival).fold(f64::INFINITY, f64::min);
+        let end = peak.iter().map(|o| o.completion).fold(0.0, f64::max);
+        if end <= start {
+            return 0.0;
+        }
+        peak.len() as f64 / ((end - start) / 60.0)
+    }
+
+    pub fn miss_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.missed()).count()
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.miss_count() as f64 / self.outcomes.len() as f64
+    }
+
+    /// Export per-task outcomes as JSONL (offline analysis / plotting).
+    pub fn export_jsonl(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        for o in &self.outcomes {
+            let rec = obj(vec![
+                ("id", Json::Num(o.id as f64)),
+                ("arrival", Json::Num(o.arrival)),
+                ("completion", Json::Num(o.completion)),
+                ("response", Json::Num(o.response_time())),
+                ("priority_point", Json::Num(o.priority_point)),
+                ("uncertainty", Json::Num(o.uncertainty)),
+                ("true_len", Json::Num(o.true_len as f64)),
+                ("lane", Json::Str(format!("{:?}", o.lane))),
+                ("utype", Json::Str(o.utype.clone())),
+                ("malicious", Json::Bool(o.malicious)),
+                ("missed", Json::Bool(o.missed())),
+            ]);
+            writeln!(f, "{rec}")?;
+        }
+        Ok(())
+    }
+
+    /// Mean pure-inference latency (Fig. 14's second series).
+    pub fn mean_infer_secs(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.infer_secs).sum::<f64>() / self.outcomes.len() as f64
+    }
+}

@@ -1,0 +1,156 @@
+//! Lexicon loaded from `artifacts/lexicon.json` (exported by aot.py from
+//! `python/compile/lexicon.py`, the single source of truth).
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// PoS-lite tag inventory (mirror of python's TAG_* constants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tag {
+    Noun,
+    Verb,
+    Adj,
+    Adv,
+    Pron,
+    Det,
+    Adp,
+    Conj,
+    Wh,
+    Punct,
+    Other,
+}
+
+impl Tag {
+    pub fn from_str(s: &str) -> Result<Tag> {
+        Ok(match s {
+            "NOUN" => Tag::Noun,
+            "VERB" => Tag::Verb,
+            "ADJ" => Tag::Adj,
+            "ADV" => Tag::Adv,
+            "PRON" => Tag::Pron,
+            "DET" => Tag::Det,
+            "ADP" => Tag::Adp,
+            "CONJ" => Tag::Conj,
+            "WH" => Tag::Wh,
+            "PUNCT" => Tag::Punct,
+            "OTHER" => Tag::Other,
+            other => return Err(anyhow!("unknown tag '{other}'")),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Tag::Noun => "NOUN",
+            Tag::Verb => "VERB",
+            Tag::Adj => "ADJ",
+            Tag::Adv => "ADV",
+            Tag::Pron => "PRON",
+            Tag::Det => "DET",
+            Tag::Adp => "ADP",
+            Tag::Conj => "CONJ",
+            Tag::Wh => "WH",
+            Tag::Punct => "PUNCT",
+            Tag::Other => "OTHER",
+        }
+    }
+}
+
+/// All word lists RULEGEN and the tagger need, parsed once at startup.
+#[derive(Debug)]
+pub struct Lexicon {
+    pub vocab_words: Vec<String>,
+    pub pos_lexicon: HashMap<String, Tag>,
+    pub suffix_rules: Vec<(String, Tag)>,
+    pub nv_ambiguous: HashSet<String>,
+    pub homonyms: HashMap<String, u32>,
+    pub vague_topics: HashSet<String>,
+    pub vague_phrases: Vec<Vec<String>>,
+    pub open_markers: HashSet<String>,
+    pub multipart_markers: HashSet<String>,
+    pub relativizers: HashSet<String>,
+    pub wh_words: HashSet<String>,
+    pub vague_adjectives: HashSet<String>,
+    pub open_wh_starters: HashSet<String>,
+}
+
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
+    v.need_arr(key)?
+        .iter()
+        .map(|j| {
+            j.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("'{key}' contains a non-string"))
+        })
+        .collect()
+}
+
+fn str_set(v: &Json, key: &str) -> Result<HashSet<String>> {
+    Ok(str_list(v, key)?.into_iter().collect())
+}
+
+impl Lexicon {
+    pub fn load(path: &Path) -> Result<Lexicon> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading lexicon {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing lexicon: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Lexicon> {
+        let mut pos_lexicon = HashMap::new();
+        for (word, tag) in v.need_obj("pos_lexicon")? {
+            pos_lexicon.insert(
+                word.clone(),
+                Tag::from_str(tag.as_str().ok_or_else(|| anyhow!("bad tag value"))?)?,
+            );
+        }
+        let mut suffix_rules = Vec::new();
+        for rule in v.need_arr("suffix_rules")? {
+            let suffix = rule.idx(0).as_str().ok_or_else(|| anyhow!("bad suffix"))?;
+            let tag = Tag::from_str(rule.idx(1).as_str().ok_or_else(|| anyhow!("bad tag"))?)?;
+            suffix_rules.push((suffix.to_string(), tag));
+        }
+        let mut homonyms = HashMap::new();
+        for (word, senses) in v.need_obj("homonyms")? {
+            homonyms.insert(
+                word.clone(),
+                senses.as_f64().ok_or_else(|| anyhow!("bad sense count"))? as u32,
+            );
+        }
+        let vague_phrases = v
+            .need_arr("vague_phrases")?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .ok_or_else(|| anyhow!("bad phrase"))?
+                    .iter()
+                    .map(|w| {
+                        w.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow!("bad phrase word"))
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Lexicon {
+            vocab_words: str_list(v, "vocab")?,
+            pos_lexicon,
+            suffix_rules,
+            nv_ambiguous: str_set(v, "nv_ambiguous")?,
+            homonyms,
+            vague_topics: str_set(v, "vague_topics")?,
+            vague_phrases,
+            open_markers: str_set(v, "open_markers")?,
+            multipart_markers: str_set(v, "multipart_markers")?,
+            relativizers: str_set(v, "relativizers")?,
+            wh_words: str_set(v, "wh_words")?,
+            vague_adjectives: str_set(v, "vague_adjectives")?,
+            open_wh_starters: str_set(v, "open_wh_starters")?,
+        })
+    }
+}

@@ -1,0 +1,16 @@
+//! Text processing: tokenizer, vocabulary, and PoS-lite tagger.
+//!
+//! Exact rust mirror of `python/compile/textproc.py` (the build path).
+//! The contract is enforced by golden-file tests against
+//! `artifacts/goldens/textproc_golden.jsonl`: any divergence in
+//! tokenisation, tagging, or vocabulary numbering is a test failure, not
+//! a silent drift.
+
+pub mod lexicon;
+pub mod pos;
+pub mod tokenizer;
+pub mod vocab;
+
+pub use lexicon::{Lexicon, Tag};
+pub use tokenizer::tokenize;
+pub use vocab::Vocab;

@@ -1,0 +1,25 @@
+//! PoS-lite tagger (exact mirror of `textproc.pos_tag`): lexicon lookup,
+//! then suffix heuristics, else NOUN; punctuation tags PUNCT.
+
+use super::lexicon::{Lexicon, Tag};
+use super::tokenizer::is_punct;
+
+pub fn pos_tag(lex: &Lexicon, tokens: &[String]) -> Vec<Tag> {
+    tokens
+        .iter()
+        .map(|tok| {
+            if tok.chars().next().map(is_punct).unwrap_or(false) {
+                return Tag::Punct;
+            }
+            if let Some(tag) = lex.pos_lexicon.get(tok.as_str()) {
+                return *tag;
+            }
+            for (suffix, tag) in &lex.suffix_rules {
+                if tok.chars().count() > suffix.chars().count() + 1 && tok.ends_with(suffix) {
+                    return *tag;
+                }
+            }
+            Tag::Noun
+        })
+        .collect()
+}

@@ -1,0 +1,63 @@
+//! Whitespace + punctuation tokenizer (exact mirror of
+//! `textproc.tokenize`).
+
+/// The punctuation characters split into their own tokens.
+/// Must stay identical to python's `_PUNCT = ".,!?;:\"()"`.
+pub const PUNCT: &[char] = &['.', ',', '!', '?', ';', ':', '"', '(', ')'];
+
+pub fn is_punct(c: char) -> bool {
+    PUNCT.contains(&c)
+}
+
+/// Lowercase, split on whitespace, split off leading/trailing punctuation
+/// as separate tokens (trailing punctuation emitted in string order).
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for raw in text.to_lowercase().split_whitespace() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut start = 0;
+        while start < chars.len() && is_punct(chars[start]) {
+            out.push(chars[start].to_string());
+            start += 1;
+        }
+        let mut end = chars.len();
+        let mut trailing = Vec::new();
+        while end > start && is_punct(chars[end - 1]) {
+            trailing.push(chars[end - 1].to_string());
+            end -= 1;
+        }
+        if end > start {
+            out.push(chars[start..end].iter().collect());
+        }
+        out.extend(trailing.into_iter().rev());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic() {
+        assert_eq!(tokenize("I love pizza."), vec!["i", "love", "pizza", "."]);
+        assert_eq!(tokenize("what?  really!"), vec!["what", "?", "really", "!"]);
+        assert!(tokenize("").is_empty());
+    }
+
+    #[test]
+    fn punctuation_order() {
+        assert_eq!(tokenize("ok?!"), vec!["ok", "?", "!"]);
+        assert_eq!(tokenize("\"quoted\""), vec!["\"", "quoted", "\""]);
+    }
+
+    #[test]
+    fn keeps_apostrophes() {
+        assert_eq!(tokenize("what's up"), vec!["what's", "up"]);
+    }
+
+    #[test]
+    fn all_punct_token() {
+        assert_eq!(tokenize("..."), vec![".", ".", "."]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Vocabulary: id <-> word mapping loaded from the lexicon export.
+//!
+//! The id numbering is fixed by `textproc.build_vocab` on the python side
+//! (specials 0..3, then sorted known words, then filler); rust only loads
+//! it — it never rebuilds the list — so both sides are identical by
+//! construction.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::lexicon::Lexicon;
+use super::tokenizer::tokenize;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+
+#[derive(Debug)]
+pub struct Vocab {
+    pub id_to_word: Vec<String>,
+    word_to_id: HashMap<String, i32>,
+}
+
+impl Vocab {
+    pub fn from_lexicon(lex: &Lexicon, expected_size: usize) -> Result<Vocab> {
+        ensure!(
+            lex.vocab_words.len() == expected_size,
+            "vocab size mismatch: lexicon has {}, manifest says {}",
+            lex.vocab_words.len(),
+            expected_size
+        );
+        let word_to_id = lex
+            .vocab_words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Ok(Vocab { id_to_word: lex.vocab_words.clone(), word_to_id })
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.is_empty()
+    }
+
+    pub fn encode(&self, text: &str, max_len: Option<usize>) -> Vec<i32> {
+        let mut ids: Vec<i32> = tokenize(text)
+            .iter()
+            .map(|t| self.word_to_id.get(t).copied().unwrap_or(UNK_ID))
+            .collect();
+        if let Some(n) = max_len {
+            ids.truncate(n);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut words = Vec::new();
+        for &id in ids {
+            if id == PAD_ID || id == BOS_ID || id == EOS_ID {
+                continue;
+            }
+            match self.id_to_word.get(id as usize) {
+                Some(w) => words.push(w.as_str()),
+                None => words.push("<unk>"),
+            }
+        }
+        words.join(" ")
+    }
+}

@@ -1,0 +1,69 @@
+//! The combined uncertainty estimator used on the scheduling hot path:
+//! RULEGEN features -> LW regressor -> uncertainty score (predicted
+//! output length in tokens). Eq. 1: u_J = m_theta(RULEGEN(J)).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::regressor::Regressor;
+use super::rules;
+use crate::textgen::Lexicon;
+
+#[derive(Clone)]
+pub struct Estimator {
+    lexicon: Arc<Lexicon>,
+    regressor: Arc<Regressor>,
+    max_input_len: usize,
+    min_len: f64,
+    max_len: f64,
+}
+
+impl Estimator {
+    pub fn new(
+        lexicon: Arc<Lexicon>,
+        regressor: Arc<Regressor>,
+        max_input_len: usize,
+        min_len: f64,
+        max_len: f64,
+    ) -> Estimator {
+        Estimator { lexicon, regressor, max_input_len, min_len, max_len }
+    }
+
+    pub fn features(&self, text: &str) -> [f64; rules::N_FEATURES] {
+        rules::features(&self.lexicon, text, self.max_input_len)
+    }
+
+    /// Uncertainty score for a text: predicted output length, clamped to
+    /// the model family's valid range.
+    pub fn score(&self, text: &str) -> Result<f64> {
+        let feats = self.features(text);
+        let raw = self.regressor.predict(&feats)?;
+        Ok(raw.clamp(self.min_len, self.max_len))
+    }
+
+    /// Score a pre-computed raw feature vector (simulation fast path —
+    /// skips tokenisation when build-time features are available).
+    pub fn score_features(&self, raw_features: &[f64]) -> Result<f64> {
+        let raw = self.regressor.predict(raw_features)?;
+        Ok(raw.clamp(self.min_len, self.max_len))
+    }
+
+    /// Score plus the feature vector (the scheduler logs both).
+    pub fn score_with_features(&self, text: &str) -> Result<(f64, [f64; rules::N_FEATURES])> {
+        let feats = self.features(text);
+        let raw = self.regressor.predict(&feats)?;
+        Ok((raw.clamp(self.min_len, self.max_len), feats))
+    }
+
+    /// The paper's weighted-rule baseline (Fig. 2c): linear model over
+    /// the feature vector.
+    pub fn weighted_rule(&self, text: &str, coef: &[f64], intercept: f64) -> f64 {
+        let feats = self.features(text);
+        feats.iter().zip(coef).map(|(f, c)| f * c).sum::<f64>() + intercept
+    }
+
+    pub fn lexicon(&self) -> &Lexicon {
+        &self.lexicon
+    }
+}

@@ -1,0 +1,12 @@
+//! Application-level uncertainty quantification (paper Sec. III-B):
+//! RULEGEN rule scorers, the LW regressor, and the combined estimator
+//! that maps an input text to its uncertainty score (predicted output
+//! length) on the scheduling hot path.
+
+pub mod estimator;
+pub mod regressor;
+pub mod rules;
+
+pub use estimator::Estimator;
+pub use regressor::Regressor;
+pub use rules::{features, rule_scores, single_rule_score, N_FEATURES};

@@ -1,0 +1,158 @@
+//! Native evaluation of the LW uncertainty regressor.
+//!
+//! The scheduling hot path runs the MLP directly in rust (a handful of
+//! small matvecs, microseconds per task) instead of dispatching a PJRT
+//! execution per request; the PJRT-executed HLO variant is kept for
+//! validation (`runtime` tests assert both paths agree on the same
+//! weights).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::bundle::{Bundle, Dtype};
+
+/// Weights of one dense layer (row-major [fan_in, fan_out]).
+#[derive(Clone, Debug)]
+struct Layer {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    fan_in: usize,
+    fan_out: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Regressor {
+    layers: Vec<Layer>,
+    feature_scales: Vec<f64>,
+}
+
+impl Regressor {
+    /// Build from a tensor bundle with tensors named w0,b0,w1,b1,...
+    pub fn from_bundle(bundle: &Bundle, feature_scales: &[f64]) -> Result<Regressor> {
+        let mut layers = Vec::new();
+        let mut i = 0;
+        loop {
+            let (Some(w), Some(b)) = (bundle.get(&format!("w{i}")), bundle.get(&format!("b{i}")))
+            else {
+                break;
+            };
+            ensure!(w.dtype == Dtype::F32 && b.dtype == Dtype::F32, "regressor weights must be f32");
+            ensure!(w.dims.len() == 2 && b.dims.len() == 1, "bad regressor tensor ranks");
+            ensure!(w.dims[1] == b.dims[0], "layer {i}: w/b shape mismatch");
+            layers.push(Layer {
+                w: w.as_f32()?.to_vec(),
+                b: b.as_f32()?.to_vec(),
+                fan_in: w.dims[0],
+                fan_out: w.dims[1],
+            });
+            i += 1;
+        }
+        ensure!(!layers.is_empty(), "no regressor layers in bundle");
+        ensure!(
+            layers.last().unwrap().fan_out == 1,
+            "regressor head must output 1 unit"
+        );
+        ensure!(
+            layers[0].fan_in == feature_scales.len(),
+            "feature count mismatch: regressor expects {}, scales have {}",
+            layers[0].fan_in,
+            feature_scales.len()
+        );
+        Ok(Regressor { layers, feature_scales: feature_scales.to_vec() })
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.layers[0].fan_in
+    }
+
+    /// Predict the output length for one raw (unnormalised) feature vector.
+    pub fn predict(&self, raw_features: &[f64]) -> Result<f64> {
+        if raw_features.len() != self.n_features() {
+            return Err(anyhow!(
+                "expected {} features, got {}",
+                self.n_features(),
+                raw_features.len()
+            ));
+        }
+        let mut h: Vec<f32> = raw_features
+            .iter()
+            .zip(&self.feature_scales)
+            .map(|(x, s)| (*x / *s) as f32)
+            .collect();
+        let n_layers = self.layers.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut out = layer.b.clone();
+            for (i, &x) in h.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let row = &layer.w[i * layer.fan_out..(i + 1) * layer.fan_out];
+                for (o, &wv) in out.iter_mut().zip(row) {
+                    *o += x * wv;
+                }
+            }
+            if li + 1 < n_layers {
+                for o in &mut out {
+                    *o = o.max(0.0);
+                }
+            }
+            h = out;
+        }
+        Ok(h[0] as f64)
+    }
+
+    /// Batch predict (used by calibration / figure harness).
+    pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::bundle::{Bundle, Tensor};
+
+    fn tiny_regressor() -> Regressor {
+        // identity-ish: 2 features -> 1 output, w = [[1], [2]], b = [0.5]
+        let bundle = Bundle::from_tensors(vec![
+            Tensor::f32("w0", vec![2, 1], vec![1.0, 2.0]),
+            Tensor::f32("b0", vec![1], vec![0.5]),
+        ]);
+        Regressor::from_bundle(&bundle, &[1.0, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn linear_layer_math() {
+        let r = tiny_regressor();
+        let y = r.predict(&[3.0, 4.0]).unwrap();
+        assert!((y - (3.0 + 8.0 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn feature_scaling_applied() {
+        let bundle = Bundle::from_tensors(vec![
+            Tensor::f32("w0", vec![1, 1], vec![1.0]),
+            Tensor::f32("b0", vec![1], vec![0.0]),
+        ]);
+        let r = Regressor::from_bundle(&bundle, &[10.0]).unwrap();
+        assert!((r.predict(&[5.0]).unwrap() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_between_layers() {
+        // layer0: y = -x (fan 1->1), relu clamps to 0; layer1: z = y + 7
+        let bundle = Bundle::from_tensors(vec![
+            Tensor::f32("w0", vec![1, 1], vec![-1.0]),
+            Tensor::f32("b0", vec![1], vec![0.0]),
+            Tensor::f32("w1", vec![1, 1], vec![1.0]),
+            Tensor::f32("b1", vec![1], vec![7.0]),
+        ]);
+        let r = Regressor::from_bundle(&bundle, &[1.0]).unwrap();
+        assert!((r.predict(&[5.0]).unwrap() - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wrong_feature_count_errors() {
+        let r = tiny_regressor();
+        assert!(r.predict(&[1.0]).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! RULEGEN — the six rule-based uncertainty scorers.
+//!
+//! Exact mirror of `python/compile/rulegen.py`; every count and
+//! multiplier must stay identical (the goldens assert bit-equality of
+//! the resulting f64s). See the python module for the linguistic
+//! rationale of each rule.
+
+use crate::textgen::lexicon::{Lexicon, Tag};
+use crate::textgen::pos::pos_tag;
+use crate::textgen::tokenizer::tokenize;
+
+/// Six rule scores + input length.
+pub const N_FEATURES: usize = 7;
+
+fn contains_phrase(tokens: &[String], phrase: &[String]) -> bool {
+    if phrase.is_empty() || tokens.len() < phrase.len() {
+        return false;
+    }
+    tokens
+        .windows(phrase.len())
+        .any(|w| w.iter().zip(phrase).all(|(a, b)| a == b))
+}
+
+/// PP-attachment chains + relative clauses.
+pub fn structural_score(lex: &Lexicon, tokens: &[String], tags: &[Tag]) -> f64 {
+    let n_pp = tags.iter().filter(|t| **t == Tag::Adp).count();
+    let mut n_rel = 0usize;
+    for (i, tok) in tokens.iter().enumerate() {
+        if lex.relativizers.contains(tok.as_str()) && i > 0 && tags[i - 1] == Tag::Noun {
+            n_rel += 1;
+        }
+    }
+    4.0 * n_pp.saturating_sub(1) as f64 + 2.0 * n_rel as f64
+}
+
+/// Noun/verb-ambiguous words.
+pub fn syntactic_score(lex: &Lexicon, tokens: &[String], tags: &[Tag]) -> f64 {
+    let n_ambig = tokens.iter().filter(|t| lex.nv_ambiguous.contains(t.as_str())).count();
+    let mut score = 3.0 * n_ambig as f64;
+    if n_ambig > 0 && !tags.iter().any(|t| *t == Tag::Verb) {
+        score += 2.0;
+    }
+    score
+}
+
+/// Homonyms weighted by sense count.
+pub fn semantic_score(lex: &Lexicon, tokens: &[String], _tags: &[Tag]) -> f64 {
+    tokens
+        .iter()
+        .filter_map(|t| lex.homonyms.get(t.as_str()))
+        .map(|senses| 3.0 * (senses - 1) as f64)
+        .sum()
+}
+
+/// Broad topics and "tell me about"-style prompts.
+pub fn vague_score(lex: &Lexicon, tokens: &[String], _tags: &[Tag]) -> f64 {
+    let mut score = 0.0;
+    for phrase in &lex.vague_phrases {
+        if contains_phrase(tokens, phrase) {
+            score += 5.0;
+        }
+    }
+    score += 4.0 * tokens.iter().filter(|t| lex.vague_topics.contains(t.as_str())).count() as f64;
+    score += 2.0
+        * tokens.iter().filter(|t| lex.vague_adjectives.contains(t.as_str())).count() as f64;
+    score
+}
+
+/// Open-ended questions lacking a single definitive answer.
+pub fn open_score(lex: &Lexicon, tokens: &[String], _tags: &[Tag]) -> f64 {
+    let mut score = 0.0;
+    if let Some(first) = tokens.first() {
+        if lex.open_wh_starters.contains(first.as_str()) {
+            score += 3.0;
+            if tokens.iter().any(|t| t == "of") {
+                score += 2.0;
+            }
+        }
+    }
+    score += 3.0 * tokens.iter().filter(|t| lex.open_markers.contains(t.as_str())).count() as f64;
+    let think: Vec<String> = ["do", "you", "think"].iter().map(|s| s.to_string()).collect();
+    if contains_phrase(tokens, &think) {
+        score += 3.0;
+    }
+    score
+}
+
+/// Multiple sub-questions/topics demanding compound answers.
+pub fn multipart_score(lex: &Lexicon, tokens: &[String], _tags: &[Tag]) -> f64 {
+    let n_comma = tokens.iter().filter(|t| t.as_str() == ",").count();
+    let n_q = tokens.iter().filter(|t| t.as_str() == "?").count();
+    let is_question = n_q > 0
+        || tokens
+            .first()
+            .map(|t| lex.wh_words.contains(t.as_str()))
+            .unwrap_or(false);
+    let n_and = if is_question {
+        tokens.iter().filter(|t| t.as_str() == "and").count()
+    } else {
+        0
+    };
+    let n_marker = tokens.iter().filter(|t| lex.multipart_markers.contains(t.as_str())).count();
+    2.0 * n_comma as f64
+        + 2.0 * n_and as f64
+        + 4.0 * n_q.saturating_sub(1) as f64
+        + 3.0 * n_marker as f64
+}
+
+/// Six raw rule scores for an input text.
+pub fn rule_scores(lex: &Lexicon, text: &str) -> [f64; 6] {
+    let tokens = tokenize(text);
+    let tags = pos_tag(lex, &tokens);
+    [
+        structural_score(lex, &tokens, &tags),
+        syntactic_score(lex, &tokens, &tags),
+        semantic_score(lex, &tokens, &tags),
+        vague_score(lex, &tokens, &tags),
+        open_score(lex, &tokens, &tags),
+        multipart_score(lex, &tokens, &tags),
+    ]
+}
+
+/// Full feature vector: six scores + input length (clamped to
+/// `max_input_len`, the manifest's truncation limit).
+pub fn features(lex: &Lexicon, text: &str, max_input_len: usize) -> [f64; N_FEATURES] {
+    let tokens = tokenize(text);
+    let tags = pos_tag(lex, &tokens);
+    [
+        structural_score(lex, &tokens, &tags),
+        syntactic_score(lex, &tokens, &tags),
+        semantic_score(lex, &tokens, &tags),
+        vague_score(lex, &tokens, &tags),
+        open_score(lex, &tokens, &tags),
+        multipart_score(lex, &tokens, &tags),
+        tokens.len().min(max_input_len) as f64,
+    ]
+}
+
+/// The paper's "single rule" heuristic (Fig. 2b): dominant rule score,
+/// falling back to input length when no pattern fires.
+pub fn single_rule_score(lex: &Lexicon, text: &str, max_input_len: usize) -> f64 {
+    let f = features(lex, text, max_input_len);
+    let best = f[..6].iter().copied().fold(0.0f64, f64::max);
+    if best > 0.0 {
+        best
+    } else {
+        f[6]
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw argument strings (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixes_styles() {
+        let a = parse(&["sim", "--alpha", "1.5", "--quiet", "--b=2.0", "trailing"]);
+        assert_eq!(a.positional, vec!["sim", "trailing"]);
+        assert_eq!(a.get("alpha"), Some("1.5"));
+        assert_eq!(a.get("b"), Some("2.0"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("alpha"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--x", "2.5", "--n", "7"]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("missing", 9.0).unwrap(), 9.0);
+        assert!(parse(&["--x", "abc"]).get_f64("x", 0.0).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Foundation utilities built in-tree because the offline crate set has
+//! no serde/clap/rand/proptest: a minimal JSON value model, a PCG64 RNG,
+//! a CLI argument parser, and a tiny property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}

@@ -1,0 +1,67 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! crate set).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs from independent seeds; on failure it reports the seed so the
+//! case can be replayed deterministically. No shrinking — generators
+//! should keep inputs small instead.
+
+use super::rng::Pcg64;
+
+/// Run `prop` on `cases` random inputs. Panics (with the failing seed)
+/// on the first falsified case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::with_stream(0xC0FFEE ^ seed, seed);
+        let input = generate(&mut rng);
+        if !prop(&input) {
+            panic!("property '{name}' falsified at seed {seed} with input: {input:#?}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result`, so failures can
+/// carry a message.
+pub fn check_result<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::with_stream(0xC0FFEE ^ seed, seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property '{name}' falsified at seed {seed}: {msg}\ninput: {input:#?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("reverse-twice", 50, |rng| {
+            let n = rng.range_usize(0, 20);
+            (0..n).map(|_| rng.next_u64()).collect::<Vec<_>>()
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn fails_false_property() {
+        check("always-false", 5, |rng| rng.next_u64(), |_| false);
+    }
+}

@@ -1,0 +1,99 @@
+//! Corpus records produced by the python AOT build
+//! (`artifacts/corpus/*.jsonl`) — the synthetic stand-in for the paper's
+//! four HuggingFace dialogue datasets (see DESIGN.md §Substitutions).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{read_jsonl, Json};
+
+/// One utterance with its ground-truth length-oracle data.
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    pub text: String,
+    pub utype: String,
+    pub input_len: usize,
+    /// Cross-LM base output length.
+    pub base_len: usize,
+    /// Per-LM actual output length (the length oracle).
+    pub lens: BTreeMap<String, usize>,
+    /// RULEGEN features computed at build time (six scores + input len).
+    pub features: Vec<f64>,
+}
+
+impl WorkItem {
+    pub fn from_json(v: &Json) -> Result<WorkItem> {
+        let mut lens = BTreeMap::new();
+        for (model, len) in v.need_obj("lens")? {
+            lens.insert(
+                model.clone(),
+                len.as_f64().ok_or_else(|| anyhow!("bad length"))? as usize,
+            );
+        }
+        let features = v
+            .need_arr("features")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad feature")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(WorkItem {
+            text: v.need_str("text")?.to_string(),
+            utype: v.need_str("type")?.to_string(),
+            input_len: v.need_f64("input_len")? as usize,
+            base_len: v.need_f64("base_len")? as usize,
+            lens,
+            features,
+        })
+    }
+
+    pub fn len_for(&self, model: &str) -> usize {
+        self.lens.get(model).copied().unwrap_or(self.base_len)
+    }
+
+    /// Mean output length across all LMs (Fig. 2's y-axis).
+    pub fn mean_len(&self) -> f64 {
+        if self.lens.is_empty() {
+            return self.base_len as f64;
+        }
+        self.lens.values().map(|&l| l as f64).sum::<f64>() / self.lens.len() as f64
+    }
+}
+
+/// Load one corpus JSONL file.
+pub fn load(path: &Path) -> Result<Vec<WorkItem>> {
+    read_jsonl(path)?.iter().map(WorkItem::from_json).collect()
+}
+
+/// Load and concatenate several corpus files.
+pub fn load_many<'a>(paths: impl IntoIterator<Item = &'a std::path::PathBuf>) -> Result<Vec<WorkItem>> {
+    let mut out = Vec::new();
+    for p in paths {
+        out.extend(load(p)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_record() {
+        let line = r#"{"text":"hi there","type":"plain","input_len":2,"base_len":10,
+            "lens":{"t5":9,"bart":8},"features":[0,0,0,0,0,0,2]}"#;
+        let v = Json::parse(line).unwrap();
+        let item = WorkItem::from_json(&v).unwrap();
+        assert_eq!(item.text, "hi there");
+        assert_eq!(item.len_for("t5"), 9);
+        assert_eq!(item.len_for("unknown"), 10);
+        assert!((item.mean_len() - 8.5).abs() < 1e-9);
+        assert_eq!(item.features.len(), 7);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let v = Json::parse(r#"{"text":"x"}"#).unwrap();
+        assert!(WorkItem::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Adversarial "malicious" tasks (Sec. V-G).
+//!
+//! The paper crafts inputs with a white-box attack ([56]) that elongates
+//! LM outputs. The scheduler only observes the *consequence* — a task
+//! whose uncertainty features and true execution time are inflated — so
+//! the substitution appends maximally-open/multi-part clauses (raising
+//! the RULEGEN scores the same way the attack raises true uncertainty)
+//! and scales the oracle length accordingly.
+
+use crate::util::rng::Pcg64;
+
+use super::corpus::WorkItem;
+
+/// Output-length inflation factor for crafted tasks (Table V shows the
+/// attack roughly doubling-to-tripling response length).
+pub const LENGTH_FACTOR: f64 = 2.4;
+
+const TOPICS: [&str; 6] = ["art", "history", "society", "technology", "life", "culture"];
+const PAIRS: [(&str, &str); 4] =
+    [("cats", "dogs"), ("books", "movies"), ("cities", "villages"), ("coffee", "tea")];
+const ASPECTS: [&str; 6] = ["behavior", "diet", "culture", "cost", "history", "size"];
+
+/// Craft a malicious variant of a work item: adversarially suffixed
+/// text + inflated oracle lengths.
+pub fn craft(item: &WorkItem, max_output_len: usize, rng: &mut Pcg64) -> WorkItem {
+    let topic = rng.choice(&TOPICS);
+    let topic2 = rng.choice(&TOPICS);
+    let (a, b) = rng.choice(&PAIRS);
+    let asp1 = rng.choice(&ASPECTS);
+    let asp2 = rng.choice(&ASPECTS);
+    let suffix = format!(
+        " also , tell me about the {topic} of {topic2} , and what are the causes and \
+         consequences of {topic} ? how do {a} and {b} compare in {asp1} , {asp2} , and more ?"
+    );
+    let mut crafted = item.clone();
+    crafted.text.push_str(&suffix);
+    let inflate = |l: usize| -> usize {
+        (((l as f64) * LENGTH_FACTOR).round() as usize).min(max_output_len)
+    };
+    crafted.base_len = inflate(item.base_len);
+    for len in crafted.lens.values_mut() {
+        *len = (((*len as f64) * LENGTH_FACTOR).round() as usize).min(max_output_len);
+    }
+    // features are stale after the text edit; the task factory rescoring
+    // path recomputes them, but keep them monotone for feature-driven
+    // callers too.
+    crafted.features = vec![];
+    crafted
+}
+
+/// Replace a `ratio` fraction of items (chosen at random) with crafted
+/// variants. Returns the new list and how many were crafted.
+pub fn inject(
+    items: &[WorkItem],
+    ratio: f64,
+    max_output_len: usize,
+    seed: u64,
+) -> (Vec<WorkItem>, usize) {
+    let mut rng = Pcg64::new(seed ^ 0xBADC0DE);
+    let n_malicious = ((items.len() as f64) * ratio.clamp(0.0, 1.0)).round() as usize;
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    rng.shuffle(&mut idx);
+    let mut out = items.to_vec();
+    for &i in idx.iter().take(n_malicious) {
+        out[i] = craft(&items[i], max_output_len, &mut rng);
+    }
+    (out, n_malicious)
+}
+
+/// Marks which outputs of [`inject`] were crafted (text-based, used by
+/// the task factory to set `Task::malicious`).
+pub fn is_crafted(item: &WorkItem) -> bool {
+    item.features.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn item() -> WorkItem {
+        WorkItem {
+            text: "i love pizza .".into(),
+            utype: "plain".into(),
+            input_len: 4,
+            base_len: 12,
+            lens: BTreeMap::from([("t5".to_string(), 10)]),
+            features: vec![0.0; 7],
+        }
+    }
+
+    #[test]
+    fn craft_inflates_lengths() {
+        let mut rng = Pcg64::new(0);
+        let crafted = craft(&item(), 96, &mut rng);
+        assert!(crafted.base_len > 12);
+        assert_eq!(crafted.base_len, 29); // 12 * 2.4 = 28.8 -> 29
+        assert_eq!(crafted.lens["t5"], 24);
+        assert!(crafted.text.len() > item().text.len());
+        assert!(is_crafted(&crafted));
+    }
+
+    #[test]
+    fn craft_clamps_to_max() {
+        let mut big = item();
+        big.base_len = 90;
+        let mut rng = Pcg64::new(0);
+        let crafted = craft(&big, 96, &mut rng);
+        assert_eq!(crafted.base_len, 96);
+    }
+
+    #[test]
+    fn inject_ratio_respected() {
+        let items = vec![item(); 100];
+        for ratio in [0.0, 0.3, 1.0] {
+            let (out, n) = inject(&items, ratio, 96, 5);
+            assert_eq!(n, (100.0 * ratio) as usize);
+            assert_eq!(out.iter().filter(|i| is_crafted(i)).count(), n);
+        }
+    }
+}

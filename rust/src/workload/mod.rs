@@ -1,0 +1,15 @@
+//! Workload engine: corpus loading, Poisson arrival traces (Sec. V-A
+//! "Workload setup"), uncertainty-variance subsets (Sec. V-B), and the
+//! adversarial "malicious task" generator (Sec. V-G).
+
+pub mod corpus;
+pub mod malicious;
+pub mod subsets;
+pub mod synth;
+pub mod tasks;
+pub mod trace;
+
+pub use corpus::WorkItem;
+pub use synth::SynthGenerator;
+pub use tasks::TaskFactory;
+pub use trace::ArrivalTrace;

@@ -1,0 +1,131 @@
+//! Uncertainty-variance subsets (Sec. V-B): the paper evaluates every
+//! policy on task subsets with *small*, *normal*, and *large* variance
+//! of uncertainty scores — uncertainty-aware scheduling only pays off
+//! when execution times actually vary.
+
+use crate::util::rng::Pcg64;
+
+use super::corpus::WorkItem;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variance {
+    Small,
+    Normal,
+    Large,
+}
+
+impl Variance {
+    pub const ALL: [Variance; 3] = [Variance::Small, Variance::Normal, Variance::Large];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variance::Small => "Small",
+            Variance::Normal => "Normal",
+            Variance::Large => "Large",
+        }
+    }
+}
+
+/// Draw `n` items with the requested uncertainty-score spread.
+///
+/// `scores[i]` is the uncertainty score of `items[i]` (any monotone
+/// execution-time proxy works). Selection:
+/// - Small: the middle band (40th-60th percentile) — near-uniform work.
+/// - Normal: the 15th-85th percentile band — the natural mix.
+/// - Large: stratified across the full range with oversampled tails.
+pub fn select(
+    items: &[WorkItem],
+    scores: &[f64],
+    variance: Variance,
+    n: usize,
+    seed: u64,
+) -> Vec<WorkItem> {
+    assert_eq!(items.len(), scores.len());
+    assert!(!items.is_empty());
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+
+    let mut rng = Pcg64::new(seed ^ 0x5b5e7);
+    let pick_band = |rng: &mut Pcg64, lo: f64, hi: f64| -> usize {
+        let lo_i = ((items.len() as f64) * lo) as usize;
+        let hi_i = (((items.len() as f64) * hi) as usize).max(lo_i + 1).min(items.len());
+        order[rng.range_usize(lo_i, hi_i)]
+    };
+
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let idx = match variance {
+            Variance::Small => pick_band(&mut rng, 0.40, 0.60),
+            Variance::Normal => pick_band(&mut rng, 0.15, 0.85),
+            Variance::Large => {
+                // thirds: low tail, middle, high tail
+                match i % 3 {
+                    0 => pick_band(&mut rng, 0.0, 0.15),
+                    1 => pick_band(&mut rng, 0.15, 0.85),
+                    _ => pick_band(&mut rng, 0.85, 1.0),
+                }
+            }
+        };
+        out.push(items[idx].clone());
+    }
+    rng.shuffle(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn items_with_lens(lens: &[usize]) -> Vec<WorkItem> {
+        lens.iter()
+            .map(|&l| WorkItem {
+                text: String::new(),
+                utype: "plain".into(),
+                input_len: 5,
+                base_len: l,
+                lens: BTreeMap::new(),
+                features: vec![0.0; 7],
+            })
+            .collect()
+    }
+
+    fn variance_of(items: &[WorkItem]) -> f64 {
+        let xs: Vec<f64> = items.iter().map(|i| i.base_len as f64).collect();
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+    }
+
+    #[test]
+    fn variance_ordering_holds() {
+        let lens: Vec<usize> = (4..=96).collect();
+        let items = items_with_lens(&lens);
+        let scores: Vec<f64> = items.iter().map(|i| i.base_len as f64).collect();
+        let small = select(&items, &scores, Variance::Small, 300, 1);
+        let normal = select(&items, &scores, Variance::Normal, 300, 1);
+        let large = select(&items, &scores, Variance::Large, 300, 1);
+        let (vs, vn, vl) = (variance_of(&small), variance_of(&normal), variance_of(&large));
+        assert!(vs < vn, "small {vs} !< normal {vn}");
+        assert!(vn < vl, "normal {vn} !< large {vl}");
+    }
+
+    #[test]
+    fn returns_requested_count() {
+        let items = items_with_lens(&[1, 2, 3]);
+        let scores = vec![1.0, 2.0, 3.0];
+        assert_eq!(select(&items, &scores, Variance::Large, 50, 0).len(), 50);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let lens: Vec<usize> = (4..=60).collect();
+        let items = items_with_lens(&lens);
+        let scores: Vec<f64> = items.iter().map(|i| i.base_len as f64).collect();
+        let a = select(&items, &scores, Variance::Normal, 40, 9);
+        let b = select(&items, &scores, Variance::Normal, 40, 9);
+        assert_eq!(
+            a.iter().map(|i| i.base_len).collect::<Vec<_>>(),
+            b.iter().map(|i| i.base_len).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! Rust-native synthetic utterance generator.
+//!
+//! Mirrors `python/compile/corpus.py`'s templates over the shared
+//! lexicon export, so the serving demos (TCP front-end, infinite
+//! workloads) can fabricate fresh inputs at runtime without touching the
+//! corpus files. Statistical twin of the python generator — same pools,
+//! same template shapes — though not bit-identical (different RNG).
+
+use std::sync::Arc;
+
+use crate::config::manifest::LengthModel;
+use crate::textgen::Lexicon;
+use crate::util::rng::Pcg64;
+
+use super::corpus::WorkItem;
+
+/// Static pools shared with the python generator for words the lexicon
+/// export does not carry as separate lists.
+const PLAIN_SUBJECTS: [&str; 6] = ["i", "you", "we", "they", "he", "she"];
+const PLAIN_VERBS: [&str; 6] = ["like", "love", "enjoy", "want", "have", "prefer"];
+const PLAIN_OBJECTS: [&str; 10] = [
+    "pizza", "coffee", "books", "movies", "music", "dogs", "cats", "games", "tea", "sports",
+];
+const CONCRETE_NOUNS: [&str; 8] =
+    ["boy", "girl", "dog", "cat", "telescope", "book", "camera", "umbrella"];
+const PLACES: [&str; 6] = ["park", "garden", "street", "school", "market", "beach"];
+const COUNTRY_TOPICS: [&str; 4] =
+    ["developing countries", "modern cities", "rural areas", "small towns"];
+const COMPARE_PAIRS: [(&str, &str); 4] =
+    [("cats", "dogs"), ("books", "movies"), ("coffee", "tea"), ("cities", "villages")];
+const COMPARE_ASPECTS: [&str; 6] = ["behavior", "diet", "cost", "culture", "history", "size"];
+
+pub struct SynthGenerator {
+    lexicon: Arc<Lexicon>,
+    length_model: LengthModel,
+    rng: Pcg64,
+}
+
+impl SynthGenerator {
+    pub fn new(lexicon: Arc<Lexicon>, length_model: LengthModel, seed: u64) -> SynthGenerator {
+        SynthGenerator { lexicon, length_model, rng: Pcg64::new(seed ^ 0x517417) }
+    }
+
+    fn pick<'a>(&mut self, pool: &'a [String]) -> &'a str {
+        pool[self.rng.range_usize(0, pool.len())].as_str()
+    }
+
+    fn pick_set(&mut self, set: &std::collections::HashSet<String>) -> String {
+        let items: Vec<&String> = set.iter().collect();
+        items[self.rng.range_usize(0, items.len())].clone()
+    }
+
+    /// Generate an utterance of the given uncertainty type.
+    pub fn utterance(&mut self, utype: &str) -> String {
+        let vague: Vec<String> = {
+            let mut v: Vec<String> = self.lexicon.vague_topics.iter().cloned().collect();
+            v.sort(); // deterministic order for the seeded picks
+            v
+        };
+        match utype {
+            "structural" => {
+                let subj = *self.rng.choice(&PLAIN_SUBJECTS);
+                let n1 = *self.rng.choice(&CONCRETE_NOUNS);
+                let place = *self.rng.choice(&PLACES);
+                let n2 = *self.rng.choice(&CONCRETE_NOUNS);
+                format!("{subj} saw a {n1} in the {place} with a {n2} .")
+            }
+            "syntactic" => {
+                let mut nv: Vec<String> = self.lexicon.nv_ambiguous.iter().cloned().collect();
+                nv.sort();
+                let w1 = self.pick(&nv).to_string();
+                let w2 = self.pick(&nv).to_string();
+                format!("rice {w1} {w2} fast .")
+            }
+            "semantic" => {
+                let mut homonyms: Vec<String> = self.lexicon.homonyms.keys().cloned().collect();
+                homonyms.sort();
+                let h = self.pick(&homonyms).to_string();
+                format!("what's the best way to deal with {h} ?")
+            }
+            "vague" => {
+                let t1 = self.pick(&vague).to_string();
+                let t2 = self.pick(&vague).to_string();
+                format!("tell me about the {t1} of {t2} .")
+            }
+            "open" => {
+                let marker = self.pick_set(&self.lexicon.open_markers.clone());
+                let marker2 = self.pick_set(&self.lexicon.open_markers.clone());
+                let wher = *self.rng.choice(&COUNTRY_TOPICS);
+                format!("what are the {marker} and {marker2} of poverty in {wher} ?")
+            }
+            "multipart" => {
+                let (a, b) = *self.rng.choice(&COMPARE_PAIRS);
+                let a1 = *self.rng.choice(&COMPARE_ASPECTS);
+                let a2 = *self.rng.choice(&COMPARE_ASPECTS);
+                let a3 = *self.rng.choice(&COMPARE_ASPECTS);
+                format!("how do {a} and {b} differ in {a1} , {a2} , and {a3} ?")
+            }
+            _ => {
+                let subj = *self.rng.choice(&PLAIN_SUBJECTS);
+                let verb = *self.rng.choice(&PLAIN_VERBS);
+                let obj = *self.rng.choice(&PLAIN_OBJECTS);
+                format!("{subj} {verb} {obj} .")
+            }
+        }
+    }
+
+    /// Generate a full work item: text + oracle lengths drawn from the
+    /// manifest's per-type length model (mirror of corpus.base_length).
+    pub fn work_item(&mut self, utype: &str, model_names: &[String]) -> WorkItem {
+        let text = self.utterance(utype);
+        let input_len = crate::textgen::tokenize(&text).len();
+        let (mean, std) = self
+            .length_model
+            .per_type
+            .get(utype)
+            .copied()
+            .unwrap_or((16.0, 4.0));
+        let raw = self.rng.normal(mean, std) + self.length_model.input_coef * input_len as f64;
+        let base = raw.round().clamp(4.0, 96.0) as usize;
+        let mut lens = std::collections::BTreeMap::new();
+        for name in model_names {
+            let noisy = base as f64 + self.rng.normal(0.0, self.length_model.noise_std);
+            lens.insert(name.clone(), noisy.round().clamp(4.0, 96.0) as usize);
+        }
+        WorkItem {
+            text,
+            utype: utype.to_string(),
+            input_len,
+            base_len: base,
+            lens,
+            features: vec![], // runtime path rescoring computes these
+        }
+    }
+
+    /// An endless stream cycling through the type mixture.
+    pub fn stream(&mut self, types: &[String], n: usize, model_names: &[String]) -> Vec<WorkItem> {
+        (0..n)
+            .map(|_| {
+                let utype = types[self.rng.range_usize(0, types.len())].clone();
+                self.work_item(&utype, model_names)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/sim_scenarios.rs (needs the
+    // lexicon artifact); pure-logic pieces are covered there.
+}

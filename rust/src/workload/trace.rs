@@ -1,0 +1,132 @@
+//! Poisson arrival traces (Sec. V-A): inter-arrival times sampled from
+//! an exponential distribution whose rate beta (queries/minute) evolves
+//! over time — the paper iterates integer beta from 10 to 150, one
+//! minute each, covering light-load through high-traffic peaks.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ArrivalTrace {
+    /// Absolute arrival times in seconds, ascending.
+    pub times: Vec<f64>,
+}
+
+impl ArrivalTrace {
+    /// Fixed-rate Poisson trace: `n` arrivals at `beta` queries/minute.
+    pub fn poisson_fixed(n: usize, beta: f64, seed: u64) -> ArrivalTrace {
+        let mut rng = Pcg64::new(seed);
+        let mean_gap = 60.0 / beta.max(1e-9);
+        let mut t = 0.0;
+        let times = (0..n)
+            .map(|_| {
+                t += rng.exponential(mean_gap);
+                t
+            })
+            .collect();
+        ArrivalTrace { times }
+    }
+
+    /// Time-varying trace: beta sweeps `beta_lo..=beta_hi` in integer
+    /// steps, one simulated minute per step, cycling until `n` arrivals
+    /// are generated (the paper's 10..150 sweep).
+    pub fn poisson_sweep(n: usize, beta_lo: u32, beta_hi: u32, seed: u64) -> ArrivalTrace {
+        Self::poisson_sweep_scaled(n, beta_lo, beta_hi, 60.0, seed)
+    }
+
+    /// Like [`poisson_sweep`] but each beta step lasts `step_secs`
+    /// instead of a full minute. With small task counts the plain sweep
+    /// never leaves the light-load phase; compressing the step makes `n`
+    /// arrivals cover the whole light-to-peak range, preserving the
+    /// paper's workload *shape* at reduced scale.
+    pub fn poisson_sweep_scaled(
+        n: usize,
+        beta_lo: u32,
+        beta_hi: u32,
+        step_secs: f64,
+        seed: u64,
+    ) -> ArrivalTrace {
+        assert!(beta_lo >= 1 && beta_hi >= beta_lo && step_secs > 0.0);
+        let mut rng = Pcg64::new(seed);
+        let mut times = Vec::with_capacity(n);
+        let mut step_start = 0.0;
+        let mut beta = beta_lo;
+        let mut t = 0.0;
+        while times.len() < n {
+            let mean_gap = 60.0 / beta as f64;
+            // sample arrivals within this beta step
+            loop {
+                let gap = rng.exponential(mean_gap);
+                if t + gap >= step_start + step_secs {
+                    t = step_start + step_secs;
+                    break;
+                }
+                t += gap;
+                times.push(t);
+                if times.len() == n {
+                    break;
+                }
+            }
+            step_start += step_secs;
+            beta = if beta >= beta_hi { beta_lo } else { beta + 1 };
+        }
+        ArrivalTrace { times }
+    }
+
+    /// Step duration that makes one full `beta_lo..=beta_hi` sweep emit
+    /// roughly `n` arrivals.
+    pub fn sweep_step_for(n: usize, beta_lo: u32, beta_hi: u32) -> f64 {
+        let total_rate: f64 = (beta_lo..=beta_hi).map(|b| b as f64).sum::<f64>() / 60.0;
+        (n as f64 / total_rate).max(0.5)
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.times.last().copied().unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_trace_is_sorted_and_sized() {
+        let t = ArrivalTrace::poisson_fixed(500, 60.0, 1);
+        assert_eq!(t.len(), 500);
+        assert!(t.times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn fixed_trace_rate_approximately_beta() {
+        let t = ArrivalTrace::poisson_fixed(5000, 120.0, 2);
+        let rate_per_min = 5000.0 / (t.duration() / 60.0);
+        assert!((rate_per_min - 120.0).abs() < 12.0, "rate {rate_per_min}");
+    }
+
+    #[test]
+    fn sweep_trace_accelerates() {
+        let t = ArrivalTrace::poisson_sweep(2000, 10, 150, 3);
+        assert_eq!(t.len(), 2000);
+        assert!(t.times.windows(2).all(|w| w[0] <= w[1]));
+        // early minutes (low beta) must be sparser than later ones
+        let early = t.times.iter().filter(|&&x| x < 60.0).count();
+        let later = t.times.iter().filter(|&&x| (600.0..660.0).contains(&x)).count();
+        if later > 0 {
+            assert!(later > early, "early {early} later {later}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ArrivalTrace::poisson_sweep(100, 10, 50, 7);
+        let b = ArrivalTrace::poisson_sweep(100, 10, 50, 7);
+        assert_eq!(a.times, b.times);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cross-language contract tests: the rust tokenizer / PoS tagger /
+//! vocabulary / RULEGEN scorers must agree *exactly* with the python
+//! build path, verified against goldens emitted by `aot.py`.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+
+use rtlm::config::Manifest;
+use rtlm::textgen::pos::pos_tag;
+use rtlm::textgen::{tokenize, Lexicon, Tag, Vocab};
+use rtlm::uncertainty::rules;
+use rtlm::util::json::read_jsonl;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = std::env::var("RTLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", root.display());
+        None
+    }
+}
+
+#[test]
+fn goldens_match_python_exactly() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).expect("manifest");
+    let lexicon = Lexicon::load(&manifest.lexicon).expect("lexicon");
+    let vocab = Vocab::from_lexicon(&lexicon, manifest.vocab_size).expect("vocab");
+    let goldens = read_jsonl(&manifest.golden_textproc).expect("goldens");
+    assert!(goldens.len() > 100, "suspiciously few goldens: {}", goldens.len());
+
+    for (i, rec) in goldens.iter().enumerate() {
+        let text = rec.get("text").as_str().expect("text");
+
+        // tokenizer
+        let want_tokens: Vec<&str> = rec
+            .get("tokens")
+            .as_arr()
+            .expect("tokens")
+            .iter()
+            .map(|t| t.as_str().unwrap())
+            .collect();
+        let got_tokens = tokenize(text);
+        assert_eq!(got_tokens, want_tokens, "golden {i} tokens for {text:?}");
+
+        // PoS tags
+        let want_tags: Vec<&str> = rec
+            .get("tags")
+            .as_arr()
+            .expect("tags")
+            .iter()
+            .map(|t| t.as_str().unwrap())
+            .collect();
+        let got_tags: Vec<&str> =
+            pos_tag(&lexicon, &got_tokens).iter().map(Tag::as_str).collect();
+        assert_eq!(got_tags, want_tags, "golden {i} tags for {text:?}");
+
+        // vocabulary ids
+        let want_ids: Vec<i32> = rec
+            .get("ids")
+            .as_arr()
+            .expect("ids")
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        let got_ids = vocab.encode(text, None);
+        assert_eq!(got_ids, want_ids, "golden {i} ids for {text:?}");
+
+        // RULEGEN features (exact f64 equality: both sides compute the
+        // same integer counts with the same multipliers)
+        let want_feats: Vec<f64> = rec
+            .get("features")
+            .as_arr()
+            .expect("features")
+            .iter()
+            .map(|t| t.as_f64().unwrap())
+            .collect();
+        let got_feats = rules::features(&lexicon, text, manifest.max_input_len);
+        assert_eq!(got_feats.len(), want_feats.len());
+        for (j, (got, want)) in got_feats.iter().zip(&want_feats).enumerate() {
+            assert_eq!(
+                got, want,
+                "golden {i} feature {j} ({}) for {text:?}",
+                manifest.feature_names[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_table1_examples_score_their_own_category() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).expect("manifest");
+    let lexicon = Lexicon::load(&manifest.lexicon).expect("lexicon");
+    let cases = [
+        (0, "John saw a boy in the park with a telescope."),
+        (1, "Rice flies like sand."),
+        (2, "What's the best way to deal with bats?"),
+        (3, "Tell me about the history of art."),
+        (4, "What are the causes and consequences of poverty in developing countries?"),
+        (5, "How do cats and dogs differ in behavior, diet, and social interaction?"),
+    ];
+    for (idx, text) in cases {
+        let feats = rules::features(&lexicon, text, manifest.max_input_len);
+        assert!(feats[idx] > 0.0, "{text:?} should fire scorer {idx}: {feats:?}");
+    }
+}
+
+#[test]
+fn vocab_covers_corpus() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).expect("manifest");
+    let lexicon = Lexicon::load(&manifest.lexicon).expect("lexicon");
+    let vocab = Vocab::from_lexicon(&lexicon, manifest.vocab_size).expect("vocab");
+    let items = rtlm::workload::corpus::load(&manifest.corpus_observation).expect("corpus");
+    let mut n_unk = 0;
+    let mut n_tok = 0;
+    for item in &items {
+        for id in vocab.encode(&item.text, None) {
+            n_tok += 1;
+            if id == rtlm::textgen::vocab::UNK_ID {
+                n_unk += 1;
+            }
+        }
+    }
+    assert_eq!(n_unk, 0, "corpus produced {n_unk}/{n_tok} <unk> tokens");
+}

@@ -1,0 +1,150 @@
+//! Runtime integration: the PJRT-executed HLO artifacts must agree with
+//! the native-rust implementations and behave deterministically.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rtlm::model::LmSession;
+use rtlm::runtime::client::f32_literal;
+use rtlm::runtime::ArtifactStore;
+
+fn open_store() -> Option<Arc<ArtifactStore>> {
+    let root = std::env::var("RTLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", root.display());
+        return None;
+    }
+    Some(Arc::new(ArtifactStore::open(&root).expect("open store")))
+}
+
+#[test]
+fn regressor_hlo_matches_native() {
+    let Some(store) = open_store() else { return };
+    let m = &store.manifest;
+    let reg = &m.regressor;
+    let bucket = *reg.hlo.keys().min().expect("regressor buckets");
+    let exe = store.executable(&reg.hlo[&bucket]).expect("compile regressor");
+
+    // weights as literals, in manifest order
+    let bundle = store.bundle(&reg.weights).expect("bundle");
+    let mut args: Vec<xla::Literal> = Vec::new();
+    for name in &reg.param_names {
+        args.push(bundle.get(name).expect("weight").to_literal().expect("literal"));
+    }
+    let n_feats = m.feature_names.len();
+    let feats: Vec<f64> = vec![2.0, 0.0, 6.0, 4.0, 3.0, 1.0, 12.0];
+    assert_eq!(feats.len(), n_feats);
+    let mut flat = vec![0f32; bucket * n_feats];
+    flat[..n_feats].copy_from_slice(&feats.iter().map(|&x| x as f32).collect::<Vec<_>>());
+    args.push(f32_literal(&flat, &[bucket as i64, n_feats as i64]).unwrap());
+
+    let outs = exe.run(&args).expect("run regressor hlo");
+    assert_eq!(outs.len(), 1);
+    let pred_hlo = outs[0].to_vec::<f32>().expect("to_vec")[0] as f64;
+
+    let pred_native = store.regressor.predict(&feats).expect("native predict");
+    assert!(
+        (pred_hlo - pred_native).abs() < 1e-3,
+        "HLO {pred_hlo} vs native {pred_native}"
+    );
+}
+
+#[test]
+fn generate_respects_target_lengths_and_is_deterministic() {
+    let Some(store) = open_store() else { return };
+    let model = store.manifest.model_names()[0].clone();
+    let session = LmSession::new(store.clone(), &model).expect("session");
+
+    let prompts = vec![
+        store.vocab.encode("tell me about the history of art .", Some(64)),
+        store.vocab.encode("i love pizza .", Some(64)),
+        store.vocab.encode("how do cats and dogs differ ?", Some(64)),
+    ];
+    let lens = vec![12usize, 5, 9];
+    let out1 = session.generate(&prompts, &lens).expect("generate");
+    assert_eq!(out1.tokens.len(), 3);
+    for (toks, &want) in out1.tokens.iter().zip(&lens) {
+        assert_eq!(toks.len(), want);
+        for &t in toks {
+            assert!((0..store.manifest.vocab_size as i32).contains(&t));
+        }
+    }
+    assert_eq!(out1.steps, 12);
+
+    let out2 = session.generate(&prompts, &lens).expect("generate again");
+    assert_eq!(out1.tokens, out2.tokens, "generation must be deterministic");
+}
+
+#[test]
+fn batched_generation_matches_solo_generation() {
+    // Batching must not change a row's output: decode attention masks
+    // other rows, padding rows are inert.
+    let Some(store) = open_store() else { return };
+    let model = store.manifest.model_names()[0].clone();
+    let session = LmSession::new(store.clone(), &model).expect("session");
+
+    let p1 = store.vocab.encode("what do you think about music ?", Some(64));
+    let p2 = store.vocab.encode("rice flies like sand .", Some(64));
+    let solo = session.generate(&[p1.clone()], &[8]).expect("solo");
+    let pair = session.generate(&[p1, p2], &[8, 8]).expect("pair");
+    assert_eq!(solo.tokens[0], pair.tokens[0], "batching changed row output");
+}
+
+#[test]
+fn session_timing_helpers_return_positive() {
+    let Some(store) = open_store() else { return };
+    let model = store.manifest.model_names()[0].clone();
+    let session = LmSession::new(store.clone(), &model).expect("session");
+    let entry = store.manifest.model(&model).unwrap();
+    let &b = entry.decode.keys().min().unwrap();
+    let secs = session.time_decode_step(b, 2).expect("time decode");
+    assert!(secs > 0.0 && secs < 10.0, "{secs}");
+}
+
+#[test]
+fn all_model_weight_bundles_match_param_names() {
+    let Some(store) = open_store() else { return };
+    for (name, entry) in &store.manifest.models {
+        let bundle = store.bundle(&entry.weights).expect("bundle");
+        for pname in &entry.param_names {
+            assert!(
+                bundle.get(pname).is_some(),
+                "model {name}: bundle missing param {pname}"
+            );
+        }
+        assert_eq!(
+            bundle.tensors.len(),
+            entry.param_names.len(),
+            "model {name}: bundle/param count mismatch"
+        );
+    }
+}
+
+#[test]
+fn chunked_generation_matches_single_step() {
+    // The K-token in-graph chunk path must produce exactly the same
+    // tokens as the one-step-at-a-time path it optimises.
+    let Some(store) = open_store() else { return };
+    let model = store.manifest.model_names()[0].clone();
+    if store.manifest.model(&model).unwrap().chunk_k == 0 {
+        eprintln!("skipping: artifacts built without decode chunks");
+        return;
+    }
+    std::env::set_var("RTLM_USE_CHUNKS", "1");
+    let chunked = LmSession::new(store.clone(), &model).expect("session");
+    let mut single = LmSession::new(store.clone(), &model).expect("session");
+    single.entry.chunk_k = 0; // force the single-step path
+
+    let prompts = vec![
+        store.vocab.encode("tell me about the history of art .", Some(64)),
+        store.vocab.encode("i love pizza .", Some(64)),
+    ];
+    let lens = vec![21usize, 11]; // crosses chunk boundaries + remainder
+    let a = chunked.generate(&prompts, &lens).expect("chunked");
+    let b = single.generate(&prompts, &lens).expect("single");
+    assert_eq!(a.tokens, b.tokens, "chunked path diverged from single-step path");
+}

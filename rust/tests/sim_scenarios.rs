@@ -1,0 +1,244 @@
+//! End-to-end simulation scenarios over the real corpus + regressor:
+//! the paper's qualitative claims must hold on this testbed.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rtlm::bench_harness::scenarios::ExperimentCtx;
+use rtlm::config::DeviceProfile;
+use rtlm::runtime::ArtifactStore;
+use rtlm::scheduler::PolicyKind;
+use rtlm::workload::malicious;
+use rtlm::workload::subsets::Variance;
+use rtlm::workload::{ArrivalTrace, TaskFactory};
+
+fn ctx() -> Option<ExperimentCtx> {
+    let root = std::env::var("RTLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", root.display());
+        return None;
+    }
+    let store = Arc::new(ArtifactStore::open(&root).expect("store"));
+    Some(ExperimentCtx::new(store, 300, 42).expect("ctx"))
+}
+
+#[test]
+fn rtlm_beats_fifo_on_large_variance() {
+    let Some(ctx) = ctx() else { return };
+    let dev = DeviceProfile::edge_server();
+    let mut wins = 0;
+    let n_models = ctx.manifest().models.len();
+    for name in ctx.manifest().model_names() {
+        let model = ctx.model(&name).unwrap().clone();
+        let tasks = ctx.scenario_tasks(&model, Variance::Large, 42).unwrap();
+        let fifo = ctx.run_policy(&model, tasks.clone(), PolicyKind::Fifo, &dev);
+        let rtlm = ctx.run_policy(&model, tasks, PolicyKind::RtLm, &dev);
+        if rtlm.mean_response() < fifo.mean_response() {
+            wins += 1;
+        }
+        eprintln!(
+            "{name}: FIFO {:.2}s vs RT-LM {:.2}s",
+            fifo.mean_response(),
+            rtlm.mean_response()
+        );
+    }
+    assert!(
+        wins >= n_models - 1,
+        "RT-LM should beat FIFO on large variance for nearly all models (won {wins}/{n_models})"
+    );
+}
+
+#[test]
+fn uncertainty_aware_advantage_grows_with_variance() {
+    let Some(ctx) = ctx() else { return };
+    let dev = DeviceProfile::edge_server();
+    let model = ctx.model("dialogpt").unwrap().clone();
+    let mut gaps = Vec::new();
+    for variance in [Variance::Small, Variance::Large] {
+        let tasks = ctx.scenario_tasks(&model, variance, 43).unwrap();
+        let fifo = ctx.run_policy(&model, tasks.clone(), PolicyKind::Fifo, &dev);
+        let rtlm = ctx.run_policy(&model, tasks, PolicyKind::RtLm, &dev);
+        gaps.push(fifo.mean_response() - rtlm.mean_response());
+    }
+    eprintln!("advantage small={:.3}s large={:.3}s", gaps[0], gaps[1]);
+    assert!(
+        gaps[1] > gaps[0] - 0.05,
+        "advantage should not shrink with variance: {gaps:?}"
+    );
+}
+
+#[test]
+fn throughput_ordering_matches_response_ordering() {
+    let Some(ctx) = ctx() else { return };
+    let dev = DeviceProfile::edge_server();
+    let model = ctx.model("godel").unwrap().clone();
+    let tasks = ctx.scenario_tasks(&model, Variance::Normal, 44).unwrap();
+    let fifo = ctx.run_policy(&model, tasks.clone(), PolicyKind::Fifo, &dev);
+    let rtlm = ctx.run_policy(&model, tasks, PolicyKind::RtLm, &dev);
+    // RT-LM should not lose throughput while improving response time
+    assert!(
+        rtlm.throughput_per_min() >= fifo.throughput_per_min() * 0.95,
+        "rtlm {:.1}/min vs fifo {:.1}/min",
+        rtlm.throughput_per_min(),
+        fifo.throughput_per_min()
+    );
+}
+
+#[test]
+fn rtlm_resilient_to_malicious_tasks() {
+    let Some(ctx) = ctx() else { return };
+    let dev = DeviceProfile::edge_server();
+    let model = ctx.model("dialogpt").unwrap().clone();
+    let factory = TaskFactory::new(
+        rtlm::uncertainty::Estimator::new(
+            ctx.store.lexicon.clone(),
+            ctx.store.regressor.clone(),
+            ctx.manifest().max_input_len,
+            ctx.manifest().min_output_len as f64,
+            ctx.manifest().max_output_len as f64,
+        ),
+        2.0,
+    );
+    let items = ctx.all_test_items();
+    let base: Vec<_> = items.into_iter().take(200).collect();
+
+    let mut rtlm_means = Vec::new();
+    let mut fifo_means = Vec::new();
+    for ratio in [0.0, 0.5] {
+        let (crafted, _) =
+            malicious::inject(&base, ratio, ctx.manifest().max_output_len, 7);
+        let step = ArrivalTrace::sweep_step_for(crafted.len(), 10, 150);
+        let trace = ArrivalTrace::poisson_sweep_scaled(crafted.len(), 10, 150, step, 7);
+        let tasks = factory.build_all(&crafted, &trace, &model, true).unwrap();
+        let fifo = ctx.run_policy(&model, tasks.clone(), PolicyKind::Fifo, &dev);
+        let rtlm = ctx.run_policy(&model, tasks, PolicyKind::RtLm, &dev);
+        fifo_means.push(fifo.mean_response());
+        rtlm_means.push(rtlm.mean_response());
+    }
+    let fifo_degradation = fifo_means[1] / fifo_means[0].max(1e-9);
+    let rtlm_degradation = rtlm_means[1] / rtlm_means[0].max(1e-9);
+    eprintln!(
+        "malicious 0%->50%: FIFO {:.2}->{:.2} ({fifo_degradation:.2}x), \
+         RT-LM {:.2}->{:.2} ({rtlm_degradation:.2}x)",
+        fifo_means[0], fifo_means[1], rtlm_means[0], rtlm_means[1]
+    );
+    assert!(
+        rtlm_degradation < fifo_degradation,
+        "RT-LM should degrade less than FIFO under attack"
+    );
+}
+
+#[test]
+fn crafted_tasks_rescore_higher() {
+    let Some(ctx) = ctx() else { return };
+    let items = ctx.all_test_items();
+    let mut rng = rtlm::util::rng::Pcg64::new(3);
+    let mut higher = 0;
+    let mut total = 0;
+    for item in items.iter().take(100) {
+        let crafted = malicious::craft(item, ctx.manifest().max_output_len, &mut rng);
+        let u_base = ctx.estimator.score(&item.text).unwrap();
+        let u_crafted = ctx.estimator.score(&crafted.text).unwrap();
+        total += 1;
+        if u_crafted > u_base {
+            higher += 1;
+        }
+    }
+    assert!(
+        higher as f64 / total as f64 > 0.9,
+        "crafted tasks should rescore higher ({higher}/{total})"
+    );
+}
+
+#[test]
+fn offline_decisions_are_sane() {
+    let Some(ctx) = ctx() else { return };
+    for (name, &c) in &ctx.batch_sizes {
+        assert!((1..=32).contains(&c), "{name}: C_f = {c}");
+    }
+    for (name, &tau) in &ctx.taus {
+        assert!(
+            tau > ctx.manifest().min_output_len as f64 && tau <= ctx.manifest().max_output_len as f64,
+            "{name}: tau = {tau}"
+        );
+    }
+}
+
+#[test]
+fn synth_generator_produces_scorable_utterances() {
+    let Some(ctx) = ctx() else { return };
+    let m = ctx.manifest();
+    let mut gen = rtlm::workload::SynthGenerator::new(
+        ctx.store.lexicon.clone(),
+        m.length_model.clone(),
+        42,
+    );
+    let names = m.model_names();
+    let idx: std::collections::HashMap<&str, usize> = m
+        .feature_names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.as_str(), i))
+        .collect();
+    for utype in ["structural", "syntactic", "semantic", "vague", "open", "multipart"] {
+        let mut fired = 0;
+        for _ in 0..20 {
+            let item = gen.work_item(utype, &names);
+            assert!((4..=96).contains(&item.base_len), "{utype}: {item:?}");
+            assert!(!item.text.is_empty());
+            let feats = ctx.estimator.features(&item.text);
+            if feats[idx[utype]] > 0.0 {
+                fired += 1;
+            }
+        }
+        assert!(fired >= 18, "{utype}: only {fired}/20 fired its own scorer");
+    }
+}
+
+#[test]
+fn synth_stream_deterministic_by_seed() {
+    let Some(ctx) = ctx() else { return };
+    let m = ctx.manifest();
+    let types = m.uncertainty_types.clone();
+    let names = m.model_names();
+    let mk = |seed| {
+        let mut g = rtlm::workload::SynthGenerator::new(
+            ctx.store.lexicon.clone(),
+            m.length_model.clone(),
+            seed,
+        );
+        g.stream(&types, 30, &names)
+            .into_iter()
+            .map(|i| i.text)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(mk(9), mk(9));
+    assert_ne!(mk(9), mk(10));
+}
+
+#[test]
+fn slack_policy_runs_and_matches_alpha_zero_up() {
+    let Some(ctx) = ctx() else { return };
+    let dev = rtlm::config::DeviceProfile::edge_server();
+    let model = ctx.model("t5").unwrap().clone();
+    let tasks = ctx.scenario_tasks(&model, Variance::Normal, 77).unwrap();
+    let slack = ctx.run_policy(&model, tasks.clone(), PolicyKind::Slack, &dev);
+    assert_eq!(slack.outcomes.len(), tasks.len());
+    assert_eq!(slack.policy, "UP"); // internally UaSched with alpha=0
+}
+
+#[test]
+fn deadline_override_sets_priority_point() {
+    let Some(ctx) = ctx() else { return };
+    let factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
+    let model = ctx.model("t5").unwrap().clone();
+    let item = &ctx.all_test_items()[0];
+    let t = factory
+        .build_with_deadline(1, item, 10.0, &model, 0.75)
+        .unwrap();
+    assert!((t.priority_point - 10.75).abs() < 1e-12);
+}

@@ -1,0 +1,36 @@
+# RT-LM build/test driver.
+#
+#   make artifacts        full AOT build: corpus + regressor + 5 LM variants
+#   make artifacts-quick  small corpus, fewer buckets (fast; tests still run)
+#   make verify           tier-1 gate: cargo build/test + python tests
+#   make bench            hotpath micro-benchmarks -> BENCH_hotpath.json
+#   make clean-artifacts  remove the generated artifacts directory
+
+PYTHON   ?= python3
+CARGO    ?= cargo
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts artifacts-quick verify test bench clean-artifacts
+
+# The manifest is the last file aot.py writes, so its presence means the
+# whole artifact set is complete.
+$(ARTIFACTS)/manifest.json:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS)
+
+artifacts: $(ARTIFACTS)/manifest.json
+
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS) --quick
+
+verify:
+	$(CARGO) build --release
+	$(CARGO) test -q
+	cd python && $(PYTHON) -m pytest -q tests
+
+test: verify
+
+bench:
+	$(CARGO) bench --bench hotpath
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -5,41 +5,60 @@
 //! RULEGEN feature extraction, LW regressor inference, UP priority
 //! computation, scheduler push/pop, consolidation, and the simulator
 //! engine itself.
+//!
+//! Always runs to completion: pure-logic benches use hand-built fixtures
+//! when `make artifacts` has not run, artifact benches join in when it
+//! has, and PJRT benches join in when a real backend exists. A snapshot
+//! is written to `BENCH_hotpath.json` (override with `RTLM_BENCH_OUT`)
+//! so the perf trajectory is diffable across commits.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use rtlm::config::{DeviceProfile, Manifest, SchedParams};
+use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
 use rtlm::runtime::ArtifactStore;
 use rtlm::scheduler::{up_priority, Lane, PolicyKind, Task};
-use rtlm::sim::{run_sim, LatencyModel};
+use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::uncertainty::{rules, Estimator};
+use rtlm::util::json::{obj, Json};
 use rtlm::util::rng::Pcg64;
 
-/// median-of-samples timing: returns (median secs/iter, iters run).
-fn bench<F: FnMut()>(name: &str, iters_per_sample: usize, mut f: F) {
-    // warmup
-    for _ in 0..iters_per_sample.min(100) {
-        f();
-    }
-    let mut samples = Vec::with_capacity(15);
-    for _ in 0..15 {
-        let t0 = Instant::now();
-        for _ in 0..iters_per_sample {
+/// median-of-samples timing; records (name -> median secs/iter).
+struct Harness {
+    results: Vec<(String, f64)>,
+}
+
+impl Harness {
+    fn bench<F: FnMut()>(&mut self, name: &str, iters_per_sample: usize, mut f: F) {
+        // warmup
+        for _ in 0..iters_per_sample.min(100) {
             f();
         }
-        samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        let mut samples = Vec::with_capacity(15);
+        for _ in 0..15 {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let unit = if median < 1e-6 {
+            format!("{:8.1} ns", median * 1e9)
+        } else if median < 1e-3 {
+            format!("{:8.2} us", median * 1e6)
+        } else {
+            format!("{:8.3} ms", median * 1e3)
+        };
+        println!("{name:<44} {unit}/iter  (median of 15x{iters_per_sample})");
+        self.results.push((name.to_string(), median));
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let unit = if median < 1e-6 {
-        format!("{:8.1} ns", median * 1e9)
-    } else if median < 1e-3 {
-        format!("{:8.2} us", median * 1e6)
-    } else {
-        format!("{:8.3} ms", median * 1e3)
-    };
-    println!("{name:<44} {unit}/iter  (median of 15x{iters_per_sample})");
+
+    fn record(&mut self, name: &str, secs: f64) {
+        self.results.push((name.to_string(), secs));
+    }
 }
 
 fn mk_task(rng: &mut Pcg64, id: u64) -> Task {
@@ -58,48 +77,79 @@ fn mk_task(rng: &mut Pcg64, id: u64) -> Task {
     }
 }
 
-fn main() {
-    let root = Manifest::default_root();
-    if !root.join("manifest.json").exists() {
-        eprintln!("no artifacts at {} — run `make artifacts` first", root.display());
-        std::process::exit(0);
-    }
-    let store = Arc::new(ArtifactStore::open(&root).expect("open artifacts"));
-    let m = store.manifest.clone();
-    let estimator = Estimator::new(
-        store.lexicon.clone(),
-        store.regressor.clone(),
-        m.max_input_len,
-        m.min_output_len as f64,
-        m.max_output_len as f64,
+/// Stand-in model entry for the artifact-free path.
+fn synthetic_model() -> ModelEntry {
+    ModelEntry::stub("synthetic", 0.05, 0.08)
+}
+
+fn synthetic_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode.insert(
+        "synthetic".into(),
+        BTreeMap::from([(1, 0.010), (4, 0.016), (16, 0.032), (32, 0.055)]),
     );
+    c.prefill.insert(
+        "synthetic".into(),
+        BTreeMap::from([((1, 16), 0.02), ((8, 64), 0.08)]),
+    );
+    LatencyModel::from_calibration(&c)
+}
+
+fn main() {
+    let mut h = Harness { results: Vec::new() };
+    let root = Manifest::default_root();
+    let store = if root.join("manifest.json").exists() {
+        match ArtifactStore::open(&root) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                eprintln!("artifacts at {} unreadable ({e:#}); pure-logic benches only", root.display());
+                None
+            }
+        }
+    } else {
+        eprintln!("no artifacts at {} — pure-logic benches only (run `make artifacts` for the full set)", root.display());
+        None
+    };
 
     println!("== L3 hot-path micro-benchmarks ==");
 
+    // --- artifact-dependent application-level benches ----------------------
     let text = "What are the causes and consequences of poverty in developing countries?";
-    bench("rulegen features (tokenize+tag+6 scorers)", 2000, || {
-        std::hint::black_box(rules::features(&store.lexicon, text, m.max_input_len));
-    });
+    if let Some(store) = &store {
+        let m = store.manifest.clone();
+        let estimator = Estimator::new(
+            store.lexicon.clone(),
+            store.regressor.clone(),
+            m.max_input_len,
+            m.min_output_len as f64,
+            m.max_output_len as f64,
+        );
+        let lexicon = store.lexicon.clone();
+        let max_input_len = m.max_input_len;
+        h.bench("rulegen features (tokenize+tag+6 scorers)", 2000, || {
+            std::hint::black_box(rules::features(&lexicon, text, max_input_len));
+        });
+        let feats = rules::features(&store.lexicon, text, m.max_input_len);
+        let regressor = store.regressor.clone();
+        h.bench("LW regressor predict (native)", 2000, || {
+            std::hint::black_box(regressor.predict(&feats).unwrap());
+        });
+        h.bench("estimator score (features+regressor)", 2000, || {
+            std::hint::black_box(estimator.score(text).unwrap());
+        });
+    }
 
-    let feats = rules::features(&store.lexicon, text, m.max_input_len);
-    bench("LW regressor predict (native)", 2000, || {
-        std::hint::black_box(store.regressor.predict(&feats).unwrap());
-    });
-
-    bench("estimator score (features+regressor)", 2000, || {
-        std::hint::black_box(estimator.score(text).unwrap());
-    });
-
+    // --- pure scheduling logic (always runs) --------------------------------
     let params = SchedParams::default();
     let mut rng = Pcg64::new(1);
     let task = mk_task(&mut rng, 0);
-    bench("UP priority (Eq. 3)", 100_000, || {
+    h.bench("UP priority (Eq. 3)", 100_000, || {
         std::hint::black_box(up_priority(&task, &params, 0.05, 0.0));
     });
 
     // scheduler push+drain at queue depth ~200
     let tasks: Vec<Task> = (0..200).map(|i| mk_task(&mut rng, i)).collect();
-    bench("UASCHED push+drain 200 tasks", 20, || {
+    h.bench("UASCHED push+drain 200 tasks", 20, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
         let mut policy = PolicyKind::RtLm.build(&p, 0.05, 60.0);
         for t in tasks.iter().cloned() {
@@ -111,68 +161,109 @@ fn main() {
         }
     });
 
-    // full simulator run, 400 tasks
-    let lat = LatencyModel::load_or_analytic(&m).expect("latency model");
-    let model = m.model("dialogpt").expect("model").clone();
+    // full simulator run, 400 tasks (calibrated model when artifacts
+    // exist, hand-built fixture otherwise; model and latency model must
+    // come from the same source or lookups fall through to defaults)
+    let (lat, model) = match &store {
+        Some(store) => match store.manifest.model("dialogpt") {
+            Ok(entry) => (
+                LatencyModel::load_or_analytic(&store.manifest).expect("latency model"),
+                entry.clone(),
+            ),
+            Err(_) => (synthetic_latency(), synthetic_model()),
+        },
+        None => (synthetic_latency(), synthetic_model()),
+    };
     let dev = DeviceProfile::edge_server();
     let sim_tasks: Vec<Task> = (0..400).map(|i| mk_task(&mut rng, i)).collect();
-    bench("sim engine 400 tasks (RT-LM)", 5, || {
+    h.bench("sim engine 400 tasks (RT-LM)", 5, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
         let mut policy = PolicyKind::RtLm.build(&p, model.eta, 60.0);
-        std::hint::black_box(run_sim(
-            sim_tasks.clone(),
-            &mut *policy,
-            &lat,
-            &model,
-            &dev,
-            &p,
-        ));
+        std::hint::black_box(run_sim(sim_tasks.clone(), &mut *policy, &lat, &model, &dev, &p));
     });
 
-    bench("sim engine 400 tasks (FIFO)", 5, || {
+    h.bench("sim engine 400 tasks (FIFO)", 5, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
         let mut policy = PolicyKind::Fifo.build(&p, model.eta, f64::INFINITY);
-        std::hint::black_box(run_sim(
-            sim_tasks.clone(),
-            &mut *policy,
-            &lat,
-            &model,
-            &dev,
-            &p,
-        ));
+        std::hint::black_box(run_sim(sim_tasks.clone(), &mut *policy, &lat, &model, &dev, &p));
     });
 
-    println!("\n== L1/L2 PJRT execution (real artifacts) ==");
-    let session = rtlm::model::LmSession::new(store.clone(), "t5").expect("session");
-    for b in [1usize, 8, 32] {
-        let secs = session.time_decode_step(b, 5).expect("time");
-        println!("t5 decode step b={b:<3} {:8.2} ms ({:.1} tok/s)", secs * 1e3, b as f64 / secs);
-    }
-    let secs = session.time_prefill((8, 64), 5).expect("time");
-    println!("t5 prefill b=8 s=64 {:8.2} ms", secs * 1e3);
+    // --- PJRT execution benches (artifacts + real backend only) -------------
+    let mut pjrt = false;
+    if let Some(store) = &store {
+        match rtlm::model::LmSession::new(store.clone(), "t5") {
+            Ok(session) => {
+                pjrt = true;
+                println!("\n== L1/L2 PJRT execution (real artifacts) ==");
+                for b in [1usize, 8, 32] {
+                    let secs = session.time_decode_step(b, 5).expect("time");
+                    println!(
+                        "t5 decode step b={b:<3} {:8.2} ms ({:.1} tok/s)",
+                        secs * 1e3,
+                        b as f64 / secs
+                    );
+                    h.record(&format!("t5 decode step b={b}"), secs);
+                }
+                let secs = session.time_prefill((8, 64), 5).expect("time");
+                println!("t5 prefill b=8 s=64 {:8.2} ms", secs * 1e3);
+                h.record("t5 prefill b=8 s=64", secs);
 
-    // end-to-end generate: chunked vs single-step (the §Perf comparison)
-    let prompts: Vec<Vec<i32>> = (0..8)
-        .map(|i| store.vocab.encode(&format!("tell me about the history of art {i} ."), Some(64)))
+                // end-to-end generate: chunked vs single-step (§Perf)
+                let prompts: Vec<Vec<i32>> = (0..8)
+                    .map(|i| {
+                        store
+                            .vocab
+                            .encode(&format!("tell me about the history of art {i} ."), Some(64))
+                    })
+                    .collect();
+                let lens = vec![48usize; 8];
+                std::env::set_var("RTLM_USE_CHUNKS", "1");
+                let t0 = Instant::now();
+                let g = session.generate(&prompts, &lens).expect("gen");
+                let chunked_secs = t0.elapsed().as_secs_f64();
+                std::env::remove_var("RTLM_USE_CHUNKS");
+                let mut single =
+                    rtlm::model::LmSession::new(store.clone(), "t5").expect("session");
+                single.entry.chunk_k = 0;
+                let t0 = Instant::now();
+                let g2 = single.generate(&prompts, &lens).expect("gen");
+                let single_secs = t0.elapsed().as_secs_f64();
+                assert_eq!(g.tokens, g2.tokens);
+                println!(
+                    "t5 generate 8x48 tokens: chunked {:.0} ms ({:.1} ms/tok) vs single-step {:.0} ms ({:.1} ms/tok) -> {:.2}x",
+                    chunked_secs * 1e3,
+                    chunked_secs * 1e3 / 48.0,
+                    single_secs * 1e3,
+                    single_secs * 1e3 / 48.0,
+                    single_secs / chunked_secs
+                );
+                h.record("t5 generate 8x48 chunked", chunked_secs);
+                h.record("t5 generate 8x48 single-step", single_secs);
+            }
+            Err(e) => {
+                eprintln!("\nPJRT benches skipped: {e:#}");
+            }
+        }
+    }
+
+    // --- snapshot ------------------------------------------------------------
+    let out_path = std::env::var("RTLM_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let entries: Vec<(String, Json)> = h
+        .results
+        .iter()
+        .map(|(name, secs)| (name.clone(), Json::Num(*secs)))
         .collect();
-    let lens = vec![48usize; 8];
-    std::env::set_var("RTLM_USE_CHUNKS", "1");
-    let t0 = Instant::now();
-    let g = session.generate(&prompts, &lens).expect("gen");
-    let chunked_secs = t0.elapsed().as_secs_f64();
-    std::env::remove_var("RTLM_USE_CHUNKS");
-    let mut single = rtlm::model::LmSession::new(store.clone(), "t5").expect("session");
-    single.entry.chunk_k = 0;
-    let t0 = Instant::now();
-    let g2 = single.generate(&prompts, &lens).expect("gen");
-    let single_secs = t0.elapsed().as_secs_f64();
-    assert_eq!(g.tokens, g2.tokens);
-    println!(
-        "t5 generate 8x48 tokens: chunked {:.0} ms ({:.1} ms/tok) vs single-step {:.0} ms ({:.1} ms/tok) -> {:.2}x",
-        chunked_secs * 1e3,
-        chunked_secs * 1e3 / 48.0,
-        single_secs * 1e3,
-        single_secs * 1e3 / 48.0,
-        single_secs / chunked_secs
-    );
+    let snapshot = obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("unit", Json::Str("seconds_per_iter".into())),
+        ("artifacts", Json::Bool(store.is_some())),
+        ("pjrt", Json::Bool(pjrt)),
+        (
+            "results",
+            Json::Obj(entries.into_iter().collect()),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{snapshot}\n")).expect("write bench snapshot");
+    println!("\nsnapshot written to {out_path}");
 }

@@ -1,5 +1,6 @@
-//! Quickstart: score utterances for uncertainty, then serve a small
-//! batch through a real LM session with the full RT-LM scheduler.
+//! Quickstart: score utterances for uncertainty, schedule them with the
+//! full RT-LM policy, then execute — on a real PJRT session when a
+//! backend is available, else against the calibrated latency model.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
@@ -10,7 +11,8 @@ use anyhow::Result;
 use rtlm::config::{Manifest, SchedParams};
 use rtlm::model::{session::encode_prompt, LmSession};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::{Lane, PolicyKind, Task};
+use rtlm::scheduler::{Batch, Lane, PolicyKind, Task};
+use rtlm::sim::LatencyModel;
 use rtlm::uncertainty::Estimator;
 
 fn main() -> Result<()> {
@@ -58,23 +60,55 @@ fn main() -> Result<()> {
     for task in tasks {
         policy.push(task);
     }
-
-    // 3) Execute batches on a real PJRT session.
-    let model = "t5";
-    println!("\n=== serving on {model} (real PJRT execution) ===");
-    let session = LmSession::new(store.clone(), model)?;
-    let session = Arc::new(session);
+    let mut batches: Vec<Batch> = Vec::new();
     while let Some(batch) = policy.pop_batch(Lane::Gpu, 0.0, true) {
-        let texts: Vec<_> = batch.tasks.iter().map(|t| t.text.clone()).collect();
-        let report = rtlm::executor::execute_gpu(&session, &batch)?;
-        println!(
-            "batch of {} in {:.0} ms ({} decode steps):",
-            report.task_ids.len(),
-            report.infer_secs * 1e3,
-            report.steps
-        );
-        for (text, out) in texts.iter().zip(&report.outputs) {
-            println!("  [{} tokens] {} -> {}", out.len(), text, store.vocab.decode(out));
+        batches.push(batch);
+    }
+    println!("\n=== UASCHED batch plan (C = {}) ===", params.batch_size);
+    for (i, batch) in batches.iter().enumerate() {
+        let us: Vec<String> =
+            batch.tasks.iter().map(|t| format!("{:.0}", t.uncertainty)).collect();
+        println!("batch {i}: {} tasks, uncertainties [{}]", batch.tasks.len(), us.join(", "));
+    }
+
+    // 3) Execute: real PJRT session when available, calibrated latency
+    // model otherwise (the in-tree xla stub has no backend).
+    let model = "t5";
+    match LmSession::new(store.clone(), model) {
+        Ok(session) => {
+            println!("\n=== serving on {model} (real PJRT execution) ===");
+            let session = Arc::new(session);
+            for batch in &batches {
+                let report = rtlm::executor::execute_gpu(&session, batch)?;
+                println!(
+                    "batch of {} in {:.0} ms ({} decode steps):",
+                    report.task_ids.len(),
+                    report.infer_secs * 1e3,
+                    report.steps
+                );
+                for (task, out) in batch.tasks.iter().zip(&report.outputs) {
+                    println!(
+                        "  [{} tokens] {} -> {}",
+                        out.len(),
+                        task.text,
+                        store.vocab.decode(out)
+                    );
+                }
+            }
+        }
+        Err(e) => {
+            println!("\n=== {model} serving preview (no PJRT backend: {e:#}) ===");
+            let lat = LatencyModel::load_or_analytic(m)?;
+            let dev = rtlm::config::DeviceProfile::edge_server();
+            let entry = m.model(model)?;
+            for (i, batch) in batches.iter().enumerate() {
+                let secs = lat.gpu_batch_secs(entry, batch, &dev);
+                println!(
+                    "batch {i}: {} tasks, modeled accelerator-lane time {:.0} ms",
+                    batch.tasks.len(),
+                    secs * 1e3
+                );
+            }
         }
     }
     Ok(())

@@ -7,8 +7,7 @@ correctness signal for the attention hot path.
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from compile.kernels import ref
 from compile.kernels.attention import decode_attention, prefill_attention

@@ -1,8 +1,7 @@
 """RULEGEN scorers: each uncertainty type must light up its own scorer."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from compile import corpus, rulegen
 from compile.common import FEATURE_NAMES, N_FEATURES, UNCERTAINTY_TYPES

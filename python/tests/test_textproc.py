@@ -1,7 +1,6 @@
 """Tokenizer / PoS-lite / vocab unit tests (the rust mirror contract)."""
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from compile import lexicon
 from compile.common import UNK_ID, VOCAB_SIZE

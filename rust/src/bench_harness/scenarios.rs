@@ -531,23 +531,7 @@ fn unit_latency_model() -> LatencyModel {
 }
 
 fn unit_model() -> ModelEntry {
-    ModelEntry {
-        name: "unit".into(),
-        n_layers: 1,
-        d_model: 64,
-        n_heads: 1,
-        d_ff: 64,
-        eta: 0.1,
-        phi: 0.0,
-        gamma: 1.0,
-        delta: 0.0,
-        weights: std::path::PathBuf::new(),
-        param_names: vec![],
-        prefill: BTreeMap::new(),
-        decode: BTreeMap::new(),
-        decode_chunk: BTreeMap::new(),
-        chunk_k: 0,
-    }
+    ModelEntry::stub("unit", 0.1, 0.0)
 }
 
 fn unit_device() -> DeviceProfile {

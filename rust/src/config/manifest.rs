@@ -38,6 +38,28 @@ pub struct ModelEntry {
 }
 
 impl ModelEntry {
+    /// Minimal entry for tests/benches that drive the simulator with a
+    /// hand-built latency model and never touch artifact paths.
+    pub fn stub(name: &str, eta: f64, phi: f64) -> ModelEntry {
+        ModelEntry {
+            name: name.to_string(),
+            n_layers: 2,
+            d_model: 64,
+            n_heads: 2,
+            d_ff: 128,
+            eta,
+            phi,
+            gamma: 1.0,
+            delta: 0.0,
+            weights: PathBuf::new(),
+            param_names: Vec::new(),
+            prefill: BTreeMap::new(),
+            decode: BTreeMap::new(),
+            decode_chunk: BTreeMap::new(),
+            chunk_k: 0,
+        }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }

@@ -19,7 +19,8 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::config::ModelEntry;
 use crate::runtime::client::i32_literal;
-use crate::runtime::ArtifactStore;
+use crate::runtime::xla;
+use crate::runtime::{ArtifactStore, RtClient};
 
 /// Result of one batched generation call.
 #[derive(Debug)]
@@ -35,6 +36,9 @@ pub struct GenOutput {
 
 pub struct LmSession {
     store: Arc<ArtifactStore>,
+    /// PJRT client this session executes on (obtained lazily from the
+    /// store: constructing a session requires a real backend).
+    client: RtClient,
     pub entry: ModelEntry,
     /// Weights as device buffers, in canonical param order.
     param_buffers: Vec<xla::PjRtBuffer>,
@@ -47,6 +51,7 @@ pub struct LmSession {
 
 impl LmSession {
     pub fn new(store: Arc<ArtifactStore>, model: &str) -> Result<LmSession> {
+        let client = store.client()?;
         let entry = store.manifest.model(model)?.clone();
         let bundle = store.bundle(&entry.weights)?;
         let mut param_literals = Vec::with_capacity(entry.param_names.len());
@@ -56,10 +61,10 @@ impl LmSession {
                 .get(name)
                 .ok_or_else(|| anyhow!("weights.bin missing tensor '{name}'"))?;
             let lit = tensor.to_literal()?;
-            param_buffers.push(store.client.upload(&lit)?);
+            param_buffers.push(client.upload(&lit)?);
             param_literals.push(lit);
         }
-        Ok(LmSession { store, entry, param_buffers, param_literals })
+        Ok(LmSession { store, client, entry, param_buffers, param_literals })
     }
 
     pub fn model_name(&self) -> &str {
@@ -134,8 +139,8 @@ impl LmSession {
             // behind buffer_from_host_literal is asynchronous
             let toks_lit = i32_literal(&toks, &[bb as i64, sb as i64])?;
             let lens_lit = i32_literal(&lens, &[bb as i64])?;
-            let toks_buf = self.store.client.upload(&toks_lit)?;
-            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let toks_buf = self.client.upload(&toks_lit)?;
+            let lens_buf = self.client.upload(&lens_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 2);
             args.extend(self.param_buffers.iter());
@@ -213,10 +218,10 @@ impl LmSession {
                 while steps.saturating_sub(step) >= chunk_k {
                     let pos_lit = i32_literal(&positions, &[decode_bucket as i64])?;
                     let tok_lit = i32_literal(&next_tokens, &[decode_bucket as i64])?;
-                    let ck_buf = self.store.client.upload(&ck_lit)?;
-                    let cv_buf = self.store.client.upload(&cv_lit)?;
-                    let pos_buf = self.store.client.upload(&pos_lit)?;
-                    let tok_buf = self.store.client.upload(&tok_lit)?;
+                    let ck_buf = self.client.upload(&ck_lit)?;
+                    let cv_buf = self.client.upload(&cv_lit)?;
+                    let pos_buf = self.client.upload(&pos_lit)?;
+                    let tok_buf = self.client.upload(&tok_lit)?;
                     let mut args: Vec<&xla::PjRtBuffer> =
                         Vec::with_capacity(self.param_buffers.len() + 4);
                     args.extend(self.param_buffers.iter());
@@ -252,10 +257,10 @@ impl LmSession {
         for step in step..steps {
             let pos_lit = i32_literal(&positions, &[decode_bucket as i64])?;
             let tok_lit = i32_literal(&next_tokens, &[decode_bucket as i64])?;
-            let ck_buf = self.store.client.upload(&ck_lit)?;
-            let cv_buf = self.store.client.upload(&cv_lit)?;
-            let pos_buf = self.store.client.upload(&pos_lit)?;
-            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let ck_buf = self.client.upload(&ck_lit)?;
+            let cv_buf = self.client.upload(&cv_lit)?;
+            let pos_buf = self.client.upload(&pos_lit)?;
+            let tok_buf = self.client.upload(&tok_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 4);
             args.extend(self.param_buffers.iter());
@@ -309,10 +314,10 @@ impl LmSession {
         for _ in 0..2 {
             let pos_lit = i32_literal(&positions, &[bucket as i64])?;
             let tok_lit = i32_literal(&toks, &[bucket as i64])?;
-            let ck_buf = self.store.client.upload(&ck)?;
-            let cv_buf = self.store.client.upload(&cv)?;
-            let pos_buf = self.store.client.upload(&pos_lit)?;
-            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let ck_buf = self.client.upload(&ck)?;
+            let cv_buf = self.client.upload(&cv)?;
+            let pos_buf = self.client.upload(&pos_lit)?;
+            let tok_buf = self.client.upload(&tok_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 4);
             args.extend(self.param_buffers.iter());
@@ -332,10 +337,10 @@ impl LmSession {
             let pos_lit = i32_literal(&positions, &[bucket as i64])?;
             let tok_lit = i32_literal(&toks, &[bucket as i64])?;
             let t0 = Instant::now();
-            let ck_buf = self.store.client.upload(&ck)?;
-            let cv_buf = self.store.client.upload(&cv)?;
-            let pos_buf = self.store.client.upload(&pos_lit)?;
-            let tok_buf = self.store.client.upload(&tok_lit)?;
+            let ck_buf = self.client.upload(&ck)?;
+            let cv_buf = self.client.upload(&cv)?;
+            let pos_buf = self.client.upload(&pos_lit)?;
+            let tok_buf = self.client.upload(&tok_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 4);
             args.extend(self.param_buffers.iter());
@@ -361,8 +366,8 @@ impl LmSession {
         for _ in 0..2 {
             let toks_lit = i32_literal(&toks, &[b as i64, s as i64])?;
             let lens_lit = i32_literal(&lens, &[b as i64])?;
-            let toks_buf = self.store.client.upload(&toks_lit)?;
-            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let toks_buf = self.client.upload(&toks_lit)?;
+            let lens_buf = self.client.upload(&lens_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 2);
             args.extend(self.param_buffers.iter());
@@ -376,8 +381,8 @@ impl LmSession {
             let toks_lit = i32_literal(&toks, &[b as i64, s as i64])?;
             let lens_lit = i32_literal(&lens, &[b as i64])?;
             let t0 = Instant::now();
-            let toks_buf = self.store.client.upload(&toks_lit)?;
-            let lens_buf = self.store.client.upload(&lens_lit)?;
+            let toks_buf = self.client.upload(&toks_lit)?;
+            let lens_buf = self.client.upload(&lens_lit)?;
             let mut args: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.param_buffers.len() + 2);
             args.extend(self.param_buffers.iter());

@@ -20,30 +20,32 @@ use crate::uncertainty::Regressor;
 
 pub struct ArtifactStore {
     pub manifest: Manifest,
-    pub client: RtClient,
     pub lexicon: Arc<Lexicon>,
     pub vocab: Arc<Vocab>,
     pub regressor: Arc<Regressor>,
+    /// PJRT client, created on first use: simulation, scoring, and
+    /// bundle IO never need one, and the in-tree `xla` stub has no
+    /// backend at all — only real HLO execution forces creation.
+    client: Mutex<Option<RtClient>>,
     executables: Mutex<HashMap<PathBuf, Arc<Executable>>>,
     bundles: Mutex<HashMap<PathBuf, Arc<Bundle>>>,
 }
 
 impl ArtifactStore {
     /// Open the artifacts directory (validates the manifest + lexicon +
-    /// regressor eagerly; HLO compiles lazily).
+    /// regressor eagerly; the PJRT client and HLO compile lazily).
     pub fn open(root: &Path) -> Result<ArtifactStore> {
         let manifest = Manifest::load(root)?;
-        let client = RtClient::cpu()?;
         let lexicon = Arc::new(Lexicon::load(&manifest.lexicon)?);
         let vocab = Arc::new(Vocab::from_lexicon(&lexicon, manifest.vocab_size)?);
         let reg_bundle = Bundle::load(&manifest.regressor.weights)?;
         let regressor = Arc::new(Regressor::from_bundle(&reg_bundle, &manifest.feature_scales)?);
         Ok(ArtifactStore {
             manifest,
-            client,
             lexicon,
             vocab,
             regressor,
+            client: Mutex::new(None),
             executables: Mutex::new(HashMap::new()),
             bundles: Mutex::new(HashMap::new()),
         })
@@ -54,6 +56,23 @@ impl ArtifactStore {
         Self::open(&Manifest::default_root())
     }
 
+    /// The (lazily created, process-cached) PJRT client. Errors when no
+    /// backend exists — e.g. under the in-tree `xla` stub.
+    pub fn client(&self) -> Result<RtClient> {
+        let mut guard = self.client.lock().unwrap();
+        if let Some(client) = guard.as_ref() {
+            return Ok(client.clone());
+        }
+        let client = RtClient::cpu()?;
+        *guard = Some(client.clone());
+        Ok(client)
+    }
+
+    /// Whether real HLO execution is possible in this build/environment.
+    pub fn pjrt_available(&self) -> bool {
+        self.client().is_ok()
+    }
+
     /// Compile (or fetch the cached) executable for an HLO file.
     pub fn executable(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(exe) = self.executables.lock().unwrap().get(path) {
@@ -61,7 +80,7 @@ impl ArtifactStore {
         }
         // Compile outside the lock: compiles can take hundreds of ms and
         // other lanes should not stall on an unrelated bucket.
-        let exe = Arc::new(self.client.compile_file(path)?);
+        let exe = Arc::new(self.client()?.compile_file(path)?);
         let mut cache = self.executables.lock().unwrap();
         Ok(cache.entry(path.to_path_buf()).or_insert(exe).clone())
     }

@@ -9,6 +9,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use super::xla;
+
 const MAGIC: &[u8; 8] = b"RTLMTB01";
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -14,6 +14,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::xla;
+
 /// Shared PJRT CPU client.
 #[derive(Clone)]
 pub struct RtClient {

@@ -1,12 +1,19 @@
 //! Runtime bridge: load AOT artifacts (HLO text + tensor bundles) and
-//! execute them on the PJRT CPU client via the `xla` crate.
+//! execute them on the PJRT CPU client via the `xla` crate surface.
 //!
 //! Python never runs here — everything below consumes files produced
 //! once by `make artifacts`.
+//!
+//! The offline crate set has no PJRT bindings, so [`xla`] is an in-tree
+//! stand-in: host-side literals/bundles are fully functional, while
+//! client construction reports the backend as unavailable. Simulation
+//! and the native regressor never touch the client; only real HLO
+//! execution ([`client`], `model::LmSession`) requires a real backend.
 
 pub mod artifacts;
 pub mod bundle;
 pub mod client;
+pub mod xla;
 
 pub use artifacts::ArtifactStore;
 pub use bundle::{Bundle, Dtype, Tensor};

@@ -1,0 +1,307 @@
+//! In-tree stand-in for the `xla` crate (PJRT bindings are not in the
+//! offline crate set, and `anyhow` must stay the only external
+//! dependency — see DESIGN.md §Substitutions).
+//!
+//! [`Literal`] is a fully functional host tensor, so every IO path
+//! (tensor bundles, literal construction/reshape/readback) works without
+//! a PJRT backend. Client construction ([`PjRtClient::cpu`]) reports the
+//! backend as unavailable; the device-side types are uninhabited, which
+//! proves at the type level that no execution path can be reached without
+//! a real backend. Swapping in the real `xla` crate is a one-line
+//! `Cargo.toml` change plus deleting this module — the API surface below
+//! mirrors the subset of `xla-rs` the crate uses.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?`/`context`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl Error {
+    fn backend_unavailable() -> Error {
+        Error(
+            "PJRT backend unavailable: built against the in-tree xla stub \
+             (real HLO execution requires the xla crate; simulation and \
+             native-regressor paths do not need it)"
+                .to_string(),
+        )
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited: proves device-side code paths cannot be reached.
+#[derive(Clone, Copy, Debug)]
+enum Never {}
+
+// ---------------------------------------------------------------------------
+// Host literals (fully functional)
+// ---------------------------------------------------------------------------
+
+/// Element payload of a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types a [`Literal`] can be built from / read back as.
+pub trait NativeType: sealed::Sealed + Copy {
+    fn into_data(values: Vec<Self>) -> Data;
+    fn from_data(data: &Data) -> Option<Vec<Self>>;
+    fn type_name() -> &'static str;
+}
+
+impl NativeType for f32 {
+    fn into_data(values: Vec<Self>) -> Data {
+        Data::F32(values)
+    }
+    fn from_data(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(values: Vec<Self>) -> Data {
+        Data::I32(values)
+    }
+    fn from_data(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// Host-resident tensor (mirror of `xla::Literal`).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Shape descriptor: only the tuple-ness is consulted by this crate.
+#[derive(Clone, Copy, Debug)]
+pub struct Shape {
+    tuple: bool,
+}
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        self.tuple
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { dims: vec![values.len() as i64], data: T::into_data(values.to_vec()) }
+    }
+
+    /// Tuple literal (what a `return_tuple=True` executable produces).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: Data::Tuple(elements) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape { tuple: matches!(self.data, Data::Tuple(_)) })
+    }
+
+    /// Read the elements back out (error on dtype mismatch / tuples).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error(format!("literal is not {}", T::type_name())))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO interchange (host-side parsing only)
+// ---------------------------------------------------------------------------
+
+/// Parsed-enough HLO module: the stub keeps the text so callers can
+/// still validate that artifact files exist and are readable.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{path} does not look like HLO text")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    hlo_text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { hlo_text: proto.text.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client surface (uninhabited: construction always fails)
+// ---------------------------------------------------------------------------
+
+pub struct PjRtClient(Never);
+pub struct Device(Never);
+pub struct PjRtBuffer(Never);
+pub struct PjRtLoadedExecutable(Never);
+
+impl PjRtClient {
+    /// Always errors in the stub build: there is no PJRT runtime.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::backend_unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn devices(&self) -> Vec<Device> {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&Device>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        match self.0 {}
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32() {
+        let lit = Literal::vec1(&[1.5f32, -2.0, 0.0]);
+        assert_eq!(lit.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.5, -2.0, 0.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals_decompose() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1f32]), Literal::vec1(&[2i32])]);
+        assert!(t.shape().unwrap().is_tuple());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("unavailable"));
+    }
+}

@@ -194,23 +194,7 @@ mod tests {
     use std::collections::BTreeMap;
 
     fn test_model() -> ModelEntry {
-        ModelEntry {
-            name: "m".into(),
-            n_layers: 2,
-            d_model: 64,
-            n_heads: 2,
-            d_ff: 128,
-            eta: 0.05,
-            phi: 0.08,
-            gamma: 1.0,
-            delta: 0.0,
-            weights: "/dev/null".into(),
-            param_names: vec![],
-            prefill: BTreeMap::new(),
-            decode: BTreeMap::new(),
-            decode_chunk: BTreeMap::new(),
-            chunk_k: 0,
-        }
+        ModelEntry::stub("m", 0.05, 0.08)
     }
 
     fn test_lat() -> LatencyModel {

@@ -147,6 +147,32 @@ fn main() {
         std::hint::black_box(up_priority(&task, &params, 0.05, 0.0));
     });
 
+    // priority-sort strategies at queue depth 512: the comparator-based
+    // sort re-evaluates up_priority ~2·n·log n times; the keyed sort
+    // (what UASCHED::sort_queue now does) computes each key once. Both
+    // are benched so the before/after of the hot-path fix stays visible
+    // in BENCH_hotpath.json.
+    let sort_tasks: Vec<Task> = (0..512).map(|i| mk_task(&mut rng, i)).collect();
+    h.bench("sort 512 by UP priority (comparator, old)", 50, || {
+        let mut q: Vec<&Task> = sort_tasks.iter().collect();
+        q.sort_by(|a, b| {
+            up_priority(b, &params, 0.05, 1.0)
+                .total_cmp(&up_priority(a, &params, 0.05, 1.0))
+                .then(a.arrival.total_cmp(&b.arrival))
+        });
+        std::hint::black_box(q);
+    });
+    h.bench("sort 512 by UP priority (keyed, new)", 50, || {
+        let mut keyed: Vec<(f64, &Task)> = sort_tasks
+            .iter()
+            .map(|t| (up_priority(t, &params, 0.05, 1.0), t))
+            .collect();
+        keyed.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival))
+        });
+        std::hint::black_box(keyed);
+    });
+
     // scheduler push+drain at queue depth ~200
     let tasks: Vec<Task> = (0..200).map(|i| mk_task(&mut rng, i)).collect();
     h.bench("UASCHED push+drain 200 tasks", 20, || {

@@ -1,0 +1,228 @@
+//! The generic dispatcher loop and the [`ExecutionBackend`] trait it is
+//! parameterised over.
+//!
+//! Unified semantics (both backends, by construction):
+//!
+//! - **Admission**: the backend delivers arrivals on its engine clock;
+//!   the core pushes them into the policy and tracks their arrival times.
+//! - **ξ-forcing**: a lane pop is forced once *all* `n_total` tasks have
+//!   been admitted (never earlier — the historical wall-clock engine
+//!   guessed "arrivals done" from queue lengths and could force while
+//!   arrivals were still in flight), or once the oldest queued task has
+//!   waited `params.xi` engine-seconds.
+//! - **Lane gating**: at most one batch in flight per lane; a lane
+//!   accepts the next batch only when the previous one has fully
+//!   completed (the historical simulator let the CPU lane stack tasks
+//!   onto busy workers).
+//! - **Waiting**: the core computes the next ξ-expiry and hands it to
+//!   the backend as an absolute-time deadline — wall-clock backends
+//!   sleep until an event or that deadline instead of busy-polling.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::SchedParams;
+use crate::scheduler::{Batch, Lane, Policy, Task};
+use crate::sim::results::TaskOutcome;
+
+/// One completed batch, reported by the backend.
+#[derive(Debug)]
+pub struct BatchDone {
+    pub lane: Lane,
+    /// Per-task `(id, completion time, inference seconds)` on the
+    /// engine clock. CPU-lane tasks may complete at different times
+    /// within one batch (worker pool / sequential execution); the lane
+    /// itself frees only when the whole batch is done.
+    pub completions: Vec<(u64, f64, f64)>,
+    /// Pure model-inference seconds of the whole batch (counted once,
+    /// not per task).
+    pub batch_infer_secs: f64,
+}
+
+/// Everything that happened since the previous wait, up to the
+/// backend's (possibly advanced) `now`.
+#[derive(Debug, Default)]
+pub struct Step {
+    /// Newly arrived tasks, arrival times already on the engine clock.
+    pub arrivals: Vec<Task>,
+    /// Batches that finished; their lanes are free again.
+    pub done: Vec<BatchDone>,
+    /// Virtual-clock backends only: no event can ever occur again (no
+    /// pending arrivals, nothing in flight, no deadline). With tasks
+    /// still queued this means the policy refuses to emit — a bug.
+    pub exhausted: bool,
+}
+
+/// An execution environment the dispatcher core can drive: a clock, two
+/// lanes, and a stream of arrivals.
+pub trait ExecutionBackend {
+    /// Current engine-clock time in seconds.
+    fn now(&mut self) -> f64;
+
+    /// Start executing a batch on its lane. The core guarantees at most
+    /// one batch in flight per lane.
+    fn submit(&mut self, batch: Batch) -> Result<()>;
+
+    /// Block until the next event (arrival or completion) or until the
+    /// absolute engine time `deadline` passes, whichever comes first.
+    /// Returns every event that has occurred up to the new `now`.
+    fn wait(&mut self, deadline: Option<f64>) -> Result<Step>;
+}
+
+/// Backend-agnostic outcome of one serving run.
+#[derive(Debug, Default)]
+pub struct EngineReport {
+    pub policy: String,
+    pub outcomes: Vec<TaskOutcome>,
+    /// Engine-clock seconds spent inside policy push/pop (Table VII).
+    pub sched_secs: f64,
+    /// Pure model-inference seconds, summed over batches.
+    pub infer_secs: f64,
+    pub n_batches_gpu: usize,
+    pub n_batches_cpu: usize,
+    /// Every dispatched batch in dispatch order: `(lane, task ids)`.
+    /// The cross-backend equivalence test compares these.
+    pub dispatch_log: Vec<(Lane, Vec<u64>)>,
+}
+
+/// Run `policy` over `n_total` tasks delivered by `backend` until every
+/// task has completed. Panics (like the historical simulator) if the
+/// policy deadlocks or the loop fails to converge; backend errors (lane
+/// worker death, channel loss) propagate as `Err`.
+pub fn run_engine(
+    backend: &mut dyn ExecutionBackend,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    n_total: usize,
+) -> Result<EngineReport> {
+    let mut report = EngineReport { policy: policy.name(), ..Default::default() };
+
+    // arrival time of every task queued inside the policy (removed at
+    // dispatch — in-flight tasks no longer age the ξ timer)
+    let mut queued: HashMap<u64, f64> = HashMap::new();
+    // full task records for outcome accounting (removed at completion)
+    let mut meta: HashMap<u64, Task> = HashMap::new();
+    let mut admitted = 0usize;
+    let mut completed = 0usize;
+    let mut busy = [false; Lane::ALL.len()];
+
+    let guard_limit = 1000 + 100 * n_total;
+    let mut iterations = 0usize;
+
+    while completed < n_total {
+        iterations += 1;
+        assert!(
+            iterations < guard_limit,
+            "engine did not converge (policy {} stuck with {} queued, {} completed)",
+            report.policy,
+            queued.len(),
+            completed
+        );
+
+        // -- dispatch idle lanes ------------------------------------------
+        let now = backend.now();
+        let oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
+        // ξ-expiry is compared as `now >= oldest + xi` — the *same*
+        // float expression the wait deadline below hands the backend —
+        // so a wakeup at the deadline always observes force=true. (The
+        // subtraction form `now - oldest >= xi` can round down at the
+        // expiry instant and livelock the loop re-arming a deadline
+        // that never fires force.)
+        let force = admitted == n_total || (oldest.is_finite() && now >= oldest + params.xi);
+        for lane in Lane::ALL {
+            if busy[lane.index()] {
+                continue;
+            }
+            let t0 = Instant::now();
+            let batch = policy.pop_batch(lane, now, force);
+            report.sched_secs += t0.elapsed().as_secs_f64();
+            if let Some(batch) = batch {
+                busy[lane.index()] = true;
+                match lane {
+                    Lane::Gpu => report.n_batches_gpu += 1,
+                    Lane::Cpu => report.n_batches_cpu += 1,
+                }
+                let ids: Vec<u64> = batch.tasks.iter().map(|t| t.id).collect();
+                for id in &ids {
+                    queued.remove(id);
+                }
+                report.dispatch_log.push((lane, ids));
+                backend.submit(batch)?;
+            }
+        }
+
+        // -- wait for the next event --------------------------------------
+        // The only reason to wake with no event is a pending ξ-expiry on
+        // an idle lane; if this round's pops already ran forced and
+        // declined, only arrivals/completions can change anything, so
+        // wait for those without a deadline (no busy-poll). The decision
+        // keys on the same `force` the pops used — re-reading the clock
+        // here could see the expiry slip into the past between the pop
+        // and the wait and skip the deadline entirely, parking a
+        // wall-clock backend until the next unrelated event. A deadline
+        // that is already due simply makes `wait` return immediately and
+        // the next iteration dispatch forced.
+        let any_idle = busy.contains(&false);
+        let oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
+        let deadline = if any_idle && !force && oldest.is_finite() {
+            Some(oldest + params.xi)
+        } else {
+            None
+        };
+        let step = backend.wait(deadline)?;
+
+        if step.exhausted {
+            assert!(
+                step.arrivals.is_empty() && step.done.is_empty(),
+                "backend reported exhausted with undelivered events"
+            );
+            panic!(
+                "policy {} deadlocked with {} waiting tasks",
+                report.policy,
+                queued.len()
+            );
+        }
+
+        // -- admit arrivals ------------------------------------------------
+        for task in step.arrivals {
+            queued.insert(task.id, task.arrival);
+            meta.insert(task.id, task.clone());
+            admitted += 1;
+            let t0 = Instant::now();
+            policy.push(task);
+            report.sched_secs += t0.elapsed().as_secs_f64();
+        }
+
+        // -- account completions -------------------------------------------
+        for done in step.done {
+            busy[done.lane.index()] = false;
+            report.infer_secs += done.batch_infer_secs;
+            for (id, completion, infer_secs) in done.completions {
+                let task = meta.remove(&id).expect("unknown task completed");
+                report.outcomes.push(TaskOutcome {
+                    id,
+                    arrival: task.arrival,
+                    completion,
+                    priority_point: task.priority_point,
+                    uncertainty: task.uncertainty,
+                    true_len: task.true_len,
+                    lane: done.lane,
+                    utype: task.utype,
+                    malicious: task.malicious,
+                    infer_secs,
+                });
+                completed += 1;
+            }
+        }
+    }
+
+    assert_eq!(
+        report.outcomes.len(),
+        n_total,
+        "policy {} lost tasks",
+        report.policy
+    );
+    Ok(report)
+}

@@ -1,0 +1,30 @@
+//! The shared dispatcher core: one scheduling loop, many execution
+//! backends.
+//!
+//! Historically the repo carried two hand-maintained copies of the
+//! dispatch loop — a virtual-clock one in `sim::engine` and a wall-clock
+//! one in `server::engine` — which drifted apart on ξ-forcing, arrival
+//! draining and lane gating. This module is the single source of truth:
+//! arrival admission, ξ-forced dispatch, lane gating (one batch in
+//! flight per lane) and outcome accounting live exactly once in
+//! [`core::run_engine`], parameterised over an [`ExecutionBackend`]:
+//!
+//! - [`SimBackend`] — a virtual clock over the calibrated
+//!   [`crate::sim::LatencyModel`]; `sim::run_sim` is a thin wrapper.
+//! - [`ThreadedBackend`] — wall clock, an injector thread replaying the
+//!   arrival trace and one worker thread per lane running any
+//!   [`crate::executor::BatchExecutor`] (real PJRT, modeled-latency, or
+//!   instant); `server::serve_from_root` is a thin wrapper.
+//!
+//! Because both backends drive the *same* loop, the cross-backend
+//! property test in `rust/tests/engine_core.rs` can assert that the same
+//! trace + policy dispatches identical batch sequences in simulation and
+//! on the wire.
+
+pub mod core;
+pub mod sim_backend;
+pub mod threaded;
+
+pub use self::core::{run_engine, BatchDone, EngineReport, ExecutionBackend, Step};
+pub use sim_backend::SimBackend;
+pub use threaded::ThreadedBackend;

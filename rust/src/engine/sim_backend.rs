@@ -1,0 +1,151 @@
+//! Virtual-clock execution backend over the calibrated latency model.
+//!
+//! Time advances event by event: the next arrival in the trace, the
+//! completion of an in-flight batch, or the dispatcher's ξ-expiry
+//! deadline — whichever is earliest. Batch durations come from
+//! [`LatencyModel`], so a `run_engine` drive of this backend is exactly
+//! the discrete-event simulation the paper-scale experiments use.
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, ModelEntry};
+use crate::scheduler::{Batch, Lane, Task};
+use crate::sim::latency::LatencyModel;
+
+use super::core::{BatchDone, ExecutionBackend, Step};
+
+/// An in-flight batch: frees its lane at `lane_free`, with per-task
+/// completion times possibly earlier (CPU worker pool).
+struct InFlight {
+    lane_free: f64,
+    done: BatchDone,
+}
+
+pub struct SimBackend<'a> {
+    /// Remaining arrivals, sorted ascending by arrival time.
+    trace: std::vec::IntoIter<Task>,
+    /// The next arrival, held back until the clock reaches it.
+    next_arrival: Option<Task>,
+    now: f64,
+    lanes: [Option<InFlight>; 2],
+    lat: &'a LatencyModel,
+    model: &'a ModelEntry,
+    dev: &'a DeviceProfile,
+}
+
+impl<'a> SimBackend<'a> {
+    /// `tasks` must be sorted ascending by arrival time.
+    pub fn new(
+        tasks: Vec<Task>,
+        lat: &'a LatencyModel,
+        model: &'a ModelEntry,
+        dev: &'a DeviceProfile,
+    ) -> SimBackend<'a> {
+        let mut trace = tasks.into_iter();
+        let next_arrival = trace.next();
+        SimBackend { trace, next_arrival, now: 0.0, lanes: [None, None], lat, model, dev }
+    }
+
+    /// Earliest future event on the backend's own timeline.
+    fn next_event(&self) -> f64 {
+        let mut next = f64::INFINITY;
+        if let Some(t) = &self.next_arrival {
+            next = next.min(t.arrival);
+        }
+        for slot in self.lanes.iter().flatten() {
+            next = next.min(slot.lane_free);
+        }
+        next
+    }
+}
+
+impl ExecutionBackend for SimBackend<'_> {
+    fn now(&mut self) -> f64 {
+        self.now
+    }
+
+    fn submit(&mut self, batch: Batch) -> Result<()> {
+        let idx = batch.lane.index();
+        assert!(self.lanes[idx].is_none(), "lane {:?} already busy", batch.lane);
+        let in_flight = match batch.lane {
+            Lane::Gpu => {
+                // one fused batch: every task completes when the batch does
+                let dur = self.lat.gpu_batch_secs(self.model, &batch, self.dev);
+                let done_at = self.now + dur;
+                InFlight {
+                    lane_free: done_at,
+                    done: BatchDone {
+                        lane: Lane::Gpu,
+                        completions: batch
+                            .tasks
+                            .iter()
+                            .map(|t| (t.id, done_at, dur))
+                            .collect(),
+                        batch_infer_secs: dur,
+                    },
+                }
+            }
+            Lane::Cpu => {
+                // worker pool *within* the batch: tasks run batch-1 on
+                // `dev.cpu_workers` parallel workers, earliest-free
+                // first; the lane frees when the whole batch is done
+                // (one batch in flight — same gate as the wire path).
+                let mut workers = vec![self.now; self.dev.cpu_workers.max(1)];
+                let mut completions = Vec::with_capacity(batch.tasks.len());
+                let mut infer = 0.0;
+                for task in &batch.tasks {
+                    let w = (0..workers.len())
+                        .min_by(|&a, &b| workers[a].total_cmp(&workers[b]))
+                        .unwrap();
+                    let dur = self.lat.cpu_task_secs(
+                        self.model,
+                        task.true_len,
+                        task.input_len,
+                        self.dev,
+                    );
+                    workers[w] += dur;
+                    completions.push((task.id, workers[w], dur));
+                    infer += dur;
+                }
+                let lane_free = workers.iter().copied().fold(self.now, f64::max);
+                InFlight {
+                    lane_free,
+                    done: BatchDone {
+                        lane: Lane::Cpu,
+                        completions,
+                        batch_infer_secs: infer,
+                    },
+                }
+            }
+        };
+        self.lanes[idx] = Some(in_flight);
+        Ok(())
+    }
+
+    fn wait(&mut self, deadline: Option<f64>) -> Result<Step> {
+        let next = self.next_event();
+        let target = next.min(deadline.unwrap_or(f64::INFINITY));
+        if target.is_infinite() {
+            return Ok(Step { exhausted: true, ..Default::default() });
+        }
+        self.now = self.now.max(target);
+
+        let mut step = Step::default();
+        // deliver every arrival due by the new clock
+        while self
+            .next_arrival
+            .as_ref()
+            .is_some_and(|t| t.arrival <= self.now)
+        {
+            step.arrivals.push(self.next_arrival.take().unwrap());
+            self.next_arrival = self.trace.next();
+        }
+        // deliver every batch whose lane has freed by the new clock
+        for slot in &mut self.lanes {
+            if slot.as_ref().is_some_and(|f| f.lane_free <= self.now) {
+                step.done.push(slot.take().unwrap().done);
+            }
+        }
+        Ok(step)
+    }
+}

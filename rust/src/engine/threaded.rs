@@ -1,0 +1,236 @@
+//! Wall-clock execution backend: an injector thread replays the arrival
+//! trace and one worker thread per lane runs batches through a
+//! [`BatchExecutor`] (real PJRT sessions, modeled latencies, or an
+//! instant executor for deterministic tests).
+//!
+//! PJRT handles are not `Send` (Rc-based internals), so executors are
+//! constructed *inside* their lane thread by an [`ExecutorFactory`] —
+//! each lane owns its own client + session, the same "one engine per
+//! lane" shape a GPU+CPU deployment has, and no PJRT state ever crosses
+//! threads.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::executor::{ExecReport, ExecutorFactory};
+use crate::scheduler::{Batch, Lane, Task};
+
+use super::core::{BatchDone, ExecutionBackend, Step};
+
+enum Event {
+    LaneReady(Lane),
+    Arrival(Task, f64),
+    /// Completion timestamps are taken by the dispatcher on receipt, so
+    /// every time in a run shares the single post-init epoch clock.
+    Done(Lane, Vec<ExecReport>),
+    LaneError(Lane, String),
+}
+
+fn lane_worker(
+    lane: Lane,
+    factory: ExecutorFactory,
+    batch_rx: mpsc::Receiver<Batch>,
+    tx: mpsc::Sender<Event>,
+) {
+    let mut executor = match factory(lane) {
+        Ok(e) => {
+            let _ = tx.send(Event::LaneReady(lane));
+            e
+        }
+        Err(e) => {
+            let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(batch) = batch_rx.recv() {
+        match executor.execute(&batch) {
+            Ok(reports) => {
+                if tx.send(Event::Done(lane, reports)).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
+                return;
+            }
+        }
+    }
+}
+
+pub struct ThreadedBackend {
+    event_rx: mpsc::Receiver<Event>,
+    gpu_tx: Option<mpsc::Sender<Batch>>,
+    cpu_tx: Option<mpsc::Sender<Batch>>,
+    epoch: Instant,
+    injector: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadedBackend {
+    /// Spawn the lane workers, wait for *both* lanes to report ready
+    /// (tracked per lane — one lane reporting twice cannot mask the
+    /// other failing), start the epoch clock, then start replaying
+    /// `tasks` (arrival gaps compressed by `time_scale`).
+    ///
+    /// With `inject_upfront` every arrival is queued synchronously
+    /// before this constructor returns — deterministic admission for
+    /// the cross-backend equivalence and drain tests.
+    pub fn start(
+        tasks: Vec<Task>,
+        factory: ExecutorFactory,
+        time_scale: f64,
+        inject_upfront: bool,
+    ) -> Result<ThreadedBackend> {
+        let (event_tx, event_rx) = mpsc::channel::<Event>();
+        let (gpu_tx, gpu_rx) = mpsc::channel::<Batch>();
+        let (cpu_tx, cpu_rx) = mpsc::channel::<Batch>();
+
+        let mut workers = Vec::with_capacity(2);
+        for (lane, rx) in [(Lane::Gpu, gpu_rx), (Lane::Cpu, cpu_rx)] {
+            let tx = event_tx.clone();
+            let factory = factory.clone();
+            workers.push(thread::spawn(move || lane_worker(lane, factory, rx, tx)));
+        }
+
+        // wait for both lanes to finish initialising (e.g. compiling the
+        // warmup buckets) before the serving clock starts
+        let mut ready = [false; Lane::ALL.len()];
+        while ready.contains(&false) {
+            match event_rx.recv_timeout(Duration::from_secs(600)) {
+                Ok(Event::LaneReady(lane)) => ready[lane.index()] = true,
+                Ok(Event::LaneError(lane, e)) => {
+                    return Err(anyhow!("{lane:?} lane failed to initialise: {e}"))
+                }
+                Ok(_) => {}
+                Err(e) => return Err(anyhow!("lane initialisation timed out: {e}")),
+            }
+        }
+
+        let epoch = Instant::now();
+        let time_scale = time_scale.max(1e-9);
+        let injector = if inject_upfront {
+            for task in tasks {
+                let arrived = epoch.elapsed().as_secs_f64();
+                event_tx
+                    .send(Event::Arrival(task, arrived))
+                    .map_err(|_| anyhow!("event channel closed during upfront injection"))?;
+            }
+            None
+        } else {
+            let tx = event_tx.clone();
+            Some(thread::spawn(move || {
+                for task in tasks {
+                    let due = task.arrival / time_scale;
+                    let now = epoch.elapsed().as_secs_f64();
+                    if due > now {
+                        thread::sleep(Duration::from_secs_f64(due - now));
+                    }
+                    let arrived = epoch.elapsed().as_secs_f64();
+                    if tx.send(Event::Arrival(task, arrived)).is_err() {
+                        return;
+                    }
+                }
+            }))
+        };
+        drop(event_tx); // only workers + injector hold senders now
+
+        Ok(ThreadedBackend {
+            event_rx,
+            gpu_tx: Some(gpu_tx),
+            cpu_tx: Some(cpu_tx),
+            epoch,
+            injector,
+            workers,
+        })
+    }
+
+    /// Total wall seconds since the post-init epoch, then shut the lane
+    /// workers and injector down.
+    pub fn finish(mut self) -> f64 {
+        let wall = self.epoch.elapsed().as_secs_f64();
+        self.gpu_tx.take();
+        self.cpu_tx.take();
+        if let Some(injector) = self.injector.take() {
+            injector.join().ok();
+        }
+        for worker in self.workers.drain(..) {
+            worker.join().ok();
+        }
+        wall
+    }
+
+    fn apply(&self, event: Event, step: &mut Step) -> Result<()> {
+        match event {
+            Event::Arrival(mut task, arrived) => {
+                // rebase to the dispatcher clock so response times are real
+                task.priority_point = arrived + (task.priority_point - task.arrival);
+                task.arrival = arrived;
+                step.arrivals.push(task);
+            }
+            Event::Done(lane, reports) => {
+                let done = self.epoch.elapsed().as_secs_f64();
+                let mut completions = Vec::new();
+                let mut batch_infer_secs = 0.0;
+                for rep in &reports {
+                    batch_infer_secs += rep.infer_secs;
+                    for &id in &rep.task_ids {
+                        completions.push((id, done, rep.infer_secs));
+                    }
+                }
+                step.done.push(BatchDone { lane, completions, batch_infer_secs });
+            }
+            Event::LaneReady(_) => {}
+            Event::LaneError(lane, e) => {
+                return Err(anyhow!("{lane:?} lane failed mid-run: {e}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExecutionBackend for ThreadedBackend {
+    fn now(&mut self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn submit(&mut self, batch: Batch) -> Result<()> {
+        let tx = match batch.lane {
+            Lane::Gpu => self.gpu_tx.as_ref(),
+            Lane::Cpu => self.cpu_tx.as_ref(),
+        };
+        tx.expect("backend already finished")
+            .send(batch)
+            .map_err(|e| anyhow!("{:?} lane died", e.0.lane))
+    }
+
+    fn wait(&mut self, deadline: Option<f64>) -> Result<Step> {
+        let disconnected = || anyhow!("all lane workers exited with tasks outstanding");
+        let first = match deadline {
+            Some(d) => {
+                let timeout = (d - self.epoch.elapsed().as_secs_f64()).max(0.0);
+                match self.event_rx.recv_timeout(Duration::from_secs_f64(timeout)) {
+                    Ok(event) => Some(event),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return Err(disconnected()),
+                }
+            }
+            // No ξ-expiry pending: the next state change can only be an
+            // arrival or a completion, so block for one — no busy-poll.
+            None => Some(self.event_rx.recv().map_err(|_| disconnected())?),
+        };
+
+        let mut step = Step::default();
+        if let Some(event) = first {
+            self.apply(event, &mut step)?;
+        }
+        // drain everything already queued so the dispatcher acts on the
+        // freshest state (and admission is atomic for pre-queued traces)
+        while let Ok(event) = self.event_rx.try_recv() {
+            self.apply(event, &mut step)?;
+        }
+        Ok(step)
+    }
+}

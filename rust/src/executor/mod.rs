@@ -1,16 +1,24 @@
-//! Real execution lanes over the PJRT artifacts.
+//! Execution lanes: how a dispatched batch actually runs.
 //!
-//! The accelerator lane runs batches through [`LmSession::generate`]
-//! (bucketed batched decode); the quarantine lane executes tasks one by
-//! one at batch 1 — the honest on-this-hardware analogue of the paper's
-//! CPU offload lane: no batching amortisation, strictly slower per task.
+//! [`BatchExecutor`] is the pluggable execution strategy of the serving
+//! engine's lane workers — real PJRT artifacts ([`PjrtExecutor`]),
+//! modeled latencies with no backend ([`ModeledExecutor`]), or instant
+//! completion for deterministic tests ([`InstantExecutor`]).
+//!
+//! On the PJRT path the accelerator lane runs batches through
+//! [`LmSession::generate`] (bucketed batched decode); the quarantine
+//! lane executes tasks one by one at batch 1 — the honest
+//! on-this-hardware analogue of the paper's CPU offload lane: no
+//! batching amortisation, strictly slower per task.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::config::{DeviceProfile, ModelEntry};
 use crate::model::LmSession;
 use crate::scheduler::{Batch, Lane};
+use crate::sim::LatencyModel;
 
 /// Execution record for one completed batch.
 #[derive(Debug)]
@@ -23,6 +31,132 @@ pub struct ExecReport {
     pub infer_secs: f64,
     /// Decode steps executed.
     pub steps: usize,
+}
+
+/// A lane's execution strategy. The accelerator lane expects one report
+/// for the whole batch; the quarantine lane one report per task (so
+/// completions stream out one at a time on backends that support it).
+pub trait BatchExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
+}
+
+/// Builds a lane's executor *inside* the lane worker thread (PJRT
+/// handles are not `Send`, so they must be born on the thread that uses
+/// them).
+pub type ExecutorFactory =
+    Arc<dyn Fn(Lane) -> Result<Box<dyn BatchExecutor>> + Send + Sync>;
+
+/// Real execution over PJRT artifacts.
+pub struct PjrtExecutor {
+    pub session: Arc<LmSession>,
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
+        match batch.lane {
+            Lane::Gpu => execute_gpu(&self.session, batch).map(|r| vec![r]),
+            Lane::Cpu => execute_cpu(&self.session, batch),
+        }
+    }
+}
+
+/// No-backend execution: sleeps the latency the calibrated model
+/// predicts for the batch (compressed by `time_scale`, matching the
+/// arrival-trace compression), then reports predicted-length outputs.
+/// Lets the full wire path — threads, channels, ξ deadlines — run with
+/// no PJRT backend and no model artifacts.
+///
+/// Reported `infer_secs` are the *slept* (compressed) seconds, so every
+/// time in the resulting report — arrivals, completions, inference —
+/// shares the one compressed wall clock.
+///
+/// The quarantine lane sleeps its tasks sequentially (one worker), the
+/// same shape as the single PJRT quarantine thread; the simulator's
+/// `cpu_workers` pool is an intra-batch parallelism model the wire path
+/// does not have yet (see ROADMAP § Open items).
+pub struct ModeledExecutor {
+    pub lat: LatencyModel,
+    pub model: ModelEntry,
+    pub dev: DeviceProfile,
+    pub time_scale: f64,
+}
+
+impl ModeledExecutor {
+    /// Sleep the compressed duration and return how long was slept.
+    fn sleep_scaled(&self, secs: f64) -> f64 {
+        let scaled = secs / self.time_scale.max(1e-9);
+        if scaled > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(scaled));
+        }
+        scaled
+    }
+}
+
+impl BatchExecutor for ModeledExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
+        match batch.lane {
+            Lane::Gpu => {
+                let secs = self.lat.gpu_batch_secs(&self.model, batch, &self.dev);
+                let slept = self.sleep_scaled(secs);
+                Ok(vec![ExecReport {
+                    lane: Lane::Gpu,
+                    task_ids: batch.tasks.iter().map(|t| t.id).collect(),
+                    outputs: vec![Vec::new(); batch.tasks.len()],
+                    infer_secs: slept,
+                    steps: batch.max_true_len(),
+                }])
+            }
+            Lane::Cpu => {
+                let mut reports = Vec::with_capacity(batch.tasks.len());
+                for task in &batch.tasks {
+                    let secs = self.lat.cpu_task_secs(
+                        &self.model,
+                        task.true_len,
+                        task.input_len,
+                        &self.dev,
+                    );
+                    let slept = self.sleep_scaled(secs);
+                    reports.push(ExecReport {
+                        lane: Lane::Cpu,
+                        task_ids: vec![task.id],
+                        outputs: vec![Vec::new()],
+                        infer_secs: slept,
+                        steps: task.true_len,
+                    });
+                }
+                Ok(reports)
+            }
+        }
+    }
+}
+
+/// Completes every batch immediately — the deterministic executor the
+/// cross-backend equivalence and drain tests drive the wire path with.
+pub struct InstantExecutor;
+
+impl BatchExecutor for InstantExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
+        match batch.lane {
+            Lane::Gpu => Ok(vec![ExecReport {
+                lane: Lane::Gpu,
+                task_ids: batch.tasks.iter().map(|t| t.id).collect(),
+                outputs: vec![Vec::new(); batch.tasks.len()],
+                infer_secs: 0.0,
+                steps: 0,
+            }]),
+            Lane::Cpu => Ok(batch
+                .tasks
+                .iter()
+                .map(|t| ExecReport {
+                    lane: Lane::Cpu,
+                    task_ids: vec![t.id],
+                    outputs: vec![Vec::new()],
+                    infer_secs: 0.0,
+                    steps: 0,
+                })
+                .collect()),
+        }
+    }
 }
 
 /// Run a batch on the accelerator lane (batched prefill + decode).

@@ -19,6 +19,7 @@
 
 pub mod bench_harness;
 pub mod config;
+pub mod engine;
 pub mod executor;
 pub mod metrics;
 pub mod model;

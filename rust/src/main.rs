@@ -16,11 +16,12 @@ use anyhow::{anyhow, Result};
 
 use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
 use rtlm::config::{DeviceProfile, Manifest, SchedParams};
+use rtlm::executor::{BatchExecutor, ExecutorFactory, ModeledExecutor, PjrtExecutor};
 use rtlm::metrics::table::fmt_f;
 use rtlm::model::LmSession;
 use rtlm::runtime::ArtifactStore;
 use rtlm::scheduler::PolicyKind;
-use rtlm::server::{serve, ServeOptions};
+use rtlm::server::{serve, serve_with_factory, ServeOptions};
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::uncertainty::Estimator;
 use rtlm::util::cli::Args;
@@ -71,8 +72,8 @@ fn run(args: &Args) -> Result<()> {
                  \x20 calibrate [--reps N]       measure PJRT latencies -> calib.json\n\
                  \x20 bench <exp|all> [--n N]    regenerate paper experiments: {exps}\n\
                  \x20 sim [--model M] [--policy P] [--n N] [--device D] [--variance V]\n\
-                 \x20 serve [--model M] [--policy P] [--n N] [--time-scale S]\n\
-                 \x20 tcp [--model M] [--addr A] [--policy P]\n\
+                 \x20 serve [--model M] [--policy P] [--n N] [--time-scale S] [--backend pjrt|modeled]\n\
+                 \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
                  \x20 score <text...>            print RULEGEN features + u_J",
                 exps = EXPERIMENTS.join(",")
             );
@@ -268,14 +269,39 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let tau = train_scores.quantile(params.k);
     let mut policy = kind.build(&params, model.eta, tau);
 
+    let backend = args.get_or("backend", "pjrt").to_string();
     println!(
-        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={}",
+        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={} backend={backend}",
         kind.label(),
         params.batch_size
     );
-    let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
     let opts = ServeOptions { time_scale, verbose: args.flag("verbose") };
-    let report = serve(session, tasks, &mut *policy, &params, &opts)?;
+    let report = match backend.as_str() {
+        "pjrt" => {
+            let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
+            serve(session, tasks, &mut *policy, &params, &opts)?
+        }
+        // full wire path — threads, channels, ξ deadlines — with batch
+        // durations from the calibrated latency model: no PJRT backend
+        // and no model artifacts needed beyond the manifest pipeline
+        "modeled" | "sim" => {
+            let dev = DeviceProfile::by_name(args.get_or("device", "edge-server"))?;
+            let entry = model.clone();
+            let factory: ExecutorFactory = {
+                let lat = lat.clone();
+                Arc::new(move |_lane| {
+                    Ok(Box::new(ModeledExecutor {
+                        lat: lat.clone(),
+                        model: entry.clone(),
+                        dev: dev.clone(),
+                        time_scale,
+                    }) as Box<dyn BatchExecutor>)
+                })
+            };
+            serve_with_factory(tasks, &mut *policy, &params, &opts, factory)?
+        }
+        other => return Err(anyhow!("unknown serve backend '{other}' (pjrt | modeled)")),
+    };
     let mut s = report.response_times();
     println!(
         "completed {} tasks in {:.1}s wall | response s: mean {} p50 {} p95 {} max {}",
@@ -316,8 +342,20 @@ fn tcp(args: &Args) -> Result<()> {
     let model = store.manifest.model(&model_name)?;
     let policy = kind.build(&params, model.eta, tau);
 
-    let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
-    rtlm::server::tcp::serve_tcp(session, est, policy, params, &addr)
+    let executor: Box<dyn BatchExecutor> = match args.get_or("backend", "pjrt") {
+        "pjrt" => Box::new(PjrtExecutor {
+            session: Arc::new(LmSession::new(store.clone(), &model_name)?),
+        }),
+        // backend-free serving smoke: modeled latencies, empty outputs
+        "modeled" | "sim" => Box::new(ModeledExecutor {
+            lat: LatencyModel::load_or_analytic(&store.manifest)?,
+            model: model.clone(),
+            dev: DeviceProfile::edge_server(),
+            time_scale: args.get_f64("time-scale", 1.0)?,
+        }),
+        other => return Err(anyhow!("unknown tcp backend '{other}' (pjrt | modeled)")),
+    };
+    rtlm::server::tcp::serve_tcp(store, &model_name, executor, est, policy, params, &addr)
 }
 
 fn score(args: &Args) -> Result<()> {

@@ -67,10 +67,16 @@ impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
 
     fn push(&mut self, task: Task) {
         // binary insert keeps the queue ordered; ties break by arrival.
+        // total_cmp keeps the order total even for NaN keys (a NaN
+        // comparison returning false would silently break the invariant
+        // the binary search relies on).
         let k = (self.key)(&task);
-        let pos = self
-            .queue
-            .partition_point(|t| ((self.key)(t), t.arrival) <= (k, task.arrival));
+        let pos = self.queue.partition_point(|t| {
+            (self.key)(t)
+                .total_cmp(&k)
+                .then(t.arrival.total_cmp(&task.arrival))
+                .is_le()
+        });
         self.queue.insert(pos, task);
     }
 

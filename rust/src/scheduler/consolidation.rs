@@ -29,8 +29,10 @@ pub fn split_point(sorted: &[Task], lambda: f64, c: usize) -> usize {
 }
 
 /// Sort tasks by ascending uncertainty (stable; ties keep queue order).
+/// `total_cmp` keeps the order total — a NaN uncertainty sorts last
+/// instead of panicking the scheduler.
 pub fn sort_by_uncertainty(tasks: &mut [Task]) {
-    tasks.sort_by(|a, b| a.uncertainty.partial_cmp(&b.uncertainty).unwrap());
+    tasks.sort_by(|a, b| a.uncertainty.total_cmp(&b.uncertainty));
 }
 
 #[cfg(test)]

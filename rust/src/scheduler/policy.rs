@@ -13,6 +13,21 @@ pub enum Lane {
     Cpu,
 }
 
+impl Lane {
+    /// Every lane, in the engine's fixed dispatch order.
+    pub const ALL: [Lane; 2] = [Lane::Gpu, Lane::Cpu];
+
+    /// Dense index for per-lane state arrays (`[T; Lane::ALL.len()]`) —
+    /// the single source of the lane→slot convention shared by the
+    /// dispatcher core and every execution backend.
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Gpu => 0,
+            Lane::Cpu => 1,
+        }
+    }
+}
+
 /// A dispatched batch.
 #[derive(Clone, Debug)]
 pub struct Batch {

@@ -35,16 +35,24 @@ impl UaSched {
 
     /// Sort the queue by descending UP priority at time `now`
     /// (ties broken by arrival order).
+    ///
+    /// Keys are computed once per task per pop: a comparator that calls
+    /// `up_priority` evaluates it ~2·n·log n times per sort, which
+    /// dominated the scheduling hot path (see `benches/hotpath.rs`).
+    /// `total_cmp` keeps the sort total even if a broken regressor ever
+    /// leaks a NaN uncertainty past the estimator clamp.
     fn sort_queue(&mut self, now: f64) {
         let params = &self.params;
         let eta = self.eta;
-        self.queue.sort_by(|a, b| {
-            let pa = up_priority(a, params, eta, now);
-            let pb = up_priority(b, params, eta, now);
-            pb.partial_cmp(&pa)
-                .unwrap()
-                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+        let mut keyed: Vec<(f64, Task)> = self
+            .queue
+            .drain(..)
+            .map(|task| (up_priority(&task, params, eta, now), task))
+            .collect();
+        keyed.sort_by(|a, b| {
+            b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival))
         });
+        self.queue.extend(keyed.into_iter().map(|(_, task)| task));
     }
 
     fn pop_gpu(&mut self, now: f64, force: bool) -> Option<Batch> {
@@ -247,6 +255,30 @@ mod tests {
     }
 
     #[test]
+    fn nan_uncertainty_task_does_not_panic_the_queue() {
+        // a broken regressor must degrade gracefully: NaN-uncertainty
+        // tasks sort deterministically (total order) and still dispatch
+        let mut s = UaSched::new(params(2), 0.05, 50.0, true);
+        let mut nan_task = test_task(1, 0.0, 5.0, 10.0);
+        nan_task.uncertainty = f64::NAN;
+        s.push(nan_task);
+        s.push(test_task(2, 0.0, 5.0, 10.0));
+        s.push(test_task(3, 0.1, 5.0, 12.0));
+        let mut seen = 0;
+        let mut guard = 0;
+        while s.queue_len() > 0 {
+            guard += 1;
+            assert!(guard < 100, "queue with NaN task failed to drain");
+            for lane in [Lane::Gpu, Lane::Cpu] {
+                if let Some(b) = s.pop_batch(lane, guard as f64, true) {
+                    seen += b.tasks.len();
+                }
+            }
+        }
+        assert_eq!(seen, 3);
+    }
+
+    #[test]
     fn prop_conservation_no_loss_no_dup() {
         prop::check_result(
             "uasched-conservation",
@@ -337,7 +369,7 @@ mod tests {
                             continue;
                         }
                         let mut us: Vec<f64> = b.tasks.iter().map(|t| t.uncertainty).collect();
-                        us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        us.sort_by(f64::total_cmp);
                         for w in us.windows(2) {
                             if w[1] > lambda * w[0].max(1e-9) + 1e-9 {
                                 return Err(format!("lambda violated: {} > {lambda}*{}", w[1], w[0]));

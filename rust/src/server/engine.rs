@@ -1,5 +1,13 @@
-//! Wall-clock serving engine: replay an arrival trace against the real
-//! PJRT artifacts under any scheduling policy.
+//! Wall-clock serving engine: replay an arrival trace against real PJRT
+//! artifacts (or any other [`BatchExecutor`]) under any scheduling
+//! policy.
+//!
+//! Since the dispatcher-core unification this is a thin wrapper: the
+//! loop itself lives in [`crate::engine::run_engine`], driven here by
+//! the wall-clock [`ThreadedBackend`] (injector thread + one worker
+//! thread per lane). The simulator drives the *same* loop, so
+//! scheduling behaviour in simulation and on the wire is identical by
+//! construction.
 //!
 //! The `xla` crate's PJRT handles are not `Send` (Rc-based internals),
 //! so each lane worker thread constructs its *own* client + session from
@@ -7,27 +15,26 @@
 //! GPU+CPU deployment has, and no PJRT state ever crosses threads.
 
 use std::path::PathBuf;
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread;
-use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::config::SchedParams;
-use crate::executor::{execute_cpu, execute_gpu, ExecReport};
+use crate::engine::{run_engine, ThreadedBackend};
+use crate::executor::{BatchExecutor, ExecutorFactory, PjrtExecutor};
 use crate::metrics::Samples;
 use crate::model::LmSession;
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{Batch, Lane, Policy, Task};
+use crate::scheduler::{Policy, Task};
 use crate::sim::results::TaskOutcome;
 
 /// Knobs for a real serving run.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Compress arrival gaps by this factor (10 = 10x faster replay).
+    /// The ξ wait interval is compressed by the same factor.
     pub time_scale: f64,
-    /// Print per-batch progress.
+    /// Print a per-lane summary after the run.
     pub verbose: bool,
 }
 
@@ -64,220 +71,68 @@ impl ServeReport {
     }
 }
 
-enum Event {
-    LaneReady(#[allow(dead_code)] Lane),
-    Arrival(Task, f64),
-    Done(Lane, Vec<ExecReport>, f64),
-    LaneError(Lane, String),
+/// Serve `tasks` with `policy`, executing batches through whatever lane
+/// executors `factory` builds — the engine core, lane threads, arrival
+/// injection and ξ deadlines are identical regardless of executor.
+pub fn serve_with_factory(
+    mut tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    opts: &ServeOptions,
+    factory: ExecutorFactory,
+) -> Result<ServeReport> {
+    tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let n_total = tasks.len();
+    let time_scale = opts.time_scale.max(1e-9);
+    // arrivals replay compressed, so the wait interval compresses too
+    let scaled_params = SchedParams { xi: params.xi / time_scale, ..params.clone() };
+
+    let mut backend = ThreadedBackend::start(tasks, factory, time_scale, false)?;
+    let report = run_engine(&mut backend, policy, &scaled_params, n_total)?;
+    let wall_secs = backend.finish();
+
+    let mut outcomes = report.outcomes;
+    outcomes.sort_by_key(|o| o.id);
+    if opts.verbose {
+        eprintln!(
+            "[{wall_secs:7.2}s] {} done: {} gpu batches, {} cpu batches",
+            report.policy, report.n_batches_gpu, report.n_batches_cpu
+        );
+    }
+    Ok(ServeReport {
+        policy: report.policy,
+        outcomes,
+        wall_secs,
+        sched_secs: report.sched_secs,
+        n_batches_gpu: report.n_batches_gpu,
+        n_batches_cpu: report.n_batches_cpu,
+        infer_secs: report.infer_secs,
+    })
 }
 
-fn lane_worker(
-    lane: Lane,
-    root: PathBuf,
-    model: String,
-    batch_rx: mpsc::Receiver<Batch>,
-    tx: mpsc::Sender<Event>,
-    start: Instant,
-) {
-    let init = || -> Result<(Arc<ArtifactStore>, Arc<LmSession>)> {
+/// Serve `tasks` (arrival times already set, prompts encoded) with the
+/// given policy against real PJRT sessions of `model`. Each lane opens
+/// its own store + session inside its worker thread and warms up the
+/// common buckets before the serving clock starts.
+pub fn serve_from_root(
+    artifacts_root: &std::path::Path,
+    model: &str,
+    tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let root: PathBuf = artifacts_root.to_path_buf();
+    let model = model.to_string();
+    let factory: ExecutorFactory = Arc::new(move |_lane| {
         let store = Arc::new(ArtifactStore::open(&root)?);
         let session = Arc::new(LmSession::new(store.clone(), &model)?);
         // warm up: compile the common buckets before the clock matters
         let warm = vec![session.store().manifest.bos_id];
         session.generate(&[warm], &[2])?;
-        Ok((store, session))
-    };
-    let session = match init() {
-        Ok((_store, session)) => {
-            let _ = tx.send(Event::LaneReady(lane));
-            session
-        }
-        Err(e) => {
-            let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
-            return;
-        }
-    };
-    while let Ok(batch) = batch_rx.recv() {
-        let result = match lane {
-            Lane::Gpu => execute_gpu(&session, &batch).map(|r| vec![r]),
-            Lane::Cpu => execute_cpu(&session, &batch),
-        };
-        let done = start.elapsed().as_secs_f64();
-        match result {
-            Ok(reps) => {
-                if tx.send(Event::Done(lane, reps, done)).is_err() {
-                    return;
-                }
-            }
-            Err(e) => {
-                let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
-                return;
-            }
-        }
-    }
-}
-
-/// Serve `tasks` (arrival times already set, prompts encoded) with the
-/// given policy against real PJRT sessions of `model`.
-pub fn serve_from_root(
-    artifacts_root: &std::path::Path,
-    model: &str,
-    mut tasks: Vec<Task>,
-    policy: &mut dyn Policy,
-    params: &SchedParams,
-    opts: &ServeOptions,
-) -> Result<ServeReport> {
-    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    let n_total = tasks.len();
-    let mut report = ServeReport { policy: policy.name(), ..Default::default() };
-
-    let (event_tx, event_rx) = mpsc::channel::<Event>();
-    let (gpu_tx, gpu_rx) = mpsc::channel::<Batch>();
-    let (cpu_tx, cpu_rx) = mpsc::channel::<Batch>();
-
-    let start = Instant::now();
-
-    let gpu_worker = {
-        let tx = event_tx.clone();
-        let root = artifacts_root.to_path_buf();
-        let model = model.to_string();
-        thread::spawn(move || lane_worker(Lane::Gpu, root, model, gpu_rx, tx, start))
-    };
-    let cpu_worker = {
-        let tx = event_tx.clone();
-        let root = artifacts_root.to_path_buf();
-        let model = model.to_string();
-        thread::spawn(move || lane_worker(Lane::Cpu, root, model, cpu_rx, tx, start))
-    };
-
-    // wait for both lanes to finish compiling before starting the clock
-    let mut ready = 0;
-    while ready < 2 {
-        match event_rx.recv_timeout(Duration::from_secs(600)) {
-            Ok(Event::LaneReady(_)) => ready += 1,
-            Ok(Event::LaneError(lane, e)) => {
-                return Err(anyhow!("{lane:?} lane failed to initialise: {e}"))
-            }
-            Ok(_) => {}
-            Err(e) => return Err(anyhow!("lane initialisation timed out: {e}")),
-        }
-    }
-
-    // --- injector: replay the (scaled) arrival trace ------------------------
-    let epoch = Instant::now();
-    let injector = {
-        let tx = event_tx.clone();
-        let time_scale = opts.time_scale.max(1e-9);
-        thread::spawn(move || {
-            for task in tasks {
-                let due = task.arrival / time_scale;
-                let now = epoch.elapsed().as_secs_f64();
-                if due > now {
-                    thread::sleep(Duration::from_secs_f64(due - now));
-                }
-                let arrived = epoch.elapsed().as_secs_f64();
-                if tx.send(Event::Arrival(task, arrived)).is_err() {
-                    return;
-                }
-            }
-        })
-    };
-    drop(event_tx);
-
-    // --- dispatcher ----------------------------------------------------------
-    let mut meta: std::collections::HashMap<u64, Task> = std::collections::HashMap::new();
-    let mut gpu_busy = false;
-    let mut cpu_busy = false;
-    let mut arrivals_done = false;
-    let mut completed = 0usize;
-    let xi_scaled = params.xi / opts.time_scale.max(1e-9);
-
-    while completed < n_total {
-        match event_rx.recv_timeout(Duration::from_millis(10)) {
-            Ok(Event::Arrival(mut task, arrived)) => {
-                // rebase to the dispatcher clock so response times are real
-                task.priority_point = arrived + (task.priority_point - task.arrival);
-                task.arrival = arrived;
-                meta.insert(task.id, task.clone());
-                let t0 = Instant::now();
-                policy.push(task);
-                report.sched_secs += t0.elapsed().as_secs_f64();
-            }
-            Ok(Event::Done(lane, reps, done)) => {
-                match lane {
-                    Lane::Gpu => gpu_busy = false,
-                    Lane::Cpu => cpu_busy = false,
-                }
-                for rep in reps {
-                    report.infer_secs += rep.infer_secs;
-                    for &id in &rep.task_ids {
-                        let task = meta.remove(&id).expect("unknown task completed");
-                        report.outcomes.push(TaskOutcome {
-                            id,
-                            arrival: task.arrival,
-                            completion: done,
-                            priority_point: task.priority_point,
-                            uncertainty: task.uncertainty,
-                            true_len: task.true_len,
-                            lane: rep.lane,
-                            utype: task.utype.clone(),
-                            malicious: task.malicious,
-                            infer_secs: rep.infer_secs,
-                        });
-                        completed += 1;
-                    }
-                }
-                if opts.verbose {
-                    eprintln!("[{:7.2}s] {lane:?} done: {completed}/{n_total}", done);
-                }
-            }
-            Ok(Event::LaneReady(_)) => {}
-            Ok(Event::LaneError(lane, e)) => {
-                return Err(anyhow!("{lane:?} lane failed mid-run: {e}"));
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => arrivals_done = true,
-        }
-        if !arrivals_done && injector.is_finished() && policy.queue_len() <= meta.len() {
-            arrivals_done = true;
-        }
-
-        // oldest task still waiting in the queue (meta minus in-flight is
-        // a superset; xi forcing only needs a lower bound, so this is safe)
-        let now = epoch.elapsed().as_secs_f64();
-        let oldest = meta.values().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
-        let force = arrivals_done || (oldest.is_finite() && now - oldest >= xi_scaled);
-
-        if !gpu_busy {
-            let t0 = Instant::now();
-            let batch = policy.pop_batch(Lane::Gpu, now, force);
-            report.sched_secs += t0.elapsed().as_secs_f64();
-            if let Some(batch) = batch {
-                report.n_batches_gpu += 1;
-                gpu_busy = true;
-                gpu_tx.send(batch).map_err(|_| anyhow!("gpu lane died"))?;
-            }
-        }
-        if !cpu_busy {
-            let t0 = Instant::now();
-            let batch = policy.pop_batch(Lane::Cpu, now, force);
-            report.sched_secs += t0.elapsed().as_secs_f64();
-            if let Some(batch) = batch {
-                report.n_batches_cpu += 1;
-                cpu_busy = true;
-                cpu_tx.send(batch).map_err(|_| anyhow!("cpu lane died"))?;
-            }
-        }
-    }
-
-    report.wall_secs = epoch.elapsed().as_secs_f64();
-    drop(gpu_tx);
-    drop(cpu_tx);
-    injector.join().ok();
-    gpu_worker.join().ok();
-    cpu_worker.join().ok();
-    report.outcomes.sort_by_key(|o| o.id);
-    Ok(report)
+        Ok(Box::new(PjrtExecutor { session }) as Box<dyn BatchExecutor>)
+    });
+    serve_with_factory(tasks, policy, params, opts, factory)
 }
 
 /// Convenience wrapper taking an open store (dispatcher side only).

@@ -1,13 +1,15 @@
-//! The real-time serving loop (wall clock, real PJRT execution) and the
-//! line-protocol TCP front-end.
+//! The real-time serving loop (wall clock) and the line-protocol TCP
+//! front-end.
 //!
 //! Architecture (std threads — see DESIGN.md §Substitutions for why not
 //! tokio): an injector thread replays the arrival trace, two lane worker
-//! threads own the LM session executions, and the dispatcher thread owns
-//! the policy — the same `Policy` objects the simulator drives, so
-//! scheduling behaviour is identical in both modes.
+//! threads own the batch executors (real PJRT sessions or modeled
+//! latencies), and the dispatcher thread owns the policy. The dispatch
+//! loop itself is `crate::engine::run_engine` — the exact same code the
+//! simulator drives — so scheduling behaviour is identical in both modes
+//! by construction.
 
 pub mod engine;
 pub mod tcp;
 
-pub use engine::{serve, ServeOptions, ServeReport};
+pub use engine::{serve, serve_with_factory, ServeOptions, ServeReport};

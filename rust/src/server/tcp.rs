@@ -7,9 +7,11 @@
 //! into the shared RT-LM scheduler, so concurrent clients exercise
 //! batching and prioritisation exactly like the benchmark workloads.
 //!
-//! PJRT handles are not `Send`, so the LM session lives on the
+//! PJRT handles are not `Send`, so the batch executor lives on the
 //! dispatcher thread and batches execute inline; connection threads only
-//! tokenize/score (pure rust, Send).
+//! tokenize/score (pure rust, Send). Any [`BatchExecutor`] works — real
+//! PJRT sessions, or the modeled-latency executor for a backend-free
+//! serving smoke.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -21,8 +23,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::SchedParams;
-use crate::executor::{execute_cpu, execute_gpu};
-use crate::model::LmSession;
+use crate::executor::BatchExecutor;
+use crate::runtime::ArtifactStore;
 use crate::scheduler::{Lane, Policy, Task};
 use crate::textgen::Vocab;
 use crate::uncertainty::Estimator;
@@ -33,9 +35,12 @@ struct Pending {
     submitted: Instant,
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7490").
+/// Serve forever on `addr` (e.g. "127.0.0.1:7490"), executing batches
+/// through `executor`.
 pub fn serve_tcp(
-    session: Arc<LmSession>,
+    store: Arc<ArtifactStore>,
+    model: &str,
+    mut executor: Box<dyn BatchExecutor>,
     estimator: Estimator,
     mut policy: Box<dyn Policy>,
     params: SchedParams,
@@ -43,14 +48,12 @@ pub fn serve_tcp(
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "rtlm tcp server on {addr} (model={}, policy={})",
-        session.model_name(),
+        "rtlm tcp server on {addr} (model={model}, policy={})",
         policy.name()
     );
-    let store = session.store();
     let vocab = store.vocab.clone();
     let max_input_len = store.manifest.max_input_len;
-    let phi = session.entry.phi;
+    let phi = store.manifest.model(model)?.phi;
 
     let (req_tx, req_rx) = mpsc::channel::<(Task, Pending)>();
     let next_id = Arc::new(AtomicU64::new(0));
@@ -83,30 +86,49 @@ pub fn serve_tcp(
         });
     }
 
-    // dispatcher loop: owns the policy and runs lanes inline
+    // dispatcher loop: owns the policy and runs lanes inline. Like the
+    // engine core it sleeps until the next request or the oldest queued
+    // request's ξ expiry — no fixed-interval polling — and `oldest` is
+    // recomputed from what is actually still queued after each dispatch
+    // round, so one slow client cannot latch `force` permanently on and
+    // degrade the server to batch-1 dispatch.
     let mut pending: std::collections::HashMap<u64, Pending> = std::collections::HashMap::new();
     let mut oldest: Option<Instant> = None;
     loop {
-        match req_rx.recv_timeout(Duration::from_millis(25)) {
-            Ok((task, info)) => {
+        let received = match oldest {
+            // idle: block until the next request arrives
+            None => match req_rx.recv() {
+                Ok(pair) => Some(pair),
+                Err(_) => return Ok(()),
+            },
+            // requests queued: wake at the oldest one's ξ expiry
+            Some(t) => {
+                let remaining = (params.xi - t.elapsed().as_secs_f64()).max(0.0);
+                match req_rx.recv_timeout(Duration::from_secs_f64(remaining)) {
+                    Ok(pair) => Some(pair),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+                }
+            }
+        };
+        if let Some((task, info)) = received {
+            oldest = Some(oldest.unwrap_or(info.submitted).min(info.submitted));
+            pending.insert(task.id, info);
+            policy.push(task);
+            // admit everything already queued before dispatching
+            while let Ok((task, info)) = req_rx.try_recv() {
                 oldest = Some(oldest.unwrap_or(info.submitted).min(info.submitted));
                 pending.insert(task.id, info);
                 policy.push(task);
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
         }
         let force = oldest
             .map(|t| t.elapsed().as_secs_f64() >= params.xi)
             .unwrap_or(false);
-        for lane in [Lane::Gpu, Lane::Cpu] {
+        for lane in Lane::ALL {
             let now = epoch.elapsed().as_secs_f64();
             let Some(batch) = policy.pop_batch(lane, now, force) else { continue };
-            let reports = match lane {
-                Lane::Gpu => execute_gpu(&session, &batch).map(|r| vec![r]),
-                Lane::Cpu => execute_cpu(&session, &batch),
-            };
-            match reports {
+            match executor.execute(&batch) {
                 Ok(reports) => {
                     for rep in reports {
                         for (i, &id) in rep.task_ids.iter().enumerate() {
@@ -124,13 +146,24 @@ pub fn serve_tcp(
                             }
                         }
                     }
-                    if pending.is_empty() {
-                        oldest = None;
+                }
+                Err(e) => {
+                    eprintln!("lane error: {e:#}");
+                    // fail the batch's requests instead of leaving them
+                    // pending forever (their expired ξ would otherwise
+                    // pin the wait timeout at zero)
+                    for t in &batch.tasks {
+                        if let Some(info) = pending.remove(&t.id) {
+                            let _ = info
+                                .reply_tx
+                                .send("{\"error\":\"execution failed\"}".to_string());
+                        }
                     }
                 }
-                Err(e) => eprintln!("lane error: {e:#}"),
             }
         }
+        // ξ tracks the oldest *still-queued* request, not a high-water mark
+        oldest = pending.values().map(|p| p.submitted).min();
     }
 }
 

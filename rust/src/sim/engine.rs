@@ -3,18 +3,19 @@
 //! durations from the latency model; virtual time advances event by
 //! event.
 //!
-//! The same policy objects drive the real-time server (`server`), so
-//! scheduling behaviour in simulation and on the wire is identical by
-//! construction.
-
-use std::collections::HashMap;
-use std::time::Instant;
+//! Since the dispatcher-core unification this is a thin wrapper: the
+//! loop itself lives in [`crate::engine::run_engine`], driven here by
+//! the virtual-clock [`SimBackend`]. The wall-clock server drives the
+//! *same* loop, so scheduling behaviour in simulation and on the wire is
+//! identical by construction — and the cross-backend property test in
+//! `rust/tests/engine_core.rs` asserts it.
 
 use crate::config::{DeviceProfile, ModelEntry, SchedParams};
-use crate::scheduler::{Lane, Policy, Task};
+use crate::engine::{run_engine, SimBackend};
+use crate::scheduler::{Policy, Task};
 
 use super::latency::LatencyModel;
-use super::results::{SimResult, TaskOutcome};
+use super::results::SimResult;
 
 /// Alias kept for the public API surface.
 pub type SimOutcome = SimResult;
@@ -31,167 +32,36 @@ pub fn run_sim(
     dev: &DeviceProfile,
     params: &SchedParams,
 ) -> SimResult {
-    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     let n_total = tasks.len();
-
-    let mut result = SimResult { policy: policy.name(), ..Default::default() };
-    let mut idx = 0usize;
-    let mut now = 0.0f64;
-    let mut gpu_free = 0.0f64;
-    // CPU-lane worker pool: offloaded tasks run batch-1, several in
-    // parallel (dev.cpu_workers); the lane accepts a new batch when any
-    // worker is free.
-    let mut cpu_workers = vec![0.0f64; dev.cpu_workers.max(1)];
-    // arrival time of every task currently inside the policy
-    let mut waiting: HashMap<u64, f64> = HashMap::new();
-    let mut sched_wall = 0.0f64;
-
-    let guard_limit = 1000 + 100 * n_total;
-    let mut iterations = 0usize;
-
-    loop {
-        iterations += 1;
-        assert!(
-            iterations < guard_limit,
-            "simulation did not converge (policy {} stuck with {} waiting)",
-            result.policy,
-            waiting.len()
-        );
-
-        // -- admit arrivals --------------------------------------------------
-        while idx < tasks.len() && tasks[idx].arrival <= now {
-            let task = tasks[idx].clone();
-            waiting.insert(task.id, task.arrival);
-            let t0 = Instant::now();
-            policy.push(task);
-            sched_wall += t0.elapsed().as_secs_f64();
-            idx += 1;
-        }
-
-        // -- dispatch idle lanes ---------------------------------------------
-        let oldest = waiting.values().copied().fold(f64::INFINITY, f64::min);
-        let no_more_arrivals = idx >= tasks.len();
-        let force = no_more_arrivals || (now - oldest >= params.xi);
-
-        if gpu_free <= now {
-            let t0 = Instant::now();
-            let batch = policy.pop_batch(Lane::Gpu, now, force);
-            sched_wall += t0.elapsed().as_secs_f64();
-            if let Some(batch) = batch {
-                let duration = lat.gpu_batch_secs(model, &batch, dev);
-                gpu_free = now + duration;
-                result.n_batches_gpu += 1;
-                for task in batch.tasks {
-                    waiting.remove(&task.id);
-                    result.outcomes.push(TaskOutcome {
-                        id: task.id,
-                        arrival: task.arrival,
-                        completion: gpu_free,
-                        priority_point: task.priority_point,
-                        uncertainty: task.uncertainty,
-                        true_len: task.true_len,
-                        lane: Lane::Gpu,
-                        utype: task.utype,
-                        malicious: task.malicious,
-                        infer_secs: duration,
-                    });
-                }
-            }
-        }
-
-        let cpu_free = cpu_workers.iter().copied().fold(f64::INFINITY, f64::min);
-        if cpu_free <= now {
-            let t0 = Instant::now();
-            let batch = policy.pop_batch(Lane::Cpu, now, force);
-            sched_wall += t0.elapsed().as_secs_f64();
-            if let Some(batch) = batch {
-                result.n_batches_cpu += 1;
-                for task in batch.tasks {
-                    // earliest-free worker takes the task
-                    let w = (0..cpu_workers.len())
-                        .min_by(|&a, &b| {
-                            cpu_workers[a].partial_cmp(&cpu_workers[b]).unwrap()
-                        })
-                        .unwrap();
-                    let start = cpu_workers[w].max(now);
-                    let dur = lat.cpu_task_secs(model, task.true_len, task.input_len, dev);
-                    cpu_workers[w] = start + dur;
-                    waiting.remove(&task.id);
-                    result.outcomes.push(TaskOutcome {
-                        id: task.id,
-                        arrival: task.arrival,
-                        completion: cpu_workers[w],
-                        priority_point: task.priority_point,
-                        uncertainty: task.uncertainty,
-                        true_len: task.true_len,
-                        lane: Lane::Cpu,
-                        utype: task.utype,
-                        malicious: task.malicious,
-                        infer_secs: dur,
-                    });
-                }
-            }
-        }
-
-        // -- advance to the next strictly-future event -----------------------
-        let mut next = f64::INFINITY;
-        if idx < tasks.len() {
-            next = next.min(tasks[idx].arrival);
-        }
-        if gpu_free > now {
-            next = next.min(gpu_free);
-        }
-        let cpu_free = cpu_workers.iter().copied().fold(f64::INFINITY, f64::min);
-        if cpu_free > now && cpu_free.is_finite() {
-            next = next.min(cpu_free);
-        }
-        if !waiting.is_empty() {
-            // xi expiry wakes the dispatcher for a forced dispatch; if it
-            // is already in the past the forced attempt above already ran,
-            // so only a future expiry counts as an event.
-            let oldest = waiting.values().copied().fold(f64::INFINITY, f64::min);
-            if oldest + params.xi > now {
-                next = next.min(oldest + params.xi);
-            } else if next.is_infinite() {
-                // both lanes idle, force already attempted, still stuck:
-                // the policy refuses to emit — that's a bug, not a wait.
-                panic!(
-                    "policy {} deadlocked with {} waiting tasks",
-                    result.policy,
-                    waiting.len()
-                );
-            }
-        }
-        if next.is_infinite() {
-            break; // no arrivals, nothing waiting, lanes idle
-        }
-        now = next.max(now);
-    }
-
-    result.makespan = result
+    let mut backend = SimBackend::new(tasks, lat, model, dev);
+    let report = run_engine(&mut backend, policy, params, n_total)
+        .expect("the virtual-clock backend cannot fail");
+    let makespan = report
         .outcomes
         .iter()
         .map(|o| o.completion)
         .fold(0.0, f64::max);
-    result.sched_wall_secs = sched_wall;
-    assert_eq!(
-        result.outcomes.len(),
-        n_total,
-        "policy {} lost tasks",
-        result.policy
-    );
-    result
+    SimResult {
+        policy: report.policy,
+        outcomes: report.outcomes,
+        makespan,
+        sched_wall_secs: report.sched_secs,
+        n_batches_gpu: report.n_batches_gpu,
+        n_batches_cpu: report.n_batches_cpu,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{DeviceProfile, SchedParams};
-    use crate::scheduler::{Fifo, PolicyKind, Task};
+    use crate::scheduler::{Fifo, Lane, PolicyKind, Task};
     use crate::sim::latency::LatencyModel;
+    use crate::sim::results::TaskOutcome;
     use crate::util::prop;
     use crate::util::rng::Pcg64;
-    use std::collections::BTreeMap;
+    use std::collections::{BTreeMap, HashMap};
 
     fn test_model() -> ModelEntry {
         ModelEntry::stub("m", 0.05, 0.08)
@@ -364,5 +234,55 @@ mod tests {
             &params,
         );
         assert!(agx.mean_response() > edge.mean_response());
+    }
+
+    #[test]
+    fn nan_uncertainty_completes_under_every_policy() {
+        // a regressor bug must degrade gracefully, never panic the engine
+        let params = SchedParams { batch_size: 2, ..Default::default() };
+        let model = test_model();
+        let lat = test_lat();
+        let dev = DeviceProfile::edge_server();
+        let mut tasks: Vec<Task> = (0..8)
+            .map(|i| mk_task(i, i as f64 * 0.1, 10.0 + i as f64, 10))
+            .collect();
+        tasks[3].uncertainty = f64::NAN;
+        tasks[6].uncertainty = f64::NAN;
+        for kind in PolicyKind::ALL_BASELINES {
+            let mut policy = kind.build(&params, model.eta, 60.0);
+            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            assert_eq!(r.outcomes.len(), 8, "{} lost NaN tasks", kind.label());
+        }
+    }
+
+    #[test]
+    fn xi_expiry_forces_partial_batch() {
+        // two tasks at t=0 with C=4: nothing dispatches until the ξ=2s
+        // wait interval expires, then the partial batch goes out forced
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+        let tasks = vec![
+            mk_task(0, 0.0, 10.0, 10),
+            mk_task(1, 0.0, 12.0, 12),
+            mk_task(2, 10.0, 14.0, 14),
+        ];
+        let mut policy = Fifo::new(4);
+        let r = run_sim(
+            tasks,
+            &mut policy,
+            &test_lat(),
+            &test_model(),
+            &DeviceProfile::edge_server(),
+            &params,
+        );
+        let by_id: HashMap<u64, &TaskOutcome> = r.outcomes.iter().map(|o| (o.id, o)).collect();
+        // forced at t = ξ = 2.0, not at t = 10 when the trace drains
+        let xi = params.xi;
+        assert!(
+            by_id[&0].completion >= xi && by_id[&0].completion < 4.0,
+            "first batch should dispatch at the ξ expiry: {}",
+            by_id[&0].completion
+        );
+        assert!(by_id[&2].completion >= 10.0);
+        assert_eq!(r.n_batches_gpu, 2);
     }
 }

@@ -30,6 +30,20 @@ impl Estimator {
         Estimator { lexicon, regressor, max_input_len, min_len, max_len }
     }
 
+    /// Clamp a raw regressor output to a *finite* score in the model
+    /// family's valid range. `f64::clamp` propagates NaN, so a broken
+    /// regressor would otherwise leak NaN into the scheduler's priority
+    /// queue; an unscorable utterance is treated as maximally uncertain
+    /// (the conservative choice — it lands in the quarantine lane, not
+    /// at the front of the accelerator queue).
+    fn clamp_score(&self, raw: f64) -> f64 {
+        if raw.is_finite() {
+            raw.clamp(self.min_len, self.max_len)
+        } else {
+            self.max_len
+        }
+    }
+
     pub fn features(&self, text: &str) -> [f64; rules::N_FEATURES] {
         rules::features(&self.lexicon, text, self.max_input_len)
     }
@@ -39,21 +53,21 @@ impl Estimator {
     pub fn score(&self, text: &str) -> Result<f64> {
         let feats = self.features(text);
         let raw = self.regressor.predict(&feats)?;
-        Ok(raw.clamp(self.min_len, self.max_len))
+        Ok(self.clamp_score(raw))
     }
 
     /// Score a pre-computed raw feature vector (simulation fast path —
     /// skips tokenisation when build-time features are available).
     pub fn score_features(&self, raw_features: &[f64]) -> Result<f64> {
         let raw = self.regressor.predict(raw_features)?;
-        Ok(raw.clamp(self.min_len, self.max_len))
+        Ok(self.clamp_score(raw))
     }
 
     /// Score plus the feature vector (the scheduler logs both).
     pub fn score_with_features(&self, text: &str) -> Result<(f64, [f64; rules::N_FEATURES])> {
         let feats = self.features(text);
         let raw = self.regressor.predict(&feats)?;
-        Ok((raw.clamp(self.min_len, self.max_len), feats))
+        Ok((self.clamp_score(raw), feats))
     }
 
     /// The paper's weighted-rule baseline (Fig. 2c): linear model over

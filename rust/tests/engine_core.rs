@@ -1,0 +1,225 @@
+//! Integration tests for the shared dispatcher core (`rtlm::engine`):
+//! the cross-backend equivalence property (same trace + policy =>
+//! identical per-lane batch sequences in simulation and on the wire),
+//! the arrivals-drain regression (no forced dispatch while arrival
+//! events are still queued), the ξ-deadline wakeup of the wall-clock
+//! dispatcher, and NaN-uncertainty resilience on the wire path.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::engine::{run_engine, SimBackend, ThreadedBackend};
+use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor};
+use rtlm::scheduler::{Fifo, Lane, PolicyKind, Task};
+use rtlm::sim::{Calibration, LatencyModel};
+use rtlm::util::rng::Pcg64;
+
+fn mk_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
+    Task {
+        id,
+        text: String::new(),
+        prompt: vec![],
+        arrival,
+        priority_point,
+        uncertainty,
+        true_len: uncertainty.max(1.0).min(96.0) as usize,
+        input_len: 8,
+        utype: "test".into(),
+        malicious: false,
+        deferrals: 0,
+    }
+}
+
+/// A latency model in which every batch takes zero time — the virtual
+/// clock never advances, matching the instant executor's wall clock
+/// (which advances only by scheduling overhead, microseconds).
+fn zero_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode.insert(
+        "m".into(),
+        std::collections::BTreeMap::from([(1usize, 0.0), (16, 0.0)]),
+    );
+    c.prefill.insert(
+        "m".into(),
+        std::collections::BTreeMap::from([((1usize, 16usize), 0.0), ((16, 64), 0.0)]),
+    );
+    LatencyModel::from_calibration(&c)
+}
+
+fn zero_device() -> DeviceProfile {
+    DeviceProfile {
+        name: "zero".into(),
+        gpu_speed: 1.0,
+        cpu_speed: 1.0,
+        batching_exp: 0.0,
+        dispatch_overhead: 0.0,
+        offload_overhead: 0.0,
+        cpu_workers: 1,
+        batch_knee: 1e9,
+    }
+}
+
+fn instant_factory() -> ExecutorFactory {
+    Arc::new(|_lane| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+}
+
+fn lane_log(log: &[(Lane, Vec<u64>)], lane: Lane) -> Vec<Vec<u64>> {
+    log.iter()
+        .filter(|(l, _)| *l == lane)
+        .map(|(_, ids)| ids.clone())
+        .collect()
+}
+
+/// Same trace + same policy through the virtual-clock backend and the
+/// threaded wall-clock backend (deterministic instant executor, arrivals
+/// pre-queued) must dispatch identical batch sequences on each lane.
+#[test]
+fn cross_backend_dispatch_equivalence() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = zero_latency();
+    let dev = zero_device();
+
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 4 + rng.range_usize(0, 24);
+        // coarse value grids keep priorities well separated, so the
+        // microseconds of wall-clock drift on the threaded path cannot
+        // reorder them; exact ties fall back to arrival/queue order,
+        // which both backends share.
+        let tasks: Vec<Task> = (0..n)
+            .map(|i| {
+                let pp = 1.0 + 0.5 * rng.range_usize(0, 10) as f64;
+                let u = 5.0 + 10.0 * rng.range_usize(0, 9) as f64;
+                mk_task(i as u64, 0.0, pp, u)
+            })
+            .collect();
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+
+        for kind in [
+            PolicyKind::Fifo,
+            PolicyKind::Hpf,
+            PolicyKind::Luf,
+            PolicyKind::Muf,
+            PolicyKind::UpC,
+            PolicyKind::RtLm,
+        ] {
+            let tau = 60.0;
+
+            let mut sim_policy = kind.build(&params, model.eta, tau);
+            let mut sim_backend = SimBackend::new(tasks.clone(), &lat, &model, &dev);
+            let sim = run_engine(&mut sim_backend, &mut *sim_policy, &params, n)
+                .expect("sim backend");
+
+            let mut thr_policy = kind.build(&params, model.eta, tau);
+            let mut thr_backend =
+                ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
+                    .expect("threaded backend start");
+            let thr = run_engine(&mut thr_backend, &mut *thr_policy, &params, n)
+                .expect("threaded backend");
+            thr_backend.finish();
+
+            for lane in [Lane::Gpu, Lane::Cpu] {
+                assert_eq!(
+                    lane_log(&sim.dispatch_log, lane),
+                    lane_log(&thr.dispatch_log, lane),
+                    "seed {seed} policy {} lane {lane:?}: dispatch sequences diverged",
+                    kind.label()
+                );
+            }
+            assert_eq!(sim.outcomes.len(), n);
+            assert_eq!(thr.outcomes.len(), n);
+            let sim_lanes: HashMap<u64, Lane> =
+                sim.outcomes.iter().map(|o| (o.id, o.lane)).collect();
+            for o in &thr.outcomes {
+                assert_eq!(
+                    sim_lanes[&o.id], o.lane,
+                    "seed {seed} policy {}: task {} changed lane",
+                    kind.label(),
+                    o.id
+                );
+            }
+        }
+    }
+}
+
+/// Regression for the arrivals-done race: the historical wall-clock
+/// engine guessed "arrivals done" from `policy.queue_len() <=
+/// meta.len()` (vacuously true), so ξ-forced dispatch could fire while
+/// Arrival events were still queued in the channel — emitting runt
+/// batches. With every arrival pre-queued, the unified core must admit
+/// the whole channel before its first (then forced) dispatch.
+#[test]
+fn arrivals_drain_before_forced_dispatch() {
+    let n = 10usize;
+    let tasks: Vec<Task> = (0..n)
+        .map(|i| mk_task(i as u64, 0.0, 5.0, 10.0))
+        .collect();
+    let params = SchedParams { batch_size: 4, ..Default::default() };
+    let mut policy = Fifo::new(params.batch_size);
+    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, true)
+        .expect("backend start");
+    let report = run_engine(&mut backend, &mut policy, &params, n).expect("engine");
+    backend.finish();
+
+    assert_eq!(
+        lane_log(&report.dispatch_log, Lane::Gpu),
+        vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]],
+        "forced dispatch must not fire before the arrival channel drains"
+    );
+    assert_eq!(report.n_batches_gpu, 3);
+    assert_eq!(report.n_batches_cpu, 0);
+}
+
+/// The wall-clock dispatcher must wake at the ξ expiry (computed
+/// deadline — not a 10 ms busy-poll) and force the partial batch out,
+/// instead of waiting for the next arrival or completion event.
+#[test]
+fn xi_deadline_wakes_wall_clock_dispatcher() {
+    let tasks = vec![
+        mk_task(0, 0.0, 5.0, 10.0),
+        mk_task(1, 0.0, 5.0, 12.0),
+        mk_task(2, 0.8, 5.0, 14.0),
+    ];
+    let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
+    let mut policy = Fifo::new(params.batch_size);
+    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, false)
+        .expect("backend start");
+    let report = run_engine(&mut backend, &mut policy, &params, 3).expect("engine");
+    backend.finish();
+
+    assert_eq!(
+        lane_log(&report.dispatch_log, Lane::Gpu),
+        vec![vec![0, 1], vec![2]],
+        "ξ expiry should force the partial batch before the late arrival"
+    );
+    let by_id: HashMap<u64, f64> =
+        report.outcomes.iter().map(|o| (o.id, o.completion)).collect();
+    assert!(
+        by_id[&0] >= 0.18 && by_id[&0] < 0.7,
+        "first batch should dispatch at the ξ=0.2s expiry, completed at {}",
+        by_id[&0]
+    );
+    assert!(by_id[&2] >= 0.75, "late task completed at {}", by_id[&2]);
+}
+
+/// NaN-uncertainty tasks must not panic the wire path either: ordering
+/// is total everywhere on the scheduling hot path.
+#[test]
+fn nan_uncertainty_survives_the_wire_path() {
+    let mut tasks: Vec<Task> = (0..6)
+        .map(|i| mk_task(i as u64, 0.0, 5.0 + i as f64, 10.0 + i as f64))
+        .collect();
+    tasks[1].uncertainty = f64::NAN;
+    tasks[4].uncertainty = f64::NAN;
+    let params = SchedParams { batch_size: 2, ..Default::default() };
+    for kind in [PolicyKind::Fifo, PolicyKind::Hpf, PolicyKind::RtLm] {
+        let mut policy = kind.build(&params, 0.05, 60.0);
+        let mut backend =
+            ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
+                .expect("backend start");
+        let report = run_engine(&mut backend, &mut *policy, &params, 6).expect("engine");
+        backend.finish();
+        assert_eq!(report.outcomes.len(), 6, "{} lost NaN tasks", kind.label());
+    }
+}

@@ -1,15 +1,16 @@
 //! The generic dispatcher loop and the [`ExecutionBackend`] trait it is
 //! parameterised over.
 //!
-//! Unified semantics (both backends, by construction):
+//! Unified semantics (all backends, by construction):
 //!
 //! - **Admission**: the backend delivers arrivals on its engine clock;
 //!   the core pushes them into the policy and tracks their arrival times.
-//! - **ξ-forcing**: a lane pop is forced once *all* `n_total` tasks have
-//!   been admitted (never earlier — the historical wall-clock engine
-//!   guessed "arrivals done" from queue lengths and could force while
-//!   arrivals were still in flight), or once the oldest queued task has
-//!   waited `params.xi` engine-seconds.
+//! - **ξ-forcing**: a lane pop is forced once the arrival source is
+//!   *known drained* — every task of a counted trace admitted, or the
+//!   open stream reported closed (never earlier — the historical
+//!   wall-clock engine guessed "arrivals done" from queue lengths and
+//!   could force while arrivals were still in flight) — or once the
+//!   oldest queued task has waited `params.xi` engine-seconds.
 //! - **Lane gating**: at most one batch in flight per lane; a lane
 //!   accepts the next batch only when the previous one has fully
 //!   completed (the historical simulator let the CPU lane stack tasks
@@ -17,6 +18,14 @@
 //! - **Waiting**: the core computes the next ξ-expiry and hands it to
 //!   the backend as an absolute-time deadline — wall-clock backends
 //!   sleep until an event or that deadline instead of busy-polling.
+//!
+//! The loop is workload-shape agnostic: [`ArrivalSource::Counted`]
+//! replays a closed trace of known size (simulation, `rtlm serve`),
+//! [`ArrivalSource::Stream`] serves an open-ended request stream until
+//! the backend reports it closed (the TCP front-end). With a
+//! [`run_engine_stream`] completion callback attached, per-task results
+//! are emitted as batches finish — that is how TCP replies flow — rather
+//! than only in the final [`EngineReport`].
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -27,15 +36,28 @@ use crate::config::SchedParams;
 use crate::scheduler::{Batch, Lane, Policy, Task};
 use crate::sim::results::TaskOutcome;
 
+/// One completed task inside a [`BatchDone`].
+#[derive(Debug)]
+pub struct TaskDone {
+    pub id: u64,
+    /// Completion time on the engine clock.
+    pub at: f64,
+    /// Pure inference seconds attributed to this task.
+    pub infer_secs: f64,
+    /// Generated token ids (empty on backends that produce no text,
+    /// e.g. the virtual-clock simulator).
+    pub output: Vec<i32>,
+}
+
 /// One completed batch, reported by the backend.
+///
+/// CPU-lane tasks may complete at different times within one batch
+/// (worker pool / sequential execution); the lane itself frees only when
+/// the whole batch is done.
 #[derive(Debug)]
 pub struct BatchDone {
     pub lane: Lane,
-    /// Per-task `(id, completion time, inference seconds)` on the
-    /// engine clock. CPU-lane tasks may complete at different times
-    /// within one batch (worker pool / sequential execution); the lane
-    /// itself frees only when the whole batch is done.
-    pub completions: Vec<(u64, f64, f64)>,
+    pub completions: Vec<TaskDone>,
     /// Pure model-inference seconds of the whole batch (counted once,
     /// not per task).
     pub batch_infer_secs: f64,
@@ -49,6 +71,10 @@ pub struct Step {
     pub arrivals: Vec<Task>,
     /// Batches that finished; their lanes are free again.
     pub done: Vec<BatchDone>,
+    /// The arrival stream is closed: every arrival the source will ever
+    /// produce has been delivered in this or an earlier step. Latched by
+    /// the core; only [`ArrivalSource::Stream`] runs consult it.
+    pub stream_closed: bool,
     /// Virtual-clock backends only: no event can ever occur again (no
     /// pending arrivals, nothing in flight, no deadline). With tasks
     /// still queued this means the policy refuses to emit — a bug.
@@ -71,10 +97,32 @@ pub trait ExecutionBackend {
     fn wait(&mut self, deadline: Option<f64>) -> Result<Step>;
 }
 
+/// The workload shape a [`run_engine_stream`] run serves.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalSource {
+    /// A closed workload: exactly this many tasks will arrive. The run
+    /// ends when all of them have completed, and "arrivals done" (the
+    /// ξ-forcing trigger) is the counted admission of the last one.
+    Counted(usize),
+    /// An open-ended stream (live serving): arrivals keep coming until
+    /// the backend reports [`Step::stream_closed`]. The run ends when
+    /// the stream has closed and every admitted task has completed.
+    Stream,
+}
+
+/// Per-task completion callback: called as each task finishes, with the
+/// accounted outcome and the generated token ids. Runs on the
+/// dispatcher thread — keep it cheap (hand replies to a channel, don't
+/// do I/O that can block dispatch).
+pub type OnComplete<'a> = dyn FnMut(&TaskOutcome, &[i32]) + 'a;
+
 /// Backend-agnostic outcome of one serving run.
 #[derive(Debug, Default)]
 pub struct EngineReport {
     pub policy: String,
+    /// Per-task outcomes. Empty in streaming mode (an open stream with a
+    /// completion callback attached): a long-lived server hands results
+    /// to the callback instead of growing this without bound.
     pub outcomes: Vec<TaskOutcome>,
     /// Engine-clock seconds spent inside policy push/pop (Table VII).
     pub sched_secs: f64,
@@ -83,12 +131,14 @@ pub struct EngineReport {
     pub n_batches_gpu: usize,
     pub n_batches_cpu: usize,
     /// Every dispatched batch in dispatch order: `(lane, task ids)`.
-    /// The cross-backend equivalence test compares these.
+    /// The cross-backend equivalence test compares these. Empty in
+    /// streaming mode, like `outcomes`.
     pub dispatch_log: Vec<(Lane, Vec<u64>)>,
 }
 
 /// Run `policy` over `n_total` tasks delivered by `backend` until every
-/// task has completed. Panics (like the historical simulator) if the
+/// task has completed — the closed-workload wrapper around
+/// [`run_engine_stream`]. Panics (like the historical simulator) if the
 /// policy deadlocks or the loop fails to converge; backend errors (lane
 /// worker death, channel loss) propagate as `Err`.
 pub fn run_engine(
@@ -97,7 +147,25 @@ pub fn run_engine(
     params: &SchedParams,
     n_total: usize,
 ) -> Result<EngineReport> {
+    run_engine_stream(backend, policy, params, ArrivalSource::Counted(n_total), None)
+}
+
+/// The dispatcher core: drive `policy` over whatever `source` delivers
+/// through `backend`, optionally streaming per-task completions to
+/// `on_complete` as batches finish.
+pub fn run_engine_stream(
+    backend: &mut dyn ExecutionBackend,
+    policy: &mut dyn Policy,
+    params: &SchedParams,
+    source: ArrivalSource,
+    mut on_complete: Option<&mut OnComplete<'_>>,
+) -> Result<EngineReport> {
     let mut report = EngineReport { policy: policy.name(), ..Default::default() };
+
+    // Streaming mode: an open stream with a consumer attached. Per-task
+    // results go to the callback only — a server alive for millions of
+    // requests must not accumulate them in the report.
+    let store_results = matches!(source, ArrivalSource::Counted(_)) || on_complete.is_none();
 
     // arrival time of every task queued inside the policy (removed at
     // dispatch — in-flight tasks no longer age the ξ timer)
@@ -106,15 +174,29 @@ pub fn run_engine(
     let mut meta: HashMap<u64, Task> = HashMap::new();
     let mut admitted = 0usize;
     let mut completed = 0usize;
+    let mut stream_closed = false;
     let mut busy = [false; Lane::ALL.len()];
-
-    let guard_limit = 1000 + 100 * n_total;
     let mut iterations = 0usize;
 
-    while completed < n_total {
+    loop {
+        let served = match source {
+            ArrivalSource::Counted(n) => completed >= n,
+            ArrivalSource::Stream => stream_closed && completed == admitted,
+        };
+        if served {
+            break;
+        }
+
         iterations += 1;
+        // Convergence guard, sized to the work actually admitted so far:
+        // a live stream grows the bound with its traffic, a closed trace
+        // keeps the historical fixed bound.
+        let expected = match source {
+            ArrivalSource::Counted(n) => n,
+            ArrivalSource::Stream => admitted,
+        };
         assert!(
-            iterations < guard_limit,
+            iterations < 1000 + 100 * expected,
             "engine did not converge (policy {} stuck with {} queued, {} completed)",
             report.policy,
             queued.len(),
@@ -122,6 +204,12 @@ pub fn run_engine(
         );
 
         // -- dispatch idle lanes ------------------------------------------
+        // "Arrivals done" is known, never guessed: the counted admission
+        // of a closed trace, or the stream-closed signal of an open one.
+        let arrivals_done = match source {
+            ArrivalSource::Counted(n) => admitted == n,
+            ArrivalSource::Stream => stream_closed,
+        };
         let now = backend.now();
         let oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
         // ξ-expiry is compared as `now >= oldest + xi` — the *same*
@@ -130,7 +218,7 @@ pub fn run_engine(
         // subtraction form `now - oldest >= xi` can round down at the
         // expiry instant and livelock the loop re-arming a deadline
         // that never fires force.)
-        let force = admitted == n_total || (oldest.is_finite() && now >= oldest + params.xi);
+        let force = arrivals_done || (oldest.is_finite() && now >= oldest + params.xi);
         for lane in Lane::ALL {
             if busy[lane.index()] {
                 continue;
@@ -144,11 +232,13 @@ pub fn run_engine(
                     Lane::Gpu => report.n_batches_gpu += 1,
                     Lane::Cpu => report.n_batches_cpu += 1,
                 }
-                let ids: Vec<u64> = batch.tasks.iter().map(|t| t.id).collect();
-                for id in &ids {
-                    queued.remove(id);
+                for task in &batch.tasks {
+                    queued.remove(&task.id);
                 }
-                report.dispatch_log.push((lane, ids));
+                if store_results {
+                    let ids: Vec<u64> = batch.tasks.iter().map(|t| t.id).collect();
+                    report.dispatch_log.push((lane, ids));
+                }
                 backend.submit(batch)?;
             }
         }
@@ -172,12 +262,18 @@ pub fn run_engine(
             None
         };
         let step = backend.wait(deadline)?;
+        stream_closed = stream_closed || step.stream_closed;
 
         if step.exhausted {
             assert!(
                 step.arrivals.is_empty() && step.done.is_empty(),
                 "backend reported exhausted with undelivered events"
             );
+            // an empty stream can close and exhaust in the same step;
+            // that is a served run, not a deadlock
+            if matches!(source, ArrivalSource::Stream) && stream_closed && completed == admitted {
+                break;
+            }
             panic!(
                 "policy {} deadlocked with {} waiting tasks",
                 report.policy,
@@ -199,30 +295,33 @@ pub fn run_engine(
         for done in step.done {
             busy[done.lane.index()] = false;
             report.infer_secs += done.batch_infer_secs;
-            for (id, completion, infer_secs) in done.completions {
-                let task = meta.remove(&id).expect("unknown task completed");
-                report.outcomes.push(TaskOutcome {
-                    id,
+            for t in done.completions {
+                let task = meta.remove(&t.id).expect("unknown task completed");
+                let outcome = TaskOutcome {
+                    id: t.id,
                     arrival: task.arrival,
-                    completion,
+                    completion: t.at,
                     priority_point: task.priority_point,
                     uncertainty: task.uncertainty,
                     true_len: task.true_len,
                     lane: done.lane,
                     utype: task.utype,
                     malicious: task.malicious,
-                    infer_secs,
-                });
+                    infer_secs: t.infer_secs,
+                };
+                if let Some(cb) = on_complete.as_mut() {
+                    cb(&outcome, &t.output);
+                }
+                if store_results {
+                    report.outcomes.push(outcome);
+                }
                 completed += 1;
             }
         }
     }
 
-    assert_eq!(
-        report.outcomes.len(),
-        n_total,
-        "policy {} lost tasks",
-        report.policy
-    );
+    if let ArrivalSource::Counted(n) = source {
+        assert_eq!(completed, n, "policy {} lost tasks", report.policy);
+    }
     Ok(report)
 }

@@ -1,30 +1,41 @@
 //! The shared dispatcher core: one scheduling loop, many execution
-//! backends.
+//! backends, any workload shape.
 //!
-//! Historically the repo carried two hand-maintained copies of the
-//! dispatch loop — a virtual-clock one in `sim::engine` and a wall-clock
-//! one in `server::engine` — which drifted apart on ξ-forcing, arrival
-//! draining and lane gating. This module is the single source of truth:
-//! arrival admission, ξ-forced dispatch, lane gating (one batch in
-//! flight per lane) and outcome accounting live exactly once in
-//! [`core::run_engine`], parameterised over an [`ExecutionBackend`]:
+//! Historically the repo carried hand-maintained copies of the dispatch
+//! loop — a virtual-clock one in `sim::engine`, a wall-clock one in
+//! `server::engine`, and a third inline-execution one in `server::tcp` —
+//! which drifted apart on ξ-forcing, arrival draining and lane gating.
+//! This module is the single source of truth: arrival admission,
+//! ξ-forced dispatch, lane gating (one batch in flight per lane) and
+//! outcome accounting live exactly once in [`core::run_engine_stream`],
+//! parameterised over an [`ExecutionBackend`] and an [`ArrivalSource`]:
 //!
 //! - [`SimBackend`] — a virtual clock over the calibrated
 //!   [`crate::sim::LatencyModel`]; `sim::run_sim` is a thin wrapper.
-//! - [`ThreadedBackend`] — wall clock, an injector thread replaying the
-//!   arrival trace and one worker thread per lane running any
-//!   [`crate::executor::BatchExecutor`] (real PJRT, modeled-latency, or
-//!   instant); `server::serve_from_root` is a thin wrapper.
+//! - [`ThreadedBackend`] — wall clock, one worker thread per lane
+//!   running any [`crate::executor::BatchExecutor`] (real PJRT,
+//!   modeled-latency, or instant). Arrivals come from an injector
+//!   thread replaying a trace (`server::serve_from_root`) or from
+//!   [`ArrivalHandle`]s held by live producers (`server::tcp` feeds one
+//!   per connection, so the TCP front-end is just another way to drive
+//!   the same loop).
 //!
-//! Because both backends drive the *same* loop, the cross-backend
+//! [`ArrivalSource::Counted`] ends a run after a known task count
+//! (closed traces); [`ArrivalSource::Stream`] serves until the backend
+//! reports the stream closed (live serving). A [`core::OnComplete`]
+//! callback streams per-task results out as batches finish — TCP
+//! replies, progress meters — instead of waiting for the final report.
+//!
+//! Because all backends drive the *same* loop, the cross-backend
 //! property test in `rust/tests/engine_core.rs` can assert that the same
 //! trace + policy dispatches identical batch sequences in simulation and
-//! on the wire.
+//! on the wire — and that counted and open-stream runs agree.
 
 pub mod core;
 pub mod sim_backend;
 pub mod threaded;
 
-pub use self::core::{run_engine, BatchDone, EngineReport, ExecutionBackend, Step};
+pub use self::core::{run_engine, run_engine_stream, ArrivalSource, BatchDone, EngineReport};
+pub use self::core::{ExecutionBackend, OnComplete, Step, TaskDone};
 pub use sim_backend::SimBackend;
-pub use threaded::ThreadedBackend;
+pub use threaded::{ArrivalHandle, ThreadedBackend};

@@ -12,7 +12,7 @@ use crate::config::{DeviceProfile, ModelEntry};
 use crate::scheduler::{Batch, Lane, Task};
 use crate::sim::latency::LatencyModel;
 
-use super::core::{BatchDone, ExecutionBackend, Step};
+use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
 
 /// An in-flight batch: frees its lane at `lane_free`, with per-task
 /// completion times possibly earlier (CPU worker pool).
@@ -79,7 +79,12 @@ impl ExecutionBackend for SimBackend<'_> {
                         completions: batch
                             .tasks
                             .iter()
-                            .map(|t| (t.id, done_at, dur))
+                            .map(|t| TaskDone {
+                                id: t.id,
+                                at: done_at,
+                                infer_secs: dur,
+                                output: Vec::new(),
+                            })
                             .collect(),
                         batch_infer_secs: dur,
                     },
@@ -104,7 +109,12 @@ impl ExecutionBackend for SimBackend<'_> {
                         self.dev,
                     );
                     workers[w] += dur;
-                    completions.push((task.id, workers[w], dur));
+                    completions.push(TaskDone {
+                        id: task.id,
+                        at: workers[w],
+                        infer_secs: dur,
+                        output: Vec::new(),
+                    });
                     infer += dur;
                 }
                 let lane_free = workers.iter().copied().fold(self.now, f64::max);
@@ -126,7 +136,11 @@ impl ExecutionBackend for SimBackend<'_> {
         let next = self.next_event();
         let target = next.min(deadline.unwrap_or(f64::INFINITY));
         if target.is_infinite() {
-            return Ok(Step { exhausted: true, ..Default::default() });
+            return Ok(Step {
+                exhausted: true,
+                stream_closed: self.next_arrival.is_none(),
+                ..Default::default()
+            });
         }
         self.now = self.now.max(target);
 
@@ -146,6 +160,9 @@ impl ExecutionBackend for SimBackend<'_> {
                 step.done.push(slot.take().unwrap().done);
             }
         }
+        // a finite trace is an "open stream" that closes with its last
+        // arrival — open-stream runs over the simulator terminate
+        step.stream_closed = self.next_arrival.is_none();
         Ok(step)
     }
 }

@@ -1,7 +1,8 @@
-//! Wall-clock execution backend: an injector thread replays the arrival
-//! trace and one worker thread per lane runs batches through a
-//! [`BatchExecutor`] (real PJRT sessions, modeled latencies, or an
-//! instant executor for deterministic tests).
+//! Wall-clock execution backend: arrivals come either from an injector
+//! thread replaying a finite trace, or from [`ArrivalHandle`]s held by
+//! live producers (the TCP connection handlers); one worker thread per
+//! lane runs batches through a [`BatchExecutor`] (real PJRT sessions,
+//! modeled latencies, or an instant executor for deterministic tests).
 //!
 //! PJRT handles are not `Send` (Rc-based internals), so executors are
 //! constructed *inside* their lane thread by an [`ExecutorFactory`] —
@@ -18,7 +19,7 @@ use anyhow::{anyhow, Result};
 use crate::executor::{ExecReport, ExecutorFactory};
 use crate::scheduler::{Batch, Lane, Task};
 
-use super::core::{BatchDone, ExecutionBackend, Step};
+use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
 
 enum Event {
     LaneReady(Lane),
@@ -27,6 +28,45 @@ enum Event {
     /// every time in a run shares the single post-init epoch clock.
     Done(Lane, Vec<ExecReport>),
     LaneError(Lane, String),
+    /// The arrival source will never produce another task: the trace
+    /// injector drained, or a live producer called
+    /// [`ArrivalHandle::close`].
+    StreamClosed,
+}
+
+/// A live producer's handle into the backend: stamp tasks onto the
+/// engine clock and feed them to the dispatcher. Clone one per
+/// connection handler; call [`close`](ArrivalHandle::close) to end the
+/// stream (an open-stream [`run_engine_stream`] run then drains and
+/// returns).
+///
+/// [`run_engine_stream`]: super::core::run_engine_stream
+#[derive(Clone)]
+pub struct ArrivalHandle {
+    tx: mpsc::Sender<Event>,
+    epoch: Instant,
+}
+
+impl ArrivalHandle {
+    /// Current engine-clock time in seconds (the dispatcher's clock).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Feed one task to the dispatcher. The task's `arrival` /
+    /// `priority_point` should be stamped with [`now`](Self::now);
+    /// the dispatcher rebases them onto its receipt time either way.
+    /// Errors only when the dispatcher is gone.
+    pub fn inject(&self, task: Task) -> Result<()> {
+        let arrived = self.epoch.elapsed().as_secs_f64();
+        self.tx.send(Event::Arrival(task, arrived)).map_err(|_| anyhow!("dispatcher is gone"))
+    }
+
+    /// Declare the arrival stream closed. Idempotent; ignored if the
+    /// dispatcher already exited.
+    pub fn close(&self) {
+        let _ = self.tx.send(Event::StreamClosed);
+    }
 }
 
 fn lane_worker(
@@ -65,6 +105,7 @@ pub struct ThreadedBackend {
     gpu_tx: Option<mpsc::Sender<Batch>>,
     cpu_tx: Option<mpsc::Sender<Batch>>,
     epoch: Instant,
+    stream_closed: bool,
     injector: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -72,18 +113,8 @@ pub struct ThreadedBackend {
 impl ThreadedBackend {
     /// Spawn the lane workers, wait for *both* lanes to report ready
     /// (tracked per lane — one lane reporting twice cannot mask the
-    /// other failing), start the epoch clock, then start replaying
-    /// `tasks` (arrival gaps compressed by `time_scale`).
-    ///
-    /// With `inject_upfront` every arrival is queued synchronously
-    /// before this constructor returns — deterministic admission for
-    /// the cross-backend equivalence and drain tests.
-    pub fn start(
-        tasks: Vec<Task>,
-        factory: ExecutorFactory,
-        time_scale: f64,
-        inject_upfront: bool,
-    ) -> Result<ThreadedBackend> {
+    /// other failing), and start the epoch clock.
+    fn spawn_lanes(factory: ExecutorFactory) -> Result<(ThreadedBackend, mpsc::Sender<Event>)> {
         let (event_tx, event_rx) = mpsc::channel::<Event>();
         let (gpu_tx, gpu_rx) = mpsc::channel::<Batch>();
         let (cpu_tx, cpu_rx) = mpsc::channel::<Batch>();
@@ -109,19 +140,46 @@ impl ThreadedBackend {
             }
         }
 
-        let epoch = Instant::now();
+        let backend = ThreadedBackend {
+            event_rx,
+            gpu_tx: Some(gpu_tx),
+            cpu_tx: Some(cpu_tx),
+            epoch: Instant::now(),
+            stream_closed: false,
+            injector: None,
+            workers,
+        };
+        Ok((backend, event_tx))
+    }
+
+    /// Trace-replay mode: spawn the lane workers, then start replaying
+    /// `tasks` (arrival gaps compressed by `time_scale`). The stream
+    /// closes when the trace drains, so the trace can drive both
+    /// counted and open-stream engine runs.
+    ///
+    /// With `inject_upfront` every arrival is queued synchronously
+    /// before this constructor returns — deterministic admission for
+    /// the cross-backend equivalence and drain tests.
+    pub fn start(
+        tasks: Vec<Task>,
+        factory: ExecutorFactory,
+        time_scale: f64,
+        inject_upfront: bool,
+    ) -> Result<ThreadedBackend> {
+        let (mut backend, event_tx) = Self::spawn_lanes(factory)?;
+        let epoch = backend.epoch;
         let time_scale = time_scale.max(1e-9);
-        let injector = if inject_upfront {
+        if inject_upfront {
             for task in tasks {
                 let arrived = epoch.elapsed().as_secs_f64();
                 event_tx
                     .send(Event::Arrival(task, arrived))
                     .map_err(|_| anyhow!("event channel closed during upfront injection"))?;
             }
-            None
+            let _ = event_tx.send(Event::StreamClosed);
         } else {
             let tx = event_tx.clone();
-            Some(thread::spawn(move || {
+            backend.injector = Some(thread::spawn(move || {
                 for task in tasks {
                     let due = task.arrival / time_scale;
                     let now = epoch.elapsed().as_secs_f64();
@@ -133,18 +191,20 @@ impl ThreadedBackend {
                         return;
                     }
                 }
-            }))
-        };
+                let _ = tx.send(Event::StreamClosed);
+            }));
+        }
         drop(event_tx); // only workers + injector hold senders now
+        Ok(backend)
+    }
 
-        Ok(ThreadedBackend {
-            event_rx,
-            gpu_tx: Some(gpu_tx),
-            cpu_tx: Some(cpu_tx),
-            epoch,
-            injector,
-            workers,
-        })
+    /// Live-stream mode: spawn the lane workers and hand back an
+    /// [`ArrivalHandle`] for producers (connection handlers) to feed.
+    /// The stream stays open until a handle calls `close`.
+    pub fn start_stream(factory: ExecutorFactory) -> Result<(ThreadedBackend, ArrivalHandle)> {
+        let (backend, event_tx) = Self::spawn_lanes(factory)?;
+        let handle = ArrivalHandle { tx: event_tx, epoch: backend.epoch };
+        Ok((backend, handle))
     }
 
     /// Total wall seconds since the post-init epoch, then shut the lane
@@ -162,7 +222,7 @@ impl ThreadedBackend {
         wall
     }
 
-    fn apply(&self, event: Event, step: &mut Step) -> Result<()> {
+    fn apply(&mut self, event: Event, step: &mut Step) -> Result<()> {
         match event {
             Event::Arrival(mut task, arrived) => {
                 // rebase to the dispatcher clock so response times are real
@@ -174,10 +234,11 @@ impl ThreadedBackend {
                 let done = self.epoch.elapsed().as_secs_f64();
                 let mut completions = Vec::new();
                 let mut batch_infer_secs = 0.0;
-                for rep in &reports {
-                    batch_infer_secs += rep.infer_secs;
-                    for &id in &rep.task_ids {
-                        completions.push((id, done, rep.infer_secs));
+                for rep in reports {
+                    let ExecReport { task_ids, outputs, infer_secs, .. } = rep;
+                    batch_infer_secs += infer_secs;
+                    for (id, output) in task_ids.into_iter().zip(outputs) {
+                        completions.push(TaskDone { id, at: done, infer_secs, output });
                     }
                 }
                 step.done.push(BatchDone { lane, completions, batch_infer_secs });
@@ -186,6 +247,7 @@ impl ThreadedBackend {
             Event::LaneError(lane, e) => {
                 return Err(anyhow!("{lane:?} lane failed mid-run: {e}"));
             }
+            Event::StreamClosed => self.stream_closed = true,
         }
         Ok(())
     }
@@ -231,6 +293,7 @@ impl ExecutionBackend for ThreadedBackend {
         while let Ok(event) = self.event_rx.try_recv() {
             self.apply(event, &mut step)?;
         }
+        step.stream_closed = self.stream_closed;
         Ok(step)
     }
 }

@@ -36,6 +36,9 @@ pub struct ExecReport {
 /// A lane's execution strategy. The accelerator lane expects one report
 /// for the whole batch; the quarantine lane one report per task (so
 /// completions stream out one at a time on backends that support it).
+/// Generated `outputs` travel with the engine's per-task completions —
+/// that is what the TCP front-end decodes into reply text — so order
+/// must match `task_ids`.
 pub trait BatchExecutor {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
 }
@@ -128,6 +131,25 @@ impl BatchExecutor for ModeledExecutor {
             }
         }
     }
+}
+
+/// Per-lane factory over [`ModeledExecutor`]: every lane worker gets
+/// its own copy of the latency model and device profile. Shared by
+/// `rtlm serve --backend modeled` and the TCP front-end.
+pub fn modeled_factory(
+    lat: LatencyModel,
+    model: ModelEntry,
+    dev: DeviceProfile,
+    time_scale: f64,
+) -> ExecutorFactory {
+    Arc::new(move |_lane| {
+        Ok(Box::new(ModeledExecutor {
+            lat: lat.clone(),
+            model: model.clone(),
+            dev: dev.clone(),
+            time_scale,
+        }) as Box<dyn BatchExecutor>)
+    })
 }
 
 /// Completes every batch immediately — the deterministic executor the

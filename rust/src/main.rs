@@ -7,6 +7,7 @@
 //!   sim                   one simulated serving run with printed summary
 //!   serve                 real-mode serving run over a Poisson trace
 //!   tcp                   interactive line-protocol TCP server
+//!   loadgen               concurrent load test against a tcp server
 //!   score <text..>        score a single utterance (features + u_J)
 
 use std::path::PathBuf;
@@ -16,7 +17,7 @@ use anyhow::{anyhow, Result};
 
 use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
 use rtlm::config::{DeviceProfile, Manifest, SchedParams};
-use rtlm::executor::{BatchExecutor, ExecutorFactory, ModeledExecutor, PjrtExecutor};
+use rtlm::executor::{modeled_factory, ExecutorFactory};
 use rtlm::metrics::table::fmt_f;
 use rtlm::model::LmSession;
 use rtlm::runtime::ArtifactStore;
@@ -62,6 +63,7 @@ fn run(args: &Args) -> Result<()> {
         "sim" => sim(args),
         "serve" => serve_cmd(args),
         "tcp" => tcp(args),
+        "loadgen" => loadgen(args),
         "score" => score(args),
         _ => {
             println!(
@@ -74,6 +76,9 @@ fn run(args: &Args) -> Result<()> {
                  \x20 sim [--model M] [--policy P] [--n N] [--device D] [--variance V]\n\
                  \x20 serve [--model M] [--policy P] [--n N] [--time-scale S] [--backend pjrt|modeled]\n\
                  \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
+                 \x20     [--time-scale S] [--device D]\n\
+                 \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
+                 \x20     [--timeout-s S] [--connect-wait-s S]\n\
                  \x20 score <text...>            print RULEGEN features + u_J",
                 exps = EXPERIMENTS.join(",")
             );
@@ -286,18 +291,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // and no model artifacts needed beyond the manifest pipeline
         "modeled" | "sim" => {
             let dev = DeviceProfile::by_name(args.get_or("device", "edge-server"))?;
-            let entry = model.clone();
-            let factory: ExecutorFactory = {
-                let lat = lat.clone();
-                Arc::new(move |_lane| {
-                    Ok(Box::new(ModeledExecutor {
-                        lat: lat.clone(),
-                        model: entry.clone(),
-                        dev: dev.clone(),
-                        time_scale,
-                    }) as Box<dyn BatchExecutor>)
-                })
-            };
+            let factory = modeled_factory(lat.clone(), model.clone(), dev, time_scale);
             serve_with_factory(tasks, &mut *policy, &params, &opts, factory)?
         }
         other => return Err(anyhow!("unknown serve backend '{other}' (pjrt | modeled)")),
@@ -342,20 +336,74 @@ fn tcp(args: &Args) -> Result<()> {
     let model = store.manifest.model(&model_name)?;
     let policy = kind.build(&params, model.eta, tau);
 
-    let executor: Box<dyn BatchExecutor> = match args.get_or("backend", "pjrt") {
-        "pjrt" => Box::new(PjrtExecutor {
-            session: Arc::new(LmSession::new(store.clone(), &model_name)?),
-        }),
+    // executors are built inside their lane worker threads (PJRT
+    // handles are not Send), so both lanes serve genuinely concurrently
+    let factory: ExecutorFactory = match args.get_or("backend", "pjrt") {
+        "pjrt" => rtlm::server::engine::pjrt_factory(&root, &model_name),
         // backend-free serving smoke: modeled latencies, empty outputs
-        "modeled" | "sim" => Box::new(ModeledExecutor {
-            lat: LatencyModel::load_or_analytic(&store.manifest)?,
-            model: model.clone(),
-            dev: DeviceProfile::edge_server(),
-            time_scale: args.get_f64("time-scale", 1.0)?,
-        }),
+        "modeled" | "sim" => modeled_factory(
+            LatencyModel::load_or_analytic(&store.manifest)?,
+            model.clone(),
+            DeviceProfile::by_name(args.get_or("device", "edge-server"))?,
+            args.get_f64("time-scale", 1.0)?,
+        ),
         other => return Err(anyhow!("unknown tcp backend '{other}' (pjrt | modeled)")),
     };
-    rtlm::server::tcp::serve_tcp(store, &model_name, executor, est, policy, params, &addr)
+    rtlm::server::tcp::serve_tcp(store, &model_name, factory, est, policy, params, &addr)
+}
+
+fn loadgen(args: &Args) -> Result<()> {
+    use rtlm::server::loadgen::{run, LoadgenOptions};
+
+    let addr = args.get_or("addr", "127.0.0.1:7490").to_string();
+    let n = args.get_usize("n", 200)?;
+    let opts = LoadgenOptions {
+        n,
+        concurrency: args.get_usize("concurrency", n)?,
+        reply_timeout: std::time::Duration::from_secs_f64(args.get_f64("timeout-s", 60.0)?),
+        connect_wait: std::time::Duration::from_secs_f64(args.get_f64("connect-wait-s", 30.0)?),
+    };
+    println!(
+        "loadgen: {n} requests over {} connections against {addr}",
+        opts.concurrency
+    );
+    let mut report = run(&addr, &opts)?;
+    let (mean, p50, p95, max) = (
+        report.response_ms.mean(),
+        report.response_ms.p50(),
+        report.response_ms.p95(),
+        report.response_ms.max(),
+    );
+    println!(
+        "ok {} / err {} | server response_ms: mean {} p50 {} p95 {} max {} | client rtt_ms p95 {}",
+        report.n_ok,
+        report.n_err,
+        fmt_f(mean, 1),
+        fmt_f(p50, 1),
+        fmt_f(p95, 1),
+        fmt_f(max, 1),
+        fmt_f(report.rtt_ms.p95(), 1),
+    );
+    for e in &report.errors {
+        eprintln!("  error: {e}");
+    }
+    if report.n_err > 0 || report.n_ok != n {
+        return Err(anyhow!(
+            "load test failed: {} errors, {} of {n} replies ok",
+            report.n_err,
+            report.n_ok
+        ));
+    }
+    if let Some(bound) = args.get("p95-ms") {
+        let bound: f64 = bound
+            .parse()
+            .map_err(|_| anyhow!("--p95-ms expects a number, got '{bound}'"))?;
+        if p95 > bound {
+            return Err(anyhow!("p95 response_ms {p95:.1} exceeds the {bound:.1} ms bound"));
+        }
+        println!("p95 {p95:.1} ms within the {bound:.1} ms bound");
+    }
+    Ok(())
 }
 
 fn score(args: &Args) -> Result<()> {

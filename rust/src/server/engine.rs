@@ -5,8 +5,9 @@
 //! Since the dispatcher-core unification this is a thin wrapper: the
 //! loop itself lives in [`crate::engine::run_engine`], driven here by
 //! the wall-clock [`ThreadedBackend`] (injector thread + one worker
-//! thread per lane). The simulator drives the *same* loop, so
-//! scheduling behaviour in simulation and on the wire is identical by
+//! thread per lane). The simulator and the TCP front-end drive the
+//! *same* loop (the latter in open-stream mode), so scheduling
+//! behaviour in simulation and on the wire is identical by
 //! construction.
 //!
 //! The `xla` crate's PJRT handles are not `Send` (Rc-based internals),
@@ -110,6 +111,23 @@ pub fn serve_with_factory(
     })
 }
 
+/// Per-lane PJRT executor factory: each lane opens its own store +
+/// session from `artifacts_root` inside its worker thread (PJRT handles
+/// are not `Send`) and warms up the common buckets before the serving
+/// clock starts. Shared by `serve_from_root` and the TCP front-end.
+pub fn pjrt_factory(artifacts_root: &std::path::Path, model: &str) -> ExecutorFactory {
+    let root: PathBuf = artifacts_root.to_path_buf();
+    let model = model.to_string();
+    Arc::new(move |_lane| {
+        let store = Arc::new(ArtifactStore::open(&root)?);
+        let session = Arc::new(LmSession::new(store.clone(), &model)?);
+        // warm up: compile the common buckets before the clock matters
+        let warm = vec![session.store().manifest.bos_id];
+        session.generate(&[warm], &[2])?;
+        Ok(Box::new(PjrtExecutor { session }) as Box<dyn BatchExecutor>)
+    })
+}
+
 /// Serve `tasks` (arrival times already set, prompts encoded) with the
 /// given policy against real PJRT sessions of `model`. Each lane opens
 /// its own store + session inside its worker thread and warms up the
@@ -122,16 +140,7 @@ pub fn serve_from_root(
     params: &SchedParams,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
-    let root: PathBuf = artifacts_root.to_path_buf();
-    let model = model.to_string();
-    let factory: ExecutorFactory = Arc::new(move |_lane| {
-        let store = Arc::new(ArtifactStore::open(&root)?);
-        let session = Arc::new(LmSession::new(store.clone(), &model)?);
-        // warm up: compile the common buckets before the clock matters
-        let warm = vec![session.store().manifest.bos_id];
-        session.generate(&[warm], &[2])?;
-        Ok(Box::new(PjrtExecutor { session }) as Box<dyn BatchExecutor>)
-    });
+    let factory = pjrt_factory(artifacts_root, model);
     serve_with_factory(tasks, policy, params, opts, factory)
 }
 

@@ -1,0 +1,207 @@
+//! Concurrent line-protocol load generator for the TCP front-end.
+//!
+//! Opens `concurrency` connections, drives `n` requests through them
+//! (one in flight per connection — concurrency on this protocol means
+//! concurrent connections), parses every reply JSON, and aggregates
+//! errors plus client- and server-side latency distributions. The CI
+//! `tcp-load` gate runs this via `rtlm loadgen` against a modeled-
+//! backend server and fails on any error/timeout or a p95
+//! `response_ms` above its bound; `rust/tests/tcp_serving.rs` drives
+//! the same code in-process.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::Samples;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Total requests to send.
+    pub n: usize,
+    /// Concurrent connections (each sends `n / concurrency`-ish
+    /// requests sequentially).
+    pub concurrency: usize,
+    /// Per-reply read timeout; an expired read counts as an error.
+    pub reply_timeout: Duration,
+    /// How long to retry the initial connect (server still starting).
+    pub connect_wait: Duration,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            n: 200,
+            concurrency: 200,
+            reply_timeout: Duration::from_secs(60),
+            connect_wait: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Aggregated result of one load run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub n_ok: usize,
+    pub n_err: usize,
+    /// First few error strings, for diagnostics.
+    pub errors: Vec<String>,
+    /// Server-reported `response_ms` of every ok reply.
+    pub response_ms: Samples,
+    /// Client-measured round-trip ms of every ok reply.
+    pub rtt_ms: Samples,
+}
+
+impl LoadReport {
+    fn record_err(&mut self, msg: String) {
+        self.n_err += 1;
+        if self.errors.len() < 8 {
+            self.errors.push(msg);
+        }
+    }
+
+    fn merge(&mut self, other: LoadReport) {
+        self.n_ok += other.n_ok;
+        self.n_err += other.n_err;
+        for e in other.errors {
+            if self.errors.len() < 8 {
+                self.errors.push(e);
+            }
+        }
+        self.response_ms.extend(other.response_ms.values().iter().copied());
+        self.rtt_ms.extend(other.rtt_ms.values().iter().copied());
+    }
+}
+
+/// Wait until `addr` accepts a connection (server startup can race the
+/// load generator in CI).
+pub fn wait_for_server(addr: &str, wait: Duration) -> Result<()> {
+    let deadline = Instant::now() + wait;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(_) => return Ok(()),
+            Err(e) if Instant::now() >= deadline => {
+                return Err(anyhow!("server at {addr} not reachable after {wait:?}: {e}"))
+            }
+            Err(_) => thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+fn drive_connection(
+    addr: &str,
+    requests: usize,
+    worker: usize,
+    opts: &LoadgenOptions,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    // a thundering herd of connects can race the listener backlog:
+    // retry briefly before counting the connection as failed
+    let mut attempt = 0;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(_) if attempt < 20 => {
+                attempt += 1;
+                thread::sleep(Duration::from_millis(25 * attempt));
+            }
+            Err(e) => {
+                for _ in 0..requests {
+                    report.record_err(format!("connect: {e}"));
+                }
+                return report;
+            }
+        }
+    };
+    stream.set_read_timeout(Some(opts.reply_timeout)).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            for _ in 0..requests {
+                report.record_err(format!("clone: {e}"));
+            }
+            return report;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    for i in 0..requests {
+        let text = format!("tell me about the history of art {worker} {i}");
+        // on a dead connection, account for every request this worker
+        // will now never send — totals must always add up to its share
+        let abort = |report: &mut LoadReport, msg: String| {
+            report.record_err(msg);
+            for _ in i + 1..requests {
+                report.record_err("not attempted (connection aborted)".into());
+            }
+        };
+        let t0 = Instant::now();
+        // a partial write would desynchronize request/reply pairing on
+        // this connection, so a write error aborts it like a read error
+        if let Err(e) = writeln!(writer, "{text}") {
+            abort(&mut report, format!("write: {e}"));
+            return report;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                abort(&mut report, "server closed the connection".into());
+                return report;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                abort(&mut report, format!("read (timeout?): {e}"));
+                return report;
+            }
+        }
+        let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match Json::parse(line.trim()) {
+            Ok(reply) => {
+                if let Some(err) = reply.get("error").as_str() {
+                    let id = reply.get("id").as_i64().unwrap_or(-1);
+                    report.record_err(format!("server error (id {id}): {err}"));
+                } else {
+                    match reply.need_f64("response_ms") {
+                        Ok(ms) => {
+                            report.n_ok += 1;
+                            report.response_ms.push(ms);
+                            report.rtt_ms.push(rtt_ms);
+                        }
+                        Err(e) => report.record_err(format!("bad reply: {e}")),
+                    }
+                }
+            }
+            Err(e) => report.record_err(format!("unparseable reply: {e}")),
+        }
+    }
+    report
+}
+
+/// Run a load test against a serving `rtlm tcp` instance.
+pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
+    anyhow::ensure!(opts.n > 0 && opts.concurrency > 0, "n and concurrency must be positive");
+    // resolve once so a bad address fails fast, not 200 times
+    addr.to_socket_addrs().with_context(|| format!("resolving {addr}"))?;
+    wait_for_server(addr, opts.connect_wait)?;
+
+    let concurrency = opts.concurrency.min(opts.n);
+    let mut handles = Vec::with_capacity(concurrency);
+    for worker in 0..concurrency {
+        // spread the remainder so exactly n requests go out
+        let requests = opts.n / concurrency + usize::from(worker < opts.n % concurrency);
+        let addr = addr.to_string();
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || drive_connection(&addr, requests, worker, &opts)));
+    }
+    let mut total = LoadReport::default();
+    for handle in handles {
+        match handle.join() {
+            Ok(report) => total.merge(report),
+            Err(_) => total.record_err("load worker panicked".into()),
+        }
+    }
+    Ok(total)
+}

@@ -1,15 +1,17 @@
-//! The real-time serving loop (wall clock) and the line-protocol TCP
-//! front-end.
+//! The real-time serving loop (wall clock), the line-protocol TCP
+//! front-end, and the concurrent load generator that gates it in CI.
 //!
 //! Architecture (std threads — see DESIGN.md §Substitutions for why not
-//! tokio): an injector thread replays the arrival trace, two lane worker
-//! threads own the batch executors (real PJRT sessions or modeled
-//! latencies), and the dispatcher thread owns the policy. The dispatch
-//! loop itself is `crate::engine::run_engine` — the exact same code the
-//! simulator drives — so scheduling behaviour is identical in both modes
-//! by construction.
+//! tokio): two lane worker threads own the batch executors (real PJRT
+//! sessions or modeled latencies), and the dispatcher thread owns the
+//! policy. The dispatch loop itself is `crate::engine::run_engine_stream`
+//! — the exact same code the simulator drives — fed either by an
+//! injector thread replaying a trace (`serve*`) or by TCP connection
+//! handlers injecting live arrivals (`tcp::serve_tcp`), so scheduling
+//! behaviour is identical in every mode by construction.
 
 pub mod engine;
+pub mod loadgen;
 pub mod tcp;
 
 pub use engine::{serve, serve_with_factory, ServeOptions, ServeReport};

@@ -1,48 +1,74 @@
 //! Minimal line-protocol TCP front-end (the "chatbot server" face of
 //! RT-LM).
 //!
-//! Protocol: one request per line — the raw utterance. The server
-//! replies with one JSON line: `{"id":..,"tokens":..,"text":..,
-//! "response_ms":..,"lane":..}`. Requests from all connections funnel
-//! into the shared RT-LM scheduler, so concurrent clients exercise
-//! batching and prioritisation exactly like the benchmark workloads.
+//! Protocol: one request per line — the raw utterance (empty lines are
+//! ignored). The server replies with one JSON line:
+//! `{"id":..,"tokens":..,"text":..,"response_ms":..,"lane":..}`, or
+//! `{"id":..,"error":..}` — every reply carries the request `id`, so a
+//! client pipelining multiple lines on one connection can correlate
+//! failures too.
 //!
-//! PJRT handles are not `Send`, so the batch executor lives on the
-//! dispatcher thread and batches execute inline; connection threads only
-//! tokenize/score (pure rust, Send). Any [`BatchExecutor`] works — real
-//! PJRT sessions, or the modeled-latency executor for a backend-free
-//! serving smoke.
+//! There is no dispatch loop here. Connection handlers tokenize + score
+//! (pure rust, `Send`) and feed tasks through the engine's
+//! [`ArrivalHandle`]; the shared dispatcher core
+//! ([`run_engine_stream`] over a [`ThreadedBackend`], the exact loop
+//! the simulator and `rtlm serve` drive) owns admission, ξ-forcing,
+//! lane gating and accounting, with batches executing on per-lane
+//! worker threads — both lanes genuinely concurrent — and replies
+//! flowing back from the per-task completion callback.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::config::SchedParams;
-use crate::executor::BatchExecutor;
+use crate::engine::{run_engine_stream, ArrivalHandle, ArrivalSource, ThreadedBackend};
+use crate::executor::ExecutorFactory;
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{Lane, Policy, Task};
+use crate::scheduler::{Policy, Task};
+use crate::sim::results::TaskOutcome;
 use crate::textgen::Vocab;
 use crate::uncertainty::Estimator;
 use crate::util::json::{obj, Json};
 
-struct Pending {
-    reply_tx: mpsc::Sender<String>,
-    submitted: Instant,
+/// Everything a connection handler needs to turn a text line into a
+/// scored task and wait for its reply. Built from an [`ArtifactStore`]
+/// by [`serve_tcp`]; tests construct it directly from stubs.
+#[derive(Clone)]
+pub struct TcpServerConfig {
+    pub vocab: Arc<Vocab>,
+    pub estimator: Estimator,
+    /// Prompts are truncated to this many tokens.
+    pub max_input_len: usize,
+    /// The serving model's input-tokens -> priority-point coefficient.
+    pub phi: f64,
+    pub params: SchedParams,
+    /// How long a connection handler waits for its reply before sending
+    /// an id-tagged timeout error (the task itself stays scheduled).
+    pub reply_timeout: Duration,
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7490"), executing batches
-/// through `executor`.
+/// Reply channel of one in-flight request, keyed by task id. Entries
+/// are removed by the completion callback (or the shutdown drain) — a
+/// client that disconnected first just makes the send a no-op, it can
+/// never wedge the dispatcher.
+type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<String>>>>;
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7490"), with per-lane
+/// executors built by `factory` (real PJRT sessions, or the
+/// modeled-latency executor for a backend-free serving smoke).
 pub fn serve_tcp(
     store: Arc<ArtifactStore>,
     model: &str,
-    mut executor: Box<dyn BatchExecutor>,
+    factory: ExecutorFactory,
     estimator: Estimator,
-    mut policy: Box<dyn Policy>,
+    policy: Box<dyn Policy>,
     params: SchedParams,
     addr: &str,
 ) -> Result<()> {
@@ -51,34 +77,44 @@ pub fn serve_tcp(
         "rtlm tcp server on {addr} (model={model}, policy={})",
         policy.name()
     );
-    let vocab = store.vocab.clone();
-    let max_input_len = store.manifest.max_input_len;
-    let phi = store.manifest.model(model)?.phi;
+    let cfg = TcpServerConfig {
+        vocab: store.vocab.clone(),
+        estimator,
+        max_input_len: store.manifest.max_input_len,
+        phi: store.manifest.model(model)?.phi,
+        params,
+        reply_timeout: Duration::from_secs(120),
+    };
+    serve_tcp_on(listener, cfg, factory, policy)
+}
 
-    let (req_tx, req_rx) = mpsc::channel::<(Task, Pending)>();
+/// Serve on an already-bound listener (tests bind port 0 and read the
+/// ephemeral address back before calling this). Returns when the engine
+/// stops: a lane failure is fatal to the serving process — every
+/// still-pending request is failed with an id-tagged error reply first,
+/// so no client is left hanging until its timeout.
+pub fn serve_tcp_on(
+    listener: TcpListener,
+    cfg: TcpServerConfig,
+    factory: ExecutorFactory,
+    mut policy: Box<dyn Policy>,
+) -> Result<()> {
+    let (mut backend, arrivals) = ThreadedBackend::start_stream(factory)?;
+    let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(0));
-    let epoch = Instant::now();
 
     // acceptor thread: connection handlers only touch Send-safe state
     {
-        let vocab = vocab.clone();
+        let cfg = cfg.clone();
+        let pending = pending.clone();
         thread::spawn(move || {
             for stream in listener.incoming().flatten() {
-                let req_tx = req_tx.clone();
-                let estimator = estimator.clone();
+                let cfg = cfg.clone();
+                let arrivals = arrivals.clone();
+                let pending = pending.clone();
                 let next_id = next_id.clone();
-                let vocab = vocab.clone();
                 thread::spawn(move || {
-                    if let Err(e) = handle_conn(
-                        stream,
-                        req_tx,
-                        estimator,
-                        next_id,
-                        vocab,
-                        max_input_len,
-                        phi,
-                        epoch,
-                    ) {
+                    if let Err(e) = handle_conn(stream, &cfg, &arrivals, &pending, &next_id) {
                         eprintln!("connection error: {e:#}");
                     }
                 });
@@ -86,97 +122,52 @@ pub fn serve_tcp(
         });
     }
 
-    // dispatcher loop: owns the policy and runs lanes inline. Like the
-    // engine core it sleeps until the next request or the oldest queued
-    // request's ξ expiry — no fixed-interval polling — and `oldest` is
-    // recomputed from what is actually still queued after each dispatch
-    // round, so one slow client cannot latch `force` permanently on and
-    // degrade the server to batch-1 dispatch.
-    let mut pending: std::collections::HashMap<u64, Pending> = std::collections::HashMap::new();
-    let mut oldest: Option<Instant> = None;
-    loop {
-        let received = match oldest {
-            // idle: block until the next request arrives
-            None => match req_rx.recv() {
-                Ok(pair) => Some(pair),
-                Err(_) => return Ok(()),
-            },
-            // requests queued: wake at the oldest one's ξ expiry
-            Some(t) => {
-                let remaining = (params.xi - t.elapsed().as_secs_f64()).max(0.0);
-                match req_rx.recv_timeout(Duration::from_secs_f64(remaining)) {
-                    Ok(pair) => Some(pair),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
-                }
-            }
+    // dispatcher: the one shared engine loop, replies streamed from the
+    // completion callback as batches finish
+    let vocab = cfg.vocab.clone();
+    let reply_map = pending.clone();
+    let mut on_complete = move |o: &TaskOutcome, output: &[i32]| {
+        let Some(reply_tx) = reply_map.lock().unwrap().remove(&o.id) else {
+            return;
         };
-        if let Some((task, info)) = received {
-            oldest = Some(oldest.unwrap_or(info.submitted).min(info.submitted));
-            pending.insert(task.id, info);
-            policy.push(task);
-            // admit everything already queued before dispatching
-            while let Ok((task, info)) = req_rx.try_recv() {
-                oldest = Some(oldest.unwrap_or(info.submitted).min(info.submitted));
-                pending.insert(task.id, info);
-                policy.push(task);
-            }
-        }
-        let force = oldest
-            .map(|t| t.elapsed().as_secs_f64() >= params.xi)
-            .unwrap_or(false);
-        for lane in Lane::ALL {
-            let now = epoch.elapsed().as_secs_f64();
-            let Some(batch) = policy.pop_batch(lane, now, force) else { continue };
-            match executor.execute(&batch) {
-                Ok(reports) => {
-                    for rep in reports {
-                        for (i, &id) in rep.task_ids.iter().enumerate() {
-                            if let Some(info) = pending.remove(&id) {
-                                let text = vocab.decode(&rep.outputs[i]);
-                                let ms = info.submitted.elapsed().as_secs_f64() * 1e3;
-                                let reply = obj(vec![
-                                    ("id", Json::Num(id as f64)),
-                                    ("tokens", Json::Num(rep.outputs[i].len() as f64)),
-                                    ("text", Json::Str(text)),
-                                    ("response_ms", Json::Num(ms)),
-                                    ("lane", Json::Str(format!("{:?}", rep.lane))),
-                                ]);
-                                let _ = info.reply_tx.send(reply.to_string());
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    eprintln!("lane error: {e:#}");
-                    // fail the batch's requests instead of leaving them
-                    // pending forever (their expired ξ would otherwise
-                    // pin the wait timeout at zero)
-                    for t in &batch.tasks {
-                        if let Some(info) = pending.remove(&t.id) {
-                            let _ = info
-                                .reply_tx
-                                .send("{\"error\":\"execution failed\"}".to_string());
-                        }
-                    }
-                }
-            }
-        }
-        // ξ tracks the oldest *still-queued* request, not a high-water mark
-        oldest = pending.values().map(|p| p.submitted).min();
+        let reply = obj(vec![
+            ("id", Json::Num(o.id as f64)),
+            ("tokens", Json::Num(output.len() as f64)),
+            ("text", Json::Str(vocab.decode(output))),
+            ("response_ms", Json::Num((o.completion - o.arrival) * 1e3)),
+            ("lane", Json::Str(format!("{:?}", o.lane))),
+        ]);
+        let _ = reply_tx.send(reply.to_string());
+    };
+    let result = run_engine_stream(
+        &mut backend,
+        &mut *policy,
+        &cfg.params,
+        ArrivalSource::Stream,
+        Some(&mut on_complete),
+    );
+
+    // tear the backend down first — after finish() the event channel is
+    // gone, so a handler racing this shutdown has its inject() fail and
+    // replies "server shutting down" itself — then fail everything that
+    // registered before the channel closed, with its id attached
+    backend.finish();
+    for (id, reply_tx) in pending.lock().unwrap().drain() {
+        let _ = reply_tx.send(error_reply(id, "execution failed"));
     }
+    result.map(|_| ())
 }
 
-#[allow(clippy::too_many_arguments)]
+fn error_reply(id: u64, msg: &str) -> String {
+    obj(vec![("id", Json::Num(id as f64)), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
 fn handle_conn(
     stream: TcpStream,
-    req_tx: mpsc::Sender<(Task, Pending)>,
-    estimator: Estimator,
-    next_id: Arc<AtomicU64>,
-    vocab: Arc<Vocab>,
-    max_input_len: usize,
-    phi: f64,
-    epoch: Instant,
+    cfg: &TcpServerConfig,
+    arrivals: &ArrivalHandle,
+    pending: &PendingMap,
+    next_id: &AtomicU64,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
@@ -187,19 +178,19 @@ fn handle_conn(
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let (u, feats) = estimator.score_with_features(&text)?;
+        let (u, feats) = cfg.estimator.score_with_features(&text)?;
         let input_len = feats[feats.len() - 1] as usize;
-        let mut prompt = vocab.encode(&text, Some(max_input_len));
+        let mut prompt = cfg.vocab.encode(&text, Some(cfg.max_input_len));
         if prompt.is_empty() {
             prompt.push(crate::textgen::vocab::BOS_ID);
         }
-        let now = epoch.elapsed().as_secs_f64();
+        let now = arrivals.now();
         let task = Task {
             id,
-            text: text.clone(),
+            text,
             prompt,
             arrival: now,
-            priority_point: now + 2.0 + phi * input_len as f64,
+            priority_point: now + 2.0 + cfg.phi * input_len as f64,
             uncertainty: u,
             // interactive requests have no oracle: serve the predicted length
             true_len: (u.round() as usize).clamp(4, 96),
@@ -209,12 +200,21 @@ fn handle_conn(
             deferrals: 0,
         };
         let (reply_tx, reply_rx) = mpsc::channel();
-        req_tx.send((task, Pending { reply_tx, submitted: Instant::now() })).ok();
-        match reply_rx.recv_timeout(Duration::from_secs(120)) {
+        // register the reply slot *before* injecting: the completion
+        // callback may fire before this thread runs again
+        pending.lock().unwrap().insert(id, reply_tx);
+        if arrivals.inject(task).is_err() {
+            pending.lock().unwrap().remove(&id);
+            writeln!(writer, "{}", error_reply(id, "server shutting down"))?;
+            return Ok(());
+        }
+        match reply_rx.recv_timeout(cfg.reply_timeout) {
             Ok(reply) => writeln!(writer, "{reply}")?,
             Err(_) => {
-                writeln!(writer, "{{\"error\":\"timeout\"}}")?;
-                eprintln!("request from {peer} timed out");
+                // leave the pending entry: the task is still scheduled,
+                // and the callback cleans it up whenever it completes
+                writeln!(writer, "{}", error_reply(id, "timeout"))?;
+                eprintln!("request {id} from {peer} timed out");
             }
         }
     }

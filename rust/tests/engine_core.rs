@@ -1,15 +1,19 @@
 //! Integration tests for the shared dispatcher core (`rtlm::engine`):
 //! the cross-backend equivalence property (same trace + policy =>
 //! identical per-lane batch sequences in simulation and on the wire),
-//! the arrivals-drain regression (no forced dispatch while arrival
-//! events are still queued), the ξ-deadline wakeup of the wall-clock
-//! dispatcher, and NaN-uncertainty resilience on the wire path.
+//! the open-stream properties (a closed trace served as an open stream
+//! dispatches identically to its counted run on both backends; live
+//! `ArrivalHandle` producers drain cleanly; streaming callbacks see
+//! every completion), the arrivals-drain regression (no forced dispatch
+//! while arrival events are still queued), the ξ-deadline wakeup of the
+//! wall-clock dispatcher, and NaN-uncertainty resilience on the wire
+//! path.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
-use rtlm::engine::{run_engine, SimBackend, ThreadedBackend};
+use rtlm::engine::{run_engine, run_engine_stream, ArrivalSource, SimBackend, ThreadedBackend};
 use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor};
 use rtlm::scheduler::{Fifo, Lane, PolicyKind, Task};
 use rtlm::sim::{Calibration, LatencyModel};
@@ -201,6 +205,154 @@ fn xi_deadline_wakes_wall_clock_dispatcher() {
         by_id[&0]
     );
     assert!(by_id[&2] >= 0.75, "late task completed at {}", by_id[&2]);
+}
+
+/// A closed trace served as an *open stream* (no fixed `n_total`; the
+/// backend reports stream closure) must dispatch exactly like its
+/// counted run — on the virtual clock and on the wire. This is the
+/// property that lets the TCP front-end run the same loop as the
+/// simulator.
+#[test]
+fn open_stream_matches_counted_on_both_backends() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = zero_latency();
+    let dev = zero_device();
+
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 4 + rng.range_usize(0, 24);
+        let tasks: Vec<Task> = (0..n)
+            .map(|i| {
+                let pp = 1.0 + 0.5 * rng.range_usize(0, 10) as f64;
+                let u = 5.0 + 10.0 * rng.range_usize(0, 9) as f64;
+                mk_task(i as u64, 0.0, pp, u)
+            })
+            .collect();
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+
+        for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+            let tau = 60.0;
+
+            let mut p = kind.build(&params, model.eta, tau);
+            let mut b = SimBackend::new(tasks.clone(), &lat, &model, &dev);
+            let counted = run_engine(&mut b, &mut *p, &params, n).expect("sim counted");
+
+            let mut p = kind.build(&params, model.eta, tau);
+            let mut b = SimBackend::new(tasks.clone(), &lat, &model, &dev);
+            let streamed = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
+                .expect("sim stream");
+            // the virtual clock is deterministic: the full interleaved
+            // dispatch sequence must match, not just per-lane views
+            assert_eq!(
+                counted.dispatch_log, streamed.dispatch_log,
+                "seed {seed} policy {}: sim stream diverged from counted",
+                kind.label()
+            );
+            assert_eq!(streamed.outcomes.len(), n);
+
+            let mut p = kind.build(&params, model.eta, tau);
+            let mut b = ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
+                .expect("threaded start");
+            let wired = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
+                .expect("threaded stream");
+            b.finish();
+            for lane in [Lane::Gpu, Lane::Cpu] {
+                assert_eq!(
+                    lane_log(&counted.dispatch_log, lane),
+                    lane_log(&wired.dispatch_log, lane),
+                    "seed {seed} policy {} lane {lane:?}: wire stream diverged",
+                    kind.label()
+                );
+            }
+            assert_eq!(wired.outcomes.len(), n);
+        }
+    }
+}
+
+/// Open-stream ξ-forcing on the wall clock: with the stream still open
+/// (no trace count to exhaust), the partial batch must go out at the ξ
+/// expiry, not wait for the late arrival.
+#[test]
+fn open_stream_xi_forcing_with_late_arrivals() {
+    let tasks = vec![
+        mk_task(0, 0.0, 5.0, 10.0),
+        mk_task(1, 0.0, 5.0, 12.0),
+        mk_task(2, 0.8, 5.0, 14.0),
+    ];
+    let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
+    let mut policy = Fifo::new(params.batch_size);
+    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, false)
+        .expect("backend start");
+    let report = run_engine_stream(&mut backend, &mut policy, &params, ArrivalSource::Stream, None)
+        .expect("engine");
+    backend.finish();
+    assert_eq!(
+        lane_log(&report.dispatch_log, Lane::Gpu),
+        vec![vec![0, 1], vec![2]],
+        "ξ expiry should force the partial batch while the stream is open"
+    );
+}
+
+/// Live producers: tasks injected through a cloned `ArrivalHandle`
+/// (the TCP connection-handler path) are served, and `close()` drains
+/// the engine to a clean return.
+#[test]
+fn live_arrival_handle_feeds_open_stream() {
+    let (mut backend, arrivals) = ThreadedBackend::start_stream(instant_factory())
+        .expect("backend start");
+    let producer = {
+        let arrivals = arrivals.clone();
+        std::thread::spawn(move || {
+            for i in 0..5u64 {
+                let now = arrivals.now();
+                arrivals.inject(mk_task(i, now, now + 5.0, 10.0)).expect("inject");
+            }
+            arrivals.close();
+        })
+    };
+    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
+    let mut policy = Fifo::new(params.batch_size);
+    let report = run_engine_stream(&mut backend, &mut policy, &params, ArrivalSource::Stream, None)
+        .expect("engine");
+    producer.join().expect("producer");
+    backend.finish();
+    assert_eq!(report.outcomes.len(), 5, "all injected tasks must complete");
+    for o in &report.outcomes {
+        assert!(o.completion >= o.arrival, "task {} completed before arrival", o.id);
+    }
+}
+
+/// With a completion callback attached to an open stream, every task is
+/// streamed out exactly once and the report stays lean — a long-lived
+/// server must not accumulate per-task state in the engine.
+#[test]
+fn stream_callback_sees_every_completion_and_report_stays_lean() {
+    let n = 12usize;
+    let tasks: Vec<Task> = (0..n).map(|i| mk_task(i as u64, 0.0, 5.0, 10.0)).collect();
+    let params = SchedParams { batch_size: 4, ..Default::default() };
+    let mut policy = Fifo::new(params.batch_size);
+    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, true)
+        .expect("backend start");
+    let mut seen: Vec<u64> = Vec::new();
+    let mut on_complete = |o: &rtlm::sim::results::TaskOutcome, output: &[i32]| {
+        assert!(output.is_empty(), "instant executor produces no tokens");
+        seen.push(o.id);
+    };
+    let report = run_engine_stream(
+        &mut backend,
+        &mut policy,
+        &params,
+        ArrivalSource::Stream,
+        Some(&mut on_complete),
+    )
+    .expect("engine");
+    backend.finish();
+
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "every task streamed exactly once");
+    assert!(report.outcomes.is_empty(), "streaming mode must not store outcomes");
+    assert!(report.dispatch_log.is_empty(), "streaming mode must not store the dispatch log");
+    assert_eq!(report.n_batches_gpu, 3, "aggregate counters still maintained");
 }
 
 /// NaN-uncertainty tasks must not panic the wire path either: ordering

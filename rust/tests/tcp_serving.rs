@@ -1,0 +1,259 @@
+//! In-process integration tests for the TCP front-end: the server is
+//! `serve_tcp_on` over the *shared* engine core (no dispatch loop of
+//! its own), driven by concurrent clients on an ephemeral port with
+//! artifact-free stubs (hand-built lexicon/vocab, constant regressor,
+//! instant/sleepy/failing executors).
+//!
+//! Covered: concurrent clients all get correlated replies, the line
+//! protocol's edge cases (empty lines skipped, over-length prompts
+//! truncated, pipelined lines answered in order), id-tagged timeout and
+//! execution-failure error replies, a client disconnecting before its
+//! reply never wedging the dispatcher, and the load generator the CI
+//! `tcp-load` gate runs.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use rtlm::config::SchedParams;
+use rtlm::executor::{BatchExecutor, ExecReport, ExecutorFactory, InstantExecutor};
+use rtlm::runtime::bundle::{Bundle, Tensor};
+use rtlm::scheduler::{Batch, PolicyKind};
+use rtlm::server::loadgen::{self, LoadgenOptions};
+use rtlm::server::tcp::{serve_tcp_on, TcpServerConfig};
+use rtlm::textgen::{Lexicon, Vocab};
+use rtlm::uncertainty::{Estimator, Regressor};
+use rtlm::util::json::Json;
+
+const MAX_INPUT_LEN: usize = 64;
+
+/// Minimal lexicon: a handful of vocab words, every rule list empty
+/// (all rule scores 0 — the constant regressor decides the length).
+fn test_lexicon() -> Lexicon {
+    let json = r#"{
+        "vocab": ["<pad>", "<bos>", "<eos>", "<unk>",
+                  "about", "art", "history", "me", "of", "tell", "the"],
+        "pos_lexicon": {},
+        "suffix_rules": [],
+        "homonyms": {},
+        "nv_ambiguous": [],
+        "vague_topics": [],
+        "vague_phrases": [],
+        "open_markers": [],
+        "multipart_markers": [],
+        "relativizers": [],
+        "wh_words": [],
+        "vague_adjectives": [],
+        "open_wh_starters": []
+    }"#;
+    Lexicon::from_json(&Json::parse(json).expect("lexicon json")).expect("lexicon")
+}
+
+/// Constant-output regressor: predicts 20 tokens for everything.
+fn test_estimator(lexicon: Arc<Lexicon>) -> Estimator {
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32("w0", vec![7, 1], vec![0.0; 7]),
+        Tensor::f32("b0", vec![1], vec![20.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, MAX_INPUT_LEN as f64];
+    let regressor = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(lexicon, Arc::new(regressor), MAX_INPUT_LEN, 4.0, 96.0)
+}
+
+fn test_config(params: SchedParams, reply_timeout: Duration) -> TcpServerConfig {
+    let lexicon = Arc::new(test_lexicon());
+    let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
+    TcpServerConfig {
+        vocab,
+        estimator: test_estimator(lexicon),
+        max_input_len: MAX_INPUT_LEN,
+        phi: 0.07,
+        params,
+        reply_timeout,
+    }
+}
+
+/// Bind an ephemeral port, run the server on a detached thread (the
+/// test process exits past it), return the address to dial.
+fn start_server(
+    factory: ExecutorFactory,
+    params: SchedParams,
+    reply_timeout: Duration,
+) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().expect("local addr");
+    let cfg = test_config(params.clone(), reply_timeout);
+    let policy = PolicyKind::RtLm.build(&params, 0.05, 60.0);
+    thread::spawn(move || {
+        let _ = serve_tcp_on(listener, cfg, factory, policy);
+    });
+    addr
+}
+
+fn instant_factory() -> ExecutorFactory {
+    Arc::new(|_lane| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+}
+
+/// Executes like the instant executor after a fixed sleep — long enough
+/// for reply timeouts to fire first.
+struct SleepyExecutor(Duration);
+
+impl BatchExecutor for SleepyExecutor {
+    fn execute(&mut self, batch: &Batch) -> anyhow::Result<Vec<ExecReport>> {
+        thread::sleep(self.0);
+        InstantExecutor.execute(batch)
+    }
+}
+
+/// Fails every batch — the lane dies, the server shuts down, and every
+/// pending request must still get an id-tagged error reply.
+struct FailingExecutor;
+
+impl BatchExecutor for FailingExecutor {
+    fn execute(&mut self, _batch: &Batch) -> anyhow::Result<Vec<ExecReport>> {
+        Err(anyhow::anyhow!("injected executor failure"))
+    }
+}
+
+/// Send `lines` on one connection, read `expect` reply lines back.
+fn roundtrip(addr: SocketAddr, lines: &[&str], expect: usize) -> Vec<Json> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(20))).expect("read timeout");
+    let mut writer = stream.try_clone().expect("clone");
+    for line in lines {
+        writeln!(writer, "{line}").expect("write");
+    }
+    let mut reader = BufReader::new(stream);
+    (0..expect)
+        .map(|i| {
+            let mut buf = String::new();
+            let n = reader.read_line(&mut buf).expect("read reply");
+            assert!(n > 0, "connection closed before reply {i}");
+            Json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad reply json '{buf}': {e}"))
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_all_get_correlated_replies() {
+    let params = SchedParams { batch_size: 4, xi: 0.05, ..Default::default() };
+    let addr = start_server(instant_factory(), params, Duration::from_secs(30));
+
+    let clients: Vec<_> = (0..16)
+        .map(|_| {
+            thread::spawn(move || {
+                roundtrip(addr, &["tell me about the history of art"; 4], 4)
+            })
+        })
+        .collect();
+
+    let mut ids = HashSet::new();
+    for client in clients {
+        for reply in client.join().expect("client") {
+            assert_eq!(reply.get("error"), &Json::Null, "unexpected error: {reply}");
+            let id = reply.need_f64("id").expect("id") as u64;
+            assert!(ids.insert(id), "duplicate reply id {id}");
+            assert!(reply.need_f64("response_ms").expect("response_ms") >= 0.0);
+            let lane = reply.need_str("lane").expect("lane").to_string();
+            assert!(lane == "Gpu" || lane == "Cpu", "unknown lane {lane}");
+        }
+    }
+    assert_eq!(ids.len(), 64, "every request answered exactly once");
+}
+
+#[test]
+fn empty_lines_are_skipped_and_long_prompts_truncate() {
+    let params = SchedParams { batch_size: 1, xi: 0.05, ..Default::default() };
+    let addr = start_server(instant_factory(), params, Duration::from_secs(30));
+
+    // two empty lines produce no replies; the real request is answered
+    let replies = roundtrip(addr, &["", "   ", "tell me about art"], 1);
+    assert_eq!(replies[0].get("error"), &Json::Null);
+    assert!(replies[0].get("id").as_f64().is_some(), "reply must carry the request id");
+
+    // an over-length prompt (way past max_input_len tokens) is
+    // truncated server-side and still served
+    let long = "history ".repeat(40 * MAX_INPUT_LEN);
+    let replies = roundtrip(addr, &[long.as_str()], 1);
+    assert_eq!(replies[0].get("error"), &Json::Null, "over-length prompt must be served");
+    assert!(replies[0].need_f64("response_ms").expect("response_ms") >= 0.0);
+}
+
+#[test]
+fn pipelined_lines_get_in_order_id_tagged_replies() {
+    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
+    let addr = start_server(instant_factory(), params, Duration::from_secs(30));
+
+    let replies = roundtrip(addr, &["tell me about art", "the history of art", "art"], 3);
+    let ids: Vec<i64> = replies
+        .iter()
+        .map(|r| r.need_f64("id").expect("every reply carries its id") as i64)
+        .collect();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(ids, sorted, "one connection's replies arrive in request order: {ids:?}");
+}
+
+#[test]
+fn timeout_replies_carry_id_and_dead_clients_do_not_wedge() {
+    let params = SchedParams { batch_size: 1, xi: 0.02, ..Default::default() };
+    let factory: ExecutorFactory = Arc::new(|_lane| {
+        Ok(Box::new(SleepyExecutor(Duration::from_millis(300))) as Box<dyn BatchExecutor>)
+    });
+    // reply timeout far below the executor sleep: the first reply is an
+    // id-tagged timeout error
+    let addr = start_server(factory, params, Duration::from_millis(50));
+
+    let replies = roundtrip(addr, &["tell me about art"], 1);
+    assert_eq!(replies[0].need_str("error").expect("error"), "timeout");
+    let first_id = replies[0].need_f64("id").expect("timeout reply must carry the id");
+    // client disconnects here (roundtrip drops the stream) while its
+    // task is still scheduled — the completion callback will hit a dead
+    // reply channel and must shrug it off
+
+    thread::sleep(Duration::from_millis(400));
+
+    // a second client is served normally: the dispatcher did not wedge
+    let replies = roundtrip(addr, &["the history of art"], 1);
+    assert_eq!(replies[0].need_str("error").expect("error"), "timeout");
+    let second_id = replies[0].need_f64("id").expect("id");
+    assert!(second_id > first_id, "ids keep monotonically increasing");
+}
+
+#[test]
+fn execution_failure_replies_carry_id() {
+    let params = SchedParams { batch_size: 1, xi: 0.02, ..Default::default() };
+    let factory: ExecutorFactory =
+        Arc::new(|_lane| Ok(Box::new(FailingExecutor) as Box<dyn BatchExecutor>));
+    let addr = start_server(factory, params, Duration::from_secs(10));
+
+    let replies = roundtrip(addr, &["tell me about art"], 1);
+    assert_eq!(replies[0].need_str("error").expect("error"), "execution failed");
+    assert!(
+        replies[0].get("id").as_f64().is_some(),
+        "failure replies must carry the request id for pipelined clients: {}",
+        replies[0]
+    );
+}
+
+#[test]
+fn loadgen_drives_concurrent_connections_clean() {
+    let params = SchedParams { batch_size: 4, xi: 0.05, ..Default::default() };
+    let addr = start_server(instant_factory(), params, Duration::from_secs(30));
+
+    let opts = LoadgenOptions {
+        n: 64,
+        concurrency: 16,
+        reply_timeout: Duration::from_secs(30),
+        connect_wait: Duration::from_secs(10),
+    };
+    let mut report = loadgen::run(&addr.to_string(), &opts).expect("loadgen");
+    assert_eq!(report.n_err, 0, "errors: {:?}", report.errors);
+    assert_eq!(report.n_ok, 64);
+    assert_eq!(report.response_ms.len(), 64);
+    let p95 = report.response_ms.p95();
+    assert!(p95.is_finite() && p95 >= 0.0, "p95 {p95}");
+}

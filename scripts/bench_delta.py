@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_hotpath.json snapshots and print a markdown delta table.
+
+Usage:
+    bench_delta.py A.json B.json [--labels A-name B-name]
+
+The snapshots are the hotpath bench's output: ``{"bench": "hotpath",
+"unit": "seconds_per_iter", "artifacts": bool, "pjrt": bool,
+"results": {name: seconds}}``. Benchmarks present in both snapshots are
+printed sorted by the largest relative delta (B vs A), so the biggest
+hot-path movement tops the table; benchmarks present in only one
+snapshot (e.g. PJRT benches that need artifacts) are listed separately.
+
+Exit code is always 0 — this is a visibility tool for the CI job
+summary, not a gate; the gating happens in the test and load steps.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fmt_secs(secs: float) -> str:
+    if secs < 1e-6:
+        return f"{secs * 1e9:.1f} ns"
+    if secs < 1e-3:
+        return f"{secs * 1e6:.1f} us"
+    if secs < 1.0:
+        return f"{secs * 1e3:.2f} ms"
+    return f"{secs:.3f} s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("snapshot_a")
+    ap.add_argument("snapshot_b")
+    ap.add_argument(
+        "--labels",
+        nargs=2,
+        default=("A", "B"),
+        metavar=("A_NAME", "B_NAME"),
+        help="column labels for the two snapshots",
+    )
+    args = ap.parse_args()
+
+    with open(args.snapshot_a) as fh:
+        a = json.load(fh)
+    with open(args.snapshot_b) as fh:
+        b = json.load(fh)
+    la, lb = args.labels
+    ra, rb = a.get("results", {}), b.get("results", {})
+
+    print(f"### Hot-path bench delta ({lb} vs {la})\n")
+    print(
+        f"unit: {a.get('unit', '?')} | {la}: artifacts={a.get('artifacts')}, "
+        f"pjrt={a.get('pjrt')} | {lb}: artifacts={b.get('artifacts')}, "
+        f"pjrt={b.get('pjrt')}\n"
+    )
+
+    common = sorted(set(ra) & set(rb))
+    if common:
+
+        def rel_delta(name: str) -> float:
+            if ra[name] <= 0:
+                return float("inf") if rb[name] > 0 else 0.0
+            return rb[name] / ra[name] - 1.0
+
+        common.sort(key=lambda name: -abs(rel_delta(name)))
+        print(f"| benchmark | {la} | {lb} | delta |")
+        print("|---|---:|---:|---:|")
+        for name in common:
+            delta = rel_delta(name)
+            print(
+                f"| {name} | {fmt_secs(ra[name])} | {fmt_secs(rb[name])} "
+                f"| {delta:+.1%} |"
+            )
+    else:
+        print("_no common benchmarks between the two snapshots_")
+
+    only_a = sorted(set(ra) - set(rb))
+    only_b = sorted(set(rb) - set(ra))
+    if only_a:
+        print(f"\nonly in {la}: " + ", ".join(only_a))
+    if only_b:
+        print(f"\nonly in {lb}: " + ", ".join(only_b))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::{up_priority, Lane, PolicyKind, Task};
+use rtlm::scheduler::{up_priority, LaneId, LaneSet, PolicyKind, Task};
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::uncertainty::{rules, Estimator};
 use rtlm::util::json::{obj, Json};
@@ -27,6 +27,10 @@ use rtlm::util::rng::Pcg64;
 /// median-of-samples timing; records (name -> median secs/iter).
 struct Harness {
     results: Vec<(String, f64)>,
+    /// Per-lane dispatched-batch counts of the sim benches
+    /// (bench name -> lane name -> batches), for the per-lane table in
+    /// `scripts/bench_delta.py`.
+    batches: Vec<(String, Vec<(String, usize)>)>,
 }
 
 impl Harness {
@@ -58,6 +62,11 @@ impl Harness {
 
     fn record(&mut self, name: &str, secs: f64) {
         self.results.push((name.to_string(), secs));
+    }
+
+    fn record_batches(&mut self, name: &str, lanes: &[String], counts: &[usize]) {
+        let row = lanes.iter().cloned().zip(counts.iter().copied()).collect();
+        self.batches.push((name.to_string(), row));
     }
 }
 
@@ -96,7 +105,7 @@ fn synthetic_latency() -> LatencyModel {
 }
 
 fn main() {
-    let mut h = Harness { results: Vec::new() };
+    let mut h = Harness { results: Vec::new(), batches: Vec::new() };
     let root = Manifest::default_root();
     let store = if root.join("manifest.json").exists() {
         match ArtifactStore::open(&root) {
@@ -177,13 +186,13 @@ fn main() {
     let tasks: Vec<Task> = (0..200).map(|i| mk_task(&mut rng, i)).collect();
     h.bench("UASCHED push+drain 200 tasks", 20, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
-        let mut policy = PolicyKind::RtLm.build(&p, 0.05, 60.0);
+        let mut policy = PolicyKind::RtLm.build(&p, 0.05, &LaneSet::two_lane("synthetic", 60.0));
         for t in tasks.iter().cloned() {
             policy.push(t);
         }
         while policy.queue_len() > 0 {
-            std::hint::black_box(policy.pop_batch(Lane::Gpu, 0.0, true));
-            std::hint::black_box(policy.pop_batch(Lane::Cpu, 0.0, true));
+            std::hint::black_box(policy.pop_batch(LaneId::GPU, 0.0, true));
+            std::hint::black_box(policy.pop_batch(LaneId::CPU, 0.0, true));
         }
     });
 
@@ -202,17 +211,28 @@ fn main() {
     };
     let dev = DeviceProfile::edge_server();
     let sim_tasks: Vec<Task> = (0..400).map(|i| mk_task(&mut rng, i)).collect();
+    let two_lane = LaneSet::two_lane(&model.name, 60.0);
     h.bench("sim engine 400 tasks (RT-LM)", 5, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
-        let mut policy = PolicyKind::RtLm.build(&p, model.eta, 60.0);
+        let mut policy = PolicyKind::RtLm.build(&p, model.eta, &two_lane);
         std::hint::black_box(run_sim(sim_tasks.clone(), &mut *policy, &lat, &model, &dev, &p));
     });
 
     h.bench("sim engine 400 tasks (FIFO)", 5, || {
         let p = SchedParams { batch_size: 16, ..Default::default() };
-        let mut policy = PolicyKind::Fifo.build(&p, model.eta, f64::INFINITY);
+        let mut policy =
+            PolicyKind::Fifo.build(&p, model.eta, &LaneSet::two_lane(&model.name, f64::INFINITY));
         std::hint::black_box(run_sim(sim_tasks.clone(), &mut *policy, &lat, &model, &dev, &p));
     });
+
+    // per-lane batch counts of one representative run, for the
+    // bench-delta per-lane table
+    {
+        let p = SchedParams { batch_size: 16, ..Default::default() };
+        let mut policy = PolicyKind::RtLm.build(&p, model.eta, &two_lane);
+        let r = run_sim(sim_tasks.clone(), &mut *policy, &lat, &model, &dev, &p);
+        h.record_batches("sim engine 400 tasks (RT-LM)", &r.lanes, &r.n_batches);
+    }
 
     // --- PJRT execution benches (artifacts + real backend only) -------------
     let mut pjrt = false;
@@ -280,6 +300,17 @@ fn main() {
         .iter()
         .map(|(name, secs)| (name.clone(), Json::Num(*secs)))
         .collect();
+    let batch_entries: Vec<(String, Json)> = h
+        .batches
+        .iter()
+        .map(|(name, rows)| {
+            let lanes: Vec<(String, Json)> = rows
+                .iter()
+                .map(|(lane, count)| (lane.clone(), Json::Num(*count as f64)))
+                .collect();
+            (name.clone(), Json::Obj(lanes.into_iter().collect()))
+        })
+        .collect();
     let snapshot = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("unit", Json::Str("seconds_per_iter".into())),
@@ -288,6 +319,10 @@ fn main() {
         (
             "results",
             Json::Obj(entries.into_iter().collect()),
+        ),
+        (
+            "batches",
+            Json::Obj(batch_entries.into_iter().collect()),
         ),
     ]);
     std::fs::write(&out_path, format!("{snapshot}\n")).expect("write bench snapshot");

@@ -17,7 +17,7 @@ use rtlm::config::{Manifest, SchedParams};
 use rtlm::metrics::table::fmt_f;
 use rtlm::metrics::{Samples, Table};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::PolicyKind;
+use rtlm::scheduler::{LaneSet, PolicyKind};
 use rtlm::server::engine::{encode_prompts, serve_from_root, ServeOptions};
 use rtlm::sim::LatencyModel;
 use rtlm::uncertainty::Estimator;
@@ -91,12 +91,13 @@ fn main() -> Result<()> {
         "e2e real serving — RT-LM vs FIFO (real PJRT execution)",
         &["policy", "mean s", "p50 s", "p95 s", "max s", "thr/min", "gpu b.", "cpu b.", "sched us/task"],
     );
+    let lanes = LaneSet::two_lane(&model_name, tau);
     for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
         let mut tasks = factory.build_all(&chosen, &trace, &model, false)?;
         encode_prompts(&store, &mut tasks);
-        let mut policy = kind.build(&params, model.eta, tau);
+        let mut policy = kind.build(&params, model.eta, &lanes);
         let opts = ServeOptions { time_scale, verbose: false };
-        let report = serve_from_root(&root, &model_name, tasks, &mut *policy, &params, &opts)?;
+        let report = serve_from_root(&root, &lanes, tasks, &mut *policy, &params, &opts)?;
         let mut s = report.response_times();
         table.row(vec![
             kind.label().into(),
@@ -105,8 +106,8 @@ fn main() -> Result<()> {
             fmt_f(s.p95(), 3),
             fmt_f(s.max(), 3),
             fmt_f(report.throughput_per_min(), 1),
-            report.n_batches_gpu.to_string(),
-            report.n_batches_cpu.to_string(),
+            report.n_batches.first().copied().unwrap_or(0).to_string(),
+            report.n_batches.get(1).copied().unwrap_or(0).to_string(),
             fmt_f(report.sched_secs / report.outcomes.len().max(1) as f64 * 1e6, 1),
         ]);
     }

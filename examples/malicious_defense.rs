@@ -59,7 +59,7 @@ fn main() -> Result<()> {
         let offloaded = rtlm
             .outcomes
             .iter()
-            .filter(|o| o.lane == rtlm::scheduler::Lane::Cpu)
+            .filter(|o| o.lane == rtlm::scheduler::LaneId::CPU)
             .count();
         table.row(vec![
             pct.to_string(),

@@ -11,7 +11,7 @@ use anyhow::Result;
 use rtlm::config::{Manifest, SchedParams};
 use rtlm::model::{session::encode_prompt, LmSession};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::{Batch, Lane, PolicyKind, Task};
+use rtlm::scheduler::{Batch, LaneId, LaneSet, PolicyKind, Task};
 use rtlm::sim::LatencyModel;
 use rtlm::uncertainty::Estimator;
 
@@ -56,12 +56,13 @@ fn main() -> Result<()> {
 
     // 2) System level: schedule with UASCHED (UP + consolidation).
     let params = SchedParams { batch_size: 4, ..Default::default() };
-    let mut policy = PolicyKind::RtLm.build(&params, 0.05, f64::INFINITY);
+    let lanes = LaneSet::two_lane("t5", f64::INFINITY);
+    let mut policy = PolicyKind::RtLm.build(&params, 0.05, &lanes);
     for task in tasks {
         policy.push(task);
     }
     let mut batches: Vec<Batch> = Vec::new();
-    while let Some(batch) = policy.pop_batch(Lane::Gpu, 0.0, true) {
+    while let Some(batch) = policy.pop_batch(LaneId::GPU, 0.0, true) {
         batches.push(batch);
     }
     println!("\n=== UASCHED batch plan (C = {}) ===", params.batch_size);

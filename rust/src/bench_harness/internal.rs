@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::config::{DeviceProfile, SchedParams};
 use crate::metrics::table::fmt_f;
 use crate::metrics::{histogram, Table};
-use crate::scheduler::{PolicyKind, Task};
+use crate::scheduler::{LaneSet, PolicyKind, Task};
 use crate::sim::run_sim;
 use crate::workload::subsets::Variance;
 
@@ -42,7 +42,8 @@ fn aging_ablation(ctx: &ExperimentCtx) -> Result<()> {
 
     let run = |tasks: Vec<Task>, params: &SchedParams| {
         let tau = ctx.taus[&model.name];
-        let mut policy = PolicyKind::RtLm.build(params, model.eta, tau);
+        let mut policy =
+            PolicyKind::RtLm.build(params, model.eta, &LaneSet::two_lane(&model.name, tau));
         run_sim(tasks, &mut *policy, &ctx.lat, &model, &dev, params)
     };
 
@@ -95,7 +96,8 @@ fn knee_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
     for knee in [1.0, 4.0, 12.0, 32.0] {
         let dev = DeviceProfile { batch_knee: knee, ..DeviceProfile::edge_server() };
         let params = ctx.params_for(&model.name);
-        let mut policy = PolicyKind::Fifo.build(&params, model.eta, f64::INFINITY);
+        let no_offload = LaneSet::two_lane(&model.name, f64::INFINITY);
+        let mut policy = PolicyKind::Fifo.build(&params, model.eta, &no_offload);
         let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, &model, &dev, &params);
         let mut s = r.response_times();
         table.row(vec![
@@ -121,12 +123,13 @@ fn cpu_worker_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
         let dev = DeviceProfile { cpu_workers: workers, ..DeviceProfile::edge_server() };
         let params = ctx.params_for(&model.name);
         let tau = ctx.taus[&model.name];
-        let mut policy = PolicyKind::RtLm.build(&params, model.eta, tau);
+        let mut policy =
+            PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&model.name, tau));
         let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, &model, &dev, &params);
         let offloaded = r
             .outcomes
             .iter()
-            .filter(|o| o.lane == crate::scheduler::Lane::Cpu)
+            .filter(|o| o.lane == crate::scheduler::LaneId::CPU)
             .count();
         let mut s = r.response_times();
         table.row(vec![

@@ -15,7 +15,7 @@ use crate::metrics::summary::{linregress, pearson};
 use crate::metrics::table::{bar_chart, fmt_f};
 use crate::metrics::{Samples, Table};
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{PolicyKind, Task};
+use crate::scheduler::{LaneSet, PolicyKind, Task};
 use crate::sim::{run_sim, LatencyModel, SimResult};
 use crate::uncertainty::Estimator;
 use crate::workload::subsets::{self, Variance};
@@ -199,7 +199,7 @@ impl ExperimentCtx {
     ) -> SimResult {
         let params = self.params_for(&model.name);
         let tau = self.taus.get(&model.name).copied().unwrap_or(f64::INFINITY);
-        let mut policy = kind.build(&params, model.eta, tau);
+        let mut policy = kind.build(&params, model.eta, &LaneSet::two_lane(&model.name, tau));
         run_sim(tasks, &mut *policy, &self.lat, model, dev, &params)
     }
 }
@@ -475,7 +475,8 @@ fn fig4(ctx: &ExperimentCtx) -> Result<()> {
         let mut misses = Vec::new();
         let mut orders = Vec::new();
         for kind in [PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Up] {
-            let mut policy = kind.build(&params, 0.1, f64::INFINITY);
+            let mut policy =
+                kind.build(&params, 0.1, &LaneSet::two_lane(&model.name, f64::INFINITY));
             let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
             let mut order: Vec<(f64, u64)> =
                 r.outcomes.iter().map(|o| (o.completion, o.id)).collect();
@@ -597,7 +598,8 @@ fn fig5(ctx: &ExperimentCtx) -> Result<()> {
         let mut misses = Vec::new();
         let mut makespans = Vec::new();
         for kind in [PolicyKind::Hpf, PolicyKind::UpC] {
-            let mut policy = kind.build(&params, 0.1, f64::INFINITY);
+            let mut policy =
+                kind.build(&params, 0.1, &LaneSet::two_lane(&model.name, f64::INFINITY));
             let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
             misses.push(r.miss_count());
             makespans.push(r.makespan);
@@ -848,7 +850,8 @@ fn fig13(ctx: &ExperimentCtx) -> Result<()> {
             params.alpha = alpha;
             params.b = 2.0;
             let tau = ctx.taus[&name];
-            let mut policy = PolicyKind::RtLm.build(&params, model.eta, tau);
+            let mut policy =
+                PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&name, tau));
             let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
             series.push(r.peak_mean_response());
         }
@@ -879,7 +882,8 @@ fn fig13(ctx: &ExperimentCtx) -> Result<()> {
             let mut params = ctx.params_for(&name);
             params.b = b;
             let tau = ctx.taus[&name];
-            let mut policy = PolicyKind::RtLm.build(&params, model.eta, tau);
+            let mut policy =
+                PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&name, tau));
             let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
             series.push(r.peak_mean_response());
         }

@@ -46,7 +46,13 @@ impl Default for SchedParams {
 impl SchedParams {
     /// Number of tasks consolidation accumulates before reordering.
     pub fn accumulate_len(&self) -> usize {
-        ((self.b * self.batch_size as f64).floor() as usize).max(self.batch_size)
+        self.accumulate_len_for(self.batch_size)
+    }
+
+    /// The reorder window for a lane with batch size `c` (lanes may
+    /// override the global batch size).
+    pub fn accumulate_len_for(&self, c: usize) -> usize {
+        ((self.b * c as f64).floor() as usize).max(c)
     }
 }
 

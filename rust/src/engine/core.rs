@@ -19,6 +19,12 @@
 //!   the backend as an absolute-time deadline — wall-clock backends
 //!   sleep until an event or that deadline instead of busy-polling.
 //!
+//! The lane fleet is a runtime table: the backend declares how many
+//! lanes exist ([`ExecutionBackend::n_lanes`]), the core keeps per-lane
+//! `busy` flags and batch counters `Vec`-indexed by [`LaneId`], and
+//! each round offers every idle lane a pop in lane order — two lanes or
+//! twenty, the loop is the same.
+//!
 //! The loop is workload-shape agnostic: [`ArrivalSource::Counted`]
 //! replays a closed trace of known size (simulation, `rtlm serve`),
 //! [`ArrivalSource::Stream`] serves an open-ended request stream until
@@ -33,7 +39,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::SchedParams;
-use crate::scheduler::{Batch, Lane, Policy, Task};
+use crate::scheduler::{Batch, LaneId, Policy, Task};
 use crate::sim::results::TaskOutcome;
 
 /// One completed task inside a [`BatchDone`].
@@ -56,7 +62,7 @@ pub struct TaskDone {
 /// the whole batch is done.
 #[derive(Debug)]
 pub struct BatchDone {
-    pub lane: Lane,
+    pub lane: LaneId,
     pub completions: Vec<TaskDone>,
     /// Pure model-inference seconds of the whole batch (counted once,
     /// not per task).
@@ -81,9 +87,13 @@ pub struct Step {
     pub exhausted: bool,
 }
 
-/// An execution environment the dispatcher core can drive: a clock, two
-/// lanes, and a stream of arrivals.
+/// An execution environment the dispatcher core can drive: a clock, a
+/// table of N lanes, and a stream of arrivals.
 pub trait ExecutionBackend {
+    /// How many lanes this backend executes on. Constant for the life
+    /// of the backend; the core sizes its per-lane state from it.
+    fn n_lanes(&self) -> usize;
+
     /// Current engine-clock time in seconds.
     fn now(&mut self) -> f64;
 
@@ -128,12 +138,14 @@ pub struct EngineReport {
     pub sched_secs: f64,
     /// Pure model-inference seconds, summed over batches.
     pub infer_secs: f64,
-    pub n_batches_gpu: usize,
-    pub n_batches_cpu: usize,
+    /// Dispatched batches per lane, indexed by [`LaneId`] — the old
+    /// `n_batches_gpu` / `n_batches_cpu` pair is slots 0 / 1 of the
+    /// default two-lane fleet.
+    pub n_batches: Vec<usize>,
     /// Every dispatched batch in dispatch order: `(lane, task ids)`.
     /// The cross-backend equivalence test compares these. Empty in
     /// streaming mode, like `outcomes`.
-    pub dispatch_log: Vec<(Lane, Vec<u64>)>,
+    pub dispatch_log: Vec<(LaneId, Vec<u64>)>,
 }
 
 /// Run `policy` over `n_total` tasks delivered by `backend` until every
@@ -160,7 +172,12 @@ pub fn run_engine_stream(
     source: ArrivalSource,
     mut on_complete: Option<&mut OnComplete<'_>>,
 ) -> Result<EngineReport> {
-    let mut report = EngineReport { policy: policy.name(), ..Default::default() };
+    let n_lanes = backend.n_lanes();
+    let mut report = EngineReport {
+        policy: policy.name(),
+        n_batches: vec![0; n_lanes],
+        ..Default::default()
+    };
 
     // Streaming mode: an open stream with a consumer attached. Per-task
     // results go to the callback only — a server alive for millions of
@@ -175,7 +192,7 @@ pub fn run_engine_stream(
     let mut admitted = 0usize;
     let mut completed = 0usize;
     let mut stream_closed = false;
-    let mut busy = [false; Lane::ALL.len()];
+    let mut busy = vec![false; n_lanes];
     let mut iterations = 0usize;
 
     loop {
@@ -219,7 +236,7 @@ pub fn run_engine_stream(
         // expiry instant and livelock the loop re-arming a deadline
         // that never fires force.)
         let force = arrivals_done || (oldest.is_finite() && now >= oldest + params.xi);
-        for lane in Lane::ALL {
+        for lane in (0..n_lanes).map(LaneId) {
             if busy[lane.index()] {
                 continue;
             }
@@ -228,10 +245,7 @@ pub fn run_engine_stream(
             report.sched_secs += t0.elapsed().as_secs_f64();
             if let Some(batch) = batch {
                 busy[lane.index()] = true;
-                match lane {
-                    Lane::Gpu => report.n_batches_gpu += 1,
-                    Lane::Cpu => report.n_batches_cpu += 1,
-                }
+                report.n_batches[lane.index()] += 1;
                 for task in &batch.tasks {
                     queued.remove(&task.id);
                 }

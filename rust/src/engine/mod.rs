@@ -37,5 +37,5 @@ pub mod threaded;
 
 pub use self::core::{run_engine, run_engine_stream, ArrivalSource, BatchDone, EngineReport};
 pub use self::core::{ExecutionBackend, OnComplete, Step, TaskDone};
-pub use sim_backend::SimBackend;
+pub use sim_backend::{resolve_lanes, SimBackend, SimLane};
 pub use threaded::{ArrivalHandle, ThreadedBackend};

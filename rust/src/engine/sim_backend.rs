@@ -3,16 +3,56 @@
 //! Time advances event by event: the next arrival in the trace, the
 //! completion of an in-flight batch, or the dispatcher's ξ-expiry
 //! deadline — whichever is earliest. Batch durations come from
-//! [`LatencyModel`], so a `run_engine` drive of this backend is exactly
-//! the discrete-event simulation the paper-scale experiments use.
+//! [`LatencyModel`], per lane: each [`SimLane`] resolves its
+//! [`LaneSpec`]'s model variant and device kind, so one backend
+//! simulates a heterogeneous fleet (several accelerator variants plus
+//! CPU quarantine pools). A `run_engine` drive of this backend is
+//! exactly the discrete-event simulation the paper-scale experiments
+//! use.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
 
 use crate::config::{DeviceProfile, ModelEntry};
-use crate::scheduler::{Batch, Lane, Task};
+use crate::scheduler::{Batch, LaneKind, LaneSet, Task};
 use crate::sim::latency::LatencyModel;
 
 use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
+
+/// One lane's resolved simulation parameters: which latency curves it
+/// draws from and how it executes a batch.
+#[derive(Clone, Debug)]
+pub struct SimLane {
+    pub kind: LaneKind,
+    pub model: ModelEntry,
+    /// Intra-batch workers ([`LaneKind::Cpu`] lanes only).
+    pub workers: usize,
+}
+
+/// Resolve a [`LaneSet`] against a model table and device profile into
+/// per-lane simulation parameters. `models` maps manifest model names
+/// to entries; every lane's variant must be present.
+pub fn resolve_lanes(
+    lanes: &LaneSet,
+    models: &BTreeMap<String, ModelEntry>,
+    dev: &DeviceProfile,
+) -> Result<Vec<SimLane>> {
+    lanes
+        .iter()
+        .map(|spec| {
+            let model = models
+                .get(&spec.model)
+                .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?
+                .clone();
+            Ok(SimLane {
+                kind: spec.kind,
+                model,
+                workers: spec.workers.unwrap_or(dev.cpu_workers).max(1),
+            })
+        })
+        .collect()
+}
 
 /// An in-flight batch: frees its lane at `lane_free`, with per-task
 /// completion times possibly earlier (CPU worker pool).
@@ -27,23 +67,42 @@ pub struct SimBackend<'a> {
     /// The next arrival, held back until the clock reaches it.
     next_arrival: Option<Task>,
     now: f64,
-    lanes: [Option<InFlight>; 2],
+    lanes: Vec<SimLane>,
+    in_flight: Vec<Option<InFlight>>,
     lat: &'a LatencyModel,
-    model: &'a ModelEntry,
     dev: &'a DeviceProfile,
 }
 
 impl<'a> SimBackend<'a> {
-    /// `tasks` must be sorted ascending by arrival time.
+    /// `tasks` must be sorted ascending by arrival time. `lanes` come
+    /// from [`resolve_lanes`].
     pub fn new(
         tasks: Vec<Task>,
         lat: &'a LatencyModel,
-        model: &'a ModelEntry,
+        lanes: Vec<SimLane>,
         dev: &'a DeviceProfile,
     ) -> SimBackend<'a> {
+        assert!(!lanes.is_empty(), "a sim backend needs at least one lane");
         let mut trace = tasks.into_iter();
         let next_arrival = trace.next();
-        SimBackend { trace, next_arrival, now: 0.0, lanes: [None, None], lat, model, dev }
+        let in_flight = (0..lanes.len()).map(|_| None).collect();
+        SimBackend { trace, next_arrival, now: 0.0, lanes, in_flight, lat, dev }
+    }
+
+    /// The historical two-lane configuration: accelerator + CPU
+    /// quarantine pool (`dev.cpu_workers` intra-batch workers), both
+    /// serving `model`. Reproduces the pre-lane-table simulator exactly.
+    pub fn two_lane(
+        tasks: Vec<Task>,
+        lat: &'a LatencyModel,
+        model: &ModelEntry,
+        dev: &'a DeviceProfile,
+    ) -> SimBackend<'a> {
+        let lanes = vec![
+            SimLane { kind: LaneKind::Accelerator, model: model.clone(), workers: 1 },
+            SimLane { kind: LaneKind::Cpu, model: model.clone(), workers: dev.cpu_workers.max(1) },
+        ];
+        SimBackend::new(tasks, lat, lanes, dev)
     }
 
     /// Earliest future event on the backend's own timeline.
@@ -52,7 +111,7 @@ impl<'a> SimBackend<'a> {
         if let Some(t) = &self.next_arrival {
             next = next.min(t.arrival);
         }
-        for slot in self.lanes.iter().flatten() {
+        for slot in self.in_flight.iter().flatten() {
             next = next.min(slot.lane_free);
         }
         next
@@ -60,22 +119,28 @@ impl<'a> SimBackend<'a> {
 }
 
 impl ExecutionBackend for SimBackend<'_> {
+    fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
     fn now(&mut self) -> f64 {
         self.now
     }
 
     fn submit(&mut self, batch: Batch) -> Result<()> {
         let idx = batch.lane.index();
-        assert!(self.lanes[idx].is_none(), "lane {:?} already busy", batch.lane);
-        let in_flight = match batch.lane {
-            Lane::Gpu => {
+        assert!(idx < self.lanes.len(), "batch dispatched to unknown {}", batch.lane);
+        assert!(self.in_flight[idx].is_none(), "{} already busy", batch.lane);
+        let lane = &self.lanes[idx];
+        let in_flight = match lane.kind {
+            LaneKind::Accelerator => {
                 // one fused batch: every task completes when the batch does
-                let dur = self.lat.gpu_batch_secs(self.model, &batch, self.dev);
+                let dur = self.lat.gpu_batch_secs(&lane.model, &batch, self.dev);
                 let done_at = self.now + dur;
                 InFlight {
                     lane_free: done_at,
                     done: BatchDone {
-                        lane: Lane::Gpu,
+                        lane: batch.lane,
                         completions: batch
                             .tasks
                             .iter()
@@ -90,12 +155,12 @@ impl ExecutionBackend for SimBackend<'_> {
                     },
                 }
             }
-            Lane::Cpu => {
+            LaneKind::Cpu => {
                 // worker pool *within* the batch: tasks run batch-1 on
-                // `dev.cpu_workers` parallel workers, earliest-free
-                // first; the lane frees when the whole batch is done
-                // (one batch in flight — same gate as the wire path).
-                let mut workers = vec![self.now; self.dev.cpu_workers.max(1)];
+                // the lane's workers, earliest-free first; the lane
+                // frees when the whole batch is done (one batch in
+                // flight — same gate as the wire path).
+                let mut workers = vec![self.now; lane.workers.max(1)];
                 let mut completions = Vec::with_capacity(batch.tasks.len());
                 let mut infer = 0.0;
                 for task in &batch.tasks {
@@ -103,7 +168,7 @@ impl ExecutionBackend for SimBackend<'_> {
                         .min_by(|&a, &b| workers[a].total_cmp(&workers[b]))
                         .unwrap();
                     let dur = self.lat.cpu_task_secs(
-                        self.model,
+                        &lane.model,
                         task.true_len,
                         task.input_len,
                         self.dev,
@@ -121,14 +186,14 @@ impl ExecutionBackend for SimBackend<'_> {
                 InFlight {
                     lane_free,
                     done: BatchDone {
-                        lane: Lane::Cpu,
+                        lane: batch.lane,
                         completions,
                         batch_infer_secs: infer,
                     },
                 }
             }
         };
-        self.lanes[idx] = Some(in_flight);
+        self.in_flight[idx] = Some(in_flight);
         Ok(())
     }
 
@@ -155,7 +220,7 @@ impl ExecutionBackend for SimBackend<'_> {
             self.next_arrival = self.trace.next();
         }
         // deliver every batch whose lane has freed by the new clock
-        for slot in &mut self.lanes {
+        for slot in &mut self.in_flight {
             if slot.as_ref().is_some_and(|f| f.lane_free <= self.now) {
                 step.done.push(slot.take().unwrap().done);
             }

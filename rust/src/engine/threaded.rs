@@ -1,14 +1,17 @@
 //! Wall-clock execution backend: arrivals come either from an injector
 //! thread replaying a finite trace, or from [`ArrivalHandle`]s held by
 //! live producers (the TCP connection handlers); one worker thread per
-//! lane runs batches through a [`BatchExecutor`] (real PJRT sessions,
+//! lane runs batches through a [`BatchExecutor`] built for that lane's
+//! [`LaneSpec`] (real PJRT sessions of the lane's model variant,
 //! modeled latencies, or an instant executor for deterministic tests).
 //!
 //! PJRT handles are not `Send` (Rc-based internals), so executors are
 //! constructed *inside* their lane thread by an [`ExecutorFactory`] —
 //! each lane owns its own client + session, the same "one engine per
-//! lane" shape a GPU+CPU deployment has, and no PJRT state ever crosses
-//! threads.
+//! lane" shape a heterogeneous GPU+CPU fleet has, and no PJRT state
+//! ever crosses threads.
+//!
+//! [`BatchExecutor`]: crate::executor::BatchExecutor
 
 use std::sync::mpsc;
 use std::thread;
@@ -17,17 +20,17 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::executor::{ExecReport, ExecutorFactory};
-use crate::scheduler::{Batch, Lane, Task};
+use crate::scheduler::{Batch, LaneId, LaneSet, Task};
 
 use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
 
 enum Event {
-    LaneReady(Lane),
+    LaneReady(LaneId),
     Arrival(Task, f64),
     /// Completion timestamps are taken by the dispatcher on receipt, so
     /// every time in a run shares the single post-init epoch clock.
-    Done(Lane, Vec<ExecReport>),
-    LaneError(Lane, String),
+    Done(LaneId, Vec<ExecReport>),
+    LaneError(LaneId, String),
     /// The arrival source will never produce another task: the trace
     /// injector drained, or a live producer called
     /// [`ArrivalHandle::close`].
@@ -70,12 +73,13 @@ impl ArrivalHandle {
 }
 
 fn lane_worker(
-    lane: Lane,
+    lane: LaneId,
+    spec: crate::scheduler::LaneSpec,
     factory: ExecutorFactory,
     batch_rx: mpsc::Receiver<Batch>,
     tx: mpsc::Sender<Event>,
 ) {
-    let mut executor = match factory(lane) {
+    let mut executor = match factory(&spec) {
         Ok(e) => {
             let _ = tx.send(Event::LaneReady(lane));
             e
@@ -102,8 +106,9 @@ fn lane_worker(
 
 pub struct ThreadedBackend {
     event_rx: mpsc::Receiver<Event>,
-    gpu_tx: Option<mpsc::Sender<Batch>>,
-    cpu_tx: Option<mpsc::Sender<Batch>>,
+    /// One batch channel per lane, indexed by [`LaneId`]; `None` after
+    /// [`finish`](Self::finish) begins teardown.
+    lane_txs: Vec<Option<mpsc::Sender<Batch>>>,
     epoch: Instant,
     stream_closed: bool,
     injector: Option<thread::JoinHandle<()>>,
@@ -111,29 +116,39 @@ pub struct ThreadedBackend {
 }
 
 impl ThreadedBackend {
-    /// Spawn the lane workers, wait for *both* lanes to report ready
-    /// (tracked per lane — one lane reporting twice cannot mask the
-    /// other failing), and start the epoch clock.
-    fn spawn_lanes(factory: ExecutorFactory) -> Result<(ThreadedBackend, mpsc::Sender<Event>)> {
+    /// Spawn one worker per lane of `lanes`, wait for *every* lane to
+    /// report ready (tracked per lane — one lane reporting twice cannot
+    /// mask another failing), and start the epoch clock.
+    fn spawn_lanes(
+        factory: ExecutorFactory,
+        lanes: &LaneSet,
+    ) -> Result<(ThreadedBackend, mpsc::Sender<Event>)> {
         let (event_tx, event_rx) = mpsc::channel::<Event>();
-        let (gpu_tx, gpu_rx) = mpsc::channel::<Batch>();
-        let (cpu_tx, cpu_rx) = mpsc::channel::<Batch>();
 
-        let mut workers = Vec::with_capacity(2);
-        for (lane, rx) in [(Lane::Gpu, gpu_rx), (Lane::Cpu, cpu_rx)] {
+        let mut lane_txs = Vec::with_capacity(lanes.len());
+        let mut workers = Vec::with_capacity(lanes.len());
+        for (i, spec) in lanes.iter().enumerate() {
+            let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+            lane_txs.push(Some(batch_tx));
             let tx = event_tx.clone();
             let factory = factory.clone();
-            workers.push(thread::spawn(move || lane_worker(lane, factory, rx, tx)));
+            let spec = spec.clone();
+            workers.push(thread::spawn(move || {
+                lane_worker(LaneId(i), spec, factory, batch_rx, tx)
+            }));
         }
 
-        // wait for both lanes to finish initialising (e.g. compiling the
+        // wait for every lane to finish initialising (e.g. compiling the
         // warmup buckets) before the serving clock starts
-        let mut ready = [false; Lane::ALL.len()];
+        let mut ready = vec![false; lanes.len()];
         while ready.contains(&false) {
             match event_rx.recv_timeout(Duration::from_secs(600)) {
                 Ok(Event::LaneReady(lane)) => ready[lane.index()] = true,
                 Ok(Event::LaneError(lane, e)) => {
-                    return Err(anyhow!("{lane:?} lane failed to initialise: {e}"))
+                    return Err(anyhow!(
+                        "lane '{}' failed to initialise: {e}",
+                        lanes.spec(lane).name
+                    ))
                 }
                 Ok(_) => {}
                 Err(e) => return Err(anyhow!("lane initialisation timed out: {e}")),
@@ -142,8 +157,7 @@ impl ThreadedBackend {
 
         let backend = ThreadedBackend {
             event_rx,
-            gpu_tx: Some(gpu_tx),
-            cpu_tx: Some(cpu_tx),
+            lane_txs,
             epoch: Instant::now(),
             stream_closed: false,
             injector: None,
@@ -163,10 +177,11 @@ impl ThreadedBackend {
     pub fn start(
         tasks: Vec<Task>,
         factory: ExecutorFactory,
+        lanes: &LaneSet,
         time_scale: f64,
         inject_upfront: bool,
     ) -> Result<ThreadedBackend> {
-        let (mut backend, event_tx) = Self::spawn_lanes(factory)?;
+        let (mut backend, event_tx) = Self::spawn_lanes(factory, lanes)?;
         let epoch = backend.epoch;
         let time_scale = time_scale.max(1e-9);
         if inject_upfront {
@@ -201,8 +216,11 @@ impl ThreadedBackend {
     /// Live-stream mode: spawn the lane workers and hand back an
     /// [`ArrivalHandle`] for producers (connection handlers) to feed.
     /// The stream stays open until a handle calls `close`.
-    pub fn start_stream(factory: ExecutorFactory) -> Result<(ThreadedBackend, ArrivalHandle)> {
-        let (backend, event_tx) = Self::spawn_lanes(factory)?;
+    pub fn start_stream(
+        factory: ExecutorFactory,
+        lanes: &LaneSet,
+    ) -> Result<(ThreadedBackend, ArrivalHandle)> {
+        let (backend, event_tx) = Self::spawn_lanes(factory, lanes)?;
         let handle = ArrivalHandle { tx: event_tx, epoch: backend.epoch };
         Ok((backend, handle))
     }
@@ -211,8 +229,9 @@ impl ThreadedBackend {
     /// workers and injector down.
     pub fn finish(mut self) -> f64 {
         let wall = self.epoch.elapsed().as_secs_f64();
-        self.gpu_tx.take();
-        self.cpu_tx.take();
+        for tx in &mut self.lane_txs {
+            tx.take();
+        }
         if let Some(injector) = self.injector.take() {
             injector.join().ok();
         }
@@ -245,7 +264,7 @@ impl ThreadedBackend {
             }
             Event::LaneReady(_) => {}
             Event::LaneError(lane, e) => {
-                return Err(anyhow!("{lane:?} lane failed mid-run: {e}"));
+                return Err(anyhow!("{lane} failed mid-run: {e}"));
             }
             Event::StreamClosed => self.stream_closed = true,
         }
@@ -254,18 +273,23 @@ impl ThreadedBackend {
 }
 
 impl ExecutionBackend for ThreadedBackend {
+    fn n_lanes(&self) -> usize {
+        self.lane_txs.len()
+    }
+
     fn now(&mut self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
     }
 
     fn submit(&mut self, batch: Batch) -> Result<()> {
-        let tx = match batch.lane {
-            Lane::Gpu => self.gpu_tx.as_ref(),
-            Lane::Cpu => self.cpu_tx.as_ref(),
-        };
-        tx.expect("backend already finished")
+        let lane = batch.lane;
+        self.lane_txs
+            .get(lane.index())
+            .ok_or_else(|| anyhow!("batch dispatched to unknown {lane}"))?
+            .as_ref()
+            .expect("backend already finished")
             .send(batch)
-            .map_err(|e| anyhow!("{:?} lane died", e.0.lane))
+            .map_err(|e| anyhow!("{} died", e.0.lane))
     }
 
     fn wait(&mut self, deadline: Option<f64>) -> Result<Step> {

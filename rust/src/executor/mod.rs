@@ -3,62 +3,76 @@
 //! [`BatchExecutor`] is the pluggable execution strategy of the serving
 //! engine's lane workers — real PJRT artifacts ([`PjrtExecutor`]),
 //! modeled latencies with no backend ([`ModeledExecutor`]), or instant
-//! completion for deterministic tests ([`InstantExecutor`]).
+//! completion for deterministic tests ([`InstantExecutor`]). Executors
+//! are built per lane from that lane's [`LaneSpec`] by an
+//! [`ExecutorFactory`], so a heterogeneous fleet runs each lane against
+//! its own model variant.
 //!
-//! On the PJRT path the accelerator lane runs batches through
-//! [`LmSession::generate`] (bucketed batched decode); the quarantine
-//! lane executes tasks one by one at batch 1 — the honest
+//! On the PJRT path an accelerator-kind lane runs batches through
+//! [`LmSession::generate`] (bucketed batched decode); a CPU-kind
+//! quarantine lane executes tasks one by one at batch 1 — the honest
 //! on-this-hardware analogue of the paper's CPU offload lane: no
-//! batching amortisation, strictly slower per task.
+//! batching amortisation, strictly slower per task. On the modeled
+//! path a CPU-kind lane fans its batch across a scoped std-thread pool
+//! of `workers` threads (greedy, earliest-free-first — the same
+//! assignment the simulator models), so the wire path's intra-batch
+//! makespan matches the simulated CPU lane.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{DeviceProfile, ModelEntry};
 use crate::model::LmSession;
-use crate::scheduler::{Batch, Lane};
+use crate::scheduler::{Batch, LaneKind, LaneSpec};
 use crate::sim::LatencyModel;
 
-/// Execution record for one completed batch.
+/// Execution record for one completed batch (or one task of a CPU-lane
+/// batch — quarantine executors emit one report per task).
 #[derive(Debug)]
 pub struct ExecReport {
-    pub lane: Lane,
     pub task_ids: Vec<u64>,
     /// Generated token ids per task (order matches `task_ids`).
     pub outputs: Vec<Vec<i32>>,
-    /// Pure model time (prefill + decode) for the whole batch.
+    /// Pure model time (prefill + decode) for the whole report.
     pub infer_secs: f64,
     /// Decode steps executed.
     pub steps: usize,
 }
 
-/// A lane's execution strategy. The accelerator lane expects one report
-/// for the whole batch; the quarantine lane one report per task (so
-/// completions stream out one at a time on backends that support it).
-/// Generated `outputs` travel with the engine's per-task completions —
-/// that is what the TCP front-end decodes into reply text — so order
-/// must match `task_ids`.
+/// A lane's execution strategy. Accelerator-kind executors return one
+/// report for the whole batch; CPU-kind executors one report per task
+/// (so completions stream out one at a time on backends that support
+/// it). Generated `outputs` travel with the engine's per-task
+/// completions — that is what the TCP front-end decodes into reply
+/// text — so order must match `task_ids`.
 pub trait BatchExecutor {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
 }
 
-/// Builds a lane's executor *inside* the lane worker thread (PJRT
-/// handles are not `Send`, so they must be born on the thread that uses
-/// them).
+/// Builds a lane's executor from its [`LaneSpec`], *inside* the lane
+/// worker thread (PJRT handles are not `Send`, so they must be born on
+/// the thread that uses them). The spec carries the lane's model
+/// variant, device kind and worker count.
 pub type ExecutorFactory =
-    Arc<dyn Fn(Lane) -> Result<Box<dyn BatchExecutor>> + Send + Sync>;
+    Arc<dyn Fn(&LaneSpec) -> Result<Box<dyn BatchExecutor>> + Send + Sync>;
 
-/// Real execution over PJRT artifacts.
+/// Real execution over PJRT artifacts, shaped by the lane's kind.
 pub struct PjrtExecutor {
     pub session: Arc<LmSession>,
+    pub kind: LaneKind,
 }
 
 impl BatchExecutor for PjrtExecutor {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
-        match batch.lane {
-            Lane::Gpu => execute_gpu(&self.session, batch).map(|r| vec![r]),
-            Lane::Cpu => execute_cpu(&self.session, batch),
+        match self.kind {
+            LaneKind::Accelerator => execute_gpu(&self.session, batch).map(|r| vec![r]),
+            // PJRT sessions are not Send, so the quarantine pool cannot
+            // fan across threads here: tasks run sequentially at batch 1
+            // on this lane's single session.
+            LaneKind::Cpu => execute_cpu(&self.session, batch),
         }
     }
 }
@@ -73,15 +87,19 @@ impl BatchExecutor for PjrtExecutor {
 /// time in the resulting report — arrivals, completions, inference —
 /// shares the one compressed wall clock.
 ///
-/// The quarantine lane sleeps its tasks sequentially (one worker), the
-/// same shape as the single PJRT quarantine thread; the simulator's
-/// `cpu_workers` pool is an intra-batch parallelism model the wire path
-/// does not have yet (see ROADMAP § Open items).
+/// A CPU-kind lane fans its batch across `workers` scoped std threads
+/// (tokio-free): each worker greedily pulls the next task when free,
+/// which is exactly the earliest-free-first assignment
+/// `SimBackend` models, so the modeled wire makespan matches the
+/// simulated intra-batch makespan.
 pub struct ModeledExecutor {
     pub lat: LatencyModel,
     pub model: ModelEntry,
     pub dev: DeviceProfile,
     pub time_scale: f64,
+    pub kind: LaneKind,
+    /// Intra-batch workers (CPU-kind lanes).
+    pub workers: usize,
 }
 
 impl ModeledExecutor {
@@ -93,25 +111,19 @@ impl ModeledExecutor {
         }
         scaled
     }
-}
 
-impl BatchExecutor for ModeledExecutor {
-    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
-        match batch.lane {
-            Lane::Gpu => {
-                let secs = self.lat.gpu_batch_secs(&self.model, batch, &self.dev);
-                let slept = self.sleep_scaled(secs);
-                Ok(vec![ExecReport {
-                    lane: Lane::Gpu,
-                    task_ids: batch.tasks.iter().map(|t| t.id).collect(),
-                    outputs: vec![Vec::new(); batch.tasks.len()],
-                    infer_secs: slept,
-                    steps: batch.max_true_len(),
-                }])
-            }
-            Lane::Cpu => {
-                let mut reports = Vec::with_capacity(batch.tasks.len());
-                for task in &batch.tasks {
+    /// Fan one quarantine batch across the worker pool. Returns one
+    /// report per task, in task order.
+    fn execute_cpu_pool(&self, batch: &Batch) -> Vec<ExecReport> {
+        let workers = self.workers.max(1).min(batch.tasks.len().max(1));
+        let next = AtomicUsize::new(0);
+        let reports: Mutex<Vec<(usize, ExecReport)>> =
+            Mutex::new(Vec::with_capacity(batch.tasks.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(task) = batch.tasks.get(i) else { return };
                     let secs = self.lat.cpu_task_secs(
                         &self.model,
                         task.true_len,
@@ -119,75 +131,89 @@ impl BatchExecutor for ModeledExecutor {
                         &self.dev,
                     );
                     let slept = self.sleep_scaled(secs);
-                    reports.push(ExecReport {
-                        lane: Lane::Cpu,
+                    let report = ExecReport {
                         task_ids: vec![task.id],
                         outputs: vec![Vec::new()],
                         infer_secs: slept,
                         steps: task.true_len,
-                    });
-                }
-                Ok(reports)
+                    };
+                    reports.lock().unwrap().push((i, report));
+                });
             }
+        });
+        let mut reports = reports.into_inner().unwrap();
+        reports.sort_by_key(|(i, _)| *i);
+        reports.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+impl BatchExecutor for ModeledExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
+        match self.kind {
+            LaneKind::Accelerator => {
+                let secs = self.lat.gpu_batch_secs(&self.model, batch, &self.dev);
+                let slept = self.sleep_scaled(secs);
+                Ok(vec![ExecReport {
+                    task_ids: batch.tasks.iter().map(|t| t.id).collect(),
+                    outputs: vec![Vec::new(); batch.tasks.len()],
+                    infer_secs: slept,
+                    steps: batch.max_true_len(),
+                }])
+            }
+            LaneKind::Cpu => Ok(self.execute_cpu_pool(batch)),
         }
     }
 }
 
 /// Per-lane factory over [`ModeledExecutor`]: every lane worker gets
-/// its own copy of the latency model and device profile. Shared by
-/// `rtlm serve --backend modeled` and the TCP front-end.
+/// its own copy of the latency model and device profile, resolved to
+/// its spec's model variant and worker count (`None` workers default to
+/// the device profile's `cpu_workers`, matching the simulator). Shared
+/// by `rtlm serve --backend modeled` and the TCP front-end.
 pub fn modeled_factory(
     lat: LatencyModel,
-    model: ModelEntry,
+    models: BTreeMap<String, ModelEntry>,
     dev: DeviceProfile,
     time_scale: f64,
 ) -> ExecutorFactory {
-    Arc::new(move |_lane| {
+    Arc::new(move |spec: &LaneSpec| {
+        let model = models
+            .get(&spec.model)
+            .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?
+            .clone();
         Ok(Box::new(ModeledExecutor {
             lat: lat.clone(),
-            model: model.clone(),
+            model,
             dev: dev.clone(),
             time_scale,
+            kind: spec.kind,
+            workers: spec.workers.unwrap_or(dev.cpu_workers).max(1),
         }) as Box<dyn BatchExecutor>)
     })
 }
 
 /// Completes every batch immediately — the deterministic executor the
 /// cross-backend equivalence and drain tests drive the wire path with.
+/// Kind-agnostic: one report for the whole batch.
 pub struct InstantExecutor;
 
 impl BatchExecutor for InstantExecutor {
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
-        match batch.lane {
-            Lane::Gpu => Ok(vec![ExecReport {
-                lane: Lane::Gpu,
-                task_ids: batch.tasks.iter().map(|t| t.id).collect(),
-                outputs: vec![Vec::new(); batch.tasks.len()],
-                infer_secs: 0.0,
-                steps: 0,
-            }]),
-            Lane::Cpu => Ok(batch
-                .tasks
-                .iter()
-                .map(|t| ExecReport {
-                    lane: Lane::Cpu,
-                    task_ids: vec![t.id],
-                    outputs: vec![Vec::new()],
-                    infer_secs: 0.0,
-                    steps: 0,
-                })
-                .collect()),
-        }
+        Ok(vec![ExecReport {
+            task_ids: batch.tasks.iter().map(|t| t.id).collect(),
+            outputs: vec![Vec::new(); batch.tasks.len()],
+            infer_secs: 0.0,
+            steps: 0,
+        }])
     }
 }
 
-/// Run a batch on the accelerator lane (batched prefill + decode).
+/// Run a batch on an accelerator lane (batched prefill + decode).
 pub fn execute_gpu(session: &Arc<LmSession>, batch: &Batch) -> Result<ExecReport> {
     let prompts: Vec<Vec<i32>> = batch.tasks.iter().map(|t| t.prompt.clone()).collect();
     let lens: Vec<usize> = batch.tasks.iter().map(|t| t.true_len.max(1)).collect();
     let gen = session.generate(&prompts, &lens)?;
     Ok(ExecReport {
-        lane: Lane::Gpu,
         task_ids: batch.tasks.iter().map(|t| t.id).collect(),
         outputs: gen.tokens,
         infer_secs: gen.prefill_secs + gen.decode_secs,
@@ -195,7 +221,7 @@ pub fn execute_gpu(session: &Arc<LmSession>, batch: &Batch) -> Result<ExecReport
     })
 }
 
-/// Run a batch on the quarantine lane: tasks sequentially at batch 1.
+/// Run a batch on a quarantine lane: tasks sequentially at batch 1.
 /// Returns one report per task so completions stream out one at a time.
 pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecReport>> {
     let mut reports = Vec::with_capacity(batch.tasks.len());
@@ -205,7 +231,6 @@ pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecRe
             &[task.true_len.max(1)],
         )?;
         reports.push(ExecReport {
-            lane: Lane::Cpu,
             task_ids: vec![task.id],
             outputs: gen.tokens,
             infer_secs: gen.prefill_secs + gen.decode_secs,

@@ -15,14 +15,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use std::collections::BTreeMap;
+
 use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
-use rtlm::config::{DeviceProfile, Manifest, SchedParams};
+use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
 use rtlm::executor::{modeled_factory, ExecutorFactory};
 use rtlm::metrics::table::fmt_f;
 use rtlm::model::LmSession;
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::PolicyKind;
-use rtlm::server::{serve, serve_with_factory, ServeOptions};
+use rtlm::scheduler::{lane, LaneSet, PolicyKind};
+use rtlm::server::{serve_from_root, serve_with_factory, ServeOptions};
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::uncertainty::Estimator;
 use rtlm::util::cli::Args;
@@ -41,6 +43,56 @@ fn artifacts_root(args: &Args) -> PathBuf {
     args.get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(Manifest::default_root)
+}
+
+/// Build the lane fleet from `--lanes` (inline grammar or `@file.json`),
+/// defaulting to the historical two-lane gpu+cpu fleet. Thresholds may
+/// be plain numbers, `inf`, `tau` (the computed offload threshold), or
+/// `qP` quantiles of the workload's training scores (e.g. `q0.9`).
+fn lanes_from_args(
+    args: &Args,
+    default_model: &str,
+    tau: f64,
+    train_scores: &mut rtlm::metrics::Samples,
+) -> Result<LaneSet> {
+    let Some(spec) = args.get("lanes") else {
+        return Ok(LaneSet::two_lane(default_model, tau));
+    };
+    let mut resolve = |tok: &str| -> Result<f64> {
+        match tok {
+            "tau" => Ok(tau),
+            _ if tok.starts_with('q') => {
+                let p: f64 = tok[1..]
+                    .parse()
+                    .map_err(|_| anyhow!("bad quantile token '{tok}' (expected e.g. q0.9)"))?;
+                Ok(train_scores.quantile(p))
+            }
+            _ => lane::numeric_thresholds(tok),
+        }
+    };
+    if let Some(path) = spec.strip_prefix('@') {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading lane file {path}: {e}"))?;
+        let json = rtlm::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("parsing lane file {path}: {e}"))?;
+        LaneSet::parse_json(&json, default_model, &mut resolve)
+    } else {
+        LaneSet::parse(spec, default_model, &mut resolve)
+    }
+}
+
+/// Resolve every lane's model variant against the manifest.
+fn lane_models(
+    store: &ArtifactStore,
+    lanes: &LaneSet,
+) -> Result<BTreeMap<String, ModelEntry>> {
+    let mut models = BTreeMap::new();
+    for spec in lanes.iter() {
+        if !models.contains_key(&spec.model) {
+            models.insert(spec.model.clone(), store.manifest.model(&spec.model)?.clone());
+        }
+    }
+    Ok(models)
 }
 
 fn estimator_for(store: &Arc<ArtifactStore>) -> Estimator {
@@ -75,11 +127,16 @@ fn run(args: &Args) -> Result<()> {
                  \x20 bench <exp|all> [--n N]    regenerate paper experiments: {exps}\n\
                  \x20 sim [--model M] [--policy P] [--n N] [--device D] [--variance V]\n\
                  \x20 serve [--model M] [--policy P] [--n N] [--time-scale S] [--backend pjrt|modeled]\n\
+                 \x20     [--variance V] [--lanes SPEC] [--require-all-lanes]\n\
                  \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
-                 \x20     [--time-scale S] [--device D]\n\
+                 \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
                  \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
-                 \x20     [--timeout-s S] [--connect-wait-s S]\n\
-                 \x20 score <text...>            print RULEGEN features + u_J",
+                 \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
+                 \x20 score <text...>            print RULEGEN features + u_J\n\n\
+                 --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
+                 (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H;\n\
+                 thresholds take numbers, inf, tau, or qP quantiles), or @lanes.json.\n\
+                 e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"",
                 exps = EXPERIMENTS.join(",")
             );
             Ok(())
@@ -226,12 +283,11 @@ fn sim(args: &Args) -> Result<()> {
         fmt_f(s.max(), 3)
     );
     println!(
-        "throughput {}/min  misses {} ({:.1}%)  batches gpu={} cpu={}  sched {:.1} us/task",
+        "throughput {}/min  misses {} ({:.1}%)  batches {}  sched {:.1} us/task",
         fmt_f(r.throughput_per_min(), 1),
         r.miss_count(),
         r.miss_rate() * 100.0,
-        r.n_batches_gpu,
-        r.n_batches_cpu,
+        r.fmt_batches(),
         r.sched_wall_secs / r.outcomes.len().max(1) as f64 * 1e6,
     );
     if let Some(path) = args.get("export") {
@@ -250,6 +306,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let kind = PolicyKind::parse(args.get_or("policy", "rtlm"))?;
     let time_scale = args.get_f64("time-scale", 20.0)?;
     let beta = args.get_f64("beta", 120.0)?;
+    let variance = match args.get_or("variance", "normal") {
+        "small" => Variance::Small,
+        "large" => Variance::Large,
+        _ => Variance::Normal,
+    };
 
     let est = estimator_for(&store);
     let items = corpus::load_many(store.manifest.corpus_test.values())?;
@@ -257,7 +318,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         .iter()
         .map(|i| est.score_features(&i.features))
         .collect::<Result<_>>()?;
-    let chosen = subsets::select(&items, &scores, Variance::Normal, n, seed);
+    let chosen = subsets::select(&items, &scores, variance, n, seed);
     let trace = ArrivalTrace::poisson_fixed(n, beta, seed);
     let model = store.manifest.model(&model_name)?.clone();
     let factory = TaskFactory::new(est, 2.0);
@@ -272,27 +333,31 @@ fn serve_cmd(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let tau = train_scores.quantile(params.k);
-    let mut policy = kind.build(&params, model.eta, tau);
+    let lanes = lanes_from_args(args, &model_name, tau, &mut train_scores)?;
+    // UP priorities estimate execution time with the coefficient of the
+    // model the primary lane actually serves (which --lanes may have
+    // pointed away from --model)
+    let primary_eta = store.manifest.model(&lanes.spec(lanes.primary()).model)?.eta;
+    let mut policy = kind.build(&params, primary_eta, &lanes);
 
     let backend = args.get_or("backend", "pjrt").to_string();
     println!(
-        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={} backend={backend}",
+        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={} backend={backend} lanes={}",
         kind.label(),
-        params.batch_size
+        params.batch_size,
+        lanes.names().join(",")
     );
     let opts = ServeOptions { time_scale, verbose: args.flag("verbose") };
     let report = match backend.as_str() {
-        "pjrt" => {
-            let session = Arc::new(LmSession::new(store.clone(), &model_name)?);
-            serve(session, tasks, &mut *policy, &params, &opts)?
-        }
+        "pjrt" => serve_from_root(&root, &lanes, tasks, &mut *policy, &params, &opts)?,
         // full wire path — threads, channels, ξ deadlines — with batch
         // durations from the calibrated latency model: no PJRT backend
         // and no model artifacts needed beyond the manifest pipeline
         "modeled" | "sim" => {
             let dev = DeviceProfile::by_name(args.get_or("device", "edge-server"))?;
-            let factory = modeled_factory(lat.clone(), model.clone(), dev, time_scale);
-            serve_with_factory(tasks, &mut *policy, &params, &opts, factory)?
+            let models = lane_models(&store, &lanes)?;
+            let factory = modeled_factory(lat.clone(), models, dev, time_scale);
+            serve_with_factory(tasks, &mut *policy, &params, &lanes, &opts, factory)?
         }
         other => return Err(anyhow!("unknown serve backend '{other}' (pjrt | modeled)")),
     };
@@ -307,13 +372,29 @@ fn serve_cmd(args: &Args) -> Result<()> {
         fmt_f(s.max(), 3)
     );
     println!(
-        "throughput {}/min | batches gpu={} cpu={} | infer {:.1}s | sched {:.1} us/task",
+        "throughput {}/min | batches {} | infer {:.1}s | sched {:.1} us/task",
         fmt_f(report.throughput_per_min(), 1),
-        report.n_batches_gpu,
-        report.n_batches_cpu,
+        report.fmt_batches(),
         report.infer_secs,
         report.sched_secs / report.outcomes.len().max(1) as f64 * 1e6
     );
+    if args.flag("require-all-lanes") {
+        let starved: Vec<&str> = report
+            .lanes
+            .iter()
+            .zip(&report.n_batches)
+            .filter(|(_, &c)| c == 0)
+            .map(|(name, _)| name.as_str())
+            .collect();
+        if !starved.is_empty() {
+            return Err(anyhow!(
+                "lanes executed no batch: {} (batches {})",
+                starved.join(", "),
+                report.fmt_batches()
+            ));
+        }
+        println!("every configured lane executed >= 1 batch");
+    }
     Ok(())
 }
 
@@ -323,6 +404,7 @@ fn tcp(args: &Args) -> Result<()> {
     let model_name = args.get_or("model", "t5").to_string();
     let addr = args.get_or("addr", "127.0.0.1:7490").to_string();
     let kind = PolicyKind::parse(args.get_or("policy", "rtlm"))?;
+    let pipeline = args.get_usize("pipeline", 1)?.max(1);
     let est = estimator_for(&store);
 
     let items = corpus::load_many(store.manifest.corpus_train.values())?;
@@ -333,23 +415,27 @@ fn tcp(args: &Args) -> Result<()> {
     let mut s = rtlm::metrics::Samples::from_vec(scores);
     let params = SchedParams { batch_size: 4, xi: 0.25, ..Default::default() };
     let tau = s.quantile(params.k);
-    let model = store.manifest.model(&model_name)?;
-    let policy = kind.build(&params, model.eta, tau);
+    let lanes = lanes_from_args(args, &model_name, tau, &mut s)?;
+    // eta (like phi in TcpServerConfig::from_store) comes from the
+    // model the primary lane actually serves
+    let primary_eta = store.manifest.model(&lanes.spec(lanes.primary()).model)?.eta;
+    let policy = kind.build(&params, primary_eta, &lanes);
 
     // executors are built inside their lane worker threads (PJRT
-    // handles are not Send), so both lanes serve genuinely concurrently
+    // handles are not Send), so every lane serves genuinely concurrently
     let factory: ExecutorFactory = match args.get_or("backend", "pjrt") {
-        "pjrt" => rtlm::server::engine::pjrt_factory(&root, &model_name),
+        "pjrt" => rtlm::server::engine::pjrt_factory(&root),
         // backend-free serving smoke: modeled latencies, empty outputs
         "modeled" | "sim" => modeled_factory(
             LatencyModel::load_or_analytic(&store.manifest)?,
-            model.clone(),
+            lane_models(&store, &lanes)?,
             DeviceProfile::by_name(args.get_or("device", "edge-server"))?,
             args.get_f64("time-scale", 1.0)?,
         ),
         other => return Err(anyhow!("unknown tcp backend '{other}' (pjrt | modeled)")),
     };
-    rtlm::server::tcp::serve_tcp(store, &model_name, factory, est, policy, params, &addr)
+    let cfg = rtlm::server::tcp::TcpServerConfig::from_store(&store, est, lanes, params, pipeline)?;
+    rtlm::server::tcp::serve_tcp(cfg, factory, policy, &addr)
 }
 
 fn loadgen(args: &Args) -> Result<()> {
@@ -384,6 +470,9 @@ fn loadgen(args: &Args) -> Result<()> {
         fmt_f(max, 1),
         fmt_f(report.rtt_ms.p95(), 1),
     );
+    if !report.lane_tasks.is_empty() {
+        println!("per-lane tasks: {}", report.fmt_lane_tasks());
+    }
     for e in &report.errors {
         eprintln!("  error: {e}");
     }
@@ -393,6 +482,21 @@ fn loadgen(args: &Args) -> Result<()> {
             report.n_err,
             report.n_ok
         ));
+    }
+    if let Some(expect) = args.get("expect-lanes") {
+        let missing: Vec<&str> = expect
+            .split(',')
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && report.lane_tasks.get(*l).copied().unwrap_or(0) == 0)
+            .collect();
+        if !missing.is_empty() {
+            return Err(anyhow!(
+                "lanes served no task: {} (per-lane tasks: {})",
+                missing.join(", "),
+                report.fmt_lane_tasks()
+            ));
+        }
+        println!("every expected lane served >= 1 task");
     }
     if let Some(bound) = args.get("p95-ms") {
         let bound: f64 = bound

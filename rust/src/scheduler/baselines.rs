@@ -1,21 +1,29 @@
 //! Uncertainty-oblivious / single-signal baselines (Sec. V-B):
 //! FIFO, HPF (highest priority-point first), LUF (least uncertainty
-//! first), MUF (maximum uncertainty first). All use fixed-size batching.
+//! first), MUF (maximum uncertainty first). All use fixed-size batching
+//! and dispatch only on the fleet's primary lane — baselines do not
+//! offload.
 
 use std::collections::VecDeque;
 
-use super::policy::{Batch, Lane, Policy};
+use super::lane::LaneId;
+use super::policy::{Batch, Policy};
 use super::task::Task;
 
 /// First-In-First-Out with fixed-size batches.
 pub struct Fifo {
     queue: VecDeque<Task>,
     batch_size: usize,
+    primary: LaneId,
 }
 
 impl Fifo {
     pub fn new(batch_size: usize) -> Fifo {
-        Fifo { queue: VecDeque::new(), batch_size: batch_size.max(1) }
+        Fifo::new_on(batch_size, LaneId::GPU)
+    }
+
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Fifo {
+        Fifo { queue: VecDeque::new(), batch_size: batch_size.max(1), primary }
     }
 }
 
@@ -28,16 +36,16 @@ impl Policy for Fifo {
         self.queue.push_back(task);
     }
 
-    fn pop_batch(&mut self, lane: Lane, _now: f64, force: bool) -> Option<Batch> {
-        if lane == Lane::Cpu {
-            return None; // baselines are uncertainty-oblivious: GPU only
+    fn pop_batch(&mut self, lane: LaneId, _now: f64, force: bool) -> Option<Batch> {
+        if lane != self.primary {
+            return None; // baselines are uncertainty-oblivious: primary lane only
         }
         if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
             return None;
         }
         let n = self.queue.len().min(self.batch_size);
         let tasks = self.queue.drain(..n).collect();
-        Some(Batch { lane: Lane::Gpu, tasks })
+        Some(Batch { lane: self.primary, tasks })
     }
 
     fn queue_len(&self) -> usize {
@@ -52,11 +60,12 @@ struct Sorted<K: Fn(&Task) -> f64 + Send> {
     queue: Vec<Task>,
     key: K,
     batch_size: usize,
+    primary: LaneId,
 }
 
 impl<K: Fn(&Task) -> f64 + Send> Sorted<K> {
-    fn new(name: &'static str, key: K, batch_size: usize) -> Self {
-        Sorted { name, queue: Vec::new(), key, batch_size: batch_size.max(1) }
+    fn new(name: &'static str, key: K, batch_size: usize, primary: LaneId) -> Self {
+        Sorted { name, queue: Vec::new(), key, batch_size: batch_size.max(1), primary }
     }
 }
 
@@ -80,8 +89,8 @@ impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
         self.queue.insert(pos, task);
     }
 
-    fn pop_batch(&mut self, lane: Lane, _now: f64, force: bool) -> Option<Batch> {
-        if lane == Lane::Cpu {
+    fn pop_batch(&mut self, lane: LaneId, _now: f64, force: bool) -> Option<Batch> {
+        if lane != self.primary {
             return None;
         }
         if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
@@ -89,7 +98,7 @@ impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
         }
         let n = self.queue.len().min(self.batch_size);
         let tasks = self.queue.drain(..n).collect();
-        Some(Batch { lane: Lane::Gpu, tasks })
+        Some(Batch { lane: self.primary, tasks })
     }
 
     fn queue_len(&self) -> usize {
@@ -102,7 +111,11 @@ pub struct Hpf(Sorted<fn(&Task) -> f64>);
 
 impl Hpf {
     pub fn new(batch_size: usize) -> Hpf {
-        Hpf(Sorted::new("HPF", |t: &Task| t.priority_point, batch_size))
+        Hpf::new_on(batch_size, LaneId::GPU)
+    }
+
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Hpf {
+        Hpf(Sorted::new("HPF", |t: &Task| t.priority_point, batch_size, primary))
     }
 }
 
@@ -113,7 +126,7 @@ impl Policy for Hpf {
     fn push(&mut self, task: Task) {
         self.0.push(task)
     }
-    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
         self.0.pop_batch(lane, now, force)
     }
     fn queue_len(&self) -> usize {
@@ -126,7 +139,11 @@ pub struct Luf(Sorted<fn(&Task) -> f64>);
 
 impl Luf {
     pub fn new(batch_size: usize) -> Luf {
-        Luf(Sorted::new("LUF", |t: &Task| t.uncertainty, batch_size))
+        Luf::new_on(batch_size, LaneId::GPU)
+    }
+
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Luf {
+        Luf(Sorted::new("LUF", |t: &Task| t.uncertainty, batch_size, primary))
     }
 }
 
@@ -137,7 +154,7 @@ impl Policy for Luf {
     fn push(&mut self, task: Task) {
         self.0.push(task)
     }
-    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
         self.0.pop_batch(lane, now, force)
     }
     fn queue_len(&self) -> usize {
@@ -150,7 +167,11 @@ pub struct Muf(Sorted<fn(&Task) -> f64>);
 
 impl Muf {
     pub fn new(batch_size: usize) -> Muf {
-        Muf(Sorted::new("MUF", |t: &Task| -t.uncertainty, batch_size))
+        Muf::new_on(batch_size, LaneId::GPU)
+    }
+
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Muf {
+        Muf(Sorted::new("MUF", |t: &Task| -t.uncertainty, batch_size, primary))
     }
 }
 
@@ -161,7 +182,7 @@ impl Policy for Muf {
     fn push(&mut self, task: Task) {
         self.0.push(task)
     }
-    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
+    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
         self.0.pop_batch(lane, now, force)
     }
     fn queue_len(&self) -> usize {
@@ -180,7 +201,7 @@ mod tests {
         f.push(test_task(1, 0.0, 10.0, 5.0));
         f.push(test_task(2, 1.0, 5.0, 50.0));
         f.push(test_task(3, 2.0, 1.0, 20.0));
-        let b = f.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        let b = f.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(f.queue_len(), 1);
     }
@@ -189,9 +210,19 @@ mod tests {
     fn fifo_waits_for_full_batch_unless_forced() {
         let mut f = Fifo::new(4);
         f.push(test_task(1, 0.0, 1.0, 1.0));
-        assert!(f.pop_batch(Lane::Gpu, 0.0, false).is_none());
-        let b = f.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        assert!(f.pop_batch(LaneId::GPU, 0.0, false).is_none());
+        let b = f.pop_batch(LaneId::GPU, 0.0, true).unwrap();
         assert_eq!(b.tasks.len(), 1);
+    }
+
+    #[test]
+    fn baselines_only_dispatch_on_their_primary_lane() {
+        let mut f = Fifo::new_on(1, LaneId(2));
+        f.push(test_task(1, 0.0, 1.0, 1.0));
+        assert!(f.pop_batch(LaneId(0), 0.0, true).is_none());
+        assert!(f.pop_batch(LaneId(1), 0.0, true).is_none());
+        let b = f.pop_batch(LaneId(2), 0.0, true).unwrap();
+        assert_eq!(b.lane, LaneId(2));
     }
 
     #[test]
@@ -200,7 +231,7 @@ mod tests {
         h.push(test_task(1, 0.0, 9.0, 5.0));
         h.push(test_task(2, 0.0, 3.0, 5.0));
         h.push(test_task(3, 0.0, 6.0, 5.0));
-        let b = h.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        let b = h.pop_batch(LaneId::GPU, 0.0, true).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
@@ -210,7 +241,7 @@ mod tests {
         l.push(test_task(1, 0.0, 1.0, 40.0));
         l.push(test_task(2, 0.0, 1.0, 10.0));
         l.push(test_task(3, 0.0, 1.0, 25.0));
-        let b = l.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        let b = l.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3, 1]);
     }
 
@@ -220,7 +251,7 @@ mod tests {
         m.push(test_task(1, 0.0, 1.0, 40.0));
         m.push(test_task(2, 0.0, 1.0, 10.0));
         m.push(test_task(3, 0.0, 1.0, 25.0));
-        let b = m.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        let b = m.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 3, 2]);
     }
 
@@ -229,7 +260,7 @@ mod tests {
         let mut l = Luf::new(4);
         l.push(test_task(2, 1.0, 1.0, 10.0));
         l.push(test_task(1, 0.0, 1.0, 10.0));
-        let b = l.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        let b = l.pop_batch(LaneId::GPU, 0.0, true).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
     }
 }

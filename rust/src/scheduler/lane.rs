@@ -1,0 +1,592 @@
+//! The runtime lane table: a heterogeneous fleet of execution lanes
+//! behind one uncertainty-aware queue.
+//!
+//! Historically the engine hardcoded exactly two lanes
+//! (`enum Lane { Gpu, Cpu }`) and the RT-LM offload rule was a `tau`
+//! special case inside the scheduler. This module generalises both: a
+//! [`LaneSet`] is an ordered table of [`LaneSpec`]s — name, device
+//! kind, model variant, batch size, intra-batch workers, and an
+//! [`Admission`] predicate — indexed by a dense [`LaneId`]. The paper's
+//! strategic CPU offloading (Eq. 4, `u > tau` quarantines to the CPU
+//! lane) is exactly the two-lane instance [`LaneSet::two_lane`]: an
+//! accelerator fallback lane plus a CPU lane admitting `u > tau`.
+//!
+//! Routing is deterministic and NaN-safe: a task is claimed by the
+//! first non-fallback lane whose predicate admits its uncertainty;
+//! anything unclaimed (including NaN scores, which no comparison
+//! admits) lands on the first fallback lane — the same place the old
+//! `u > tau` test sent it.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Dense index into a [`LaneSet`] — the engine's per-lane state
+/// (`busy`, batch counters, worker channels) is `Vec`-indexed by it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LaneId(pub usize);
+
+impl LaneId {
+    /// The accelerator lane of the default two-lane convention
+    /// ([`LaneSet::two_lane`]); lane 0 is the first fallback lane there.
+    pub const GPU: LaneId = LaneId(0);
+    /// The quarantine lane of the default two-lane convention.
+    pub const CPU: LaneId = LaneId(1);
+
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl std::fmt::Display for LaneId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lane{}", self.0)
+    }
+}
+
+/// What kind of device a lane models — which latency model and executor
+/// shape it gets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneKind {
+    /// Batched execution: the whole batch runs fused, every task
+    /// completes when the batch does (paper: GPU).
+    Accelerator,
+    /// Quarantine-style execution: tasks run at batch 1 across an
+    /// intra-batch worker pool; the lane frees when the whole batch is
+    /// done (paper: CPU cores).
+    Cpu,
+}
+
+impl LaneKind {
+    pub fn parse(s: &str) -> Result<LaneKind> {
+        Ok(match s {
+            "gpu" | "accel" | "accelerator" => LaneKind::Accelerator,
+            "cpu" | "quarantine" => LaneKind::Cpu,
+            other => bail!("unknown lane kind '{other}' (gpu | cpu)"),
+        })
+    }
+}
+
+/// Per-lane admission predicate over a task's uncertainty score — the
+/// generalisation of the paper's `u > tau` offload rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// Takes whatever no other lane claimed. Every valid [`LaneSet`]
+    /// has at least one fallback lane, so routing is total.
+    Fallback,
+    /// Claims `u > x` — `Above(tau)` is strategic offloading (Eq. 4).
+    Above(f64),
+    /// Claims `u <= x` (e.g. a small fast model variant for
+    /// low-uncertainty traffic).
+    AtMost(f64),
+    /// Claims `lo < u <= hi`.
+    Band(f64, f64),
+    /// Claims nothing — a drained / decommissioned lane.
+    Nothing,
+}
+
+impl Admission {
+    /// Does this predicate claim a task with uncertainty `u`? Fallback
+    /// lanes never *claim*; they receive the unclaimed remainder. All
+    /// comparisons are false for NaN, so unscorable tasks fall through
+    /// to the fallback lane.
+    pub fn claims(&self, u: f64) -> bool {
+        match *self {
+            Admission::Fallback | Admission::Nothing => false,
+            Admission::Above(x) => u > x,
+            Admission::AtMost(x) => u <= x,
+            Admission::Band(lo, hi) => u > lo && u <= hi,
+        }
+    }
+
+    /// Can this predicate ever claim a (finite) score? `Above(inf)` —
+    /// the historical `tau = +inf` "offloading disabled" encoding —
+    /// cannot, which is how policy names degrade RT-LM to UP+C.
+    pub fn can_claim(&self) -> bool {
+        match *self {
+            Admission::Fallback | Admission::Nothing => false,
+            Admission::Above(x) => x < f64::INFINITY,
+            Admission::AtMost(x) => x > f64::NEG_INFINITY,
+            Admission::Band(lo, hi) => lo < hi,
+        }
+    }
+
+    /// Parse the CLI grammar: `default` | `none` | `above:X` |
+    /// `atmost:X` | `band:LO:HI`, thresholds resolved by `resolve`
+    /// (plain numbers, plus context-dependent tokens like `tau` or
+    /// `q0.9` when the caller provides them).
+    pub fn parse(s: &str, resolve: &mut dyn FnMut(&str) -> Result<f64>) -> Result<Admission> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let adm = match head {
+            "default" | "fallback" => Admission::Fallback,
+            "none" | "nothing" => Admission::Nothing,
+            "above" => {
+                let x = parts.next().ok_or_else(|| anyhow!("above needs a threshold"))?;
+                Admission::Above(resolve(x)?)
+            }
+            "atmost" => {
+                let x = parts.next().ok_or_else(|| anyhow!("atmost needs a threshold"))?;
+                Admission::AtMost(resolve(x)?)
+            }
+            "band" => {
+                let lo = parts.next().ok_or_else(|| anyhow!("band needs lo:hi"))?;
+                let hi = parts.next().ok_or_else(|| anyhow!("band needs lo:hi"))?;
+                Admission::Band(resolve(lo)?, resolve(hi)?)
+            }
+            other => bail!("unknown admission '{other}' (default | none | above:X | atmost:X | band:LO:HI)"),
+        };
+        if parts.next().is_some() {
+            bail!("trailing tokens in admission spec '{s}'");
+        }
+        Ok(adm)
+    }
+}
+
+/// One execution lane of the fleet.
+#[derive(Clone, Debug)]
+pub struct LaneSpec {
+    /// Display name, unique within the set ("gpu", "cpu", "gpt2-small"…).
+    pub name: String,
+    pub kind: LaneKind,
+    /// Model variant served by this lane (a `manifest.json` model name;
+    /// backends that execute resolve it, pure-logic paths ignore it).
+    pub model: String,
+    /// Per-lane batch size; `None` uses `SchedParams::batch_size`.
+    pub batch_size: Option<usize>,
+    /// Intra-batch workers for [`LaneKind::Cpu`] lanes; `None` uses the
+    /// device profile's `cpu_workers`.
+    pub workers: Option<usize>,
+    pub admission: Admission,
+}
+
+impl LaneSpec {
+    /// An accelerator fallback lane.
+    pub fn accelerator(name: &str, model: &str) -> LaneSpec {
+        LaneSpec {
+            name: name.into(),
+            kind: LaneKind::Accelerator,
+            model: model.into(),
+            batch_size: None,
+            workers: None,
+            admission: Admission::Fallback,
+        }
+    }
+
+    /// A CPU quarantine lane admitting `u > tau`.
+    pub fn cpu_offload(name: &str, model: &str, tau: f64) -> LaneSpec {
+        LaneSpec {
+            name: name.into(),
+            kind: LaneKind::Cpu,
+            model: model.into(),
+            batch_size: None,
+            workers: None,
+            admission: Admission::Above(tau),
+        }
+    }
+}
+
+/// An ordered, validated table of lanes. The order is the engine's
+/// dispatch order (lane 0 is offered a batch first each round) and the
+/// routing order (first claiming lane wins).
+#[derive(Clone, Debug)]
+pub struct LaneSet {
+    lanes: Vec<LaneSpec>,
+    /// Index of the first fallback lane (validated to exist).
+    primary: usize,
+}
+
+impl LaneSet {
+    pub fn new(lanes: Vec<LaneSpec>) -> Result<LaneSet> {
+        if lanes.is_empty() {
+            bail!("a lane set needs at least one lane");
+        }
+        let primary = lanes
+            .iter()
+            .position(|l| l.admission == Admission::Fallback)
+            .ok_or_else(|| anyhow!("a lane set needs at least one fallback (admit=default) lane"))?;
+        for (i, lane) in lanes.iter().enumerate() {
+            if lane.name.is_empty() {
+                bail!("lane {i} has an empty name");
+            }
+            if lanes[..i].iter().any(|l| l.name == lane.name) {
+                bail!("duplicate lane name '{}'", lane.name);
+            }
+            if let Some(0) = lane.batch_size {
+                bail!("lane '{}' has batch size 0", lane.name);
+            }
+            if let Some(0) = lane.workers {
+                bail!("lane '{}' has 0 workers", lane.name);
+            }
+        }
+        Ok(LaneSet { lanes, primary })
+    }
+
+    /// The historical configuration: accelerator fallback lane `gpu` +
+    /// CPU quarantine lane `cpu` admitting `u > tau`. Reproduces the
+    /// pre-lane-table engine exactly (`tau = +inf` disables offloading).
+    pub fn two_lane(model: &str, tau: f64) -> LaneSet {
+        LaneSet::new(vec![
+            LaneSpec::accelerator("gpu", model),
+            LaneSpec::cpu_offload("cpu", model, tau),
+        ])
+        .expect("two-lane default is valid")
+    }
+
+    /// Degenerate single-lane fleet: one accelerator fallback lane.
+    pub fn single(model: &str) -> LaneSet {
+        LaneSet::new(vec![LaneSpec::accelerator("gpu", model)]).expect("single lane is valid")
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty() // always false: validated non-empty
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, LaneSpec> {
+        self.lanes.iter()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = LaneId> {
+        (0..self.lanes.len()).map(LaneId)
+    }
+
+    pub fn spec(&self, id: LaneId) -> &LaneSpec {
+        &self.lanes[id.0]
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.lanes.iter().map(|l| l.name.clone()).collect()
+    }
+
+    /// The first fallback lane — where unclaimed tasks are routed and
+    /// where single-queue baseline policies dispatch.
+    pub fn primary(&self) -> LaneId {
+        LaneId(self.primary)
+    }
+
+    /// Route one task by uncertainty: the first non-fallback lane whose
+    /// predicate claims it, else the primary fallback lane.
+    pub fn route(&self, u: f64) -> LaneId {
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.admission.claims(u) {
+                return LaneId(i);
+            }
+        }
+        LaneId(self.primary)
+    }
+
+    /// Any lane that could pull traffic away from the fallback lane —
+    /// i.e. offloading is actually in effect.
+    pub fn has_offload(&self) -> bool {
+        self.lanes.iter().any(|l| l.admission.can_claim())
+    }
+
+    /// `name=count` pairs in lane order, e.g. `gpu=12 cpu=3` — the
+    /// per-lane batch table every report prints.
+    pub fn format_counts(&self, counts: &[usize]) -> String {
+        format_lane_counts(&self.names(), counts)
+    }
+
+    /// Parse the CLI grammar:
+    /// `kind[:model][:key=value]*` lanes joined by commas, e.g.
+    /// `gpu:gpt2-large,cpu:gpt2-medium:workers=4`. Keys: `name=`,
+    /// `workers=N`, `batch=N`, `admit=SPEC` (see [`Admission::parse`]).
+    /// Defaults: model = `default_model`; admission = `default` for the
+    /// first `gpu` lane, `above:tau` for `cpu` lanes (resolved by
+    /// `resolve`), `default` otherwise; name = kind, suffixed with the
+    /// lane index on collision.
+    pub fn parse(
+        spec: &str,
+        default_model: &str,
+        resolve: &mut dyn FnMut(&str) -> Result<f64>,
+    ) -> Result<LaneSet> {
+        let mut lanes: Vec<LaneSpec> = Vec::new();
+        for (idx, lane_str) in spec.split(',').enumerate() {
+            let lane_str = lane_str.trim();
+            if lane_str.is_empty() {
+                bail!("empty lane in --lanes spec");
+            }
+            let mut parts = lane_str.split(':');
+            let kind_str = parts.next().unwrap();
+            let kind = LaneKind::parse(kind_str)?;
+            let mut model = default_model.to_string();
+            let mut name: Option<String> = None;
+            let mut workers = None;
+            let mut batch_size = None;
+            let mut admission: Option<Admission> = None;
+            let mut first = true;
+            let mut rest = parts;
+            while let Some(tok) = rest.next() {
+                if let Some((key, value)) = tok.split_once('=') {
+                    match key {
+                        "name" => name = Some(value.to_string()),
+                        "workers" => {
+                            workers = Some(value.parse().map_err(|_| {
+                                anyhow!("bad workers '{value}' in lane '{lane_str}'")
+                            })?)
+                        }
+                        "batch" => {
+                            batch_size = Some(value.parse().map_err(|_| {
+                                anyhow!("bad batch '{value}' in lane '{lane_str}'")
+                            })?)
+                        }
+                        "admit" => {
+                            // band:LO:HI spills into the next ':' tokens
+                            let mut full = value.to_string();
+                            let extra = match value {
+                                "above" | "atmost" => 1,
+                                "band" => 2,
+                                _ => 0,
+                            };
+                            for _ in 0..extra {
+                                let t = rest.next().ok_or_else(|| {
+                                    anyhow!("truncated admit spec in lane '{lane_str}'")
+                                })?;
+                                full.push(':');
+                                full.push_str(t);
+                            }
+                            admission = Some(Admission::parse(&full, resolve)?);
+                        }
+                        other => bail!("unknown lane option '{other}' in '{lane_str}'"),
+                    }
+                } else if first {
+                    // the first bare token is the model variant
+                    model = tok.to_string();
+                } else {
+                    bail!("unexpected token '{tok}' in lane '{lane_str}' (options are key=value)");
+                }
+                first = false;
+            }
+            let admission = match admission {
+                Some(a) => a,
+                None => match kind {
+                    LaneKind::Cpu => Admission::Above(resolve("tau")?),
+                    LaneKind::Accelerator => Admission::Fallback,
+                },
+            };
+            // only *derived* default names auto-suffix on collision; an
+            // explicit duplicate `name=` is a config error that
+            // LaneSet::new rejects rather than silently renames
+            let name = match name {
+                Some(explicit) => explicit,
+                None => {
+                    let base = kind_str.to_string();
+                    if lanes.iter().any(|l| l.name == base) {
+                        format!("{base}{idx}")
+                    } else {
+                        base
+                    }
+                }
+            };
+            lanes.push(LaneSpec { name, kind, model, batch_size, workers, admission });
+        }
+        LaneSet::new(lanes)
+    }
+
+    /// Parse a JSON lane file: an array of objects with keys `kind`
+    /// (required), `model`, `name`, `workers`, `batch`, `admit` — the
+    /// same semantics and defaults as the CLI grammar.
+    pub fn parse_json(
+        json: &Json,
+        default_model: &str,
+        resolve: &mut dyn FnMut(&str) -> Result<f64>,
+    ) -> Result<LaneSet> {
+        let arr = json
+            .as_arr()
+            .ok_or_else(|| anyhow!("lane file must be a JSON array of lane objects"))?;
+        let mut lanes = Vec::new();
+        for (idx, entry) in arr.iter().enumerate() {
+            let kind_str = entry.need_str("kind")?;
+            let kind = LaneKind::parse(kind_str)?;
+            let model = entry
+                .get("model")
+                .as_str()
+                .unwrap_or(default_model)
+                .to_string();
+            let name = entry
+                .get("name")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{kind_str}{idx}"));
+            let workers = entry.get("workers").as_usize();
+            let batch_size = entry.get("batch").as_usize();
+            let admission = match entry.get("admit").as_str() {
+                Some(s) => Admission::parse(s, resolve)?,
+                None => match kind {
+                    LaneKind::Cpu => Admission::Above(resolve("tau")?),
+                    LaneKind::Accelerator => Admission::Fallback,
+                },
+            };
+            lanes.push(LaneSpec { name, kind, model, batch_size, workers, admission });
+        }
+        LaneSet::new(lanes)
+    }
+}
+
+impl std::ops::Index<LaneId> for LaneSet {
+    type Output = LaneSpec;
+    fn index(&self, id: LaneId) -> &LaneSpec {
+        &self.lanes[id.0]
+    }
+}
+
+/// `name=count` pairs for reports that carry lane names without the
+/// full [`LaneSet`].
+pub fn format_lane_counts(names: &[String], counts: &[usize]) -> String {
+    names
+        .iter()
+        .zip(counts)
+        .map(|(n, c)| format!("{n}={c}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Threshold resolver over plain numbers only (`inf` allowed) — test
+/// and library contexts with no workload statistics in scope.
+pub fn numeric_thresholds(tok: &str) -> Result<f64> {
+    match tok {
+        "inf" => Ok(f64::INFINITY),
+        _ => tok
+            .parse()
+            .map_err(|_| anyhow!("threshold '{tok}' is not a number (tau/quantile tokens need workload scores)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_lane_routes_like_tau() {
+        let lanes = LaneSet::two_lane("m", 60.0);
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes.primary(), LaneId::GPU);
+        assert_eq!(lanes.route(10.0), LaneId::GPU);
+        assert_eq!(lanes.route(60.0), LaneId::GPU); // u > tau strictly
+        assert_eq!(lanes.route(60.1), LaneId::CPU);
+        assert_eq!(lanes.route(f64::NAN), LaneId::GPU); // unscorable -> fallback
+    }
+
+    #[test]
+    fn infinite_tau_disables_offload() {
+        let lanes = LaneSet::two_lane("m", f64::INFINITY);
+        assert!(!lanes.has_offload());
+        assert_eq!(lanes.route(1e12), LaneId::GPU);
+    }
+
+    #[test]
+    fn first_claiming_lane_wins() {
+        let lanes = LaneSet::new(vec![
+            LaneSpec::accelerator("big", "m1"),
+            LaneSpec {
+                admission: Admission::AtMost(20.0),
+                ..LaneSpec::accelerator("small", "m2")
+            },
+            LaneSpec::cpu_offload("cpu", "m1", 60.0),
+        ])
+        .unwrap();
+        assert_eq!(lanes.route(10.0), LaneId(1));
+        assert_eq!(lanes.route(30.0), LaneId(0));
+        assert_eq!(lanes.route(90.0), LaneId(2));
+    }
+
+    #[test]
+    fn validation_rejects_bad_sets() {
+        assert!(LaneSet::new(vec![]).is_err());
+        // no fallback lane
+        assert!(LaneSet::new(vec![LaneSpec::cpu_offload("cpu", "m", 60.0)]).is_err());
+        // duplicate names
+        assert!(LaneSet::new(vec![
+            LaneSpec::accelerator("gpu", "m"),
+            LaneSpec::accelerator("gpu", "m"),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn parse_cli_grammar() {
+        let mut resolve = |tok: &str| match tok {
+            "tau" => Ok(55.0),
+            _ => numeric_thresholds(tok),
+        };
+        let lanes = LaneSet::parse(
+            "gpu:gpt2-large,gpu:gpt2-medium:admit=atmost:20:batch=8,cpu:gpt2-medium:workers=4",
+            "gpt2-large",
+            &mut resolve,
+        )
+        .unwrap();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(lanes.spec(LaneId(0)).model, "gpt2-large");
+        assert_eq!(lanes.spec(LaneId(0)).admission, Admission::Fallback);
+        assert_eq!(lanes.spec(LaneId(1)).admission, Admission::AtMost(20.0));
+        assert_eq!(lanes.spec(LaneId(1)).batch_size, Some(8));
+        assert_eq!(lanes.spec(LaneId(1)).name, "gpu1"); // deduplicated
+        assert_eq!(lanes.spec(LaneId(2)).kind, LaneKind::Cpu);
+        assert_eq!(lanes.spec(LaneId(2)).workers, Some(4));
+        assert_eq!(lanes.spec(LaneId(2)).admission, Admission::Above(55.0));
+        assert_eq!(lanes.route(90.0), LaneId(2));
+        assert_eq!(lanes.route(15.0), LaneId(1));
+    }
+
+    #[test]
+    fn parse_rejects_explicit_duplicate_names() {
+        // derived names auto-suffix...
+        let ok = LaneSet::parse("gpu,gpu", "m", &mut numeric_thresholds).unwrap();
+        assert_eq!(ok.names(), vec!["gpu", "gpu1"]);
+        // ...but an explicit duplicate name= is a config error
+        let err = LaneSet::parse(
+            "gpu:name=fast,gpu:name=fast:admit=atmost:20",
+            "m",
+            &mut numeric_thresholds,
+        );
+        assert!(err.is_err(), "explicit duplicate lane name must be rejected");
+    }
+
+    #[test]
+    fn parse_bare_kind_uses_default_model() {
+        let lanes =
+            LaneSet::parse("gpu,cpu", "t5", &mut |t| match t {
+                "tau" => Ok(60.0),
+                _ => numeric_thresholds(t),
+            })
+            .unwrap();
+        assert_eq!(lanes.spec(LaneId(0)).model, "t5");
+        assert_eq!(lanes.spec(LaneId(1)).admission, Admission::Above(60.0));
+    }
+
+    #[test]
+    fn parse_json_lane_file() {
+        let json = Json::parse(
+            r#"[
+            {"kind": "gpu", "model": "big"},
+            {"kind": "gpu", "model": "small", "name": "fast", "admit": "band:4:20"},
+            {"kind": "cpu", "workers": 2, "admit": "above:60"}
+        ]"#,
+        )
+        .unwrap();
+        let lanes = LaneSet::parse_json(&json, "big", &mut numeric_thresholds).unwrap();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(lanes.spec(LaneId(1)).name, "fast");
+        assert_eq!(lanes.spec(LaneId(1)).admission, Admission::Band(4.0, 20.0));
+        assert_eq!(lanes.spec(LaneId(2)).workers, Some(2));
+    }
+
+    #[test]
+    fn format_counts_matches_report_style() {
+        let lanes = LaneSet::two_lane("m", 60.0);
+        assert_eq!(lanes.format_counts(&[12, 3]), "gpu=12 cpu=3");
+    }
+
+    #[test]
+    fn admission_nothing_never_claims() {
+        let a = Admission::Nothing;
+        for u in [0.0, 50.0, f64::INFINITY, f64::NAN] {
+            assert!(!a.claims(u));
+        }
+        assert!(!a.can_claim());
+    }
+}

@@ -1,7 +1,8 @@
 //! The paper's system contribution (Sec. IV): uncertainty-aware
 //! prioritization (UP, Eq. 3), dynamic consolidation, strategic CPU
-//! offloading, and the uncertainty-oblivious baselines (FIFO, HPF, LUF,
-//! MUF) it is evaluated against.
+//! offloading generalised to per-lane admission predicates over an
+//! N-lane fleet ([`lane::LaneSet`]), and the uncertainty-oblivious
+//! baselines (FIFO, HPF, LUF, MUF) it is evaluated against.
 //!
 //! All policies implement [`Policy`]; the serving loop / simulator is
 //! policy-agnostic. Scheduling itself is pure logic with no runtime
@@ -9,13 +10,15 @@
 
 pub mod baselines;
 pub mod consolidation;
+pub mod lane;
 pub mod policy;
 pub mod task;
 pub mod uasched;
 pub mod up;
 
 pub use baselines::{Fifo, Hpf, Luf, Muf};
-pub use policy::{Batch, Lane, Policy, PolicyKind};
+pub use lane::{format_lane_counts, Admission, LaneId, LaneKind, LaneSet, LaneSpec};
+pub use policy::{Batch, Policy, PolicyKind};
 pub use task::Task;
 pub use uasched::UaSched;
 pub use up::up_priority;

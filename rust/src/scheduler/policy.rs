@@ -1,37 +1,20 @@
 //! The scheduling-policy interface shared by the real-time server and
 //! the discrete-event simulator.
+//!
+//! Lanes are a runtime table now ([`super::lane::LaneSet`]); policies
+//! are built against one and dispatch per [`LaneId`]. The historical
+//! `enum Lane { Gpu, Cpu }` is the two-lane instance
+//! [`LaneSet::two_lane`], with `LaneId::GPU` / `LaneId::CPU` naming its
+//! slots.
 
+use super::lane::{LaneId, LaneSet};
 use super::task::Task;
 use crate::config::SchedParams;
-
-/// Which execution lane a batch is dispatched to.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Lane {
-    /// The accelerator lane (paper: GPU).
-    Gpu,
-    /// The quarantine lane (paper: CPU cores) used by strategic offloading.
-    Cpu,
-}
-
-impl Lane {
-    /// Every lane, in the engine's fixed dispatch order.
-    pub const ALL: [Lane; 2] = [Lane::Gpu, Lane::Cpu];
-
-    /// Dense index for per-lane state arrays (`[T; Lane::ALL.len()]`) —
-    /// the single source of the lane→slot convention shared by the
-    /// dispatcher core and every execution backend.
-    pub fn index(self) -> usize {
-        match self {
-            Lane::Gpu => 0,
-            Lane::Cpu => 1,
-        }
-    }
-}
 
 /// A dispatched batch.
 #[derive(Clone, Debug)]
 pub struct Batch {
-    pub lane: Lane,
+    pub lane: LaneId,
     pub tasks: Vec<Task>,
 }
 
@@ -51,11 +34,11 @@ impl Batch {
 /// (e.g. the queue holds fewer than a full batch); with `force = true`
 /// the policy must dispatch whatever it has for that lane (the engine
 /// sets this when the lane is idle and the wait interval xi has
-/// elapsed). Baselines never use the CPU lane.
+/// elapsed). Baselines use only the fleet's primary lane.
 pub trait Policy: Send {
     fn name(&self) -> String;
     fn push(&mut self, task: Task);
-    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch>;
+    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch>;
     fn queue_len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.queue_len() == 0
@@ -87,6 +70,18 @@ impl PolicyKind {
     pub const ABLATION: [PolicyKind; 4] =
         [PolicyKind::Fifo, PolicyKind::Up, PolicyKind::UpC, PolicyKind::RtLm];
 
+    /// Every kind — the N-lane equivalence tests sweep all of them.
+    pub const ALL: [PolicyKind; 8] = [
+        PolicyKind::Fifo,
+        PolicyKind::Hpf,
+        PolicyKind::Luf,
+        PolicyKind::Muf,
+        PolicyKind::Slack,
+        PolicyKind::Up,
+        PolicyKind::UpC,
+        PolicyKind::RtLm,
+    ];
+
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::Fifo => "FIFO",
@@ -114,25 +109,35 @@ impl PolicyKind {
         })
     }
 
-    /// Instantiate the policy. `eta` is the serving model's
-    /// output-length-to-seconds coefficient; `tau` the offload threshold
-    /// (only RT-LM uses it).
-    pub fn build(&self, params: &SchedParams, eta: f64, tau: f64) -> Box<dyn Policy> {
+    /// Instantiate the policy over a lane fleet. `eta` is the primary
+    /// serving model's output-length-to-seconds coefficient. The fleet's
+    /// admission predicates carry what used to be the `tau` offload
+    /// threshold; only RT-LM honours them (the ablation arms and the
+    /// baselines ignore offload lanes, like their historical
+    /// `tau = +inf` builds).
+    pub fn build(&self, params: &SchedParams, eta: f64, lanes: &LaneSet) -> Box<dyn Policy> {
         use super::baselines::*;
         use super::uasched::UaSched;
+        let primary = lanes.primary();
         match self {
-            PolicyKind::Fifo => Box::new(Fifo::new(params.batch_size)),
-            PolicyKind::Hpf => Box::new(Hpf::new(params.batch_size)),
-            PolicyKind::Luf => Box::new(Luf::new(params.batch_size)),
-            PolicyKind::Muf => Box::new(Muf::new(params.batch_size)),
+            PolicyKind::Fifo => Box::new(Fifo::new_on(params.batch_size, primary)),
+            PolicyKind::Hpf => Box::new(Hpf::new_on(params.batch_size, primary)),
+            PolicyKind::Luf => Box::new(Luf::new_on(params.batch_size, primary)),
+            PolicyKind::Muf => Box::new(Muf::new_on(params.batch_size, primary)),
             PolicyKind::Slack => {
                 // alpha = 0 turns Eq. 3 into Eq. 2 exactly
                 let p = SchedParams { alpha: 0.0, ..params.clone() };
-                Box::new(UaSched::new(p, eta, f64::INFINITY, false))
+                Box::new(UaSched::new(p, eta, lanes.clone(), false, false))
             }
-            PolicyKind::Up => Box::new(UaSched::new(params.clone(), eta, f64::INFINITY, false)),
-            PolicyKind::UpC => Box::new(UaSched::new(params.clone(), eta, f64::INFINITY, true)),
-            PolicyKind::RtLm => Box::new(UaSched::new(params.clone(), eta, tau, true)),
+            PolicyKind::Up => {
+                Box::new(UaSched::new(params.clone(), eta, lanes.clone(), false, false))
+            }
+            PolicyKind::UpC => {
+                Box::new(UaSched::new(params.clone(), eta, lanes.clone(), true, false))
+            }
+            PolicyKind::RtLm => {
+                Box::new(UaSched::new(params.clone(), eta, lanes.clone(), true, true))
+            }
         }
     }
 }

@@ -1,7 +1,15 @@
 //! UASCHED (Algorithm 1) — the full RT-LM scheduler: UP priority queue
-//! + dynamic consolidation + strategic CPU offloading. The `UP` and
-//! `UP+C` ablation arms are the same machine with offloading and/or
-//! consolidation disabled.
+//! + dynamic consolidation + strategic offloading, generalised from the
+//! paper's single `tau` CPU threshold to per-lane admission predicates
+//! over an N-lane fleet. The `UP` and `UP+C` ablation arms are the same
+//! machine with offloading and/or consolidation disabled.
+//!
+//! Each lane owns a queue. Arrivals are routed by [`LaneSet::route`]
+//! (first claiming lane wins, unclaimed tasks go to the primary
+//! fallback lane — with offloading disabled everything goes primary).
+//! Accelerator-kind lanes pop with UP priorities + dynamic
+//! consolidation; CPU-kind quarantine lanes pop FIFO, exactly the
+//! historical CPU-lane behaviour.
 //!
 //! Priorities are *dynamic* (Eq. 2/3's slack is the remaining time until
 //! the priority point at scheduling time), so waiting tasks age upward
@@ -10,30 +18,51 @@
 use crate::config::SchedParams;
 
 use super::consolidation::{sort_by_uncertainty, split_point};
-use super::policy::{Batch, Lane, Policy};
+use super::lane::{LaneId, LaneKind, LaneSet};
+use super::policy::{Batch, Policy};
 use super::task::Task;
 use super::up::up_priority;
 
 pub struct UaSched {
     params: SchedParams,
-    /// Output-tokens -> seconds coefficient of the serving model.
+    /// Output-tokens -> seconds coefficient of the primary serving model.
     eta: f64,
-    /// Malicious threshold tau (Eq. 4); +inf disables offloading.
-    tau: f64,
+    /// The fleet this policy schedules; admission predicates generalise
+    /// the malicious threshold tau (Eq. 4).
+    lanes: LaneSet,
     /// Dynamic consolidation on/off (off = UP with static batching).
     consolidate: bool,
-    /// Waiting tasks; priorities are recomputed at pop time.
-    queue: Vec<Task>,
-    /// Tasks quarantined for the CPU lane (u > tau), FIFO.
-    cpu_queue: Vec<Task>,
+    /// Strategic offloading on/off: off routes everything to the
+    /// primary lane, the historical `tau = +inf` ablation arms.
+    offload: bool,
+    /// One waiting queue per lane (indexed by LaneId); accelerator
+    /// lanes re-prioritise at pop time, CPU lanes are FIFO.
+    queues: Vec<Vec<Task>>,
 }
 
 impl UaSched {
-    pub fn new(params: SchedParams, eta: f64, tau: f64, consolidate: bool) -> UaSched {
-        UaSched { params, eta, tau, consolidate, queue: Vec::new(), cpu_queue: Vec::new() }
+    pub fn new(
+        params: SchedParams,
+        eta: f64,
+        lanes: LaneSet,
+        consolidate: bool,
+        offload: bool,
+    ) -> UaSched {
+        let queues = (0..lanes.len()).map(|_| Vec::new()).collect();
+        UaSched { params, eta, lanes, consolidate, offload, queues }
     }
 
-    /// Sort the queue by descending UP priority at time `now`
+    /// The historical two-lane constructor: accelerator + CPU
+    /// quarantine admitting `u > tau`, offloading on.
+    pub fn two_lane(params: SchedParams, eta: f64, tau: f64, consolidate: bool) -> UaSched {
+        UaSched::new(params, eta, LaneSet::two_lane("", tau), consolidate, true)
+    }
+
+    fn lane_batch_size(&self, lane: LaneId) -> usize {
+        self.lanes.spec(lane).batch_size.unwrap_or(self.params.batch_size).max(1)
+    }
+
+    /// Sort a lane queue by descending UP priority at time `now`
     /// (ties broken by arrival order).
     ///
     /// Keys are computed once per task per pop: a comparator that calls
@@ -41,34 +70,35 @@ impl UaSched {
     /// dominated the scheduling hot path (see `benches/hotpath.rs`).
     /// `total_cmp` keeps the sort total even if a broken regressor ever
     /// leaks a NaN uncertainty past the estimator clamp.
-    fn sort_queue(&mut self, now: f64) {
+    fn sort_queue(&mut self, lane: LaneId, now: f64) {
         let params = &self.params;
         let eta = self.eta;
-        let mut keyed: Vec<(f64, Task)> = self
-            .queue
+        let queue = &mut self.queues[lane.index()];
+        let mut keyed: Vec<(f64, Task)> = queue
             .drain(..)
             .map(|task| (up_priority(&task, params, eta, now), task))
             .collect();
         keyed.sort_by(|a, b| {
             b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival))
         });
-        self.queue.extend(keyed.into_iter().map(|(_, task)| task));
+        queue.extend(keyed.into_iter().map(|(_, task)| task));
     }
 
-    fn pop_gpu(&mut self, now: f64, force: bool) -> Option<Batch> {
-        let c = self.params.batch_size.max(1);
-        if self.queue.is_empty() {
+    fn pop_accel(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
+        let c = self.lane_batch_size(lane);
+        if self.queues[lane.index()].is_empty() {
             return None;
         }
         if !self.consolidate {
             // UP with static batching: first C by priority.
-            if !force && self.queue.len() < c {
+            if !force && self.queues[lane.index()].len() < c {
                 return None;
             }
-            self.sort_queue(now);
-            let n = self.queue.len().min(c);
-            let tasks: Vec<Task> = self.queue.drain(..n).collect();
-            return Some(Batch { lane: Lane::Gpu, tasks });
+            self.sort_queue(lane, now);
+            let queue = &mut self.queues[lane.index()];
+            let n = queue.len().min(c);
+            let tasks: Vec<Task> = queue.drain(..n).collect();
+            return Some(Batch { lane, tasks });
         }
 
         // Dynamic consolidation: reorder a window of up to b*C tasks by
@@ -76,13 +106,14 @@ impl UaSched {
         // dispatch — Algorithm 1 "ensures there is always a batch of
         // tasks ready for execution"; b only widens the reorder window
         // when the queue runs deeper.
-        let accumulate = self.params.accumulate_len();
-        if !force && self.queue.len() < c {
+        let accumulate = self.params.accumulate_len_for(c);
+        if !force && self.queues[lane.index()].len() < c {
             return None;
         }
-        self.sort_queue(now);
-        let take = self.queue.len().min(accumulate);
-        let mut tmp: Vec<Task> = self.queue.drain(..take).collect();
+        self.sort_queue(lane, now);
+        let queue = &mut self.queues[lane.index()];
+        let take = queue.len().min(accumulate);
+        let mut tmp: Vec<Task> = queue.drain(..take).collect();
         sort_by_uncertainty(&mut tmp);
 
         // Bounded deferral (anti-starvation, see module docs): if the
@@ -109,29 +140,31 @@ impl UaSched {
         };
         for mut task in rest {
             task.deferrals += 1;
-            self.queue.push(task); // re-queued; re-prioritised next pop
+            queue.push(task); // re-queued; re-prioritised next pop
         }
-        Some(Batch { lane: Lane::Gpu, tasks: batch })
+        Some(Batch { lane, tasks: batch })
     }
 
-    fn pop_cpu(&mut self, force: bool) -> Option<Batch> {
-        let c = self.params.batch_size.max(1);
-        if self.cpu_queue.is_empty() || (!force && self.cpu_queue.len() < c) {
+    fn pop_fifo(&mut self, lane: LaneId, force: bool) -> Option<Batch> {
+        let c = self.lane_batch_size(lane);
+        let queue = &mut self.queues[lane.index()];
+        if queue.is_empty() || (!force && queue.len() < c) {
             return None;
         }
-        let n = self.cpu_queue.len().min(c);
-        let tasks = self.cpu_queue.drain(..n).collect();
-        Some(Batch { lane: Lane::Cpu, tasks })
+        let n = queue.len().min(c);
+        let tasks = queue.drain(..n).collect();
+        Some(Batch { lane, tasks })
     }
 
-    pub fn tau(&self) -> f64 {
-        self.tau
+    pub fn lanes(&self) -> &LaneSet {
+        &self.lanes
     }
 }
 
 impl Policy for UaSched {
     fn name(&self) -> String {
-        match (self.consolidate, self.tau.is_finite()) {
+        let offloading = self.offload && self.lanes.has_offload();
+        match (self.consolidate, offloading) {
             (false, _) => "UP".into(),
             (true, false) => "UP+C".into(),
             (true, true) => "RT-LM".into(),
@@ -139,28 +172,33 @@ impl Policy for UaSched {
     }
 
     fn push(&mut self, task: Task) {
-        if task.uncertainty > self.tau {
-            self.cpu_queue.push(task); // strategic offloading (Eq. 4)
+        let lane = if self.offload {
+            self.lanes.route(task.uncertainty) // strategic offloading (Eq. 4, per lane)
         } else {
-            self.queue.push(task);
-        }
+            self.lanes.primary()
+        };
+        self.queues[lane.index()].push(task);
     }
 
-    fn pop_batch(&mut self, lane: Lane, now: f64, force: bool) -> Option<Batch> {
-        match lane {
-            Lane::Gpu => self.pop_gpu(now, force),
-            Lane::Cpu => self.pop_cpu(force),
+    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
+        if lane.index() >= self.lanes.len() {
+            return None;
+        }
+        match self.lanes.spec(lane).kind {
+            LaneKind::Accelerator => self.pop_accel(lane, now, force),
+            LaneKind::Cpu => self.pop_fifo(lane, force),
         }
     }
 
     fn queue_len(&self) -> usize {
-        self.queue.len() + self.cpu_queue.len()
+        self.queues.iter().map(Vec::len).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::lane::{Admission, LaneSpec};
     use crate::scheduler::task::test_task;
     use crate::util::prop;
     use crate::util::rng::Pcg64;
@@ -178,34 +216,82 @@ mod tests {
 
     #[test]
     fn up_static_batching_orders_by_priority() {
-        let mut s = UaSched::new(params(2), 0.05, f64::INFINITY, false);
+        let mut s = UaSched::two_lane(params(2), 0.05, f64::INFINITY, false);
         // same uncertainty, different deadlines -> earliest deadline first
         s.push(test_task(1, 0.0, 9.0, 10.0));
         s.push(test_task(2, 0.0, 1.0, 10.0));
         s.push(test_task(3, 0.0, 4.0, 10.0));
-        let b = s.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        let b = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
     #[test]
     fn offload_quarantines_above_tau() {
-        let mut s = UaSched::new(params(2), 0.05, 50.0, true);
+        let mut s = UaSched::two_lane(params(2), 0.05, 50.0, true);
         s.push(test_task(1, 0.0, 5.0, 80.0)); // malicious
         s.push(test_task(2, 0.0, 5.0, 10.0));
         s.push(test_task(3, 0.0, 5.0, 60.0)); // malicious
         assert_eq!(s.queue_len(), 3);
-        let cpu = s.pop_batch(Lane::Cpu, 0.0, false).unwrap();
-        assert_eq!(cpu.lane, Lane::Cpu);
+        let cpu = s.pop_batch(LaneId::CPU, 0.0, false).unwrap();
+        assert_eq!(cpu.lane, LaneId::CPU);
         let mut ids: Vec<u64> = cpu.tasks.iter().map(|t| t.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 3]);
-        let gpu = s.pop_batch(Lane::Gpu, 0.0, true).unwrap();
+        let gpu = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
         assert_eq!(gpu.tasks[0].id, 2);
     }
 
     #[test]
+    fn three_lane_fleet_routes_by_band() {
+        // two accelerator variants + quarantine: low-u traffic goes to
+        // the small model, the extreme tail to the CPU lane, the rest to
+        // the big fallback lane.
+        let lanes = LaneSet::new(vec![
+            LaneSpec::accelerator("big", "m1"),
+            LaneSpec {
+                admission: Admission::AtMost(20.0),
+                batch_size: Some(1),
+                ..LaneSpec::accelerator("small", "m2")
+            },
+            LaneSpec::cpu_offload("cpu", "m1", 60.0),
+        ])
+        .unwrap();
+        let mut s = UaSched::new(params(2), 0.05, lanes, true, true);
+        s.push(test_task(1, 0.0, 5.0, 10.0)); // -> small
+        s.push(test_task(2, 0.0, 5.0, 40.0)); // -> big
+        s.push(test_task(3, 0.0, 5.0, 90.0)); // -> cpu
+        let small = s.pop_batch(LaneId(1), 0.0, true).unwrap();
+        assert_eq!(small.tasks[0].id, 1);
+        assert_eq!(small.tasks.len(), 1, "per-lane batch size respected");
+        let big = s.pop_batch(LaneId(0), 0.0, true).unwrap();
+        assert_eq!(big.tasks[0].id, 2);
+        let cpu = s.pop_batch(LaneId(2), 0.0, true).unwrap();
+        assert_eq!(cpu.tasks[0].id, 3);
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn offload_disabled_routes_everything_primary() {
+        let lanes = LaneSet::two_lane("m", 50.0);
+        let mut s = UaSched::new(params(2), 0.05, lanes, true, false);
+        s.push(test_task(1, 0.0, 5.0, 80.0)); // would quarantine under RT-LM
+        s.push(test_task(2, 0.0, 5.0, 10.0));
+        assert!(s.pop_batch(LaneId::CPU, 0.0, true).is_none());
+        let b = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        assert_eq!(b.tasks.len(), 2);
+        assert_eq!(s.name(), "UP+C");
+    }
+
+    #[test]
+    fn policy_names_track_offload_effectiveness() {
+        assert_eq!(UaSched::two_lane(params(2), 0.05, 50.0, true).name(), "RT-LM");
+        assert_eq!(UaSched::two_lane(params(2), 0.05, f64::INFINITY, true).name(), "UP+C");
+        assert_eq!(UaSched::two_lane(params(2), 0.05, 50.0, false).name(), "UP");
+    }
+
+    #[test]
     fn consolidation_returns_leftovers_to_queue() {
-        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        let mut s = UaSched::two_lane(params(4), 0.05, f64::INFINITY, true);
         // 8 tasks: 4 similar-u, 4 much larger u (accumulate = 7 with b=1.8)
         for i in 0..4 {
             s.push(test_task(i, 0.0, 5.0, 10.0 + i as f64));
@@ -213,7 +299,7 @@ mod tests {
         for i in 4..8 {
             s.push(test_task(i, 0.0, 5.0, 80.0 + i as f64));
         }
-        let b = s.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         // the low-uncertainty group forms the batch
         assert!(b.tasks.iter().all(|t| t.uncertainty < 20.0), "{:?}", b.tasks);
         assert_eq!(b.tasks.len(), 4);
@@ -222,24 +308,24 @@ mod tests {
 
     #[test]
     fn waits_for_full_batch_unless_forced() {
-        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        let mut s = UaSched::two_lane(params(4), 0.05, f64::INFINITY, true);
         for i in 0..3 {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
         // fewer than C=4 queued -> wait for more arrivals unless forced
-        assert!(s.pop_batch(Lane::Gpu, 0.0, false).is_none());
-        assert!(s.pop_batch(Lane::Gpu, 0.0, true).is_some());
+        assert!(s.pop_batch(LaneId::GPU, 0.0, false).is_none());
+        assert!(s.pop_batch(LaneId::GPU, 0.0, true).is_some());
     }
 
     #[test]
     fn full_batch_dispatches_without_waiting_for_accumulation() {
         // Algorithm 1 keeps a batch ready: C tasks suffice even though
         // the reorder window b*C is larger.
-        let mut s = UaSched::new(params(4), 0.05, f64::INFINITY, true);
+        let mut s = UaSched::two_lane(params(4), 0.05, f64::INFINITY, true);
         for i in 0..4 {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
-        let b = s.pop_batch(Lane::Gpu, 0.0, false).unwrap();
+        let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         assert_eq!(b.tasks.len(), 4);
     }
 
@@ -247,18 +333,19 @@ mod tests {
     fn aged_task_eventually_dispatches_first() {
         // A high-uncertainty task left waiting long enough must outrank
         // fresh low-uncertainty arrivals (no starvation).
-        let mut s = UaSched::new(params(1), 0.05, f64::INFINITY, false);
+        let mut s = UaSched::two_lane(params(1), 0.05, f64::INFINITY, false);
         s.push(test_task(1, 0.0, 2.0, 90.0)); // old, uncertain
         s.push(test_task(2, 50.0, 60.0, 5.0)); // fresh, certain, far deadline
-        let b = s.pop_batch(Lane::Gpu, 50.0, true).unwrap();
+        let b = s.pop_batch(LaneId::GPU, 50.0, true).unwrap();
         assert_eq!(b.tasks[0].id, 1, "aged task must win");
     }
 
     #[test]
     fn nan_uncertainty_task_does_not_panic_the_queue() {
         // a broken regressor must degrade gracefully: NaN-uncertainty
-        // tasks sort deterministically (total order) and still dispatch
-        let mut s = UaSched::new(params(2), 0.05, 50.0, true);
+        // tasks route to the fallback lane, sort deterministically
+        // (total order) and still dispatch
+        let mut s = UaSched::two_lane(params(2), 0.05, 50.0, true);
         let mut nan_task = test_task(1, 0.0, 5.0, 10.0);
         nan_task.uncertainty = f64::NAN;
         s.push(nan_task);
@@ -269,7 +356,7 @@ mod tests {
         while s.queue_len() > 0 {
             guard += 1;
             assert!(guard < 100, "queue with NaN task failed to drain");
-            for lane in [Lane::Gpu, Lane::Cpu] {
+            for lane in [LaneId::GPU, LaneId::CPU] {
                 if let Some(b) = s.pop_batch(lane, guard as f64, true) {
                     seen += b.tasks.len();
                 }
@@ -292,7 +379,7 @@ mod tests {
                 (tasks, c, tau)
             },
             |(tasks, c, tau)| {
-                let mut s = UaSched::new(params(*c), 0.05, *tau, true);
+                let mut s = UaSched::two_lane(params(*c), 0.05, *tau, true);
                 for t in tasks.clone() {
                     s.push(t);
                 }
@@ -305,7 +392,7 @@ mod tests {
                     if guard > 1000 {
                         return Err("scheduler did not drain".into());
                     }
-                    for lane in [Lane::Gpu, Lane::Cpu] {
+                    for lane in [LaneId::GPU, LaneId::CPU] {
                         if let Some(b) = s.pop_batch(lane, now, true) {
                             if b.tasks.is_empty() {
                                 return Err("empty batch emitted".into());
@@ -318,10 +405,10 @@ mod tests {
                                     return Err(format!("task {} dispatched twice", t.id));
                                 }
                                 match b.lane {
-                                    Lane::Cpu if t.uncertainty <= *tau => {
+                                    LaneId::CPU if t.uncertainty <= *tau => {
                                         return Err("non-malicious task on CPU lane".into())
                                     }
-                                    Lane::Gpu if t.uncertainty > *tau => {
+                                    LaneId::GPU if t.uncertainty > *tau => {
                                         return Err("malicious task on GPU lane".into())
                                     }
                                     _ => {}
@@ -350,7 +437,7 @@ mod tests {
             |tasks| {
                 let p = params(6);
                 let lambda = p.lambda;
-                let mut s = UaSched::new(p, 0.05, f64::INFINITY, true);
+                let mut s = UaSched::two_lane(p, 0.05, f64::INFINITY, true);
                 for t in tasks.clone() {
                     s.push(t);
                 }
@@ -362,7 +449,7 @@ mod tests {
                     if guard > 1000 {
                         return Err("did not drain".into());
                     }
-                    if let Some(b) = s.pop_batch(Lane::Gpu, now, true) {
+                    if let Some(b) = s.pop_batch(LaneId::GPU, now, true) {
                         // the bounded-deferral rescue batch intentionally
                         // ignores lambda; every ordinary batch must obey it
                         if b.tasks.iter().any(|t| t.deferrals >= 3) {

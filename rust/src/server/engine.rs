@@ -1,6 +1,6 @@
 //! Wall-clock serving engine: replay an arrival trace against real PJRT
 //! artifacts (or any other [`BatchExecutor`]) under any scheduling
-//! policy.
+//! policy, over an N-lane fleet described by a [`LaneSet`].
 //!
 //! Since the dispatcher-core unification this is a thin wrapper: the
 //! loop itself lives in [`crate::engine::run_engine`], driven here by
@@ -11,9 +11,10 @@
 //! construction.
 //!
 //! The `xla` crate's PJRT handles are not `Send` (Rc-based internals),
-//! so each lane worker thread constructs its *own* client + session from
-//! the artifacts directory — the same "one engine per lane" shape a
-//! GPU+CPU deployment has, and no PJRT state ever crosses threads.
+//! so each lane worker thread constructs its *own* client + session for
+//! its lane's model variant from the artifacts directory — the same
+//! "one engine per lane" shape a heterogeneous GPU+CPU fleet has, and
+//! no PJRT state ever crosses threads.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -26,7 +27,7 @@ use crate::executor::{BatchExecutor, ExecutorFactory, PjrtExecutor};
 use crate::metrics::Samples;
 use crate::model::LmSession;
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{Policy, Task};
+use crate::scheduler::{format_lane_counts, LaneSet, Policy, Task};
 use crate::sim::results::TaskOutcome;
 
 /// Knobs for a real serving run.
@@ -53,8 +54,10 @@ pub struct ServeReport {
     pub wall_secs: f64,
     /// Wall time spent inside policy push/pop calls (Table VII).
     pub sched_secs: f64,
-    pub n_batches_gpu: usize,
-    pub n_batches_cpu: usize,
+    /// Lane names, in `LaneId` order.
+    pub lanes: Vec<String>,
+    /// Dispatched batches per lane, indexed like `lanes`.
+    pub n_batches: Vec<usize>,
     /// Pure model-inference seconds, summed over batches.
     pub infer_secs: f64,
 }
@@ -70,15 +73,22 @@ impl ServeReport {
         }
         self.outcomes.len() as f64 / (self.wall_secs / 60.0)
     }
+
+    /// `name=count` per-lane batch table, e.g. `gpu=12 cpu=3`.
+    pub fn fmt_batches(&self) -> String {
+        format_lane_counts(&self.lanes, &self.n_batches)
+    }
 }
 
-/// Serve `tasks` with `policy`, executing batches through whatever lane
-/// executors `factory` builds — the engine core, lane threads, arrival
-/// injection and ξ deadlines are identical regardless of executor.
+/// Serve `tasks` with `policy` over the `lanes` fleet, executing
+/// batches through whatever lane executors `factory` builds — the
+/// engine core, lane threads, arrival injection and ξ deadlines are
+/// identical regardless of executor.
 pub fn serve_with_factory(
     mut tasks: Vec<Task>,
     policy: &mut dyn Policy,
     params: &SchedParams,
+    lanes: &LaneSet,
     opts: &ServeOptions,
     factory: ExecutorFactory,
 ) -> Result<ServeReport> {
@@ -88,73 +98,63 @@ pub fn serve_with_factory(
     // arrivals replay compressed, so the wait interval compresses too
     let scaled_params = SchedParams { xi: params.xi / time_scale, ..params.clone() };
 
-    let mut backend = ThreadedBackend::start(tasks, factory, time_scale, false)?;
+    let mut backend = ThreadedBackend::start(tasks, factory, lanes, time_scale, false)?;
     let report = run_engine(&mut backend, policy, &scaled_params, n_total)?;
     let wall_secs = backend.finish();
 
     let mut outcomes = report.outcomes;
     outcomes.sort_by_key(|o| o.id);
-    if opts.verbose {
-        eprintln!(
-            "[{wall_secs:7.2}s] {} done: {} gpu batches, {} cpu batches",
-            report.policy, report.n_batches_gpu, report.n_batches_cpu
-        );
-    }
-    Ok(ServeReport {
+    let serve_report = ServeReport {
         policy: report.policy,
         outcomes,
         wall_secs,
         sched_secs: report.sched_secs,
-        n_batches_gpu: report.n_batches_gpu,
-        n_batches_cpu: report.n_batches_cpu,
+        lanes: lanes.names(),
+        n_batches: report.n_batches,
         infer_secs: report.infer_secs,
-    })
+    };
+    if opts.verbose {
+        eprintln!(
+            "[{wall_secs:7.2}s] {} done: batches {}",
+            serve_report.policy,
+            serve_report.fmt_batches()
+        );
+    }
+    Ok(serve_report)
 }
 
 /// Per-lane PJRT executor factory: each lane opens its own store +
-/// session from `artifacts_root` inside its worker thread (PJRT handles
-/// are not `Send`) and warms up the common buckets before the serving
-/// clock starts. Shared by `serve_from_root` and the TCP front-end.
-pub fn pjrt_factory(artifacts_root: &std::path::Path, model: &str) -> ExecutorFactory {
+/// session *for its spec's model variant* from `artifacts_root` inside
+/// its worker thread (PJRT handles are not `Send`) and warms up the
+/// common buckets before the serving clock starts. Shared by
+/// `serve_from_root` and the TCP front-end.
+pub fn pjrt_factory(artifacts_root: &std::path::Path) -> ExecutorFactory {
     let root: PathBuf = artifacts_root.to_path_buf();
-    let model = model.to_string();
-    Arc::new(move |_lane| {
+    Arc::new(move |spec| {
         let store = Arc::new(ArtifactStore::open(&root)?);
-        let session = Arc::new(LmSession::new(store.clone(), &model)?);
+        let session = Arc::new(LmSession::new(store.clone(), &spec.model)?);
         // warm up: compile the common buckets before the clock matters
         let warm = vec![session.store().manifest.bos_id];
         session.generate(&[warm], &[2])?;
-        Ok(Box::new(PjrtExecutor { session }) as Box<dyn BatchExecutor>)
+        Ok(Box::new(PjrtExecutor { session, kind: spec.kind }) as Box<dyn BatchExecutor>)
     })
 }
 
 /// Serve `tasks` (arrival times already set, prompts encoded) with the
-/// given policy against real PJRT sessions of `model`. Each lane opens
-/// its own store + session inside its worker thread and warms up the
-/// common buckets before the serving clock starts.
+/// given policy against real PJRT sessions of each lane's model
+/// variant. Each lane opens its own store + session inside its worker
+/// thread and warms up the common buckets before the serving clock
+/// starts.
 pub fn serve_from_root(
     artifacts_root: &std::path::Path,
-    model: &str,
+    lanes: &LaneSet,
     tasks: Vec<Task>,
     policy: &mut dyn Policy,
     params: &SchedParams,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
-    let factory = pjrt_factory(artifacts_root, model);
-    serve_with_factory(tasks, policy, params, opts, factory)
-}
-
-/// Convenience wrapper taking an open store (dispatcher side only).
-pub fn serve(
-    session: Arc<LmSession>,
-    tasks: Vec<Task>,
-    policy: &mut dyn Policy,
-    params: &SchedParams,
-    opts: &ServeOptions,
-) -> Result<ServeReport> {
-    let root = session.store().manifest.root.clone();
-    let model = session.model_name().to_string();
-    serve_from_root(&root, &model, tasks, policy, params, opts)
+    let factory = pjrt_factory(artifacts_root);
+    serve_with_factory(tasks, policy, params, lanes, opts, factory)
 }
 
 /// Encode prompts into tasks (real-mode preparation).

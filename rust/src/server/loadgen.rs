@@ -9,6 +9,7 @@
 //! `response_ms` above its bound; `rust/tests/tcp_serving.rs` drives
 //! the same code in-process.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::thread;
@@ -54,6 +55,9 @@ pub struct LoadReport {
     pub response_ms: Samples,
     /// Client-measured round-trip ms of every ok reply.
     pub rtt_ms: Samples,
+    /// Tasks served per lane, keyed by the lane name each ok reply
+    /// carried — the client-side view of the fleet's per-lane traffic.
+    pub lane_tasks: BTreeMap<String, usize>,
 }
 
 impl LoadReport {
@@ -74,6 +78,18 @@ impl LoadReport {
         }
         self.response_ms.extend(other.response_ms.values().iter().copied());
         self.rtt_ms.extend(other.rtt_ms.values().iter().copied());
+        for (lane, n) in other.lane_tasks {
+            *self.lane_tasks.entry(lane).or_insert(0) += n;
+        }
+    }
+
+    /// `name=count` per-lane served-task table, e.g. `gpu=198 cpu=2`.
+    pub fn fmt_lane_tasks(&self) -> String {
+        self.lane_tasks
+            .iter()
+            .map(|(n, c)| format!("{n}={c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
     }
 }
 
@@ -169,6 +185,9 @@ fn drive_connection(
                             report.n_ok += 1;
                             report.response_ms.push(ms);
                             report.rtt_ms.push(rtt_ms);
+                            if let Some(lane) = reply.get("lane").as_str() {
+                                *report.lane_tasks.entry(lane.to_string()).or_insert(0) += 1;
+                            }
                         }
                         Err(e) => report.record_err(format!("bad reply: {e}")),
                     }

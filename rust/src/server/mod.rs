@@ -2,9 +2,10 @@
 //! front-end, and the concurrent load generator that gates it in CI.
 //!
 //! Architecture (std threads — see DESIGN.md §Substitutions for why not
-//! tokio): two lane worker threads own the batch executors (real PJRT
-//! sessions or modeled latencies), and the dispatcher thread owns the
-//! policy. The dispatch loop itself is `crate::engine::run_engine_stream`
+//! tokio): one lane worker thread per configured lane owns that lane's
+//! batch executor (real PJRT session of its model variant, modeled
+//! latencies, …), and the dispatcher thread owns the policy. The
+//! dispatch loop itself is `crate::engine::run_engine_stream`
 //! — the exact same code the simulator drives — fed either by an
 //! injector thread replaying a trace (`serve*`) or by TCP connection
 //! handlers injecting live arrivals (`tcp::serve_tcp`), so scheduling
@@ -14,4 +15,4 @@ pub mod engine;
 pub mod loadgen;
 pub mod tcp;
 
-pub use engine::{serve, serve_with_factory, ServeOptions, ServeReport};
+pub use engine::{serve_from_root, serve_with_factory, ServeOptions, ServeReport};

@@ -6,7 +6,8 @@
 //! `{"id":..,"tokens":..,"text":..,"response_ms":..,"lane":..}`, or
 //! `{"id":..,"error":..}` — every reply carries the request `id`, so a
 //! client pipelining multiple lines on one connection can correlate
-//! failures too.
+//! failures too. `lane` is the configured lane name the task executed
+//! on (`gpu` / `cpu` on the default fleet).
 //!
 //! There is no dispatch loop here. Connection handlers tokenize + score
 //! (pure rust, `Send`) and feed tasks through the engine's
@@ -14,14 +15,22 @@
 //! ([`run_engine_stream`] over a [`ThreadedBackend`], the exact loop
 //! the simulator and `rtlm serve` drive) owns admission, ξ-forcing,
 //! lane gating and accounting, with batches executing on per-lane
-//! worker threads — both lanes genuinely concurrent — and replies
-//! flowing back from the per-task completion callback.
+//! worker threads — every configured lane genuinely concurrent — and
+//! replies flowing back from the per-task completion callback.
+//!
+//! **Pipelining**: with `pipeline_depth = 1` (the default) a connection
+//! serves one request at a time and replies in request order. With
+//! `pipeline_depth = K > 1` a connection may have up to K requests in
+//! flight; replies are written as their tasks complete — out of order,
+//! correlated by `id` — and the per-request reply timeout becomes a
+//! per-connection inactivity timeout (no reply for `reply_timeout` with
+//! requests outstanding times out *all* outstanding requests).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -31,7 +40,7 @@ use crate::config::SchedParams;
 use crate::engine::{run_engine_stream, ArrivalHandle, ArrivalSource, ThreadedBackend};
 use crate::executor::ExecutorFactory;
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{Policy, Task};
+use crate::scheduler::{LaneSet, Policy, Task};
 use crate::sim::results::TaskOutcome;
 use crate::textgen::Vocab;
 use crate::uncertainty::Estimator;
@@ -46,45 +55,75 @@ pub struct TcpServerConfig {
     pub estimator: Estimator,
     /// Prompts are truncated to this many tokens.
     pub max_input_len: usize,
-    /// The serving model's input-tokens -> priority-point coefficient.
+    /// The primary serving model's input-tokens -> priority-point
+    /// coefficient.
     pub phi: f64,
     pub params: SchedParams,
+    /// The lane fleet this server schedules over; replies carry the
+    /// executing lane's name.
+    pub lanes: LaneSet,
+    /// Max in-flight requests per connection (K). 1 = serve one request
+    /// at a time, replies in request order (the historical behaviour).
+    pub pipeline_depth: usize,
     /// How long a connection handler waits for its reply before sending
-    /// an id-tagged timeout error (the task itself stays scheduled).
+    /// an id-tagged timeout error (the task itself stays scheduled). In
+    /// pipelined mode this is a per-connection inactivity timeout.
     pub reply_timeout: Duration,
 }
 
-/// Reply channel of one in-flight request, keyed by task id. Entries
-/// are removed by the completion callback (or the shutdown drain) — a
-/// client that disconnected first just makes the send a no-op, it can
-/// never wedge the dispatcher.
-type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<String>>>>;
+/// Reply channel of one in-flight request, keyed by task id; replies
+/// travel as `(id, json_line)` so pipelined writers can retire the
+/// right in-flight slot. Entries are removed by the completion callback
+/// (or the shutdown drain) — a client that disconnected first just
+/// makes the send a no-op, it can never wedge the dispatcher.
+type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<(u64, String)>>>>;
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7490"), with per-lane
-/// executors built by `factory` (real PJRT sessions, or the
-/// modeled-latency executor for a backend-free serving smoke).
+impl TcpServerConfig {
+    /// Build a server config from an artifact store: vocab and
+    /// truncation limits come from the manifest, `phi` from the primary
+    /// lane's model variant.
+    pub fn from_store(
+        store: &ArtifactStore,
+        estimator: Estimator,
+        lanes: LaneSet,
+        params: SchedParams,
+        pipeline_depth: usize,
+    ) -> Result<TcpServerConfig> {
+        let primary_model = lanes.spec(lanes.primary()).model.clone();
+        Ok(TcpServerConfig {
+            vocab: store.vocab.clone(),
+            estimator,
+            max_input_len: store.manifest.max_input_len,
+            phi: store.manifest.model(&primary_model)?.phi,
+            params,
+            lanes,
+            pipeline_depth,
+            reply_timeout: Duration::from_secs(120),
+        })
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7490"), over the config's
+/// lane fleet, with per-lane executors built by `factory` (real PJRT
+/// sessions of each lane's model variant, or the modeled-latency
+/// executor for a backend-free serving smoke).
 pub fn serve_tcp(
-    store: Arc<ArtifactStore>,
-    model: &str,
+    cfg: TcpServerConfig,
     factory: ExecutorFactory,
-    estimator: Estimator,
     policy: Box<dyn Policy>,
-    params: SchedParams,
     addr: &str,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "rtlm tcp server on {addr} (model={model}, policy={})",
-        policy.name()
+        "rtlm tcp server on {addr} (lanes={}, policy={}, pipeline={})",
+        cfg.lanes
+            .iter()
+            .map(|l| format!("{}:{}", l.name, l.model))
+            .collect::<Vec<_>>()
+            .join(","),
+        policy.name(),
+        cfg.pipeline_depth
     );
-    let cfg = TcpServerConfig {
-        vocab: store.vocab.clone(),
-        estimator,
-        max_input_len: store.manifest.max_input_len,
-        phi: store.manifest.model(model)?.phi,
-        params,
-        reply_timeout: Duration::from_secs(120),
-    };
     serve_tcp_on(listener, cfg, factory, policy)
 }
 
@@ -99,7 +138,7 @@ pub fn serve_tcp_on(
     factory: ExecutorFactory,
     mut policy: Box<dyn Policy>,
 ) -> Result<()> {
-    let (mut backend, arrivals) = ThreadedBackend::start_stream(factory)?;
+    let (mut backend, arrivals) = ThreadedBackend::start_stream(factory, &cfg.lanes)?;
     let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(0));
 
@@ -125,19 +164,24 @@ pub fn serve_tcp_on(
     // dispatcher: the one shared engine loop, replies streamed from the
     // completion callback as batches finish
     let vocab = cfg.vocab.clone();
+    let lane_names = cfg.lanes.names();
     let reply_map = pending.clone();
     let mut on_complete = move |o: &TaskOutcome, output: &[i32]| {
         let Some(reply_tx) = reply_map.lock().unwrap().remove(&o.id) else {
             return;
         };
+        let lane = lane_names
+            .get(o.lane.index())
+            .cloned()
+            .unwrap_or_else(|| o.lane.to_string());
         let reply = obj(vec![
             ("id", Json::Num(o.id as f64)),
             ("tokens", Json::Num(output.len() as f64)),
             ("text", Json::Str(vocab.decode(output))),
             ("response_ms", Json::Num((o.completion - o.arrival) * 1e3)),
-            ("lane", Json::Str(format!("{:?}", o.lane))),
+            ("lane", Json::Str(lane)),
         ]);
-        let _ = reply_tx.send(reply.to_string());
+        let _ = reply_tx.send((o.id, reply.to_string()));
     };
     let result = run_engine_stream(
         &mut backend,
@@ -153,13 +197,37 @@ pub fn serve_tcp_on(
     // registered before the channel closed, with its id attached
     backend.finish();
     for (id, reply_tx) in pending.lock().unwrap().drain() {
-        let _ = reply_tx.send(error_reply(id, "execution failed"));
+        let _ = reply_tx.send((id, error_reply(id, "execution failed")));
     }
     result.map(|_| ())
 }
 
 fn error_reply(id: u64, msg: &str) -> String {
     obj(vec![("id", Json::Num(id as f64)), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Score one request line into a task stamped on the engine clock.
+fn build_task(text: String, id: u64, cfg: &TcpServerConfig, now: f64) -> Result<Task> {
+    let (u, feats) = cfg.estimator.score_with_features(&text)?;
+    let input_len = feats[feats.len() - 1] as usize;
+    let mut prompt = cfg.vocab.encode(&text, Some(cfg.max_input_len));
+    if prompt.is_empty() {
+        prompt.push(crate::textgen::vocab::BOS_ID);
+    }
+    Ok(Task {
+        id,
+        text,
+        prompt,
+        arrival: now,
+        priority_point: now + 2.0 + cfg.phi * input_len as f64,
+        uncertainty: u,
+        // interactive requests have no oracle: serve the predicted length
+        true_len: (u.round() as usize).clamp(4, 96),
+        input_len,
+        utype: "interactive".into(),
+        malicious: false,
+        deferrals: 0,
+    })
 }
 
 fn handle_conn(
@@ -169,6 +237,9 @@ fn handle_conn(
     pending: &PendingMap,
     next_id: &AtomicU64,
 ) -> Result<()> {
+    if cfg.pipeline_depth > 1 {
+        return handle_conn_pipelined(stream, cfg, arrivals, pending, next_id);
+    }
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -178,27 +249,7 @@ fn handle_conn(
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let (u, feats) = cfg.estimator.score_with_features(&text)?;
-        let input_len = feats[feats.len() - 1] as usize;
-        let mut prompt = cfg.vocab.encode(&text, Some(cfg.max_input_len));
-        if prompt.is_empty() {
-            prompt.push(crate::textgen::vocab::BOS_ID);
-        }
-        let now = arrivals.now();
-        let task = Task {
-            id,
-            text,
-            prompt,
-            arrival: now,
-            priority_point: now + 2.0 + cfg.phi * input_len as f64,
-            uncertainty: u,
-            // interactive requests have no oracle: serve the predicted length
-            true_len: (u.round() as usize).clamp(4, 96),
-            input_len,
-            utype: "interactive".into(),
-            malicious: false,
-            deferrals: 0,
-        };
+        let task = build_task(text, id, cfg, arrivals.now())?;
         let (reply_tx, reply_rx) = mpsc::channel();
         // register the reply slot *before* injecting: the completion
         // callback may fire before this thread runs again
@@ -209,7 +260,7 @@ fn handle_conn(
             return Ok(());
         }
         match reply_rx.recv_timeout(cfg.reply_timeout) {
-            Ok(reply) => writeln!(writer, "{reply}")?,
+            Ok((_, reply)) => writeln!(writer, "{reply}")?,
             Err(_) => {
                 // leave the pending entry: the task is still scheduled,
                 // and the callback cleans it up whenever it completes
@@ -219,4 +270,170 @@ fn handle_conn(
         }
     }
     Ok(())
+}
+
+/// In-flight request ids of one pipelined connection, guarded by the
+/// "fewer than K outstanding" condition the reader waits on. An id is
+/// *in* the set exactly while a reply for it may still be written —
+/// removal (by delivery or timeout) is what licenses discarding any
+/// later duplicate. `writer_gone` unblocks a reader parked at the
+/// window when the writer dies (client disconnected mid-stream).
+struct ConnWindow {
+    state: Mutex<WindowState>,
+    may_send: Condvar,
+}
+
+#[derive(Default)]
+struct WindowState {
+    outstanding: HashSet<u64>,
+    writer_gone: bool,
+}
+
+/// Bounded pipelining (K > 1): the reader admits up to K requests, the
+/// writer thread streams id-tagged replies back as tasks complete —
+/// out of order when lanes finish out of order.
+fn handle_conn_pipelined(
+    stream: TcpStream,
+    cfg: &TcpServerConfig,
+    arrivals: &ArrivalHandle,
+    pending: &PendingMap,
+    next_id: &AtomicU64,
+) -> Result<()> {
+    let k = cfg.pipeline_depth;
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (reply_tx, reply_rx) = mpsc::channel::<(u64, String)>();
+    let window = Arc::new(ConnWindow {
+        state: Mutex::new(WindowState::default()),
+        may_send: Condvar::new(),
+    });
+
+    // Writer: drain replies as they arrive; on inactivity past the
+    // reply timeout, fail every outstanding request (removed from the
+    // pending map so a late completion cannot produce a duplicate
+    // reply). A reply is written only while its id is still in the
+    // window — removal is atomic with the decision to write, so a task
+    // completing after its timeout error can never produce a second
+    // reply for the same id. Exits when every sender is gone (the
+    // reader dropped its handle and no pending entry still points
+    // here), and always marks `writer_gone` on the way out so a reader
+    // parked at a full window wakes up instead of leaking.
+    let writer_window = window.clone();
+    let writer_pending = pending.clone();
+    let writer_timeout = cfg.reply_timeout;
+    let writer_thread = thread::spawn(move || {
+        // returns false once the client socket is gone
+        let deliver = |writer: &mut TcpStream, id: u64, reply: &str| -> bool {
+            let known = {
+                let mut state = writer_window.state.lock().unwrap();
+                let known = state.outstanding.remove(&id);
+                writer_window.may_send.notify_all();
+                known
+            };
+            // an id no longer in the window was already answered
+            // (timed out) — discard the late reply
+            !known || writeln!(writer, "{reply}").is_ok()
+        };
+        loop {
+            match reply_rx.recv_timeout(writer_timeout) {
+                Ok((id, reply)) => {
+                    if !deliver(&mut writer, id, &reply) {
+                        break; // client gone; completions degrade to no-ops
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // snapshot who is overdue; ids admitted from here on
+                    // are NOT part of this timeout round
+                    let mut ids: Vec<u64> = {
+                        let state = writer_window.state.lock().unwrap();
+                        state.outstanding.iter().copied().collect()
+                    };
+                    if ids.is_empty() {
+                        continue; // idle connection, keep waiting
+                    }
+                    // unregister first so late completions cannot race a
+                    // duplicate reply in behind the timeout errors...
+                    {
+                        let mut map = writer_pending.lock().unwrap();
+                        for id in &ids {
+                            map.remove(id);
+                        }
+                    }
+                    // ...but deliver anything that completed while we
+                    // were deciding — those are answered, not overdue
+                    let mut dead = false;
+                    while let Ok((id, reply)) = reply_rx.try_recv() {
+                        if !deliver(&mut writer, id, &reply) {
+                            dead = true;
+                            break;
+                        }
+                        ids.retain(|&i| i != id);
+                    }
+                    if dead {
+                        break;
+                    }
+                    // fail the true remainder, retiring their window
+                    // slots as we go
+                    let overdue: Vec<u64> = {
+                        let mut state = writer_window.state.lock().unwrap();
+                        ids.retain(|id| state.outstanding.remove(id));
+                        writer_window.may_send.notify_all();
+                        ids
+                    };
+                    if overdue.is_empty() {
+                        continue;
+                    }
+                    eprintln!("{} pipelined request(s) timed out", overdue.len());
+                    if overdue
+                        .into_iter()
+                        .any(|id| writeln!(writer, "{}", error_reply(id, "timeout")).is_err())
+                    {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let mut state = writer_window.state.lock().unwrap();
+        state.writer_gone = true;
+        writer_window.may_send.notify_all();
+    });
+
+    let result = (|| -> Result<()> {
+        for line in reader.lines() {
+            let text = line?;
+            if text.trim().is_empty() {
+                continue;
+            }
+            let id = next_id.fetch_add(1, Ordering::Relaxed);
+            let task = build_task(text, id, cfg, arrivals.now())?;
+            {
+                let mut state = window.state.lock().unwrap();
+                while state.outstanding.len() >= k && !state.writer_gone {
+                    state = window.may_send.wait(state).unwrap();
+                }
+                if state.writer_gone {
+                    // client socket already failed; stop reading
+                    return Ok(());
+                }
+                state.outstanding.insert(id);
+            }
+            pending.lock().unwrap().insert(id, reply_tx.clone());
+            if arrivals.inject(task).is_err() {
+                pending.lock().unwrap().remove(&id);
+                // route the shutdown error through the writer so it
+                // interleaves cleanly with in-flight replies
+                let _ = reply_tx.send((id, error_reply(id, "server shutting down")));
+                eprintln!("connection from {peer}: server shutting down");
+                return Ok(());
+            }
+        }
+        Ok(())
+    })();
+    // EOF/error: our sender drops; the writer drains replies still owed
+    // by the pending map entries and exits on disconnect.
+    drop(reply_tx);
+    let _ = writer_thread.join();
+    result
 }

@@ -1,18 +1,23 @@
 //! The discrete-event serving engine: Poisson arrivals feed the policy;
-//! two lanes (accelerator + CPU quarantine) execute batches with
-//! durations from the latency model; virtual time advances event by
-//! event.
+//! an N-lane fleet (accelerator variants + CPU quarantine pools)
+//! executes batches with durations from the latency model; virtual time
+//! advances event by event.
 //!
 //! Since the dispatcher-core unification this is a thin wrapper: the
 //! loop itself lives in [`crate::engine::run_engine`], driven here by
 //! the virtual-clock [`SimBackend`]. The wall-clock server drives the
 //! *same* loop, so scheduling behaviour in simulation and on the wire is
 //! identical by construction — and the cross-backend property test in
-//! `rust/tests/engine_core.rs` asserts it.
+//! `rust/tests/engine_core.rs` asserts it for two-lane and N-lane
+//! fleets alike.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
 
 use crate::config::{DeviceProfile, ModelEntry, SchedParams};
-use crate::engine::{run_engine, SimBackend};
-use crate::scheduler::{Policy, Task};
+use crate::engine::{resolve_lanes, run_engine, SimBackend, SimLane};
+use crate::scheduler::{LaneSet, Policy, Task};
 
 use super::latency::LatencyModel;
 use super::results::SimResult;
@@ -20,21 +25,62 @@ use super::results::SimResult;
 /// Alias kept for the public API surface.
 pub type SimOutcome = SimResult;
 
-/// Run one simulated serving session.
+/// Run one simulated serving session on the historical two-lane fleet
+/// (accelerator + CPU quarantine pool, both serving `model`).
 ///
 /// `tasks` carry their arrival times; the engine sorts them. Returns
 /// per-task outcomes plus aggregate counters.
 pub fn run_sim(
-    mut tasks: Vec<Task>,
+    tasks: Vec<Task>,
     policy: &mut dyn Policy,
     lat: &LatencyModel,
     model: &ModelEntry,
     dev: &DeviceProfile,
     params: &SchedParams,
 ) -> SimResult {
+    let lanes = vec![
+        SimLane {
+            kind: crate::scheduler::LaneKind::Accelerator,
+            model: model.clone(),
+            workers: 1,
+        },
+        SimLane {
+            kind: crate::scheduler::LaneKind::Cpu,
+            model: model.clone(),
+            workers: dev.cpu_workers.max(1),
+        },
+    ];
+    run_sim_on(tasks, policy, lat, lanes, vec!["gpu".into(), "cpu".into()], dev, params)
+}
+
+/// Run one simulated serving session over an arbitrary lane fleet:
+/// every lane's model variant is resolved from `models`, its worker
+/// count from the spec (defaulting to the device profile).
+pub fn run_sim_lanes(
+    tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    lat: &LatencyModel,
+    lane_set: &LaneSet,
+    models: &BTreeMap<String, ModelEntry>,
+    dev: &DeviceProfile,
+    params: &SchedParams,
+) -> Result<SimResult> {
+    let lanes = resolve_lanes(lane_set, models, dev)?;
+    Ok(run_sim_on(tasks, policy, lat, lanes, lane_set.names(), dev, params))
+}
+
+fn run_sim_on(
+    mut tasks: Vec<Task>,
+    policy: &mut dyn Policy,
+    lat: &LatencyModel,
+    lanes: Vec<SimLane>,
+    lane_names: Vec<String>,
+    dev: &DeviceProfile,
+    params: &SchedParams,
+) -> SimResult {
     tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     let n_total = tasks.len();
-    let mut backend = SimBackend::new(tasks, lat, model, dev);
+    let mut backend = SimBackend::new(tasks, lat, lanes, dev);
     let report = run_engine(&mut backend, policy, params, n_total)
         .expect("the virtual-clock backend cannot fail");
     let makespan = report
@@ -47,8 +93,8 @@ pub fn run_sim(
         outcomes: report.outcomes,
         makespan,
         sched_wall_secs: report.sched_secs,
-        n_batches_gpu: report.n_batches_gpu,
-        n_batches_cpu: report.n_batches_cpu,
+        lanes: lane_names,
+        n_batches: report.n_batches,
     }
 }
 
@@ -56,7 +102,7 @@ pub fn run_sim(
 mod tests {
     use super::*;
     use crate::config::{DeviceProfile, SchedParams};
-    use crate::scheduler::{Fifo, Lane, PolicyKind, Task};
+    use crate::scheduler::{Fifo, LaneId, LaneSet, PolicyKind, Task};
     use crate::sim::latency::LatencyModel;
     use crate::sim::results::TaskOutcome;
     use crate::util::prop;
@@ -97,6 +143,10 @@ mod tests {
         }
     }
 
+    fn two_lane(tau: f64) -> LaneSet {
+        LaneSet::two_lane("m", tau)
+    }
+
     #[test]
     fn fifo_single_task_completes() {
         let tasks = vec![mk_task(0, 0.0, 10.0, 10)];
@@ -133,7 +183,7 @@ mod tests {
             })
             .collect();
         for kind in PolicyKind::ALL_BASELINES {
-            let mut policy = kind.build(&params, model.eta, 60.0);
+            let mut policy = kind.build(&params, model.eta, &two_lane(60.0));
             let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
             assert_eq!(r.outcomes.len(), 60, "{}", kind.label());
             assert!(r.makespan > 0.0);
@@ -162,7 +212,7 @@ mod tests {
             |tasks| {
                 let params = SchedParams { batch_size: 4, ..Default::default() };
                 let mut policy =
-                    PolicyKind::RtLm.build(&params, 0.05, 60.0);
+                    PolicyKind::RtLm.build(&params, 0.05, &two_lane(60.0));
                 let r = run_sim(
                     tasks.clone(),
                     &mut *policy,
@@ -187,7 +237,7 @@ mod tests {
     #[test]
     fn high_uncertainty_tasks_take_cpu_lane_under_rtlm() {
         let params = SchedParams { batch_size: 2, ..Default::default() };
-        let mut policy = PolicyKind::RtLm.build(&params, 0.05, 50.0);
+        let mut policy = PolicyKind::RtLm.build(&params, 0.05, &two_lane(50.0));
         let tasks = vec![
             mk_task(0, 0.0, 90.0, 90), // malicious
             mk_task(1, 0.0, 10.0, 10),
@@ -202,8 +252,51 @@ mod tests {
             &params,
         );
         let by_id: HashMap<u64, &TaskOutcome> = r.outcomes.iter().map(|o| (o.id, o)).collect();
-        assert_eq!(by_id[&0].lane, Lane::Cpu);
-        assert_eq!(by_id[&1].lane, Lane::Gpu);
+        assert_eq!(by_id[&0].lane, LaneId::CPU);
+        assert_eq!(by_id[&1].lane, LaneId::GPU);
+    }
+
+    #[test]
+    fn three_lane_fleet_serves_every_band() {
+        // two accelerator variants + quarantine: each lane's traffic is
+        // decided by its admission predicate, and all of it completes.
+        use crate::scheduler::{Admission, LaneSpec};
+        let params = SchedParams { batch_size: 2, ..Default::default() };
+        let lane_set = LaneSet::new(vec![
+            LaneSpec::accelerator("big", "m"),
+            LaneSpec {
+                admission: Admission::AtMost(20.0),
+                ..LaneSpec::accelerator("small", "m")
+            },
+            LaneSpec::cpu_offload("cpu", "m", 60.0),
+        ])
+        .unwrap();
+        let models = BTreeMap::from([("m".to_string(), test_model())]);
+        let mut policy = PolicyKind::RtLm.build(&params, 0.05, &lane_set);
+        let tasks = vec![
+            mk_task(0, 0.0, 10.0, 10), // -> small
+            mk_task(1, 0.0, 40.0, 40), // -> big
+            mk_task(2, 0.1, 90.0, 90), // -> cpu
+            mk_task(3, 0.1, 12.0, 12), // -> small
+        ];
+        let r = run_sim_lanes(
+            tasks,
+            &mut *policy,
+            &test_lat(),
+            &lane_set,
+            &models,
+            &DeviceProfile::edge_server(),
+            &params,
+        )
+        .expect("3-lane sim");
+        assert_eq!(r.outcomes.len(), 4);
+        let by_id: HashMap<u64, &TaskOutcome> = r.outcomes.iter().map(|o| (o.id, o)).collect();
+        assert_eq!(by_id[&0].lane, LaneId(1));
+        assert_eq!(by_id[&1].lane, LaneId(0));
+        assert_eq!(by_id[&2].lane, LaneId(2));
+        assert_eq!(by_id[&3].lane, LaneId(1));
+        assert_eq!(r.lanes, vec!["big", "small", "cpu"]);
+        assert!(r.n_batches.iter().all(|&n| n >= 1), "{:?}", r.n_batches);
     }
 
     #[test]
@@ -215,7 +308,8 @@ mod tests {
         let tasks: Vec<Task> = (0..40)
             .map(|i| mk_task(i, rng.f64() * 10.0, 20.0, 20 + rng.range_usize(0, 40)))
             .collect();
-        let mut p1 = PolicyKind::Fifo.build(&params, model.eta, f64::INFINITY);
+        let no_offload = two_lane(f64::INFINITY);
+        let mut p1 = PolicyKind::Fifo.build(&params, model.eta, &no_offload);
         let edge = run_sim(
             tasks.clone(),
             &mut *p1,
@@ -224,7 +318,7 @@ mod tests {
             &DeviceProfile::edge_server(),
             &params,
         );
-        let mut p2 = PolicyKind::Fifo.build(&params, model.eta, f64::INFINITY);
+        let mut p2 = PolicyKind::Fifo.build(&params, model.eta, &no_offload);
         let agx = run_sim(
             tasks,
             &mut *p2,
@@ -249,7 +343,7 @@ mod tests {
         tasks[3].uncertainty = f64::NAN;
         tasks[6].uncertainty = f64::NAN;
         for kind in PolicyKind::ALL_BASELINES {
-            let mut policy = kind.build(&params, model.eta, 60.0);
+            let mut policy = kind.build(&params, model.eta, &two_lane(60.0));
             let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
             assert_eq!(r.outcomes.len(), 8, "{} lost NaN tasks", kind.label());
         }
@@ -283,6 +377,6 @@ mod tests {
             by_id[&0].completion
         );
         assert!(by_id[&2].completion >= 10.0);
-        assert_eq!(r.n_batches_gpu, 2);
+        assert_eq!(r.n_batches[LaneId::GPU.index()], 2);
     }
 }

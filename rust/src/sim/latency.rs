@@ -1,6 +1,17 @@
-//! The latency model: batch duration on the accelerator lane, per-task
-//! duration on the CPU quarantine lane, derived from calibration
-//! measurements (preferred) or an analytic FLOPs estimate.
+//! The latency model: batch duration on accelerator-kind lanes,
+//! per-task duration on CPU-kind quarantine lanes, derived from
+//! calibration measurements (preferred) or an analytic FLOPs estimate.
+//!
+//! All curves are keyed by model name, so an N-lane fleet draws each
+//! lane's durations from its own model variant's calibration
+//! ([`gpu_batch_secs`](LatencyModel::gpu_batch_secs) with the lane's
+//! [`ModelEntry`] for [`LaneKind::Accelerator`] lanes,
+//! [`cpu_task_secs`](LatencyModel::cpu_task_secs) per task for
+//! [`LaneKind::Cpu`] pools — see `engine::sim_backend::SimLane` and
+//! `executor::ModeledExecutor`, which share these exact functions).
+//!
+//! [`LaneKind::Accelerator`]: crate::scheduler::LaneKind::Accelerator
+//! [`LaneKind::Cpu`]: crate::scheduler::LaneKind::Cpu
 
 use std::collections::BTreeMap;
 

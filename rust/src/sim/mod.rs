@@ -13,6 +13,6 @@ pub mod latency;
 pub mod results;
 
 pub use calib::Calibration;
-pub use engine::{run_sim, SimOutcome};
+pub use engine::{run_sim, run_sim_lanes, SimOutcome};
 pub use latency::LatencyModel;
 pub use results::{SimResult, TaskOutcome};

@@ -3,7 +3,7 @@
 //! throughput, priority-point misses).
 
 use crate::metrics::Samples;
-use crate::scheduler::Lane;
+use crate::scheduler::LaneId;
 use crate::util::json::{obj, Json};
 
 #[derive(Clone, Debug)]
@@ -14,7 +14,7 @@ pub struct TaskOutcome {
     pub priority_point: f64,
     pub uncertainty: f64,
     pub true_len: usize,
-    pub lane: Lane,
+    pub lane: LaneId,
     pub utype: String,
     pub malicious: bool,
     /// Pure model-inference time of the batch this task rode in.
@@ -40,11 +40,27 @@ pub struct SimResult {
     /// Wall-clock seconds the policy itself consumed (scheduling
     /// overhead — Table VII measures this for the real implementation).
     pub sched_wall_secs: f64,
-    pub n_batches_gpu: usize,
-    pub n_batches_cpu: usize,
+    /// Lane names, in [`LaneId`] order (the default two-lane fleet is
+    /// `["gpu", "cpu"]`).
+    pub lanes: Vec<String>,
+    /// Dispatched batches per lane, indexed like `lanes`.
+    pub n_batches: Vec<usize>,
 }
 
 impl SimResult {
+    /// `name=count` per-lane batch table, e.g. `gpu=12 cpu=3`.
+    pub fn fmt_batches(&self) -> String {
+        crate::scheduler::format_lane_counts(&self.lanes, &self.n_batches)
+    }
+
+    /// The lane's display name (falls back to `laneN` for outcomes from
+    /// a fleet this result has no name table for).
+    pub fn lane_name(&self, lane: LaneId) -> String {
+        self.lanes
+            .get(lane.index())
+            .cloned()
+            .unwrap_or_else(|| lane.to_string())
+    }
     pub fn response_times(&self) -> Samples {
         Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
     }
@@ -130,7 +146,7 @@ impl SimResult {
                 ("priority_point", Json::Num(o.priority_point)),
                 ("uncertainty", Json::Num(o.uncertainty)),
                 ("true_len", Json::Num(o.true_len as f64)),
-                ("lane", Json::Str(format!("{:?}", o.lane))),
+                ("lane", Json::Str(self.lane_name(o.lane))),
                 ("utype", Json::Str(o.utype.clone())),
                 ("malicious", Json::Bool(o.malicious)),
                 ("missed", Json::Bool(o.missed())),

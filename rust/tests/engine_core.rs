@@ -1,21 +1,30 @@
 //! Integration tests for the shared dispatcher core (`rtlm::engine`):
 //! the cross-backend equivalence property (same trace + policy =>
 //! identical per-lane batch sequences in simulation and on the wire),
-//! the open-stream properties (a closed trace served as an open stream
-//! dispatches identically to its counted run on both backends; live
+//! for the default two-lane fleet, a 3-lane heterogeneous fleet (two
+//! accelerator variants + CPU quarantine) across every `PolicyKind`,
+//! and the degenerate 1-lane fleet; lane starvation (a predicate that
+//! admits nothing must not stall ξ-forced draining); the open-stream
+//! properties (a closed trace served as an open stream dispatches
+//! identically to its counted run on both backends; live
 //! `ArrivalHandle` producers drain cleanly; streaming callbacks see
-//! every completion), the arrivals-drain regression (no forced dispatch
-//! while arrival events are still queued), the ξ-deadline wakeup of the
-//! wall-clock dispatcher, and NaN-uncertainty resilience on the wire
-//! path.
+//! every completion); the arrivals-drain regression (no forced dispatch
+//! while arrival events are still queued); the ξ-deadline wakeup of the
+//! wall-clock dispatcher; NaN-uncertainty resilience on the wire path;
+//! and the CPU-lane scoped-thread pool's makespan matching the
+//! simulator's intra-batch worker model.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
-use rtlm::engine::{run_engine, run_engine_stream, ArrivalSource, SimBackend, ThreadedBackend};
-use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor};
-use rtlm::scheduler::{Fifo, Lane, PolicyKind, Task};
+use rtlm::engine::{
+    resolve_lanes, run_engine, run_engine_stream, ArrivalSource, SimBackend, ThreadedBackend,
+};
+use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor, ModeledExecutor};
+use rtlm::scheduler::{
+    Admission, Batch, Fifo, LaneId, LaneKind, LaneSet, LaneSpec, PolicyKind, Task,
+};
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::util::rng::Pcg64;
 
@@ -65,13 +74,104 @@ fn zero_device() -> DeviceProfile {
 }
 
 fn instant_factory() -> ExecutorFactory {
-    Arc::new(|_lane| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+    Arc::new(|_spec: &LaneSpec| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
 }
 
-fn lane_log(log: &[(Lane, Vec<u64>)], lane: Lane) -> Vec<Vec<u64>> {
+fn two_lane(tau: f64) -> LaneSet {
+    LaneSet::two_lane("m", tau)
+}
+
+/// Two accelerator variants + CPU quarantine: the heterogeneous-fleet
+/// fixture. Low-uncertainty traffic takes the small model, the extreme
+/// tail quarantines, everything else rides the big fallback lane.
+fn three_lane() -> LaneSet {
+    LaneSet::new(vec![
+        LaneSpec::accelerator("big", "m"),
+        LaneSpec {
+            admission: Admission::AtMost(25.0),
+            ..LaneSpec::accelerator("small", "m")
+        },
+        LaneSpec {
+            workers: Some(2),
+            ..LaneSpec::cpu_offload("cpu", "m", 65.0)
+        },
+    ])
+    .expect("3-lane fixture is valid")
+}
+
+fn model_table(model: &ModelEntry) -> BTreeMap<String, ModelEntry> {
+    BTreeMap::from([(model.name.clone(), model.clone())])
+}
+
+fn lane_log(log: &[(LaneId, Vec<u64>)], lane: LaneId) -> Vec<Vec<u64>> {
     log.iter()
         .filter(|(l, _)| *l == lane)
         .map(|(_, ids)| ids.clone())
+        .collect()
+}
+
+/// Run the same trace + policy kind through both backends over `lanes`
+/// and assert identical per-lane dispatch sequences and task lanes.
+fn assert_cross_backend_equivalence(
+    lanes: &LaneSet,
+    tasks: &[Task],
+    params: &SchedParams,
+    kind: PolicyKind,
+    seed: u64,
+) {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = zero_latency();
+    let dev = zero_device();
+    let n = tasks.len();
+
+    let mut sim_policy = kind.build(params, model.eta, lanes);
+    let sim_lanes = resolve_lanes(lanes, &model_table(&model), &dev).expect("resolve lanes");
+    let mut sim_backend = SimBackend::new(tasks.to_vec(), &lat, sim_lanes, &dev);
+    let sim = run_engine(&mut sim_backend, &mut *sim_policy, params, n).expect("sim backend");
+
+    let mut thr_policy = kind.build(params, model.eta, lanes);
+    let mut thr_backend =
+        ThreadedBackend::start(tasks.to_vec(), instant_factory(), lanes, 1.0, true)
+            .expect("threaded backend start");
+    let thr = run_engine(&mut thr_backend, &mut *thr_policy, params, n).expect("threaded backend");
+    thr_backend.finish();
+
+    for lane in lanes.ids() {
+        assert_eq!(
+            lane_log(&sim.dispatch_log, lane),
+            lane_log(&thr.dispatch_log, lane),
+            "seed {seed} policy {} lane {} ({}): dispatch sequences diverged",
+            kind.label(),
+            lane,
+            lanes.spec(lane).name
+        );
+    }
+    assert_eq!(sim.outcomes.len(), n);
+    assert_eq!(thr.outcomes.len(), n);
+    assert_eq!(sim.n_batches, thr.n_batches, "seed {seed} {}", kind.label());
+    let sim_lanes_by_id: HashMap<u64, LaneId> =
+        sim.outcomes.iter().map(|o| (o.id, o.lane)).collect();
+    for o in &thr.outcomes {
+        assert_eq!(
+            sim_lanes_by_id[&o.id], o.lane,
+            "seed {seed} policy {}: task {} changed lane",
+            kind.label(),
+            o.id
+        );
+    }
+}
+
+/// Coarse value grids keep priorities well separated, so the
+/// microseconds of wall-clock drift on the threaded path cannot reorder
+/// them; exact ties fall back to arrival/queue order, which both
+/// backends share.
+fn grid_tasks(rng: &mut Pcg64, n: usize) -> Vec<Task> {
+    (0..n)
+        .map(|i| {
+            let pp = 1.0 + 0.5 * rng.range_usize(0, 10) as f64;
+            let u = 5.0 + 10.0 * rng.range_usize(0, 9) as f64;
+            mk_task(i as u64, 0.0, pp, u)
+        })
         .collect()
 }
 
@@ -80,24 +180,10 @@ fn lane_log(log: &[(Lane, Vec<u64>)], lane: Lane) -> Vec<Vec<u64>> {
 /// pre-queued) must dispatch identical batch sequences on each lane.
 #[test]
 fn cross_backend_dispatch_equivalence() {
-    let model = ModelEntry::stub("m", 0.05, 0.08);
-    let lat = zero_latency();
-    let dev = zero_device();
-
     for seed in 0..12u64 {
         let mut rng = Pcg64::new(seed);
         let n = 4 + rng.range_usize(0, 24);
-        // coarse value grids keep priorities well separated, so the
-        // microseconds of wall-clock drift on the threaded path cannot
-        // reorder them; exact ties fall back to arrival/queue order,
-        // which both backends share.
-        let tasks: Vec<Task> = (0..n)
-            .map(|i| {
-                let pp = 1.0 + 0.5 * rng.range_usize(0, 10) as f64;
-                let u = 5.0 + 10.0 * rng.range_usize(0, 9) as f64;
-                mk_task(i as u64, 0.0, pp, u)
-            })
-            .collect();
+        let tasks = grid_tasks(&mut rng, n);
         let params = SchedParams { batch_size: 4, ..Default::default() };
 
         for kind in [
@@ -108,43 +194,91 @@ fn cross_backend_dispatch_equivalence() {
             PolicyKind::UpC,
             PolicyKind::RtLm,
         ] {
-            let tau = 60.0;
-
-            let mut sim_policy = kind.build(&params, model.eta, tau);
-            let mut sim_backend = SimBackend::new(tasks.clone(), &lat, &model, &dev);
-            let sim = run_engine(&mut sim_backend, &mut *sim_policy, &params, n)
-                .expect("sim backend");
-
-            let mut thr_policy = kind.build(&params, model.eta, tau);
-            let mut thr_backend =
-                ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
-                    .expect("threaded backend start");
-            let thr = run_engine(&mut thr_backend, &mut *thr_policy, &params, n)
-                .expect("threaded backend");
-            thr_backend.finish();
-
-            for lane in [Lane::Gpu, Lane::Cpu] {
-                assert_eq!(
-                    lane_log(&sim.dispatch_log, lane),
-                    lane_log(&thr.dispatch_log, lane),
-                    "seed {seed} policy {} lane {lane:?}: dispatch sequences diverged",
-                    kind.label()
-                );
-            }
-            assert_eq!(sim.outcomes.len(), n);
-            assert_eq!(thr.outcomes.len(), n);
-            let sim_lanes: HashMap<u64, Lane> =
-                sim.outcomes.iter().map(|o| (o.id, o.lane)).collect();
-            for o in &thr.outcomes {
-                assert_eq!(
-                    sim_lanes[&o.id], o.lane,
-                    "seed {seed} policy {}: task {} changed lane",
-                    kind.label(),
-                    o.id
-                );
-            }
+            assert_cross_backend_equivalence(&two_lane(60.0), &tasks, &params, kind, seed);
         }
     }
+}
+
+/// The same property over the 3-lane heterogeneous fleet, for *every*
+/// policy kind: one dispatcher loop schedules an N-lane fleet
+/// identically on the virtual clock and on real threads.
+#[test]
+fn three_lane_cross_backend_dispatch_equivalence() {
+    let lanes = three_lane();
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(0x3A5E ^ seed);
+        let n = 4 + rng.range_usize(0, 24);
+        let tasks = grid_tasks(&mut rng, n);
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+        for kind in PolicyKind::ALL {
+            assert_cross_backend_equivalence(&lanes, &tasks, &params, kind, seed);
+        }
+    }
+}
+
+/// Degenerate 1-lane fleet: a single fallback lane serves everything,
+/// identically on both backends, under the full RT-LM policy.
+#[test]
+fn single_lane_fleet_serves_everything() {
+    let lanes = LaneSet::single("m");
+    for seed in 0..4u64 {
+        let mut rng = Pcg64::new(0x51E ^ seed);
+        let n = 3 + rng.range_usize(0, 16);
+        let tasks = grid_tasks(&mut rng, n);
+        let params = SchedParams { batch_size: 4, ..Default::default() };
+        for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+            assert_cross_backend_equivalence(&lanes, &tasks, &params, kind, seed);
+        }
+    }
+}
+
+/// A lane whose predicate admits nothing gets no traffic — and must not
+/// stall the fleet: the partial batch still goes out on the fallback
+/// lane at the ξ expiry, and the run drains.
+#[test]
+fn starved_lane_does_not_stall_xi_forcing() {
+    let lanes = LaneSet::new(vec![
+        LaneSpec::accelerator("gpu", "m"),
+        LaneSpec {
+            admission: Admission::Nothing,
+            ..LaneSpec::accelerator("idle", "m")
+        },
+        LaneSpec::cpu_offload("cpu", "m", 65.0),
+    ])
+    .expect("valid");
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    // tiny but nonzero latencies so the virtual clock actually advances
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), std::collections::BTreeMap::from([(1usize, 0.01), (16, 0.04)]));
+    c.prefill
+        .insert("m".into(), std::collections::BTreeMap::from([((1usize, 16usize), 0.02)]));
+    let lat = LatencyModel::from_calibration(&c);
+    let dev = DeviceProfile::edge_server();
+
+    // two tasks at t=0 with C=4: only the ξ=2s expiry can dispatch them
+    let tasks = vec![
+        mk_task(0, 0.0, 10.0, 10.0),
+        mk_task(1, 0.0, 12.0, 12.0),
+        mk_task(2, 10.0, 14.0, 90.0), // late arrival, quarantines
+    ];
+    let params = SchedParams { batch_size: 4, ..Default::default() };
+    let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev);
+    let report = run_engine(&mut backend, &mut *policy, &params, 3).expect("engine");
+
+    assert_eq!(report.outcomes.len(), 3, "starved lane must not lose tasks");
+    assert_eq!(report.n_batches[1], 0, "admit-nothing lane executed a batch");
+    assert_eq!(report.n_batches[0], 1);
+    assert_eq!(report.n_batches[2], 1);
+    let by_id: HashMap<u64, f64> =
+        report.outcomes.iter().map(|o| (o.id, o.completion)).collect();
+    assert!(
+        by_id[&0] >= params.xi && by_id[&0] < 4.0,
+        "first batch should dispatch at the ξ expiry: {}",
+        by_id[&0]
+    );
 }
 
 /// Regression for the arrivals-done race: the historical wall-clock
@@ -161,18 +295,19 @@ fn arrivals_drain_before_forced_dispatch() {
         .collect();
     let params = SchedParams { batch_size: 4, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
-    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, true)
-        .expect("backend start");
+    let mut backend =
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, true)
+            .expect("backend start");
     let report = run_engine(&mut backend, &mut policy, &params, n).expect("engine");
     backend.finish();
 
     assert_eq!(
-        lane_log(&report.dispatch_log, Lane::Gpu),
+        lane_log(&report.dispatch_log, LaneId::GPU),
         vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]],
         "forced dispatch must not fire before the arrival channel drains"
     );
-    assert_eq!(report.n_batches_gpu, 3);
-    assert_eq!(report.n_batches_cpu, 0);
+    assert_eq!(report.n_batches[LaneId::GPU.index()], 3);
+    assert_eq!(report.n_batches[LaneId::CPU.index()], 0);
 }
 
 /// The wall-clock dispatcher must wake at the ξ expiry (computed
@@ -187,13 +322,14 @@ fn xi_deadline_wakes_wall_clock_dispatcher() {
     ];
     let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
-    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, false)
-        .expect("backend start");
+    let mut backend =
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, false)
+            .expect("backend start");
     let report = run_engine(&mut backend, &mut policy, &params, 3).expect("engine");
     backend.finish();
 
     assert_eq!(
-        lane_log(&report.dispatch_log, Lane::Gpu),
+        lane_log(&report.dispatch_log, LaneId::GPU),
         vec![vec![0, 1], vec![2]],
         "ξ expiry should force the partial batch before the late arrival"
     );
@@ -217,28 +353,21 @@ fn open_stream_matches_counted_on_both_backends() {
     let model = ModelEntry::stub("m", 0.05, 0.08);
     let lat = zero_latency();
     let dev = zero_device();
+    let lanes = two_lane(60.0);
 
     for seed in 0..6u64 {
         let mut rng = Pcg64::new(seed);
         let n = 4 + rng.range_usize(0, 24);
-        let tasks: Vec<Task> = (0..n)
-            .map(|i| {
-                let pp = 1.0 + 0.5 * rng.range_usize(0, 10) as f64;
-                let u = 5.0 + 10.0 * rng.range_usize(0, 9) as f64;
-                mk_task(i as u64, 0.0, pp, u)
-            })
-            .collect();
+        let tasks = grid_tasks(&mut rng, n);
         let params = SchedParams { batch_size: 4, ..Default::default() };
 
         for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
-            let tau = 60.0;
-
-            let mut p = kind.build(&params, model.eta, tau);
-            let mut b = SimBackend::new(tasks.clone(), &lat, &model, &dev);
+            let mut p = kind.build(&params, model.eta, &lanes);
+            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev);
             let counted = run_engine(&mut b, &mut *p, &params, n).expect("sim counted");
 
-            let mut p = kind.build(&params, model.eta, tau);
-            let mut b = SimBackend::new(tasks.clone(), &lat, &model, &dev);
+            let mut p = kind.build(&params, model.eta, &lanes);
+            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev);
             let streamed = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
                 .expect("sim stream");
             // the virtual clock is deterministic: the full interleaved
@@ -250,17 +379,17 @@ fn open_stream_matches_counted_on_both_backends() {
             );
             assert_eq!(streamed.outcomes.len(), n);
 
-            let mut p = kind.build(&params, model.eta, tau);
-            let mut b = ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
+            let mut p = kind.build(&params, model.eta, &lanes);
+            let mut b = ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, 1.0, true)
                 .expect("threaded start");
             let wired = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
                 .expect("threaded stream");
             b.finish();
-            for lane in [Lane::Gpu, Lane::Cpu] {
+            for lane in lanes.ids() {
                 assert_eq!(
                     lane_log(&counted.dispatch_log, lane),
                     lane_log(&wired.dispatch_log, lane),
-                    "seed {seed} policy {} lane {lane:?}: wire stream diverged",
+                    "seed {seed} policy {} lane {lane}: wire stream diverged",
                     kind.label()
                 );
             }
@@ -281,13 +410,14 @@ fn open_stream_xi_forcing_with_late_arrivals() {
     ];
     let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
-    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, false)
-        .expect("backend start");
+    let mut backend =
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, false)
+            .expect("backend start");
     let report = run_engine_stream(&mut backend, &mut policy, &params, ArrivalSource::Stream, None)
         .expect("engine");
     backend.finish();
     assert_eq!(
-        lane_log(&report.dispatch_log, Lane::Gpu),
+        lane_log(&report.dispatch_log, LaneId::GPU),
         vec![vec![0, 1], vec![2]],
         "ξ expiry should force the partial batch while the stream is open"
     );
@@ -298,8 +428,9 @@ fn open_stream_xi_forcing_with_late_arrivals() {
 /// the engine to a clean return.
 #[test]
 fn live_arrival_handle_feeds_open_stream() {
-    let (mut backend, arrivals) = ThreadedBackend::start_stream(instant_factory())
-        .expect("backend start");
+    let (mut backend, arrivals) =
+        ThreadedBackend::start_stream(instant_factory(), &two_lane(60.0))
+            .expect("backend start");
     let producer = {
         let arrivals = arrivals.clone();
         std::thread::spawn(move || {
@@ -331,8 +462,9 @@ fn stream_callback_sees_every_completion_and_report_stays_lean() {
     let tasks: Vec<Task> = (0..n).map(|i| mk_task(i as u64, 0.0, 5.0, 10.0)).collect();
     let params = SchedParams { batch_size: 4, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
-    let mut backend = ThreadedBackend::start(tasks, instant_factory(), 1.0, true)
-        .expect("backend start");
+    let mut backend =
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, true)
+            .expect("backend start");
     let mut seen: Vec<u64> = Vec::new();
     let mut on_complete = |o: &rtlm::sim::results::TaskOutcome, output: &[i32]| {
         assert!(output.is_empty(), "instant executor produces no tokens");
@@ -352,7 +484,7 @@ fn stream_callback_sees_every_completion_and_report_stays_lean() {
     assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "every task streamed exactly once");
     assert!(report.outcomes.is_empty(), "streaming mode must not store outcomes");
     assert!(report.dispatch_log.is_empty(), "streaming mode must not store the dispatch log");
-    assert_eq!(report.n_batches_gpu, 3, "aggregate counters still maintained");
+    assert_eq!(report.n_batches[LaneId::GPU.index()], 3, "aggregate counters still maintained");
 }
 
 /// NaN-uncertainty tasks must not panic the wire path either: ordering
@@ -365,13 +497,91 @@ fn nan_uncertainty_survives_the_wire_path() {
     tasks[1].uncertainty = f64::NAN;
     tasks[4].uncertainty = f64::NAN;
     let params = SchedParams { batch_size: 2, ..Default::default() };
+    let lanes = two_lane(60.0);
     for kind in [PolicyKind::Fifo, PolicyKind::Hpf, PolicyKind::RtLm] {
-        let mut policy = kind.build(&params, 0.05, 60.0);
+        let mut policy = kind.build(&params, 0.05, &lanes);
         let mut backend =
-            ThreadedBackend::start(tasks.clone(), instant_factory(), 1.0, true)
+            ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, 1.0, true)
                 .expect("backend start");
         let report = run_engine(&mut backend, &mut *policy, &params, 6).expect("engine");
         backend.finish();
         assert_eq!(report.outcomes.len(), 6, "{} lost NaN tasks", kind.label());
+    }
+}
+
+/// The modeled CPU-lane executor fans one quarantine batch across a
+/// scoped std-thread pool — its wall-clock makespan must match the
+/// simulator's `cpu_workers` intra-batch earliest-free-first model
+/// (ROADMAP "tokio-free async lane pool"), and beat the sequential
+/// single-worker execution of the same batch.
+#[test]
+fn modeled_cpu_pool_makespan_matches_simulator_model() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), std::collections::BTreeMap::from([(1usize, 0.01)]));
+    c.prefill
+        .insert("m".into(), std::collections::BTreeMap::from([((1usize, 16usize), 0.02)]));
+    let lat = LatencyModel::from_calibration(&c);
+    let dev = DeviceProfile::edge_server();
+    let time_scale = 40.0;
+
+    // 6 quarantined tasks with unequal lengths
+    let tasks: Vec<Task> = (0..6)
+        .map(|i| mk_task(i as u64, 0.0, 5.0, 70.0 + 4.0 * i as f64))
+        .collect();
+    let batch = Batch { lane: LaneId::CPU, tasks: tasks.clone() };
+
+    // the simulator's earliest-free-first worker-pool makespan
+    let pool_makespan = |workers: usize| -> f64 {
+        let mut free = vec![0.0f64; workers];
+        for task in &tasks {
+            let w = (0..free.len())
+                .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+                .unwrap();
+            free[w] += lat.cpu_task_secs(&model, task.true_len, task.input_len, &dev);
+        }
+        free.iter().copied().fold(0.0, f64::max)
+    };
+
+    let run = |workers: usize| -> f64 {
+        let mut exec = ModeledExecutor {
+            lat: lat.clone(),
+            model: model.clone(),
+            dev: dev.clone(),
+            time_scale,
+            kind: LaneKind::Cpu,
+            workers,
+        };
+        let t0 = std::time::Instant::now();
+        let reports = exec.execute(&batch).expect("modeled execute");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(reports.len(), 6, "one report per task");
+        // reports come back in task order so outputs stay correlated
+        let ids: Vec<u64> = reports.iter().flat_map(|r| r.task_ids.clone()).collect();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        wall * time_scale
+    };
+
+    let seq = run(1);
+    let pooled = run(3);
+    let expect_seq = pool_makespan(1);
+    let expect_pooled = pool_makespan(3);
+
+    // the pool genuinely parallelises: 3 workers cut the makespan well
+    // below sequential (model predicts ~1/3)
+    assert!(
+        pooled < 0.6 * seq,
+        "pooled {pooled:.3}s vs sequential {seq:.3}s: no intra-batch parallelism"
+    );
+    // and each matches the simulator's modeled makespan (generous
+    // tolerance: sleep granularity + thread scheduling jitter, scaled)
+    for (wall, expect, label) in [(seq, expect_seq, "seq"), (pooled, expect_pooled, "pooled")] {
+        let rel = (wall - expect).abs() / expect;
+        assert!(
+            rel < 0.35,
+            "{label}: wall {wall:.3}s vs modeled {expect:.3}s ({:.0}% off)",
+            rel * 100.0
+        );
     }
 }

@@ -1,29 +1,35 @@
 //! In-process integration tests for the TCP front-end: the server is
 //! `serve_tcp_on` over the *shared* engine core (no dispatch loop of
 //! its own), driven by concurrent clients on an ephemeral port with
-//! artifact-free stubs (hand-built lexicon/vocab, constant regressor,
-//! instant/sleepy/failing executors).
+//! artifact-free stubs (hand-built lexicon/vocab, constant or
+//! length-sensitive regressors, instant/sleepy/failing/modeled
+//! executors).
 //!
 //! Covered: concurrent clients all get correlated replies, the line
 //! protocol's edge cases (empty lines skipped, over-length prompts
-//! truncated, pipelined lines answered in order), id-tagged timeout and
-//! execution-failure error replies, a client disconnecting before its
-//! reply never wedging the dispatcher, and the load generator the CI
-//! `tcp-load` gate runs.
+//! truncated, pipelined lines answered in order at K=1), bounded
+//! pipelining at K>1 (out-of-order id-tagged replies), a 3-lane
+//! heterogeneous fleet on the modeled backend routing traffic per
+//! admission predicate, id-tagged timeout and execution-failure error
+//! replies, a client disconnecting before its reply never wedging the
+//! dispatcher, and the load generator the CI `tcp-load` gate runs.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use rtlm::config::SchedParams;
-use rtlm::executor::{BatchExecutor, ExecReport, ExecutorFactory, InstantExecutor};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::executor::{
+    modeled_factory, BatchExecutor, ExecReport, ExecutorFactory, InstantExecutor,
+};
 use rtlm::runtime::bundle::{Bundle, Tensor};
-use rtlm::scheduler::{Batch, PolicyKind};
+use rtlm::scheduler::{Admission, Batch, LaneSet, LaneSpec, PolicyKind};
 use rtlm::server::loadgen::{self, LoadgenOptions};
 use rtlm::server::tcp::{serve_tcp_on, TcpServerConfig};
+use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::textgen::{Lexicon, Vocab};
 use rtlm::uncertainty::{Estimator, Regressor};
 use rtlm::util::json::Json;
@@ -31,7 +37,7 @@ use rtlm::util::json::Json;
 const MAX_INPUT_LEN: usize = 64;
 
 /// Minimal lexicon: a handful of vocab words, every rule list empty
-/// (all rule scores 0 — the constant regressor decides the length).
+/// (all rule scores 0 — the regressor alone decides the length).
 fn test_lexicon() -> Lexicon {
     let json = r#"{
         "vocab": ["<pad>", "<bos>", "<eos>", "<unk>",
@@ -63,6 +69,19 @@ fn test_estimator(lexicon: Arc<Lexicon>) -> Estimator {
     Estimator::new(lexicon, Arc::new(regressor), MAX_INPUT_LEN, 4.0, 96.0)
 }
 
+/// Length-sensitive regressor: u = 4 + 1.5 * input_tokens, so short
+/// prompts score low, long prompts score past any offload threshold —
+/// the knob the multi-lane and pipelining tests route traffic with.
+fn length_estimator(lexicon: Arc<Lexicon>) -> Estimator {
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32("w0", vec![7, 1], vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 96.0]),
+        Tensor::f32("b0", vec![1], vec![4.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, MAX_INPUT_LEN as f64];
+    let regressor = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(lexicon, Arc::new(regressor), MAX_INPUT_LEN, 4.0, 96.0)
+}
+
 fn test_config(params: SchedParams, reply_timeout: Duration) -> TcpServerConfig {
     let lexicon = Arc::new(test_lexicon());
     let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
@@ -72,29 +91,51 @@ fn test_config(params: SchedParams, reply_timeout: Duration) -> TcpServerConfig 
         max_input_len: MAX_INPUT_LEN,
         phi: 0.07,
         params,
+        lanes: LaneSet::two_lane("m", 60.0),
+        pipeline_depth: 1,
         reply_timeout,
     }
 }
 
 /// Bind an ephemeral port, run the server on a detached thread (the
 /// test process exits past it), return the address to dial.
-fn start_server(
-    factory: ExecutorFactory,
-    params: SchedParams,
-    reply_timeout: Duration,
-) -> SocketAddr {
+fn start_server_cfg(factory: ExecutorFactory, cfg: TcpServerConfig) -> SocketAddr {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
     let addr = listener.local_addr().expect("local addr");
-    let cfg = test_config(params.clone(), reply_timeout);
-    let policy = PolicyKind::RtLm.build(&params, 0.05, 60.0);
+    let policy = PolicyKind::RtLm.build(&cfg.params, 0.05, &cfg.lanes);
     thread::spawn(move || {
         let _ = serve_tcp_on(listener, cfg, factory, policy);
     });
     addr
 }
 
+fn start_server(
+    factory: ExecutorFactory,
+    params: SchedParams,
+    reply_timeout: Duration,
+) -> SocketAddr {
+    start_server_cfg(factory, test_config(params, reply_timeout))
+}
+
 fn instant_factory() -> ExecutorFactory {
-    Arc::new(|_lane| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+    Arc::new(|_spec: &LaneSpec| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+}
+
+/// Tiny calibrated latency model for the modeled-backend tests: fast
+/// accelerator decode, so the CPU quarantine lane (offload overhead +
+/// lane slowdown) is the visibly slower path.
+fn tiny_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), BTreeMap::from([(1usize, 0.002), (16, 0.004)]));
+    c.prefill
+        .insert("m".into(), BTreeMap::from([((1usize, 16usize), 0.004), ((8, 64), 0.01)]));
+    LatencyModel::from_calibration(&c)
+}
+
+fn modeled_test_factory(time_scale: f64) -> ExecutorFactory {
+    let models = BTreeMap::from([("m".to_string(), ModelEntry::stub("m", 0.05, 0.08))]);
+    modeled_factory(tiny_latency(), models, DeviceProfile::edge_server(), time_scale)
 }
 
 /// Executes like the instant executor after a fixed sleep — long enough
@@ -158,7 +199,7 @@ fn concurrent_clients_all_get_correlated_replies() {
             assert!(ids.insert(id), "duplicate reply id {id}");
             assert!(reply.need_f64("response_ms").expect("response_ms") >= 0.0);
             let lane = reply.need_str("lane").expect("lane").to_string();
-            assert!(lane == "Gpu" || lane == "Cpu", "unknown lane {lane}");
+            assert!(lane == "gpu" || lane == "cpu", "unknown lane {lane}");
         }
     }
     assert_eq!(ids.len(), 64, "every request answered exactly once");
@@ -194,13 +235,112 @@ fn pipelined_lines_get_in_order_id_tagged_replies() {
         .collect();
     let mut sorted = ids.clone();
     sorted.sort_unstable();
-    assert_eq!(ids, sorted, "one connection's replies arrive in request order: {ids:?}");
+    assert_eq!(ids, sorted, "at K=1 one connection's replies arrive in request order: {ids:?}");
+}
+
+/// Bounded pipelining (K=3) on the modeled two-lane backend: a slow
+/// quarantined request pipelined ahead of two fast accelerator requests
+/// must NOT hold their replies back — the fast replies overtake it,
+/// id-tagged, and the slow reply arrives last.
+#[test]
+fn pipelined_depth_k_replies_out_of_order() {
+    let params = SchedParams { batch_size: 1, xi: 0.02, ..Default::default() };
+    let lexicon = Arc::new(test_lexicon());
+    let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
+    let cfg = TcpServerConfig {
+        vocab,
+        estimator: length_estimator(lexicon),
+        max_input_len: MAX_INPUT_LEN,
+        phi: 0.07,
+        params,
+        lanes: LaneSet::two_lane("m", 60.0),
+        pipeline_depth: 3,
+        reply_timeout: Duration::from_secs(30),
+    };
+    // time_scale 1: the quarantined task sleeps its full modeled
+    // latency (~5s of modeled seconds -> but offload overhead dominates
+    // scaled) — use 10x compression to keep the gap ~0.5s
+    let addr = start_server_cfg(modeled_test_factory(10.0), cfg);
+
+    // 45 tokens -> u = 4 + 1.5*45 = 71.5 > tau -> cpu lane (slow);
+    // 1-2 tokens -> u ~ 5.5-7 -> gpu lane (fast)
+    let slow = "history ".repeat(45);
+    let replies = roundtrip(addr, &[slow.as_str(), "art", "the art"], 3);
+    let ids: Vec<u64> = replies
+        .iter()
+        .map(|r| r.need_f64("id").expect("id") as u64)
+        .collect();
+    let slow_id = ids.iter().copied().min().unwrap(); // first request got the first id
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![slow_id, slow_id + 1, slow_id + 2], "all three answered once");
+    assert_eq!(
+        *ids.last().unwrap(),
+        slow_id,
+        "slow quarantined reply must arrive last (out-of-order pipelining): {ids:?}"
+    );
+    let lanes: Vec<&str> = replies
+        .iter()
+        .map(|r| r.need_str("lane").expect("lane"))
+        .collect();
+    assert!(lanes.contains(&"cpu") && lanes.contains(&"gpu"), "{lanes:?}");
+}
+
+/// A 3-lane heterogeneous fleet (two accelerator variants + CPU
+/// quarantine) on the modeled backend: every request is served, replies
+/// carry the configured lane names, and each lane's admission predicate
+/// decides its traffic.
+#[test]
+fn three_lane_modeled_backend_serves_by_admission() {
+    let params = SchedParams { batch_size: 2, xi: 0.03, ..Default::default() };
+    let lanes = LaneSet::new(vec![
+        LaneSpec::accelerator("big", "m"),
+        LaneSpec {
+            admission: Admission::AtMost(10.0),
+            ..LaneSpec::accelerator("small", "m")
+        },
+        LaneSpec {
+            workers: Some(2),
+            ..LaneSpec::cpu_offload("cpu", "m", 60.0)
+        },
+    ])
+    .expect("3-lane set");
+    let lexicon = Arc::new(test_lexicon());
+    let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
+    let cfg = TcpServerConfig {
+        vocab,
+        estimator: length_estimator(lexicon),
+        max_input_len: MAX_INPUT_LEN,
+        phi: 0.07,
+        params,
+        lanes,
+        pipeline_depth: 1,
+        reply_timeout: Duration::from_secs(30),
+    };
+    let addr = start_server_cfg(modeled_test_factory(50.0), cfg);
+
+    let long = "history ".repeat(45); // u = 71.5 -> cpu
+    let cases: Vec<(&str, &str)> = vec![
+        ("art", "small"),                              // u = 5.5 <= 10
+        ("the art", "small"),                          // u = 7
+        ("tell me about the history of art", "big"),   // u = 14.5
+        (long.as_str(), "cpu"),                        // u = 71.5 > 60
+    ];
+    let mut seen: HashSet<String> = HashSet::new();
+    for (text, want_lane) in cases {
+        let replies = roundtrip(addr, &[text], 1);
+        assert_eq!(replies[0].get("error"), &Json::Null, "error for '{text}': {}", replies[0]);
+        let lane = replies[0].need_str("lane").expect("lane").to_string();
+        assert_eq!(lane, want_lane, "text '{}' routed to {lane}", &text[..text.len().min(24)]);
+        seen.insert(lane);
+    }
+    assert_eq!(seen.len(), 3, "every configured lane served traffic: {seen:?}");
 }
 
 #[test]
 fn timeout_replies_carry_id_and_dead_clients_do_not_wedge() {
     let params = SchedParams { batch_size: 1, xi: 0.02, ..Default::default() };
-    let factory: ExecutorFactory = Arc::new(|_lane| {
+    let factory: ExecutorFactory = Arc::new(|_spec: &LaneSpec| {
         Ok(Box::new(SleepyExecutor(Duration::from_millis(300))) as Box<dyn BatchExecutor>)
     });
     // reply timeout far below the executor sleep: the first reply is an
@@ -227,7 +367,7 @@ fn timeout_replies_carry_id_and_dead_clients_do_not_wedge() {
 fn execution_failure_replies_carry_id() {
     let params = SchedParams { batch_size: 1, xi: 0.02, ..Default::default() };
     let factory: ExecutorFactory =
-        Arc::new(|_lane| Ok(Box::new(FailingExecutor) as Box<dyn BatchExecutor>));
+        Arc::new(|_spec: &LaneSpec| Ok(Box::new(FailingExecutor) as Box<dyn BatchExecutor>));
     let addr = start_server(factory, params, Duration::from_secs(10));
 
     let replies = roundtrip(addr, &["tell me about art"], 1);
@@ -256,4 +396,8 @@ fn loadgen_drives_concurrent_connections_clean() {
     assert_eq!(report.response_ms.len(), 64);
     let p95 = report.response_ms.p95();
     assert!(p95.is_finite() && p95 >= 0.0, "p95 {p95}");
+    // per-lane served-task counts come back from the reply lane tags
+    let total: usize = report.lane_tasks.values().sum();
+    assert_eq!(total, 64, "per-lane counts cover every ok reply: {:?}", report.lane_tasks);
+    assert!(report.lane_tasks.keys().all(|l| l == "gpu" || l == "cpu"));
 }

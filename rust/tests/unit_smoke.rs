@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 
 use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
-use rtlm::scheduler::{up_priority, Fifo, Lane, Policy, PolicyKind, Task, UaSched};
+use rtlm::scheduler::{up_priority, Fifo, LaneId, LaneSet, Policy, PolicyKind, Task, UaSched};
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::util::json::{obj, Json};
 use rtlm::util::rng::Pcg64;
@@ -124,29 +124,29 @@ fn fifo_pops_in_arrival_order() {
     fifo.push(task(10, 0.0, 9.0, 30.0));
     fifo.push(task(11, 1.0, 2.0, 80.0));
     fifo.push(task(12, 2.0, 5.0, 10.0));
-    let b = fifo.pop_batch(Lane::Gpu, 2.0, false).expect("full batch");
+    let b = fifo.pop_batch(LaneId::GPU, 2.0, false).expect("full batch");
     assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![10, 11]);
     assert_eq!(fifo.queue_len(), 1);
     // CPU lane is never used by baselines
-    assert!(fifo.pop_batch(Lane::Cpu, 2.0, true).is_none());
+    assert!(fifo.pop_batch(LaneId::CPU, 2.0, true).is_none());
 }
 
 #[test]
 fn uasched_prefers_low_uncertainty_at_equal_slack() {
     let params = SchedParams { batch_size: 2, ..Default::default() };
-    let mut sched = UaSched::new(params, 0.05, f64::INFINITY, false);
+    let mut sched = UaSched::two_lane(params, 0.05, f64::INFINITY, false);
     // same deadline: the more certain tasks must come out first
     sched.push(task(1, 0.0, 5.0, 90.0));
     sched.push(task(2, 0.0, 5.0, 10.0));
     sched.push(task(3, 0.0, 5.0, 60.0));
-    let b = sched.pop_batch(Lane::Gpu, 0.0, true).expect("batch");
+    let b = sched.pop_batch(LaneId::GPU, 0.0, true).expect("batch");
     assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
 }
 
 #[test]
 fn uasched_offloads_above_tau_and_conserves_tasks() {
     let params = SchedParams { batch_size: 4, ..Default::default() };
-    let mut sched = UaSched::new(params, 0.05, 50.0, true);
+    let mut sched = UaSched::two_lane(params, 0.05, 50.0, true);
     for i in 0..12 {
         let u = if i % 3 == 0 { 80.0 + i as f64 } else { 10.0 + i as f64 };
         sched.push(task(i, 0.0, 6.0, u));
@@ -155,13 +155,13 @@ fn uasched_offloads_above_tau_and_conserves_tasks() {
     let mut now = 0.0;
     while sched.queue_len() > 0 {
         now += 1.0;
-        for lane in [Lane::Gpu, Lane::Cpu] {
+        for lane in [LaneId::GPU, LaneId::CPU] {
             if let Some(b) = sched.pop_batch(lane, now, true) {
                 for t in &b.tasks {
                     assert!(seen.insert(t.id), "task {} dispatched twice", t.id);
                     match lane {
-                        Lane::Cpu => assert!(t.uncertainty > 50.0, "certain task offloaded"),
-                        Lane::Gpu => assert!(t.uncertainty <= 50.0, "malicious task on GPU"),
+                        LaneId::CPU => assert!(t.uncertainty > 50.0, "certain task offloaded"),
+                        _ => assert!(t.uncertainty <= 50.0, "malicious task on GPU"),
                     }
                 }
             }
@@ -218,7 +218,7 @@ fn simulator_completes_every_policy_without_artifacts() {
         })
         .collect();
     for kind in PolicyKind::ALL_BASELINES {
-        let mut policy = kind.build(&params, model.eta, 60.0);
+        let mut policy = kind.build(&params, model.eta, &LaneSet::two_lane("m", 60.0));
         let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
         assert_eq!(r.outcomes.len(), 50, "{} lost tasks", kind.label());
         assert!(r.makespan > 0.0);

@@ -6,10 +6,17 @@ Usage:
 
 The snapshots are the hotpath bench's output: ``{"bench": "hotpath",
 "unit": "seconds_per_iter", "artifacts": bool, "pjrt": bool,
-"results": {name: seconds}}``. Benchmarks present in both snapshots are
-printed sorted by the largest relative delta (B vs A), so the biggest
-hot-path movement tops the table; benchmarks present in only one
-snapshot (e.g. PJRT benches that need artifacts) are listed separately.
+"results": {name: seconds}, "batches": {name: {lane: count}}}``.
+Benchmarks present in both snapshots are printed sorted by the largest
+relative delta (B vs A), so the biggest hot-path movement tops the
+table; benchmarks present in only one snapshot (e.g. PJRT benches that
+need artifacts) are listed separately.
+
+A second per-lane batch table is rendered from the ``batches`` map.
+Older snapshots are handled gracefully: a missing ``batches`` key skips
+the table, and legacy two-field reports carrying flat
+``n_batches_gpu``/``n_batches_cpu`` counts are rendered as a gpu/cpu
+row.
 
 Exit code is always 0 — this is a visibility tool for the CI job
 summary, not a gate; the gating happens in the test and load steps.
@@ -28,6 +35,46 @@ def fmt_secs(secs: float) -> str:
     if secs < 1.0:
         return f"{secs * 1e3:.2f} ms"
     return f"{secs:.3f} s"
+
+
+def lane_batches(snapshot: dict) -> dict:
+    """Per-lane batch counts of a snapshot, in every format we've shipped.
+
+    New snapshots carry ``{"batches": {bench: {lane: count}}}``; legacy
+    two-field reports carried flat ``n_batches_gpu``/``n_batches_cpu``
+    integers at the top level. Returns ``{bench: {lane: count}}`` (the
+    legacy form maps to a single ``"(report)"`` pseudo-bench); empty
+    when the snapshot predates per-lane accounting entirely.
+    """
+    batches = snapshot.get("batches")
+    if isinstance(batches, dict) and batches:
+        return {
+            bench: lanes
+            for bench, lanes in batches.items()
+            if isinstance(lanes, dict) and lanes
+        }
+    legacy = {}
+    for key, lane in (("n_batches_gpu", "gpu"), ("n_batches_cpu", "cpu")):
+        if isinstance(snapshot.get(key), (int, float)):
+            legacy[lane] = snapshot[key]
+    return {"(report)": legacy} if legacy else {}
+
+
+def print_lane_table(a: dict, b: dict, la: str, lb: str) -> None:
+    ba, bb = lane_batches(a), lane_batches(b)
+    if not ba and not bb:
+        return
+    print("\n### Per-lane dispatched batches\n")
+    print(f"| benchmark | lane | {la} | {lb} |")
+    print("|---|---|---:|---:|")
+    for bench in sorted(set(ba) | set(bb)):
+        lanes_a, lanes_b = ba.get(bench, {}), bb.get(bench, {})
+        for lane in sorted(set(lanes_a) | set(lanes_b)):
+            fmt = lambda v: "-" if v is None else f"{v:.0f}"
+            print(
+                f"| {bench} | {lane} | {fmt(lanes_a.get(lane))} "
+                f"| {fmt(lanes_b.get(lane))} |"
+            )
 
 
 def main() -> int:
@@ -83,6 +130,8 @@ def main() -> int:
         print(f"\nonly in {la}: " + ", ".join(only_a))
     if only_b:
         print(f"\nonly in {lb}: " + ", ".join(only_b))
+
+    print_lane_table(a, b, la, lb)
     return 0
 
 

@@ -96,7 +96,7 @@ fn main() -> Result<()> {
         let mut tasks = factory.build_all(&chosen, &trace, &model, false)?;
         encode_prompts(&store, &mut tasks);
         let mut policy = kind.build(&params, model.eta, &lanes);
-        let opts = ServeOptions { time_scale, verbose: false };
+        let opts = ServeOptions { time_scale, verbose: false, ..Default::default() };
         let report = serve_from_root(&root, &lanes, tasks, &mut *policy, &params, &opts)?;
         let mut s = report.response_times();
         table.row(vec![

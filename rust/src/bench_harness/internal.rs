@@ -7,20 +7,26 @@
 //! 3. accelerator batching-knee sensitivity
 //! 4. CPU-lane worker-pool sensitivity
 //!
+//! Every comparison is built as a [`ReplayCell`], so the same cells
+//! double as the **wire-parity suite** ([`parity_cells`]): `rtlm bench
+//! --wire` replays each on the virtual-clock and threaded backends and
+//! diffs the reports (see [`super::replay`]).
+//!
 //! Run with `rtlm bench internal` or
 //! `cargo bench --bench paper_tables -- internal`.
 
 use anyhow::Result;
 
-use crate::config::{DeviceProfile, SchedParams};
+use crate::config::DeviceProfile;
 use crate::metrics::table::fmt_f;
 use crate::metrics::{histogram, Table};
-use crate::scheduler::{LaneSet, PolicyKind, Task};
-use crate::sim::run_sim;
+use crate::scheduler::{PolicyKind, Task};
 use crate::workload::subsets::Variance;
 
+use super::replay::ReplayCell;
 use super::scenarios::ExperimentCtx;
 
+/// Run every internal ablation and print its table.
 pub fn run_internal(ctx: &ExperimentCtx) -> Result<()> {
     aging_ablation(ctx)?;
     println!();
@@ -32,29 +38,40 @@ pub fn run_internal(ctx: &ExperimentCtx) -> Result<()> {
     Ok(())
 }
 
+/// The full-RT-LM aging cell (dialogpt, large variance).
+fn aging_cell(ctx: &ExperimentCtx) -> Result<ReplayCell> {
+    let model = ctx.model("dialogpt")?.clone();
+    let dev = DeviceProfile::edge_server();
+    let tasks = ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x1A)?;
+    Ok(ctx
+        .cell(&model, tasks, PolicyKind::RtLm, &dev)
+        .labelled("internal/aging"))
+}
+
+/// The static-slack emulation of [`aging_cell`] (derived from it — same
+/// task set): every priority point is pushed so far out that aging
+/// never binds within the run — the ordering degenerates to the
+/// numerator-only order the paper's literal Eq. 3 produces under load.
+fn static_slack_cell(aging: &ReplayCell) -> ReplayCell {
+    let mut cell = aging.clone().labelled("internal/static-slack");
+    for t in &mut cell.tasks {
+        t.priority_point = t.arrival + 1e6;
+    }
+    cell
+}
+
 /// Static-arrival slack (the literal Eq. 3 reading) is emulated by
 /// freezing each task's arrival as its "now": we shift priority points
 /// so the slack term equals the arrival-time value forever.
 fn aging_ablation(ctx: &ExperimentCtx) -> Result<()> {
-    let model = ctx.model("dialogpt")?.clone();
-    let dev = DeviceProfile::edge_server();
-    let tasks = ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x1A)?;
-
-    let run = |tasks: Vec<Task>, params: &SchedParams| {
-        let tau = ctx.taus[&model.name];
-        let mut policy =
-            PolicyKind::RtLm.build(params, model.eta, &LaneSet::two_lane(&model.name, tau));
-        run_sim(tasks, &mut *policy, &ctx.lat, &model, &dev, params)
-    };
-
     let mut table = Table::new(
         "internal ablation — dynamic slack (aging) and bounded deferral",
         &["variant", "mean s", "p95 s", "max s", "misses"],
     );
 
     // full RT-LM (aging + bounded deferral)
-    let params = ctx.params_for(&model.name);
-    let r = run(tasks.clone(), &params);
+    let aging = aging_cell(ctx)?;
+    let r = aging.run_sim(&ctx.lat)?;
     let mut s = r.response_times();
     table.row(vec![
         "aging + bounded deferral (ours)".into(),
@@ -64,15 +81,7 @@ fn aging_ablation(ctx: &ExperimentCtx) -> Result<()> {
         r.miss_count().to_string(),
     ]);
 
-    // static slack emulation: make every priority point so far away that
-    // aging never binds within the run -> ordering is numerator-only,
-    // i.e. the static low-uncertainty-first order the paper's literal
-    // formula degenerates to under load.
-    let mut frozen = tasks.clone();
-    for t in &mut frozen {
-        t.priority_point = t.arrival + 1e6;
-    }
-    let r = run(frozen, &params);
+    let r = static_slack_cell(&aging).run_sim(&ctx.lat)?;
     let mut s = r.response_times();
     table.row(vec![
         "static slack (literal Eq. 3)".into(),
@@ -86,19 +95,32 @@ fn aging_ablation(ctx: &ExperimentCtx) -> Result<()> {
     Ok(())
 }
 
-fn knee_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
+/// The shared task set of the batching-knee grid (built once, cloned
+/// into each knee's cell).
+fn knee_tasks(ctx: &ExperimentCtx) -> Result<Vec<Task>> {
     let model = ctx.model("dialogpt")?.clone();
-    let tasks = ctx.scenario_tasks(&model, Variance::Normal, ctx.seed ^ 0x2B)?;
+    ctx.scenario_tasks(&model, Variance::Normal, ctx.seed ^ 0x2B)
+}
+
+/// The FIFO batching-knee cell: offloading disabled, device knee
+/// overridden.
+fn knee_cell(ctx: &ExperimentCtx, tasks: Vec<Task>, knee: f64) -> Result<ReplayCell> {
+    let model = ctx.model("dialogpt")?.clone();
+    let dev = DeviceProfile { batch_knee: knee, ..DeviceProfile::edge_server() };
+    let params = ctx.params_for(&model.name);
+    Ok(ctx
+        .cell_with(&model, tasks, PolicyKind::Fifo, &dev, params, f64::INFINITY)
+        .labelled(&format!("internal/knee{knee:.0}")))
+}
+
+fn knee_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
     let mut table = Table::new(
         "internal ablation — accelerator batching-knee sensitivity (FIFO)",
         &["knee", "mean s", "p95 s", "throughput/min"],
     );
+    let tasks = knee_tasks(ctx)?;
     for knee in [1.0, 4.0, 12.0, 32.0] {
-        let dev = DeviceProfile { batch_knee: knee, ..DeviceProfile::edge_server() };
-        let params = ctx.params_for(&model.name);
-        let no_offload = LaneSet::two_lane(&model.name, f64::INFINITY);
-        let mut policy = PolicyKind::Fifo.build(&params, model.eta, &no_offload);
-        let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, &model, &dev, &params);
+        let r = knee_cell(ctx, tasks.clone(), knee)?.run_sim(&ctx.lat)?;
         let mut s = r.response_times();
         table.row(vec![
             format!("{knee:.0}"),
@@ -112,20 +134,33 @@ fn knee_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
     Ok(())
 }
 
-fn cpu_worker_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
+/// The shared task set of the quarantine-pool grid.
+fn cpu_workers_tasks(ctx: &ExperimentCtx) -> Result<Vec<Task>> {
     let model = ctx.model("blenderbot")?.clone();
-    let tasks = ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x3C)?;
+    ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x3C)
+}
+
+/// The RT-LM quarantine-pool cell: CPU-lane worker count overridden.
+fn cpu_workers_cell(
+    ctx: &ExperimentCtx,
+    tasks: Vec<Task>,
+    workers: usize,
+) -> Result<ReplayCell> {
+    let model = ctx.model("blenderbot")?.clone();
+    let dev = DeviceProfile { cpu_workers: workers, ..DeviceProfile::edge_server() };
+    Ok(ctx
+        .cell(&model, tasks, PolicyKind::RtLm, &dev)
+        .labelled(&format!("internal/cpu-workers{workers}")))
+}
+
+fn cpu_worker_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
     let mut table = Table::new(
         "internal ablation — CPU-lane worker pool (RT-LM, large variance)",
         &["workers", "mean s", "p95 s", "max s", "offloaded"],
     );
+    let tasks = cpu_workers_tasks(ctx)?;
     for workers in [1usize, 2, 4, 8] {
-        let dev = DeviceProfile { cpu_workers: workers, ..DeviceProfile::edge_server() };
-        let params = ctx.params_for(&model.name);
-        let tau = ctx.taus[&model.name];
-        let mut policy =
-            PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&model.name, tau));
-        let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, &model, &dev, &params);
+        let r = cpu_workers_cell(ctx, tasks.clone(), workers)?.run_sim(&ctx.lat)?;
         let offloaded = r
             .outcomes
             .iter()
@@ -145,13 +180,30 @@ fn cpu_worker_sensitivity(ctx: &ExperimentCtx) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 9's distributions as printable histograms (FIFO vs RT-LM).
-fn response_distributions(ctx: &ExperimentCtx) -> Result<()> {
+/// The shared task set of the distribution comparison.
+fn distribution_tasks(ctx: &ExperimentCtx) -> Result<Vec<Task>> {
+    let model = ctx.model("dialogpt")?.clone();
+    ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x4D)
+}
+
+/// The FIFO-vs-RT-LM distribution cells (dialogpt, large variance).
+fn distribution_cell(
+    ctx: &ExperimentCtx,
+    tasks: Vec<Task>,
+    kind: PolicyKind,
+) -> Result<ReplayCell> {
     let model = ctx.model("dialogpt")?.clone();
     let dev = DeviceProfile::edge_server();
-    let tasks = ctx.scenario_tasks(&model, Variance::Large, ctx.seed ^ 0x4D)?;
+    Ok(ctx
+        .cell(&model, tasks, kind, &dev)
+        .labelled(&format!("internal/dist-{}", kind.label().to_ascii_lowercase())))
+}
+
+/// Fig. 9's distributions as printable histograms (FIFO vs RT-LM).
+fn response_distributions(ctx: &ExperimentCtx) -> Result<()> {
+    let tasks = distribution_tasks(ctx)?;
     for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
-        let r = ctx.run_policy(&model, tasks.clone(), kind, &dev);
+        let r = distribution_cell(ctx, tasks.clone(), kind)?.run_sim(&ctx.lat)?;
         let values: Vec<f64> = r.outcomes.iter().map(|o| o.response_time()).collect();
         print!(
             "{}",
@@ -164,4 +216,81 @@ fn response_distributions(ctx: &ExperimentCtx) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// The internal comparison cells, as the wire-parity suite `rtlm bench
+/// --wire` replays: aging (full + static-slack emulation), the batching
+/// knee extremes, the quarantine-pool extremes, and the FIFO/RT-LM
+/// distribution pair. Together they cover every policy machinery the
+/// internal ablations measure — UP priorities, consolidation, strategic
+/// offloading, FIFO batching — on both engine backends.
+///
+/// `filter` selects cells by label — an exact match (whole label, or
+/// its final `/`-segment, e.g. `knee1`) selects just that cell even
+/// when the name is a prefix of another (`knee1` vs `knee12`); any
+/// other filter keeps every cell whose label contains it as a
+/// substring. Cells are only built (task sets only generated) when
+/// they survive the filter.
+pub fn parity_cells(ctx: &ExperimentCtx, filter: Option<&str>) -> Result<Vec<ReplayCell>> {
+    let knee_points = [1.0, 12.0];
+    let pool_points = [1usize, 4];
+    let kind_points = [PolicyKind::Fifo, PolicyKind::RtLm];
+    let mut labels = vec!["internal/aging".to_string(), "internal/static-slack".to_string()];
+    labels.extend(knee_points.iter().map(|knee| format!("internal/knee{knee:.0}")));
+    labels.extend(pool_points.iter().map(|w| format!("internal/cpu-workers{w}")));
+    labels.extend(
+        kind_points
+            .iter()
+            .map(|kind| format!("internal/dist-{}", kind.label().to_ascii_lowercase())),
+    );
+    let exact = filter
+        .map(|f| labels.iter().any(|l| l == f || l.ends_with(&format!("/{f}"))))
+        .unwrap_or(false);
+    let keep = |label: &str| match filter {
+        None => true,
+        Some(f) if exact => label == f || label.ends_with(&format!("/{f}")),
+        Some(f) => label.contains(f),
+    };
+    let mut cells = Vec::new();
+    if keep("internal/aging") || keep("internal/static-slack") {
+        let aging = aging_cell(ctx)?;
+        let slack = static_slack_cell(&aging);
+        if keep(&aging.label) {
+            cells.push(aging);
+        }
+        if keep(&slack.label) {
+            cells.push(slack);
+        }
+    }
+    let knees: Vec<f64> = knee_points
+        .into_iter()
+        .filter(|knee| keep(&format!("internal/knee{knee:.0}")))
+        .collect();
+    if !knees.is_empty() {
+        let tasks = knee_tasks(ctx)?;
+        for knee in knees {
+            cells.push(knee_cell(ctx, tasks.clone(), knee)?);
+        }
+    }
+    let pools: Vec<usize> = pool_points
+        .into_iter()
+        .filter(|workers| keep(&format!("internal/cpu-workers{workers}")))
+        .collect();
+    if !pools.is_empty() {
+        let tasks = cpu_workers_tasks(ctx)?;
+        for workers in pools {
+            cells.push(cpu_workers_cell(ctx, tasks.clone(), workers)?);
+        }
+    }
+    let kinds: Vec<PolicyKind> = kind_points
+        .into_iter()
+        .filter(|kind| keep(&format!("internal/dist-{}", kind.label().to_ascii_lowercase())))
+        .collect();
+    if !kinds.is_empty() {
+        let tasks = distribution_tasks(ctx)?;
+        for kind in kinds {
+            cells.push(distribution_cell(ctx, tasks.clone(), kind)?);
+        }
+    }
+    Ok(cells)
 }

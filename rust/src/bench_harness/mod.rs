@@ -2,9 +2,16 @@
 //! evaluation section. Each runner prints the same rows/series the paper
 //! reports (tables as ASCII tables, figures as labelled series/bars).
 //!
+//! Every runner executes its cells through the [`replay::ReplayCell`]
+//! abstraction, so any cell can also be replayed over the wall-clock
+//! threaded engine and diffed against the simulation (`rtlm bench
+//! --wire`, see [`replay`]).
+//!
 //! Invoked by `rtlm bench <experiment>` and the `paper_tables` bench.
 
 pub mod internal;
+pub mod replay;
 pub mod scenarios;
 
+pub use replay::{run_parity, CellParity, ParityTolerance, ReplayCell};
 pub use scenarios::{run_experiment, ExperimentCtx};

@@ -1,0 +1,687 @@
+//! Wire-path experiment parity: capture an experiment cell's inputs
+//! once, execute them on *either* engine backend, and diff the reports.
+//!
+//! A [`ReplayCell`] is everything one cell of the paper's evaluation
+//! grid needs to run: the task set, the lane fleet, the scheduling
+//! parameters, the policy kind, and the device/model tables the latency
+//! model is resolved against. Every experiment runner in
+//! [`super::scenarios`] / [`super::internal`] builds cells instead of
+//! calling the simulator directly, which is what makes the wire replay
+//! free: the same cell can run
+//!
+//! - through [`crate::sim::run_sim_lanes`] (virtual clock — the path
+//!   that produces the paper tables), or
+//! - through [`crate::server::serve_with_factory`] over a
+//!   [`crate::engine::ThreadedBackend`] with
+//!   [`crate::executor::modeled_factory`] executors (real injector /
+//!   dispatcher / lane-worker threads, modeled batch durations).
+//!
+//! [`run_parity`] runs both and [`check_parity`] diffs the reports into
+//! a [`CellParity`]: *exact-match* fields (task conservation, per-lane
+//! task counts, per-lane batch counts) and *toleranced* fields
+//! (response-time statistics, makespan, inference time) compared under
+//! a `--time-scale`-aware [`ParityTolerance`]. `rtlm bench --wire`
+//! replays the internal comparison cells this way and CI gates on a
+//! clean report.
+//!
+//! ## Why the exact-match fields are deterministic across backends
+//!
+//! The replay runs the cell's [`deterministic`](ReplayCell::deterministic)
+//! variant:
+//!
+//! 1. **Burst admission** — every arrival is injected before the first
+//!    dispatch (upfront injection; arrivals rebased to t = 0), so
+//!    "arrivals done" holds from the first pop, every pop runs forced,
+//!    and batch structure cannot race arrival timing.
+//! 2. **Dilated engine clock** — the threaded backend reports engine
+//!    time in virtual seconds (wall × time-scale), so the policy's
+//!    time-dependent priorities see the same timeline the simulator's
+//!    virtual clock provides.
+//! 3. **Backlog-covering reorder window** — `params.b` is raised so the
+//!    consolidation window spans the whole queued backlog; the λ-split
+//!    then depends only on the queued *set* (sorted by uncertainty),
+//!    not on the clock-sensitive priority ranking of a partial window.
+//!
+//! Under those three, routing happens at push time (a pure function of
+//! each task's uncertainty), non-consolidated pops always take
+//! `min(C, queue)` tasks, and consolidated pops split a set that both
+//! backends agree on — so per-lane task counts and per-lane batch
+//! counts are equal by construction, and any divergence is a real
+//! engine/back-end bug, not scheduling noise. Response-time statistics
+//! remain subject to wall-clock sleep/wakeup jitter (dilated by the
+//! time scale), which is what the toleranced comparison absorbs.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, ModelEntry, SchedParams};
+use crate::executor::modeled_factory;
+use crate::metrics::table::fmt_f;
+use crate::metrics::Table;
+use crate::scheduler::{LaneKind, LaneSet, Policy, PolicyKind, Task};
+use crate::server::{serve_with_factory, ServeOptions, ServeReport};
+use crate::sim::{run_sim_lanes, LatencyModel, SimResult};
+use crate::util::json::{obj, Json};
+
+/// One experiment cell, captured as data: executable on the virtual
+/// clock ([`run_sim`](Self::run_sim)) or over real threads
+/// ([`run_wire`](Self::run_wire)).
+#[derive(Clone)]
+pub struct ReplayCell {
+    /// Human-readable cell id, e.g. `internal/aging/dialogpt`.
+    pub label: String,
+    /// Which policy schedules the cell.
+    pub kind: PolicyKind,
+    /// Scheduler hyper-parameters (per-cell batch size included).
+    pub params: SchedParams,
+    /// Output-tokens→seconds coefficient of the primary lane's model
+    /// (what [`PolicyKind::build`] receives).
+    pub eta: f64,
+    /// The lane fleet the cell schedules.
+    pub lanes: LaneSet,
+    /// Model table every lane's variant resolves against.
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Device profile supplying latency multipliers and CPU workers.
+    pub dev: DeviceProfile,
+    /// The task set, arrival times included.
+    pub tasks: Vec<Task>,
+}
+
+impl ReplayCell {
+    /// A cell over the historical two-lane fleet (accelerator fallback +
+    /// CPU quarantine admitting `u > tau`), serving `model` on both
+    /// lanes — the shape every paper-grid cell has.
+    pub fn two_lane(
+        label: &str,
+        kind: PolicyKind,
+        params: SchedParams,
+        model: &ModelEntry,
+        tau: f64,
+        dev: DeviceProfile,
+        tasks: Vec<Task>,
+    ) -> ReplayCell {
+        ReplayCell {
+            label: label.to_string(),
+            kind,
+            params,
+            eta: model.eta,
+            lanes: LaneSet::two_lane(&model.name, tau),
+            models: BTreeMap::from([(model.name.clone(), model.clone())]),
+            dev,
+            tasks,
+        }
+    }
+
+    /// Same cell under a new label (cells built by shared helpers are
+    /// relabelled by the suites that register them).
+    pub fn labelled(mut self, label: &str) -> ReplayCell {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Build this cell's policy instance (fresh state per run).
+    pub fn policy(&self) -> Box<dyn Policy> {
+        self.kind.build(&self.params, self.eta, &self.lanes)
+    }
+
+    /// Execute the cell on the virtual-clock backend — exactly the
+    /// discrete-event simulation the experiment tables are produced by.
+    pub fn run_sim(&self, lat: &LatencyModel) -> Result<SimResult> {
+        let mut policy = self.policy();
+        run_sim_lanes(
+            self.tasks.clone(),
+            &mut *policy,
+            lat,
+            &self.lanes,
+            &self.models,
+            &self.dev,
+            &self.params,
+        )
+    }
+
+    /// Execute the cell over the wall-clock engine: real injector,
+    /// dispatcher and per-lane worker threads, modeled batch durations
+    /// compressed by `time_scale`, deterministic replay mode
+    /// ([`ServeOptions::deterministic`]) so the report reads in virtual
+    /// seconds, directly comparable against [`Self::run_sim`].
+    pub fn run_wire(&self, lat: &LatencyModel, time_scale: f64) -> Result<ServeReport> {
+        let mut policy = self.policy();
+        let factory =
+            modeled_factory(lat.clone(), self.models.clone(), self.dev.clone(), time_scale);
+        let opts = ServeOptions { time_scale, deterministic: true, ..Default::default() };
+        serve_with_factory(
+            self.tasks.clone(),
+            &mut *policy,
+            &self.params,
+            &self.lanes,
+            &opts,
+            factory,
+        )
+    }
+
+    /// The deterministic-replay variant of this cell (see the module
+    /// docs for why each transformation is needed): arrivals rebased to
+    /// a t = 0 burst (priority-point offsets preserved), tasks in
+    /// arrival order, and the consolidation reorder window widened to
+    /// cover the whole backlog.
+    pub fn deterministic(&self) -> ReplayCell {
+        let mut cell = self.clone();
+        cell.tasks
+            .sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        for t in &mut cell.tasks {
+            t.priority_point -= t.arrival;
+            t.arrival = 0.0;
+        }
+        let c_min = cell
+            .lanes
+            .iter()
+            .filter(|l| l.kind == LaneKind::Accelerator)
+            .map(|l| l.batch_size.unwrap_or(cell.params.batch_size).max(1))
+            .min()
+            .unwrap_or_else(|| cell.params.batch_size.max(1));
+        let need = cell.tasks.len() as f64 / c_min as f64 + 1.0;
+        cell.params.b = cell.params.b.max(need);
+        cell
+    }
+}
+
+/// The `--time-scale`-aware comparison budget for the toleranced fields
+/// of a parity diff.
+///
+/// A value passes when `|sim - wire| <= abs_secs + rel * max(|sim|,
+/// |wire|)`. The absolute term absorbs wall-clock sleep overshoot and
+/// thread wakeup latency, which the dilated engine clock multiplies by
+/// the time scale — so callers derive it from a *wall* slop budget via
+/// [`for_time_scale`](Self::for_time_scale).
+#[derive(Clone, Debug)]
+pub struct ParityTolerance {
+    /// Relative tolerance on each compared statistic.
+    pub rel: f64,
+    /// Absolute tolerance in engine (virtual) seconds.
+    pub abs_secs: f64,
+}
+
+impl ParityTolerance {
+    /// Budget from explicit knobs: `rel` relative tolerance plus
+    /// `wall_slop_ms` milliseconds of *wall* slop, dilated by the time
+    /// scale (the one place the dilation rule lives).
+    pub fn new(rel: f64, wall_slop_ms: f64, time_scale: f64) -> ParityTolerance {
+        ParityTolerance { rel, abs_secs: wall_slop_ms / 1e3 * time_scale.max(1.0) }
+    }
+
+    /// Default budget: 25% relative, plus 40 ms of wall slop dilated by
+    /// the time scale.
+    pub fn for_time_scale(time_scale: f64) -> ParityTolerance {
+        ParityTolerance::new(0.25, 40.0, time_scale)
+    }
+
+    /// Does `wire` agree with `sim` within this budget?
+    pub fn within(&self, sim: f64, wire: f64) -> bool {
+        (sim - wire).abs() <= self.abs_secs + self.rel * sim.abs().max(wire.abs())
+    }
+}
+
+/// One toleranced statistic of a parity diff.
+#[derive(Clone, Debug)]
+pub struct FieldCheck {
+    /// Statistic name, e.g. `mean_response`.
+    pub name: String,
+    /// Virtual-clock value (seconds).
+    pub sim: f64,
+    /// Wire value (virtual seconds, via the dilated clock).
+    pub wire: f64,
+    /// Whether the value passed the tolerance.
+    pub ok: bool,
+}
+
+impl FieldCheck {
+    /// `|sim - wire| / max(|sim|, |wire|)` (0 when both are 0).
+    pub fn rel_err(&self) -> f64 {
+        let scale = self.sim.abs().max(self.wire.abs());
+        if scale <= 0.0 {
+            0.0
+        } else {
+            (self.sim - self.wire).abs() / scale
+        }
+    }
+}
+
+/// The structured sim-vs-wire diff of one cell.
+#[derive(Clone, Debug)]
+pub struct CellParity {
+    /// The cell's label.
+    pub label: String,
+    /// Policy name both backends ran (a mismatch is itself a failure).
+    pub policy: String,
+    /// Task count of the cell.
+    pub n_tasks: usize,
+    /// Lane names, in `LaneId` order.
+    pub lanes: Vec<String>,
+    /// Dispatched batches per lane on the virtual clock (exact-match).
+    pub sim_batches: Vec<usize>,
+    /// Dispatched batches per lane on the wire (exact-match).
+    pub wire_batches: Vec<usize>,
+    /// Completed tasks per lane on the virtual clock (exact-match).
+    pub sim_lane_tasks: Vec<usize>,
+    /// Completed tasks per lane on the wire (exact-match).
+    pub wire_lane_tasks: Vec<usize>,
+    /// Toleranced statistics.
+    pub stats: Vec<FieldCheck>,
+    /// Every violated check, rendered human-readably; empty = clean.
+    pub failures: Vec<String>,
+}
+
+impl CellParity {
+    /// Did every exact and toleranced check pass?
+    pub fn clean(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// `name=sim/wire` per-lane batch table, e.g. `gpu=6/6 cpu=2/2`.
+    pub fn fmt_batches(&self) -> String {
+        self.lanes
+            .iter()
+            .zip(self.sim_batches.iter().zip(&self.wire_batches))
+            .map(|(name, (s, w))| format!("{name}={s}/{w}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+fn lane_task_counts(outcomes: &[crate::sim::results::TaskOutcome], n_lanes: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_lanes];
+    for o in outcomes {
+        if o.lane.index() < n_lanes {
+            counts[o.lane.index()] += 1;
+        }
+    }
+    counts
+}
+
+/// Diff a cell's virtual-clock and wire reports into a [`CellParity`].
+///
+/// Exact-match fields: policy name, total task count, per-lane task
+/// counts, per-lane batch counts. Toleranced fields (under `tol`):
+/// mean/p95/max response time, makespan, mean pure-inference time.
+pub fn check_parity(
+    label: &str,
+    n_tasks: usize,
+    sim: &SimResult,
+    wire: &ServeReport,
+    tol: &ParityTolerance,
+) -> CellParity {
+    let mut failures = Vec::new();
+    if sim.policy != wire.policy {
+        failures.push(format!("policy: sim '{}' != wire '{}'", sim.policy, wire.policy));
+    }
+    if sim.lanes != wire.lanes {
+        failures.push(format!("lanes: sim {:?} != wire {:?}", sim.lanes, wire.lanes));
+    }
+    if sim.outcomes.len() != n_tasks || wire.outcomes.len() != n_tasks {
+        failures.push(format!(
+            "tasks: expected {n_tasks}, sim completed {}, wire completed {}",
+            sim.outcomes.len(),
+            wire.outcomes.len()
+        ));
+    }
+
+    let n_lanes = sim.lanes.len().max(wire.lanes.len());
+    let sim_lane_tasks = lane_task_counts(&sim.outcomes, n_lanes);
+    let wire_lane_tasks = lane_task_counts(&wire.outcomes, n_lanes);
+    for (i, name) in sim.lanes.iter().enumerate() {
+        let (s, w) = (sim_lane_tasks[i], wire_lane_tasks[i]);
+        if s != w {
+            failures.push(format!("tasks[{name}]: sim {s} != wire {w}"));
+        }
+        let (sb, wb) = (
+            sim.n_batches.get(i).copied().unwrap_or(0),
+            wire.n_batches.get(i).copied().unwrap_or(0),
+        );
+        if sb != wb {
+            failures.push(format!("batches[{name}]: sim {sb} != wire {wb}"));
+        }
+    }
+
+    let mut sim_rt = sim.response_times();
+    let mut wire_rt = wire.response_times();
+    let wire_makespan = wire.outcomes.iter().map(|o| o.completion).fold(0.0, f64::max);
+    let wire_mean_infer = if wire.outcomes.is_empty() {
+        0.0
+    } else {
+        wire.outcomes.iter().map(|o| o.infer_secs).sum::<f64>() / wire.outcomes.len() as f64
+    };
+    let mut stats = Vec::new();
+    for (name, s, w) in [
+        ("mean_response", sim_rt.mean(), wire_rt.mean()),
+        ("p95_response", sim_rt.p95(), wire_rt.p95()),
+        ("max_response", sim_rt.max(), wire_rt.max()),
+        ("makespan", sim.makespan, wire_makespan),
+        ("mean_infer", sim.mean_infer_secs(), wire_mean_infer),
+    ] {
+        let ok = tol.within(s, w);
+        if !ok {
+            failures.push(format!(
+                "{name}: sim {} vs wire {} (|Δ| {} > {}·max + {} abs)",
+                fmt_f(s, 3),
+                fmt_f(w, 3),
+                fmt_f((s - w).abs(), 3),
+                fmt_f(tol.rel, 2),
+                fmt_f(tol.abs_secs, 3)
+            ));
+        }
+        stats.push(FieldCheck { name: name.to_string(), sim: s, wire: w, ok });
+    }
+
+    CellParity {
+        label: label.to_string(),
+        policy: sim.policy.clone(),
+        n_tasks,
+        lanes: sim.lanes.clone(),
+        sim_batches: sim.n_batches.clone(),
+        wire_batches: wire.n_batches.clone(),
+        sim_lane_tasks,
+        wire_lane_tasks,
+        stats,
+        failures,
+    }
+}
+
+/// Replay `cell` on both backends in deterministic mode and diff the
+/// reports (see the module docs for the determinism argument).
+pub fn run_parity(
+    cell: &ReplayCell,
+    lat: &LatencyModel,
+    time_scale: f64,
+    tol: &ParityTolerance,
+) -> Result<CellParity> {
+    let det = cell.deterministic();
+    let sim = det.run_sim(lat)?;
+    let wire = det.run_wire(lat, time_scale)?;
+    Ok(check_parity(&det.label, det.tasks.len(), &sim, &wire, tol))
+}
+
+/// Render the parity suite as the ASCII table `rtlm bench --wire`
+/// prints.
+pub fn render_parity(cells: &[CellParity]) -> String {
+    let mut table = Table::new(
+        "sim-vs-wire parity (batches exact, stats toleranced; values sim/wire)",
+        &["cell", "policy", "n", "batches", "mean s", "p95 s", "makespan s", "status"],
+    );
+    for c in cells {
+        let stat = |name: &str| -> String {
+            c.stats
+                .iter()
+                .find(|f| f.name == name)
+                .map(|f| format!("{}/{}", fmt_f(f.sim, 2), fmt_f(f.wire, 2)))
+                .unwrap_or_else(|| "-".into())
+        };
+        table.row(vec![
+            c.label.clone(),
+            c.policy.clone(),
+            c.n_tasks.to_string(),
+            c.fmt_batches(),
+            stat("mean_response"),
+            stat("p95_response"),
+            stat("makespan"),
+            if c.clean() { "ok".into() } else { format!("FAIL ({})", c.failures.len()) },
+        ]);
+    }
+    table.render()
+}
+
+/// Serialise the parity suite as the structured JSON report
+/// `scripts/parity_delta.py` renders into the CI step summary.
+pub fn parity_json(time_scale: f64, tol: &ParityTolerance, cells: &[CellParity]) -> Json {
+    let cell_json = |c: &CellParity| {
+        obj(vec![
+            ("label", Json::Str(c.label.clone())),
+            ("policy", Json::Str(c.policy.clone())),
+            ("n_tasks", Json::Num(c.n_tasks as f64)),
+            ("clean", Json::Bool(c.clean())),
+            (
+                "lanes",
+                Json::Arr(c.lanes.iter().map(|l| Json::Str(l.clone())).collect()),
+            ),
+            (
+                "sim_batches",
+                Json::Arr(c.sim_batches.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "wire_batches",
+                Json::Arr(c.wire_batches.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "sim_lane_tasks",
+                Json::Arr(c.sim_lane_tasks.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "wire_lane_tasks",
+                Json::Arr(c.wire_lane_tasks.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "stats",
+                Json::Arr(
+                    c.stats
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                ("name", Json::Str(f.name.clone())),
+                                ("sim", Json::Num(f.sim)),
+                                ("wire", Json::Num(f.wire)),
+                                ("ok", Json::Bool(f.ok)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "failures",
+                Json::Arr(c.failures.iter().map(|f| Json::Str(f.clone())).collect()),
+            ),
+        ])
+    };
+    obj(vec![
+        ("time_scale", Json::Num(time_scale)),
+        ("rel_tol", Json::Num(tol.rel)),
+        ("abs_secs", Json::Num(tol.abs_secs)),
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::LaneId;
+    use crate::sim::results::TaskOutcome;
+
+    fn outcome(id: u64, completion: f64, lane: LaneId) -> TaskOutcome {
+        TaskOutcome {
+            id,
+            arrival: 0.0,
+            completion,
+            priority_point: 5.0,
+            uncertainty: 10.0,
+            true_len: 10,
+            lane,
+            utype: "test".into(),
+            malicious: false,
+            infer_secs: completion / 2.0,
+        }
+    }
+
+    fn sim_result(n_batches: Vec<usize>, completions: &[(u64, f64, LaneId)]) -> SimResult {
+        let outcomes: Vec<TaskOutcome> =
+            completions.iter().map(|&(id, c, l)| outcome(id, c, l)).collect();
+        let makespan = outcomes.iter().map(|o| o.completion).fold(0.0, f64::max);
+        SimResult {
+            policy: "FIFO".into(),
+            outcomes,
+            makespan,
+            sched_wall_secs: 0.0,
+            lanes: vec!["gpu".into(), "cpu".into()],
+            n_batches,
+        }
+    }
+
+    fn wire_report(n_batches: Vec<usize>, completions: &[(u64, f64, LaneId)]) -> ServeReport {
+        let outcomes: Vec<TaskOutcome> =
+            completions.iter().map(|&(id, c, l)| outcome(id, c, l)).collect();
+        ServeReport {
+            policy: "FIFO".into(),
+            outcomes,
+            lanes: vec!["gpu".into(), "cpu".into()],
+            n_batches,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tolerance_is_rel_plus_abs() {
+        let tol = ParityTolerance { rel: 0.1, abs_secs: 0.5 };
+        assert!(tol.within(10.0, 10.0));
+        assert!(tol.within(10.0, 11.4)); // 1.4 <= 0.5 + 0.1*11.4
+        assert!(!tol.within(10.0, 12.0)); // 2.0 > 0.5 + 0.1*12.0
+        assert!(tol.within(0.0, 0.4)); // abs term alone
+        assert!(!tol.within(0.0, 0.6));
+        // symmetric in its arguments
+        assert_eq!(tol.within(3.0, 4.0), tol.within(4.0, 3.0));
+    }
+
+    #[test]
+    fn dilated_tolerance_scales_with_time() {
+        let t1 = ParityTolerance::for_time_scale(1.0);
+        let t50 = ParityTolerance::for_time_scale(50.0);
+        assert!(t50.abs_secs > t1.abs_secs * 40.0);
+        assert_eq!(t1.rel, t50.rel);
+    }
+
+    #[test]
+    fn matching_reports_are_clean() {
+        let done = [
+            (0, 1.0, LaneId::GPU),
+            (1, 1.0, LaneId::GPU),
+            (2, 3.0, LaneId::CPU),
+        ];
+        let sim = sim_result(vec![1, 1], &done);
+        let wire = wire_report(vec![1, 1], &done);
+        let parity =
+            check_parity("cell", 3, &sim, &wire, &ParityTolerance { rel: 0.1, abs_secs: 0.1 });
+        assert!(parity.clean(), "{:?}", parity.failures);
+        assert_eq!(parity.fmt_batches(), "gpu=1/1 cpu=1/1");
+        assert!(parity.stats.iter().all(|f| f.ok));
+    }
+
+    #[test]
+    fn batch_count_mismatch_is_exact_and_names_the_lane() {
+        let done = [(0, 1.0, LaneId::GPU), (1, 1.2, LaneId::GPU)];
+        let sim = sim_result(vec![1, 0], &done);
+        // same stats, one extra wire batch on the cpu lane: must fail
+        // even though every toleranced field agrees
+        let wire = wire_report(vec![1, 1], &done);
+        let parity = check_parity(
+            "cell",
+            2,
+            &sim,
+            &wire,
+            &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
+        );
+        assert!(!parity.clean());
+        assert!(
+            parity.failures.iter().any(|f| f.contains("batches[cpu]")),
+            "failure must name the diverging lane: {:?}",
+            parity.failures
+        );
+        assert!(parity.stats.iter().all(|f| f.ok), "stats were within tolerance");
+    }
+
+    #[test]
+    fn lane_routing_mismatch_is_exact() {
+        let sim = sim_result(vec![1, 1], &[(0, 1.0, LaneId::GPU), (1, 3.0, LaneId::CPU)]);
+        let wire = wire_report(vec![1, 1], &[(0, 1.0, LaneId::GPU), (1, 3.0, LaneId::GPU)]);
+        let parity = check_parity(
+            "cell",
+            2,
+            &sim,
+            &wire,
+            &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
+        );
+        assert!(parity.failures.iter().any(|f| f.contains("tasks[gpu]")), "{:?}", parity.failures);
+        assert!(parity.failures.iter().any(|f| f.contains("tasks[cpu]")));
+    }
+
+    #[test]
+    fn stat_outside_tolerance_fails_with_values_rendered() {
+        let sim = sim_result(vec![1, 0], &[(0, 1.0, LaneId::GPU)]);
+        let wire = wire_report(vec![1, 0], &[(0, 9.0, LaneId::GPU)]);
+        let parity =
+            check_parity("cell", 1, &sim, &wire, &ParityTolerance { rel: 0.1, abs_secs: 0.1 });
+        assert!(!parity.clean());
+        let failure = parity
+            .failures
+            .iter()
+            .find(|f| f.contains("mean_response"))
+            .expect("mean_response must be reported");
+        assert!(failure.contains("1.000") && failure.contains("9.000"), "{failure}");
+        let mean = parity.stats.iter().find(|f| f.name == "mean_response").unwrap();
+        assert!(!mean.ok);
+        assert!((mean.rel_err() - 8.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lost_task_is_reported() {
+        let sim = sim_result(vec![1, 0], &[(0, 1.0, LaneId::GPU), (1, 1.0, LaneId::GPU)]);
+        let wire = wire_report(vec![1, 0], &[(0, 1.0, LaneId::GPU)]);
+        let parity = check_parity(
+            "cell",
+            2,
+            &sim,
+            &wire,
+            &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
+        );
+        assert!(parity.failures.iter().any(|f| f.starts_with("tasks:")), "{:?}", parity.failures);
+    }
+
+    #[test]
+    fn render_and_json_cover_every_cell() {
+        let done = [(0, 1.0, LaneId::GPU)];
+        let sim = sim_result(vec![1, 0], &done);
+        let wire = wire_report(vec![1, 0], &done);
+        let tol = ParityTolerance { rel: 0.1, abs_secs: 0.1 };
+        let parity = check_parity("my-cell", 1, &sim, &wire, &tol);
+        let rendered = render_parity(std::slice::from_ref(&parity));
+        assert!(rendered.contains("my-cell") && rendered.contains("ok"), "{rendered}");
+        let json = parity_json(25.0, &tol, std::slice::from_ref(&parity));
+        let text = json.to_string();
+        let round = Json::parse(&text).expect("parity json parses");
+        assert_eq!(round.get("cells").idx(0).get("label").as_str(), Some("my-cell"));
+        assert_eq!(round.get("cells").idx(0).get("clean"), &Json::Bool(true));
+        assert_eq!(round.get("time_scale").as_f64(), Some(25.0));
+    }
+
+    #[test]
+    fn deterministic_variant_bursts_and_widens_window() {
+        use crate::scheduler::task::test_task;
+        let model = ModelEntry::stub("m", 0.05, 0.08);
+        let tasks: Vec<Task> = (0..40)
+            .map(|i| test_task(i as u64, 3.0 + i as f64 * 0.25, 8.0 + i as f64 * 0.25, 10.0))
+            .collect();
+        let cell = ReplayCell::two_lane(
+            "cell",
+            PolicyKind::RtLm,
+            SchedParams { batch_size: 8, ..Default::default() },
+            &model,
+            60.0,
+            DeviceProfile::edge_server(),
+            tasks,
+        );
+        let det = cell.deterministic();
+        assert!(det.tasks.iter().all(|t| t.arrival == 0.0));
+        // priority-point offsets preserved relative to arrival
+        assert!((det.tasks[0].priority_point - 5.0).abs() < 1e-9);
+        // the reorder window now covers the whole backlog on every lane
+        assert!(det.params.accumulate_len_for(8) >= det.tasks.len());
+        // the original cell is untouched
+        assert!(cell.tasks[0].arrival > 0.0);
+    }
+}

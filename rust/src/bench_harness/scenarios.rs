@@ -15,20 +15,27 @@ use crate::metrics::summary::{linregress, pearson};
 use crate::metrics::table::{bar_chart, fmt_f};
 use crate::metrics::{Samples, Table};
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{LaneSet, PolicyKind, Task};
-use crate::sim::{run_sim, LatencyModel, SimResult};
+use crate::scheduler::{PolicyKind, Task};
+use crate::sim::{LatencyModel, SimResult};
 use crate::uncertainty::Estimator;
 use crate::workload::subsets::{self, Variance};
 use crate::workload::{corpus, malicious, ArrivalTrace, TaskFactory, WorkItem};
 
+use super::replay::ReplayCell;
+
 /// Shared context for all experiments.
 pub struct ExperimentCtx {
+    /// Artifact store the corpora/regressor/manifest were loaded from.
     pub store: Arc<ArtifactStore>,
+    /// Latency model every cell simulates against.
     pub lat: LatencyModel,
+    /// Baseline scheduler parameters (per-model C_f applied on top).
     pub params: SchedParams,
+    /// The uncertainty estimator (RULEGEN features + LW regressor).
     pub estimator: Estimator,
     /// Tasks per simulated run (paper uses full test sets; scale knob).
     pub n_tasks: usize,
+    /// Base RNG seed for workload construction.
     pub seed: u64,
     /// Per-model optimal batch size C_f (Fig. 8a decision).
     pub batch_sizes: BTreeMap<String, usize>,
@@ -40,6 +47,8 @@ pub struct ExperimentCtx {
 }
 
 impl ExperimentCtx {
+    /// Load corpora, fit offline decisions (per-model C_f and tau), and
+    /// seal the shared experiment context.
     pub fn new(store: Arc<ArtifactStore>, n_tasks: usize, seed: u64) -> Result<ExperimentCtx> {
         let m = &store.manifest;
         let lat = LatencyModel::load_or_analytic(m)?;
@@ -87,18 +96,22 @@ impl ExperimentCtx {
         })
     }
 
+    /// The artifact manifest.
     pub fn manifest(&self) -> &crate::config::Manifest {
         &self.store.manifest
     }
 
+    /// Look up one model entry by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.store.manifest.model(name)
     }
 
+    /// Every test-set work item, across datasets.
     pub fn all_test_items(&self) -> Vec<WorkItem> {
         self.test_items.values().flatten().cloned().collect()
     }
 
+    /// The test items of one dataset.
     pub fn test_items(&self, dataset: &str) -> Result<&[WorkItem]> {
         self.test_items
             .get(dataset)
@@ -106,14 +119,17 @@ impl ExperimentCtx {
             .ok_or_else(|| anyhow!("unknown dataset {dataset}"))
     }
 
+    /// The training split (offline decisions are fit on it).
     pub fn train_items(&self) -> &[WorkItem] {
         &self.train_items
     }
 
+    /// The Fig. 1a observation set.
     pub fn observation_items(&self) -> &[WorkItem] {
         &self.observation
     }
 
+    /// Scheduler parameters with the model's optimal batch size C_f.
     pub fn params_for(&self, model: &str) -> SchedParams {
         SchedParams {
             batch_size: self.batch_sizes.get(model).copied().unwrap_or(16),
@@ -189,7 +205,46 @@ impl ExperimentCtx {
         factory.build_all(&chosen, &trace, model, false)
     }
 
-    /// Run one policy over a prepared task set.
+    /// Capture one (model, tasks, policy, device) grid cell on the
+    /// default two-lane fleet, with this context's offline decisions
+    /// (per-model batch size C_f, malicious threshold tau).
+    pub fn cell(
+        &self,
+        model: &ModelEntry,
+        tasks: Vec<Task>,
+        kind: PolicyKind,
+        dev: &DeviceProfile,
+    ) -> ReplayCell {
+        let params = self.params_for(&model.name);
+        let tau = self.taus.get(&model.name).copied().unwrap_or(f64::INFINITY);
+        self.cell_with(model, tasks, kind, dev, params, tau)
+    }
+
+    /// [`Self::cell`] with explicit scheduler parameters and offload
+    /// threshold — the parameter-study and ablation runners override
+    /// them per cell.
+    pub fn cell_with(
+        &self,
+        model: &ModelEntry,
+        tasks: Vec<Task>,
+        kind: PolicyKind,
+        dev: &DeviceProfile,
+        params: SchedParams,
+        tau: f64,
+    ) -> ReplayCell {
+        ReplayCell::two_lane(
+            &format!("{}/{}", model.name, kind.label()),
+            kind,
+            params,
+            model,
+            tau,
+            dev.clone(),
+            tasks,
+        )
+    }
+
+    /// Run one policy over a prepared task set (one grid cell, on the
+    /// virtual-clock backend via the cell abstraction).
     pub fn run_policy(
         &self,
         model: &ModelEntry,
@@ -197,10 +252,9 @@ impl ExperimentCtx {
         kind: PolicyKind,
         dev: &DeviceProfile,
     ) -> SimResult {
-        let params = self.params_for(&model.name);
-        let tau = self.taus.get(&model.name).copied().unwrap_or(f64::INFINITY);
-        let mut policy = kind.build(&params, model.eta, &LaneSet::two_lane(&model.name, tau));
-        run_sim(tasks, &mut *policy, &self.lat, model, dev, &params)
+        self.cell(model, tasks, kind, dev)
+            .run_sim(&self.lat)
+            .expect("a two-lane grid cell resolves its own model table")
     }
 }
 
@@ -220,11 +274,13 @@ pub fn optimal_batch(lat: &LatencyModel, model: &str) -> usize {
 // experiment dispatch
 // ===========================================================================
 
+/// Every experiment name `rtlm bench` accepts (besides `all`).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1a", "fig1b", "fig2", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "table3",
     "table4", "fig10", "fig11", "fig12", "fig13", "fig14", "table6", "table7", "internal",
 ];
 
+/// Dispatch one experiment (or `all`) by name.
 pub fn run_experiment(ctx: &ExperimentCtx, name: &str) -> Result<()> {
     match name {
         "fig1a" => fig1a(ctx),
@@ -475,9 +531,16 @@ fn fig4(ctx: &ExperimentCtx) -> Result<()> {
         let mut misses = Vec::new();
         let mut orders = Vec::new();
         for kind in [PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Up] {
-            let mut policy =
-                kind.build(&params, 0.1, &LaneSet::two_lane(&model.name, f64::INFINITY));
-            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            let cell = ReplayCell::two_lane(
+                "fig4",
+                kind,
+                params.clone(),
+                &model,
+                f64::INFINITY,
+                dev.clone(),
+                tasks.clone(),
+            );
+            let r = cell.run_sim(&lat)?;
             let mut order: Vec<(f64, u64)> =
                 r.outcomes.iter().map(|o| (o.completion, o.id)).collect();
             order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -598,9 +661,16 @@ fn fig5(ctx: &ExperimentCtx) -> Result<()> {
         let mut misses = Vec::new();
         let mut makespans = Vec::new();
         for kind in [PolicyKind::Hpf, PolicyKind::UpC] {
-            let mut policy =
-                kind.build(&params, 0.1, &LaneSet::two_lane(&model.name, f64::INFINITY));
-            let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
+            let cell = ReplayCell::two_lane(
+                "fig5",
+                kind,
+                params.clone(),
+                &model,
+                f64::INFINITY,
+                dev.clone(),
+                tasks.clone(),
+            );
+            let r = cell.run_sim(&lat)?;
             misses.push(r.miss_count());
             makespans.push(r.makespan);
             let busy: f64 = {
@@ -850,9 +920,9 @@ fn fig13(ctx: &ExperimentCtx) -> Result<()> {
             params.alpha = alpha;
             params.b = 2.0;
             let tau = ctx.taus[&name];
-            let mut policy =
-                PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&name, tau));
-            let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
+            let cell =
+                ctx.cell_with(model, tasks.clone(), PolicyKind::RtLm, &dev, params, tau);
+            let r = cell.run_sim(&ctx.lat)?;
             series.push(r.peak_mean_response());
         }
         let max_dev = series.iter().cloned().fold(f64::MIN, f64::max)
@@ -882,9 +952,9 @@ fn fig13(ctx: &ExperimentCtx) -> Result<()> {
             let mut params = ctx.params_for(&name);
             params.b = b;
             let tau = ctx.taus[&name];
-            let mut policy =
-                PolicyKind::RtLm.build(&params, model.eta, &LaneSet::two_lane(&name, tau));
-            let r = run_sim(tasks.clone(), &mut *policy, &ctx.lat, model, &dev, &params);
+            let cell =
+                ctx.cell_with(model, tasks.clone(), PolicyKind::RtLm, &dev, params, tau);
+            let r = cell.run_sim(&ctx.lat)?;
             series.push(r.peak_mean_response());
         }
         let max_dev = series.iter().cloned().fold(f64::MIN, f64::max)

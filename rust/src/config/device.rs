@@ -5,6 +5,7 @@
 /// A simulated execution platform.
 #[derive(Clone, Debug)]
 pub struct DeviceProfile {
+    /// Profile name as accepted by `--device`.
     pub name: String,
     /// Multiplier on the accelerator-lane latency model (1.0 = the
     /// calibrated edge-server profile).
@@ -69,6 +70,8 @@ impl DeviceProfile {
         }
     }
 
+    /// Look a profile up by CLI name (`edge-server`/`edge`,
+    /// `agx-xavier`/`xavier`/`agx`).
     pub fn by_name(name: &str) -> anyhow::Result<DeviceProfile> {
         match name {
             "edge-server" | "edge" => Ok(Self::edge_server()),

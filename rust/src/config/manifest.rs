@@ -13,10 +13,15 @@ use crate::util::json::Json;
 /// One transformer LM variant.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Manifest model name (e.g. "dialogpt").
     pub name: String,
+    /// Transformer depth.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
     /// Output-tokens -> seconds coefficient (paper's eta_f).
     pub eta: f64,
@@ -24,8 +29,11 @@ pub struct ModelEntry {
     pub phi: f64,
     /// Length-oracle calibration (see corpus.py).
     pub gamma: f64,
+    /// Length-oracle offset (see corpus.py).
     pub delta: f64,
+    /// Weights bundle path.
     pub weights: PathBuf,
+    /// Parameter order the lowered HLO expects.
     pub param_names: Vec<String>,
     /// (batch, seq) -> HLO path.
     pub prefill: BTreeMap<(usize, usize), PathBuf>,
@@ -60,6 +68,7 @@ impl ModelEntry {
         }
     }
 
+    /// Per-head attention width.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -75,52 +84,90 @@ impl ModelEntry {
     }
 }
 
+/// The trained LW regressor's artifact entry.
 #[derive(Clone, Debug)]
 pub struct RegressorEntry {
+    /// Weights bundle path.
     pub weights: PathBuf,
+    /// Parameter order the lowered HLO expects.
     pub param_names: Vec<String>,
+    /// MLP layer widths (7 -> ... -> 1).
     pub layer_sizes: Vec<usize>,
+    /// batch -> lowered-forward HLO path.
     pub hlo: BTreeMap<usize, PathBuf>,
+    /// Fig. 2c weighted-rule baseline coefficients.
     pub weighted_rule_coef: Vec<f64>,
+    /// Fig. 2c weighted-rule baseline intercept.
     pub weighted_rule_intercept: f64,
+    /// Wall seconds the python training run took (Table VI).
     pub train_seconds: f64,
+    /// Final training MSE (diagnostics).
     pub final_train_mse: f64,
 }
 
 /// Per-uncertainty-type length model (mean, std) mirrored from python.
 #[derive(Clone, Debug)]
 pub struct LengthModel {
+    /// type -> (mean, std) output-length distribution.
     pub per_type: BTreeMap<String, (f64, f64)>,
+    /// Output-length dependence on input length.
     pub input_coef: f64,
+    /// Gaussian noise around the modeled mean.
     pub noise_std: f64,
 }
 
+/// The parsed `manifest.json` contract.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifacts directory the manifest was loaded from.
     pub root: PathBuf,
+    /// Vocabulary size shared by every model.
     pub vocab_size: usize,
+    /// Padding token id.
     pub pad_id: i32,
+    /// Beginning-of-sequence token id.
     pub bos_id: i32,
+    /// End-of-sequence token id.
     pub eos_id: i32,
+    /// Unknown-word token id.
     pub unk_id: i32,
+    /// Maximum total sequence length any HLO was lowered for.
     pub seq_max: usize,
+    /// Input truncation length (tokens).
     pub max_input_len: usize,
+    /// Upper bound on generated lengths (u_scale, quarantine cap).
     pub max_output_len: usize,
+    /// Lower bound on generated lengths.
     pub min_output_len: usize,
+    /// RULEGEN feature names, in feature-vector order.
     pub feature_names: Vec<String>,
+    /// Normalisation scales per feature.
     pub feature_scales: Vec<f64>,
+    /// The six uncertainty types of Fig. 1a.
     pub uncertainty_types: Vec<String>,
+    /// Length-oracle constants mirrored from python.
     pub length_model: LengthModel,
+    /// Prefill batch buckets HLO was lowered for.
     pub prefill_batch_buckets: Vec<usize>,
+    /// Prefill sequence buckets HLO was lowered for.
     pub prefill_seq_buckets: Vec<usize>,
+    /// Decode batch buckets HLO was lowered for.
     pub decode_batch_buckets: Vec<usize>,
+    /// Every model variant, keyed by name.
     pub models: BTreeMap<String, ModelEntry>,
+    /// The LW regressor entry.
     pub regressor: RegressorEntry,
+    /// Lexicon JSON path.
     pub lexicon: PathBuf,
+    /// dataset -> training-split JSONL path.
     pub corpus_train: BTreeMap<String, PathBuf>,
+    /// dataset -> test-split JSONL path.
     pub corpus_test: BTreeMap<String, PathBuf>,
+    /// Fig. 1a observation-set JSONL path.
     pub corpus_observation: PathBuf,
+    /// Tokenizer/tagger/RULEGEN golden-file path.
     pub golden_textproc: PathBuf,
+    /// Was this a `--quick` build (reduced buckets/corpora)?
     pub quick: bool,
 }
 
@@ -288,12 +335,14 @@ impl Manifest {
         })
     }
 
+    /// Look up one model entry by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
             .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys()))
     }
 
+    /// Every model name, in manifest order.
     pub fn model_names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }

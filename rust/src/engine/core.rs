@@ -45,6 +45,7 @@ use crate::sim::results::TaskOutcome;
 /// One completed task inside a [`BatchDone`].
 #[derive(Debug)]
 pub struct TaskDone {
+    /// Id of the completed task.
     pub id: u64,
     /// Completion time on the engine clock.
     pub at: f64,
@@ -62,7 +63,9 @@ pub struct TaskDone {
 /// the whole batch is done.
 #[derive(Debug)]
 pub struct BatchDone {
+    /// Lane the batch ran on (free again once this is processed).
     pub lane: LaneId,
+    /// Per-task completions (order unspecified).
     pub completions: Vec<TaskDone>,
     /// Pure model-inference seconds of the whole batch (counted once,
     /// not per task).
@@ -129,6 +132,7 @@ pub type OnComplete<'a> = dyn FnMut(&TaskOutcome, &[i32]) + 'a;
 /// Backend-agnostic outcome of one serving run.
 #[derive(Debug, Default)]
 pub struct EngineReport {
+    /// Name the policy reported for itself.
     pub policy: String,
     /// Per-task outcomes. Empty in streaming mode (an open stream with a
     /// completion callback attached): a long-lived server hands results

@@ -9,6 +9,8 @@
 //! CPU quarantine pools). A `run_engine` drive of this backend is
 //! exactly the discrete-event simulation the paper-scale experiments
 //! use.
+//!
+//! [`LaneSpec`]: crate::scheduler::LaneSpec
 
 use std::collections::BTreeMap;
 
@@ -24,7 +26,9 @@ use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
 /// draws from and how it executes a batch.
 #[derive(Clone, Debug)]
 pub struct SimLane {
+    /// Device kind: fused batches vs intra-batch worker pool.
     pub kind: LaneKind,
+    /// The model variant whose latency curves this lane draws from.
     pub model: ModelEntry,
     /// Intra-batch workers ([`LaneKind::Cpu`] lanes only).
     pub workers: usize,
@@ -61,6 +65,7 @@ struct InFlight {
     done: BatchDone,
 }
 
+/// The virtual-clock [`ExecutionBackend`] over a [`LatencyModel`].
 pub struct SimBackend<'a> {
     /// Remaining arrivals, sorted ascending by arrival time.
     trace: std::vec::IntoIter<Task>,

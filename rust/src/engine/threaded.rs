@@ -12,6 +12,7 @@
 //! ever crosses threads.
 //!
 //! [`BatchExecutor`]: crate::executor::BatchExecutor
+//! [`LaneSpec`]: crate::scheduler::LaneSpec
 
 use std::sync::mpsc;
 use std::thread;
@@ -104,12 +105,25 @@ fn lane_worker(
     }
 }
 
+/// The wall-clock [`ExecutionBackend`]: injector / producer threads feed
+/// arrivals, one worker thread per lane executes batches.
 pub struct ThreadedBackend {
     event_rx: mpsc::Receiver<Event>,
     /// One batch channel per lane, indexed by [`LaneId`]; `None` after
     /// [`finish`](Self::finish) begins teardown.
     lane_txs: Vec<Option<mpsc::Sender<Batch>>>,
     epoch: Instant,
+    /// Engine-clock dilation factor: every engine-facing time this
+    /// backend reports (`now()`, arrival stamps, completion stamps,
+    /// `infer_secs`) is wall-seconds-since-epoch multiplied by this, and
+    /// `wait` deadlines are divided by it before sleeping. With the
+    /// executor sleeping modeled durations compressed by the same
+    /// factor, the engine — and the policy's time-dependent priorities —
+    /// observe the *virtual* (uncompressed) timeline, which is what
+    /// makes wire replays comparable 1:1 against the virtual-clock
+    /// simulator (see `bench_harness::replay`). `1.0` (the live-serving
+    /// default) reports plain wall seconds.
+    clock_scale: f64,
     stream_closed: bool,
     injector: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -159,6 +173,7 @@ impl ThreadedBackend {
             event_rx,
             lane_txs,
             epoch: Instant::now(),
+            clock_scale: 1.0,
             stream_closed: false,
             injector: None,
             workers,
@@ -181,7 +196,26 @@ impl ThreadedBackend {
         time_scale: f64,
         inject_upfront: bool,
     ) -> Result<ThreadedBackend> {
+        Self::start_scaled(tasks, factory, lanes, time_scale, inject_upfront, 1.0)
+    }
+
+    /// [`start`](Self::start) with an explicit engine-clock dilation
+    /// factor. With `clock_scale = time_scale` the engine observes the
+    /// virtual (uncompressed) timeline while wall time runs compressed —
+    /// the deterministic-replay configuration the sim-vs-wire parity
+    /// harness uses ([`crate::bench_harness::replay`]); the ξ wait
+    /// interval must then *not* be pre-compressed by the caller, since
+    /// the engine already compares it against virtual clock readings.
+    pub fn start_scaled(
+        tasks: Vec<Task>,
+        factory: ExecutorFactory,
+        lanes: &LaneSet,
+        time_scale: f64,
+        inject_upfront: bool,
+        clock_scale: f64,
+    ) -> Result<ThreadedBackend> {
         let (mut backend, event_tx) = Self::spawn_lanes(factory, lanes)?;
+        backend.clock_scale = clock_scale.max(1e-9);
         let epoch = backend.epoch;
         let time_scale = time_scale.max(1e-9);
         if inject_upfront {
@@ -225,8 +259,9 @@ impl ThreadedBackend {
         Ok((backend, handle))
     }
 
-    /// Total wall seconds since the post-init epoch, then shut the lane
-    /// workers and injector down.
+    /// Total wall seconds since the post-init epoch (undilated even when
+    /// a `clock_scale` is set), then shut the lane workers and injector
+    /// down.
     pub fn finish(mut self) -> f64 {
         let wall = self.epoch.elapsed().as_secs_f64();
         for tx in &mut self.lane_txs {
@@ -244,20 +279,35 @@ impl ThreadedBackend {
     fn apply(&mut self, event: Event, step: &mut Step) -> Result<()> {
         match event {
             Event::Arrival(mut task, arrived) => {
-                // rebase to the dispatcher clock so response times are real
+                // rebase to the dispatcher clock so response times are
+                // real (dilated to engine seconds first)
+                let arrived = arrived * self.clock_scale;
                 task.priority_point = arrived + (task.priority_point - task.arrival);
                 task.arrival = arrived;
                 step.arrivals.push(task);
             }
             Event::Done(lane, reports) => {
-                let done = self.epoch.elapsed().as_secs_f64();
+                let done = self.epoch.elapsed().as_secs_f64() * self.clock_scale;
+                // Per-task completion times: each report is backdated by
+                // its gap to the batch's *last* report, so a CPU-lane
+                // worker pool's intra-batch completions land at their
+                // real times (the simulator's per-task worker model)
+                // instead of all at batch end. Single-report accelerator
+                // batches have zero gap and stay stamped at `done`.
+                let batch_wall = reports
+                    .iter()
+                    .map(|r| r.end_offset_secs)
+                    .fold(0.0, f64::max);
                 let mut completions = Vec::new();
                 let mut batch_infer_secs = 0.0;
                 for rep in reports {
-                    let ExecReport { task_ids, outputs, infer_secs, .. } = rep;
+                    let ExecReport { task_ids, outputs, infer_secs, end_offset_secs, .. } = rep;
+                    // executor-reported wall seconds -> engine seconds
+                    let infer_secs = infer_secs * self.clock_scale;
                     batch_infer_secs += infer_secs;
+                    let at = done - (batch_wall - end_offset_secs) * self.clock_scale;
                     for (id, output) in task_ids.into_iter().zip(outputs) {
-                        completions.push(TaskDone { id, at: done, infer_secs, output });
+                        completions.push(TaskDone { id, at, infer_secs, output });
                     }
                 }
                 step.done.push(BatchDone { lane, completions, batch_infer_secs });
@@ -278,7 +328,7 @@ impl ExecutionBackend for ThreadedBackend {
     }
 
     fn now(&mut self) -> f64 {
-        self.epoch.elapsed().as_secs_f64()
+        self.epoch.elapsed().as_secs_f64() * self.clock_scale
     }
 
     fn submit(&mut self, batch: Batch) -> Result<()> {
@@ -296,7 +346,10 @@ impl ExecutionBackend for ThreadedBackend {
         let disconnected = || anyhow!("all lane workers exited with tasks outstanding");
         let first = match deadline {
             Some(d) => {
-                let timeout = (d - self.epoch.elapsed().as_secs_f64()).max(0.0);
+                // the deadline arrives in engine (possibly dilated)
+                // seconds; sleep the wall-clock equivalent
+                let timeout =
+                    (d / self.clock_scale - self.epoch.elapsed().as_secs_f64()).max(0.0);
                 match self.event_rx.recv_timeout(Duration::from_secs_f64(timeout)) {
                     Ok(event) => Some(event),
                     Err(mpsc::RecvTimeoutError::Timeout) => None,

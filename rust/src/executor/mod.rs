@@ -33,6 +33,7 @@ use crate::sim::LatencyModel;
 /// batch — quarantine executors emit one report per task).
 #[derive(Debug)]
 pub struct ExecReport {
+    /// Ids of the tasks this report covers.
     pub task_ids: Vec<u64>,
     /// Generated token ids per task (order matches `task_ids`).
     pub outputs: Vec<Vec<i32>>,
@@ -40,6 +41,13 @@ pub struct ExecReport {
     pub infer_secs: f64,
     /// Decode steps executed.
     pub steps: usize,
+    /// Wall seconds from batch-execution start to this report's
+    /// completion. CPU-kind executors emit one report per task, so this
+    /// reconstructs *intra-batch* completion times on the wire — the
+    /// threaded backend backdates each completion by the gap to the
+    /// batch's last report, matching the simulator's per-task worker
+    /// model instead of stamping the whole batch at its end.
+    pub end_offset_secs: f64,
 }
 
 /// A lane's execution strategy. Accelerator-kind executors return one
@@ -49,6 +57,7 @@ pub struct ExecReport {
 /// completions — that is what the TCP front-end decodes into reply
 /// text — so order must match `task_ids`.
 pub trait BatchExecutor {
+    /// Execute one dispatched batch to completion and report what ran.
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
 }
 
@@ -61,7 +70,9 @@ pub type ExecutorFactory =
 
 /// Real execution over PJRT artifacts, shaped by the lane's kind.
 pub struct PjrtExecutor {
+    /// The lane's own PJRT session (born on the lane thread).
     pub session: Arc<LmSession>,
+    /// Device kind shaping batch execution (fused vs per-task).
     pub kind: LaneKind,
 }
 
@@ -93,10 +104,15 @@ impl BatchExecutor for PjrtExecutor {
 /// `SimBackend` models, so the modeled wire makespan matches the
 /// simulated intra-batch makespan.
 pub struct ModeledExecutor {
+    /// Latency curves batch durations are drawn from.
     pub lat: LatencyModel,
+    /// The lane's model variant (latency-curve key + η).
     pub model: ModelEntry,
+    /// Device profile scaling the modeled durations.
     pub dev: DeviceProfile,
+    /// Sleep compression factor (matches the arrival-trace compression).
     pub time_scale: f64,
+    /// Device kind shaping batch execution (fused vs worker pool).
     pub kind: LaneKind,
     /// Intra-batch workers (CPU-kind lanes).
     pub workers: usize,
@@ -113,9 +129,11 @@ impl ModeledExecutor {
     }
 
     /// Fan one quarantine batch across the worker pool. Returns one
-    /// report per task, in task order.
+    /// report per task, in task order, each stamped with its own
+    /// completion offset (workers finish at different times).
     fn execute_cpu_pool(&self, batch: &Batch) -> Vec<ExecReport> {
         let workers = self.workers.max(1).min(batch.tasks.len().max(1));
+        let t0 = std::time::Instant::now();
         let next = AtomicUsize::new(0);
         let reports: Mutex<Vec<(usize, ExecReport)>> =
             Mutex::new(Vec::with_capacity(batch.tasks.len()));
@@ -136,6 +154,7 @@ impl ModeledExecutor {
                         outputs: vec![Vec::new()],
                         infer_secs: slept,
                         steps: task.true_len,
+                        end_offset_secs: t0.elapsed().as_secs_f64(),
                     };
                     reports.lock().unwrap().push((i, report));
                 });
@@ -158,6 +177,7 @@ impl BatchExecutor for ModeledExecutor {
                     outputs: vec![Vec::new(); batch.tasks.len()],
                     infer_secs: slept,
                     steps: batch.max_true_len(),
+                    end_offset_secs: slept,
                 }])
             }
             LaneKind::Cpu => Ok(self.execute_cpu_pool(batch)),
@@ -204,6 +224,7 @@ impl BatchExecutor for InstantExecutor {
             outputs: vec![Vec::new(); batch.tasks.len()],
             infer_secs: 0.0,
             steps: 0,
+            end_offset_secs: 0.0,
         }])
     }
 }
@@ -212,18 +233,21 @@ impl BatchExecutor for InstantExecutor {
 pub fn execute_gpu(session: &Arc<LmSession>, batch: &Batch) -> Result<ExecReport> {
     let prompts: Vec<Vec<i32>> = batch.tasks.iter().map(|t| t.prompt.clone()).collect();
     let lens: Vec<usize> = batch.tasks.iter().map(|t| t.true_len.max(1)).collect();
+    let t0 = std::time::Instant::now();
     let gen = session.generate(&prompts, &lens)?;
     Ok(ExecReport {
         task_ids: batch.tasks.iter().map(|t| t.id).collect(),
         outputs: gen.tokens,
         infer_secs: gen.prefill_secs + gen.decode_secs,
         steps: gen.steps,
+        end_offset_secs: t0.elapsed().as_secs_f64(),
     })
 }
 
 /// Run a batch on a quarantine lane: tasks sequentially at batch 1.
 /// Returns one report per task so completions stream out one at a time.
 pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecReport>> {
+    let t0 = std::time::Instant::now();
     let mut reports = Vec::with_capacity(batch.tasks.len());
     for task in &batch.tasks {
         let gen = session.generate(
@@ -235,6 +259,7 @@ pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecRe
             outputs: gen.tokens,
             infer_secs: gen.prefill_secs + gen.decode_secs,
             steps: gen.steps,
+            end_offset_secs: t0.elapsed().as_secs_f64(),
         });
     }
     Ok(reports)

@@ -17,6 +17,10 @@
 //! See `DESIGN.md` for the paper-to-module map and the substitutions made
 //! for unavailable hardware/data.
 
+// Every public item carries docs; CI promotes this (and rustdoc's
+// broken-intra-doc-link lints) to errors via -D warnings.
+#![warn(missing_docs)]
+
 pub mod bench_harness;
 pub mod config;
 pub mod engine;

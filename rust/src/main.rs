@@ -118,27 +118,7 @@ fn run(args: &Args) -> Result<()> {
         "loadgen" => loadgen(args),
         "score" => score(args),
         _ => {
-            println!(
-                "rtlm — uncertainty-aware resource management for real-time LM serving\n\n\
-                 usage: rtlm <command> [--artifacts DIR] [options]\n\n\
-                 commands:\n\
-                 \x20 check                      validate artifacts, smoke inference\n\
-                 \x20 calibrate [--reps N]       measure PJRT latencies -> calib.json\n\
-                 \x20 bench <exp|all> [--n N]    regenerate paper experiments: {exps}\n\
-                 \x20 sim [--model M] [--policy P] [--n N] [--device D] [--variance V]\n\
-                 \x20 serve [--model M] [--policy P] [--n N] [--time-scale S] [--backend pjrt|modeled]\n\
-                 \x20     [--variance V] [--lanes SPEC] [--require-all-lanes]\n\
-                 \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
-                 \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
-                 \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
-                 \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
-                 \x20 score <text...>            print RULEGEN features + u_J\n\n\
-                 --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
-                 (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H;\n\
-                 thresholds take numbers, inf, tau, or qP quantiles), or @lanes.json.\n\
-                 e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"",
-                exps = EXPERIMENTS.join(",")
-            );
+            println!("{}", rtlm::util::cli::help_text(EXPERIMENTS));
             Ok(())
         }
     }
@@ -239,6 +219,11 @@ fn calibrate(args: &Args) -> Result<()> {
 fn bench(args: &Args) -> Result<()> {
     let root = artifacts_root(args);
     let store = Arc::new(ArtifactStore::open(&root)?);
+    // `--wire FILTER` parses as an option; a bare trailing `--wire` as a
+    // flag — accept both
+    if args.flag("wire") || args.get("wire").is_some() {
+        return bench_wire(args, store);
+    }
     let n = args.get_usize("n", 400)?;
     let seed = args.get_u64("seed", 7)?;
     let ctx = ExperimentCtx::new(store, n, seed)?;
@@ -248,6 +233,65 @@ fn bench(args: &Args) -> Result<()> {
         .map(String::as_str)
         .unwrap_or("all");
     run_experiment(&ctx, exp)
+}
+
+/// `rtlm bench --wire`: replay the internal comparison cells on the
+/// virtual-clock and threaded backends, diff each pair of reports, and
+/// exit nonzero unless every cell is clean (the CI parity gate).
+fn bench_wire(args: &Args, store: Arc<ArtifactStore>) -> Result<()> {
+    use rtlm::bench_harness::internal::parity_cells;
+    use rtlm::bench_harness::replay::{parity_json, render_parity, run_parity, ParityTolerance};
+
+    // wire replays run each cell twice (and the threaded one in real,
+    // if compressed, time): default to a leaner grid than `bench`
+    let n = args.get_usize("n", 64)?;
+    let seed = args.get_u64("seed", 7)?;
+    let time_scale = args.get_f64("time-scale", 25.0)?;
+    let ctx = ExperimentCtx::new(store, n, seed)?;
+    let mut tol = ParityTolerance::for_time_scale(time_scale);
+    tol.rel = args.get_f64("parity-rel", tol.rel)?;
+    // the wall-slop default (and its dilation rule) lives in
+    // ParityTolerance; only rebuild when the flag is explicitly given
+    if args.get("parity-slop-ms").is_some() {
+        tol = ParityTolerance::new(tol.rel, args.get_f64("parity-slop-ms", 0.0)?, time_scale);
+    }
+    let filter = args
+        .get("wire")
+        .or_else(|| args.positional.get(1).map(String::as_str))
+        .filter(|f| *f != "all");
+
+    let mut reports = Vec::new();
+    for cell in parity_cells(&ctx, filter)? {
+        println!(
+            "replaying {} ({}, {} tasks) on both backends at {time_scale}x...",
+            cell.label,
+            cell.kind.label(),
+            cell.tasks.len()
+        );
+        let parity = run_parity(&cell, &ctx.lat, time_scale, &tol)?;
+        for failure in &parity.failures {
+            eprintln!("  parity failure: {failure}");
+        }
+        reports.push(parity);
+    }
+    if reports.is_empty() {
+        return Err(anyhow!("no parity cell matched filter {filter:?}"));
+    }
+    println!();
+    print!("{}", render_parity(&reports));
+    if let Some(path) = args.get("parity-out") {
+        std::fs::write(path, parity_json(time_scale, &tol, &reports).to_string())?;
+        println!("parity report written to {path}");
+    }
+    let failed = reports.iter().filter(|c| !c.clean()).count();
+    if failed > 0 {
+        return Err(anyhow!(
+            "wire parity failed on {failed} of {} cells (sim and threaded engine disagree)",
+            reports.len()
+        ));
+    }
+    println!("wire parity clean on all {} cells", reports.len());
+    Ok(())
 }
 
 fn sim(args: &Args) -> Result<()> {
@@ -347,7 +391,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         params.batch_size,
         lanes.names().join(",")
     );
-    let opts = ServeOptions { time_scale, verbose: args.flag("verbose") };
+    let opts = ServeOptions { time_scale, verbose: args.flag("verbose"), ..Default::default() };
     let report = match backend.as_str() {
         "pjrt" => serve_from_root(&root, &lanes, tasks, &mut *policy, &params, &opts)?,
         // full wire path — threads, channels, ξ deadlines — with batch

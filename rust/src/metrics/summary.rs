@@ -1,6 +1,7 @@
 //! Exact sample summaries (datasets here are at most a few hundred
 //! thousand points, so we keep everything and compute exact quantiles).
 
+/// A growable set of f64 samples with exact summary statistics.
 #[derive(Clone, Debug, Default)]
 pub struct Samples {
     values: Vec<f64>,
@@ -8,36 +9,44 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// An empty sample set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Adopt an existing vector of samples.
     pub fn from_vec(values: Vec<f64>) -> Self {
         Samples { values, sorted: false }
     }
 
+    /// Append one sample.
     pub fn push(&mut self, x: f64) {
         self.values.push(x);
         self.sorted = false;
     }
 
+    /// Append many samples.
     pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
         self.values.extend(xs);
         self.sorted = false;
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// Are there no samples?
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
 
+    /// The raw samples (order unspecified once quantiles were taken).
     pub fn values(&self) -> &[f64] {
         &self.values
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.values.is_empty() {
             return f64::NAN;
@@ -45,6 +54,7 @@ impl Samples {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
+    /// Sample standard deviation (0 for fewer than two samples).
     pub fn std(&self) -> f64 {
         if self.values.len() < 2 {
             return 0.0;
@@ -55,10 +65,12 @@ impl Samples {
             .sqrt()
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -84,14 +96,17 @@ impl Samples {
         self.values[lo] * (1.0 - frac) + self.values[hi] * frac
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.quantile(0.5)
     }
 
+    /// 95th percentile.
     pub fn p95(&mut self) -> f64 {
         self.quantile(0.95)
     }
 
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.quantile(0.99)
     }

@@ -5,12 +5,16 @@
 /// Simple column-aligned ASCII table.
 #[derive(Debug, Default)]
 pub struct Table {
+    /// Title printed above the table.
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Body rows (each the header's arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start a table with the given title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -19,11 +23,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header's arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render to a column-aligned string.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -54,6 +60,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
@@ -77,6 +84,7 @@ pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String
     out
 }
 
+/// Format a float with a fixed number of decimals.
 pub fn fmt_f(x: f64, decimals: usize) -> String {
     format!("{:.*}", decimals, x)
 }

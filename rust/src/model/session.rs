@@ -27,18 +27,24 @@ use crate::runtime::{ArtifactStore, RtClient};
 pub struct GenOutput {
     /// Generated token ids per input row (length = its target length).
     pub tokens: Vec<Vec<i32>>,
+    /// Wall seconds spent in prefill execution.
     pub prefill_secs: f64,
+    /// Wall seconds spent in decode steps.
     pub decode_secs: f64,
     /// Number of decode steps executed (= max target length).
     pub steps: usize,
+    /// Batch bucket the decode executed at.
     pub decode_bucket: usize,
 }
 
+/// A loaded LM: weights resident on the PJRT device, generation over
+/// bucketed prefill/decode executables.
 pub struct LmSession {
     store: Arc<ArtifactStore>,
     /// PJRT client this session executes on (obtained lazily from the
     /// store: constructing a session requires a real backend).
     client: RtClient,
+    /// The manifest entry this session serves.
     pub entry: ModelEntry,
     /// Weights as device buffers, in canonical param order.
     param_buffers: Vec<xla::PjRtBuffer>,
@@ -50,6 +56,8 @@ pub struct LmSession {
 }
 
 impl LmSession {
+    /// Open a session for `model`: obtain the PJRT client and upload
+    /// every weight tensor to the device.
     pub fn new(store: Arc<ArtifactStore>, model: &str) -> Result<LmSession> {
         let client = store.client()?;
         let entry = store.manifest.model(model)?.clone();
@@ -67,10 +75,12 @@ impl LmSession {
         Ok(LmSession { store, client, entry, param_buffers, param_literals })
     }
 
+    /// The served model's manifest name.
     pub fn model_name(&self) -> &str {
         &self.entry.name
     }
 
+    /// The artifact store this session loads from.
     pub fn store(&self) -> Arc<ArtifactStore> {
         self.store.clone()
     }
@@ -395,6 +405,7 @@ impl LmSession {
         Ok(best)
     }
 
+    /// The device-resident weight buffers, in canonical param order.
     pub fn param_buffers(&self) -> &[xla::PjRtBuffer] {
         &self.param_buffers
     }

@@ -18,10 +18,16 @@ use crate::config::Manifest;
 use crate::textgen::{Lexicon, Vocab};
 use crate::uncertainty::Regressor;
 
+/// Everything loaded from the artifacts directory, with lazy PJRT
+/// compilation caches.
 pub struct ArtifactStore {
+    /// The parsed manifest contract.
     pub manifest: Manifest,
+    /// The shared lexicon.
     pub lexicon: Arc<Lexicon>,
+    /// The id <-> word vocabulary.
     pub vocab: Arc<Vocab>,
+    /// The native LW regressor.
     pub regressor: Arc<Regressor>,
     /// PJRT client, created on first use: simulation, scoring, and
     /// bundle IO never need one, and the in-tree `xla` stub has no
@@ -131,6 +137,7 @@ impl ArtifactStore {
         })
     }
 
+    /// The compiled decode executable for one batch bucket.
     pub fn decode_hlo(&self, model: &str, bucket: usize) -> Result<Arc<Executable>> {
         let entry = self.manifest.model(model)?;
         let path = entry
@@ -153,6 +160,7 @@ impl ArtifactStore {
         }
     }
 
+    /// The compiled prefill executable for one (batch, seq) bucket.
     pub fn prefill_hlo(&self, model: &str, bucket: (usize, usize)) -> Result<Arc<Executable>> {
         let entry = self.manifest.model(model)?;
         let path = entry

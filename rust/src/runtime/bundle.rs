@@ -13,41 +13,56 @@ use super::xla;
 
 const MAGIC: &[u8; 8] = b"RTLMTB01";
 
+/// Element type of a bundle tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
+/// A tensor's raw elements.
 #[derive(Clone, Debug)]
 pub enum Data {
+    /// 32-bit float elements.
     F32(Vec<f32>),
+    /// 32-bit signed integer elements.
     I32(Vec<i32>),
 }
 
+/// One named tensor of a bundle.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Tensor name (the python export's key).
     pub name: String,
+    /// Element type.
     pub dtype: Dtype,
+    /// Shape.
     pub dims: Vec<usize>,
+    /// Raw elements, row-major.
     pub data: Data,
 }
 
 impl Tensor {
+    /// Build an f32 tensor (dims must match the element count).
     pub fn f32(name: &str, dims: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { name: name.to_string(), dtype: Dtype::F32, dims, data: Data::F32(data) }
     }
 
+    /// Build an i32 tensor (dims must match the element count).
     pub fn i32(name: &str, dims: Vec<usize>, data: Vec<i32>) -> Tensor {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { name: name.to_string(), dtype: Dtype::I32, dims, data: Data::I32(data) }
     }
 
+    /// Product of the dims.
     pub fn element_count(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// The elements as f32 (error if the tensor is not f32).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
@@ -55,6 +70,7 @@ impl Tensor {
         }
     }
 
+    /// The elements as i32 (error if the tensor is not i32).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
@@ -73,13 +89,16 @@ impl Tensor {
     }
 }
 
+/// A parsed tensor bundle (RTLMTB01 format).
 #[derive(Clone, Debug, Default)]
 pub struct Bundle {
+    /// The tensors, in file order.
     pub tensors: Vec<Tensor>,
     index: HashMap<String, usize>,
 }
 
 impl Bundle {
+    /// Index a list of tensors by name.
     pub fn from_tensors(tensors: Vec<Tensor>) -> Bundle {
         let index = tensors
             .iter()
@@ -89,16 +108,19 @@ impl Bundle {
         Bundle { tensors, index }
     }
 
+    /// Look one tensor up by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.index.get(name).map(|&i| &self.tensors[i])
     }
 
+    /// Read and parse a bundle file.
     pub fn load(path: &Path) -> Result<Bundle> {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading bundle {}", path.display()))?;
         Self::parse(&bytes).with_context(|| format!("parsing bundle {}", path.display()))
     }
 
+    /// Parse bundle bytes.
     pub fn parse(bytes: &[u8]) -> Result<Bundle> {
         let mut r = Reader { bytes, pos: 0 };
         ensure!(r.take(8)? == MAGIC, "bad bundle magic");

@@ -23,11 +23,13 @@ pub struct RtClient {
 }
 
 impl RtClient {
+    /// Create the PJRT CPU client.
     pub fn cpu() -> Result<RtClient> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(RtClient { client: Arc::new(client) })
     }
 
+    /// The backend platform's display name.
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -61,6 +63,7 @@ impl RtClient {
 /// A compiled HLO module ready to execute.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Source path, for error messages.
     pub name: String,
 }
 

@@ -15,7 +15,7 @@ use std::fmt;
 
 /// Error type mirroring `xla::Error` closely enough for `?`/`context`.
 #[derive(Debug)]
-pub struct Error(pub String);
+pub struct Error(/** the error message */ pub String);
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -36,6 +36,7 @@ impl Error {
     }
 }
 
+/// Result alias mirroring `xla::Result`.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Uninhabited: proves device-side code paths cannot be reached.
@@ -49,8 +50,11 @@ enum Never {}
 /// Element payload of a [`Literal`].
 #[derive(Clone, Debug)]
 pub enum Data {
+    /// 32-bit float elements.
     F32(Vec<f32>),
+    /// 32-bit signed integer elements.
     I32(Vec<i32>),
+    /// A tuple of literals.
     Tuple(Vec<Literal>),
 }
 
@@ -62,8 +66,11 @@ mod sealed {
 
 /// Element types a [`Literal`] can be built from / read back as.
 pub trait NativeType: sealed::Sealed + Copy {
+    /// Wrap host values as literal payload.
     fn into_data(values: Vec<Self>) -> Data;
+    /// Read payload back as host values (None on dtype mismatch).
     fn from_data(data: &Data) -> Option<Vec<Self>>;
+    /// Display name for error messages.
     fn type_name() -> &'static str;
 }
 
@@ -111,6 +118,7 @@ pub struct Shape {
 }
 
 impl Shape {
+    /// Is this the shape of a tuple literal?
     pub fn is_tuple(&self) -> bool {
         self.tuple
     }
@@ -127,6 +135,7 @@ impl Literal {
         Literal { dims: vec![], data: Data::Tuple(elements) }
     }
 
+    /// Number of elements (tuple literals count their members).
     pub fn element_count(&self) -> usize {
         match &self.data {
             Data::F32(v) => v.len(),
@@ -150,10 +159,12 @@ impl Literal {
         Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
     }
 
+    /// The literal's dimensions.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
 
+    /// The literal's shape descriptor.
     pub fn shape(&self) -> Result<Shape> {
         Ok(Shape { tuple: matches!(self.data, Data::Tuple(_)) })
     }
@@ -185,6 +196,7 @@ pub struct HloModuleProto {
 }
 
 impl HloModuleProto {
+    /// Read an HLO text file (validated to look like HLO).
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
@@ -194,11 +206,13 @@ impl HloModuleProto {
         Ok(HloModuleProto { text })
     }
 
+    /// The raw HLO text.
     pub fn text(&self) -> &str {
         &self.text
     }
 }
 
+/// Computation wrapper (mirror of `xla::XlaComputation`).
 #[derive(Clone, Debug)]
 pub struct XlaComputation {
     #[allow(dead_code)]
@@ -206,6 +220,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Adopt a parsed module.
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { hlo_text: proto.text.clone() }
     }
@@ -215,9 +230,13 @@ impl XlaComputation {
 // PJRT client surface (uninhabited: construction always fails)
 // ---------------------------------------------------------------------------
 
+/// PJRT client (uninhabited in the stub build).
 pub struct PjRtClient(Never);
+/// PJRT device handle (uninhabited in the stub build).
 pub struct Device(Never);
+/// Device-resident buffer (uninhabited in the stub build).
 pub struct PjRtBuffer(Never);
+/// Compiled executable handle (uninhabited in the stub build).
 pub struct PjRtLoadedExecutable(Never);
 
 impl PjRtClient {
@@ -226,18 +245,22 @@ impl PjRtClient {
         Err(Error::backend_unavailable())
     }
 
+    /// Backend platform name (unreachable in the stub build).
     pub fn platform_name(&self) -> String {
         match self.0 {}
     }
 
+    /// Enumerate devices (unreachable in the stub build).
     pub fn devices(&self) -> Vec<Device> {
         match self.0 {}
     }
 
+    /// Compile a computation (unreachable in the stub build).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         match self.0 {}
     }
 
+    /// Upload a literal to a device (unreachable in the stub build).
     pub fn buffer_from_host_literal(
         &self,
         _device: Option<&Device>,
@@ -248,12 +271,14 @@ impl PjRtClient {
 }
 
 impl PjRtBuffer {
+    /// Read a buffer back to the host (unreachable in the stub build).
     pub fn to_literal_sync(&self) -> Result<Literal> {
         match self.0 {}
     }
 }
 
 impl PjRtLoadedExecutable {
+    /// Execute with host literals (unreachable in the stub build).
     pub fn execute<L: std::borrow::Borrow<Literal>>(
         &self,
         _args: &[L],
@@ -261,6 +286,7 @@ impl PjRtLoadedExecutable {
         match self.0 {}
     }
 
+    /// Execute with device buffers (unreachable in the stub build).
     pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
         &self,
         _args: &[B],

@@ -18,10 +18,12 @@ pub struct Fifo {
 }
 
 impl Fifo {
+    /// FIFO on the default two-lane fleet's accelerator lane.
     pub fn new(batch_size: usize) -> Fifo {
         Fifo::new_on(batch_size, LaneId::GPU)
     }
 
+    /// FIFO dispatching on the given primary lane.
     pub fn new_on(batch_size: usize, primary: LaneId) -> Fifo {
         Fifo { queue: VecDeque::new(), batch_size: batch_size.max(1), primary }
     }
@@ -110,10 +112,12 @@ impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
 pub struct Hpf(Sorted<fn(&Task) -> f64>);
 
 impl Hpf {
+    /// HPF on the default two-lane fleet's accelerator lane.
     pub fn new(batch_size: usize) -> Hpf {
         Hpf::new_on(batch_size, LaneId::GPU)
     }
 
+    /// HPF dispatching on the given primary lane.
     pub fn new_on(batch_size: usize, primary: LaneId) -> Hpf {
         Hpf(Sorted::new("HPF", |t: &Task| t.priority_point, batch_size, primary))
     }
@@ -138,10 +142,12 @@ impl Policy for Hpf {
 pub struct Luf(Sorted<fn(&Task) -> f64>);
 
 impl Luf {
+    /// LUF on the default two-lane fleet's accelerator lane.
     pub fn new(batch_size: usize) -> Luf {
         Luf::new_on(batch_size, LaneId::GPU)
     }
 
+    /// LUF dispatching on the given primary lane.
     pub fn new_on(batch_size: usize, primary: LaneId) -> Luf {
         Luf(Sorted::new("LUF", |t: &Task| t.uncertainty, batch_size, primary))
     }
@@ -166,10 +172,12 @@ impl Policy for Luf {
 pub struct Muf(Sorted<fn(&Task) -> f64>);
 
 impl Muf {
+    /// MUF on the default two-lane fleet's accelerator lane.
     pub fn new(batch_size: usize) -> Muf {
         Muf::new_on(batch_size, LaneId::GPU)
     }
 
+    /// MUF dispatching on the given primary lane.
     pub fn new_on(batch_size: usize, primary: LaneId) -> Muf {
         Muf(Sorted::new("MUF", |t: &Task| -t.uncertainty, batch_size, primary))
     }

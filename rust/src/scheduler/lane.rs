@@ -24,7 +24,7 @@ use crate::util::json::Json;
 /// Dense index into a [`LaneSet`] — the engine's per-lane state
 /// (`busy`, batch counters, worker channels) is `Vec`-indexed by it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct LaneId(pub usize);
+pub struct LaneId(/** the dense index */ pub usize);
 
 impl LaneId {
     /// The accelerator lane of the default two-lane convention
@@ -33,6 +33,7 @@ impl LaneId {
     /// The quarantine lane of the default two-lane convention.
     pub const CPU: LaneId = LaneId(1);
 
+    /// The dense vector index this id addresses.
     pub fn index(self) -> usize {
         self.0
     }
@@ -58,6 +59,8 @@ pub enum LaneKind {
 }
 
 impl LaneKind {
+    /// Parse the CLI token: `gpu`/`accel`/`accelerator` or
+    /// `cpu`/`quarantine`.
     pub fn parse(s: &str) -> Result<LaneKind> {
         Ok(match s {
             "gpu" | "accel" | "accelerator" => LaneKind::Accelerator,
@@ -148,6 +151,7 @@ impl Admission {
 pub struct LaneSpec {
     /// Display name, unique within the set ("gpu", "cpu", "gpt2-small"…).
     pub name: String,
+    /// Device kind: how this lane executes a batch.
     pub kind: LaneKind,
     /// Model variant served by this lane (a `manifest.json` model name;
     /// backends that execute resolve it, pure-logic paths ignore it).
@@ -157,6 +161,7 @@ pub struct LaneSpec {
     /// Intra-batch workers for [`LaneKind::Cpu`] lanes; `None` uses the
     /// device profile's `cpu_workers`.
     pub workers: Option<usize>,
+    /// Which tasks this lane claims (see [`Admission`]).
     pub admission: Admission,
 }
 
@@ -197,6 +202,9 @@ pub struct LaneSet {
 }
 
 impl LaneSet {
+    /// Validate and seal a lane table: at least one lane, at least one
+    /// fallback lane, unique non-empty names, nonzero batch sizes and
+    /// worker counts.
     pub fn new(lanes: Vec<LaneSpec>) -> Result<LaneSet> {
         if lanes.is_empty() {
             bail!("a lane set needs at least one lane");
@@ -238,26 +246,33 @@ impl LaneSet {
         LaneSet::new(vec![LaneSpec::accelerator("gpu", model)]).expect("single lane is valid")
     }
 
+    /// Number of lanes in the fleet.
     pub fn len(&self) -> usize {
         self.lanes.len()
     }
 
+    /// Always false (validated non-empty); present for clippy's
+    /// len-without-is-empty convention.
     pub fn is_empty(&self) -> bool {
         self.lanes.is_empty() // always false: validated non-empty
     }
 
+    /// Iterate the lane specs in [`LaneId`] order.
     pub fn iter(&self) -> std::slice::Iter<'_, LaneSpec> {
         self.lanes.iter()
     }
 
+    /// Iterate the lane ids `0..len`.
     pub fn ids(&self) -> impl Iterator<Item = LaneId> {
         (0..self.lanes.len()).map(LaneId)
     }
 
+    /// The spec of one lane.
     pub fn spec(&self, id: LaneId) -> &LaneSpec {
         &self.lanes[id.0]
     }
 
+    /// Lane display names, in [`LaneId`] order.
     pub fn names(&self) -> Vec<String> {
         self.lanes.iter().map(|l| l.name.clone()).collect()
     }

@@ -14,15 +14,21 @@ use crate::config::SchedParams;
 /// A dispatched batch.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Lane the batch is dispatched to.
     pub lane: LaneId,
+    /// Member tasks, in the policy's chosen order.
     pub tasks: Vec<Task>,
 }
 
 impl Batch {
+    /// Longest ground-truth output length in the batch — an
+    /// accelerator-kind lane decodes the whole batch for this many
+    /// steps.
     pub fn max_true_len(&self) -> usize {
         self.tasks.iter().map(|t| t.true_len).max().unwrap_or(0)
     }
 
+    /// Longest input length in the batch (prefill bucket selector).
     pub fn max_input_len(&self) -> usize {
         self.tasks.iter().map(|t| t.input_len.max(1)).max().unwrap_or(1)
     }
@@ -36,10 +42,18 @@ impl Batch {
 /// sets this when the lane is idle and the wait interval xi has
 /// elapsed). Baselines use only the fleet's primary lane.
 pub trait Policy: Send {
+    /// Display name, e.g. "FIFO" or "RT-LM" (may depend on the build:
+    /// RT-LM degrades to "UP+C" when no lane can claim traffic).
     fn name(&self) -> String;
+    /// Admit one arrived task into the waiting queue(s).
     fn push(&mut self, task: Task);
+    /// Emit the next batch for `lane`, or `None` to wait for more
+    /// arrivals. With `force = true` the policy must dispatch whatever
+    /// it has for that lane.
     fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch>;
+    /// Total queued (not yet dispatched) tasks across all lanes.
     fn queue_len(&self) -> usize;
+    /// Is nothing queued?
     fn is_empty(&self) -> bool {
         self.queue_len() == 0
     }
@@ -48,9 +62,13 @@ pub trait Policy: Send {
 /// Enumeration of every policy evaluated in the paper, for CLI/bench use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
+    /// First-in first-out, static batching.
     Fifo,
+    /// Highest (earliest) priority point first — EDF-style.
     Hpf,
+    /// Least uncertainty first.
     Luf,
+    /// Most uncertainty first.
     Muf,
     /// Slack-based priority (Eq. 2) with static batching — the paper's
     /// "straightforward" variant discussed in Sec. IV-B.
@@ -64,9 +82,11 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// The paper's headline comparison set (Figs. 9/11, Tables III/IV).
     pub const ALL_BASELINES: [PolicyKind; 5] =
         [PolicyKind::Fifo, PolicyKind::Hpf, PolicyKind::Luf, PolicyKind::Muf, PolicyKind::RtLm];
 
+    /// The component-ablation arms (Figs. 10/12).
     pub const ABLATION: [PolicyKind; 4] =
         [PolicyKind::Fifo, PolicyKind::Up, PolicyKind::UpC, PolicyKind::RtLm];
 
@@ -82,6 +102,7 @@ impl PolicyKind {
         PolicyKind::RtLm,
     ];
 
+    /// Display label, as printed in the paper's tables.
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::Fifo => "FIFO",
@@ -95,6 +116,8 @@ impl PolicyKind {
         }
     }
 
+    /// Parse a CLI policy name (case-insensitive; `rtlm`/`rt-lm`,
+    /// `up+c`/`upc` accepted).
     pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "fifo" => PolicyKind::Fifo,

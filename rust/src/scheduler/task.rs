@@ -3,6 +3,7 @@
 /// A scheduled LM request (paper's task J).
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// Unique task id.
     pub id: u64,
     /// Raw input text (kept for diagnostics; execution uses `prompt`).
     pub text: String,
@@ -42,6 +43,8 @@ impl Task {
     }
 }
 
+/// Minimal task constructor for unit tests (`true_len` mirrors the
+/// uncertainty, text/prompt empty).
 #[cfg(test)]
 pub fn test_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
     Task {

@@ -23,6 +23,9 @@ use super::policy::{Batch, Policy};
 use super::task::Task;
 use super::up::up_priority;
 
+/// The UASCHED scheduling machine (UP + consolidation + offloading,
+/// each independently toggleable — the ablation arms are the same
+/// struct with features off).
 pub struct UaSched {
     params: SchedParams,
     /// Output-tokens -> seconds coefficient of the primary serving model.
@@ -41,6 +44,10 @@ pub struct UaSched {
 }
 
 impl UaSched {
+    /// Build the machine over a lane fleet. `eta` is the primary
+    /// model's output-tokens -> seconds coefficient (execution-time
+    /// estimate in Eq. 2/3); `consolidate`/`offload` toggle the
+    /// respective Algorithm 1 components.
     pub fn new(
         params: SchedParams,
         eta: f64,
@@ -156,6 +163,7 @@ impl UaSched {
         Some(Batch { lane, tasks })
     }
 
+    /// The fleet this policy schedules.
     pub fn lanes(&self) -> &LaneSet {
         &self.lanes
     }

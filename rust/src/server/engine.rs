@@ -34,23 +34,44 @@ use crate::sim::results::TaskOutcome;
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Compress arrival gaps by this factor (10 = 10x faster replay).
-    /// The ξ wait interval is compressed by the same factor.
+    /// The ξ wait interval is compressed by the same factor (live
+    /// replay) or left untouched (deterministic replay, where the
+    /// engine clock itself is dilated — see
+    /// [`deterministic`](Self::deterministic)).
     pub time_scale: f64,
     /// Print a per-lane summary after the run.
     pub verbose: bool,
+    /// Deterministic parity replay (the `rtlm bench --wire` harness,
+    /// [`crate::bench_harness::replay`]): inject every arrival upfront
+    /// (burst admission — all tasks admitted before the first dispatch,
+    /// so every pop runs forced and batch structure cannot race arrival
+    /// timing) and dilate the engine clock by `time_scale`, so the
+    /// engine, the policy's time-dependent priorities, and the reported
+    /// outcomes all read in *virtual* (uncompressed) seconds —
+    /// comparable 1:1 against [`crate::sim::run_sim_lanes`] on the same
+    /// cell. Off (the default) replays arrivals live on the wall clock.
+    pub deterministic: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { time_scale: 1.0, verbose: false }
+        ServeOptions { time_scale: 1.0, verbose: false, deterministic: false }
     }
 }
 
 /// Outcome of a real serving run.
+///
+/// All per-task times are engine-clock seconds: compressed wall seconds
+/// on a live replay, *virtual* (uncompressed) seconds on a
+/// deterministic replay ([`ServeOptions::deterministic`]).
 #[derive(Debug, Default)]
 pub struct ServeReport {
+    /// Name the policy reported for itself (e.g. "RT-LM").
     pub policy: String,
+    /// Per-task outcomes, sorted by task id.
     pub outcomes: Vec<TaskOutcome>,
+    /// Wall-clock seconds from the post-init epoch to teardown
+    /// (undilated even on a deterministic replay).
     pub wall_secs: f64,
     /// Wall time spent inside policy push/pop calls (Table VII).
     pub sched_secs: f64,
@@ -63,10 +84,12 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Response-time samples over every outcome.
     pub fn response_times(&self) -> Samples {
         Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
     }
 
+    /// Completed tasks per wall-clock minute.
     pub fn throughput_per_min(&self) -> f64 {
         if self.wall_secs <= 0.0 {
             return 0.0;
@@ -95,10 +118,19 @@ pub fn serve_with_factory(
     tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     let n_total = tasks.len();
     let time_scale = opts.time_scale.max(1e-9);
-    // arrivals replay compressed, so the wait interval compresses too
-    let scaled_params = SchedParams { xi: params.xi / time_scale, ..params.clone() };
-
-    let mut backend = ThreadedBackend::start(tasks, factory, lanes, time_scale, false)?;
+    let (scaled_params, mut backend) = if opts.deterministic {
+        // burst admission + dilated engine clock: the engine reads
+        // virtual seconds, so ξ (compared against those readings) must
+        // stay uncompressed
+        let backend =
+            ThreadedBackend::start_scaled(tasks, factory, lanes, time_scale, true, time_scale)?;
+        (params.clone(), backend)
+    } else {
+        // arrivals replay compressed, so the wait interval compresses too
+        let scaled = SchedParams { xi: params.xi / time_scale, ..params.clone() };
+        let backend = ThreadedBackend::start(tasks, factory, lanes, time_scale, false)?;
+        (scaled, backend)
+    };
     let report = run_engine(&mut backend, policy, &scaled_params, n_total)?;
     let wall_secs = backend.finish();
 

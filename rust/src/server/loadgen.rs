@@ -20,6 +20,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::metrics::Samples;
 use crate::util::json::Json;
 
+/// Load-generator knobs (`rtlm loadgen` flags).
 #[derive(Clone, Debug)]
 pub struct LoadgenOptions {
     /// Total requests to send.
@@ -47,7 +48,9 @@ impl Default for LoadgenOptions {
 /// Aggregated result of one load run.
 #[derive(Debug, Default)]
 pub struct LoadReport {
+    /// Replies that parsed as success.
     pub n_ok: usize,
+    /// Errors (connect, timeout, or error replies).
     pub n_err: usize,
     /// First few error strings, for diagnostics.
     pub errors: Vec<String>,

@@ -51,13 +51,16 @@ use crate::util::json::{obj, Json};
 /// by [`serve_tcp`]; tests construct it directly from stubs.
 #[derive(Clone)]
 pub struct TcpServerConfig {
+    /// Vocabulary used to encode prompts and decode replies.
     pub vocab: Arc<Vocab>,
+    /// The uncertainty estimator requests are scored with.
     pub estimator: Estimator,
     /// Prompts are truncated to this many tokens.
     pub max_input_len: usize,
     /// The primary serving model's input-tokens -> priority-point
     /// coefficient.
     pub phi: f64,
+    /// Scheduler parameters of the serving policy.
     pub params: SchedParams,
     /// The lane fleet this server schedules over; replies carry the
     /// executing lane's name.

@@ -9,6 +9,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::{obj, Json};
 
+/// Measured latency curves, as stored in `artifacts/calib.json`.
 #[derive(Clone, Debug, Default)]
 pub struct Calibration {
     /// model -> decode bucket -> seconds per step.
@@ -22,6 +23,7 @@ pub struct Calibration {
 }
 
 impl Calibration {
+    /// Parse a calibration JSON file.
     pub fn load(path: &Path) -> Result<Calibration> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading calibration {}", path.display()))?;
@@ -55,6 +57,7 @@ impl Calibration {
         })
     }
 
+    /// Write the calibration as JSON.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut models = Vec::new();
         for (model, d) in &self.decode {

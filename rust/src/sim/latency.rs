@@ -32,6 +32,7 @@ pub const CPU_LANE_SLOWDOWN: f64 = 1.2;
 /// Analytic FLOPs throughput assumed when no calibration file exists.
 const FALLBACK_FLOPS: f64 = 2.0e9;
 
+/// Calibrated (or analytic) latency curves, keyed by model name.
 #[derive(Clone, Debug)]
 pub struct LatencyModel {
     /// model -> decode bucket -> seconds per decode step.
@@ -41,6 +42,7 @@ pub struct LatencyModel {
 }
 
 impl LatencyModel {
+    /// Adopt measured curves from a [`Calibration`].
     pub fn from_calibration(calib: &Calibration) -> LatencyModel {
         LatencyModel { decode: calib.decode.clone(), prefill: calib.prefill.clone() }
     }

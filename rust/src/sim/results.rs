@@ -6,34 +6,50 @@ use crate::metrics::Samples;
 use crate::scheduler::LaneId;
 use crate::util::json::{obj, Json};
 
+/// Everything the engine accounted for one completed task.
 #[derive(Clone, Debug)]
 pub struct TaskOutcome {
+    /// Task id.
     pub id: u64,
+    /// Arrival time on the engine clock (seconds).
     pub arrival: f64,
+    /// Completion time on the engine clock (seconds).
     pub completion: f64,
+    /// Absolute priority point d_J the task was scheduled against.
     pub priority_point: f64,
+    /// Uncertainty score u_J the task was scheduled with.
     pub uncertainty: f64,
+    /// Ground-truth output length (tokens).
     pub true_len: usize,
+    /// Lane the task executed on.
     pub lane: LaneId,
+    /// Primary uncertainty type (diagnostics).
     pub utype: String,
+    /// Whether the task was adversarially crafted (Sec. V-G).
     pub malicious: bool,
     /// Pure model-inference time of the batch this task rode in.
     pub infer_secs: f64,
 }
 
 impl TaskOutcome {
+    /// Response time: completion minus arrival (the paper's headline
+    /// metric).
     pub fn response_time(&self) -> f64 {
         self.completion - self.arrival
     }
 
+    /// Did the task complete after its priority point?
     pub fn missed(&self) -> bool {
         self.completion > self.priority_point
     }
 }
 
+/// Aggregate outcome of one simulated serving run.
 #[derive(Clone, Debug, Default)]
 pub struct SimResult {
+    /// Name the policy reported for itself (e.g. "RT-LM").
     pub policy: String,
+    /// Per-task outcomes, in completion order.
     pub outcomes: Vec<TaskOutcome>,
     /// Virtual time at which the last task completed.
     pub makespan: f64,
@@ -61,14 +77,18 @@ impl SimResult {
             .cloned()
             .unwrap_or_else(|| lane.to_string())
     }
+
+    /// Response-time samples over every outcome.
     pub fn response_times(&self) -> Samples {
         Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
     }
 
+    /// Mean response time (seconds).
     pub fn mean_response(&self) -> f64 {
         self.response_times().mean()
     }
 
+    /// Maximum response time (Table III's metric).
     pub fn max_response(&self) -> f64 {
         self.response_times().max()
     }
@@ -122,10 +142,12 @@ impl SimResult {
         peak.len() as f64 / ((end - start) / 60.0)
     }
 
+    /// Number of tasks that completed after their priority point.
     pub fn miss_count(&self) -> usize {
         self.outcomes.iter().filter(|o| o.missed()).count()
     }
 
+    /// Fraction of tasks that missed their priority point.
     pub fn miss_rate(&self) -> f64 {
         if self.outcomes.is_empty() {
             return 0.0;

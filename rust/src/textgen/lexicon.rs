@@ -11,20 +11,32 @@ use crate::util::json::Json;
 /// PoS-lite tag inventory (mirror of python's TAG_* constants).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Tag {
+    /// Noun.
     Noun,
+    /// Verb.
     Verb,
+    /// Adjective.
     Adj,
+    /// Adverb.
     Adv,
+    /// Pronoun.
     Pron,
+    /// Determiner.
     Det,
+    /// Adposition.
     Adp,
+    /// Conjunction.
     Conj,
+    /// Wh-word (who/what/which...).
     Wh,
+    /// Punctuation token.
     Punct,
+    /// Anything else.
     Other,
 }
 
 impl Tag {
+    /// Parse python's TAG_* string form.
     pub fn from_str(s: &str) -> Result<Tag> {
         Ok(match s {
             "NOUN" => Tag::Noun,
@@ -42,6 +54,7 @@ impl Tag {
         })
     }
 
+    /// The python TAG_* string form.
     pub fn as_str(&self) -> &'static str {
         match self {
             Tag::Noun => "NOUN",
@@ -62,18 +75,31 @@ impl Tag {
 /// All word lists RULEGEN and the tagger need, parsed once at startup.
 #[derive(Debug)]
 pub struct Lexicon {
+    /// Vocabulary words, in id order.
     pub vocab_words: Vec<String>,
+    /// word -> tag dictionary of the PoS-lite tagger.
     pub pos_lexicon: HashMap<String, Tag>,
+    /// (suffix, tag) fallback rules, tried in order.
     pub suffix_rules: Vec<(String, Tag)>,
+    /// Noun/verb-ambiguous words (syntactic-ambiguity rule).
     pub nv_ambiguous: HashSet<String>,
+    /// word -> sense count (semantic-ambiguity rule).
     pub homonyms: HashMap<String, u32>,
+    /// Topics the vagueness rule treats as broad.
     pub vague_topics: HashSet<String>,
+    /// Multi-word vague phrases.
     pub vague_phrases: Vec<Vec<String>>,
+    /// Open-endedness markers.
     pub open_markers: HashSet<String>,
+    /// Multi-part-question markers.
     pub multipart_markers: HashSet<String>,
+    /// Relativizer words (clause-complexity rule).
     pub relativizers: HashSet<String>,
+    /// Wh-question words.
     pub wh_words: HashSet<String>,
+    /// Adjectives the vagueness rule counts.
     pub vague_adjectives: HashSet<String>,
+    /// Wh-starters marking open-ended questions.
     pub open_wh_starters: HashSet<String>,
 }
 
@@ -93,6 +119,7 @@ fn str_set(v: &Json, key: &str) -> Result<HashSet<String>> {
 }
 
 impl Lexicon {
+    /// Load `lexicon.json` from disk.
     pub fn load(path: &Path) -> Result<Lexicon> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading lexicon {}", path.display()))?;
@@ -100,6 +127,7 @@ impl Lexicon {
         Self::from_json(&v)
     }
 
+    /// Parse an in-memory lexicon JSON value.
     pub fn from_json(v: &Json) -> Result<Lexicon> {
         let mut pos_lexicon = HashMap::new();
         for (word, tag) in v.need_obj("pos_lexicon")? {

@@ -4,6 +4,7 @@
 use super::lexicon::{Lexicon, Tag};
 use super::tokenizer::is_punct;
 
+/// Tag each token: lexicon lookup, then suffix heuristics, else NOUN.
 pub fn pos_tag(lex: &Lexicon, tokens: &[String]) -> Vec<Tag> {
     tokens
         .iter()

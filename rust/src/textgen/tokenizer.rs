@@ -5,6 +5,7 @@
 /// Must stay identical to python's `_PUNCT = ".,!?;:\"()"`.
 pub const PUNCT: &[char] = &['.', ',', '!', '?', ';', ':', '"', '(', ')'];
 
+/// Is this one of the punctuation characters that split off?
 pub fn is_punct(c: char) -> bool {
     PUNCT.contains(&c)
 }

@@ -12,18 +12,26 @@ use anyhow::{ensure, Result};
 use super::lexicon::Lexicon;
 use super::tokenizer::tokenize;
 
+/// Padding token id (fixed by the python build).
 pub const PAD_ID: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS_ID: i32 = 1;
+/// End-of-sequence token id.
 pub const EOS_ID: i32 = 2;
+/// Unknown-word token id.
 pub const UNK_ID: i32 = 3;
 
+/// The id <-> word mapping.
 #[derive(Debug)]
 pub struct Vocab {
+    /// Words in id order (specials included).
     pub id_to_word: Vec<String>,
     word_to_id: HashMap<String, i32>,
 }
 
 impl Vocab {
+    /// Adopt the lexicon's word list (size checked against the
+    /// manifest).
     pub fn from_lexicon(lex: &Lexicon, expected_size: usize) -> Result<Vocab> {
         ensure!(
             lex.vocab_words.len() == expected_size,
@@ -40,14 +48,18 @@ impl Vocab {
         Ok(Vocab { id_to_word: lex.vocab_words.clone(), word_to_id })
     }
 
+    /// Vocabulary size.
     pub fn len(&self) -> usize {
         self.id_to_word.len()
     }
 
+    /// Is the vocabulary empty?
     pub fn is_empty(&self) -> bool {
         self.id_to_word.is_empty()
     }
 
+    /// Tokenize and map to ids (unknown words -> [`UNK_ID`]),
+    /// optionally truncated.
     pub fn encode(&self, text: &str, max_len: Option<usize>) -> Vec<i32> {
         let mut ids: Vec<i32> = tokenize(text)
             .iter()
@@ -59,6 +71,7 @@ impl Vocab {
         ids
     }
 
+    /// Map ids back to a space-joined string (specials skipped).
     pub fn decode(&self, ids: &[i32]) -> String {
         let mut words = Vec::new();
         for &id in ids {

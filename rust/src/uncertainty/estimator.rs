@@ -10,6 +10,7 @@ use super::regressor::Regressor;
 use super::rules;
 use crate::textgen::Lexicon;
 
+/// The combined RULEGEN + LW-regressor estimator (Eq. 1).
 #[derive(Clone)]
 pub struct Estimator {
     lexicon: Arc<Lexicon>,
@@ -20,6 +21,9 @@ pub struct Estimator {
 }
 
 impl Estimator {
+    /// Assemble the estimator. `min_len`/`max_len` bound the score (the
+    /// manifest's output-length range); `max_input_len` truncates
+    /// feature extraction.
     pub fn new(
         lexicon: Arc<Lexicon>,
         regressor: Arc<Regressor>,
@@ -44,6 +48,7 @@ impl Estimator {
         }
     }
 
+    /// The RULEGEN feature vector of a text.
     pub fn features(&self, text: &str) -> [f64; rules::N_FEATURES] {
         rules::features(&self.lexicon, text, self.max_input_len)
     }
@@ -77,6 +82,7 @@ impl Estimator {
         feats.iter().zip(coef).map(|(f, c)| f * c).sum::<f64>() + intercept
     }
 
+    /// The lexicon feature extraction runs against.
     pub fn lexicon(&self) -> &Lexicon {
         &self.lexicon
     }

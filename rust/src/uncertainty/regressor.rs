@@ -19,6 +19,8 @@ struct Layer {
     fan_out: usize,
 }
 
+/// The native LW regressor: the trained MLP evaluated in pure rust on
+/// the scheduling hot path (no PJRT round-trip per task).
 #[derive(Clone, Debug)]
 pub struct Regressor {
     layers: Vec<Layer>,
@@ -60,6 +62,7 @@ impl Regressor {
         Ok(Regressor { layers, feature_scales: feature_scales.to_vec() })
     }
 
+    /// Input feature count the first layer expects.
     pub fn n_features(&self) -> usize {
         self.layers[0].fan_in
     }

@@ -4,10 +4,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Arguments carrying no `--` prefix, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -37,22 +41,27 @@ impl Args {
         args
     }
 
+    /// Parse the process arguments (argv[0] skipped).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was the bare switch `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as a float (error message names the flag).
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -62,6 +71,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as an unsigned integer.
     pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -71,6 +81,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as a u64 (seeds).
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -79,6 +90,48 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
         }
     }
+}
+
+/// The `rtlm` top-level usage text, parameterised over the experiment
+/// list so `bench`'s completions stay in sync with
+/// `bench_harness::scenarios::EXPERIMENTS`.
+///
+/// Lives in the library (not `main.rs`) so `rust/tests/unit_smoke.rs`
+/// can assert that every public flag of every subcommand is mentioned —
+/// the regression gate for help-text drift.
+pub fn help_text(experiments: &[&str]) -> String {
+    format!(
+        "rtlm — uncertainty-aware resource management for real-time LM serving\n\n\
+         usage: rtlm <command> [--artifacts DIR] [options]\n\n\
+         commands:\n\
+         \x20 check                      validate artifacts, smoke inference\n\
+         \x20 calibrate [--reps N]       measure PJRT latencies -> calib.json\n\
+         \x20 bench <exp|all> [--n N] [--seed S]\n\
+         \x20     regenerate paper experiments: {exps}\n\
+         \x20 bench --wire [FILTER] [--n N] [--seed S] [--time-scale S]\n\
+         \x20     [--parity-rel R] [--parity-slop-ms MS] [--parity-out FILE]\n\
+         \x20     replay the internal comparison cells through both the\n\
+         \x20     virtual-clock simulator and the threaded wire engine and\n\
+         \x20     diff the reports (per-lane batch counts exact, response\n\
+         \x20     stats within a time-scale-aware tolerance); nonzero exit\n\
+         \x20     on any parity failure. FILTER keeps cells whose label\n\
+         \x20     contains it (also accepted as --wire FILTER).\n\
+         \x20 sim [--model M] [--policy P] [--n N] [--seed S] [--device D]\n\
+         \x20     [--variance small|normal|large] [--export FILE]\n\
+         \x20 serve [--model M] [--policy P] [--n N] [--seed S] [--beta B]\n\
+         \x20     [--time-scale S] [--backend pjrt|modeled] [--device D]\n\
+         \x20     [--variance V] [--lanes SPEC] [--require-all-lanes] [--verbose]\n\
+         \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
+         \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
+         \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
+         \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
+         \x20 score <text...>            print RULEGEN features + u_J\n\n\
+         --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
+         (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H;\n\
+         thresholds take numbers, inf, tau, or qP quantiles), or @lanes.json.\n\
+         e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"",
+        exps = experiments.join(",")
+    )
 }
 
 #[cfg(test)]

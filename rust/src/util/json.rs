@@ -7,19 +7,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always held as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure, with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the input text.
     pub offset: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -32,6 +42,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters rejected).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -45,6 +56,7 @@ impl Json {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -52,14 +64,17 @@ impl Json {
         }
     }
 
+    /// The number value truncated to `i64`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// The number value truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -67,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -81,6 +98,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -108,24 +126,28 @@ impl Json {
 
     // -- convenience "must" accessors (anyhow-friendly) ----------------------
 
+    /// Required numeric field of an object (error names the key).
     pub fn need_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.get(key)
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("missing/not-a-number field '{key}'"))
     }
 
+    /// Required string field of an object.
     pub fn need_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .as_str()
             .ok_or_else(|| anyhow::anyhow!("missing/not-a-string field '{key}'"))
     }
 
+    /// Required array field of an object.
     pub fn need_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("missing/not-an-array field '{key}'"))
     }
 
+    /// Required object field of an object.
     pub fn need_obj(&self, key: &str) -> anyhow::Result<&BTreeMap<String, Json>> {
         self.get(key)
             .as_obj()

@@ -14,10 +14,13 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
 impl Pcg64 {
+    /// Seed a generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Seed a generator on an explicit stream (distinct streams
+    /// diverge even under the same seed).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let inc = ((stream as u128) << 1) | 1;
         let mut rng = Self { state: 0, inc };
@@ -32,6 +35,7 @@ impl Pcg64 {
         Pcg64::with_stream(self.next_u64() ^ salt, salt.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -51,6 +55,7 @@ impl Pcg64 {
         lo + self.next_u64() % (hi - lo)
     }
 
+    /// Uniform integer in [lo, hi) — panics if lo >= hi.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }
@@ -62,6 +67,7 @@ impl Pcg64 {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.gauss()
     }
@@ -71,6 +77,7 @@ impl Pcg64 {
         -mean * (1.0 - self.f64()).max(1e-300).ln()
     }
 
+    /// Uniform choice from a non-empty slice.
     pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.range_usize(0, items.len())]
     }

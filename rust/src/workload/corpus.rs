@@ -12,8 +12,11 @@ use crate::util::json::{read_jsonl, Json};
 /// One utterance with its ground-truth length-oracle data.
 #[derive(Clone, Debug)]
 pub struct WorkItem {
+    /// Raw utterance text.
     pub text: String,
+    /// Primary uncertainty type the generator assigned.
     pub utype: String,
+    /// Input length in tokens.
     pub input_len: usize,
     /// Cross-LM base output length.
     pub base_len: usize,
@@ -24,6 +27,7 @@ pub struct WorkItem {
 }
 
 impl WorkItem {
+    /// Parse one corpus JSONL record.
     pub fn from_json(v: &Json) -> Result<WorkItem> {
         let mut lens = BTreeMap::new();
         for (model, len) in v.need_obj("lens")? {
@@ -47,6 +51,7 @@ impl WorkItem {
         })
     }
 
+    /// The length oracle's output length on one LM.
     pub fn len_for(&self, model: &str) -> usize {
         self.lens.get(model).copied().unwrap_or(self.base_len)
     }

@@ -7,16 +7,22 @@ use crate::util::rng::Pcg64;
 
 use super::corpus::WorkItem;
 
+/// Requested uncertainty-score spread of a task subset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variance {
+    /// Tight spread around the median score.
     Small,
+    /// The corpus's natural spread.
     Normal,
+    /// Tails emphasised (high-variance workload).
     Large,
 }
 
 impl Variance {
+    /// All three variances, in the paper's order.
     pub const ALL: [Variance; 3] = [Variance::Small, Variance::Normal, Variance::Large];
 
+    /// Display label, as the paper's tables print it.
     pub fn label(&self) -> &'static str {
         match self {
             Variance::Small => "Small",

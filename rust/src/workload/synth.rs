@@ -30,6 +30,8 @@ const COMPARE_PAIRS: [(&str, &str); 4] =
     [("cats", "dogs"), ("books", "movies"), ("coffee", "tea"), ("cities", "villages")];
 const COMPARE_ASPECTS: [&str; 6] = ["behavior", "diet", "cost", "culture", "history", "size"];
 
+/// Synthetic-utterance generator (mirror of `compile/corpus.py`'s
+/// construction, driven by the shared lexicon).
 pub struct SynthGenerator {
     lexicon: Arc<Lexicon>,
     length_model: LengthModel,
@@ -37,6 +39,7 @@ pub struct SynthGenerator {
 }
 
 impl SynthGenerator {
+    /// Seeded generator over the given lexicon and length model.
     pub fn new(lexicon: Arc<Lexicon>, length_model: LengthModel, seed: u64) -> SynthGenerator {
         SynthGenerator { lexicon, length_model, rng: Pcg64::new(seed ^ 0x517417) }
     }

@@ -12,6 +12,7 @@ use super::corpus::WorkItem;
 use super::malicious;
 use super::trace::ArrivalTrace;
 
+/// Turns corpus items + an arrival trace into scored, deadlined tasks.
 pub struct TaskFactory {
     estimator: Estimator,
     /// Base relative deadline added to phi_f * |J| (seconds). The paper's
@@ -21,6 +22,7 @@ pub struct TaskFactory {
 }
 
 impl TaskFactory {
+    /// Factory over the given estimator and relative-deadline base.
     pub fn new(estimator: Estimator, deadline_base: f64) -> TaskFactory {
         TaskFactory { estimator, deadline_base }
     }
@@ -94,6 +96,7 @@ impl TaskFactory {
             .collect()
     }
 
+    /// The estimator tasks are scored with.
     pub fn estimator(&self) -> &Estimator {
         &self.estimator
     }

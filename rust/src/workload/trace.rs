@@ -5,6 +5,7 @@
 
 use crate::util::rng::Pcg64;
 
+/// A fully materialised arrival schedule.
 #[derive(Clone, Debug)]
 pub struct ArrivalTrace {
     /// Absolute arrival times in seconds, ascending.
@@ -79,14 +80,17 @@ impl ArrivalTrace {
         (n as f64 / total_rate).max(0.5)
     }
 
+    /// Number of arrivals.
     pub fn len(&self) -> usize {
         self.times.len()
     }
 
+    /// Is the trace empty?
     pub fn is_empty(&self) -> bool {
         self.times.is_empty()
     }
 
+    /// Time of the last arrival (0 when empty).
     pub fn duration(&self) -> f64 {
         self.times.last().copied().unwrap_or(0.0)
     }

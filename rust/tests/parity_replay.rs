@@ -1,0 +1,119 @@
+//! End-to-end wire-path parity (`rtlm bench --wire` machinery): replay
+//! one experiment cell through the virtual-clock simulator AND the
+//! threaded wall-clock engine (real dispatcher + lane-worker threads,
+//! modeled batch durations, dilated engine clock) and assert the parity
+//! report is clean — per-lane batch counts exactly equal, response
+//! stats within the time-scale-aware tolerance. Artifact-free: stub
+//! model, hand-built latency calibration.
+
+use std::collections::BTreeMap;
+
+use rtlm::bench_harness::replay::{run_parity, ParityTolerance, ReplayCell};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::scheduler::{PolicyKind, Task};
+use rtlm::sim::{Calibration, LatencyModel};
+use rtlm::util::rng::Pcg64;
+
+fn tiny_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), BTreeMap::from([(1, 0.01), (4, 0.018), (16, 0.04)]));
+    c.prefill
+        .insert("m".into(), BTreeMap::from([((1, 16), 0.02), ((16, 64), 0.08)]));
+    LatencyModel::from_calibration(&c)
+}
+
+fn mk_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
+    Task {
+        id,
+        text: String::new(),
+        prompt: vec![],
+        arrival,
+        priority_point,
+        uncertainty,
+        true_len: uncertainty.max(1.0) as usize,
+        input_len: 8,
+        utype: "test".into(),
+        malicious: false,
+        deferrals: 0,
+    }
+}
+
+/// A paper-shaped cell: 24 tasks over a 7 s arrival sweep, uncertainty
+/// spread across the quarantine threshold so RT-LM exercises every lane.
+fn cell(kind: PolicyKind) -> ReplayCell {
+    let mut rng = Pcg64::new(0xCE11);
+    let tasks: Vec<Task> = (0..24)
+        .map(|i| {
+            let arrival = i as f64 * 0.3;
+            // ~1 in 4 tasks above tau = 50 quarantines under RT-LM
+            let u = if i % 4 == 0 { 52.0 + rng.f64() * 8.0 } else { 5.0 + rng.f64() * 40.0 };
+            mk_task(i as u64, arrival, arrival + 3.0, u)
+        })
+        .collect();
+    ReplayCell::two_lane(
+        &format!("e2e/{}", kind.label()),
+        kind,
+        SchedParams { batch_size: 16, ..Default::default() },
+        &ModelEntry::stub("m", 0.05, 0.08),
+        50.0,
+        DeviceProfile::edge_server(),
+        tasks,
+    )
+}
+
+fn assert_clean(kind: PolicyKind) -> rtlm::bench_harness::replay::CellParity {
+    let time_scale = 25.0;
+    let parity = run_parity(
+        &cell(kind),
+        &tiny_latency(),
+        time_scale,
+        &ParityTolerance::for_time_scale(time_scale),
+    )
+    .expect("parity replay runs");
+    assert!(
+        parity.clean(),
+        "{} parity diverged: {:?}",
+        kind.label(),
+        parity.failures
+    );
+    assert_eq!(parity.n_tasks, 24);
+    assert_eq!(
+        parity.sim_batches, parity.wire_batches,
+        "clean report implies exact batch agreement"
+    );
+    parity
+}
+
+/// FIFO replays identically on both backends: same per-lane batch
+/// counts, response stats within tolerance, and no quarantine traffic
+/// (baselines only dispatch on the primary lane).
+#[test]
+fn fifo_cell_replays_clean_on_the_wire() {
+    let parity = assert_clean(PolicyKind::Fifo);
+    assert!(parity.sim_batches[0] >= 2, "24 tasks at C=16 need >= 2 gpu batches");
+    assert_eq!(parity.sim_batches[1], 0, "FIFO must not use the quarantine lane");
+    assert_eq!(parity.sim_lane_tasks[0], 24);
+}
+
+/// The full RT-LM machine — UP priorities, λ-consolidation, strategic
+/// offloading — replays identically too, with both lanes genuinely
+/// serving traffic on both backends.
+#[test]
+fn rtlm_cell_replays_clean_on_the_wire() {
+    let parity = assert_clean(PolicyKind::RtLm);
+    assert!(
+        parity.sim_batches.iter().all(|&n| n >= 1),
+        "every lane must serve >= 1 batch: {:?}",
+        parity.sim_batches
+    );
+    assert!(
+        parity.sim_lane_tasks[1] >= 3,
+        "the u > tau tail must quarantine: {:?}",
+        parity.sim_lane_tasks
+    );
+    // stats came out of genuinely different executions, not one report
+    // echoed twice: wire times carry wall jitter
+    let mean = parity.stats.iter().find(|f| f.name == "mean_response").unwrap();
+    assert!(mean.sim > 0.0 && mean.wire > 0.0);
+}

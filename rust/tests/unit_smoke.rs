@@ -28,6 +28,59 @@ fn task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
 }
 
 // ---------------------------------------------------------------------------
+// util::cli — help text must track the real flag sets
+// ---------------------------------------------------------------------------
+
+/// Every public flag of every subcommand, as read with `args.get*` /
+/// `args.flag` in `rust/src/main.rs`. When a flag is added or renamed
+/// there, this list — and the help text in `util::cli::help_text` —
+/// must follow; the help drifted silently across PR 3-4, hence the gate.
+const PUBLIC_FLAGS: &[&str] = &[
+    "--artifacts",
+    "--reps",
+    "--n",
+    "--seed",
+    "--model",
+    "--policy",
+    "--device",
+    "--variance",
+    "--export",
+    "--beta",
+    "--time-scale",
+    "--backend",
+    "--lanes",
+    "--require-all-lanes",
+    "--verbose",
+    "--addr",
+    "--pipeline",
+    "--concurrency",
+    "--timeout-s",
+    "--connect-wait-s",
+    "--expect-lanes",
+    "--p95-ms",
+    "--wire",
+    "--parity-rel",
+    "--parity-slop-ms",
+    "--parity-out",
+];
+
+#[test]
+fn help_text_mentions_every_public_flag_and_command() {
+    let help = rtlm::util::cli::help_text(rtlm::bench_harness::scenarios::EXPERIMENTS);
+    for flag in PUBLIC_FLAGS {
+        assert!(help.contains(flag), "help text is missing the {flag} flag");
+    }
+    for cmd in ["check", "calibrate", "bench", "sim", "serve", "tcp", "loadgen", "score"] {
+        assert!(help.contains(cmd), "help text is missing the {cmd} command");
+    }
+    for exp in rtlm::bench_harness::scenarios::EXPERIMENTS {
+        assert!(help.contains(exp), "help text is missing experiment {exp}");
+    }
+    // the lane-spec grammar stays documented inline
+    assert!(help.contains("kind[:model][:key=value]*"));
+}
+
+// ---------------------------------------------------------------------------
 // util::json
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Render an `rtlm bench --wire` parity report as a markdown summary.
+
+Usage:
+    parity_delta.py parity.json
+
+The input is the structured JSON `rtlm bench --wire --parity-out` writes
+(`bench_harness::replay::parity_json`): per cell, the exact-match fields
+(per-lane batch and task counts on both backends) and the toleranced
+response-time statistics, plus any rendered failures.
+
+Prints a per-cell verdict table, a per-lane batch diff table, and every
+failure verbatim. Exit code is 1 when any cell is not clean, so the CI
+`parity gate` step fails even if the rust gate was bypassed — but the
+primary gate is `rtlm bench --wire` itself, which exits nonzero on any
+parity failure.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fmt_pair(sim: float, wire: float) -> str:
+    return f"{sim:.2f} / {wire:.2f}"
+
+
+def stat(cell: dict, name: str) -> dict | None:
+    for entry in cell.get("stats", []):
+        if entry.get("name") == name:
+            return entry
+    return None
+
+
+def rel_err(entry: dict | None) -> str:
+    if entry is None:
+        return "-"
+    scale = max(abs(entry.get("sim", 0.0)), abs(entry.get("wire", 0.0)))
+    if scale <= 0:
+        return "0.0%"
+    return f"{abs(entry['sim'] - entry['wire']) / scale:.1%}"
+
+
+def lane_counts(cell: dict, key: str) -> dict:
+    return dict(zip(cell.get("lanes", []), cell.get(key, [])))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="parity JSON from rtlm bench --wire --parity-out")
+    args = ap.parse_args()
+
+    with open(args.report) as fh:
+        report = json.load(fh)
+    cells = report.get("cells", [])
+    n_fail = sum(1 for c in cells if not c.get("clean", False))
+
+    print(
+        f"### Sim-vs-wire parity ({len(cells)} cells, time-scale "
+        f"{report.get('time_scale', '?')}x, tol ±{report.get('rel_tol', '?')} rel "
+        f"+ {report.get('abs_secs', '?')} s abs)\n"
+    )
+    print("| cell | policy | n | mean RT (sim/wire s) | Δ | p95 (sim/wire s) | Δ | status |")
+    print("|---|---|---:|---:|---:|---:|---:|---|")
+    for cell in cells:
+        mean, p95 = stat(cell, "mean_response"), stat(cell, "p95_response")
+        verdict = "✅ ok" if cell.get("clean") else f"❌ {len(cell.get('failures', []))} failures"
+        mean_pair = fmt_pair(mean["sim"], mean["wire"]) if mean else "-"
+        p95_pair = fmt_pair(p95["sim"], p95["wire"]) if p95 else "-"
+        print(
+            f"| {cell.get('label', '?')} | {cell.get('policy', '?')} "
+            f"| {cell.get('n_tasks', 0):.0f} | {mean_pair} | {rel_err(mean)} "
+            f"| {p95_pair} | {rel_err(p95)} | {verdict} |"
+        )
+
+    print("\n### Per-lane dispatched batches (exact-match gate)\n")
+    print("| cell | lane | sim | wire | tasks sim | tasks wire |")
+    print("|---|---|---:|---:|---:|---:|")
+    for cell in cells:
+        sim_b = lane_counts(cell, "sim_batches")
+        wire_b = lane_counts(cell, "wire_batches")
+        sim_t = lane_counts(cell, "sim_lane_tasks")
+        wire_t = lane_counts(cell, "wire_lane_tasks")
+        for lane in cell.get("lanes", []):
+            mark = "" if sim_b.get(lane) == wire_b.get(lane) else " ⚠️"
+            print(
+                f"| {cell.get('label', '?')} | {lane} | {sim_b.get(lane, 0):.0f} "
+                f"| {wire_b.get(lane, 0):.0f}{mark} | {sim_t.get(lane, 0):.0f} "
+                f"| {wire_t.get(lane, 0):.0f} |"
+            )
+
+    failures = [(c.get("label", "?"), f) for c in cells for f in c.get("failures", [])]
+    if failures:
+        print("\n### Failures\n")
+        for label, failure in failures:
+            print(f"- `{label}`: {failure}")
+        print(f"\n**{n_fail} of {len(cells)} cells diverged.**")
+        return 1
+    print(f"\nAll {len(cells)} cells parity-clean.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

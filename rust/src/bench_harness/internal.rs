@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 
-use crate::config::DeviceProfile;
+use crate::config::{DeviceProfile, SchedMode};
 use crate::metrics::table::fmt_f;
 use crate::metrics::{histogram, Table};
 use crate::scheduler::{PolicyKind, Task};
@@ -33,6 +33,8 @@ pub fn run_internal(ctx: &ExperimentCtx) -> Result<()> {
     knee_sensitivity(ctx)?;
     println!();
     cpu_worker_sensitivity(ctx)?;
+    println!();
+    step_vs_batch(ctx)?;
     println!();
     response_distributions(ctx)?;
     Ok(())
@@ -199,6 +201,49 @@ fn distribution_cell(
         .labelled(&format!("internal/dist-{}", kind.label().to_ascii_lowercase())))
 }
 
+/// The iteration-level (`--sched step`) variant of a distribution cell:
+/// same heavy-tailed task set, slot-table dispatch.
+fn step_cell(ctx: &ExperimentCtx, tasks: Vec<Task>, kind: PolicyKind) -> Result<ReplayCell> {
+    let mut cell = distribution_cell(ctx, tasks, kind)?;
+    cell.params.mode = SchedMode::Step;
+    Ok(cell.labelled(&format!("internal/step-{}", kind.label().to_ascii_lowercase())))
+}
+
+/// Whole-batch vs iteration-level dispatch on the heavy-tailed
+/// (large-variance) trace: batch mode pins short co-batched tasks
+/// behind the longest generation; step mode releases them at their own
+/// step boundary. CI records this table in the step summary.
+fn step_vs_batch(ctx: &ExperimentCtx) -> Result<()> {
+    let mut table = Table::new(
+        "internal ablation — whole-batch vs iteration-level dispatch (heavy-tailed trace)",
+        &["policy", "sched", "mean s", "p95 s", "ttft p95 s", "steps", "preempted"],
+    );
+    let tasks = distribution_tasks(ctx)?;
+    for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+        for mode in [SchedMode::Batch, SchedMode::Step] {
+            let cell = match mode {
+                SchedMode::Batch => distribution_cell(ctx, tasks.clone(), kind)?,
+                SchedMode::Step => step_cell(ctx, tasks.clone(), kind)?,
+            };
+            let r = cell.run_sim(&ctx.lat)?;
+            let mut s = r.response_times();
+            let mut ttft = r.ttft_times();
+            table.row(vec![
+                kind.label().into(),
+                mode.label().into(),
+                fmt_f(s.mean(), 2),
+                fmt_f(s.p95(), 2),
+                fmt_f(ttft.p95(), 2),
+                r.n_steps.iter().sum::<usize>().to_string(),
+                r.n_preempted.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!("(step mode joins at step boundaries and leaves individually; see DESIGN.md)");
+    Ok(())
+}
+
 /// Fig. 9's distributions as printable histograms (FIFO vs RT-LM).
 fn response_distributions(ctx: &ExperimentCtx) -> Result<()> {
     let tasks = distribution_tasks(ctx)?;
@@ -220,10 +265,12 @@ fn response_distributions(ctx: &ExperimentCtx) -> Result<()> {
 
 /// The internal comparison cells, as the wire-parity suite `rtlm bench
 /// --wire` replays: aging (full + static-slack emulation), the batching
-/// knee extremes, the quarantine-pool extremes, and the FIFO/RT-LM
-/// distribution pair. Together they cover every policy machinery the
-/// internal ablations measure — UP priorities, consolidation, strategic
-/// offloading, FIFO batching — on both engine backends.
+/// knee extremes, the quarantine-pool extremes, the FIFO/RT-LM
+/// distribution pair, and the iteration-level (`--sched step`) pair
+/// over the same distribution trace. Together they cover every policy
+/// machinery the internal ablations measure — UP priorities,
+/// consolidation, strategic offloading, FIFO batching, slot-table
+/// dispatch — on both engine backends.
 ///
 /// `filter` selects cells by label — an exact match (whole label, or
 /// its final `/`-segment, e.g. `knee1`) selects just that cell even
@@ -242,6 +289,11 @@ pub fn parity_cells(ctx: &ExperimentCtx, filter: Option<&str>) -> Result<Vec<Rep
         kind_points
             .iter()
             .map(|kind| format!("internal/dist-{}", kind.label().to_ascii_lowercase())),
+    );
+    labels.extend(
+        kind_points
+            .iter()
+            .map(|kind| format!("internal/step-{}", kind.label().to_ascii_lowercase())),
     );
     let exact = filter
         .map(|f| labels.iter().any(|l| l == f || l.ends_with(&format!("/{f}"))))
@@ -286,10 +338,17 @@ pub fn parity_cells(ctx: &ExperimentCtx, filter: Option<&str>) -> Result<Vec<Rep
         .into_iter()
         .filter(|kind| keep(&format!("internal/dist-{}", kind.label().to_ascii_lowercase())))
         .collect();
-    if !kinds.is_empty() {
+    let step_kinds: Vec<PolicyKind> = kind_points
+        .into_iter()
+        .filter(|kind| keep(&format!("internal/step-{}", kind.label().to_ascii_lowercase())))
+        .collect();
+    if !kinds.is_empty() || !step_kinds.is_empty() {
         let tasks = distribution_tasks(ctx)?;
         for kind in kinds {
             cells.push(distribution_cell(ctx, tasks.clone(), kind)?);
+        }
+        for kind in step_kinds {
+            cells.push(step_cell(ctx, tasks.clone(), kind)?);
         }
     }
     Ok(cells)

@@ -55,7 +55,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::config::{DeviceProfile, ModelEntry, SchedParams};
+use crate::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
 use crate::executor::modeled_factory;
 use crate::metrics::table::fmt_f;
 use crate::metrics::Table;
@@ -258,14 +258,26 @@ pub struct CellParity {
     pub n_tasks: usize,
     /// Lane names, in `LaneId` order.
     pub lanes: Vec<String>,
-    /// Dispatched batches per lane on the virtual clock (exact-match).
+    /// Dispatched batches per lane on the virtual clock (exact-match in
+    /// batch mode; reported but not asserted in step mode, where a
+    /// "batch" is a join group and group composition races lane timing).
     pub sim_batches: Vec<usize>,
-    /// Dispatched batches per lane on the wire (exact-match).
+    /// Dispatched batches per lane on the wire (see `sim_batches`).
     pub wire_batches: Vec<usize>,
     /// Completed tasks per lane on the virtual clock (exact-match).
     pub sim_lane_tasks: Vec<usize>,
     /// Completed tasks per lane on the wire (exact-match).
     pub wire_lane_tasks: Vec<usize>,
+    /// Executed decode steps per lane on the virtual clock
+    /// (exact-match: per-task step counts are timing-independent).
+    pub sim_steps: Vec<usize>,
+    /// Executed decode steps per lane on the wire (exact-match).
+    pub wire_steps: Vec<usize>,
+    /// Preempted generations on the virtual clock (exact-match; always
+    /// 0 in batch mode).
+    pub sim_preempted: usize,
+    /// Preempted generations on the wire (exact-match).
+    pub wire_preempted: usize,
     /// Toleranced statistics.
     pub stats: Vec<FieldCheck>,
     /// Every violated check, rendered human-readably; empty = clean.
@@ -287,6 +299,22 @@ impl CellParity {
             .collect::<Vec<_>>()
             .join(" ")
     }
+
+    /// `name=sim/wire` per-lane decode-step table, e.g. `gpu=412/412`.
+    pub fn fmt_steps(&self) -> String {
+        self.lanes
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                format!(
+                    "{name}={}/{}",
+                    self.sim_steps.get(i).copied().unwrap_or(0),
+                    self.wire_steps.get(i).copied().unwrap_or(0)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
 }
 
 fn lane_task_counts(outcomes: &[crate::sim::results::TaskOutcome], n_lanes: usize) -> Vec<usize> {
@@ -302,11 +330,17 @@ fn lane_task_counts(outcomes: &[crate::sim::results::TaskOutcome], n_lanes: usiz
 /// Diff a cell's virtual-clock and wire reports into a [`CellParity`].
 ///
 /// Exact-match fields: policy name, total task count, per-lane task
-/// counts, per-lane batch counts. Toleranced fields (under `tol`):
-/// mean/p95/max response time, makespan, mean pure-inference time.
+/// counts, per-lane decode-step counts, preemption counts — and, in
+/// [`SchedMode::Batch`], per-lane batch counts (in step mode a "batch"
+/// is a join group whose composition races lane timing on the wire, so
+/// group counts are reported but not asserted; the timing-independent
+/// step counters take over as the exact discriminator). Toleranced
+/// fields (under `tol`): mean/p95/max response time, mean/p95 TTFT,
+/// makespan, mean pure-inference time.
 pub fn check_parity(
     label: &str,
     n_tasks: usize,
+    mode: SchedMode,
     sim: &SimResult,
     wire: &ServeReport,
     tol: &ParityTolerance,
@@ -338,13 +372,28 @@ pub fn check_parity(
             sim.n_batches.get(i).copied().unwrap_or(0),
             wire.n_batches.get(i).copied().unwrap_or(0),
         );
-        if sb != wb {
+        if mode == SchedMode::Batch && sb != wb {
             failures.push(format!("batches[{name}]: sim {sb} != wire {wb}"));
         }
+        let (ss, ws) = (
+            sim.n_steps.get(i).copied().unwrap_or(0),
+            wire.n_steps.get(i).copied().unwrap_or(0),
+        );
+        if ss != ws {
+            failures.push(format!("steps[{name}]: sim {ss} != wire {ws}"));
+        }
+    }
+    if sim.n_preempted != wire.n_preempted {
+        failures.push(format!(
+            "preempted: sim {} != wire {}",
+            sim.n_preempted, wire.n_preempted
+        ));
     }
 
     let mut sim_rt = sim.response_times();
     let mut wire_rt = wire.response_times();
+    let mut sim_ttft = sim.ttft_times();
+    let mut wire_ttft = wire.ttft_times();
     let wire_makespan = wire.outcomes.iter().map(|o| o.completion).fold(0.0, f64::max);
     let wire_mean_infer = if wire.outcomes.is_empty() {
         0.0
@@ -356,6 +405,8 @@ pub fn check_parity(
         ("mean_response", sim_rt.mean(), wire_rt.mean()),
         ("p95_response", sim_rt.p95(), wire_rt.p95()),
         ("max_response", sim_rt.max(), wire_rt.max()),
+        ("mean_ttft", sim_ttft.mean(), wire_ttft.mean()),
+        ("p95_ttft", sim_ttft.p95(), wire_ttft.p95()),
         ("makespan", sim.makespan, wire_makespan),
         ("mean_infer", sim.mean_infer_secs(), wire_mean_infer),
     ] {
@@ -382,6 +433,10 @@ pub fn check_parity(
         wire_batches: wire.n_batches.clone(),
         sim_lane_tasks,
         wire_lane_tasks,
+        sim_steps: sim.n_steps.clone(),
+        wire_steps: wire.n_steps.clone(),
+        sim_preempted: sim.n_preempted,
+        wire_preempted: wire.n_preempted,
         stats,
         failures,
     }
@@ -398,15 +453,15 @@ pub fn run_parity(
     let det = cell.deterministic();
     let sim = det.run_sim(lat)?;
     let wire = det.run_wire(lat, time_scale)?;
-    Ok(check_parity(&det.label, det.tasks.len(), &sim, &wire, tol))
+    Ok(check_parity(&det.label, det.tasks.len(), det.params.mode, &sim, &wire, tol))
 }
 
 /// Render the parity suite as the ASCII table `rtlm bench --wire`
 /// prints.
 pub fn render_parity(cells: &[CellParity]) -> String {
     let mut table = Table::new(
-        "sim-vs-wire parity (batches exact, stats toleranced; values sim/wire)",
-        &["cell", "policy", "n", "batches", "mean s", "p95 s", "makespan s", "status"],
+        "sim-vs-wire parity (counts exact, stats toleranced; values sim/wire)",
+        &["cell", "policy", "n", "batches", "steps", "mean s", "p95 s", "ttft p95 s", "status"],
     );
     for c in cells {
         let stat = |name: &str| -> String {
@@ -421,9 +476,10 @@ pub fn render_parity(cells: &[CellParity]) -> String {
             c.policy.clone(),
             c.n_tasks.to_string(),
             c.fmt_batches(),
+            c.fmt_steps(),
             stat("mean_response"),
             stat("p95_response"),
-            stat("makespan"),
+            stat("p95_ttft"),
             if c.clean() { "ok".into() } else { format!("FAIL ({})", c.failures.len()) },
         ]);
     }
@@ -459,6 +515,16 @@ pub fn parity_json(time_scale: f64, tol: &ParityTolerance, cells: &[CellParity])
                 "wire_lane_tasks",
                 Json::Arr(c.wire_lane_tasks.iter().map(|&n| Json::Num(n as f64)).collect()),
             ),
+            (
+                "sim_steps",
+                Json::Arr(c.sim_steps.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "wire_steps",
+                Json::Arr(c.wire_steps.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("sim_preempted", Json::Num(c.sim_preempted as f64)),
+            ("wire_preempted", Json::Num(c.wire_preempted as f64)),
             (
                 "stats",
                 Json::Arr(
@@ -500,6 +566,7 @@ mod tests {
             id,
             arrival: 0.0,
             completion,
+            first_token: completion / 2.0,
             priority_point: 5.0,
             uncertainty: 10.0,
             true_len: 10,
@@ -521,6 +588,8 @@ mod tests {
             sched_wall_secs: 0.0,
             lanes: vec!["gpu".into(), "cpu".into()],
             n_batches,
+            n_steps: vec![0, 0],
+            n_preempted: 0,
         }
     }
 
@@ -565,8 +634,14 @@ mod tests {
         ];
         let sim = sim_result(vec![1, 1], &done);
         let wire = wire_report(vec![1, 1], &done);
-        let parity =
-            check_parity("cell", 3, &sim, &wire, &ParityTolerance { rel: 0.1, abs_secs: 0.1 });
+        let parity = check_parity(
+            "cell",
+            3,
+            SchedMode::Batch,
+            &sim,
+            &wire,
+            &ParityTolerance { rel: 0.1, abs_secs: 0.1 },
+        );
         assert!(parity.clean(), "{:?}", parity.failures);
         assert_eq!(parity.fmt_batches(), "gpu=1/1 cpu=1/1");
         assert!(parity.stats.iter().all(|f| f.ok));
@@ -582,6 +657,7 @@ mod tests {
         let parity = check_parity(
             "cell",
             2,
+            SchedMode::Batch,
             &sim,
             &wire,
             &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
@@ -596,12 +672,43 @@ mod tests {
     }
 
     #[test]
+    fn step_mode_skips_batch_counts_but_exact_matches_steps() {
+        let done = [(0, 1.0, LaneId::GPU), (1, 2.0, LaneId::GPU)];
+        let mut sim = sim_result(vec![2, 0], &done);
+        sim.n_steps = vec![20, 0];
+        // one join group on the wire vs two in sim: fine in step mode
+        let mut wire = wire_report(vec![1, 0], &done);
+        wire.n_steps = vec![20, 0];
+        let tol = ParityTolerance { rel: 1.0, abs_secs: 100.0 };
+        let parity = check_parity("cell", 2, SchedMode::Step, &sim, &wire, &tol);
+        assert!(parity.clean(), "{:?}", parity.failures);
+        // diverging step counts fail exactly
+        wire.n_steps = vec![19, 0];
+        let parity = check_parity("cell", 2, SchedMode::Step, &sim, &wire, &tol);
+        assert!(
+            parity.failures.iter().any(|f| f.contains("steps[gpu]")),
+            "{:?}",
+            parity.failures
+        );
+        // so does a preemption-count mismatch
+        wire.n_steps = vec![20, 0];
+        wire.n_preempted = 1;
+        let parity = check_parity("cell", 2, SchedMode::Step, &sim, &wire, &tol);
+        assert!(parity.failures.iter().any(|f| f.contains("preempted")));
+        // and in batch mode the group-count divergence is itself a failure
+        wire.n_preempted = 0;
+        let parity = check_parity("cell", 2, SchedMode::Batch, &sim, &wire, &tol);
+        assert!(parity.failures.iter().any(|f| f.contains("batches[gpu]")));
+    }
+
+    #[test]
     fn lane_routing_mismatch_is_exact() {
         let sim = sim_result(vec![1, 1], &[(0, 1.0, LaneId::GPU), (1, 3.0, LaneId::CPU)]);
         let wire = wire_report(vec![1, 1], &[(0, 1.0, LaneId::GPU), (1, 3.0, LaneId::GPU)]);
         let parity = check_parity(
             "cell",
             2,
+            SchedMode::Batch,
             &sim,
             &wire,
             &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
@@ -614,8 +721,14 @@ mod tests {
     fn stat_outside_tolerance_fails_with_values_rendered() {
         let sim = sim_result(vec![1, 0], &[(0, 1.0, LaneId::GPU)]);
         let wire = wire_report(vec![1, 0], &[(0, 9.0, LaneId::GPU)]);
-        let parity =
-            check_parity("cell", 1, &sim, &wire, &ParityTolerance { rel: 0.1, abs_secs: 0.1 });
+        let parity = check_parity(
+            "cell",
+            1,
+            SchedMode::Batch,
+            &sim,
+            &wire,
+            &ParityTolerance { rel: 0.1, abs_secs: 0.1 },
+        );
         assert!(!parity.clean());
         let failure = parity
             .failures
@@ -635,6 +748,7 @@ mod tests {
         let parity = check_parity(
             "cell",
             2,
+            SchedMode::Batch,
             &sim,
             &wire,
             &ParityTolerance { rel: 1.0, abs_secs: 100.0 },
@@ -648,7 +762,7 @@ mod tests {
         let sim = sim_result(vec![1, 0], &done);
         let wire = wire_report(vec![1, 0], &done);
         let tol = ParityTolerance { rel: 0.1, abs_secs: 0.1 };
-        let parity = check_parity("my-cell", 1, &sim, &wire, &tol);
+        let parity = check_parity("my-cell", 1, SchedMode::Batch, &sim, &wire, &tol);
         let rendered = render_parity(std::slice::from_ref(&parity));
         assert!(rendered.contains("my-cell") && rendered.contains("ok"), "{rendered}");
         let json = parity_json(25.0, &tol, std::slice::from_ref(&parity));

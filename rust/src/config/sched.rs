@@ -1,4 +1,44 @@
-//! Scheduler hyper-parameters (paper Sec. IV / V-A).
+//! Scheduler hyper-parameters (paper Sec. IV / V-A) and the scheduler
+//! mode selector (whole-batch vs iteration-level dispatch).
+
+/// How accelerator lanes cycle work through the engine.
+///
+/// `Batch` is the paper's discipline: a lane takes a whole batch,
+/// executes prefill + max-length decode, and frees only when every
+/// co-batched task is done. `Step` is iteration-level (continuous)
+/// batching: each accelerator lane owns a slot table and runs a
+/// persistent decode loop — tasks join at the next step boundary after
+/// their prefill, leave individually when their own generation ends,
+/// and freed slots are refilled from the queue between steps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Whole-batch dispatch: one batch in flight per lane (default;
+    /// bit-identical to the historical engine).
+    #[default]
+    Batch,
+    /// Iteration-level dispatch: per-lane slot table, per-decode-step
+    /// join/leave.
+    Step,
+}
+
+impl SchedMode {
+    /// Parse a `--sched` CLI value (`batch` | `step`).
+    pub fn parse(s: &str) -> anyhow::Result<SchedMode> {
+        match s {
+            "batch" => Ok(SchedMode::Batch),
+            "step" => Ok(SchedMode::Step),
+            _ => anyhow::bail!("--sched: expected 'batch' or 'step', got '{s}'"),
+        }
+    }
+
+    /// The CLI spelling (`batch` / `step`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedMode::Batch => "batch",
+            SchedMode::Step => "step",
+        }
+    }
+}
 
 /// All tunables of UASCHED (Algorithm 1) plus workload-level knobs.
 #[derive(Clone, Debug)]
@@ -26,6 +66,16 @@ pub struct SchedParams {
     /// Floor for the slack denominator in Eq. 3 (seconds): an overdue
     /// task saturates at maximal priority instead of dividing by <= 0.
     pub min_slack: f64,
+    /// Dispatch discipline: whole-batch (default) or iteration-level.
+    pub mode: SchedMode,
+    /// Step mode only: decode slots per accelerator lane (0 = use the
+    /// lane's batch size). Batch mode ignores it.
+    pub slots: usize,
+    /// Step mode only: preempt a running generation to the CPU lane once
+    /// its executed decode steps exceed `overrun_factor` times its
+    /// predicted length (uncertainty score). Non-finite or <= 0 disables
+    /// preemption. Batch mode ignores it.
+    pub overrun_factor: f64,
 }
 
 impl Default for SchedParams {
@@ -39,7 +89,20 @@ impl Default for SchedParams {
             batch_size: 16,
             u_scale: 96.0,
             min_slack: 1e-3,
+            mode: SchedMode::Batch,
+            slots: 0,
+            overrun_factor: 3.0,
         }
+    }
+}
+
+impl SchedParams {
+    /// Decode slots a step-mode accelerator lane with batch size `c`
+    /// exposes: the explicit `slots` override, else the lane's batch
+    /// size (so `--sched step` alone keeps lane capacity comparable to
+    /// batch mode).
+    pub fn slots_for(&self, c: usize) -> usize {
+        if self.slots > 0 { self.slots } else { c.max(1) }
     }
 }
 
@@ -77,5 +140,22 @@ mod tests {
         assert_eq!(p.accumulate_len(), 18);
         p.b = 0.5; // never below one batch
         assert_eq!(p.accumulate_len(), 10);
+    }
+
+    #[test]
+    fn mode_defaults_to_batch() {
+        let p = SchedParams::default();
+        assert_eq!(p.mode, SchedMode::Batch);
+        assert_eq!(p.slots_for(16), 16); // slots=0 -> lane batch size
+        let p = SchedParams { slots: 4, ..Default::default() };
+        assert_eq!(p.slots_for(16), 4);
+    }
+
+    #[test]
+    fn sched_mode_parses() {
+        assert_eq!(SchedMode::parse("batch").unwrap(), SchedMode::Batch);
+        assert_eq!(SchedMode::parse("step").unwrap(), SchedMode::Step);
+        assert!(SchedMode::parse("rolling").is_err());
+        assert_eq!(SchedMode::Step.label(), "step");
     }
 }

@@ -11,10 +11,22 @@
 //!   wall-clock engine guessed "arrivals done" from queue lengths and
 //!   could force while arrivals were still in flight) — or once the
 //!   oldest queued task has waited `params.xi` engine-seconds.
-//! - **Lane gating**: at most one batch in flight per lane; a lane
-//!   accepts the next batch only when the previous one has fully
-//!   completed (the historical simulator let the CPU lane stack tasks
-//!   onto busy workers).
+//! - **Lane gating**: every lane owns a slot table. A whole-batch lane
+//!   (the default, and every lane in [`SchedMode::Batch`]) exposes one
+//!   slot holding one batch: it accepts the next batch only when the
+//!   previous one has fully completed (the historical simulator let the
+//!   CPU lane stack tasks onto busy workers). A stepped lane
+//!   ([`SchedMode::Step`] accelerator lanes, declared via
+//!   [`ExecutionBackend::lane_slots`]) exposes K slots holding one
+//!   *task* each: tasks join the lane's persistent decode loop at the
+//!   next step boundary after prefill and leave individually when their
+//!   generation ends, freeing their slot for the next pop.
+//! - **Preemption** (stepped lanes only): a backend may eject a running
+//!   generation that overran its predicted length
+//!   ([`SchedParams::overrun_factor`]) at a step boundary; the core
+//!   frees its slot and re-queues the re-scored task through the
+//!   policy, so the existing CPU-lane admission decides where the
+//!   remainder runs.
 //! - **Waiting**: the core computes the next ξ-expiry and hands it to
 //!   the backend as an absolute-time deadline — wall-clock backends
 //!   sleep until an event or that deadline instead of busy-polling.
@@ -38,7 +50,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::SchedParams;
+use crate::config::{SchedMode, SchedParams};
 use crate::scheduler::{Batch, LaneId, Policy, Task};
 use crate::sim::results::TaskOutcome;
 
@@ -51,6 +63,12 @@ pub struct TaskDone {
     pub at: f64,
     /// Pure inference seconds attributed to this task.
     pub infer_secs: f64,
+    /// Engine-clock time the task's first output token was ready: the
+    /// end of its prefill (whole-batch lanes charge the whole batch's
+    /// prefill; stepped lanes charge the task's own join prefill plus
+    /// its first decode step). Non-finite when the backend cannot
+    /// attribute one — the core then falls back to the completion time.
+    pub first_token_at: f64,
     /// Generated token ids (empty on backends that produce no text,
     /// e.g. the virtual-clock simulator).
     pub output: Vec<i32>,
@@ -70,6 +88,13 @@ pub struct BatchDone {
     /// Pure model-inference seconds of the whole batch (counted once,
     /// not per task).
     pub batch_infer_secs: f64,
+    /// Decode iterations this event accounts for: the batch's
+    /// max-output-length on a whole-batch accelerator lane, the summed
+    /// per-task output lengths on a CPU pool, the leaving task's own
+    /// executed steps on a stepped lane. Summed per lane into
+    /// [`EngineReport::n_steps`] — a deterministic, timing-independent
+    /// counter the step-mode parity cells exact-match on.
+    pub steps: usize,
 }
 
 /// Everything that happened since the previous wait, up to the
@@ -80,6 +105,15 @@ pub struct Step {
     pub arrivals: Vec<Task>,
     /// Batches that finished; their lanes are free again.
     pub done: Vec<BatchDone>,
+    /// Stepped lanes only: running generations the backend ejected at a
+    /// step boundary for overrunning their predicted length
+    /// ([`SchedParams::overrun_factor`]). Each task arrives re-scored —
+    /// `uncertainty` raised to the steps it already executed,
+    /// `true_len` reduced to the steps it still needs — and the core
+    /// frees its slot and re-queues it through the policy, which routes
+    /// it through the ordinary lane admissions (typically to the CPU
+    /// lane). A backend ejects any given task at most once.
+    pub preempted: Vec<Preempted>,
     /// The arrival stream is closed: every arrival the source will ever
     /// produce has been delivered in this or an earlier step. Latched by
     /// the core; only [`ArrivalSource::Stream`] runs consult it.
@@ -88,6 +122,23 @@ pub struct Step {
     /// pending arrivals, nothing in flight, no deadline). With tasks
     /// still queued this means the policy refuses to emit — a bug.
     pub exhausted: bool,
+}
+
+/// A generation ejected from a stepped lane at a step boundary (see
+/// [`Step::preempted`]).
+#[derive(Debug)]
+pub struct Preempted {
+    /// Lane the task was running on; its slot frees.
+    pub lane: LaneId,
+    /// Decode steps it executed there before ejection (accounted into
+    /// [`EngineReport::n_steps`]).
+    pub steps: usize,
+    /// Lane-seconds the partial generation consumed (accounted into
+    /// [`EngineReport::infer_secs`] — the eventual completion on the
+    /// new lane reports only the work done there).
+    pub infer_secs: f64,
+    /// The re-scored task the core re-queues through the policy.
+    pub task: Task,
 }
 
 /// An execution environment the dispatcher core can drive: a clock, a
@@ -100,8 +151,21 @@ pub trait ExecutionBackend {
     /// Current engine-clock time in seconds.
     fn now(&mut self) -> f64;
 
-    /// Start executing a batch on its lane. The core guarantees at most
-    /// one batch in flight per lane.
+    /// Slot capacity of `lane`: `Some(k)` if the lane runs an
+    /// iteration-level decode loop with `k` concurrent task slots
+    /// (tasks join and leave individually, the core counts occupancy in
+    /// tasks), `None` if the lane executes whole batches (at most one
+    /// in flight, occupancy counted in batches). The default — every
+    /// lane whole-batch — is exactly the historical engine, so batch
+    /// mode is untouched by the slot-table generalisation.
+    fn lane_slots(&self, _lane: LaneId) -> Option<usize> {
+        None
+    }
+
+    /// Start executing a batch on its lane. The core guarantees the
+    /// lane has capacity: a whole-batch lane is idle, a stepped lane
+    /// has at least `batch.tasks.len()` free slots (the tasks join the
+    /// lane's decode loop at its next step boundary).
     fn submit(&mut self, batch: Batch) -> Result<()>;
 
     /// Block until the next event (arrival or completion) or until the
@@ -144,8 +208,16 @@ pub struct EngineReport {
     pub infer_secs: f64,
     /// Dispatched batches per lane, indexed by [`LaneId`] — the old
     /// `n_batches_gpu` / `n_batches_cpu` pair is slots 0 / 1 of the
-    /// default two-lane fleet.
+    /// default two-lane fleet. On stepped lanes a "batch" is one join
+    /// group (the tasks admitted together at a step boundary).
     pub n_batches: Vec<usize>,
+    /// Decode iterations per lane (see [`BatchDone::steps`]), indexed
+    /// by [`LaneId`]. Deterministic across backends — step-mode parity
+    /// cells compare it exactly.
+    pub n_steps: Vec<usize>,
+    /// Stepped lanes only: generations ejected mid-flight for
+    /// overrunning their predicted length and re-queued.
+    pub n_preempted: usize,
     /// Every dispatched batch in dispatch order: `(lane, task ids)`.
     /// The cross-backend equivalence test compares these. Empty in
     /// streaming mode, like `outcomes`.
@@ -180,6 +252,7 @@ pub fn run_engine_stream(
     let mut report = EngineReport {
         policy: policy.name(),
         n_batches: vec![0; n_lanes],
+        n_steps: vec![0; n_lanes],
         ..Default::default()
     };
 
@@ -196,7 +269,19 @@ pub fn run_engine_stream(
     let mut admitted = 0usize;
     let mut completed = 0usize;
     let mut stream_closed = false;
-    let mut busy = vec![false; n_lanes];
+    // Per-lane slot tables. `None` capacity = whole-batch lane, one
+    // batch in flight, occupancy counted 0/1 in batches (the historical
+    // `busy` flag); `Some(k)` = stepped lane, occupancy counted in
+    // tasks against k slots.
+    let slot_cap: Vec<Option<usize>> =
+        (0..n_lanes).map(|l| backend.lane_slots(LaneId(l))).collect();
+    debug_assert!(
+        params.mode == SchedMode::Step || slot_cap.iter().all(|c| c.is_none()),
+        "whole-batch runs must not expose stepped lanes"
+    );
+    let mut occupied = vec![0usize; n_lanes];
+    let slots_free =
+        |occupied: &[usize], lane: usize| slot_cap[lane].unwrap_or(1).saturating_sub(occupied[lane]);
     let mut iterations = 0usize;
 
     loop {
@@ -232,7 +317,11 @@ pub fn run_engine_stream(
             ArrivalSource::Stream => stream_closed,
         };
         let now = backend.now();
-        let oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
+        // The oldest queued arrival drives both the ξ-forcing decision
+        // here and the wait deadline below. One fold per round: dispatch
+        // below shrinks `queued`, so the deadline site refreshes the
+        // value only when something was actually dispatched.
+        let mut oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
         // ξ-expiry is compared as `now >= oldest + xi` — the *same*
         // float expression the wait deadline below hands the backend —
         // so a wakeup at the deadline always observes force=true. (The
@@ -240,19 +329,37 @@ pub fn run_engine_stream(
         // expiry instant and livelock the loop re-arming a deadline
         // that never fires force.)
         let force = arrivals_done || (oldest.is_finite() && now >= oldest + params.xi);
+        let mut dispatched_any = false;
         for lane in (0..n_lanes).map(LaneId) {
-            if busy[lane.index()] {
+            let free = slots_free(&occupied, lane.index());
+            if free == 0 {
                 continue;
             }
             let t0 = Instant::now();
-            let batch = policy.pop_batch(lane, now, force);
+            let batch = match slot_cap[lane.index()] {
+                // whole-batch lane: the historical pop, untouched
+                None => policy.pop_batch(lane, now, force),
+                // stepped lane: fill up to `free` slots from the queue
+                Some(_) => policy.pop_fill(lane, now, force, free),
+            };
             report.sched_secs += t0.elapsed().as_secs_f64();
             if let Some(batch) = batch {
-                busy[lane.index()] = true;
+                if slot_cap[lane.index()].is_some() {
+                    assert!(
+                        batch.tasks.len() <= free,
+                        "policy overfilled lane {lane}: {} tasks into {free} slots",
+                        batch.tasks.len()
+                    );
+                }
+                occupied[lane.index()] += match slot_cap[lane.index()] {
+                    None => 1,
+                    Some(_) => batch.tasks.len(),
+                };
                 report.n_batches[lane.index()] += 1;
                 for task in &batch.tasks {
                     queued.remove(&task.id);
                 }
+                dispatched_any = true;
                 if store_results {
                     let ids: Vec<u64> = batch.tasks.iter().map(|t| t.id).collect();
                     report.dispatch_log.push((lane, ids));
@@ -272,8 +379,12 @@ pub fn run_engine_stream(
         // wall-clock backend until the next unrelated event. A deadline
         // that is already due simply makes `wait` return immediately and
         // the next iteration dispatch forced.
-        let any_idle = busy.contains(&false);
-        let oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
+        let any_idle = (0..n_lanes).any(|l| slots_free(&occupied, l) > 0);
+        if dispatched_any {
+            // dispatch removed entries from `queued`; refresh the fold
+            // so the deadline keys on what is still waiting
+            oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
+        }
         let deadline = if any_idle && !force && oldest.is_finite() {
             Some(oldest + params.xi)
         } else {
@@ -284,7 +395,7 @@ pub fn run_engine_stream(
 
         if step.exhausted {
             assert!(
-                step.arrivals.is_empty() && step.done.is_empty(),
+                step.arrivals.is_empty() && step.done.is_empty() && step.preempted.is_empty(),
                 "backend reported exhausted with undelivered events"
             );
             // an empty stream can close and exhaust in the same step;
@@ -309,16 +420,41 @@ pub fn run_engine_stream(
             report.sched_secs += t0.elapsed().as_secs_f64();
         }
 
+        // -- re-queue preempted generations --------------------------------
+        // The slot frees immediately; the re-scored remainder goes back
+        // through policy.push, whose lane routing (the ordinary CPU-lane
+        // admission) decides where it finishes. `meta` keeps the
+        // original record, so the final outcome reports the task's true
+        // arrival/uncertainty/length, not the re-scored stub.
+        for p in step.preempted {
+            let lane = p.lane.index();
+            assert!(slot_cap[lane].is_some(), "preemption on a whole-batch lane");
+            occupied[lane] = occupied[lane].saturating_sub(1);
+            report.n_steps[lane] += p.steps;
+            report.infer_secs += p.infer_secs;
+            report.n_preempted += 1;
+            queued.insert(p.task.id, p.task.arrival);
+            let t0 = Instant::now();
+            policy.push(p.task);
+            report.sched_secs += t0.elapsed().as_secs_f64();
+        }
+
         // -- account completions -------------------------------------------
         for done in step.done {
-            busy[done.lane.index()] = false;
+            let lane = done.lane.index();
+            occupied[lane] = occupied[lane].saturating_sub(match slot_cap[lane] {
+                None => 1,
+                Some(_) => done.completions.len(),
+            });
             report.infer_secs += done.batch_infer_secs;
+            report.n_steps[lane] += done.steps;
             for t in done.completions {
                 let task = meta.remove(&t.id).expect("unknown task completed");
                 let outcome = TaskOutcome {
                     id: t.id,
                     arrival: task.arrival,
                     completion: t.at,
+                    first_token: if t.first_token_at.is_finite() { t.first_token_at } else { t.at },
                     priority_point: task.priority_point,
                     uncertainty: task.uncertainty,
                     true_len: task.true_len,

@@ -12,15 +12,15 @@
 //!
 //! [`LaneSpec`]: crate::scheduler::LaneSpec
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{DeviceProfile, ModelEntry};
-use crate::scheduler::{Batch, LaneKind, LaneSet, Task};
+use crate::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
+use crate::scheduler::{Batch, LaneId, LaneKind, LaneSet, Task};
 use crate::sim::latency::LatencyModel;
 
-use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
+use super::core::{BatchDone, ExecutionBackend, Preempted, Step, TaskDone};
 
 /// One lane's resolved simulation parameters: which latency curves it
 /// draws from and how it executes a batch.
@@ -32,14 +32,20 @@ pub struct SimLane {
     pub model: ModelEntry,
     /// Intra-batch workers ([`LaneKind::Cpu`] lanes only).
     pub workers: usize,
+    /// Per-lane batch-size override (`None` uses
+    /// `SchedParams::batch_size`); sizes the step-mode slot table.
+    pub batch_size: Option<usize>,
 }
 
-/// Resolve a [`LaneSet`] against a model table and device profile into
-/// per-lane simulation parameters. `models` maps manifest model names
-/// to entries; every lane's variant must be present.
+/// Resolve a [`LaneSet`] against a model table, latency curves, and
+/// device profile into per-lane simulation parameters. `models` maps
+/// manifest model names to entries; every lane's variant must be
+/// present in both the table and the latency curves — a misnamed
+/// variant is an error here, not a silently-wrong simulation.
 pub fn resolve_lanes(
     lanes: &LaneSet,
     models: &BTreeMap<String, ModelEntry>,
+    lat: &LatencyModel,
     dev: &DeviceProfile,
 ) -> Result<Vec<SimLane>> {
     lanes
@@ -49,10 +55,13 @@ pub fn resolve_lanes(
                 .get(&spec.model)
                 .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?
                 .clone();
+            lat.require_model(&model.name)
+                .map_err(|e| anyhow!("lane '{}': {e}", spec.name))?;
             Ok(SimLane {
                 kind: spec.kind,
                 model,
                 workers: spec.workers.unwrap_or(dev.cpu_workers).max(1),
+                batch_size: spec.batch_size,
             })
         })
         .collect()
@@ -65,6 +74,35 @@ struct InFlight {
     done: BatchDone,
 }
 
+/// One generation inside a stepped lane's decode loop.
+struct StepSlot {
+    task: Task,
+    /// Engine time its join-group prefill completes (first token; the
+    /// generation participates in ticks from here on).
+    ready_at: f64,
+    /// Decode steps still to execute.
+    remaining: usize,
+    /// Decode steps executed on this lane so far.
+    done_steps: usize,
+    /// Lane-seconds attributed to this task (prefill + tick shares).
+    infer_secs: f64,
+    /// Participating in the tick currently in progress?
+    in_tick: bool,
+}
+
+/// A stepped accelerator lane: a slot table plus the persistent decode
+/// loop's state. Each *tick* advances every ready generation by one
+/// decode step and costs `decode_step_dev(model, n_participants)` —
+/// occupancy prices the tick, co-batched tasks do not wait for each
+/// other's completion.
+struct StepLane {
+    slots: usize,
+    active: Vec<StepSlot>,
+    /// End of the tick in progress (`None` = loop parked, waiting for a
+    /// join's prefill to complete).
+    tick_done_at: Option<f64>,
+}
+
 /// The virtual-clock [`ExecutionBackend`] over a [`LatencyModel`].
 pub struct SimBackend<'a> {
     /// Remaining arrivals, sorted ascending by arrival time.
@@ -74,24 +112,60 @@ pub struct SimBackend<'a> {
     now: f64,
     lanes: Vec<SimLane>,
     in_flight: Vec<Option<InFlight>>,
+    /// `Some` for stepped lanes ([`SchedMode::Step`] accelerator
+    /// lanes); whole-batch lanes stay on `in_flight`.
+    stepped: Vec<Option<StepLane>>,
+    /// Overrun factor for mid-flight preemption (non-finite disables).
+    overrun: f64,
+    /// Tasks already preempted once — never ejected again.
+    preempted_ids: HashSet<u64>,
     lat: &'a LatencyModel,
     dev: &'a DeviceProfile,
 }
 
 impl<'a> SimBackend<'a> {
     /// `tasks` must be sorted ascending by arrival time. `lanes` come
-    /// from [`resolve_lanes`].
+    /// from [`resolve_lanes`]. In [`SchedMode::Step`] every accelerator
+    /// lane becomes a stepped lane with
+    /// [`SchedParams::slots_for`]\(lane batch size) decode slots; CPU
+    /// pools keep whole-batch semantics in both modes.
     pub fn new(
         tasks: Vec<Task>,
         lat: &'a LatencyModel,
         lanes: Vec<SimLane>,
         dev: &'a DeviceProfile,
+        params: &SchedParams,
     ) -> SimBackend<'a> {
         assert!(!lanes.is_empty(), "a sim backend needs at least one lane");
         let mut trace = tasks.into_iter();
         let next_arrival = trace.next();
         let in_flight = (0..lanes.len()).map(|_| None).collect();
-        SimBackend { trace, next_arrival, now: 0.0, lanes, in_flight, lat, dev }
+        let stepped = lanes
+            .iter()
+            .map(|lane| {
+                if params.mode == SchedMode::Step && lane.kind == LaneKind::Accelerator {
+                    Some(StepLane {
+                        slots: params.slots_for(lane.batch_size.unwrap_or(params.batch_size)),
+                        active: Vec::new(),
+                        tick_done_at: None,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect();
+        SimBackend {
+            trace,
+            next_arrival,
+            now: 0.0,
+            lanes,
+            in_flight,
+            stepped,
+            overrun: params.overrun_factor,
+            preempted_ids: HashSet::new(),
+            lat,
+            dev,
+        }
     }
 
     /// The historical two-lane configuration: accelerator + CPU
@@ -102,12 +176,23 @@ impl<'a> SimBackend<'a> {
         lat: &'a LatencyModel,
         model: &ModelEntry,
         dev: &'a DeviceProfile,
+        params: &SchedParams,
     ) -> SimBackend<'a> {
         let lanes = vec![
-            SimLane { kind: LaneKind::Accelerator, model: model.clone(), workers: 1 },
-            SimLane { kind: LaneKind::Cpu, model: model.clone(), workers: dev.cpu_workers.max(1) },
+            SimLane {
+                kind: LaneKind::Accelerator,
+                model: model.clone(),
+                workers: 1,
+                batch_size: None,
+            },
+            SimLane {
+                kind: LaneKind::Cpu,
+                model: model.clone(),
+                workers: dev.cpu_workers.max(1),
+                batch_size: None,
+            },
         ];
-        SimBackend::new(tasks, lat, lanes, dev)
+        SimBackend::new(tasks, lat, lanes, dev, params)
     }
 
     /// Earliest future event on the backend's own timeline.
@@ -119,7 +204,109 @@ impl<'a> SimBackend<'a> {
         for slot in self.in_flight.iter().flatten() {
             next = next.min(slot.lane_free);
         }
+        for sl in self.stepped.iter().flatten() {
+            match sl.tick_done_at {
+                Some(end) => next = next.min(end),
+                // parked: wake when the earliest join prefill completes
+                None => {
+                    for s in &sl.active {
+                        next = next.min(s.ready_at);
+                    }
+                }
+            }
+        }
         next
+    }
+
+    /// Drive every stepped lane's decode loop up to `self.now`:
+    /// complete due ticks (advancing participants one step, emitting
+    /// leaves and overrun preemptions), then start the next tick over
+    /// every ready generation. Loops until quiescent so zero-cost test
+    /// latency models cannot wedge a tick chain at one instant.
+    fn pump_stepped(&mut self, step: &mut Step) {
+        loop {
+            let mut progressed = false;
+            for idx in 0..self.lanes.len() {
+                let model = self.lanes[idx].model.name.clone();
+                let Some(sl) = self.stepped[idx].as_mut() else { continue };
+                // -- complete a due tick --------------------------------
+                if sl.tick_done_at.is_some_and(|end| end <= self.now) {
+                    let end = sl.tick_done_at.take().unwrap();
+                    progressed = true;
+                    let mut i = 0;
+                    while i < sl.active.len() {
+                        if !sl.active[i].in_tick {
+                            i += 1;
+                            continue;
+                        }
+                        let s = &mut sl.active[i];
+                        s.in_tick = false;
+                        s.remaining -= 1;
+                        s.done_steps += 1;
+                        if s.remaining == 0 {
+                            let s = sl.active.swap_remove(i);
+                            step.done.push(BatchDone {
+                                lane: LaneId(idx),
+                                completions: vec![TaskDone {
+                                    id: s.task.id,
+                                    at: end,
+                                    infer_secs: s.infer_secs,
+                                    first_token_at: s.ready_at,
+                                    output: Vec::new(),
+                                }],
+                                batch_infer_secs: s.infer_secs,
+                                steps: s.done_steps,
+                            });
+                            continue;
+                        }
+                        // overrun → eject at the step boundary, at most
+                        // once per task (count-based: deterministic
+                        // across the virtual-clock and wire backends)
+                        let over = self.overrun.is_finite()
+                            && self.overrun > 0.0
+                            && s.task.uncertainty.is_finite()
+                            && (s.done_steps as f64)
+                                > self.overrun * s.task.uncertainty.max(1.0)
+                            && !self.preempted_ids.contains(&s.task.id);
+                        if over {
+                            let s = sl.active.swap_remove(i);
+                            self.preempted_ids.insert(s.task.id);
+                            let mut task = s.task;
+                            // re-score: it has already generated
+                            // done_steps tokens and is still going
+                            task.uncertainty = (s.done_steps as f64).max(task.uncertainty);
+                            task.true_len = s.remaining;
+                            step.preempted.push(Preempted {
+                                lane: LaneId(idx),
+                                steps: s.done_steps,
+                                infer_secs: s.infer_secs,
+                                task,
+                            });
+                            continue;
+                        }
+                        i += 1;
+                    }
+                }
+                // -- start the next tick over ready generations ---------
+                if sl.tick_done_at.is_none() {
+                    let n = sl.active.iter().filter(|s| s.ready_at <= self.now).count();
+                    if n > 0 {
+                        let dur =
+                            self.dev.gpu_speed * self.lat.decode_step_dev(&model, n, self.dev);
+                        let share = dur / n as f64;
+                        for s in sl.active.iter_mut().filter(|s| s.ready_at <= self.now) {
+                            s.in_tick = true;
+                            s.infer_secs += share;
+                        }
+                        sl.tick_done_at = Some(self.now + dur);
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
     }
 }
 
@@ -132,9 +319,43 @@ impl ExecutionBackend for SimBackend<'_> {
         self.now
     }
 
+    fn lane_slots(&self, lane: LaneId) -> Option<usize> {
+        self.stepped[lane.index()].as_ref().map(|sl| sl.slots)
+    }
+
     fn submit(&mut self, batch: Batch) -> Result<()> {
         let idx = batch.lane.index();
         assert!(idx < self.lanes.len(), "batch dispatched to unknown {}", batch.lane);
+        if let Some(sl) = self.stepped[idx].as_mut() {
+            // join group: charge one shared prefill now; the tasks
+            // enter the decode loop at its end (their first token)
+            let k = batch.tasks.len();
+            assert!(
+                sl.active.len() + k <= sl.slots,
+                "{} overfilled: {k} joins into {} free slots",
+                batch.lane,
+                sl.slots - sl.active.len().min(sl.slots),
+            );
+            let model = &self.lanes[idx].model.name;
+            let prefill = self.dev.dispatch_overhead
+                + self.dev.gpu_speed
+                    * self.lat.prefill_secs_dev(model, k, batch.max_input_len(), self.dev);
+            let ready_at = self.now + prefill;
+            let share = prefill / k.max(1) as f64;
+            let sl = self.stepped[idx].as_mut().unwrap();
+            for task in batch.tasks {
+                let remaining = task.true_len.max(1);
+                sl.active.push(StepSlot {
+                    task,
+                    ready_at,
+                    remaining,
+                    done_steps: 0,
+                    infer_secs: share,
+                    in_tick: false,
+                });
+            }
+            return Ok(());
+        }
         assert!(self.in_flight[idx].is_none(), "{} already busy", batch.lane);
         let lane = &self.lanes[idx];
         let in_flight = match lane.kind {
@@ -142,6 +363,16 @@ impl ExecutionBackend for SimBackend<'_> {
                 // one fused batch: every task completes when the batch does
                 let dur = self.lat.gpu_batch_secs(&lane.model, &batch, self.dev);
                 let done_at = self.now + dur;
+                // the fused batch emits its first tokens at prefill end
+                let first_token_at = self.now
+                    + self.dev.dispatch_overhead
+                    + self.dev.gpu_speed
+                        * self.lat.prefill_secs_dev(
+                            &lane.model.name,
+                            batch.tasks.len(),
+                            batch.max_input_len(),
+                            self.dev,
+                        );
                 InFlight {
                     lane_free: done_at,
                     done: BatchDone {
@@ -153,10 +384,12 @@ impl ExecutionBackend for SimBackend<'_> {
                                 id: t.id,
                                 at: done_at,
                                 infer_secs: dur,
+                                first_token_at,
                                 output: Vec::new(),
                             })
                             .collect(),
                         batch_infer_secs: dur,
+                        steps: batch.max_true_len(),
                     },
                 }
             }
@@ -168,6 +401,7 @@ impl ExecutionBackend for SimBackend<'_> {
                 let mut workers = vec![self.now; lane.workers.max(1)];
                 let mut completions = Vec::with_capacity(batch.tasks.len());
                 let mut infer = 0.0;
+                let mut steps = 0usize;
                 for task in &batch.tasks {
                     let w = (0..workers.len())
                         .min_by(|&a, &b| workers[a].total_cmp(&workers[b]))
@@ -178,14 +412,23 @@ impl ExecutionBackend for SimBackend<'_> {
                         task.input_len,
                         self.dev,
                     );
+                    // first token once the offload transfer + the
+                    // task's own (slowed) prefill are done
+                    let first_token_at = workers[w]
+                        + self.dev.offload_overhead
+                        + self.dev.cpu_speed
+                            * crate::sim::latency::CPU_LANE_SLOWDOWN
+                            * self.lat.prefill_secs(&lane.model.name, 1, task.input_len.max(1));
                     workers[w] += dur;
                     completions.push(TaskDone {
                         id: task.id,
                         at: workers[w],
                         infer_secs: dur,
+                        first_token_at,
                         output: Vec::new(),
                     });
                     infer += dur;
+                    steps += task.true_len;
                 }
                 let lane_free = workers.iter().copied().fold(self.now, f64::max);
                 InFlight {
@@ -194,6 +437,7 @@ impl ExecutionBackend for SimBackend<'_> {
                         lane: batch.lane,
                         completions,
                         batch_infer_secs: infer,
+                        steps,
                     },
                 }
             }
@@ -230,6 +474,9 @@ impl ExecutionBackend for SimBackend<'_> {
                 step.done.push(slot.take().unwrap().done);
             }
         }
+        // advance stepped decode loops: complete due ticks (leaves,
+        // preemptions) and start the next ones
+        self.pump_stepped(&mut step);
         // a finite trace is an "open stream" that closes with its last
         // arrival — open-stream runs over the simulator terminate
         step.stream_closed = self.next_arrival.is_none();

@@ -11,19 +11,33 @@
 //! lane" shape a heterogeneous GPU+CPU fleet has, and no PJRT state
 //! ever crosses threads.
 //!
+//! Under `--sched step` accelerator lanes swap the whole-batch worker
+//! loop for a persistent decode loop ([`stepped_lane_worker`]): join
+//! groups are drained at step boundaries, every occupied slot pays one
+//! decode tick per iteration, and tasks leave (or are preempted back to
+//! the scheduler) individually. One modelling difference from the
+//! simulator is deliberate: the worker thread serialises a join group's
+//! prefill with the lane's decode ticks, where the simulator overlaps
+//! them. That shifts toleranced timing stats only — per-task step
+//! counts and lane membership, the step-mode parity fields, are
+//! timing-independent.
+//!
 //! [`BatchExecutor`]: crate::executor::BatchExecutor
 //! [`LaneSpec`]: crate::scheduler::LaneSpec
 
+use std::collections::HashSet;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::executor::{ExecReport, ExecutorFactory};
-use crate::scheduler::{Batch, LaneId, LaneSet, Task};
+use crate::config::{SchedMode, SchedParams};
+use crate::executor::{BatchExecutor, ExecReport, ExecutorFactory};
+use crate::scheduler::{Batch, LaneId, LaneKind, LaneSet, Task};
 
-use super::core::{BatchDone, ExecutionBackend, Step, TaskDone};
+use super::core::{BatchDone, ExecutionBackend, Preempted, Step, TaskDone};
 
 enum Event {
     LaneReady(LaneId),
@@ -31,6 +45,10 @@ enum Event {
     /// Completion timestamps are taken by the dispatcher on receipt, so
     /// every time in a run shares the single post-init epoch clock.
     Done(LaneId, Vec<ExecReport>),
+    /// A stepped lane ejected an overrunning generation: the re-scored
+    /// task goes back to the scheduler with the steps / inference wall
+    /// seconds it already consumed.
+    Preempt(LaneId, Box<Task>, usize, f64),
     LaneError(LaneId, String),
     /// The arrival source will never produce another task: the trace
     /// injector drained, or a live producer called
@@ -105,6 +123,135 @@ fn lane_worker(
     }
 }
 
+/// One in-flight generation in a stepped lane's slot table.
+struct StepGen {
+    task: Task,
+    remaining: usize,
+    done_steps: usize,
+    infer_wall: f64,
+    ready_wall: f64,
+}
+
+/// Run a join group's shared prefill and seat its tasks in the slot
+/// table. The prefill cost is split evenly across the joiners, the same
+/// attribution the simulator uses.
+fn join_group(
+    executor: &mut dyn BatchExecutor,
+    epoch: Instant,
+    active: &mut Vec<StepGen>,
+    batch: Batch,
+) {
+    let k = batch.tasks.len().max(1);
+    let s = batch.max_input_len();
+    let slept = executor.stepped().expect("checked at lane init").prefill(k, s);
+    let ready_wall = epoch.elapsed().as_secs_f64();
+    let share = slept / k as f64;
+    for task in batch.tasks {
+        let remaining = task.true_len.max(1);
+        active.push(StepGen { task, remaining, done_steps: 0, infer_wall: share, ready_wall });
+    }
+}
+
+/// Iteration-level lane loop (`--sched step`): admit join groups at step
+/// boundaries, charge one decode tick per iteration over every occupied
+/// slot, and release (or preempt) generations individually. Preemption
+/// fires when a generation's executed steps exceed `overrun ×` its
+/// predicted length, at most once per task id across the whole fleet
+/// (`preempted_ids` is shared between stepped lanes, mirroring the
+/// simulator's global set).
+fn stepped_lane_worker(
+    lane: LaneId,
+    spec: crate::scheduler::LaneSpec,
+    factory: ExecutorFactory,
+    batch_rx: mpsc::Receiver<Batch>,
+    tx: mpsc::Sender<Event>,
+    overrun: f64,
+    preempted_ids: Arc<Mutex<HashSet<u64>>>,
+) {
+    let mut executor = match factory(&spec) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
+            return;
+        }
+    };
+    if executor.stepped().is_none() {
+        let _ = tx.send(Event::LaneError(
+            lane,
+            "lane executor does not support --sched step".into(),
+        ));
+        return;
+    }
+    let _ = tx.send(Event::LaneReady(lane));
+    let epoch = Instant::now();
+    let mut active: Vec<StepGen> = Vec::new();
+    loop {
+        // Joins land at step boundaries: block while the lane is idle,
+        // otherwise take whatever the dispatcher queued since the last
+        // tick.
+        if active.is_empty() {
+            match batch_rx.recv() {
+                Ok(batch) => join_group(executor.as_mut(), epoch, &mut active, batch),
+                Err(_) => return, // dispatcher gone: shut the lane down
+            }
+        }
+        while let Ok(batch) = batch_rx.try_recv() {
+            join_group(executor.as_mut(), epoch, &mut active, batch);
+        }
+
+        // One decode tick across every occupied slot.
+        let n = active.len();
+        let slept = executor.stepped().expect("checked at lane init").tick(n);
+        let share = slept / n as f64;
+        for g in &mut active {
+            g.remaining -= 1;
+            g.done_steps += 1;
+            g.infer_wall += share;
+        }
+        let now_wall = epoch.elapsed().as_secs_f64();
+
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining == 0 {
+                // finished: leave individually, freeing the slot
+                let g = active.swap_remove(i);
+                let report = ExecReport {
+                    task_ids: vec![g.task.id],
+                    outputs: vec![Vec::new()],
+                    infer_secs: g.infer_wall,
+                    steps: g.done_steps,
+                    end_offset_secs: 0.0,
+                    ttft_back_secs: (now_wall - g.ready_wall).max(0.0),
+                };
+                if tx.send(Event::Done(lane, vec![report])).is_err() {
+                    return;
+                }
+                continue;
+            }
+            let g = &active[i];
+            let u = g.task.uncertainty;
+            let trigger = overrun.is_finite()
+                && overrun > 0.0
+                && u.is_finite()
+                && (g.done_steps as f64) > overrun * u.max(1.0);
+            if trigger && preempted_ids.lock().unwrap().insert(g.task.id) {
+                let mut g = active.swap_remove(i);
+                // re-score with what the generation has revealed
+                g.task.uncertainty = (g.done_steps as f64).max(u);
+                g.task.true_len = g.remaining;
+                if tx
+                    .send(Event::Preempt(lane, Box::new(g.task), g.done_steps, g.infer_wall))
+                    .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+            i += 1;
+        }
+    }
+}
+
 /// The wall-clock [`ExecutionBackend`]: injector / producer threads feed
 /// arrivals, one worker thread per lane executes batches.
 pub struct ThreadedBackend {
@@ -125,6 +272,9 @@ pub struct ThreadedBackend {
     /// default) reports plain wall seconds.
     clock_scale: f64,
     stream_closed: bool,
+    /// Per-lane slot capacity: `Some(slots)` for stepped lanes
+    /// (`--sched step` accelerator lanes), `None` for whole-batch lanes.
+    lane_slots: Vec<Option<usize>>,
     injector: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -132,24 +282,42 @@ pub struct ThreadedBackend {
 impl ThreadedBackend {
     /// Spawn one worker per lane of `lanes`, wait for *every* lane to
     /// report ready (tracked per lane — one lane reporting twice cannot
-    /// mask another failing), and start the epoch clock.
+    /// mask another failing), and start the epoch clock. Under
+    /// `params.mode == Step` accelerator lanes get the iteration-level
+    /// worker loop and expose their slot capacity through
+    /// [`ExecutionBackend::lane_slots`].
     fn spawn_lanes(
         factory: ExecutorFactory,
         lanes: &LaneSet,
+        params: &SchedParams,
     ) -> Result<(ThreadedBackend, mpsc::Sender<Event>)> {
         let (event_tx, event_rx) = mpsc::channel::<Event>();
 
+        let preempted_ids = Arc::new(Mutex::new(HashSet::new()));
+        let mut lane_slots = Vec::with_capacity(lanes.len());
         let mut lane_txs = Vec::with_capacity(lanes.len());
         let mut workers = Vec::with_capacity(lanes.len());
         for (i, spec) in lanes.iter().enumerate() {
+            let slots = (params.mode == SchedMode::Step
+                && spec.kind == LaneKind::Accelerator)
+                .then(|| params.slots_for(spec.batch_size.unwrap_or(params.batch_size)));
+            lane_slots.push(slots);
             let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
             lane_txs.push(Some(batch_tx));
             let tx = event_tx.clone();
             let factory = factory.clone();
             let spec = spec.clone();
-            workers.push(thread::spawn(move || {
-                lane_worker(LaneId(i), spec, factory, batch_rx, tx)
-            }));
+            if slots.is_some() {
+                let overrun = params.overrun_factor;
+                let seen = preempted_ids.clone();
+                workers.push(thread::spawn(move || {
+                    stepped_lane_worker(LaneId(i), spec, factory, batch_rx, tx, overrun, seen)
+                }));
+            } else {
+                workers.push(thread::spawn(move || {
+                    lane_worker(LaneId(i), spec, factory, batch_rx, tx)
+                }));
+            }
         }
 
         // wait for every lane to finish initialising (e.g. compiling the
@@ -175,6 +343,7 @@ impl ThreadedBackend {
             epoch: Instant::now(),
             clock_scale: 1.0,
             stream_closed: false,
+            lane_slots,
             injector: None,
             workers,
         };
@@ -193,10 +362,11 @@ impl ThreadedBackend {
         tasks: Vec<Task>,
         factory: ExecutorFactory,
         lanes: &LaneSet,
+        params: &SchedParams,
         time_scale: f64,
         inject_upfront: bool,
     ) -> Result<ThreadedBackend> {
-        Self::start_scaled(tasks, factory, lanes, time_scale, inject_upfront, 1.0)
+        Self::start_scaled(tasks, factory, lanes, params, time_scale, inject_upfront, 1.0)
     }
 
     /// [`start`](Self::start) with an explicit engine-clock dilation
@@ -210,11 +380,12 @@ impl ThreadedBackend {
         tasks: Vec<Task>,
         factory: ExecutorFactory,
         lanes: &LaneSet,
+        params: &SchedParams,
         time_scale: f64,
         inject_upfront: bool,
         clock_scale: f64,
     ) -> Result<ThreadedBackend> {
-        let (mut backend, event_tx) = Self::spawn_lanes(factory, lanes)?;
+        let (mut backend, event_tx) = Self::spawn_lanes(factory, lanes, params)?;
         backend.clock_scale = clock_scale.max(1e-9);
         let epoch = backend.epoch;
         let time_scale = time_scale.max(1e-9);
@@ -253,8 +424,9 @@ impl ThreadedBackend {
     pub fn start_stream(
         factory: ExecutorFactory,
         lanes: &LaneSet,
+        params: &SchedParams,
     ) -> Result<(ThreadedBackend, ArrivalHandle)> {
-        let (backend, event_tx) = Self::spawn_lanes(factory, lanes)?;
+        let (backend, event_tx) = Self::spawn_lanes(factory, lanes, params)?;
         let handle = ArrivalHandle { tx: event_tx, epoch: backend.epoch };
         Ok((backend, handle))
     }
@@ -300,17 +472,36 @@ impl ThreadedBackend {
                     .fold(0.0, f64::max);
                 let mut completions = Vec::new();
                 let mut batch_infer_secs = 0.0;
+                let mut steps = 0;
                 for rep in reports {
-                    let ExecReport { task_ids, outputs, infer_secs, end_offset_secs, .. } = rep;
+                    let ExecReport {
+                        task_ids,
+                        outputs,
+                        infer_secs,
+                        steps: rep_steps,
+                        end_offset_secs,
+                        ttft_back_secs,
+                    } = rep;
                     // executor-reported wall seconds -> engine seconds
                     let infer_secs = infer_secs * self.clock_scale;
                     batch_infer_secs += infer_secs;
+                    steps += rep_steps;
                     let at = done - (batch_wall - end_offset_secs) * self.clock_scale;
+                    // first token backdated the same way completions are
+                    let first_token_at = at - ttft_back_secs * self.clock_scale;
                     for (id, output) in task_ids.into_iter().zip(outputs) {
-                        completions.push(TaskDone { id, at, infer_secs, output });
+                        completions.push(TaskDone { id, at, infer_secs, first_token_at, output });
                     }
                 }
-                step.done.push(BatchDone { lane, completions, batch_infer_secs });
+                step.done.push(BatchDone { lane, completions, batch_infer_secs, steps });
+            }
+            Event::Preempt(lane, task, steps, infer_wall) => {
+                step.preempted.push(Preempted {
+                    lane,
+                    steps,
+                    infer_secs: infer_wall * self.clock_scale,
+                    task: *task,
+                });
             }
             Event::LaneReady(_) => {}
             Event::LaneError(lane, e) => {
@@ -325,6 +516,10 @@ impl ThreadedBackend {
 impl ExecutionBackend for ThreadedBackend {
     fn n_lanes(&self) -> usize {
         self.lane_txs.len()
+    }
+
+    fn lane_slots(&self, lane: LaneId) -> Option<usize> {
+        self.lane_slots.get(lane.index()).copied().flatten()
     }
 
     fn now(&mut self) -> f64 {

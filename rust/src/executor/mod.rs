@@ -48,6 +48,11 @@ pub struct ExecReport {
     /// batch's last report, matching the simulator's per-task worker
     /// model instead of stamping the whole batch at its end.
     pub end_offset_secs: f64,
+    /// Wall seconds from the first output token (prefill end) back to
+    /// this report's completion — the threaded backend subtracts it
+    /// from the completion stamp to reconstruct each task's
+    /// time-to-first-token on the engine clock.
+    pub ttft_back_secs: f64,
 }
 
 /// A lane's execution strategy. Accelerator-kind executors return one
@@ -59,6 +64,26 @@ pub struct ExecReport {
 pub trait BatchExecutor {
     /// Execute one dispatched batch to completion and report what ran.
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
+
+    /// Iteration-level interface, when this executor can price a single
+    /// decode tick (`--sched step`). Whole-batch-only executors return
+    /// `None` and their lanes reject step mode at spawn.
+    fn stepped(&mut self) -> Option<&mut dyn SteppedExecutor> {
+        None
+    }
+}
+
+/// Executes step mode's two primitives one at a time: the shared
+/// prefill of a join group, and one decode tick over the lane's
+/// occupied slots. Both return the wall seconds spent, on the same
+/// (compressed) clock as [`ExecReport::infer_secs`].
+pub trait SteppedExecutor {
+    /// Run the shared prefill for a join group of `n` rows with max
+    /// input length `s`; returns wall seconds spent.
+    fn prefill(&mut self, n: usize, s: usize) -> f64;
+    /// Run one decode tick over `n` occupied slots; returns wall
+    /// seconds spent.
+    fn tick(&mut self, n: usize) -> f64;
 }
 
 /// Builds a lane's executor from its [`LaneSpec`], *inside* the lane
@@ -148,6 +173,15 @@ impl ModeledExecutor {
                         task.input_len,
                         &self.dev,
                     );
+                    // first token lands at offload + slowed prefill end
+                    let first_part = self.dev.offload_overhead
+                        + self.dev.cpu_speed
+                            * crate::sim::latency::CPU_LANE_SLOWDOWN
+                            * self.lat.prefill_secs(
+                                &self.model.name,
+                                1,
+                                task.input_len.max(1),
+                            );
                     let slept = self.sleep_scaled(secs);
                     let report = ExecReport {
                         task_ids: vec![task.id],
@@ -155,6 +189,9 @@ impl ModeledExecutor {
                         infer_secs: slept,
                         steps: task.true_len,
                         end_offset_secs: t0.elapsed().as_secs_f64(),
+                        ttft_back_secs: ((secs - first_part)
+                            / self.time_scale.max(1e-9))
+                        .max(0.0),
                     };
                     reports.lock().unwrap().push((i, report));
                 });
@@ -171,6 +208,15 @@ impl BatchExecutor for ModeledExecutor {
         match self.kind {
             LaneKind::Accelerator => {
                 let secs = self.lat.gpu_batch_secs(&self.model, batch, &self.dev);
+                // first token lands at dispatch + batched prefill end
+                let first_part = self.dev.dispatch_overhead
+                    + self.dev.gpu_speed
+                        * self.lat.prefill_secs_dev(
+                            &self.model.name,
+                            batch.tasks.len(),
+                            batch.max_input_len(),
+                            &self.dev,
+                        );
                 let slept = self.sleep_scaled(secs);
                 Ok(vec![ExecReport {
                     task_ids: batch.tasks.iter().map(|t| t.id).collect(),
@@ -178,10 +224,34 @@ impl BatchExecutor for ModeledExecutor {
                     infer_secs: slept,
                     steps: batch.max_true_len(),
                     end_offset_secs: slept,
+                    ttft_back_secs: ((secs - first_part) / self.time_scale.max(1e-9))
+                        .max(0.0),
                 }])
             }
             LaneKind::Cpu => Ok(self.execute_cpu_pool(batch)),
         }
+    }
+
+    fn stepped(&mut self) -> Option<&mut dyn SteppedExecutor> {
+        match self.kind {
+            LaneKind::Accelerator => Some(self),
+            LaneKind::Cpu => None,
+        }
+    }
+}
+
+impl SteppedExecutor for ModeledExecutor {
+    fn prefill(&mut self, n: usize, s: usize) -> f64 {
+        let secs = self.dev.dispatch_overhead
+            + self.dev.gpu_speed
+                * self.lat.prefill_secs_dev(&self.model.name, n, s, &self.dev);
+        self.sleep_scaled(secs)
+    }
+
+    fn tick(&mut self, n: usize) -> f64 {
+        let secs =
+            self.dev.gpu_speed * self.lat.decode_step_dev(&self.model.name, n, &self.dev);
+        self.sleep_scaled(secs)
     }
 }
 
@@ -201,6 +271,8 @@ pub fn modeled_factory(
             .get(&spec.model)
             .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?
             .clone();
+        lat.require_model(&model.name)
+            .map_err(|e| anyhow!("lane '{}': {e}", spec.name))?;
         Ok(Box::new(ModeledExecutor {
             lat: lat.clone(),
             model,
@@ -225,7 +297,22 @@ impl BatchExecutor for InstantExecutor {
             infer_secs: 0.0,
             steps: 0,
             end_offset_secs: 0.0,
+            ttft_back_secs: 0.0,
         }])
+    }
+
+    fn stepped(&mut self) -> Option<&mut dyn SteppedExecutor> {
+        Some(self)
+    }
+}
+
+impl SteppedExecutor for InstantExecutor {
+    fn prefill(&mut self, _n: usize, _s: usize) -> f64 {
+        0.0
+    }
+
+    fn tick(&mut self, _n: usize) -> f64 {
+        0.0
     }
 }
 
@@ -241,6 +328,7 @@ pub fn execute_gpu(session: &Arc<LmSession>, batch: &Batch) -> Result<ExecReport
         infer_secs: gen.prefill_secs + gen.decode_secs,
         steps: gen.steps,
         end_offset_secs: t0.elapsed().as_secs_f64(),
+        ttft_back_secs: gen.decode_secs,
     })
 }
 
@@ -260,6 +348,7 @@ pub fn execute_cpu(session: &Arc<LmSession>, batch: &Batch) -> Result<Vec<ExecRe
             infer_secs: gen.prefill_secs + gen.decode_secs,
             steps: gen.steps,
             end_offset_secs: t0.elapsed().as_secs_f64(),
+            ttft_back_secs: gen.decode_secs,
         });
     }
     Ok(reports)

@@ -18,7 +18,7 @@ use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
-use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
+use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedMode, SchedParams};
 use rtlm::executor::{modeled_factory, ExecutorFactory};
 use rtlm::metrics::table::fmt_f;
 use rtlm::model::LmSession;
@@ -93,6 +93,15 @@ fn lane_models(
         }
     }
     Ok(models)
+}
+
+/// Apply the scheduler-mode flags (`--sched batch|step`, `--slots N`,
+/// `--overrun-factor F`) on top of an already-built parameter set.
+fn apply_sched_args(args: &Args, params: &mut SchedParams) -> Result<()> {
+    params.mode = SchedMode::parse(args.get_or("sched", params.mode.label()))?;
+    params.slots = args.get_usize("slots", params.slots)?;
+    params.overrun_factor = args.get_f64("overrun-factor", params.overrun_factor)?;
+    Ok(())
 }
 
 fn estimator_for(store: &Arc<ArtifactStore>) -> Estimator {
@@ -310,28 +319,36 @@ fn sim(args: &Args) -> Result<()> {
         _ => Variance::Normal,
     };
     let tasks = ctx.scenario_tasks(model, variance, seed)?;
-    let r = ctx.run_policy(model, tasks, kind, &dev);
+    let mut cell = ctx.cell(model, tasks, kind, &dev);
+    apply_sched_args(args, &mut cell.params)?;
+    let mode = cell.params.mode;
+    let r = cell.run_sim(&ctx.lat)?;
     let mut s = r.response_times();
+    let mut ttft = r.ttft_times();
     println!(
-        "sim: model={model_name} policy={} device={} n={} variance={:?}",
+        "sim: model={model_name} policy={} device={} n={} variance={:?} sched={}",
         kind.label(),
         dev.name,
         n,
-        variance
+        variance,
+        mode.label()
     );
     println!(
-        "response time s: mean {} p50 {} p95 {} max {}",
+        "response time s: mean {} p50 {} p95 {} max {} | ttft p95 {}",
         fmt_f(s.mean(), 3),
         fmt_f(s.p50(), 3),
         fmt_f(s.p95(), 3),
-        fmt_f(s.max(), 3)
+        fmt_f(s.max(), 3),
+        fmt_f(ttft.p95(), 3)
     );
     println!(
-        "throughput {}/min  misses {} ({:.1}%)  batches {}  sched {:.1} us/task",
+        "throughput {}/min  misses {} ({:.1}%)  batches {}  steps {}  preempted {}  sched {:.1} us/task",
         fmt_f(r.throughput_per_min(), 1),
         r.miss_count(),
         r.miss_rate() * 100.0,
         r.fmt_batches(),
+        r.n_steps.iter().sum::<usize>(),
+        r.n_preempted,
         r.sched_wall_secs / r.outcomes.len().max(1) as f64 * 1e6,
     );
     if let Some(path) = args.get("export") {
@@ -372,10 +389,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // offline decisions
     let lat = LatencyModel::load_or_analytic(&store.manifest)?;
     let mut train_scores = rtlm::metrics::Samples::from_vec(scores);
-    let params = SchedParams {
+    let mut params = SchedParams {
         batch_size: rtlm::bench_harness::scenarios::optimal_batch(&lat, &model_name),
         ..Default::default()
     };
+    apply_sched_args(args, &mut params)?;
     let tau = train_scores.quantile(params.k);
     let lanes = lanes_from_args(args, &model_name, tau, &mut train_scores)?;
     // UP priorities estimate execution time with the coefficient of the
@@ -386,9 +404,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
     let backend = args.get_or("backend", "pjrt").to_string();
     println!(
-        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={} backend={backend} lanes={}",
+        "real serve: model={model_name} policy={} n={n} beta={beta}/min time-scale={time_scale}x C={} sched={} backend={backend} lanes={}",
         kind.label(),
         params.batch_size,
+        params.mode.label(),
         lanes.names().join(",")
     );
     let opts = ServeOptions { time_scale, verbose: args.flag("verbose"), ..Default::default() };
@@ -406,19 +425,23 @@ fn serve_cmd(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown serve backend '{other}' (pjrt | modeled)")),
     };
     let mut s = report.response_times();
+    let mut ttft = report.ttft_times();
     println!(
-        "completed {} tasks in {:.1}s wall | response s: mean {} p50 {} p95 {} max {}",
+        "completed {} tasks in {:.1}s wall | response s: mean {} p50 {} p95 {} max {} | ttft p95 {}",
         report.outcomes.len(),
         report.wall_secs,
         fmt_f(s.mean(), 3),
         fmt_f(s.p50(), 3),
         fmt_f(s.p95(), 3),
-        fmt_f(s.max(), 3)
+        fmt_f(s.max(), 3),
+        fmt_f(ttft.p95(), 3)
     );
     println!(
-        "throughput {}/min | batches {} | infer {:.1}s | sched {:.1} us/task",
+        "throughput {}/min | batches {} | steps {} | preempted {} | infer {:.1}s | sched {:.1} us/task",
         fmt_f(report.throughput_per_min(), 1),
         report.fmt_batches(),
+        report.n_steps.iter().sum::<usize>(),
+        report.n_preempted,
         report.infer_secs,
         report.sched_secs / report.outcomes.len().max(1) as f64 * 1e6
     );
@@ -457,7 +480,8 @@ fn tcp(args: &Args) -> Result<()> {
         .map(|i| est.score_features(&i.features))
         .collect::<Result<_>>()?;
     let mut s = rtlm::metrics::Samples::from_vec(scores);
-    let params = SchedParams { batch_size: 4, xi: 0.25, ..Default::default() };
+    let mut params = SchedParams { batch_size: 4, xi: 0.25, ..Default::default() };
+    apply_sched_args(args, &mut params)?;
     let tau = s.quantile(params.k);
     let lanes = lanes_from_args(args, &model_name, tau, &mut s)?;
     // eta (like phi in TcpServerConfig::from_store) comes from the
@@ -505,13 +529,14 @@ fn loadgen(args: &Args) -> Result<()> {
         report.response_ms.max(),
     );
     println!(
-        "ok {} / err {} | server response_ms: mean {} p50 {} p95 {} max {} | client rtt_ms p95 {}",
+        "ok {} / err {} | server response_ms: mean {} p50 {} p95 {} max {} | ttft_ms p95 {} | client rtt_ms p95 {}",
         report.n_ok,
         report.n_err,
         fmt_f(mean, 1),
         fmt_f(p50, 1),
         fmt_f(p95, 1),
         fmt_f(max, 1),
+        fmt_f(report.ttft_ms.p95(), 1),
         fmt_f(report.rtt_ms.p95(), 1),
     );
     if !report.lane_tasks.is_empty() {

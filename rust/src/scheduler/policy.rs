@@ -51,6 +51,26 @@ pub trait Policy: Send {
     /// arrivals. With `force = true` the policy must dispatch whatever
     /// it has for that lane.
     fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch>;
+    /// Step-mode pop: fill up to `free` decode slots on `lane`. The
+    /// returned batch is a *join group* — its tasks enter the lane's
+    /// persistent decode loop at the next step boundary, so the policy
+    /// must never return more than `free` tasks. The default adapts
+    /// [`pop_batch`](Policy::pop_batch): overflow beyond `free` is
+    /// re-admitted through [`push`](Policy::push) (schedulers with
+    /// length-aware slot packing override this — see
+    /// `UaSched::pop_fill`).
+    fn pop_fill(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
+        let mut batch = self.pop_batch(lane, now, force)?;
+        if batch.tasks.len() > free {
+            for task in batch.tasks.split_off(free) {
+                self.push(task);
+            }
+        }
+        if batch.tasks.is_empty() {
+            return None;
+        }
+        Some(batch)
+    }
     /// Total queued (not yet dispatched) tasks across all lanes.
     fn queue_len(&self) -> usize;
     /// Is nothing queued?

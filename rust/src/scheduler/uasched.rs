@@ -198,6 +198,58 @@ impl Policy for UaSched {
         }
     }
 
+    /// Length-aware slot packing (`--sched step`): fill freed slots in
+    /// UP-priority order, but cap co-admitted *predicted-long* tasks
+    /// (uncertainty ≥ u_scale/2) at `max(1, ⌈free/2⌉)` per fill. A slot
+    /// table packed entirely with long generations stays pinned for the
+    /// whole tail; holding some long tasks back keeps slots churning so
+    /// freed capacity reaches the short traffic. Deferred tasks stay
+    /// queued and age upward under UP, so the cap cannot starve them —
+    /// and the first admitted task is always exempt, so a forced fill
+    /// always makes progress.
+    fn pop_fill(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
+        if free == 0 || lane.index() >= self.lanes.len() {
+            return None;
+        }
+        if self.lanes.spec(lane).kind != LaneKind::Accelerator {
+            // quarantine lanes keep whole-batch FIFO semantics
+            let mut batch = self.pop_fifo(lane, force)?;
+            if batch.tasks.len() > free {
+                for task in batch.tasks.split_off(free) {
+                    self.push(task);
+                }
+            }
+            return Some(batch);
+        }
+        let c = self.lane_batch_size(lane);
+        let queue_len = self.queues[lane.index()].len();
+        // same admission rule as whole-batch pops, shrunk to the free
+        // slots: wait for a fill's worth of tasks unless xi forces
+        if queue_len == 0 || (!force && queue_len < free.min(c)) {
+            return None;
+        }
+        self.sort_queue(lane, now);
+        let long_u = self.params.u_scale * 0.5;
+        let cap_long = free.div_ceil(2).max(1);
+        let queue = &mut self.queues[lane.index()];
+        let mut tasks: Vec<Task> = Vec::with_capacity(free.min(queue_len));
+        let mut n_long = 0;
+        let mut i = 0;
+        while i < queue.len() && tasks.len() < free {
+            let is_long = queue[i].uncertainty >= long_u;
+            if is_long && n_long >= cap_long && !tasks.is_empty() {
+                i += 1; // defer: enough long generations co-admitted
+                continue;
+            }
+            n_long += usize::from(is_long);
+            tasks.push(queue.remove(i));
+        }
+        if tasks.is_empty() {
+            return None;
+        }
+        Some(Batch { lane, tasks })
+    }
+
     fn queue_len(&self) -> usize {
         self.queues.iter().map(Vec::len).sum()
     }
@@ -335,6 +387,37 @@ mod tests {
         }
         let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
         assert_eq!(b.tasks.len(), 4);
+    }
+
+    #[test]
+    fn pop_fill_caps_predicted_long_coadmission() {
+        // u_scale defaults to 96, so "predicted long" means u >= 48.
+        // The long tasks get tight deadlines so UP ranks them first: an
+        // uncapped fill of 4 would be all-long, pinning every slot.
+        let mut s = UaSched::two_lane(params(8), 0.05, f64::INFINITY, true);
+        for i in 0..4 {
+            s.push(test_task(i, 0.0, 1.0, 90.0)); // long, urgent
+        }
+        for i in 4..8 {
+            s.push(test_task(i, 0.0, 50.0, 10.0)); // short, relaxed
+        }
+        let b = s.pop_fill(LaneId::GPU, 0.0, true, 4).unwrap();
+        assert_eq!(b.tasks.len(), 4);
+        let longs = b.tasks.iter().filter(|t| t.uncertainty >= 48.0).count();
+        assert_eq!(longs, 2, "cap is ceil(free/2) = 2 predicted-long tasks");
+        assert_eq!(s.queue_len(), 4, "deferred tasks stay queued");
+    }
+
+    #[test]
+    fn pop_fill_all_long_queue_still_progresses() {
+        let mut s = UaSched::two_lane(params(8), 0.05, f64::INFINITY, true);
+        for i in 0..3 {
+            s.push(test_task(i, 0.0, 1.0, 90.0));
+        }
+        // cap = ceil(1/2) = 1: a single freed slot must still admit one
+        let b = s.pop_fill(LaneId::GPU, 0.0, true, 1).unwrap();
+        assert_eq!(b.tasks.len(), 1);
+        assert_eq!(s.queue_len(), 2);
     }
 
     #[test]

@@ -79,6 +79,11 @@ pub struct ServeReport {
     pub lanes: Vec<String>,
     /// Dispatched batches per lane, indexed like `lanes`.
     pub n_batches: Vec<usize>,
+    /// Executed decode steps per lane, indexed like `lanes` (summed
+    /// per-task under `--sched step`; max-length per batch otherwise).
+    pub n_steps: Vec<usize>,
+    /// Generations preempted back to the scheduler (`--sched step`).
+    pub n_preempted: usize,
     /// Pure model-inference seconds, summed over batches.
     pub infer_secs: f64,
 }
@@ -87,6 +92,11 @@ impl ServeReport {
     /// Response-time samples over every outcome.
     pub fn response_times(&self) -> Samples {
         Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
+    }
+
+    /// Time-to-first-token samples over every outcome.
+    pub fn ttft_times(&self) -> Samples {
+        Samples::from_vec(self.outcomes.iter().map(|o| o.ttft()).collect())
     }
 
     /// Completed tasks per wall-clock minute.
@@ -122,13 +132,14 @@ pub fn serve_with_factory(
         // burst admission + dilated engine clock: the engine reads
         // virtual seconds, so ξ (compared against those readings) must
         // stay uncompressed
-        let backend =
-            ThreadedBackend::start_scaled(tasks, factory, lanes, time_scale, true, time_scale)?;
+        let backend = ThreadedBackend::start_scaled(
+            tasks, factory, lanes, params, time_scale, true, time_scale,
+        )?;
         (params.clone(), backend)
     } else {
         // arrivals replay compressed, so the wait interval compresses too
         let scaled = SchedParams { xi: params.xi / time_scale, ..params.clone() };
-        let backend = ThreadedBackend::start(tasks, factory, lanes, time_scale, false)?;
+        let backend = ThreadedBackend::start(tasks, factory, lanes, params, time_scale, false)?;
         (scaled, backend)
     };
     let report = run_engine(&mut backend, policy, &scaled_params, n_total)?;
@@ -143,6 +154,8 @@ pub fn serve_with_factory(
         sched_secs: report.sched_secs,
         lanes: lanes.names(),
         n_batches: report.n_batches,
+        n_steps: report.n_steps,
+        n_preempted: report.n_preempted,
         infer_secs: report.infer_secs,
     };
     if opts.verbose {

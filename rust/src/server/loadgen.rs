@@ -56,6 +56,9 @@ pub struct LoadReport {
     pub errors: Vec<String>,
     /// Server-reported `response_ms` of every ok reply.
     pub response_ms: Samples,
+    /// Server-reported `ttft_ms` (time to first token) of every ok
+    /// reply that carried one.
+    pub ttft_ms: Samples,
     /// Client-measured round-trip ms of every ok reply.
     pub rtt_ms: Samples,
     /// Tasks served per lane, keyed by the lane name each ok reply
@@ -80,6 +83,7 @@ impl LoadReport {
             }
         }
         self.response_ms.extend(other.response_ms.values().iter().copied());
+        self.ttft_ms.extend(other.ttft_ms.values().iter().copied());
         self.rtt_ms.extend(other.rtt_ms.values().iter().copied());
         for (lane, n) in other.lane_tasks {
             *self.lane_tasks.entry(lane).or_insert(0) += n;
@@ -187,6 +191,9 @@ fn drive_connection(
                         Ok(ms) => {
                             report.n_ok += 1;
                             report.response_ms.push(ms);
+                            if let Some(t) = reply.get("ttft_ms").as_f64() {
+                                report.ttft_ms.push(t);
+                            }
                             report.rtt_ms.push(rtt_ms);
                             if let Some(lane) = reply.get("lane").as_str() {
                                 *report.lane_tasks.entry(lane.to_string()).or_insert(0) += 1;

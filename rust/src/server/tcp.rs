@@ -3,7 +3,7 @@
 //!
 //! Protocol: one request per line — the raw utterance (empty lines are
 //! ignored). The server replies with one JSON line:
-//! `{"id":..,"tokens":..,"text":..,"response_ms":..,"lane":..}`, or
+//! `{"id":..,"tokens":..,"text":..,"response_ms":..,"ttft_ms":..,"lane":..}`, or
 //! `{"id":..,"error":..}` — every reply carries the request `id`, so a
 //! client pipelining multiple lines on one connection can correlate
 //! failures too. `lane` is the configured lane name the task executed
@@ -141,7 +141,7 @@ pub fn serve_tcp_on(
     factory: ExecutorFactory,
     mut policy: Box<dyn Policy>,
 ) -> Result<()> {
-    let (mut backend, arrivals) = ThreadedBackend::start_stream(factory, &cfg.lanes)?;
+    let (mut backend, arrivals) = ThreadedBackend::start_stream(factory, &cfg.lanes, &cfg.params)?;
     let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(0));
 
@@ -182,6 +182,7 @@ pub fn serve_tcp_on(
             ("tokens", Json::Num(output.len() as f64)),
             ("text", Json::Str(vocab.decode(output))),
             ("response_ms", Json::Num((o.completion - o.arrival) * 1e3)),
+            ("ttft_ms", Json::Num(o.ttft() * 1e3)),
             ("lane", Json::Str(lane)),
         ]);
         let _ = reply_tx.send((o.id, reply.to_string()));

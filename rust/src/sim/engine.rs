@@ -43,11 +43,13 @@ pub fn run_sim(
             kind: crate::scheduler::LaneKind::Accelerator,
             model: model.clone(),
             workers: 1,
+            batch_size: None,
         },
         SimLane {
             kind: crate::scheduler::LaneKind::Cpu,
             model: model.clone(),
             workers: dev.cpu_workers.max(1),
+            batch_size: None,
         },
     ];
     run_sim_on(tasks, policy, lat, lanes, vec!["gpu".into(), "cpu".into()], dev, params)
@@ -65,7 +67,7 @@ pub fn run_sim_lanes(
     dev: &DeviceProfile,
     params: &SchedParams,
 ) -> Result<SimResult> {
-    let lanes = resolve_lanes(lane_set, models, dev)?;
+    let lanes = resolve_lanes(lane_set, models, lat, dev)?;
     Ok(run_sim_on(tasks, policy, lat, lanes, lane_set.names(), dev, params))
 }
 
@@ -80,7 +82,7 @@ fn run_sim_on(
 ) -> SimResult {
     tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     let n_total = tasks.len();
-    let mut backend = SimBackend::new(tasks, lat, lanes, dev);
+    let mut backend = SimBackend::new(tasks, lat, lanes, dev, params);
     let report = run_engine(&mut backend, policy, params, n_total)
         .expect("the virtual-clock backend cannot fail");
     let makespan = report
@@ -95,6 +97,8 @@ fn run_sim_on(
         sched_wall_secs: report.sched_secs,
         lanes: lane_names,
         n_batches: report.n_batches,
+        n_steps: report.n_steps,
+        n_preempted: report.n_preempted,
     }
 }
 
@@ -347,6 +351,88 @@ mod tests {
             let r = run_sim(tasks.clone(), &mut *policy, &lat, &model, &dev, &params);
             assert_eq!(r.outcomes.len(), 8, "{} lost NaN tasks", kind.label());
         }
+    }
+
+    #[test]
+    fn step_mode_completes_and_counts_steps() {
+        use crate::config::SchedMode;
+        // iteration-level dispatch: everything completes, and the
+        // accelerator lane's decode-iteration counter is exactly the
+        // summed generation lengths (no preemption: factor disabled)
+        let params = SchedParams {
+            batch_size: 4,
+            mode: SchedMode::Step,
+            overrun_factor: f64::INFINITY,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(3);
+        let tasks: Vec<Task> = (0..24)
+            .map(|i| mk_task(i, rng.f64() * 6.0, 10.0, 4 + rng.range_usize(0, 40)))
+            .collect();
+        let total_len: usize = tasks.iter().map(|t| t.true_len).sum();
+        let mut policy = Fifo::new(4);
+        let r = run_sim(
+            tasks,
+            &mut policy,
+            &test_lat(),
+            &test_model(),
+            &DeviceProfile::edge_server(),
+            &params,
+        );
+        assert_eq!(r.outcomes.len(), 24);
+        assert_eq!(r.n_steps[LaneId::GPU.index()], total_len);
+        assert_eq!(r.n_preempted, 0);
+        for o in &r.outcomes {
+            assert!(o.first_token > o.arrival, "task {} ttft not positive", o.id);
+            assert!(o.first_token <= o.completion, "task {} first token after completion", o.id);
+        }
+    }
+
+    #[test]
+    fn step_mode_improves_ttft_on_heavy_tails() {
+        use crate::config::SchedMode;
+        // one predicted-long task pins every co-batched short one in
+        // whole-batch mode; iteration-level leave releases the shorts
+        let mut rng = Pcg64::new(11);
+        let tasks: Vec<Task> = (0..32)
+            .map(|i| {
+                // heavy-tailed lengths: mostly short, a few very long
+                let len = if rng.f64() < 0.15 { 80 + rng.range_usize(0, 16) } else { 4 + rng.range_usize(0, 8) };
+                mk_task(i, rng.f64() * 4.0, len as f64, len)
+            })
+            .collect();
+        let run = |mode: SchedMode| {
+            let params = SchedParams {
+                batch_size: 8,
+                mode,
+                overrun_factor: f64::INFINITY,
+                ..Default::default()
+            };
+            let mut policy = Fifo::new(8);
+            run_sim(
+                tasks.clone(),
+                &mut policy,
+                &test_lat(),
+                &test_model(),
+                &DeviceProfile::edge_server(),
+                &params,
+            )
+        };
+        let batch = run(SchedMode::Batch);
+        let step = run(SchedMode::Step);
+        assert_eq!(step.outcomes.len(), batch.outcomes.len());
+        assert!(
+            step.mean_response() < batch.mean_response(),
+            "step {} !< batch {}",
+            step.mean_response(),
+            batch.mean_response()
+        );
+        assert!(
+            step.ttft_times().p95() < batch.ttft_times().p95(),
+            "step ttft p95 {} !< batch {}",
+            step.ttft_times().p95(),
+            batch.ttft_times().p95()
+        );
     }
 
     #[test]

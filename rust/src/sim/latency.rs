@@ -72,20 +72,54 @@ impl LatencyModel {
         LatencyModel { decode, prefill }
     }
 
+    /// Do both curve tables cover `model`? Called at every resolution
+    /// boundary that binds a lane to a model (`engine::sim_backend`'s
+    /// lane resolution, `executor::modeled_factory`), so a misnamed
+    /// `--lanes` variant is an error at construction instead of
+    /// silently simulating with a placeholder latency. The per-step
+    /// accessors below panic as a backstop for callers that skip it.
+    pub fn require_model(&self, model: &str) -> Result<()> {
+        if self.decode.get(model).map(|b| !b.is_empty()) != Some(true) {
+            anyhow::bail!(
+                "latency model has no decode curve for model '{model}' \
+                 (known: {:?}) — misnamed lane/model variant?",
+                self.decode.keys().collect::<Vec<_>>()
+            );
+        }
+        if self.prefill.get(model).map(|b| !b.is_empty()) != Some(true) {
+            anyhow::bail!(
+                "latency model has no prefill curve for model '{model}' \
+                 (known: {:?}) — misnamed lane/model variant?",
+                self.prefill.keys().collect::<Vec<_>>()
+            );
+        }
+        Ok(())
+    }
+
     /// Seconds per decode step at the smallest bucket >= `n` rows.
+    ///
+    /// Panics on a model the curves do not cover — historically this
+    /// returned a hardcoded 0.01 s, which silently skewed every result
+    /// of a misnamed lane variant. [`require_model`](Self::require_model)
+    /// turns the same mistake into a proper error at construction.
     pub fn decode_step(&self, model: &str, n: usize) -> f64 {
-        let Some(buckets) = self.decode.get(model) else { return 0.01 };
+        let Some(buckets) = self.decode.get(model) else {
+            panic!("latency model has no decode curve for model '{model}'")
+        };
         buckets
             .iter()
             .find(|(b, _)| **b >= n)
             .or_else(|| buckets.iter().last())
             .map(|(_, t)| *t)
-            .unwrap_or(0.01)
+            .unwrap_or_else(|| panic!("empty decode curve for model '{model}'"))
     }
 
-    /// The decode bucket `n` rows pad to.
+    /// The decode bucket `n` rows pad to. Panics on an uncovered model,
+    /// like [`decode_step`](Self::decode_step).
     pub fn decode_bucket(&self, model: &str, n: usize) -> usize {
-        let Some(buckets) = self.decode.get(model) else { return n };
+        let Some(buckets) = self.decode.get(model) else {
+            panic!("latency model has no decode curve for model '{model}'")
+        };
         buckets
             .keys()
             .copied()
@@ -94,9 +128,12 @@ impl LatencyModel {
             .unwrap_or(n)
     }
 
-    /// Prefill seconds for `n` rows of max input length `s`.
+    /// Prefill seconds for `n` rows of max input length `s`. Panics on
+    /// an uncovered model, like [`decode_step`](Self::decode_step).
     pub fn prefill_secs(&self, model: &str, n: usize, s: usize) -> f64 {
-        let Some(buckets) = self.prefill.get(model) else { return 0.02 };
+        let Some(buckets) = self.prefill.get(model) else {
+            panic!("latency model has no prefill curve for model '{model}'")
+        };
         // smallest covering bucket, by area
         let mut best: Option<((usize, usize), f64)> = None;
         for (&(b, bs), &t) in buckets {
@@ -177,7 +214,9 @@ impl LatencyModel {
     /// throughput-per-row gain of batch size B vs the best bucket, on
     /// the modeled accelerator lane.
     pub fn batching_utilisation(&self, model: &str, dev: &DeviceProfile) -> Vec<(usize, f64)> {
-        let Some(buckets) = self.decode.get(model) else { return vec![] };
+        let Some(buckets) = self.decode.get(model) else {
+            panic!("latency model has no decode curve for model '{model}'")
+        };
         let rates: Vec<(usize, f64)> = buckets
             .keys()
             .map(|&b| (b, b as f64 / self.decode_step_dev(model, b, dev).max(1e-12)))
@@ -241,6 +280,22 @@ mod tests {
         assert_eq!(util.len(), 3);
         assert!(util[0].1 < util[1].1, "{util:?}");
         assert!((util[2].1 - 1.0).abs() < 1e-9 || util[1].1 <= util[2].1, "{util:?}");
+    }
+
+    #[test]
+    fn unknown_model_fails_loudly() {
+        let lm = model_for_test();
+        assert!(lm.require_model("m").is_ok());
+        let err = lm.require_model("typo-model").unwrap_err().to_string();
+        assert!(err.contains("typo-model"), "{err}");
+        assert!(
+            std::panic::catch_unwind(|| lm.decode_step("typo-model", 1)).is_err(),
+            "decode_step must panic on an uncovered model"
+        );
+        assert!(
+            std::panic::catch_unwind(|| lm.prefill_secs("typo-model", 1, 8)).is_err(),
+            "prefill_secs must panic on an uncovered model"
+        );
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct TaskOutcome {
     pub arrival: f64,
     /// Completion time on the engine clock (seconds).
     pub completion: f64,
+    /// Engine-clock time the first output token was ready: prefill end
+    /// for whole-batch dispatch, the task's own first decode step for
+    /// iteration-level dispatch — so TTFT is comparable across modes.
+    pub first_token: f64,
     /// Absolute priority point d_J the task was scheduled against.
     pub priority_point: f64,
     /// Uncertainty score u_J the task was scheduled with.
@@ -38,6 +42,12 @@ impl TaskOutcome {
         self.completion - self.arrival
     }
 
+    /// Time to first token: first output token minus arrival (the
+    /// latency metric iteration-level scheduling exists to improve).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
     /// Did the task complete after its priority point?
     pub fn missed(&self) -> bool {
         self.completion > self.priority_point
@@ -59,8 +69,14 @@ pub struct SimResult {
     /// Lane names, in [`LaneId`] order (the default two-lane fleet is
     /// `["gpu", "cpu"]`).
     pub lanes: Vec<String>,
-    /// Dispatched batches per lane, indexed like `lanes`.
+    /// Dispatched batches per lane, indexed like `lanes` (join groups
+    /// on stepped lanes).
     pub n_batches: Vec<usize>,
+    /// Decode iterations per lane, indexed like `lanes` (see
+    /// `engine::BatchDone::steps`). Exact-matched by step-mode parity.
+    pub n_steps: Vec<usize>,
+    /// Generations preempted mid-flight to another lane (step mode).
+    pub n_preempted: usize,
 }
 
 impl SimResult {
@@ -81,6 +97,11 @@ impl SimResult {
     /// Response-time samples over every outcome.
     pub fn response_times(&self) -> Samples {
         Samples::from_vec(self.outcomes.iter().map(|o| o.response_time()).collect())
+    }
+
+    /// Time-to-first-token samples over every outcome.
+    pub fn ttft_times(&self) -> Samples {
+        Samples::from_vec(self.outcomes.iter().map(|o| o.ttft()).collect())
     }
 
     /// Mean response time (seconds).
@@ -165,6 +186,7 @@ impl SimResult {
                 ("arrival", Json::Num(o.arrival)),
                 ("completion", Json::Num(o.completion)),
                 ("response", Json::Num(o.response_time())),
+                ("ttft", Json::Num(o.ttft())),
                 ("priority_point", Json::Num(o.priority_point)),
                 ("uncertainty", Json::Num(o.uncertainty)),
                 ("true_len", Json::Num(o.true_len as f64)),

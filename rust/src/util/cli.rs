@@ -117,19 +117,26 @@ pub fn help_text(experiments: &[&str]) -> String {
          \x20     on any parity failure. FILTER keeps cells whose label\n\
          \x20     contains it (also accepted as --wire FILTER).\n\
          \x20 sim [--model M] [--policy P] [--n N] [--seed S] [--device D]\n\
-         \x20     [--variance small|normal|large] [--export FILE]\n\
+         \x20     [--variance small|normal|large] [--sched batch|step]\n\
+         \x20     [--slots N] [--overrun-factor F] [--export FILE]\n\
          \x20 serve [--model M] [--policy P] [--n N] [--seed S] [--beta B]\n\
          \x20     [--time-scale S] [--backend pjrt|modeled] [--device D]\n\
-         \x20     [--variance V] [--lanes SPEC] [--require-all-lanes] [--verbose]\n\
+         \x20     [--variance V] [--lanes SPEC] [--sched batch|step] [--slots N]\n\
+         \x20     [--overrun-factor F] [--require-all-lanes] [--verbose]\n\
          \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
          \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
+         \x20     [--sched batch|step] [--slots N] [--overrun-factor F]\n\
          \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
          \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
          \x20 score <text...>            print RULEGEN features + u_J\n\n\
          --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
          (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H;\n\
          thresholds take numbers, inf, tau, or qP quantiles), or @lanes.json.\n\
-         e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"",
+         e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"\n\n\
+         --sched step turns on iteration-level (continuous) batching:\n\
+         accelerator lanes run a persistent decode loop over --slots slots\n\
+         (0 = lane batch size); generations exceeding --overrun-factor x\n\
+         their predicted length are preempted to the CPU lane.",
         exps = experiments.join(",")
     )
 }

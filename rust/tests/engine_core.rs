@@ -13,11 +13,18 @@
 //! wall-clock dispatcher; NaN-uncertainty resilience on the wire path;
 //! and the CPU-lane scoped-thread pool's makespan matching the
 //! simulator's intra-batch worker model.
+//!
+//! Iteration-level mode (`SchedMode::Step`) gets its own section at the
+//! bottom: join-at-step-boundary / individual-leave semantics on the
+//! virtual clock, overrun preemption rerouting a mispredicted
+//! generation to the CPU lane, and the cross-backend agreement of the
+//! step-mode deterministic counters (per-lane steps, per-task lanes,
+//! preemption count).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
 use rtlm::engine::{
     resolve_lanes, run_engine, run_engine_stream, ArrivalSource, SimBackend, ThreadedBackend,
 };
@@ -125,13 +132,14 @@ fn assert_cross_backend_equivalence(
     let n = tasks.len();
 
     let mut sim_policy = kind.build(params, model.eta, lanes);
-    let sim_lanes = resolve_lanes(lanes, &model_table(&model), &dev).expect("resolve lanes");
-    let mut sim_backend = SimBackend::new(tasks.to_vec(), &lat, sim_lanes, &dev);
+    let sim_lanes =
+        resolve_lanes(lanes, &model_table(&model), &lat, &dev).expect("resolve lanes");
+    let mut sim_backend = SimBackend::new(tasks.to_vec(), &lat, sim_lanes, &dev, params);
     let sim = run_engine(&mut sim_backend, &mut *sim_policy, params, n).expect("sim backend");
 
     let mut thr_policy = kind.build(params, model.eta, lanes);
     let mut thr_backend =
-        ThreadedBackend::start(tasks.to_vec(), instant_factory(), lanes, 1.0, true)
+        ThreadedBackend::start(tasks.to_vec(), instant_factory(), lanes, params, 1.0, true)
             .expect("threaded backend start");
     let thr = run_engine(&mut thr_backend, &mut *thr_policy, params, n).expect("threaded backend");
     thr_backend.finish();
@@ -264,8 +272,8 @@ fn starved_lane_does_not_stall_xi_forcing() {
     ];
     let params = SchedParams { batch_size: 4, ..Default::default() };
     let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
-    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &dev).expect("resolve");
-    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev, &params);
     let report = run_engine(&mut backend, &mut *policy, &params, 3).expect("engine");
 
     assert_eq!(report.outcomes.len(), 3, "starved lane must not lose tasks");
@@ -296,7 +304,7 @@ fn arrivals_drain_before_forced_dispatch() {
     let params = SchedParams { batch_size: 4, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
     let mut backend =
-        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, true)
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), &params, 1.0, true)
             .expect("backend start");
     let report = run_engine(&mut backend, &mut policy, &params, n).expect("engine");
     backend.finish();
@@ -323,7 +331,7 @@ fn xi_deadline_wakes_wall_clock_dispatcher() {
     let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
     let mut backend =
-        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, false)
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), &params, 1.0, false)
             .expect("backend start");
     let report = run_engine(&mut backend, &mut policy, &params, 3).expect("engine");
     backend.finish();
@@ -363,11 +371,11 @@ fn open_stream_matches_counted_on_both_backends() {
 
         for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
             let mut p = kind.build(&params, model.eta, &lanes);
-            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev);
+            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev, &params);
             let counted = run_engine(&mut b, &mut *p, &params, n).expect("sim counted");
 
             let mut p = kind.build(&params, model.eta, &lanes);
-            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev);
+            let mut b = SimBackend::two_lane(tasks.clone(), &lat, &model, &dev, &params);
             let streamed = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
                 .expect("sim stream");
             // the virtual clock is deterministic: the full interleaved
@@ -380,8 +388,9 @@ fn open_stream_matches_counted_on_both_backends() {
             assert_eq!(streamed.outcomes.len(), n);
 
             let mut p = kind.build(&params, model.eta, &lanes);
-            let mut b = ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, 1.0, true)
-                .expect("threaded start");
+            let mut b =
+                ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, &params, 1.0, true)
+                    .expect("threaded start");
             let wired = run_engine_stream(&mut b, &mut *p, &params, ArrivalSource::Stream, None)
                 .expect("threaded stream");
             b.finish();
@@ -411,7 +420,7 @@ fn open_stream_xi_forcing_with_late_arrivals() {
     let params = SchedParams { batch_size: 4, xi: 0.2, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
     let mut backend =
-        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, false)
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), &params, 1.0, false)
             .expect("backend start");
     let report = run_engine_stream(&mut backend, &mut policy, &params, ArrivalSource::Stream, None)
         .expect("engine");
@@ -428,8 +437,9 @@ fn open_stream_xi_forcing_with_late_arrivals() {
 /// the engine to a clean return.
 #[test]
 fn live_arrival_handle_feeds_open_stream() {
+    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
     let (mut backend, arrivals) =
-        ThreadedBackend::start_stream(instant_factory(), &two_lane(60.0))
+        ThreadedBackend::start_stream(instant_factory(), &two_lane(60.0), &params)
             .expect("backend start");
     let producer = {
         let arrivals = arrivals.clone();
@@ -441,7 +451,6 @@ fn live_arrival_handle_feeds_open_stream() {
             arrivals.close();
         })
     };
-    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
     let report = run_engine_stream(&mut backend, &mut policy, &params, ArrivalSource::Stream, None)
         .expect("engine");
@@ -463,7 +472,7 @@ fn stream_callback_sees_every_completion_and_report_stays_lean() {
     let params = SchedParams { batch_size: 4, ..Default::default() };
     let mut policy = Fifo::new(params.batch_size);
     let mut backend =
-        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), 1.0, true)
+        ThreadedBackend::start(tasks, instant_factory(), &two_lane(60.0), &params, 1.0, true)
             .expect("backend start");
     let mut seen: Vec<u64> = Vec::new();
     let mut on_complete = |o: &rtlm::sim::results::TaskOutcome, output: &[i32]| {
@@ -501,7 +510,7 @@ fn nan_uncertainty_survives_the_wire_path() {
     for kind in [PolicyKind::Fifo, PolicyKind::Hpf, PolicyKind::RtLm] {
         let mut policy = kind.build(&params, 0.05, &lanes);
         let mut backend =
-            ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, 1.0, true)
+            ThreadedBackend::start(tasks.clone(), instant_factory(), &lanes, &params, 1.0, true)
                 .expect("backend start");
         let report = run_engine(&mut backend, &mut *policy, &params, 6).expect("engine");
         backend.finish();
@@ -583,5 +592,185 @@ fn modeled_cpu_pool_makespan_matches_simulator_model() {
             "{label}: wall {wall:.3}s vs modeled {expect:.3}s ({:.0}% off)",
             rel * 100.0
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// iteration-level (--sched step) dispatch
+// ---------------------------------------------------------------------------
+
+/// Small but nonzero latencies, so step-mode ticks genuinely advance
+/// the virtual clock and join/leave ordering is observable.
+fn step_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), std::collections::BTreeMap::from([(1usize, 0.01), (16, 0.04)]));
+    c.prefill
+        .insert("m".into(), std::collections::BTreeMap::from([((1usize, 16usize), 0.02)]));
+    LatencyModel::from_calibration(&c)
+}
+
+/// Step mode on the virtual clock: tasks sharing a slot table leave
+/// individually when their own generation ends, and the freed slot is
+/// refilled at a step boundary — a later task's first token can only
+/// appear after some earlier generation left.
+#[test]
+fn step_mode_joins_at_boundaries_and_leaves_individually() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = step_latency();
+    let dev = zero_device();
+    let lanes = two_lane(60.0);
+    // 2 slots, 3 tasks: the third can only join once a slot frees
+    let params = SchedParams {
+        batch_size: 2,
+        xi: 0.0,
+        mode: SchedMode::Step,
+        ..Default::default()
+    };
+    let mut tasks = vec![
+        mk_task(0, 0.0, 50.0, 4.0),
+        mk_task(1, 0.0, 50.0, 8.0),
+        mk_task(2, 0.0, 50.0, 12.0),
+    ];
+    for t in &mut tasks {
+        t.true_len = t.uncertainty as usize; // 4 / 8 / 12 decode steps
+    }
+
+    let mut policy = Fifo::new(params.batch_size);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev, &params);
+    let report = run_engine(&mut backend, &mut policy, &params, 3).expect("engine");
+
+    assert_eq!(report.outcomes.len(), 3);
+    let by_id: HashMap<u64, &rtlm::sim::results::TaskOutcome> =
+        report.outcomes.iter().map(|o| (o.id, o)).collect();
+    for o in &report.outcomes {
+        assert_eq!(o.lane, LaneId::GPU, "task {} left the accelerator lane", o.id);
+        assert!(
+            o.arrival <= o.first_token && o.first_token < o.completion,
+            "task {}: acausal ttft ({} / {} / {})",
+            o.id,
+            o.arrival,
+            o.first_token,
+            o.completion
+        );
+    }
+    // individual leaves: the 4-step generation finishes first, well
+    // before its 8-step co-batched neighbour
+    assert!(by_id[&0].completion < by_id[&1].completion, "short generation held by long");
+    // join at a step boundary: task 2 found both slots taken at t=0 and
+    // could emit its first token only after task 0 left
+    assert!(
+        by_id[&2].first_token > by_id[&0].completion,
+        "task 2 joined before a slot freed ({} <= {})",
+        by_id[&2].first_token,
+        by_id[&0].completion
+    );
+    // two join groups (0,1 then 2), every decode step accounted
+    assert_eq!(report.n_batches[LaneId::GPU.index()], 2);
+    assert_eq!(report.n_steps[LaneId::GPU.index()], 4 + 8 + 12);
+    assert_eq!(report.n_preempted, 0);
+}
+
+/// Overrun preemption: a generation whose true length far exceeds its
+/// predicted length is ejected at a step boundary, re-scored, and
+/// re-routed — with the quarantine threshold below its new score, it
+/// finishes on the CPU lane, and both lanes' step counters account for
+/// exactly the steps they executed.
+#[test]
+fn step_mode_overrun_preempts_to_cpu_lane() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = step_latency();
+    let dev = DeviceProfile::edge_server();
+    let lanes = two_lane(5.0); // quarantine anything scored above 5
+    let params = SchedParams { batch_size: 4, mode: SchedMode::Step, ..Default::default() };
+    // predicted 2 tokens, actually 96: overrun_factor 3 ejects it once
+    // done_steps exceeds 3 * 2 = 6, i.e. after step 7
+    let mut task = mk_task(0, 0.0, 50.0, 2.0);
+    task.true_len = 96;
+
+    let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(vec![task], &lat, sim_lanes, &dev, &params);
+    let report = run_engine(&mut backend, &mut *policy, &params, 1).expect("engine");
+
+    assert_eq!(report.n_preempted, 1, "overrun generation was not preempted");
+    assert_eq!(report.outcomes.len(), 1, "preempted task lost");
+    let o = &report.outcomes[0];
+    assert_eq!(o.lane, LaneId::CPU, "re-scored task should quarantine to the CPU lane");
+    assert_eq!(
+        report.n_steps[LaneId::GPU.index()],
+        7,
+        "accelerator executed steps up to the overrun boundary"
+    );
+    assert_eq!(
+        report.n_steps[LaneId::CPU.index()],
+        96 - 7,
+        "CPU lane executed exactly the remaining generation"
+    );
+    assert!(o.first_token.is_finite() && o.completion > o.arrival);
+}
+
+/// The step-mode deterministic counters agree across backends: per-lane
+/// decode-step totals, per-task lane assignment, and the preemption
+/// count are timing-independent (lane routing happens at push time,
+/// per-task step counts are fixed integers, preemption triggers on step
+/// counts), so the virtual clock and the wire must match them exactly
+/// even though join-group composition may race on the wire.
+#[test]
+fn step_mode_counters_match_across_backends() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = zero_latency();
+    let dev = zero_device();
+    let lanes = two_lane(60.0);
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(0x57E9 ^ seed);
+        let n = 4 + rng.range_usize(0, 24);
+        let tasks = grid_tasks(&mut rng, n);
+        let params = SchedParams {
+            batch_size: 4,
+            mode: SchedMode::Step,
+            ..Default::default()
+        };
+        for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+            let mut p = kind.build(&params, model.eta, &lanes);
+            let sim_lanes =
+                resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+            let mut b = SimBackend::new(tasks.clone(), &lat, sim_lanes, &dev, &params);
+            let sim = run_engine(&mut b, &mut *p, &params, n).expect("sim step run");
+
+            let mut p = kind.build(&params, model.eta, &lanes);
+            let mut b = ThreadedBackend::start(
+                tasks.clone(),
+                instant_factory(),
+                &lanes,
+                &params,
+                1.0,
+                true,
+            )
+            .expect("threaded start");
+            let wire = run_engine(&mut b, &mut *p, &params, n).expect("wire step run");
+            b.finish();
+
+            assert_eq!(sim.outcomes.len(), n, "seed {seed} {}: sim lost tasks", kind.label());
+            assert_eq!(wire.outcomes.len(), n, "seed {seed} {}: wire lost tasks", kind.label());
+            assert_eq!(
+                sim.n_steps,
+                wire.n_steps,
+                "seed {seed} {}: per-lane step totals diverged",
+                kind.label()
+            );
+            assert_eq!(sim.n_preempted, wire.n_preempted, "seed {seed} {}", kind.label());
+            let sim_lane: HashMap<u64, LaneId> =
+                sim.outcomes.iter().map(|o| (o.id, o.lane)).collect();
+            for o in &wire.outcomes {
+                assert_eq!(
+                    sim_lane[&o.id], o.lane,
+                    "seed {seed} {}: task {} changed lane between backends",
+                    kind.label(),
+                    o.id
+                );
+            }
+        }
     }
 }

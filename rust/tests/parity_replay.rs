@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 
 use rtlm::bench_harness::replay::{run_parity, ParityTolerance, ReplayCell};
-use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
 use rtlm::scheduler::{PolicyKind, Task};
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::util::rng::Pcg64;
@@ -116,4 +116,75 @@ fn rtlm_cell_replays_clean_on_the_wire() {
     // echoed twice: wire times carry wall jitter
     let mean = parity.stats.iter().find(|f| f.name == "mean_response").unwrap();
     assert!(mean.sim > 0.0 && mean.wire > 0.0);
+}
+
+/// The same cell under iteration-level dispatch (`--sched step`).
+fn step_cell(kind: PolicyKind) -> ReplayCell {
+    let mut c = cell(kind);
+    c.params.mode = SchedMode::Step;
+    c.labelled(&format!("e2e/step-{}", kind.label()))
+}
+
+fn assert_step_clean(kind: PolicyKind) -> rtlm::bench_harness::replay::CellParity {
+    let time_scale = 25.0;
+    let parity = run_parity(
+        &step_cell(kind),
+        &tiny_latency(),
+        time_scale,
+        &ParityTolerance::for_time_scale(time_scale),
+    )
+    .expect("step parity replay runs");
+    assert!(
+        parity.clean(),
+        "{} step parity diverged: {:?}",
+        kind.label(),
+        parity.failures
+    );
+    assert_eq!(parity.n_tasks, 24);
+    // step mode's deterministic counters must agree exactly — per-lane
+    // decode-step totals, per-lane task counts, and the preemption count
+    // (join-group composition, i.e. n_batches, is allowed to race)
+    assert_eq!(parity.sim_steps, parity.wire_steps, "per-lane step totals diverged");
+    assert_eq!(parity.sim_lane_tasks, parity.wire_lane_tasks);
+    assert_eq!(parity.sim_preempted, parity.wire_preempted);
+    parity
+}
+
+/// FIFO under iteration-level dispatch replays clean on both backends:
+/// every decode step is accounted on the same lane in simulation and on
+/// the wire, and baselines still never touch the quarantine lane.
+#[test]
+fn fifo_step_cell_replays_clean_on_the_wire() {
+    let parity = assert_step_clean(PolicyKind::Fifo);
+    assert_eq!(parity.sim_lane_tasks[0], 24, "FIFO serves everything on the accelerator");
+    assert_eq!(parity.sim_steps[1], 0, "FIFO must not use the quarantine lane");
+    assert!(parity.sim_steps[0] > 0, "accelerator executed no decode steps");
+}
+
+/// RT-LM under iteration-level dispatch: slot-table packing plus
+/// strategic offloading replay clean, with both lanes serving traffic.
+#[test]
+fn rtlm_step_cell_replays_clean_on_the_wire() {
+    let parity = assert_step_clean(PolicyKind::RtLm);
+    assert!(
+        parity.sim_lane_tasks.iter().all(|&n| n >= 1),
+        "every lane must serve >= 1 task: {:?}",
+        parity.sim_lane_tasks
+    );
+    assert!(parity.sim_steps[0] > 0 && parity.sim_steps[1] > 0);
+}
+
+/// Whole-batch mode stays bit-identical: a clean batch-mode parity
+/// report implies *exact* per-lane batch counts (the tolerance never
+/// applies to them) — the invariant that guards the historical engine
+/// against regressions from the slot-table refactor.
+#[test]
+fn batch_mode_parity_is_exact_on_batch_counts() {
+    for kind in [PolicyKind::Fifo, PolicyKind::RtLm] {
+        let c = cell(kind);
+        assert_eq!(c.params.mode, SchedMode::Batch, "cells default to whole-batch dispatch");
+        let parity = assert_clean(kind);
+        assert_eq!(parity.sim_batches, parity.wire_batches);
+        assert_eq!(parity.sim_steps, parity.wire_steps, "batch mode steps diverged");
+    }
 }

@@ -62,6 +62,9 @@ const PUBLIC_FLAGS: &[&str] = &[
     "--parity-rel",
     "--parity-slop-ms",
     "--parity-out",
+    "--sched",
+    "--slots",
+    "--overrun-factor",
 ];
 
 #[test]

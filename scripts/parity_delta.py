@@ -6,10 +6,13 @@ Usage:
 
 The input is the structured JSON `rtlm bench --wire --parity-out` writes
 (`bench_harness::replay::parity_json`): per cell, the exact-match fields
-(per-lane batch and task counts on both backends) and the toleranced
-response-time statistics, plus any rendered failures.
+(per-lane batch, task, decode-step and preemption counts on both
+backends) and the toleranced response-time / TTFT statistics, plus any
+rendered failures. Step-mode cells (`--sched step`) report batch counts
+as join groups, which are not asserted — the step counters are their
+exact-match discriminator.
 
-Prints a per-cell verdict table, a per-lane batch diff table, and every
+Prints a per-cell verdict table, a per-lane count diff table, and every
 failure verbatim. Exit code is 1 when any cell is not clean, so the CI
 `parity gate` step fails even if the rust gate was bypassed — but the
 primary gate is `rtlm bench --wire` itself, which exits nonzero on any
@@ -60,33 +63,45 @@ def main() -> int:
         f"{report.get('time_scale', '?')}x, tol ±{report.get('rel_tol', '?')} rel "
         f"+ {report.get('abs_secs', '?')} s abs)\n"
     )
-    print("| cell | policy | n | mean RT (sim/wire s) | Δ | p95 (sim/wire s) | Δ | status |")
-    print("|---|---|---:|---:|---:|---:|---:|---|")
+    print(
+        "| cell | policy | n | mean RT (sim/wire s) | Δ | p95 (sim/wire s) | Δ "
+        "| ttft p95 (sim/wire s) | Δ | preempted (sim/wire) | status |"
+    )
+    print("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---|")
     for cell in cells:
         mean, p95 = stat(cell, "mean_response"), stat(cell, "p95_response")
+        ttft = stat(cell, "p95_ttft")
         verdict = "✅ ok" if cell.get("clean") else f"❌ {len(cell.get('failures', []))} failures"
         mean_pair = fmt_pair(mean["sim"], mean["wire"]) if mean else "-"
         p95_pair = fmt_pair(p95["sim"], p95["wire"]) if p95 else "-"
+        ttft_pair = fmt_pair(ttft["sim"], ttft["wire"]) if ttft else "-"
+        preempt = f"{cell.get('sim_preempted', 0):.0f} / {cell.get('wire_preempted', 0):.0f}"
         print(
             f"| {cell.get('label', '?')} | {cell.get('policy', '?')} "
             f"| {cell.get('n_tasks', 0):.0f} | {mean_pair} | {rel_err(mean)} "
-            f"| {p95_pair} | {rel_err(p95)} | {verdict} |"
+            f"| {p95_pair} | {rel_err(p95)} | {ttft_pair} | {rel_err(ttft)} "
+            f"| {preempt} | {verdict} |"
         )
 
-    print("\n### Per-lane dispatched batches (exact-match gate)\n")
-    print("| cell | lane | sim | wire | tasks sim | tasks wire |")
-    print("|---|---|---:|---:|---:|---:|")
+    print("\n### Per-lane counts (exact-match gate; steps gate step-mode cells)\n")
+    print("| cell | lane | batches sim | batches wire | tasks sim | tasks wire "
+          "| steps sim | steps wire |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|")
     for cell in cells:
         sim_b = lane_counts(cell, "sim_batches")
         wire_b = lane_counts(cell, "wire_batches")
         sim_t = lane_counts(cell, "sim_lane_tasks")
         wire_t = lane_counts(cell, "wire_lane_tasks")
+        sim_s = lane_counts(cell, "sim_steps")
+        wire_s = lane_counts(cell, "wire_steps")
         for lane in cell.get("lanes", []):
             mark = "" if sim_b.get(lane) == wire_b.get(lane) else " ⚠️"
+            step_mark = "" if sim_s.get(lane) == wire_s.get(lane) else " ⚠️"
             print(
                 f"| {cell.get('label', '?')} | {lane} | {sim_b.get(lane, 0):.0f} "
                 f"| {wire_b.get(lane, 0):.0f}{mark} | {sim_t.get(lane, 0):.0f} "
-                f"| {wire_t.get(lane, 0):.0f} |"
+                f"| {wire_t.get(lane, 0):.0f} | {sim_s.get(lane, 0):.0f} "
+                f"| {wire_s.get(lane, 0):.0f}{step_mark} |"
             )
 
     failures = [(c.get("label", "?"), f) for c in cells for f in c.get("failures", [])]

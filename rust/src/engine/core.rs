@@ -114,6 +114,13 @@ pub struct Step {
     /// it through the ordinary lane admissions (typically to the CPU
     /// lane). A backend ejects any given task at most once.
     pub preempted: Vec<Preempted>,
+    /// Lanes whose executor substrate died *survivably* (a remote node
+    /// lost mid-batch or evicted for missed heartbeats). The core
+    /// retires each lane from routing, re-queues its in-flight tasks
+    /// through ordinary lane admission (the same path `preempted`
+    /// uses), and keeps serving on the surviving lanes. In-process
+    /// lane failures stay fatal backend errors, not `failed` entries.
+    pub failed: Vec<LaneFailure>,
     /// The arrival stream is closed: every arrival the source will ever
     /// produce has been delivered in this or an earlier step. Latched by
     /// the core; only [`ArrivalSource::Stream`] runs consult it.
@@ -122,6 +129,19 @@ pub struct Step {
     /// pending arrivals, nothing in flight, no deadline). With tasks
     /// still queued this means the policy refuses to emit — a bug.
     pub exhausted: bool,
+}
+
+/// One survivably-dead lane (see [`Step::failed`]).
+#[derive(Debug)]
+pub struct LaneFailure {
+    /// The lane whose executor is permanently gone.
+    pub lane: LaneId,
+    /// Tasks that were in flight there and never completed; the core
+    /// re-queues them through the policy. Empty when the failure was
+    /// detected between batches (heartbeat eviction of an idle lane).
+    pub requeue: Vec<Task>,
+    /// What killed the lane (eviction log line).
+    pub error: String,
 }
 
 /// A generation ejected from a stepped lane at a step boundary (see
@@ -218,6 +238,17 @@ pub struct EngineReport {
     /// Stepped lanes only: generations ejected mid-flight for
     /// overrunning their predicted length and re-queued.
     pub n_preempted: usize,
+    /// Completed tasks per lane, indexed by [`LaneId`] — the serving
+    /// front-ends roll these up per node to show where a fleet's
+    /// traffic actually ran (and, after a node death, how much the
+    /// survivors absorbed).
+    pub n_tasks: Vec<usize>,
+    /// Tasks re-queued through lane admission because the lane they
+    /// were in flight on died survivably (see [`Step::failed`]).
+    pub n_retried: usize,
+    /// Lanes retired mid-run after their executor substrate died
+    /// (remote node loss / heartbeat eviction).
+    pub n_evicted: usize,
     /// Every dispatched batch in dispatch order: `(lane, task ids)`.
     /// The cross-backend equivalence test compares these. Empty in
     /// streaming mode, like `outcomes`.
@@ -253,6 +284,7 @@ pub fn run_engine_stream(
         policy: policy.name(),
         n_batches: vec![0; n_lanes],
         n_steps: vec![0; n_lanes],
+        n_tasks: vec![0; n_lanes],
         ..Default::default()
     };
 
@@ -280,8 +312,16 @@ pub fn run_engine_stream(
         "whole-batch runs must not expose stepped lanes"
     );
     let mut occupied = vec![0usize; n_lanes];
-    let slots_free =
-        |occupied: &[usize], lane: usize| slot_cap[lane].unwrap_or(1).saturating_sub(occupied[lane]);
+    // Lanes retired mid-run (remote executor died): never offered pops
+    // again, never counted idle for the wait decision.
+    let mut dead = vec![false; n_lanes];
+    let slots_free = |occupied: &[usize], dead: &[bool], lane: usize| {
+        if dead[lane] {
+            0
+        } else {
+            slot_cap[lane].unwrap_or(1).saturating_sub(occupied[lane])
+        }
+    };
     let mut iterations = 0usize;
 
     loop {
@@ -327,11 +367,16 @@ pub fn run_engine_stream(
         // so a wakeup at the deadline always observes force=true. (The
         // subtraction form `now - oldest >= xi` can round down at the
         // expiry instant and livelock the loop re-arming a deadline
-        // that never fires force.)
-        let force = arrivals_done || (oldest.is_finite() && now >= oldest + params.xi);
+        // that never fires force.) A policy with per-lane ξ overrides
+        // supplies the expiry itself; `None` keeps the global window.
+        let force = arrivals_done
+            || match policy.next_force_deadline(now) {
+                Some(d) => now >= d,
+                None => oldest.is_finite() && now >= oldest + params.xi,
+            };
         let mut dispatched_any = false;
         for lane in (0..n_lanes).map(LaneId) {
-            let free = slots_free(&occupied, lane.index());
+            let free = slots_free(&occupied, &dead, lane.index());
             if free == 0 {
                 continue;
             }
@@ -379,14 +424,20 @@ pub fn run_engine_stream(
         // wall-clock backend until the next unrelated event. A deadline
         // that is already due simply makes `wait` return immediately and
         // the next iteration dispatch forced.
-        let any_idle = (0..n_lanes).any(|l| slots_free(&occupied, l) > 0);
+        let any_idle = (0..n_lanes).any(|l| slots_free(&occupied, &dead, l) > 0);
         if dispatched_any {
             // dispatch removed entries from `queued`; refresh the fold
             // so the deadline keys on what is still waiting
             oldest = queued.values().copied().fold(f64::INFINITY, f64::min);
         }
-        let deadline = if any_idle && !force && oldest.is_finite() {
-            Some(oldest + params.xi)
+        let deadline = if any_idle && !force {
+            // same per-lane-override hook as the force decision above;
+            // dispatch only shrinks queues, so this deadline is never
+            // earlier than the one force was judged against.
+            match policy.next_force_deadline(now) {
+                Some(d) => Some(d),
+                None => oldest.is_finite().then_some(oldest + params.xi),
+            }
         } else {
             None
         };
@@ -395,7 +446,10 @@ pub fn run_engine_stream(
 
         if step.exhausted {
             assert!(
-                step.arrivals.is_empty() && step.done.is_empty() && step.preempted.is_empty(),
+                step.arrivals.is_empty()
+                    && step.done.is_empty()
+                    && step.preempted.is_empty()
+                    && step.failed.is_empty(),
                 "backend reported exhausted with undelivered events"
             );
             // an empty stream can close and exhaust in the same step;
@@ -448,6 +502,7 @@ pub fn run_engine_stream(
             });
             report.infer_secs += done.batch_infer_secs;
             report.n_steps[lane] += done.steps;
+            report.n_tasks[lane] += done.completions.len();
             for t in done.completions {
                 let task = meta.remove(&t.id).expect("unknown task completed");
                 let outcome = TaskOutcome {
@@ -470,6 +525,49 @@ pub fn run_engine_stream(
                     report.outcomes.push(outcome);
                 }
                 completed += 1;
+            }
+        }
+
+        // -- retire dead lanes, re-queue their in-flight work --------------
+        // Processed after completions: a task that finished in the same
+        // step (its reply raced the node's death) keeps its completion
+        // and must not be retried — the `meta` guard below sees it gone.
+        // The monitor thread and the lane worker can both report the
+        // same death; the `dead` latch makes the second report a no-op
+        // and the per-task guards make duplicate re-queues impossible.
+        for f in step.failed {
+            let lane = f.lane.index();
+            if !dead[lane] {
+                dead[lane] = true;
+                occupied[lane] = 0;
+                report.n_evicted += 1;
+                eprintln!(
+                    "[engine] lane {} lost ({}); re-queueing {} in-flight task(s)",
+                    f.lane,
+                    f.error,
+                    f.requeue.len()
+                );
+                // Retire from routing. A policy that cannot re-route
+                // (single-queue baselines) errors here; the serving
+                // front-end shuts down and every pending request gets
+                // an explicit error reply instead of silence.
+                policy.retire_lane(f.lane).map_err(|e| {
+                    anyhow::anyhow!(
+                        "lane {} died ({}) and cannot be rerouted: {e}",
+                        f.lane,
+                        f.error
+                    )
+                })?;
+            }
+            for task in f.requeue {
+                if !meta.contains_key(&task.id) || queued.contains_key(&task.id) {
+                    continue; // completed already, or a duplicate report
+                }
+                report.n_retried += 1;
+                queued.insert(task.id, task.arrival);
+                let t0 = Instant::now();
+                policy.push(task);
+                report.sched_secs += t0.elapsed().as_secs_f64();
             }
         }
     }

@@ -36,6 +36,6 @@ pub mod sim_backend;
 pub mod threaded;
 
 pub use self::core::{run_engine, run_engine_stream, ArrivalSource, BatchDone, EngineReport};
-pub use self::core::{ExecutionBackend, OnComplete, Preempted, Step, TaskDone};
+pub use self::core::{ExecutionBackend, LaneFailure, OnComplete, Preempted, Step, TaskDone};
 pub use sim_backend::{resolve_lanes, SimBackend, SimLane};
 pub use threaded::{ArrivalHandle, ThreadedBackend};

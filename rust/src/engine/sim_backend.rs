@@ -51,6 +51,13 @@ pub fn resolve_lanes(
     lanes
         .iter()
         .map(|spec| {
+            if spec.kind == LaneKind::Remote {
+                anyhow::bail!(
+                    "lane '{}': remote lanes live in other processes and cannot be simulated \
+                     (use rtlm route)",
+                    spec.name
+                );
+            }
             let model = models
                 .get(&spec.model)
                 .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?
@@ -441,6 +448,8 @@ impl ExecutionBackend for SimBackend<'_> {
                     },
                 }
             }
+            // resolve_lanes rejects remote lanes before a backend exists
+            LaneKind::Remote => unreachable!("remote lanes cannot be simulated"),
         };
         self.in_flight[idx] = Some(in_flight);
         Ok(())

@@ -34,10 +34,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::{SchedMode, SchedParams};
-use crate::executor::{BatchExecutor, ExecReport, ExecutorFactory};
+use crate::executor::{BatchExecutor, ExecOutcome, ExecReport, ExecutorFactory};
 use crate::scheduler::{Batch, LaneId, LaneKind, LaneSet, Task};
 
-use super::core::{BatchDone, ExecutionBackend, Preempted, Step, TaskDone};
+use super::core::{BatchDone, ExecutionBackend, LaneFailure, Preempted, Step, TaskDone};
 
 enum Event {
     LaneReady(LaneId),
@@ -50,6 +50,11 @@ enum Event {
     /// seconds it already consumed.
     Preempt(LaneId, Box<Task>, usize, f64),
     LaneError(LaneId, String),
+    /// A lane's executor substrate died *survivably* (remote node lost
+    /// mid-batch, or evicted by the heartbeat monitor): the listed
+    /// tasks were in flight there and need re-queueing. Becomes
+    /// [`Step::failed`]; the engine retires the lane and keeps serving.
+    LaneFailed(LaneId, Vec<Task>, String),
     /// The arrival source will never produce another task: the trace
     /// injector drained, or a live producer called
     /// [`ArrivalHandle::close`].
@@ -89,6 +94,16 @@ impl ArrivalHandle {
     pub fn close(&self) {
         let _ = self.tx.send(Event::StreamClosed);
     }
+
+    /// Report `lane` survivably dead from outside its worker thread —
+    /// the router's heartbeat monitor calls this when a node misses its
+    /// pings. The lane worker reports its own in-flight tasks if a
+    /// batch was running; this path covers the idle-lane case, so the
+    /// re-queue list is empty. Idempotent at the engine (a lane is
+    /// retired once); ignored if the dispatcher already exited.
+    pub fn fail_lane(&self, lane: LaneId, error: String) {
+        let _ = self.tx.send(Event::LaneFailed(lane, Vec::new(), error));
+    }
 }
 
 fn lane_worker(
@@ -109,11 +124,21 @@ fn lane_worker(
         }
     };
     while let Ok(batch) = batch_rx.recv() {
-        match executor.execute(&batch) {
-            Ok(reports) => {
+        match executor.execute_failable(&batch) {
+            Ok(ExecOutcome::Done(reports)) => {
                 if tx.send(Event::Done(lane, reports)).is_err() {
                     return;
                 }
+            }
+            Ok(ExecOutcome::LaneLost { completed, requeue, error }) => {
+                // survivable substrate loss (remote node died): deliver
+                // whatever completed before the cut, hand the rest back
+                // for re-routing, and shut this lane down
+                if !completed.is_empty() {
+                    let _ = tx.send(Event::Done(lane, completed));
+                }
+                let _ = tx.send(Event::LaneFailed(lane, requeue, error));
+                return;
             }
             Err(e) => {
                 let _ = tx.send(Event::LaneError(lane, format!("{e:#}")));
@@ -506,6 +531,11 @@ impl ThreadedBackend {
             Event::LaneReady(_) => {}
             Event::LaneError(lane, e) => {
                 return Err(anyhow!("{lane} failed mid-run: {e}"));
+            }
+            Event::LaneFailed(lane, requeue, error) => {
+                // tasks were dispatched by this engine, so their arrival
+                // stamps are already on the engine clock — no rebase
+                step.failed.push(LaneFailure { lane, requeue, error });
             }
             Event::StreamClosed => self.stream_closed = true,
         }

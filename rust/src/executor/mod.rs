@@ -26,7 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{DeviceProfile, ModelEntry};
 use crate::model::LmSession;
-use crate::scheduler::{Batch, LaneKind, LaneSpec};
+use crate::scheduler::{Batch, LaneKind, LaneSpec, Task};
 use crate::sim::LatencyModel;
 
 /// Execution record for one completed batch (or one task of a CPU-lane
@@ -55,6 +55,29 @@ pub struct ExecReport {
     pub ttft_back_secs: f64,
 }
 
+/// How a batch execution ended, for executors whose substrate can
+/// *survivably* disappear mid-batch (a remote node dying under its
+/// in-flight work). In-process executors only ever produce `Done` —
+/// their hard failures stay `Err`, which kills the run, exactly the
+/// historical semantics.
+#[derive(Debug)]
+pub enum ExecOutcome {
+    /// The batch ran to completion.
+    Done(Vec<ExecReport>),
+    /// The lane's substrate died mid-batch. The engine retires the
+    /// lane, re-queues `requeue` through ordinary lane admission (the
+    /// same path overrun preemption uses) and keeps serving on the
+    /// surviving lanes.
+    LaneLost {
+        /// Reports for tasks that completed before the loss.
+        completed: Vec<ExecReport>,
+        /// In-flight tasks that never got a reply, for re-queueing.
+        requeue: Vec<Task>,
+        /// What killed the lane (for the eviction log line).
+        error: String,
+    },
+}
+
 /// A lane's execution strategy. Accelerator-kind executors return one
 /// report for the whole batch; CPU-kind executors one report per task
 /// (so completions stream out one at a time on backends that support
@@ -64,6 +87,14 @@ pub struct ExecReport {
 pub trait BatchExecutor {
     /// Execute one dispatched batch to completion and report what ran.
     fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>>;
+
+    /// Execute with a survivable-failure channel. The default wraps
+    /// [`execute`](BatchExecutor::execute), so in-process executors are
+    /// unchanged; remote-lane executors override it to report a dead
+    /// node as [`ExecOutcome::LaneLost`] instead of a fatal `Err`.
+    fn execute_failable(&mut self, batch: &Batch) -> Result<ExecOutcome> {
+        self.execute(batch).map(ExecOutcome::Done)
+    }
 
     /// Iteration-level interface, when this executor can price a single
     /// decode tick (`--sched step`). Whole-batch-only executors return
@@ -109,6 +140,9 @@ impl BatchExecutor for PjrtExecutor {
             // fan across threads here: tasks run sequentially at batch 1
             // on this lane's single session.
             LaneKind::Cpu => execute_cpu(&self.session, batch),
+            LaneKind::Remote => Err(anyhow!(
+                "remote lanes have no in-process PJRT executor (use rtlm route)"
+            )),
         }
     }
 }
@@ -229,13 +263,16 @@ impl BatchExecutor for ModeledExecutor {
                 }])
             }
             LaneKind::Cpu => Ok(self.execute_cpu_pool(batch)),
+            LaneKind::Remote => Err(anyhow!(
+                "remote lanes have no in-process modeled executor (use rtlm route)"
+            )),
         }
     }
 
     fn stepped(&mut self) -> Option<&mut dyn SteppedExecutor> {
         match self.kind {
             LaneKind::Accelerator => Some(self),
-            LaneKind::Cpu => None,
+            LaneKind::Cpu | LaneKind::Remote => None,
         }
     }
 }
@@ -267,6 +304,9 @@ pub fn modeled_factory(
     time_scale: f64,
 ) -> ExecutorFactory {
     Arc::new(move |spec: &LaneSpec| {
+        if spec.kind == LaneKind::Remote {
+            anyhow::bail!("lane '{}': remote lanes need the rtlm route front-end", spec.name);
+        }
         let model = models
             .get(&spec.model)
             .ok_or_else(|| anyhow!("lane '{}': unknown model '{}'", spec.name, spec.model))?

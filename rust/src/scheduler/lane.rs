@@ -56,17 +56,33 @@ pub enum LaneKind {
     /// intra-batch worker pool; the lane frees when the whole batch is
     /// done (paper: CPU cores).
     Cpu,
+    /// A lane living in another process: the router's proxy for one
+    /// lane of a registered node. Executes whole batches over a framed
+    /// TCP connection (`server::wire`); only the `rtlm route` fleet
+    /// builds these — the simulator and local backends reject them.
+    Remote,
 }
 
 impl LaneKind {
-    /// Parse the CLI token: `gpu`/`accel`/`accelerator` or
-    /// `cpu`/`quarantine`.
+    /// Parse the CLI token: `gpu`/`accel`/`accelerator`,
+    /// `cpu`/`quarantine`, or `remote` (gossiped lane tables).
     pub fn parse(s: &str) -> Result<LaneKind> {
         Ok(match s {
             "gpu" | "accel" | "accelerator" => LaneKind::Accelerator,
             "cpu" | "quarantine" => LaneKind::Cpu,
-            other => bail!("unknown lane kind '{other}' (gpu | cpu)"),
+            "remote" => LaneKind::Remote,
+            other => bail!("unknown lane kind '{other}' (gpu | cpu | remote)"),
         })
+    }
+
+    /// The canonical token [`LaneKind::parse`] accepts — used when a
+    /// node gossips its lane table over the wire.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LaneKind::Accelerator => "gpu",
+            LaneKind::Cpu => "cpu",
+            LaneKind::Remote => "remote",
+        }
     }
 }
 
@@ -144,6 +160,19 @@ impl Admission {
         }
         Ok(adm)
     }
+
+    /// Serialise back to the CLI grammar [`Admission::parse`] accepts
+    /// (numeric thresholds; `inf` round-trips). Nodes gossip their lane
+    /// tables in this form so the router can rebuild the predicates.
+    pub fn spec(&self) -> String {
+        match *self {
+            Admission::Fallback => "default".into(),
+            Admission::Nothing => "none".into(),
+            Admission::Above(x) => format!("above:{x}"),
+            Admission::AtMost(x) => format!("atmost:{x}"),
+            Admission::Band(lo, hi) => format!("band:{lo}:{hi}"),
+        }
+    }
 }
 
 /// One execution lane of the fleet.
@@ -163,6 +192,16 @@ pub struct LaneSpec {
     pub workers: Option<usize>,
     /// Which tasks this lane claims (see [`Admission`]).
     pub admission: Admission,
+    /// Per-lane batching window override (seconds); `None` uses
+    /// `SchedParams::xi`. Remote nodes hosting slow variants can carry
+    /// a wider window than the fleet default.
+    pub xi: Option<f64>,
+    /// Per-lane consolidation split override; `None` uses
+    /// `SchedParams::lambda`.
+    pub lambda: Option<f64>,
+    /// For [`LaneKind::Remote`] lanes: the name of the node hosting
+    /// this lane. `None` for in-process lanes.
+    pub node: Option<String>,
 }
 
 impl LaneSpec {
@@ -175,6 +214,9 @@ impl LaneSpec {
             batch_size: None,
             workers: None,
             admission: Admission::Fallback,
+            xi: None,
+            lambda: None,
+            node: None,
         }
     }
 
@@ -187,6 +229,9 @@ impl LaneSpec {
             batch_size: None,
             workers: None,
             admission: Admission::Above(tau),
+            xi: None,
+            lambda: None,
+            node: None,
         }
     }
 }
@@ -225,6 +270,16 @@ impl LaneSet {
             }
             if let Some(0) = lane.workers {
                 bail!("lane '{}' has 0 workers", lane.name);
+            }
+            if let Some(x) = lane.xi {
+                if !(x.is_finite() && x >= 0.0) {
+                    bail!("lane '{}' has invalid xi override {x}", lane.name);
+                }
+            }
+            if let Some(l) = lane.lambda {
+                if !(l.is_finite() && l > 0.0) {
+                    bail!("lane '{}' has invalid lambda override {l}", lane.name);
+                }
             }
         }
         Ok(LaneSet { lanes, primary })
@@ -300,6 +355,40 @@ impl LaneSet {
         self.lanes.iter().any(|l| l.admission.can_claim())
     }
 
+    /// Permanently remove a lane from routing (its process died or its
+    /// node was evicted): the lane's admission becomes
+    /// [`Admission::Nothing`] so it never claims again. If the retired
+    /// lane was the primary fallback, the next fallback lane is
+    /// promoted; if no fallback lane survives, the first live lane is
+    /// *converted* to a fallback so routing stays total. Errors only
+    /// when every lane is gone — the fleet can no longer serve.
+    pub fn retire(&mut self, id: LaneId) -> Result<()> {
+        self.lanes[id.0].admission = Admission::Nothing;
+        if id.0 != self.primary {
+            return Ok(());
+        }
+        if let Some(next) = self
+            .lanes
+            .iter()
+            .position(|l| l.admission == Admission::Fallback)
+        {
+            self.primary = next;
+            return Ok(());
+        }
+        match self
+            .lanes
+            .iter()
+            .position(|l| l.admission != Admission::Nothing)
+        {
+            Some(live) => {
+                self.lanes[live].admission = Admission::Fallback;
+                self.primary = live;
+                Ok(())
+            }
+            None => bail!("every lane has been retired; no live lane remains"),
+        }
+    }
+
     /// `name=count` pairs in lane order, e.g. `gpu=12 cpu=3` — the
     /// per-lane batch table every report prints.
     pub fn format_counts(&self, counts: &[usize]) -> String {
@@ -332,6 +421,8 @@ impl LaneSet {
             let mut name: Option<String> = None;
             let mut workers = None;
             let mut batch_size = None;
+            let mut xi = None;
+            let mut lambda = None;
             let mut admission: Option<Admission> = None;
             let mut first = true;
             let mut rest = parts;
@@ -347,6 +438,16 @@ impl LaneSet {
                         "batch" => {
                             batch_size = Some(value.parse().map_err(|_| {
                                 anyhow!("bad batch '{value}' in lane '{lane_str}'")
+                            })?)
+                        }
+                        "xi" => {
+                            xi = Some(value.parse().map_err(|_| {
+                                anyhow!("bad xi '{value}' in lane '{lane_str}'")
+                            })?)
+                        }
+                        "lambda" => {
+                            lambda = Some(value.parse().map_err(|_| {
+                                anyhow!("bad lambda '{value}' in lane '{lane_str}'")
                             })?)
                         }
                         "admit" => {
@@ -380,7 +481,7 @@ impl LaneSet {
                 Some(a) => a,
                 None => match kind {
                     LaneKind::Cpu => Admission::Above(resolve("tau")?),
-                    LaneKind::Accelerator => Admission::Fallback,
+                    LaneKind::Accelerator | LaneKind::Remote => Admission::Fallback,
                 },
             };
             // only *derived* default names auto-suffix on collision; an
@@ -397,14 +498,24 @@ impl LaneSet {
                     }
                 }
             };
-            lanes.push(LaneSpec { name, kind, model, batch_size, workers, admission });
+            lanes.push(LaneSpec {
+                name,
+                kind,
+                model,
+                batch_size,
+                workers,
+                admission,
+                xi,
+                lambda,
+                node: None,
+            });
         }
         LaneSet::new(lanes)
     }
 
     /// Parse a JSON lane file: an array of objects with keys `kind`
-    /// (required), `model`, `name`, `workers`, `batch`, `admit` — the
-    /// same semantics and defaults as the CLI grammar.
+    /// (required), `model`, `name`, `workers`, `batch`, `admit`, `xi`,
+    /// `lambda` — the same semantics and defaults as the CLI grammar.
     pub fn parse_json(
         json: &Json,
         default_model: &str,
@@ -429,14 +540,26 @@ impl LaneSet {
                 .unwrap_or_else(|| format!("{kind_str}{idx}"));
             let workers = entry.get("workers").as_usize();
             let batch_size = entry.get("batch").as_usize();
+            let xi = entry.get("xi").as_f64();
+            let lambda = entry.get("lambda").as_f64();
             let admission = match entry.get("admit").as_str() {
                 Some(s) => Admission::parse(s, resolve)?,
                 None => match kind {
                     LaneKind::Cpu => Admission::Above(resolve("tau")?),
-                    LaneKind::Accelerator => Admission::Fallback,
+                    LaneKind::Accelerator | LaneKind::Remote => Admission::Fallback,
                 },
             };
-            lanes.push(LaneSpec { name, kind, model, batch_size, workers, admission });
+            lanes.push(LaneSpec {
+                name,
+                kind,
+                model,
+                batch_size,
+                workers,
+                admission,
+                xi,
+                lambda,
+                node: None,
+            });
         }
         LaneSet::new(lanes)
     }
@@ -603,5 +726,70 @@ mod tests {
             assert!(!a.claims(u));
         }
         assert!(!a.can_claim());
+    }
+
+    #[test]
+    fn admission_spec_round_trips_through_parse() {
+        let cases = [
+            Admission::Fallback,
+            Admission::Nothing,
+            Admission::Above(60.5),
+            Admission::Above(f64::INFINITY),
+            Admission::AtMost(20.0),
+            Admission::Band(4.0, 20.0),
+        ];
+        for adm in cases {
+            let back = Admission::parse(&adm.spec(), &mut numeric_thresholds).unwrap();
+            assert_eq!(back, adm, "spec '{}' must round-trip", adm.spec());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_per_lane_xi_and_lambda_overrides() {
+        let lanes = LaneSet::parse(
+            "gpu:t5:xi=0.5:lambda=2.0,cpu:t5",
+            "t5",
+            &mut |t| if t == "tau" { Ok(60.0) } else { numeric_thresholds(t) },
+        )
+        .unwrap();
+        assert_eq!(lanes.spec(LaneId(0)).xi, Some(0.5));
+        assert_eq!(lanes.spec(LaneId(0)).lambda, Some(2.0));
+        assert_eq!(lanes.spec(LaneId(1)).xi, None);
+        assert_eq!(lanes.spec(LaneId(1)).lambda, None);
+
+        // json lane files carry the same keys
+        let json = Json::parse(r#"[{"kind": "gpu", "xi": 0.25, "lambda": 1.2}]"#).unwrap();
+        let lanes = LaneSet::parse_json(&json, "m", &mut numeric_thresholds).unwrap();
+        assert_eq!(lanes.spec(LaneId(0)).xi, Some(0.25));
+        assert_eq!(lanes.spec(LaneId(0)).lambda, Some(1.2));
+
+        // invalid overrides are rejected at validation time
+        assert!(LaneSet::parse("gpu:xi=-1", "m", &mut numeric_thresholds).is_err());
+        assert!(LaneSet::parse("gpu:lambda=0", "m", &mut numeric_thresholds).is_err());
+    }
+
+    #[test]
+    fn retire_removes_lane_and_keeps_routing_total() {
+        let mut lanes = LaneSet::new(vec![
+            LaneSpec::accelerator("a/gpu", "m"),
+            LaneSpec::accelerator("b/gpu", "m"),
+            LaneSpec::cpu_offload("b/cpu", "m", 60.0),
+        ])
+        .unwrap();
+        assert_eq!(lanes.primary(), LaneId(0));
+
+        // primary dies -> next fallback is promoted
+        lanes.retire(LaneId(0)).unwrap();
+        assert_eq!(lanes.primary(), LaneId(1));
+        assert_eq!(lanes.route(10.0), LaneId(1));
+        assert_eq!(lanes.route(90.0), LaneId(2), "claiming lanes keep claiming");
+
+        // last fallback dies -> a claiming lane is converted to fallback
+        lanes.retire(LaneId(1)).unwrap();
+        assert_eq!(lanes.primary(), LaneId(2));
+        assert_eq!(lanes.route(10.0), LaneId(2));
+
+        // the whole fleet is gone
+        assert!(lanes.retire(LaneId(2)).is_err());
     }
 }

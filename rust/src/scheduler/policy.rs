@@ -77,6 +77,27 @@ pub trait Policy: Send {
     fn is_empty(&self) -> bool {
         self.queue_len() == 0
     }
+    /// A lane's executor is permanently gone (remote node died). The
+    /// policy must stop routing to it and re-admit anything it had
+    /// queued there through the surviving lanes' admissions. Policies
+    /// that cannot re-route (the single-queue baselines) keep the
+    /// default, which fails the run with a clear error instead of
+    /// silently dropping tasks.
+    fn retire_lane(&mut self, lane: LaneId) -> anyhow::Result<()> {
+        anyhow::bail!("policy {} cannot retire {lane}: no re-routing support", self.name())
+    }
+    /// The absolute time at which some queued task's batching window
+    /// (ξ) expires, if the policy tracks per-lane windows. `None`
+    /// means "use the engine's global `SchedParams::xi` window" — the
+    /// historical behaviour, and bit-identical to it. Implementations
+    /// must return the *same float expression* the engine compares
+    /// against `now`, so a wait that ends exactly at the deadline
+    /// observes it as expired (see the rounding note in
+    /// `engine/core.rs`).
+    fn next_force_deadline(&self, now: f64) -> Option<f64> {
+        let _ = now;
+        None
+    }
 }
 
 /// Enumeration of every policy evaluated in the paper, for CLI/bench use.

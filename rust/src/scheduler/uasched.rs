@@ -114,6 +114,7 @@ impl UaSched {
         // tasks ready for execution"; b only widens the reorder window
         // when the queue runs deeper.
         let accumulate = self.params.accumulate_len_for(c);
+        let lambda = self.lanes.spec(lane).lambda.unwrap_or(self.params.lambda);
         if !force && self.queues[lane.index()].len() < c {
             return None;
         }
@@ -141,7 +142,7 @@ impl UaSched {
             batch.shrink_to_fit();
             (batch, tmp)
         } else {
-            let split = split_point(&tmp, self.params.lambda, c);
+            let split = split_point(&tmp, lambda, c);
             let rest = tmp.split_off(split);
             (tmp, rest)
         };
@@ -167,6 +168,29 @@ impl UaSched {
     pub fn lanes(&self) -> &LaneSet {
         &self.lanes
     }
+
+    /// Among lanes sharing `routed`'s admission predicate (a union
+    /// fleet can hold several fallback lanes — one per node — or
+    /// several nodes advertising the same band), pick the shortest
+    /// queue, lowest index on ties. Every single-process fleet has
+    /// distinct predicates per lane, so this returns `routed`
+    /// unchanged there — bit-identical to the historical router.
+    fn balanced(&self, routed: LaneId) -> LaneId {
+        let adm = self.lanes.spec(routed).admission;
+        let mut best = routed;
+        let mut best_len = self.queues[routed.index()].len();
+        for id in self.lanes.ids() {
+            if id == routed || self.lanes.spec(id).admission != adm {
+                continue;
+            }
+            let len = self.queues[id.index()].len();
+            if len < best_len || (len == best_len && id.index() < best.index()) {
+                best = id;
+                best_len = len;
+            }
+        }
+        best
+    }
 }
 
 impl Policy for UaSched {
@@ -181,7 +205,9 @@ impl Policy for UaSched {
 
     fn push(&mut self, task: Task) {
         let lane = if self.offload {
-            self.lanes.route(task.uncertainty) // strategic offloading (Eq. 4, per lane)
+            // strategic offloading (Eq. 4, per lane), least-loaded
+            // among lanes advertising the same admission
+            self.balanced(self.lanes.route(task.uncertainty))
         } else {
             self.lanes.primary()
         };
@@ -193,7 +219,9 @@ impl Policy for UaSched {
             return None;
         }
         match self.lanes.spec(lane).kind {
-            LaneKind::Accelerator => self.pop_accel(lane, now, force),
+            // remote lanes proxy a node's accelerator path: same UP +
+            // consolidation ordering, executed over the wire
+            LaneKind::Accelerator | LaneKind::Remote => self.pop_accel(lane, now, force),
             LaneKind::Cpu => self.pop_fifo(lane, force),
         }
     }
@@ -252,6 +280,40 @@ impl Policy for UaSched {
 
     fn queue_len(&self) -> usize {
         self.queues.iter().map(Vec::len).sum()
+    }
+
+    fn retire_lane(&mut self, lane: LaneId) -> anyhow::Result<()> {
+        if lane.index() >= self.lanes.len() {
+            anyhow::bail!("retire_lane: no such lane {lane}");
+        }
+        self.lanes.retire(lane)?;
+        // re-admit everything the dead lane had queued through the
+        // surviving admissions (same path as ordinary arrivals)
+        let orphans: Vec<Task> = self.queues[lane.index()].drain(..).collect();
+        for task in orphans {
+            self.push(task);
+        }
+        Ok(())
+    }
+
+    fn next_force_deadline(&self, _now: f64) -> Option<f64> {
+        if self.lanes.iter().all(|l| l.xi.is_none()) {
+            return None; // no overrides: the engine's global-xi path is exact
+        }
+        let mut deadline = f64::INFINITY;
+        for id in self.lanes.ids() {
+            let queue = &self.queues[id.index()];
+            if queue.is_empty() {
+                continue;
+            }
+            let oldest = queue.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
+            let xi = self.lanes.spec(id).xi.unwrap_or(self.params.xi);
+            // the engine compares `now >= oldest + xi` — keep the same
+            // float expression so the wait deadline and the force test
+            // agree to the last bit (see engine/core.rs)
+            deadline = deadline.min(oldest + xi);
+        }
+        deadline.is_finite().then_some(deadline)
     }
 }
 
@@ -418,6 +480,94 @@ mod tests {
         let b = s.pop_fill(LaneId::GPU, 0.0, true, 1).unwrap();
         assert_eq!(b.tasks.len(), 1);
         assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn per_lane_lambda_overrides_consolidation_split() {
+        let mk = |lambda: Option<f64>| {
+            let lanes = LaneSet::new(vec![
+                LaneSpec { lambda, ..LaneSpec::accelerator("gpu", "m") },
+                LaneSpec::cpu_offload("cpu", "m", f64::INFINITY),
+            ])
+            .unwrap();
+            UaSched::new(params(4), 0.05, lanes, true, true)
+        };
+        // 80 > 1.5*11: the default lambda splits after two tasks; a wide
+        // per-lane override keeps the whole window in one batch
+        for (lambda, expect) in [(None, 2usize), (Some(100.0), 4)] {
+            let mut s = mk(lambda);
+            for (i, u) in [10.0, 11.0, 80.0, 88.0].into_iter().enumerate() {
+                s.push(test_task(i as u64, 0.0, 5.0, u));
+            }
+            let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+            assert_eq!(b.tasks.len(), expect, "lambda={lambda:?}");
+        }
+    }
+
+    #[test]
+    fn per_lane_xi_surfaces_as_force_deadline() {
+        let lanes = LaneSet::new(vec![
+            LaneSpec { xi: Some(0.5), ..LaneSpec::accelerator("gpu", "m") },
+            LaneSpec::cpu_offload("cpu", "m", 60.0),
+        ])
+        .unwrap();
+        let mut s = UaSched::new(params(4), 0.05, lanes, true, true);
+        assert_eq!(s.next_force_deadline(0.0), None, "empty queues have no window");
+        s.push(test_task(1, 1.0, 5.0, 10.0)); // gpu lane, xi override 0.5
+        s.push(test_task(2, 0.0, 5.0, 90.0)); // cpu lane, global xi (default 2.0)
+        assert_eq!(s.next_force_deadline(0.0), Some(1.5), "min over per-lane windows");
+
+        // without overrides the hook stays silent: the engine's global
+        // xi path must remain bit-identical
+        let mut plain = UaSched::two_lane(params(4), 0.05, 60.0, true);
+        plain.push(test_task(1, 0.0, 5.0, 10.0));
+        assert_eq!(plain.next_force_deadline(0.0), None);
+    }
+
+    #[test]
+    fn push_balances_identical_admission_lanes_by_queue_depth() {
+        // a union fleet: two fallback lanes (one per node) + a shared
+        // quarantine band
+        let lanes = LaneSet::new(vec![
+            LaneSpec::accelerator("a/gpu", "m"),
+            LaneSpec::accelerator("b/gpu", "m"),
+            LaneSpec::cpu_offload("a/cpu", "m", 60.0),
+        ])
+        .unwrap();
+        let mut s = UaSched::new(params(2), 0.05, lanes, true, true);
+        for i in 0..4 {
+            s.push(test_task(i, 0.0, 5.0, 10.0));
+        }
+        let a = s.pop_batch(LaneId(0), 0.0, true).expect("lane a got traffic");
+        let b = s.pop_batch(LaneId(1), 0.0, true).expect("lane b got traffic");
+        assert_eq!(a.tasks.len() + b.tasks.len(), 4);
+        assert_eq!(a.tasks.len(), 2, "fallback traffic split evenly");
+        // the claiming lane is a singleton group: untouched by balancing
+        s.push(test_task(9, 0.0, 5.0, 90.0));
+        assert_eq!(s.pop_batch(LaneId(2), 0.0, true).unwrap().tasks[0].id, 9);
+    }
+
+    #[test]
+    fn retire_lane_reroutes_queued_tasks() {
+        let lanes = LaneSet::new(vec![
+            LaneSpec::accelerator("a/gpu", "m"),
+            LaneSpec::accelerator("b/gpu", "m"),
+        ])
+        .unwrap();
+        let mut s = UaSched::new(params(2), 0.05, lanes, true, true);
+        for i in 0..4 {
+            s.push(test_task(i, 0.0, 5.0, 10.0));
+        }
+        s.retire_lane(LaneId(0)).unwrap();
+        assert!(s.pop_batch(LaneId(0), 0.0, true).is_none(), "dead lane drained");
+        let b = s.pop_batch(LaneId(1), 0.0, true).unwrap();
+        assert_eq!(b.tasks.len(), 2, "survivor serves at its batch size");
+        assert_eq!(s.queue_len(), 2, "re-routed tasks are queued, not lost");
+        // fresh arrivals also avoid the dead lane
+        s.push(test_task(9, 0.0, 5.0, 10.0));
+        assert!(s.queues[0].is_empty());
+        // the whole fleet dying is an error
+        assert!(s.retire_lane(LaneId(1)).is_err());
     }
 
     #[test]

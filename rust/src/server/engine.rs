@@ -84,6 +84,15 @@ pub struct ServeReport {
     pub n_steps: Vec<usize>,
     /// Generations preempted back to the scheduler (`--sched step`).
     pub n_preempted: usize,
+    /// Completed tasks per lane, indexed like `lanes` — on a router
+    /// this is the per-node served breakdown (`node/lane` names).
+    pub n_tasks: Vec<usize>,
+    /// Tasks re-queued through lane admission after the lane they were
+    /// in flight on died survivably (distributed fleets only).
+    pub n_retried: usize,
+    /// Lanes retired mid-run after their node died or was evicted for
+    /// missed heartbeats (distributed fleets only).
+    pub n_evicted: usize,
     /// Pure model-inference seconds, summed over batches.
     pub infer_secs: f64,
 }
@@ -156,6 +165,9 @@ pub fn serve_with_factory(
         n_batches: report.n_batches,
         n_steps: report.n_steps,
         n_preempted: report.n_preempted,
+        n_tasks: report.n_tasks,
+        n_retried: report.n_retried,
+        n_evicted: report.n_evicted,
         infer_secs: report.infer_secs,
     };
     if opts.verbose {

@@ -52,6 +52,11 @@ pub struct LoadReport {
     pub n_ok: usize,
     /// Errors (connect, timeout, or error replies).
     pub n_err: usize,
+    /// Subset of `n_err` that were explicit id-tagged *server* error
+    /// replies — every such request got an answer, just not a result.
+    /// A chaos gate killing a node mid-run accepts these
+    /// (`--allow-server-errors`) while still rejecting lost replies.
+    pub n_server_err: usize,
     /// First few error strings, for diagnostics.
     pub errors: Vec<String>,
     /// Server-reported `response_ms` of every ok reply.
@@ -63,7 +68,13 @@ pub struct LoadReport {
     pub rtt_ms: Samples,
     /// Tasks served per lane, keyed by the lane name each ok reply
     /// carried — the client-side view of the fleet's per-lane traffic.
+    /// On a router the names are qualified `node/lane` union names.
     pub lane_tasks: BTreeMap<String, usize>,
+    /// Tasks served per node, keyed by the `node` tag each ok reply
+    /// carried (`"local"` on a single-process server) — shows where a
+    /// distributed fleet's traffic ran, and after a node kill, how much
+    /// the survivors absorbed.
+    pub node_tasks: BTreeMap<String, usize>,
 }
 
 impl LoadReport {
@@ -77,6 +88,7 @@ impl LoadReport {
     fn merge(&mut self, other: LoadReport) {
         self.n_ok += other.n_ok;
         self.n_err += other.n_err;
+        self.n_server_err += other.n_server_err;
         for e in other.errors {
             if self.errors.len() < 8 {
                 self.errors.push(e);
@@ -88,11 +100,23 @@ impl LoadReport {
         for (lane, n) in other.lane_tasks {
             *self.lane_tasks.entry(lane).or_insert(0) += n;
         }
+        for (node, n) in other.node_tasks {
+            *self.node_tasks.entry(node).or_insert(0) += n;
+        }
     }
 
     /// `name=count` per-lane served-task table, e.g. `gpu=198 cpu=2`.
     pub fn fmt_lane_tasks(&self) -> String {
         self.lane_tasks
+            .iter()
+            .map(|(n, c)| format!("{n}={c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// `name=count` per-node served-task table, e.g. `nodeA=120 nodeB=80`.
+    pub fn fmt_node_tasks(&self) -> String {
+        self.node_tasks
             .iter()
             .map(|(n, c)| format!("{n}={c}"))
             .collect::<Vec<_>>()
@@ -185,6 +209,7 @@ fn drive_connection(
             Ok(reply) => {
                 if let Some(err) = reply.get("error").as_str() {
                     let id = reply.get("id").as_i64().unwrap_or(-1);
+                    report.n_server_err += 1;
                     report.record_err(format!("server error (id {id}): {err}"));
                 } else {
                     match reply.need_f64("response_ms") {
@@ -197,6 +222,9 @@ fn drive_connection(
                             report.rtt_ms.push(rtt_ms);
                             if let Some(lane) = reply.get("lane").as_str() {
                                 *report.lane_tasks.entry(lane.to_string()).or_insert(0) += 1;
+                            }
+                            if let Some(node) = reply.get("node").as_str() {
+                                *report.node_tasks.entry(node.to_string()).or_insert(0) += 1;
                             }
                         }
                         Err(e) => report.record_err(format!("bad reply: {e}")),

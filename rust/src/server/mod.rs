@@ -10,9 +10,16 @@
 //! injector thread replaying a trace (`serve*`) or by TCP connection
 //! handlers injecting live arrivals (`tcp::serve_tcp`), so scheduling
 //! behaviour is identical in every mode by construction.
+//!
+//! The distributed fleet adds two pieces on the same skeleton:
+//! [`wire`] (the length-prefixed framed protocol rtlm processes speak
+//! to each other) and [`router`] (the `rtlm route` controller, whose
+//! per-lane executors proxy lanes hosted by `rtlm tcp` nodes).
 
 pub mod engine;
 pub mod loadgen;
+pub mod router;
 pub mod tcp;
+pub mod wire;
 
 pub use engine::{serve_from_root, serve_with_factory, ServeOptions, ServeReport};

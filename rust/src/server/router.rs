@@ -1,0 +1,492 @@
+//! The `rtlm route` controller: one uncertainty-aware dispatcher over
+//! lanes living in other processes.
+//!
+//! A *node* is an ordinary `rtlm tcp` server; the router dials each one
+//! (or waits for `--register` dial-ins), gossips its lane table over
+//! the framed [`wire`](super::wire) protocol, and adopts every
+//! advertised lane into a union [`LaneSet`] as a [`LaneKind::Remote`]
+//! lane named `node/lane`. From there the stack is unchanged: the
+//! router *is* a `serve_tcp` server whose per-lane executors happen to
+//! be [`RemoteExecutor`]s — uncertainty is scored once at the router's
+//! admission, the policy routes across the union fleet by the gossiped
+//! admission predicates, and each dispatched batch becomes framed
+//! `submit` calls with id-tagged, out-of-order `done` replies.
+//!
+//! Failure model: a per-node monitor thread heartbeats a dedicated
+//! control connection. Two consecutive missed pongs (or a dead control
+//! connection) evict the node — its registered data streams are shut
+//! down so lane workers parked in a blocking read wake up even when
+//! the node hangs rather than resets, every in-flight task comes back
+//! as [`ExecOutcome::LaneLost`] re-queue work, and
+//! [`ArrivalHandle::fail_lane`] retires the idle lanes. The engine then
+//! re-routes through the surviving lanes' ordinary admissions; nothing
+//! is dropped silently.
+
+use std::collections::{HashMap, HashSet};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::ArrivalHandle;
+use crate::executor::{BatchExecutor, ExecOutcome, ExecReport, ExecutorFactory};
+use crate::scheduler::lane::numeric_thresholds;
+use crate::scheduler::{Admission, Batch, LaneId, LaneKind, LaneSet, LaneSpec, Task};
+use crate::util::json::Json;
+
+use super::wire;
+
+/// One lane a node advertises in its `lanes` gossip frame.
+#[derive(Clone, Debug)]
+pub struct NodeLane {
+    /// Lane name on the node ("gpu", "cpu", …).
+    pub name: String,
+    /// The node-side lane kind label ("gpu" / "cpu") — informational;
+    /// the router's proxy lane is always [`LaneKind::Remote`].
+    pub kind: String,
+    /// Model variant the lane serves.
+    pub model: String,
+    /// Per-lane batch-size override, if the node configured one.
+    pub batch_size: Option<usize>,
+    /// Intra-batch worker count, if the node configured one.
+    pub workers: Option<usize>,
+    /// Admission predicate in [`Admission::spec`] grammar.
+    pub admit: String,
+    /// Per-lane batching-window override (seconds), if any.
+    pub xi: Option<f64>,
+    /// Per-lane consolidation-split override, if any.
+    pub lambda: Option<f64>,
+}
+
+/// One node of the fleet: a name, a dialable address, and the lane
+/// table it gossiped.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    /// The node's self-reported name (`--node-name`); must be unique
+    /// across the fleet.
+    pub name: String,
+    /// Address the router dials for data and control connections.
+    pub addr: String,
+    /// Lanes the node advertised.
+    pub lanes: Vec<NodeLane>,
+}
+
+/// Dial a node, send `hello`, and parse the `lanes` gossip reply.
+pub fn dial_node(addr: &str, timeout: Duration) -> Result<NodeInfo> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("dialing node {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut writer = stream.try_clone()?;
+    wire::write_magic(&mut writer)?;
+    wire::write_frame(&mut writer, &wire::frame("hello", vec![]))?;
+    let mut reader = BufReader::new(stream);
+    wire::read_magic(&mut reader)
+        .with_context(|| format!("node {addr} did not answer as a framed rtlm server"))?;
+    let msg = wire::read_frame(&mut reader)?
+        .ok_or_else(|| anyhow!("node {addr} closed before gossiping its lane table"))?;
+    if wire::frame_type(&msg) != "lanes" {
+        bail!("node {addr} answered hello with '{}'", wire::frame_type(&msg));
+    }
+    parse_lanes_frame(addr, &msg)
+}
+
+fn parse_lanes_frame(addr: &str, msg: &Json) -> Result<NodeInfo> {
+    let name = msg.need_str("node")?.to_string();
+    let mut lanes = Vec::new();
+    for entry in msg.need_arr("lanes")? {
+        lanes.push(NodeLane {
+            name: entry.need_str("name")?.to_string(),
+            kind: entry.need_str("kind")?.to_string(),
+            model: entry.need_str("model")?.to_string(),
+            batch_size: entry.get("batch_size").as_usize(),
+            workers: entry.get("workers").as_usize(),
+            admit: entry.need_str("admit")?.to_string(),
+            xi: entry.get("xi").as_f64(),
+            lambda: entry.get("lambda").as_f64(),
+        });
+    }
+    if lanes.is_empty() {
+        bail!("node '{name}' ({addr}) advertised no lanes");
+    }
+    Ok(NodeInfo { name, addr: addr.to_string(), lanes })
+}
+
+/// Assemble the fleet: dial every `--nodes` address, then (if
+/// `expect_nodes > 0`) hold the router's listener open for that many
+/// `register` dial-ins, dialing each registrant back for its lane
+/// table before acking. Connections that are not framed registrations
+/// are ignored — clients arriving early simply retry.
+pub fn gather_nodes(
+    static_addrs: &[String],
+    listener: &TcpListener,
+    expect_nodes: usize,
+    timeout: Duration,
+) -> Result<Vec<NodeInfo>> {
+    let mut nodes = Vec::new();
+    for addr in static_addrs {
+        let node = dial_node(addr, timeout)?;
+        eprintln!(
+            "rtlm route: node '{}' at {addr} gossiped {} lane(s)",
+            node.name,
+            node.lanes.len()
+        );
+        nodes.push(node);
+    }
+    if expect_nodes > 0 {
+        eprintln!("rtlm route: waiting for {expect_nodes} node registration(s)…");
+    }
+    let mut registered = 0usize;
+    while registered < expect_nodes {
+        let (stream, peer) = listener.accept().context("accepting node registrations")?;
+        match accept_registration(stream, timeout) {
+            Ok(Some(node)) => {
+                eprintln!(
+                    "rtlm route: node '{}' registered from {peer}, serving at {}",
+                    node.name, node.addr
+                );
+                nodes.push(node);
+                registered += 1;
+            }
+            Ok(None) => {} // probe or early client; not a registration
+            Err(e) => eprintln!("rtlm route: registration from {peer} failed: {e:#}"),
+        }
+    }
+    Ok(nodes)
+}
+
+/// Handle one possible registration connection: `Ok(None)` when the
+/// peer is not a framed registrant, `Ok(Some(node))` after a
+/// successful dial-back, `Err` on a malformed or unreachable one.
+fn accept_registration(stream: TcpStream, timeout: Duration) -> Result<Option<NodeInfo>> {
+    stream.set_read_timeout(Some(timeout))?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning registration")?);
+    if !wire::is_framed_peer(&mut reader)? {
+        return Ok(None);
+    }
+    wire::read_magic(&mut reader)?;
+    let mut writer = stream;
+    wire::write_magic(&mut writer)?;
+    let Some(msg) = wire::read_frame(&mut reader)? else {
+        return Ok(None);
+    };
+    if wire::frame_type(&msg) != "register" {
+        bail!("expected a register frame, got '{}'", wire::frame_type(&msg));
+    }
+    let name = msg.need_str("node")?.to_string();
+    let addr = msg.need_str("addr")?.to_string();
+    match dial_node(&addr, timeout) {
+        Ok(mut node) => {
+            node.name = name;
+            wire::write_frame(&mut writer, &wire::frame("ok", vec![]))?;
+            Ok(Some(node))
+        }
+        Err(e) => {
+            let err = wire::frame(
+                "error",
+                vec![("error", Json::Str(format!("dial-back to {addr} failed: {e:#}")))],
+            );
+            let _ = wire::write_frame(&mut writer, &err);
+            Err(e)
+        }
+    }
+}
+
+/// Build the router's union [`LaneSet`]: every gossiped lane becomes a
+/// [`LaneKind::Remote`] lane named `node/lane` carrying the node's
+/// admission predicate and scheduling overrides, so one policy routes
+/// the whole fleet exactly as if the lanes were local.
+pub fn union_fleet(nodes: &[NodeInfo]) -> Result<LaneSet> {
+    let mut seen = HashSet::new();
+    let mut specs = Vec::new();
+    for node in nodes {
+        if node.name.is_empty() || node.name.contains('/') {
+            bail!("bad node name '{}' (must be non-empty, without '/')", node.name);
+        }
+        if !seen.insert(node.name.clone()) {
+            bail!(
+                "duplicate node name '{}' in the fleet (give each node a distinct --node-name)",
+                node.name
+            );
+        }
+        for lane in &node.lanes {
+            let admission = Admission::parse(&lane.admit, &mut numeric_thresholds)
+                .with_context(|| {
+                    format!(
+                        "node '{}' lane '{}' gossiped admission '{}'",
+                        node.name, lane.name, lane.admit
+                    )
+                })?;
+            specs.push(LaneSpec {
+                name: format!("{}/{}", node.name, lane.name),
+                kind: LaneKind::Remote,
+                model: lane.model.clone(),
+                batch_size: lane.batch_size,
+                workers: lane.workers,
+                admission,
+                xi: lane.xi,
+                lambda: lane.lambda,
+                node: Some(node.name.clone()),
+            });
+        }
+    }
+    LaneSet::new(specs).context("building the union fleet")
+}
+
+/// Live data-stream clones per node name, registered by
+/// [`RemoteExecutor`]s at connect time. The heartbeat monitor shuts a
+/// dead node's streams down on eviction, so lane workers blocked in a
+/// read wake up even when the node hangs or is partitioned instead of
+/// resetting the connection.
+pub type StreamRegistry = Arc<Mutex<HashMap<String, Vec<TcpStream>>>>;
+
+/// An empty [`StreamRegistry`].
+pub fn new_registry() -> StreamRegistry {
+    Arc::new(Mutex::new(HashMap::new()))
+}
+
+/// An [`ExecutorFactory`] that builds one [`RemoteExecutor`] per
+/// remote lane, resolving each lane's node tag to its dial address.
+pub fn remote_factory(nodes: &[NodeInfo], registry: StreamRegistry) -> ExecutorFactory {
+    let addrs: HashMap<String, String> =
+        nodes.iter().map(|n| (n.name.clone(), n.addr.clone())).collect();
+    Arc::new(move |spec: &LaneSpec| {
+        let node = spec
+            .node
+            .clone()
+            .ok_or_else(|| anyhow!("lane '{}' has no node tag (not a union lane)", spec.name))?;
+        let addr = addrs
+            .get(&node)
+            .ok_or_else(|| anyhow!("lane '{}': unknown node '{node}'", spec.name))?;
+        let exec = RemoteExecutor::connect(&node, addr, spec, registry.clone())?;
+        Ok(Box::new(exec) as Box<dyn BatchExecutor>)
+    })
+}
+
+/// A remote lane's executor: one framed data connection to the lane's
+/// node. `execute` turns a batch into per-task `submit` frames and
+/// collects id-tagged `done` replies (out of order — the node serves
+/// them as its own scheduler finishes them). A dead node is reported
+/// as [`ExecOutcome::LaneLost`] with the unanswered tasks attached, so
+/// the engine re-routes them instead of crashing the router.
+pub struct RemoteExecutor {
+    node: String,
+    lane: String,
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RemoteExecutor {
+    /// Dial the node and exchange the framed preamble; the data stream
+    /// registers itself for eviction shutdown.
+    pub fn connect(
+        node: &str,
+        addr: &str,
+        spec: &LaneSpec,
+        registry: StreamRegistry,
+    ) -> Result<RemoteExecutor> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("lane '{}': dialing node '{node}' at {addr}", spec.name))?;
+        let mut writer = stream.try_clone()?;
+        wire::write_magic(&mut writer)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        wire::read_magic(&mut reader)
+            .with_context(|| format!("lane '{}': node '{node}' preamble", spec.name))?;
+        registry.lock().unwrap().entry(node.to_string()).or_default().push(stream);
+        Ok(RemoteExecutor {
+            node: node.to_string(),
+            lane: spec.name.clone(),
+            writer,
+            reader,
+        })
+    }
+
+    fn lost(
+        &self,
+        completed: Vec<ExecReport>,
+        unanswered: HashMap<u64, Task>,
+        error: String,
+    ) -> ExecOutcome {
+        ExecOutcome::LaneLost {
+            completed,
+            requeue: unanswered.into_values().collect(),
+            error,
+        }
+    }
+}
+
+impl BatchExecutor for RemoteExecutor {
+    fn execute(&mut self, batch: &Batch) -> Result<Vec<ExecReport>> {
+        match self.execute_failable(batch)? {
+            ExecOutcome::Done(reports) => Ok(reports),
+            ExecOutcome::LaneLost { error, .. } => Err(anyhow!(error)),
+        }
+    }
+
+    fn execute_failable(&mut self, batch: &Batch) -> Result<ExecOutcome> {
+        let start = Instant::now();
+        let mut unanswered: HashMap<u64, Task> =
+            batch.tasks.iter().map(|t| (t.id, t.clone())).collect();
+        let mut completed: Vec<ExecReport> = Vec::new();
+
+        for task in &batch.tasks {
+            // ship the admission-time score — the node must not re-score
+            let submit = wire::frame(
+                "submit",
+                vec![
+                    ("id", Json::Num(task.id as f64)),
+                    ("text", Json::Str(task.text.clone())),
+                    ("u", Json::Num(task.uncertainty)),
+                    ("true_len", Json::Num(task.true_len as f64)),
+                    ("input_len", Json::Num(task.input_len as f64)),
+                    ("pp_offset", Json::Num(task.priority_point - task.arrival)),
+                    ("utype", Json::Str(task.utype.clone())),
+                    ("malicious", Json::Bool(task.malicious)),
+                ],
+            );
+            if let Err(e) = wire::write_frame(&mut self.writer, &submit) {
+                let err = format!("node '{}' unreachable mid-submit: {e:#}", self.node);
+                return Ok(self.lost(completed, unanswered, err));
+            }
+        }
+
+        while !unanswered.is_empty() {
+            let msg = match wire::read_frame(&mut self.reader) {
+                Ok(Some(msg)) => msg,
+                Ok(None) => {
+                    let err = format!("node '{}' closed the data stream", self.node);
+                    return Ok(self.lost(completed, unanswered, err));
+                }
+                Err(e) => {
+                    let err = format!("node '{}' data stream failed: {e:#}", self.node);
+                    return Ok(self.lost(completed, unanswered, err));
+                }
+            };
+            if wire::frame_type(&msg) != "done" {
+                continue; // stray frame on the data stream; ignore
+            }
+            let Some(id) = msg.get("id").as_f64().map(|x| x as u64) else {
+                continue;
+            };
+            if unanswered.remove(&id).is_none() {
+                continue; // unknown or duplicate id; ignore
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            if let Some(err) = msg.get("error").as_str() {
+                // the node answered, just unsuccessfully: that is a
+                // completion (empty output), not a lane failure
+                eprintln!(
+                    "lane '{}': node '{}' failed request {id}: {err}",
+                    self.lane, self.node
+                );
+                completed.push(ExecReport {
+                    task_ids: vec![id],
+                    outputs: vec![Vec::new()],
+                    infer_secs: 0.0,
+                    steps: 0,
+                    end_offset_secs: elapsed,
+                    ttft_back_secs: 0.0,
+                });
+                continue;
+            }
+            let output: Vec<i32> = msg
+                .get("token_ids")
+                .as_arr()
+                .map(|arr| arr.iter().filter_map(|t| t.as_i64().map(|x| x as i32)).collect())
+                .unwrap_or_default();
+            let response_ms = msg.get("response_ms").as_f64().unwrap_or(0.0);
+            let ttft_ms = msg.get("ttft_ms").as_f64().unwrap_or(response_ms);
+            completed.push(ExecReport {
+                task_ids: vec![id],
+                steps: output.len().max(msg.get("tokens").as_usize().unwrap_or(0)),
+                outputs: vec![output],
+                infer_secs: msg.get("infer_ms").as_f64().unwrap_or(0.0) / 1e3,
+                end_offset_secs: elapsed,
+                ttft_back_secs: ((response_ms - ttft_ms) / 1e3).max(0.0),
+            });
+        }
+        Ok(ExecOutcome::Done(completed))
+    }
+}
+
+/// Spawn one heartbeat monitor thread per node. Each keeps a dedicated
+/// control connection, pings every `interval`, and evicts the node
+/// after two consecutive missed pongs (or a dead control connection):
+/// registered data streams are shut down (waking lane workers blocked
+/// mid-batch into their [`ExecOutcome::LaneLost`] path) and every lane
+/// of the node is retired via [`ArrivalHandle::fail_lane`].
+pub fn spawn_monitors(
+    nodes: &[NodeInfo],
+    lanes: &LaneSet,
+    handle: &ArrivalHandle,
+    interval: Duration,
+    registry: &StreamRegistry,
+) {
+    for node in nodes {
+        let lane_ids: Vec<LaneId> = lanes
+            .ids()
+            .filter(|&id| lanes.spec(id).node.as_deref() == Some(node.name.as_str()))
+            .collect();
+        let node = node.clone();
+        let handle = handle.clone();
+        let registry = registry.clone();
+        thread::spawn(move || monitor_node(node, lane_ids, handle, interval, registry));
+    }
+}
+
+fn monitor_node(
+    node: NodeInfo,
+    lane_ids: Vec<LaneId>,
+    handle: ArrivalHandle,
+    interval: Duration,
+    registry: StreamRegistry,
+) {
+    let evict = |reason: &str| {
+        eprintln!("rtlm route: evicting node '{}' — {reason}", node.name);
+        if let Some(streams) = registry.lock().unwrap().remove(&node.name) {
+            for stream in streams {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        for &lane in &lane_ids {
+            handle.fail_lane(lane, format!("node '{}' evicted: {reason}", node.name));
+        }
+    };
+
+    let control = (|| -> Result<(TcpStream, BufReader<TcpStream>)> {
+        let stream = TcpStream::connect(&node.addr)?;
+        stream.set_read_timeout(Some(interval.max(Duration::from_millis(50))))?;
+        let mut writer = stream.try_clone()?;
+        wire::write_magic(&mut writer)?;
+        let mut reader = BufReader::new(stream);
+        wire::read_magic(&mut reader)?;
+        Ok((writer, reader))
+    })();
+    let (mut writer, mut reader) = match control {
+        Ok(conn) => conn,
+        Err(e) => return evict(&format!("control connection failed: {e:#}")),
+    };
+
+    let mut misses = 0u32;
+    let mut seq = 0u64;
+    loop {
+        thread::sleep(interval);
+        seq += 1;
+        let ping = wire::frame("ping", vec![("seq", Json::Num(seq as f64))]);
+        let answered = wire::write_frame(&mut writer, &ping).is_ok()
+            && matches!(
+                wire::read_frame(&mut reader),
+                Ok(Some(ref msg)) if wire::frame_type(msg) == "pong"
+            );
+        if answered {
+            misses = 0;
+            continue;
+        }
+        misses += 1;
+        if misses >= 2 {
+            return evict(&format!("missed {misses} consecutive heartbeats"));
+        }
+    }
+}

@@ -25,6 +25,16 @@
 //! correlated by `id` — and the per-request reply timeout becomes a
 //! per-connection inactivity timeout (no reply for `reply_timeout` with
 //! requests outstanding times out *all* outstanding requests).
+//!
+//! **Framed peers**: a connection that opens with the
+//! [`wire`](super::wire) magic is another rtlm process — the `rtlm
+//! route` controller — not a chat client. Those connections speak the
+//! length-prefixed frame protocol instead of text lines: `hello` /
+//! `lanes` gossips this node's lane table, `ping` / `pong` carries
+//! heartbeats, and `submit` / `done` carries pre-scored tasks whose
+//! replies are correlated by id out of order. The first buffered byte
+//! decides (the magic starts with a NUL no text line can), so ordinary
+//! line clients are untouched.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
@@ -34,17 +44,19 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::SchedParams;
+use crate::config::{SchedMode, SchedParams};
 use crate::engine::{run_engine_stream, ArrivalHandle, ArrivalSource, ThreadedBackend};
 use crate::executor::ExecutorFactory;
 use crate::runtime::ArtifactStore;
-use crate::scheduler::{LaneSet, Policy, Task};
+use crate::scheduler::{LaneKind, LaneSet, Policy, Task};
 use crate::sim::results::TaskOutcome;
 use crate::textgen::Vocab;
 use crate::uncertainty::Estimator;
 use crate::util::json::{obj, Json};
+
+use super::wire;
 
 /// Everything a connection handler needs to turn a text line into a
 /// scored task and wait for its reply. Built from an [`ArtifactStore`]
@@ -72,6 +84,16 @@ pub struct TcpServerConfig {
     /// an id-tagged timeout error (the task itself stays scheduled). In
     /// pipelined mode this is a per-connection inactivity timeout.
     pub reply_timeout: Duration,
+    /// This process's node name: gossiped to routers, stamped on every
+    /// reply as the `node` field. `"local"` for a plain single-process
+    /// server; on a router, replies instead derive the tag from the
+    /// executing lane's `node/lane` union name.
+    pub node: String,
+    /// Router address to register with at startup (`--register`): the
+    /// node dials it, announces its own listen address, and the router
+    /// dials back to adopt the node's lanes into its fleet. `None` (the
+    /// default) serves standalone.
+    pub register: Option<String>,
 }
 
 /// Reply channel of one in-flight request, keyed by task id; replies
@@ -102,6 +124,8 @@ impl TcpServerConfig {
             lanes,
             pipeline_depth,
             reply_timeout: Duration::from_secs(120),
+            node: "local".to_string(),
+            register: None,
         })
     }
 }
@@ -139,16 +163,34 @@ pub fn serve_tcp_on(
     listener: TcpListener,
     cfg: TcpServerConfig,
     factory: ExecutorFactory,
+    policy: Box<dyn Policy>,
+) -> Result<()> {
+    serve_tcp_with(listener, cfg, factory, policy, |_| {})
+}
+
+/// [`serve_tcp_on`] with a hook that observes the engine's
+/// [`ArrivalHandle`] once every lane is up, before the first connection
+/// is accepted — the router uses it to hand the handle to its heartbeat
+/// monitors so they can retire a node's lanes from outside the lane
+/// workers.
+pub fn serve_tcp_with(
+    listener: TcpListener,
+    cfg: TcpServerConfig,
+    factory: ExecutorFactory,
     mut policy: Box<dyn Policy>,
+    on_ready: impl FnOnce(&ArrivalHandle),
 ) -> Result<()> {
     let (mut backend, arrivals) = ThreadedBackend::start_stream(factory, &cfg.lanes, &cfg.params)?;
     let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
     let next_id = Arc::new(AtomicU64::new(0));
+    let listen_addr = listener.local_addr().context("reading listen address")?;
+    on_ready(&arrivals);
 
     // acceptor thread: connection handlers only touch Send-safe state
     {
         let cfg = cfg.clone();
         let pending = pending.clone();
+        let arrivals = arrivals.clone();
         thread::spawn(move || {
             for stream in listener.incoming().flatten() {
                 let cfg = cfg.clone();
@@ -156,7 +198,7 @@ pub fn serve_tcp_on(
                 let pending = pending.clone();
                 let next_id = next_id.clone();
                 thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, &cfg, &arrivals, &pending, &next_id) {
+                    if let Err(e) = handle_any_conn(stream, &cfg, &arrivals, &pending, &next_id) {
                         eprintln!("connection error: {e:#}");
                     }
                 });
@@ -164,10 +206,18 @@ pub fn serve_tcp_on(
         });
     }
 
+    // node mode: announce this server to its router, which dials back
+    // into the acceptor above to adopt our lanes — so registration must
+    // come after the accept loop is live
+    if let Some(router) = cfg.register.clone() {
+        register_with_router(&router, &cfg, listen_addr)?;
+    }
+
     // dispatcher: the one shared engine loop, replies streamed from the
     // completion callback as batches finish
     let vocab = cfg.vocab.clone();
     let lane_names = cfg.lanes.names();
+    let node_name = cfg.node.clone();
     let reply_map = pending.clone();
     let mut on_complete = move |o: &TaskOutcome, output: &[i32]| {
         let Some(reply_tx) = reply_map.lock().unwrap().remove(&o.id) else {
@@ -177,13 +227,25 @@ pub fn serve_tcp_on(
             .get(o.lane.index())
             .cloned()
             .unwrap_or_else(|| o.lane.to_string());
+        // a router's union lanes are named `node/lane`: the node tag is
+        // the prefix; a plain server's bare lane names tag its own name
+        let node = match lane.split_once('/') {
+            Some((node, _)) => node.to_string(),
+            None => node_name.clone(),
+        };
         let reply = obj(vec![
             ("id", Json::Num(o.id as f64)),
             ("tokens", Json::Num(output.len() as f64)),
             ("text", Json::Str(vocab.decode(output))),
+            (
+                "token_ids",
+                Json::Arr(output.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
             ("response_ms", Json::Num((o.completion - o.arrival) * 1e3)),
             ("ttft_ms", Json::Num(o.ttft() * 1e3)),
+            ("infer_ms", Json::Num(o.infer_secs * 1e3)),
             ("lane", Json::Str(lane)),
+            ("node", Json::Str(node)),
         ]);
         let _ = reply_tx.send((o.id, reply.to_string()));
     };
@@ -208,6 +270,258 @@ pub fn serve_tcp_on(
 
 fn error_reply(id: u64, msg: &str) -> String {
     obj(vec![("id", Json::Num(id as f64)), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Peek one buffered byte to tell a framed rtlm peer (the router) from
+/// a text-line chat client, then run the matching handler.
+fn handle_any_conn(
+    stream: TcpStream,
+    cfg: &TcpServerConfig,
+    arrivals: &ArrivalHandle,
+    pending: &PendingMap,
+    next_id: &AtomicU64,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    // the peek buffers socket bytes into `reader`, so both handlers
+    // must keep reading through it — a fresh BufReader would lose them
+    if wire::is_framed_peer(&mut reader)? {
+        handle_framed_conn(stream, reader, cfg, arrivals, pending, next_id)
+    } else {
+        handle_conn(stream, reader, cfg, arrivals, pending, next_id)
+    }
+}
+
+/// The lane table this node gossips to routers: everything the router
+/// needs to adopt each lane into its union fleet (`lanes` frame reply
+/// to `hello`). `queue` is the node's current in-flight request count —
+/// a liveness-cheap load signal, not a scheduling contract.
+fn lane_table_frame(cfg: &TcpServerConfig, pending: &PendingMap) -> Json {
+    let lanes: Vec<Json> = cfg
+        .lanes
+        .iter()
+        .map(|l| {
+            let slots = (cfg.params.mode == SchedMode::Step
+                && l.kind == LaneKind::Accelerator)
+                .then(|| cfg.params.slots_for(l.batch_size.unwrap_or(cfg.params.batch_size)));
+            obj(vec![
+                ("name", Json::Str(l.name.clone())),
+                ("kind", Json::Str(l.kind.label().to_string())),
+                ("model", Json::Str(l.model.clone())),
+                ("batch_size", l.batch_size.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null)),
+                ("workers", l.workers.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null)),
+                ("slots", slots.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
+                ("admit", Json::Str(l.admission.spec())),
+                ("xi", l.xi.map(Json::Num).unwrap_or(Json::Null)),
+                ("lambda", l.lambda.map(Json::Num).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    wire::frame(
+        "lanes",
+        vec![
+            ("node", Json::Str(cfg.node.clone())),
+            ("queue", Json::Num(pending.lock().unwrap().len() as f64)),
+            ("lanes", Json::Arr(lanes)),
+        ],
+    )
+}
+
+/// Dial the router, announce this node's name and listen address, and
+/// wait for its `ok`. The router dials back into our accept loop (a
+/// framed `hello`) to gossip the lane table — that part is just the
+/// ordinary framed-peer path.
+fn register_with_router(
+    router: &str,
+    cfg: &TcpServerConfig,
+    listen_addr: std::net::SocketAddr,
+) -> Result<()> {
+    // an all-zeroes bind address is not dialable; advertise loopback
+    // (the fleet is single-machine — see DESIGN.md "Distributed fleet")
+    let advertised = if listen_addr.ip().is_unspecified() {
+        format!("127.0.0.1:{}", listen_addr.port())
+    } else {
+        listen_addr.to_string()
+    };
+    let stream = TcpStream::connect(router)
+        .with_context(|| format!("registering with router {router}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    wire::write_magic(&mut writer)?;
+    wire::write_frame(
+        &mut writer,
+        &wire::frame(
+            "register",
+            vec![
+                ("node", Json::Str(cfg.node.clone())),
+                ("addr", Json::Str(advertised)),
+            ],
+        ),
+    )?;
+    let mut reader = BufReader::new(stream);
+    wire::read_magic(&mut reader)?;
+    let reply = wire::read_frame(&mut reader)?
+        .ok_or_else(|| anyhow!("router {router} closed the registration connection"))?;
+    match wire::frame_type(&reply) {
+        "ok" => {
+            eprintln!("registered with router {router} as node '{}'", cfg.node);
+            Ok(())
+        }
+        "error" => bail!(
+            "router {router} rejected registration: {}",
+            reply.get("error").as_str().unwrap_or("unknown error")
+        ),
+        other => bail!("router {router} sent unexpected '{other}' to registration"),
+    }
+}
+
+/// Build a task from a router `submit` frame. The router scored
+/// uncertainty once at admission and ships the numbers; this node must
+/// *not* re-score — it only tokenizes the prompt for its own executors.
+/// Re-admission through this node's policy uses the same predicates the
+/// router gossiped, so both hops route the task identically.
+fn task_from_submit(msg: &Json, cfg: &TcpServerConfig, id: u64, now: f64) -> Result<Task> {
+    let text = msg.need_str("text").context("submit frame")?.to_string();
+    let u = msg.need_f64("u").context("submit frame")?;
+    let true_len = msg.need_f64("true_len").context("submit frame")? as usize;
+    let input_len = msg.need_f64("input_len").context("submit frame")? as usize;
+    let pp_offset = msg.get("pp_offset").as_f64().unwrap_or(0.0);
+    let utype = msg.get("utype").as_str().unwrap_or("interactive").to_string();
+    let malicious = msg.get("malicious").as_bool().unwrap_or(false);
+    let mut prompt = cfg.vocab.encode(&text, Some(cfg.max_input_len));
+    if prompt.is_empty() {
+        prompt.push(crate::textgen::vocab::BOS_ID);
+    }
+    Ok(Task {
+        id,
+        text,
+        prompt,
+        arrival: now,
+        priority_point: now + pp_offset,
+        uncertainty: u,
+        true_len: true_len.max(1),
+        input_len,
+        utype,
+        malicious,
+        deferrals: 0,
+    })
+}
+
+/// Serve one framed peer (the router): `hello` gossips the lane table,
+/// `ping` answers `pong`, `submit` injects a pre-scored task whose
+/// completion comes back as an id-tagged `done` frame — out of order,
+/// exactly like the pipelined line protocol. Any wire error (garbage,
+/// truncated frame, disconnect) cleans up this connection's pending
+/// entries and closes; it can never wedge the dispatcher.
+fn handle_framed_conn(
+    stream: TcpStream,
+    mut reader: BufReader<TcpStream>,
+    cfg: &TcpServerConfig,
+    arrivals: &ArrivalHandle,
+    pending: &PendingMap,
+    next_id: &AtomicU64,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    wire::read_magic(&mut reader)?;
+    let writer = Arc::new(Mutex::new(stream));
+    wire::write_magic(&mut *writer.lock().unwrap())?;
+
+    // Tasks get fresh local ids (the engine's id space) mapped back to
+    // the router's ids on reply; `owned` holds the mapping exactly
+    // while a reply is still owed, so disconnect cleanup knows which
+    // pending entries are this connection's.
+    let owned: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (reply_tx, reply_rx) = mpsc::channel::<(u64, String)>();
+
+    // forwarder: completion-callback replies -> `done` frames, router
+    // ids restored; exits when the reader drops its sender and the
+    // pending map holds no more entries pointing here
+    let fwd_writer = writer.clone();
+    let fwd_owned = owned.clone();
+    let forwarder = thread::spawn(move || {
+        while let Ok((local_id, reply)) = reply_rx.recv() {
+            let Some(router_id) = fwd_owned.lock().unwrap().remove(&local_id) else {
+                continue;
+            };
+            let Ok(mut msg) = Json::parse(&reply) else { continue };
+            if let Json::Obj(ref mut map) = msg {
+                map.insert("type".to_string(), Json::Str("done".to_string()));
+                map.insert("id".to_string(), Json::Num(router_id as f64));
+            }
+            if wire::write_frame(&mut *fwd_writer.lock().unwrap(), &msg).is_err() {
+                return; // router gone; late completions degrade to no-ops
+            }
+        }
+    });
+
+    let result = (|| -> Result<()> {
+        loop {
+            let Some(msg) = wire::read_frame(&mut reader)? else {
+                return Ok(()); // clean EOF between frames
+            };
+            match wire::frame_type(&msg) {
+                "hello" => {
+                    let table = lane_table_frame(cfg, pending);
+                    wire::write_frame(&mut *writer.lock().unwrap(), &table)?;
+                }
+                "ping" => {
+                    let pong = wire::frame(
+                        "pong",
+                        vec![
+                            ("seq", msg.get("seq").clone()),
+                            ("node", Json::Str(cfg.node.clone())),
+                        ],
+                    );
+                    wire::write_frame(&mut *writer.lock().unwrap(), &pong)?;
+                }
+                "submit" => {
+                    let router_id = msg.need_f64("id").context("submit frame")? as u64;
+                    let local_id = next_id.fetch_add(1, Ordering::Relaxed);
+                    let task = task_from_submit(&msg, cfg, local_id, arrivals.now())?;
+                    // same ordering as the line handlers: register the
+                    // reply slot before injecting
+                    owned.lock().unwrap().insert(local_id, router_id);
+                    pending.lock().unwrap().insert(local_id, reply_tx.clone());
+                    if arrivals.inject(task).is_err() {
+                        pending.lock().unwrap().remove(&local_id);
+                        owned.lock().unwrap().remove(&local_id);
+                        let gone = wire::frame(
+                            "done",
+                            vec![
+                                ("id", Json::Num(router_id as f64)),
+                                ("error", Json::Str("server shutting down".to_string())),
+                            ],
+                        );
+                        wire::write_frame(&mut *writer.lock().unwrap(), &gone)?;
+                        return Ok(());
+                    }
+                }
+                "register" => {
+                    // dynamic registration happens in the router's
+                    // gather phase, before its fleet is built — a
+                    // register frame reaching a running server is late
+                    let err = wire::frame(
+                        "error",
+                        vec![("error", Json::Str("fleet already running".to_string()))],
+                    );
+                    wire::write_frame(&mut *writer.lock().unwrap(), &err)?;
+                    bail!("late registration attempt from {peer}");
+                }
+                other => bail!("unexpected '{other}' frame from framed peer {peer}"),
+            }
+        }
+    })();
+
+    // disconnect/error: unregister every reply still owed to this
+    // router so completions degrade to no-ops instead of dangling
+    {
+        let mut map = pending.lock().unwrap();
+        for (local_id, _) in owned.lock().unwrap().drain() {
+            map.remove(&local_id);
+        }
+    }
+    drop(reply_tx);
+    let _ = forwarder.join();
+    result
 }
 
 /// Score one request line into a task stamped on the engine clock.
@@ -236,17 +550,17 @@ fn build_task(text: String, id: u64, cfg: &TcpServerConfig, now: f64) -> Result<
 
 fn handle_conn(
     stream: TcpStream,
+    reader: BufReader<TcpStream>,
     cfg: &TcpServerConfig,
     arrivals: &ArrivalHandle,
     pending: &PendingMap,
     next_id: &AtomicU64,
 ) -> Result<()> {
     if cfg.pipeline_depth > 1 {
-        return handle_conn_pipelined(stream, cfg, arrivals, pending, next_id);
+        return handle_conn_pipelined(stream, reader, cfg, arrivals, pending, next_id);
     }
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+    let mut writer = stream;
     for line in reader.lines() {
         let text = line?;
         if text.trim().is_empty() {
@@ -298,6 +612,7 @@ struct WindowState {
 /// out of order when lanes finish out of order.
 fn handle_conn_pipelined(
     stream: TcpStream,
+    reader: BufReader<TcpStream>,
     cfg: &TcpServerConfig,
     arrivals: &ArrivalHandle,
     pending: &PendingMap,
@@ -305,8 +620,7 @@ fn handle_conn_pipelined(
 ) -> Result<()> {
     let k = cfg.pipeline_depth;
     let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+    let mut writer = stream;
     let (reply_tx, reply_rx) = mpsc::channel::<(u64, String)>();
     let window = Arc::new(ConnWindow {
         state: Mutex::new(WindowState::default()),

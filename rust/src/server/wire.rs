@@ -1,0 +1,238 @@
+//! Framed wire protocol for the distributed fleet (router ⇄ node).
+//!
+//! The line protocol (`tcp.rs`) is what *clients* speak; router⇄node
+//! traffic instead uses length-prefixed frames so payloads may contain
+//! newlines and replies can be id-tagged and arrive out of order. A
+//! framed peer announces itself by sending [`MAGIC`] immediately after
+//! connecting; the preamble starts with a NUL byte, which a text line
+//! can never contain, so the node's accept loop can tell the two
+//! protocols apart by peeking a single buffered byte
+//! ([`is_framed_peer`]).
+//!
+//! After the preamble, the stream is a sequence of frames:
+//!
+//! ```text
+//! [u32 big-endian payload length][payload: one JSON object]
+//! ```
+//!
+//! Every payload is a JSON object with a `"type"` field. The fleet
+//! protocol uses: `hello` (router → node, asks for the lane table),
+//! `lanes` (node → router, the gossip reply), `register` (node →
+//! router dial-in), `ok` (registration ack), `ping`/`pong`
+//! (heartbeats), `submit` (router → node, a batch of pre-scored
+//! tasks), and `done` (node → router, one per-task reply, id-tagged
+//! and unordered).
+//!
+//! Robustness contract (exercised by the in-module tests): truncated
+//! headers, truncated payloads, oversized lengths, and non-JSON
+//! payloads all surface as clean `Err`s — never a hang, a panic, or an
+//! unbounded allocation. Only EOF *between* frames is a clean end of
+//! stream (`Ok(None)`).
+
+use std::io::{self, BufRead, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Connection preamble a framed peer sends once, immediately after
+/// connecting. Starts with NUL so line-protocol text can never
+/// collide with it.
+pub const MAGIC: [u8; 6] = [0, b'R', b'T', b'L', b'M', b'1'];
+
+/// Upper bound on a single frame payload. A submit frame carries at
+/// most one scheduler batch of short prompts, so 4 MiB is generous;
+/// anything larger is treated as a corrupt or hostile stream.
+pub const MAX_FRAME: usize = 4 << 20;
+
+/// Send the connection preamble (framed peers call this once, before
+/// the first frame).
+pub fn write_magic(w: &mut impl Write) -> Result<()> {
+    w.write_all(&MAGIC).context("writing frame preamble")?;
+    Ok(())
+}
+
+/// Consume and verify the connection preamble.
+pub fn read_magic(r: &mut impl Read) -> Result<()> {
+    let mut buf = [0u8; MAGIC.len()];
+    r.read_exact(&mut buf).context("reading frame preamble")?;
+    if buf != MAGIC {
+        bail!("bad frame preamble (expected RTLM1 magic)");
+    }
+    Ok(())
+}
+
+/// Peek (without consuming anything) whether the peer on a freshly
+/// accepted connection speaks the framed protocol. Blocks until the
+/// first byte arrives; returns `false` on immediate EOF (probe
+/// connections) so the caller falls through to the line handler,
+/// which sees the same EOF and exits cleanly.
+pub fn is_framed_peer<R: BufRead>(reader: &mut R) -> io::Result<bool> {
+    let buf = reader.fill_buf()?;
+    Ok(buf.first() == Some(&MAGIC[0]))
+}
+
+/// Build a frame payload: an object with `"type": kind` plus fields.
+pub fn frame(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("type", Json::Str(kind.to_string()))];
+    pairs.extend(fields);
+    obj(pairs)
+}
+
+/// The `"type"` tag of a frame payload (empty string if absent).
+pub fn frame_type(msg: &Json) -> &str {
+    msg.get("type").as_str().unwrap_or("")
+}
+
+/// Write one frame (length prefix + JSON payload) and flush.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> Result<()> {
+    let payload = msg.to_string().into_bytes();
+    if payload.len() > MAX_FRAME {
+        bail!("refusing to send a {} byte frame (cap {MAX_FRAME})", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())
+        .context("writing frame header")?;
+    w.write_all(&payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary;
+/// `Err` on a truncated header/payload, an oversized or empty length,
+/// or a payload that is not valid JSON. The length is validated
+/// *before* the payload buffer is allocated, so a corrupt header can
+/// not trigger a multi-gigabyte allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut header = [0u8; 4];
+    // First header byte by hand: EOF *here* is a clean end of stream,
+    // EOF anywhere later is a truncation error.
+    loop {
+        match r.read(&mut header[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    r.read_exact(&mut header[1..])
+        .context("unexpected EOF inside a frame header")?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len == 0 {
+        bail!("empty frame");
+    }
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME} byte cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .context("unexpected EOF inside a frame payload")?;
+    let text = std::str::from_utf8(&payload).context("frame payload is not UTF-8")?;
+    let msg = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("frame payload is not valid JSON: {e}"))?;
+    Ok(Some(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn err_of(bytes: &[u8]) -> String {
+        read_frame(&mut Cursor::new(bytes.to_vec()))
+            .expect_err("corrupt input must error")
+            .to_string()
+    }
+
+    #[test]
+    fn frames_round_trip_through_a_byte_stream() {
+        let mut wire = Vec::new();
+        write_magic(&mut wire).unwrap();
+        let a = frame("ping", vec![("seq", Json::Num(3.0))]);
+        let b = frame("done", vec![("id", Json::Num(7.0)), ("text", Json::Str("x\ny".into()))]);
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+
+        let mut r = Cursor::new(wire);
+        read_magic(&mut r).unwrap();
+        let got_a = read_frame(&mut r).unwrap().expect("first frame");
+        assert_eq!(frame_type(&got_a), "ping");
+        assert_eq!(got_a.need_f64("seq").unwrap(), 3.0);
+        let got_b = read_frame(&mut r).unwrap().expect("second frame");
+        assert_eq!(got_b.need_str("text").unwrap(), "x\ny");
+        // clean EOF at a frame boundary
+        assert!(read_frame(&mut r).unwrap().is_none());
+        assert!(read_frame(&mut r).unwrap().is_none(), "EOF must stay clean on re-read");
+    }
+
+    #[test]
+    fn truncated_header_is_an_error_not_a_hang() {
+        let msg = err_of(&[0, 0, 1]);
+        assert!(msg.contains("frame header"), "{msg}");
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        // header says 10 bytes, only 3 arrive before disconnect
+        let mut bytes = 10u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"abc");
+        let msg = err_of(&bytes);
+        assert!(msg.contains("frame payload"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let bytes = u32::MAX.to_be_bytes().to_vec();
+        let msg = err_of(&bytes);
+        assert!(msg.contains("exceeds"), "{msg}");
+    }
+
+    #[test]
+    fn zero_length_frame_is_rejected() {
+        let msg = err_of(&0u32.to_be_bytes());
+        assert!(msg.contains("empty frame"), "{msg}");
+    }
+
+    #[test]
+    fn garbage_payload_is_a_clean_parse_error() {
+        let mut bytes = 9u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"not-json!");
+        let msg = err_of(&bytes);
+        assert!(msg.contains("not valid JSON"), "{msg}");
+
+        // and non-UTF8 garbage
+        let mut bytes = 4u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0xff, 0xfe, 0x00, 0x80]);
+        let msg = err_of(&bytes);
+        assert!(msg.contains("not UTF-8"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_write_is_refused() {
+        let huge = Json::Str("x".repeat(MAX_FRAME + 1));
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &huge).is_err());
+        assert!(sink.is_empty(), "nothing may hit the wire");
+    }
+
+    #[test]
+    fn magic_and_peek_distinguish_framed_peers_from_text() {
+        let mut wire = Vec::new();
+        write_magic(&mut wire).unwrap();
+        let mut r = std::io::BufReader::new(Cursor::new(wire));
+        assert!(is_framed_peer(&mut r).unwrap());
+        read_magic(&mut r).unwrap();
+
+        let mut text = std::io::BufReader::new(Cursor::new(b"hello line\n".to_vec()));
+        assert!(!is_framed_peer(&mut text).unwrap());
+        // the peek consumed nothing: the line is still there
+        let mut line = String::new();
+        text.read_line(&mut line).unwrap();
+        assert_eq!(line, "hello line\n");
+
+        let mut empty = std::io::BufReader::new(Cursor::new(Vec::new()));
+        assert!(!is_framed_peer(&mut empty).unwrap(), "probe connections are not framed");
+
+        let bad = read_magic(&mut Cursor::new(b"\x00RTLM2".to_vec()));
+        assert!(bad.unwrap_err().to_string().contains("preamble"));
+    }
+}

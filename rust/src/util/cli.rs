@@ -126,12 +126,25 @@ pub fn help_text(experiments: &[&str]) -> String {
          \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
          \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
          \x20     [--sched batch|step] [--slots N] [--overrun-factor F]\n\
+         \x20     [--node-name NAME] [--register ADDR]\n\
+         \x20 route [--addr A] [--policy P] [--nodes a:p,b:p] [--expect-nodes N]\n\
+         \x20     [--heartbeat-s S] [--pipeline K] [--sched batch|step]\n\
+         \x20     distributed-fleet router: unions the lane tables of every\n\
+         \x20     node (dialed via --nodes, or registering via their\n\
+         \x20     --register flag) into one node/lane fleet, scores\n\
+         \x20     uncertainty once at admission, and proxies batches to the\n\
+         \x20     owning node over framed TCP. Nodes missing 2 heartbeats\n\
+         \x20     are evicted and their in-flight tasks re-queue through\n\
+         \x20     ordinary lane admission on the survivors.\n\
          \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
          \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
+         \x20     [--allow-server-errors]\n\
          \x20 score <text...>            print RULEGEN features + u_J\n\n\
          --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
-         (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H;\n\
-         thresholds take numbers, inf, tau, or qP quantiles), or @lanes.json.\n\
+         (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H,\n\
+         xi=S, lambda=L — per-lane overrides of the batch-wait interval and\n\
+         the consolidation split; thresholds take numbers, inf, tau, or qP\n\
+         quantiles), or @lanes.json.\n\
          e.g. --lanes \"gpu:t5,gpu:godel:admit=atmost:q0.3,cpu:t5:workers=4\"\n\n\
          --sched step turns on iteration-level (continuous) batching:\n\
          accelerator lanes run a persistent decode loop over --slots slots\n\

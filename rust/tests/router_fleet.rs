@@ -1,0 +1,496 @@
+//! Distributed-fleet integration tests: the framed node-side protocol
+//! (`hello`/`lanes` gossip, `ping`/`pong` heartbeats, `submit`/`done`
+//! task calls) against a real `serve_tcp_on` server, and the `rtlm
+//! route` controller end-to-end — union fleets over live nodes,
+//! admission-based routing across processes, node death mid-batch with
+//! re-queue through lane admission, and heartbeat eviction. Node
+//! processes are in-process servers on ephemeral ports; the "dying"
+//! node is a scripted raw-TCP stub so its failure timing is exact.
+
+use std::collections::HashSet;
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rtlm::config::SchedParams;
+use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor};
+use rtlm::runtime::bundle::{Bundle, Tensor};
+use rtlm::scheduler::{LaneSet, LaneSpec, PolicyKind};
+use rtlm::server::router::{self, NodeInfo};
+use rtlm::server::tcp::{serve_tcp_on, serve_tcp_with, TcpServerConfig};
+use rtlm::server::wire;
+use rtlm::textgen::{Lexicon, Vocab};
+use rtlm::uncertainty::{Estimator, Regressor};
+use rtlm::util::json::{obj, Json};
+
+const MAX_INPUT_LEN: usize = 64;
+
+/// Minimal lexicon: a handful of vocab words, every rule list empty.
+fn test_lexicon() -> Lexicon {
+    let json = r#"{
+        "vocab": ["<pad>", "<bos>", "<eos>", "<unk>",
+                  "about", "art", "history", "me", "of", "tell", "the"],
+        "pos_lexicon": {},
+        "suffix_rules": [],
+        "homonyms": {},
+        "nv_ambiguous": [],
+        "vague_topics": [],
+        "vague_phrases": [],
+        "open_markers": [],
+        "multipart_markers": [],
+        "relativizers": [],
+        "wh_words": [],
+        "vague_adjectives": [],
+        "open_wh_starters": []
+    }"#;
+    Lexicon::from_json(&Json::parse(json).expect("lexicon json")).expect("lexicon")
+}
+
+/// Constant-output regressor: predicts 20 tokens for everything —
+/// every task lands in the fallback admission group.
+fn test_estimator(lexicon: Arc<Lexicon>) -> Estimator {
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32("w0", vec![7, 1], vec![0.0; 7]),
+        Tensor::f32("b0", vec![1], vec![20.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, MAX_INPUT_LEN as f64];
+    let regressor = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(lexicon, Arc::new(regressor), MAX_INPUT_LEN, 4.0, 96.0)
+}
+
+/// Length-sensitive regressor: u = 4 + 1.5 * input_tokens, so long
+/// prompts score past the quarantine threshold.
+fn length_estimator(lexicon: Arc<Lexicon>) -> Estimator {
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32("w0", vec![7, 1], vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 96.0]),
+        Tensor::f32("b0", vec![1], vec![4.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, MAX_INPUT_LEN as f64];
+    let regressor = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(lexicon, Arc::new(regressor), MAX_INPUT_LEN, 4.0, 96.0)
+}
+
+fn instant_factory() -> ExecutorFactory {
+    Arc::new(|_spec: &LaneSpec| Ok(Box::new(InstantExecutor) as Box<dyn BatchExecutor>))
+}
+
+fn node_config(name: &str, params: SchedParams) -> TcpServerConfig {
+    let lexicon = Arc::new(test_lexicon());
+    let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
+    TcpServerConfig {
+        vocab,
+        estimator: test_estimator(lexicon),
+        max_input_len: MAX_INPUT_LEN,
+        phi: 0.07,
+        params,
+        lanes: LaneSet::two_lane("m", 60.0),
+        pipeline_depth: 1,
+        reply_timeout: Duration::from_secs(30),
+        node: name.into(),
+        register: None,
+    }
+}
+
+/// One real node: `serve_tcp_on` over the default gpu+cpu fleet on an
+/// ephemeral port, detached (the test process exits past it).
+fn start_node(name: &str, factory: ExecutorFactory) -> SocketAddr {
+    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
+    let cfg = node_config(name, params);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind node");
+    let addr = listener.local_addr().expect("node addr");
+    let policy = PolicyKind::RtLm.build(&cfg.params, 0.05, &cfg.lanes);
+    thread::spawn(move || {
+        let _ = serve_tcp_on(listener, cfg, factory, policy);
+    });
+    addr
+}
+
+/// The router: union fleet over `nodes`, RemoteExecutor lanes, and
+/// (optionally) heartbeat monitors at `heartbeat`.
+fn start_router(
+    nodes: Vec<NodeInfo>,
+    estimator: Estimator,
+    heartbeat: Option<Duration>,
+) -> SocketAddr {
+    let lanes = router::union_fleet(&nodes).expect("union fleet");
+    let params = SchedParams { batch_size: 2, xi: 0.05, ..Default::default() };
+    let lexicon = Arc::new(test_lexicon());
+    let vocab = Arc::new(Vocab::from_lexicon(&lexicon, 11).expect("vocab"));
+    let cfg = TcpServerConfig {
+        vocab,
+        estimator,
+        max_input_len: MAX_INPUT_LEN,
+        phi: 0.07,
+        params,
+        lanes: lanes.clone(),
+        pipeline_depth: 1,
+        reply_timeout: Duration::from_secs(30),
+        node: "router".into(),
+        register: None,
+    };
+    let registry = router::new_registry();
+    let factory = router::remote_factory(&nodes, registry.clone());
+    let policy = PolicyKind::RtLm.build(&cfg.params, 0.05, &cfg.lanes);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind router");
+    let addr = listener.local_addr().expect("router addr");
+    thread::spawn(move || {
+        let _ = serve_tcp_with(listener, cfg, factory, policy, |handle| {
+            if let Some(interval) = heartbeat {
+                router::spawn_monitors(&nodes, &lanes, handle, interval, &registry);
+            }
+        });
+    });
+    addr
+}
+
+/// Send `lines` on one line-protocol connection, read `expect` replies.
+fn roundtrip(addr: SocketAddr, lines: &[&str], expect: usize) -> Vec<Json> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(20))).expect("read timeout");
+    let mut writer = stream.try_clone().expect("clone");
+    for line in lines {
+        writeln!(writer, "{line}").expect("write");
+    }
+    let mut reader = BufReader::new(stream);
+    (0..expect)
+        .map(|i| {
+            use std::io::BufRead;
+            let mut buf = String::new();
+            let n = reader.read_line(&mut buf).expect("read reply");
+            assert!(n > 0, "connection closed before reply {i}");
+            Json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad reply json '{buf}': {e}"))
+        })
+        .collect()
+}
+
+/// Open a framed connection: our magic goes out, the reply-side reader
+/// comes back (the server's magic is read by the caller when it
+/// expects it).
+fn framed_dial(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(20))).expect("timeout");
+    let mut writer = stream.try_clone().expect("clone");
+    wire::write_magic(&mut writer).expect("magic");
+    let reader = BufReader::new(stream);
+    (writer, reader)
+}
+
+/// A scripted raw-TCP "node": speaks just enough of the framed
+/// protocol to be adopted into a fleet (answers `hello` with a
+/// one-lane table, optionally answers `ping`) but swallows every
+/// `submit` — in-flight tasks are only released by [`StubNode::kill`],
+/// which hard-closes every accepted connection like a crashed process.
+struct StubNode {
+    addr: SocketAddr,
+    submits: Arc<Mutex<Vec<u64>>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl StubNode {
+    fn kill(&self) {
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn start_stub_node(name: &'static str, pong: bool) -> StubNode {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind stub");
+    let addr = listener.local_addr().expect("stub addr");
+    let submits: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let submits = submits.clone();
+        let conns = conns.clone();
+        thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().push(clone);
+                }
+                let submits = submits.clone();
+                thread::spawn(move || {
+                    let _ = stub_conn(stream, name, pong, submits);
+                });
+            }
+        });
+    }
+    StubNode { addr, submits, conns }
+}
+
+fn stub_conn(
+    stream: TcpStream,
+    name: &str,
+    pong: bool,
+    submits: Arc<Mutex<Vec<u64>>>,
+) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    wire::read_magic(&mut reader)?;
+    let mut writer = stream;
+    wire::write_magic(&mut writer)?;
+    loop {
+        let Some(msg) = wire::read_frame(&mut reader)? else {
+            return Ok(());
+        };
+        match wire::frame_type(&msg) {
+            "hello" => {
+                let lane = obj(vec![
+                    ("name", Json::Str("gpu".into())),
+                    ("kind", Json::Str("gpu".into())),
+                    ("model", Json::Str("m".into())),
+                    ("admit", Json::Str("default".into())),
+                ]);
+                let table = wire::frame(
+                    "lanes",
+                    vec![
+                        ("node", Json::Str(name.to_string())),
+                        ("queue", Json::Num(0.0)),
+                        ("lanes", Json::Arr(vec![lane])),
+                    ],
+                );
+                wire::write_frame(&mut writer, &table)?;
+            }
+            "ping" if pong => {
+                let reply = wire::frame("pong", vec![("seq", msg.get("seq").clone())]);
+                wire::write_frame(&mut writer, &reply)?;
+            }
+            "ping" => {} // heartbeat tests: stay silent, get evicted
+            "submit" => {
+                submits.lock().unwrap().push(msg.need_f64("id")? as u64);
+                // swallow: the reply only ever "arrives" as a dead socket
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn node_gossips_lane_table_and_answers_heartbeats() {
+    let addr = start_node("nodea", instant_factory());
+    let (mut writer, mut reader) = framed_dial(addr);
+    wire::write_frame(&mut writer, &wire::frame("hello", vec![])).expect("hello");
+    wire::read_magic(&mut reader).expect("server magic");
+
+    let table = wire::read_frame(&mut reader).expect("read").expect("lanes frame");
+    assert_eq!(wire::frame_type(&table), "lanes");
+    assert_eq!(table.need_str("node").expect("node"), "nodea");
+    let lanes = table.need_arr("lanes").expect("lane array");
+    assert_eq!(lanes.len(), 2, "the default fleet gossips both lanes");
+    assert_eq!(lanes[0].need_str("name").expect("name"), "gpu");
+    assert_eq!(lanes[0].need_str("kind").expect("kind"), "gpu");
+    assert_eq!(lanes[0].need_str("model").expect("model"), "m");
+    assert_eq!(lanes[0].need_str("admit").expect("admit"), "default");
+    assert_eq!(lanes[1].need_str("name").expect("name"), "cpu");
+    assert_eq!(lanes[1].need_str("admit").expect("admit"), "above:60");
+
+    // heartbeats echo the sequence number and carry the node name
+    wire::write_frame(&mut writer, &wire::frame("ping", vec![("seq", Json::Num(7.0))]))
+        .expect("ping");
+    let pong = wire::read_frame(&mut reader).expect("read").expect("pong frame");
+    assert_eq!(wire::frame_type(&pong), "pong");
+    assert_eq!(pong.need_f64("seq").expect("seq"), 7.0);
+    assert_eq!(pong.need_str("node").expect("node"), "nodea");
+}
+
+#[test]
+fn node_serves_framed_submits_with_router_ids() {
+    let addr = start_node("nodea", instant_factory());
+    let (mut writer, mut reader) = framed_dial(addr);
+    wire::read_magic(&mut reader).expect("server magic");
+
+    // router-side ids deliberately far from the node's own id space:
+    // the node must answer with *our* ids, not its local ones
+    for id in [100u64, 101, 102] {
+        let submit = wire::frame(
+            "submit",
+            vec![
+                ("id", Json::Num(id as f64)),
+                ("text", Json::Str("tell me about art".into())),
+                ("u", Json::Num(20.0)),
+                ("true_len", Json::Num(8.0)),
+                ("input_len", Json::Num(4.0)),
+            ],
+        );
+        wire::write_frame(&mut writer, &submit).expect("submit");
+    }
+
+    let mut ids = HashSet::new();
+    for _ in 0..3 {
+        let done = wire::read_frame(&mut reader).expect("read").expect("done frame");
+        assert_eq!(wire::frame_type(&done), "done");
+        assert_eq!(done.get("error"), &Json::Null, "unexpected error: {done}");
+        ids.insert(done.need_f64("id").expect("id") as u64);
+        assert!(done.get("token_ids").as_arr().is_some(), "done carries token ids: {done}");
+        assert!(done.need_f64("response_ms").expect("response_ms") >= 0.0);
+        assert_eq!(done.need_str("lane").expect("lane"), "gpu", "u=20 rides the gpu lane");
+    }
+    assert_eq!(ids, HashSet::from([100, 101, 102]), "replies correlate by router id");
+}
+
+#[test]
+fn malformed_framed_traffic_fails_clean_and_server_survives() {
+    let addr = start_node("nodea", instant_factory());
+
+    // an oversized length header is rejected before allocation and the
+    // connection just closes — no hang, no reply
+    {
+        let (mut writer, mut reader) = framed_dial(addr);
+        wire::read_magic(&mut reader).expect("server magic");
+        writer.write_all(&u32::MAX.to_be_bytes()).expect("header");
+        let mut rest = Vec::new();
+        let n = reader.read_to_end(&mut rest).expect("connection must close cleanly");
+        assert_eq!(n, 0, "no frames may follow a protocol error");
+    }
+
+    // a frame header promising bytes that never arrive (abrupt
+    // mid-frame disconnect) must not wedge the server
+    {
+        let (mut writer, _reader) = framed_dial(addr);
+        writer.write_all(&8u32.to_be_bytes()).expect("header");
+        writer.write_all(b"abc").expect("partial payload");
+        // drop: the server sees EOF inside the payload
+    }
+
+    // garbage bytes where JSON should be
+    {
+        let (mut writer, mut reader) = framed_dial(addr);
+        wire::read_magic(&mut reader).expect("server magic");
+        writer.write_all(&9u32.to_be_bytes()).expect("header");
+        writer.write_all(b"not-json!").expect("garbage");
+        let mut rest = Vec::new();
+        let n = reader.read_to_end(&mut rest).expect("connection must close cleanly");
+        assert_eq!(n, 0);
+    }
+
+    // a submit missing its required fields errors out that connection
+    // without a reply
+    {
+        let (mut writer, mut reader) = framed_dial(addr);
+        wire::read_magic(&mut reader).expect("server magic");
+        wire::write_frame(&mut writer, &wire::frame("submit", vec![("id", Json::Num(1.0))]))
+            .expect("bad submit");
+        assert!(
+            wire::read_frame(&mut reader).expect("clean close").is_none(),
+            "malformed submit must close the connection, not answer"
+        );
+    }
+
+    // after all of that, ordinary line clients are still served
+    let replies = roundtrip(addr, &["tell me about art"], 1);
+    assert_eq!(replies[0].get("error"), &Json::Null, "server survived: {}", replies[0]);
+}
+
+#[test]
+fn router_unions_nodes_and_routes_by_admission() {
+    let a = start_node("nodea", instant_factory());
+    let b = start_node("nodeb", instant_factory());
+    let nodes = vec![
+        router::dial_node(&a.to_string(), Duration::from_secs(10)).expect("dial nodea"),
+        router::dial_node(&b.to_string(), Duration::from_secs(10)).expect("dial nodeb"),
+    ];
+    let addr = start_router(nodes, length_estimator(Arc::new(test_lexicon())), None);
+
+    // u = 4 + 1.5*45 = 71.5 > 60: claimed by a cpu quarantine lane —
+    // on whichever node, but always a cpu lane, and the node tag must
+    // be the union name's prefix
+    let long = "history ".repeat(45);
+    let replies = roundtrip(addr, &[long.as_str()], 1);
+    assert_eq!(replies[0].get("error"), &Json::Null, "{}", replies[0]);
+    let lane = replies[0].need_str("lane").expect("lane").to_string();
+    assert!(lane.ends_with("/cpu"), "quarantined task must ride a cpu lane: {lane}");
+    let node = replies[0].need_str("node").expect("node");
+    assert!(lane.starts_with(node), "node tag '{node}' must prefix the union lane '{lane}'");
+
+    // short prompts score low and ride a gpu fallback lane
+    let replies = roundtrip(addr, &["art", "the art", "tell me about art"], 3);
+    for r in &replies {
+        assert_eq!(r.get("error"), &Json::Null, "{r}");
+        let lane = r.need_str("lane").expect("lane");
+        assert!(lane.ends_with("/gpu"), "low-uncertainty task on {lane}");
+        let node = r.need_str("node").expect("node");
+        assert!(node == "nodea" || node == "nodeb", "unknown node tag {node}");
+    }
+}
+
+/// The chaos scenario the CI router gate scripts with real processes:
+/// a node dies with tasks in flight; the router must detect the dead
+/// data stream, re-queue those tasks through ordinary lane admission,
+/// and answer every request from the survivor — zero lost ids.
+#[test]
+fn dead_node_mid_batch_requeues_to_survivor() {
+    let stub = start_stub_node("stuba", true);
+    let b = start_node("nodeb", instant_factory());
+    let nodes = vec![
+        router::dial_node(&stub.addr.to_string(), Duration::from_secs(10)).expect("dial stub"),
+        router::dial_node(&b.to_string(), Duration::from_secs(10)).expect("dial nodeb"),
+    ];
+    let addr = start_router(nodes, test_estimator(Arc::new(test_lexicon())), None);
+
+    // u = 20 for everything: the shared fallback group is
+    // {stuba/gpu, nodeb/gpu}, and least-loaded balancing sends a share
+    // of 6 concurrent requests to the stub, which swallows them
+    let clients: Vec<_> = (0..6)
+        .map(|_| thread::spawn(move || roundtrip(addr, &["tell me about the history of art"], 1)))
+        .collect();
+
+    // wait until the stub really holds in-flight submits, then crash it
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stub.submits.lock().unwrap().is_empty() {
+        assert!(Instant::now() < deadline, "no task was ever routed to the stub node");
+        thread::sleep(Duration::from_millis(20));
+    }
+    thread::sleep(Duration::from_millis(100)); // let the batch finish landing
+    stub.kill();
+
+    let mut ids = HashSet::new();
+    for client in clients {
+        for r in client.join().expect("client") {
+            assert_eq!(r.get("error"), &Json::Null, "lost or failed request: {r}");
+            let id = r.need_f64("id").expect("id") as u64;
+            assert!(ids.insert(id), "duplicate reply for id {id}");
+            assert_eq!(
+                r.need_str("node").expect("node"),
+                "nodeb",
+                "after the crash only the survivor serves: {r}"
+            );
+        }
+    }
+    assert_eq!(ids.len(), 6, "every request answered exactly once — zero lost ids");
+    assert!(
+        !stub.submits.lock().unwrap().is_empty(),
+        "the re-queue path was exercised (the stub had swallowed tasks)"
+    );
+}
+
+#[test]
+fn missed_heartbeats_evict_a_node_and_reroute() {
+    let stub = start_stub_node("stuba", false); // adopts fine, never pongs
+    let b = start_node("nodeb", instant_factory());
+    let nodes = vec![
+        router::dial_node(&stub.addr.to_string(), Duration::from_secs(10)).expect("dial stub"),
+        router::dial_node(&b.to_string(), Duration::from_secs(10)).expect("dial nodeb"),
+    ];
+    let addr = start_router(
+        nodes,
+        test_estimator(Arc::new(test_lexicon())),
+        Some(Duration::from_millis(100)),
+    );
+
+    // two missed heartbeats at a 100 ms interval evict within ~400 ms;
+    // wait comfortably past that before sending any traffic
+    thread::sleep(Duration::from_millis(1200));
+    let replies = roundtrip(addr, &["tell me about art", "the history of art"], 2);
+    for r in &replies {
+        assert_eq!(r.get("error"), &Json::Null, "{r}");
+        assert_eq!(
+            r.need_str("node").expect("node"),
+            "nodeb",
+            "traffic must route around the evicted node: {r}"
+        );
+    }
+    assert!(
+        stub.submits.lock().unwrap().is_empty(),
+        "no task may be dispatched to an evicted node"
+    );
+}

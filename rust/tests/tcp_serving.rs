@@ -94,6 +94,8 @@ fn test_config(params: SchedParams, reply_timeout: Duration) -> TcpServerConfig 
         lanes: LaneSet::two_lane("m", 60.0),
         pipeline_depth: 1,
         reply_timeout,
+        node: "local".into(),
+        register: None,
     }
 }
 
@@ -256,6 +258,8 @@ fn pipelined_depth_k_replies_out_of_order() {
         lanes: LaneSet::two_lane("m", 60.0),
         pipeline_depth: 3,
         reply_timeout: Duration::from_secs(30),
+        node: "local".into(),
+        register: None,
     };
     // time_scale 1: the quarantined task sleeps its full modeled
     // latency (~5s of modeled seconds -> but offload overhead dominates
@@ -316,6 +320,8 @@ fn three_lane_modeled_backend_serves_by_admission() {
         lanes,
         pipeline_depth: 1,
         reply_timeout: Duration::from_secs(30),
+        node: "local".into(),
+        register: None,
     };
     let addr = start_server_cfg(modeled_test_factory(50.0), cfg);
 

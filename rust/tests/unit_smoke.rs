@@ -65,6 +65,12 @@ const PUBLIC_FLAGS: &[&str] = &[
     "--sched",
     "--slots",
     "--overrun-factor",
+    "--node-name",
+    "--register",
+    "--nodes",
+    "--expect-nodes",
+    "--heartbeat-s",
+    "--allow-server-errors",
 ];
 
 #[test]
@@ -73,7 +79,7 @@ fn help_text_mentions_every_public_flag_and_command() {
     for flag in PUBLIC_FLAGS {
         assert!(help.contains(flag), "help text is missing the {flag} flag");
     }
-    for cmd in ["check", "calibrate", "bench", "sim", "serve", "tcp", "loadgen", "score"] {
+    for cmd in ["check", "calibrate", "bench", "sim", "serve", "tcp", "route", "loadgen", "score"] {
         assert!(help.contains(cmd), "help text is missing the {cmd} command");
     }
     for exp in rtlm::bench_harness::scenarios::EXPERIMENTS {

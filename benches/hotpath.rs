@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::{up_priority, LaneId, LaneSet, PolicyKind, Task};
+use rtlm::scheduler::{up_priority, LaneId, LaneSet, PolicyKind, Task, UpQueue, WHOLE_BATCH};
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::uncertainty::{rules, Estimator};
 use rtlm::util::json::{obj, Json};
@@ -191,10 +191,52 @@ fn main() {
             policy.push(t);
         }
         while policy.queue_len() > 0 {
-            std::hint::black_box(policy.pop_batch(LaneId::GPU, 0.0, true));
-            std::hint::black_box(policy.pop_batch(LaneId::CPU, 0.0, true));
+            std::hint::black_box(policy.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH));
+            std::hint::black_box(policy.pop(LaneId::CPU, 0.0, true, WHOLE_BATCH));
         }
     });
+
+    // --- pop cost vs queue depth: indexed UpQueue vs keyed full sort --------
+    // The million-task series: per-pop cost of the indexed bucket queue
+    // must stay near-flat as depth grows 10^3 -> 10^6 while the
+    // historical keyed full resort grows n log n. The indexed bench
+    // pops batches of 16 in exact oracle order without reinserting
+    // (depth drifts a few percent across the samples — the median
+    // doesn't care); the keyed bench rebuilds keys and re-sorts the
+    // whole backlog per pop, exactly what `UaSched::sort_queue` used to
+    // do on every dispatch. `scripts/bench_delta.py` renders this
+    // series as its own table.
+    let mut depth_sweep: Vec<(usize, f64, f64)> = Vec::new();
+    for depth in [1_000usize, 10_000, 100_000, 1_000_000] {
+        let mut rng = Pcg64::new(0xD0 + depth as u64);
+        let tasks: Vec<Task> = (0..depth as u64).map(|i| mk_task(&mut rng, i)).collect();
+
+        let mut q = UpQueue::new(params.clone(), 0.05);
+        for (i, t) in tasks.iter().enumerate() {
+            q.insert(t.clone(), i as u64);
+        }
+        // drain at most a few percent of the queue across all samples
+        // so depth stays representative
+        let iters = (depth / 7_680).max(1);
+        h.bench(&format!("indexed pop16 @ depth {depth}"), iters, || {
+            std::hint::black_box(q.pop_top(0.0, 16));
+        });
+        let indexed = h.results.last().unwrap().1;
+
+        let keyed_iters = (200_000 / depth).max(1);
+        h.bench(&format!("keyed full-sort pop16 @ depth {depth}"), keyed_iters, || {
+            let mut keyed: Vec<(f64, &Task)> = tasks
+                .iter()
+                .map(|t| (up_priority(t, &params, 0.05, 0.0), t))
+                .collect();
+            keyed.sort_by(|a, b| {
+                b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival))
+            });
+            std::hint::black_box(&keyed[..16.min(keyed.len())]);
+        });
+        let keyed = h.results.last().unwrap().1;
+        depth_sweep.push((depth, indexed, keyed));
+    }
 
     // full simulator run, 400 tasks (calibrated model when artifacts
     // exist, hand-built fixture otherwise; model and latency model must
@@ -311,6 +353,20 @@ fn main() {
             (name.clone(), Json::Obj(lanes.into_iter().collect()))
         })
         .collect();
+    // pop-cost-vs-depth series: numeric-string keys sort ascending in
+    // the BTreeMap ("1000" < "10000" < ... lexicographically)
+    let sweep_entries: Vec<(String, Json)> = depth_sweep
+        .iter()
+        .map(|(depth, indexed, keyed)| {
+            (
+                depth.to_string(),
+                obj(vec![
+                    ("indexed", Json::Num(*indexed)),
+                    ("keyed", Json::Num(*keyed)),
+                ]),
+            )
+        })
+        .collect();
     let snapshot = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("unit", Json::Str("seconds_per_iter".into())),
@@ -323,6 +379,10 @@ fn main() {
         (
             "batches",
             Json::Obj(batch_entries.into_iter().collect()),
+        ),
+        (
+            "pop_depth_sweep",
+            Json::Obj(sweep_entries.into_iter().collect()),
         ),
     ]);
     std::fs::write(&out_path, format!("{snapshot}\n")).expect("write bench snapshot");

@@ -11,7 +11,7 @@ use anyhow::Result;
 use rtlm::config::{Manifest, SchedParams};
 use rtlm::model::{session::encode_prompt, LmSession};
 use rtlm::runtime::ArtifactStore;
-use rtlm::scheduler::{Batch, LaneId, LaneSet, PolicyKind, Task};
+use rtlm::scheduler::{Batch, LaneId, LaneSet, PolicyKind, Task, WHOLE_BATCH};
 use rtlm::sim::LatencyModel;
 use rtlm::uncertainty::Estimator;
 
@@ -62,7 +62,7 @@ fn main() -> Result<()> {
         policy.push(task);
     }
     let mut batches: Vec<Batch> = Vec::new();
-    while let Some(batch) = policy.pop_batch(LaneId::GPU, 0.0, true) {
+    while let Some(batch) = policy.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH) {
         batches.push(batch);
     }
     println!("\n=== UASCHED batch plan (C = {}) ===", params.batch_size);

@@ -574,6 +574,7 @@ mod tests {
             utype: "test".into(),
             malicious: false,
             infer_secs: completion / 2.0,
+            shed: false,
         }
     }
 
@@ -590,6 +591,7 @@ mod tests {
             n_batches,
             n_steps: vec![0, 0],
             n_preempted: 0,
+            n_shed: 0,
         }
     }
 

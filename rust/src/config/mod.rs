@@ -7,4 +7,4 @@ pub mod sched;
 
 pub use device::DeviceProfile;
 pub use manifest::{Manifest, ModelEntry, RegressorEntry};
-pub use sched::{SchedMode, SchedParams};
+pub use sched::{SchedMode, SchedParams, ShedPolicy};

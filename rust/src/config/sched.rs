@@ -40,6 +40,40 @@ impl SchedMode {
     }
 }
 
+/// Which queued task an at-capacity lane sacrifices when a new arrival
+/// must be admitted (`--shed`). Only meaningful with a nonzero
+/// `queue_cap`; the victim may be the incoming task itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Drop the lowest-priority task under the lane's own dispatch
+    /// order (UP lanes: minimal Eq. 3 priority at arrival time; sorted
+    /// baselines: the back of the queue; FIFO lanes: the newcomer).
+    #[default]
+    Priority,
+    /// Drop the highest-predicted-length task (max uncertainty score) —
+    /// sacrifices the most accelerator-seconds per dropped request.
+    Length,
+}
+
+impl ShedPolicy {
+    /// Parse a `--shed` CLI value (`priority` | `length`).
+    pub fn parse(s: &str) -> anyhow::Result<ShedPolicy> {
+        match s {
+            "priority" => Ok(ShedPolicy::Priority),
+            "length" => Ok(ShedPolicy::Length),
+            _ => anyhow::bail!("--shed: expected 'priority' or 'length', got '{s}'"),
+        }
+    }
+
+    /// The CLI spelling (`priority` / `length`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::Priority => "priority",
+            ShedPolicy::Length => "length",
+        }
+    }
+}
+
 /// All tunables of UASCHED (Algorithm 1) plus workload-level knobs.
 #[derive(Clone, Debug)]
 pub struct SchedParams {
@@ -76,6 +110,13 @@ pub struct SchedParams {
     /// predicted length (uncertainty score). Non-finite or <= 0 disables
     /// preemption. Batch mode ignores it.
     pub overrun_factor: f64,
+    /// Overload admission control: max queued tasks per lane (0 =
+    /// unbounded, the historical behaviour). A push into a full lane
+    /// sheds one task per [`ShedPolicy`]; shed tasks complete
+    /// immediately with a `shed` outcome instead of executing.
+    pub queue_cap: usize,
+    /// Which task a full lane sheds (`--shed priority|length`).
+    pub shed: ShedPolicy,
 }
 
 impl Default for SchedParams {
@@ -92,6 +133,8 @@ impl Default for SchedParams {
             mode: SchedMode::Batch,
             slots: 0,
             overrun_factor: 3.0,
+            queue_cap: 0,
+            shed: ShedPolicy::Priority,
         }
     }
 }
@@ -149,6 +192,21 @@ mod tests {
         assert_eq!(p.slots_for(16), 16); // slots=0 -> lane batch size
         let p = SchedParams { slots: 4, ..Default::default() };
         assert_eq!(p.slots_for(16), 4);
+    }
+
+    #[test]
+    fn shedding_defaults_off() {
+        let p = SchedParams::default();
+        assert_eq!(p.queue_cap, 0, "unbounded queues by default");
+        assert_eq!(p.shed, ShedPolicy::Priority);
+    }
+
+    #[test]
+    fn shed_policy_parses() {
+        assert_eq!(ShedPolicy::parse("priority").unwrap(), ShedPolicy::Priority);
+        assert_eq!(ShedPolicy::parse("length").unwrap(), ShedPolicy::Length);
+        assert!(ShedPolicy::parse("random").is_err());
+        assert_eq!(ShedPolicy::Length.label(), "length");
     }
 
     #[test]

@@ -51,7 +51,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::{SchedMode, SchedParams};
-use crate::scheduler::{Batch, LaneId, Policy, Task};
+use crate::scheduler::{Batch, LaneId, Policy, Task, WHOLE_BATCH};
 use crate::sim::results::TaskOutcome;
 
 /// One completed task inside a [`BatchDone`].
@@ -246,6 +246,10 @@ pub struct EngineReport {
     /// Tasks re-queued through lane admission because the lane they
     /// were in flight on died survivably (see [`Step::failed`]).
     pub n_retried: usize,
+    /// Tasks dropped by overload admission control
+    /// ([`SchedParams::queue_cap`]): each got a `shed` outcome (and a
+    /// wire reply in serving runs) instead of executing.
+    pub n_shed: usize,
     /// Lanes retired mid-run after their executor substrate died
     /// (remote node loss / heartbeat eviction).
     pub n_evicted: usize,
@@ -381,12 +385,14 @@ pub fn run_engine_stream(
                 continue;
             }
             let t0 = Instant::now();
-            let batch = match slot_cap[lane.index()] {
-                // whole-batch lane: the historical pop, untouched
-                None => policy.pop_batch(lane, now, force),
-                // stepped lane: fill up to `free` slots from the queue
-                Some(_) => policy.pop_fill(lane, now, force, free),
+            // one pop seam for both disciplines: a whole-batch lane
+            // passes the WHOLE_BATCH sentinel (the policy sizes the
+            // batch), a stepped lane its actual free slot count
+            let free_cap = match slot_cap[lane.index()] {
+                None => WHOLE_BATCH,
+                Some(_) => free,
             };
+            let batch = policy.pop(lane, now, force, free_cap);
             report.sched_secs += t0.elapsed().as_secs_f64();
             if let Some(batch) = batch {
                 if slot_cap[lane.index()].is_some() {
@@ -517,6 +523,7 @@ pub fn run_engine_stream(
                     utype: task.utype,
                     malicious: task.malicious,
                     infer_secs: t.infer_secs,
+                    shed: false,
                 };
                 if let Some(cb) = on_complete.as_mut() {
                     cb(&outcome, &t.output);
@@ -569,6 +576,40 @@ pub fn run_engine_stream(
                 policy.push(task);
                 report.sched_secs += t0.elapsed().as_secs_f64();
             }
+        }
+
+        // -- account shed tasks --------------------------------------------
+        // Overload admission control (queue_cap > 0) sheds inside
+        // policy.push; every push site above has run, so one drain per
+        // round sees them all. A shed task completes immediately with a
+        // flagged outcome — serving front-ends reply `{"error":"shed"}`
+        // from it, so every submitted id still gets exactly one reply —
+        // and counts toward termination like any completion.
+        for (lane, task) in policy.take_shed() {
+            queued.remove(&task.id);
+            meta.remove(&task.id);
+            report.n_shed += 1;
+            let outcome = TaskOutcome {
+                id: task.id,
+                arrival: task.arrival,
+                completion: task.arrival, // dropped at admission: zero service
+                first_token: task.arrival,
+                priority_point: task.priority_point,
+                uncertainty: task.uncertainty,
+                true_len: task.true_len,
+                lane,
+                utype: task.utype,
+                malicious: task.malicious,
+                infer_secs: 0.0,
+                shed: true,
+            };
+            if let Some(cb) = on_complete.as_mut() {
+                cb(&outcome, &[]);
+            }
+            if store_results {
+                report.outcomes.push(outcome);
+            }
+            completed += 1;
         }
     }
 

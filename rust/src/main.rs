@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 use rtlm::bench_harness::scenarios::{run_experiment, ExperimentCtx, EXPERIMENTS};
-use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedMode, SchedParams};
+use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedMode, SchedParams, ShedPolicy};
 use rtlm::executor::{modeled_factory, ExecutorFactory};
 use rtlm::metrics::table::fmt_f;
 use rtlm::model::LmSession;
@@ -96,12 +96,18 @@ fn lane_models(
     Ok(models)
 }
 
-/// Apply the scheduler-mode flags (`--sched batch|step`, `--slots N`,
-/// `--overrun-factor F`) on top of an already-built parameter set.
+/// The one place CLI flags become [`SchedParams`]: `sim`, `serve`,
+/// `tcp`, `route`, and `bench` all funnel their base parameter set
+/// through here. Applies the dispatch-mode flags (`--sched batch|step`,
+/// `--slots N`, `--overrun-factor F`) and the overload admission knobs
+/// (`--queue-cap N`, `--shed priority|length`) on top of whatever
+/// defaults the caller built.
 fn apply_sched_args(args: &Args, params: &mut SchedParams) -> Result<()> {
     params.mode = SchedMode::parse(args.get_or("sched", params.mode.label()))?;
     params.slots = args.get_usize("slots", params.slots)?;
     params.overrun_factor = args.get_f64("overrun-factor", params.overrun_factor)?;
+    params.queue_cap = args.get_usize("queue-cap", params.queue_cap)?;
+    params.shed = ShedPolicy::parse(args.get_or("shed", params.shed.label()))?;
     Ok(())
 }
 
@@ -237,7 +243,10 @@ fn bench(args: &Args) -> Result<()> {
     }
     let n = args.get_usize("n", 400)?;
     let seed = args.get_u64("seed", 7)?;
-    let ctx = ExperimentCtx::new(store, n, seed)?;
+    let mut ctx = ExperimentCtx::new(store, n, seed)?;
+    // every cell clones its params off the ctx baseline, so the shared
+    // builder applies CLI sched/shed knobs to the whole experiment grid
+    apply_sched_args(args, &mut ctx.params)?;
     let exp = args
         .positional
         .get(1)
@@ -258,7 +267,8 @@ fn bench_wire(args: &Args, store: Arc<ArtifactStore>) -> Result<()> {
     let n = args.get_usize("n", 64)?;
     let seed = args.get_u64("seed", 7)?;
     let time_scale = args.get_f64("time-scale", 25.0)?;
-    let ctx = ExperimentCtx::new(store, n, seed)?;
+    let mut ctx = ExperimentCtx::new(store, n, seed)?;
+    apply_sched_args(args, &mut ctx.params)?;
     let mut tol = ParityTolerance::for_time_scale(time_scale);
     tol.rel = args.get_f64("parity-rel", tol.rel)?;
     // the wall-slop default (and its dilation rule) lives in
@@ -344,13 +354,14 @@ fn sim(args: &Args) -> Result<()> {
         fmt_f(ttft.p95(), 3)
     );
     println!(
-        "throughput {}/min  misses {} ({:.1}%)  batches {}  steps {}  preempted {}  sched {:.1} us/task",
+        "throughput {}/min  misses {} ({:.1}%)  batches {}  steps {}  preempted {}  shed {}  sched {:.1} us/task",
         fmt_f(r.throughput_per_min(), 1),
         r.miss_count(),
         r.miss_rate() * 100.0,
         r.fmt_batches(),
         r.n_steps.iter().sum::<usize>(),
         r.n_preempted,
+        r.n_shed,
         r.sched_wall_secs / r.outcomes.len().max(1) as f64 * 1e6,
     );
     if let Some(path) = args.get("export") {
@@ -439,11 +450,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         fmt_f(ttft.p95(), 3)
     );
     println!(
-        "throughput {}/min | batches {} | steps {} | preempted {} | infer {:.1}s | sched {:.1} us/task",
+        "throughput {}/min | batches {} | steps {} | preempted {} | shed {} | infer {:.1}s | sched {:.1} us/task",
         fmt_f(report.throughput_per_min(), 1),
         report.fmt_batches(),
         report.n_steps.iter().sum::<usize>(),
         report.n_preempted,
+        report.n_shed,
         report.infer_secs,
         report.sched_secs / report.outcomes.len().max(1) as f64 * 1e6
     );
@@ -606,11 +618,19 @@ fn loadgen(args: &Args) -> Result<()> {
         concurrency: args.get_usize("concurrency", n)?,
         reply_timeout: std::time::Duration::from_secs_f64(args.get_f64("timeout-s", 60.0)?),
         connect_wait: std::time::Duration::from_secs_f64(args.get_f64("connect-wait-s", 30.0)?),
+        rate: args.get_f64("rate", 0.0)?,
     };
-    println!(
-        "loadgen: {n} requests over {} connections against {addr}",
-        opts.concurrency
-    );
+    if opts.rate > 0.0 {
+        println!(
+            "loadgen: {n} requests over {} connections against {addr} (open loop, {} req/s)",
+            opts.concurrency, opts.rate
+        );
+    } else {
+        println!(
+            "loadgen: {n} requests over {} connections against {addr}",
+            opts.concurrency
+        );
+    }
     let mut report = run(&addr, &opts)?;
     let (mean, p50, p95, max) = (
         report.response_ms.mean(),
@@ -619,8 +639,9 @@ fn loadgen(args: &Args) -> Result<()> {
         report.response_ms.max(),
     );
     println!(
-        "ok {} / err {} | server response_ms: mean {} p50 {} p95 {} max {} | ttft_ms p95 {} | client rtt_ms p95 {}",
+        "ok {} / shed {} / err {} | server response_ms: mean {} p50 {} p95 {} max {} | ttft_ms p95 {} | client rtt_ms p95 {}",
         report.n_ok,
+        report.n_shed,
         report.n_err,
         fmt_f(mean, 1),
         fmt_f(p50, 1),
@@ -642,27 +663,51 @@ fn loadgen(args: &Args) -> Result<()> {
         // chaos-gate mode: a node died mid-run, so id-tagged server
         // error replies are acceptable — but every request must still
         // get *some* answer (no lost ids), and nothing else may fail
-        let answered = report.n_ok + report.n_server_err;
+        let answered = report.n_ok + report.n_server_err + report.n_shed;
         if answered != n || report.n_err != report.n_server_err {
             return Err(anyhow!(
-                "load test failed: {} of {n} requests answered ({} ok + {} server errors), \
-                 {} non-server errors",
+                "load test failed: {} of {n} requests answered ({} ok + {} shed + {} server \
+                 errors), {} non-server errors",
                 answered,
                 report.n_ok,
+                report.n_shed,
                 report.n_server_err,
                 report.n_err - report.n_server_err
             ));
         }
         println!(
-            "all {n} requests answered: {} ok, {} server error replies (allowed)",
-            report.n_ok, report.n_server_err
+            "all {n} requests answered: {} ok, {} shed, {} server error replies (allowed)",
+            report.n_ok, report.n_shed, report.n_server_err
         );
-    } else if report.n_err > 0 || report.n_ok != n {
+    } else if report.n_err > 0 || report.n_ok + report.n_shed != n {
+        // sheds are answered requests — the exactly-one-reply invariant
+        // counts them; only errors and lost replies fail the run
         return Err(anyhow!(
-            "load test failed: {} errors, {} of {n} replies ok",
+            "load test failed: {} errors, {} ok + {} shed of {n} requests answered",
             report.n_err,
-            report.n_ok
+            report.n_ok,
+            report.n_shed
         ));
+    }
+    let min_shed = args.get_usize("min-shed", 0)?;
+    if report.n_shed < min_shed {
+        return Err(anyhow!(
+            "only {} requests shed, expected at least {min_shed} (overload did not bind)",
+            report.n_shed
+        ));
+    }
+    if let Some(bound) = args.get("max-shed-rate") {
+        let bound: f64 = bound
+            .parse()
+            .map_err(|_| anyhow!("--max-shed-rate expects a fraction, got '{bound}'"))?;
+        let rate = report.n_shed as f64 / n as f64;
+        if rate > bound {
+            return Err(anyhow!(
+                "shed rate {rate:.3} ({} of {n}) exceeds the {bound:.3} bound",
+                report.n_shed
+            ));
+        }
+        println!("shed rate {rate:.3} within the {bound:.3} bound");
     }
     if let Some(expect) = args.get("expect-lanes") {
         let missing: Vec<&str> = expect

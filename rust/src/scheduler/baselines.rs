@@ -3,16 +3,50 @@
 //! first), MUF (maximum uncertainty first). All use fixed-size batching
 //! and dispatch only on the fleet's primary lane — baselines do not
 //! offload.
+//!
+//! Storage, insertion order, and overload shedding live in the shared
+//! [`PolicyQueues`] helper; what remains here is each baseline's
+//! ordering key and the fixed-batch admission gate.
 
-use std::collections::VecDeque;
+use crate::config::{SchedParams, ShedPolicy};
 
 use super::lane::LaneId;
-use super::policy::{Batch, Policy};
+use super::policy::{Batch, Policy, WHOLE_BATCH};
+use super::queue::{LaneQ, PolicyQueues};
 use super::task::Task;
+
+/// The shared single-lane pop: fixed-size batches off the front of the
+/// one queue, primary lane only. With a stepped `free` below the batch
+/// size, the overflow is re-admitted (FIFO: back of the queue; sorted:
+/// its key position) — the historical `pop_fill` adapter semantics.
+fn single_lane_pop(
+    queues: &mut PolicyQueues,
+    primary: LaneId,
+    batch_size: usize,
+    lane: LaneId,
+    force: bool,
+    free: usize,
+) -> Option<Batch> {
+    if lane != primary || free == 0 {
+        return None; // baselines are uncertainty-oblivious: primary lane only
+    }
+    let len = queues.len(0);
+    if len == 0 || (!force && len < batch_size) {
+        return None;
+    }
+    let n = len.min(batch_size);
+    let mut tasks = queues.pop_front(0, n);
+    if free < tasks.len() {
+        for task in tasks.split_off(free) {
+            queues.reinsert(0, task);
+        }
+    }
+    Some(Batch { lane, tasks })
+}
 
 /// First-In-First-Out with fixed-size batches.
 pub struct Fifo {
-    queue: VecDeque<Task>,
+    queues: PolicyQueues,
     batch_size: usize,
     primary: LaneId,
 }
@@ -23,9 +57,19 @@ impl Fifo {
         Fifo::new_on(batch_size, LaneId::GPU)
     }
 
-    /// FIFO dispatching on the given primary lane.
+    /// FIFO dispatching on the given primary lane (unbounded queue).
     pub fn new_on(batch_size: usize, primary: LaneId) -> Fifo {
-        Fifo { queue: VecDeque::new(), batch_size: batch_size.max(1), primary }
+        Fifo {
+            queues: PolicyQueues::new(vec![(primary, LaneQ::fifo())], 0, ShedPolicy::Priority),
+            batch_size: batch_size.max(1),
+            primary,
+        }
+    }
+
+    /// Enable overload admission control from the scheduler params.
+    pub fn with_overload(mut self, params: &SchedParams) -> Fifo {
+        self.queues.set_overload(params.queue_cap, params.shed);
+        self
     }
 }
 
@@ -35,166 +79,118 @@ impl Policy for Fifo {
     }
 
     fn push(&mut self, task: Task) {
-        self.queue.push_back(task);
+        self.queues.push(0, task);
     }
 
-    fn pop_batch(&mut self, lane: LaneId, _now: f64, force: bool) -> Option<Batch> {
-        if lane != self.primary {
-            return None; // baselines are uncertainty-oblivious: primary lane only
-        }
-        if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
-            return None;
-        }
-        let n = self.queue.len().min(self.batch_size);
-        let tasks = self.queue.drain(..n).collect();
-        Some(Batch { lane: self.primary, tasks })
+    fn pop(&mut self, lane: LaneId, _now: f64, force: bool, free: usize) -> Option<Batch> {
+        single_lane_pop(&mut self.queues, self.primary, self.batch_size, lane, force, free)
     }
 
     fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queues.total_len()
+    }
+
+    fn take_shed(&mut self) -> Vec<(LaneId, Task)> {
+        self.queues.take_shed()
     }
 }
 
 /// Sorted-queue policy: keeps tasks ordered by a key, dispatches the
-/// first `batch_size` (tasks with similar keys batch together).
-struct Sorted<K: Fn(&Task) -> f64 + Send> {
+/// first `batch_size` (tasks with similar keys batch together). The
+/// named baselines below are constructors for this one type.
+pub struct Sorted {
     name: &'static str,
-    queue: Vec<Task>,
-    key: K,
+    queues: PolicyQueues,
     batch_size: usize,
     primary: LaneId,
 }
 
-impl<K: Fn(&Task) -> f64 + Send> Sorted<K> {
-    fn new(name: &'static str, key: K, batch_size: usize, primary: LaneId) -> Self {
-        Sorted { name, queue: Vec::new(), key, batch_size: batch_size.max(1), primary }
+impl Sorted {
+    fn new(
+        name: &'static str,
+        key: Box<dyn Fn(&Task) -> f64 + Send>,
+        batch_size: usize,
+        primary: LaneId,
+    ) -> Sorted {
+        Sorted {
+            name,
+            queues: PolicyQueues::new(vec![(primary, LaneQ::keyed(key))], 0, ShedPolicy::Priority),
+            batch_size: batch_size.max(1),
+            primary,
+        }
+    }
+
+    /// Enable overload admission control from the scheduler params.
+    pub fn with_overload(mut self, params: &SchedParams) -> Sorted {
+        self.queues.set_overload(params.queue_cap, params.shed);
+        self
     }
 }
 
-impl<K: Fn(&Task) -> f64 + Send> Policy for Sorted<K> {
+impl Policy for Sorted {
     fn name(&self) -> String {
         self.name.into()
     }
 
     fn push(&mut self, task: Task) {
-        // binary insert keeps the queue ordered; ties break by arrival.
-        // total_cmp keeps the order total even for NaN keys (a NaN
-        // comparison returning false would silently break the invariant
-        // the binary search relies on).
-        let k = (self.key)(&task);
-        let pos = self.queue.partition_point(|t| {
-            (self.key)(t)
-                .total_cmp(&k)
-                .then(t.arrival.total_cmp(&task.arrival))
-                .is_le()
-        });
-        self.queue.insert(pos, task);
+        self.queues.push(0, task);
     }
 
-    fn pop_batch(&mut self, lane: LaneId, _now: f64, force: bool) -> Option<Batch> {
-        if lane != self.primary {
-            return None;
-        }
-        if self.queue.is_empty() || (!force && self.queue.len() < self.batch_size) {
-            return None;
-        }
-        let n = self.queue.len().min(self.batch_size);
-        let tasks = self.queue.drain(..n).collect();
-        Some(Batch { lane: self.primary, tasks })
+    fn pop(&mut self, lane: LaneId, _now: f64, force: bool, free: usize) -> Option<Batch> {
+        single_lane_pop(&mut self.queues, self.primary, self.batch_size, lane, force, free)
     }
 
     fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queues.total_len()
+    }
+
+    fn take_shed(&mut self) -> Vec<(LaneId, Task)> {
+        self.queues.take_shed()
     }
 }
 
 /// Highest Priority-Point First: earliest d_J dispatches first.
-pub struct Hpf(Sorted<fn(&Task) -> f64>);
+pub struct Hpf;
 
 impl Hpf {
     /// HPF on the default two-lane fleet's accelerator lane.
-    pub fn new(batch_size: usize) -> Hpf {
+    pub fn new(batch_size: usize) -> Sorted {
         Hpf::new_on(batch_size, LaneId::GPU)
     }
 
     /// HPF dispatching on the given primary lane.
-    pub fn new_on(batch_size: usize, primary: LaneId) -> Hpf {
-        Hpf(Sorted::new("HPF", |t: &Task| t.priority_point, batch_size, primary))
-    }
-}
-
-impl Policy for Hpf {
-    fn name(&self) -> String {
-        self.0.name()
-    }
-    fn push(&mut self, task: Task) {
-        self.0.push(task)
-    }
-    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
-        self.0.pop_batch(lane, now, force)
-    }
-    fn queue_len(&self) -> usize {
-        self.0.queue_len()
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Sorted {
+        Sorted::new("HPF", Box::new(|t: &Task| t.priority_point), batch_size, primary)
     }
 }
 
 /// Least Uncertainty First.
-pub struct Luf(Sorted<fn(&Task) -> f64>);
+pub struct Luf;
 
 impl Luf {
     /// LUF on the default two-lane fleet's accelerator lane.
-    pub fn new(batch_size: usize) -> Luf {
+    pub fn new(batch_size: usize) -> Sorted {
         Luf::new_on(batch_size, LaneId::GPU)
     }
 
     /// LUF dispatching on the given primary lane.
-    pub fn new_on(batch_size: usize, primary: LaneId) -> Luf {
-        Luf(Sorted::new("LUF", |t: &Task| t.uncertainty, batch_size, primary))
-    }
-}
-
-impl Policy for Luf {
-    fn name(&self) -> String {
-        self.0.name()
-    }
-    fn push(&mut self, task: Task) {
-        self.0.push(task)
-    }
-    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
-        self.0.pop_batch(lane, now, force)
-    }
-    fn queue_len(&self) -> usize {
-        self.0.queue_len()
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Sorted {
+        Sorted::new("LUF", Box::new(|t: &Task| t.uncertainty), batch_size, primary)
     }
 }
 
 /// Maximum Uncertainty First.
-pub struct Muf(Sorted<fn(&Task) -> f64>);
+pub struct Muf;
 
 impl Muf {
     /// MUF on the default two-lane fleet's accelerator lane.
-    pub fn new(batch_size: usize) -> Muf {
+    pub fn new(batch_size: usize) -> Sorted {
         Muf::new_on(batch_size, LaneId::GPU)
     }
 
     /// MUF dispatching on the given primary lane.
-    pub fn new_on(batch_size: usize, primary: LaneId) -> Muf {
-        Muf(Sorted::new("MUF", |t: &Task| -t.uncertainty, batch_size, primary))
-    }
-}
-
-impl Policy for Muf {
-    fn name(&self) -> String {
-        self.0.name()
-    }
-    fn push(&mut self, task: Task) {
-        self.0.push(task)
-    }
-    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
-        self.0.pop_batch(lane, now, force)
-    }
-    fn queue_len(&self) -> usize {
-        self.0.queue_len()
+    pub fn new_on(batch_size: usize, primary: LaneId) -> Sorted {
+        Sorted::new("MUF", Box::new(|t: &Task| -t.uncertainty), batch_size, primary)
     }
 }
 
@@ -209,7 +205,7 @@ mod tests {
         f.push(test_task(1, 0.0, 10.0, 5.0));
         f.push(test_task(2, 1.0, 5.0, 50.0));
         f.push(test_task(3, 2.0, 1.0, 20.0));
-        let b = f.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+        let b = f.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(f.queue_len(), 1);
     }
@@ -218,8 +214,8 @@ mod tests {
     fn fifo_waits_for_full_batch_unless_forced() {
         let mut f = Fifo::new(4);
         f.push(test_task(1, 0.0, 1.0, 1.0));
-        assert!(f.pop_batch(LaneId::GPU, 0.0, false).is_none());
-        let b = f.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        assert!(f.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).is_none());
+        let b = f.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.len(), 1);
     }
 
@@ -227,9 +223,9 @@ mod tests {
     fn baselines_only_dispatch_on_their_primary_lane() {
         let mut f = Fifo::new_on(1, LaneId(2));
         f.push(test_task(1, 0.0, 1.0, 1.0));
-        assert!(f.pop_batch(LaneId(0), 0.0, true).is_none());
-        assert!(f.pop_batch(LaneId(1), 0.0, true).is_none());
-        let b = f.pop_batch(LaneId(2), 0.0, true).unwrap();
+        assert!(f.pop(LaneId(0), 0.0, true, WHOLE_BATCH).is_none());
+        assert!(f.pop(LaneId(1), 0.0, true, WHOLE_BATCH).is_none());
+        let b = f.pop(LaneId(2), 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.lane, LaneId(2));
     }
 
@@ -239,7 +235,7 @@ mod tests {
         h.push(test_task(1, 0.0, 9.0, 5.0));
         h.push(test_task(2, 0.0, 3.0, 5.0));
         h.push(test_task(3, 0.0, 6.0, 5.0));
-        let b = h.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        let b = h.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
@@ -249,7 +245,7 @@ mod tests {
         l.push(test_task(1, 0.0, 1.0, 40.0));
         l.push(test_task(2, 0.0, 1.0, 10.0));
         l.push(test_task(3, 0.0, 1.0, 25.0));
-        let b = l.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+        let b = l.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3, 1]);
     }
 
@@ -259,7 +255,7 @@ mod tests {
         m.push(test_task(1, 0.0, 1.0, 40.0));
         m.push(test_task(2, 0.0, 1.0, 10.0));
         m.push(test_task(3, 0.0, 1.0, 25.0));
-        let b = m.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+        let b = m.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 3, 2]);
     }
 
@@ -268,7 +264,46 @@ mod tests {
         let mut l = Luf::new(4);
         l.push(test_task(2, 1.0, 1.0, 10.0));
         l.push(test_task(1, 0.0, 1.0, 10.0));
-        let b = l.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        let b = l.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn stepped_pop_reinserts_overflow_in_order() {
+        let mut f = Fifo::new(4);
+        for i in 1..=4 {
+            f.push(test_task(i, i as f64, 1.0, 1.0));
+        }
+        // only 2 free slots: the other 2 go back, order intact
+        let b = f.pop(LaneId::GPU, 0.0, false, 2).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![1, 2]);
+        let b = f.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn capped_fifo_sheds_newcomers() {
+        let params = SchedParams { queue_cap: 2, ..Default::default() };
+        let mut f = Fifo::new(2).with_overload(&params);
+        f.push(test_task(1, 0.0, 1.0, 1.0));
+        f.push(test_task(2, 1.0, 1.0, 1.0));
+        f.push(test_task(3, 2.0, 1.0, 1.0));
+        assert_eq!(f.queue_len(), 2);
+        let shed = f.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].0, LaneId::GPU);
+        assert_eq!(shed[0].1.id, 3);
+    }
+
+    #[test]
+    fn capped_sorted_sheds_worst_key() {
+        let params = SchedParams { queue_cap: 2, ..Default::default() };
+        let mut l = Luf::new(2).with_overload(&params);
+        l.push(test_task(1, 0.0, 1.0, 90.0));
+        l.push(test_task(2, 1.0, 1.0, 10.0));
+        l.push(test_task(3, 2.0, 1.0, 30.0)); // evicts the u=90 task
+        assert_eq!(l.take_shed()[0].1.id, 1);
+        let b = l.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
+        assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 }

@@ -12,13 +12,15 @@ pub mod baselines;
 pub mod consolidation;
 pub mod lane;
 pub mod policy;
+pub mod queue;
 pub mod task;
 pub mod uasched;
 pub mod up;
 
 pub use baselines::{Fifo, Hpf, Luf, Muf};
 pub use lane::{format_lane_counts, Admission, LaneId, LaneKind, LaneSet, LaneSpec};
-pub use policy::{Batch, Policy, PolicyKind};
+pub use policy::{Batch, Policy, PolicyKind, WHOLE_BATCH};
+pub use queue::{LaneQ, PolicyQueues, UpQueue};
 pub use task::Task;
 pub use uasched::UaSched;
 pub use up::up_priority;

@@ -34,45 +34,43 @@ impl Batch {
     }
 }
 
+/// Free-capacity sentinel for whole-batch pops: the lane has one batch
+/// in flight at a time and the *policy* chooses the batch size. Stepped
+/// lanes pass their actual free decode-slot count instead.
+pub const WHOLE_BATCH: usize = usize::MAX;
+
 /// A scheduling policy: accepts arrivals, emits batches per lane.
 ///
-/// `pop_batch(lane, force)` may return `None` to wait for more arrivals
-/// (e.g. the queue holds fewer than a full batch); with `force = true`
-/// the policy must dispatch whatever it has for that lane (the engine
-/// sets this when the lane is idle and the wait interval xi has
-/// elapsed). Baselines use only the fleet's primary lane.
+/// `pop(lane, now, force, free)` may return `None` to wait for more
+/// arrivals (e.g. the queue holds fewer than a full batch); with
+/// `force = true` the policy must dispatch whatever it has for that
+/// lane (the engine sets this when the lane is idle and the wait
+/// interval xi has elapsed). Baselines use only the fleet's primary
+/// lane.
 pub trait Policy: Send {
     /// Display name, e.g. "FIFO" or "RT-LM" (may depend on the build:
     /// RT-LM degrades to "UP+C" when no lane can claim traffic).
     fn name(&self) -> String;
-    /// Admit one arrived task into the waiting queue(s).
+    /// Admit one arrived task into the waiting queue(s). Policies with
+    /// a bounded queue may shed here; the engine collects victims via
+    /// [`take_shed`](Policy::take_shed).
     fn push(&mut self, task: Task);
     /// Emit the next batch for `lane`, or `None` to wait for more
-    /// arrivals. With `force = true` the policy must dispatch whatever
-    /// it has for that lane.
-    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch>;
-    /// Step-mode pop: fill up to `free` decode slots on `lane`. The
-    /// returned batch is a *join group* — its tasks enter the lane's
-    /// persistent decode loop at the next step boundary, so the policy
-    /// must never return more than `free` tasks. The default adapts
-    /// [`pop_batch`](Policy::pop_batch): overflow beyond `free` is
-    /// re-admitted through [`push`](Policy::push) (schedulers with
-    /// length-aware slot packing override this — see
-    /// `UaSched::pop_fill`).
-    fn pop_fill(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
-        let mut batch = self.pop_batch(lane, now, force)?;
-        if batch.tasks.len() > free {
-            for task in batch.tasks.split_off(free) {
-                self.push(task);
-            }
-        }
-        if batch.tasks.is_empty() {
-            return None;
-        }
-        Some(batch)
-    }
+    /// arrivals. `free` is the lane's free dispatch capacity:
+    /// [`WHOLE_BATCH`] for whole-batch lanes (the historical
+    /// `pop_batch`), or the number of free decode slots on a stepped
+    /// lane — then the returned batch is a *join group* whose tasks
+    /// enter the lane's persistent decode loop at the next step
+    /// boundary, and the policy must never return more than `free`
+    /// tasks.
+    fn pop(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch>;
     /// Total queued (not yet dispatched) tasks across all lanes.
     fn queue_len(&self) -> usize;
+    /// Tasks shed by admission control since the last call, paired with
+    /// the lane that shed them. Default: nothing (unbounded queues).
+    fn take_shed(&mut self) -> Vec<(LaneId, Task)> {
+        Vec::new()
+    }
     /// Is nothing queued?
     fn is_empty(&self) -> bool {
         self.queue_len() == 0
@@ -184,10 +182,18 @@ impl PolicyKind {
         use super::uasched::UaSched;
         let primary = lanes.primary();
         match self {
-            PolicyKind::Fifo => Box::new(Fifo::new_on(params.batch_size, primary)),
-            PolicyKind::Hpf => Box::new(Hpf::new_on(params.batch_size, primary)),
-            PolicyKind::Luf => Box::new(Luf::new_on(params.batch_size, primary)),
-            PolicyKind::Muf => Box::new(Muf::new_on(params.batch_size, primary)),
+            PolicyKind::Fifo => {
+                Box::new(Fifo::new_on(params.batch_size, primary).with_overload(params))
+            }
+            PolicyKind::Hpf => {
+                Box::new(Hpf::new_on(params.batch_size, primary).with_overload(params))
+            }
+            PolicyKind::Luf => {
+                Box::new(Luf::new_on(params.batch_size, primary).with_overload(params))
+            }
+            PolicyKind::Muf => {
+                Box::new(Muf::new_on(params.batch_size, primary).with_overload(params))
+            }
             PolicyKind::Slack => {
                 // alpha = 0 turns Eq. 3 into Eq. 2 exactly
                 let p = SchedParams { alpha: 0.0, ..params.clone() };

@@ -1,0 +1,1202 @@
+//! Indexed UP-priority queue and shared per-lane queue storage.
+//!
+//! The historical `UaSched` re-sorted a whole lane queue with freshly
+//! computed UP keys on every pop — O(n log n) per dispatch, which melts
+//! at production queue depths (see `benches/hotpath.rs`). This module
+//! replaces the resort with an indexed structure, [`UpQueue`], that is
+//! *order-equivalent to the keyed full-sort oracle* yet pops the top
+//! `k` tasks in roughly O(k log k + R) at any depth, and a shared
+//! [`PolicyQueues`] helper that owns per-lane storage, the monotone
+//! insertion sequence, and overload shedding for every policy.
+//!
+//! # Why the index can be exact
+//!
+//! The UP priority (Eq. 3, `up::up_priority`) of a task with static
+//! numerator `n = 1 - alpha * u_hat` and static slack offset
+//! `s = d - eta * u` is, at scheduling time `t`:
+//!
+//! - **normal** regime (`s - t >= min_slack`): `p = n / (s - t)` —
+//!   relative order between two tasks *can* change over time (pairwise
+//!   crossings), so no static order exists; but a bucket of tasks whose
+//!   `n` lies in `[lo_r, hi_r]` admits the upper bound
+//!   `p <= hi_r / (s_min - t)`, which makes exact best-first selection
+//!   possible without sorting;
+//! - **overdue** regime (`s - t < min_slack`):
+//!   `p = (n - s + t + min_slack) / min_slack` — order by `n - s`
+//!   descending is *time-invariant*, so one sorted list stays correct
+//!   forever. Tasks only ever flow normal -> overdue (`t` is monotone).
+//!
+//! So the structure is: one statically-sorted overdue list, `R`
+//! buckets over quantised `n` each sorted by `s`, and a tiny
+//! "exact" bin for entries with non-finite keys or sitting within a
+//! floating-point guard band of the regime boundary. A pop promotes
+//! boundary-crossing tasks lazily (each task rebuckets at most once,
+//! plus once more per ξ-era re-push), then runs best-first selection:
+//! candidates are expanded from each source while the source's inflated
+//! upper bound could still beat the current best *exact* key, and ties
+//! break exactly like the oracle's stable sort — `(p desc, arrival
+//! asc, seq asc)`, where `seq` is the monotone insertion sequence (a
+//! stable sort of an insertion-ordered queue breaks ties by insertion
+//! order). Bounds are inflated by a relative margin that provably
+//! dominates every floating-point discrepancy between the cached
+//! static keys and the oracle's freshly-computed ones, so inflation
+//! can only cause extra candidate expansion, never a misordering.
+//! Exact keys are always computed by calling [`up_priority`] on the
+//! stored task — bit-identical to the oracle's keys by construction.
+//!
+//! Both the overdue list and the buckets are stored *reversed* — the
+//! dispatch-first end is the **back** of the `Vec` (for buckets, in the
+//! ubiquitous non-negative-numerator case `alpha <= 1`). Pops remove
+//! from the hot end, so `Vec::remove(last)` is O(1) and per-pop cost
+//! stays flat as depth grows — the property `benches/hotpath.rs` sweeps
+//! across 10^3..10^6 queued tasks. Storage order is invisible to
+//! callers: selection order is fixed by exact keys, not storage.
+//!
+//! The equivalence is pinned by property tests below (random traces ×
+//! promotions × re-pushes against the keyed full-sort oracle) and by
+//! the cross-backend dispatch-equality suites in `tests/`.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::{SchedParams, ShedPolicy};
+
+use super::lane::LaneId;
+use super::task::Task;
+use super::up::up_priority;
+
+/// Quantisation ranks for the normal-regime numerator buckets.
+const RANKS: usize = 64;
+
+/// Relative width of the promotion guard band: bucket entries within
+/// `GUARD_REL * (|s| + |now| + 1)` of the regime boundary are moved to
+/// the exact bin, so every entry *remaining* in a bucket is provably in
+/// the normal regime under the oracle's own (differently-rounded)
+/// slack expression.
+const GUARD_REL: f64 = 1e-9;
+
+/// Bound inflation: dominates both the bucket-index rounding slop and
+/// the `s - now` vs `(d - now) - eta*u` rounding difference (which is
+/// at most ~1e-6 of the guard band), so an inflated bound is a true
+/// upper bound on every member's exact key.
+fn inflate(x: f64) -> f64 {
+    x + x.abs() * 1e-5 + 1e-300
+}
+
+/// Sources inside an [`UpQueue`], encoded in [`EntryRef::src`].
+const SRC_OVERDUE: u32 = 0;
+const SRC_EXACT: u32 = u32::MAX;
+
+/// One queued task's index record: the static key components and the
+/// slot of the task itself.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Static slack offset `d - eta * u` (the dynamic slack is `s - t`).
+    s: f64,
+    /// Static UP numerator `1 - alpha * u_hat`.
+    n: f64,
+    /// Arrival time (first oracle tie-break).
+    arrival: f64,
+    /// Monotone insertion sequence (second oracle tie-break — the
+    /// stable-sort stand-in).
+    seq: u64,
+    /// Index into the task slab.
+    slot: u32,
+}
+
+/// A handle to one entry, valid until the queue is next mutated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EntryRef {
+    src: u32,
+    idx: u32,
+}
+
+/// Heap candidate with its exact oracle key; the heap's max is the
+/// next task in exact dispatch order.
+struct Cand {
+    key: f64,
+    arrival: f64,
+    seq: u64,
+    r: EntryRef,
+}
+
+impl Cand {
+    fn order(&self, other: &Cand) -> Ordering {
+        self.key
+            .total_cmp(&other.key)
+            .then_with(|| other.arrival.total_cmp(&self.arrival))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Cand) -> bool {
+        self.order(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Cand) -> Option<Ordering> {
+        Some(self.order(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Cand) -> Ordering {
+        self.order(other)
+    }
+}
+
+/// The indexed UP-priority queue for one accelerator-kind lane.
+pub struct UpQueue {
+    params: SchedParams,
+    eta: f64,
+    /// Lower edge and per-rank width of the numerator quantisation
+    /// (width 0 = degenerate: everything in bucket 0).
+    n_lo: f64,
+    n_hi: f64,
+    n_width: f64,
+    /// Task slab: entries address tasks by slot so rebucketing moves
+    /// 40-byte index records, not whole tasks.
+    slots: Vec<Option<Task>>,
+    free: Vec<u32>,
+    /// Overdue tasks in a static order that equals the dynamic one at
+    /// every time, stored reversed — `(n - s asc, arrival desc, seq
+    /// desc)` — so the dispatch-first entry is the *back* element and
+    /// hot removals are O(1).
+    overdue: Vec<Entry>,
+    /// Normal-regime tasks bucketed by quantised `n`, each bucket
+    /// stored reversed — `(s desc, arrival desc, seq desc)` — so for
+    /// non-negative-numerator ranks the best entry is the back element.
+    buckets: Vec<Vec<Entry>>,
+    /// Non-finite keys and guard-band boundary entries: exact-evaluated
+    /// on every pop. Stays tiny — boundary entries cross into the
+    /// overdue list as soon as the clock passes them.
+    exact: Vec<Entry>,
+    len: usize,
+}
+
+impl UpQueue {
+    /// Build an empty queue for a lane scheduled with `params` and the
+    /// serving model's tokens->seconds coefficient `eta`. Requires
+    /// `params.min_slack >= 0` (the default; Eq. 3 is ill-posed below
+    /// zero).
+    pub fn new(params: SchedParams, eta: f64) -> UpQueue {
+        debug_assert!(params.min_slack >= 0.0, "UpQueue requires min_slack >= 0");
+        // u_hat ranges over [0, 1], so n = 1 - alpha * u_hat spans the
+        // interval between 1 and 1 - alpha (either way round).
+        let a = 1.0;
+        let b = 1.0 - params.alpha;
+        let (n_lo, n_hi) = if b < a { (b, a) } else { (a, b) };
+        let w = (n_hi - n_lo) / RANKS as f64;
+        let n_width = if w.is_finite() && w > 0.0 { w } else { 0.0 };
+        UpQueue {
+            params,
+            eta,
+            n_lo,
+            n_hi,
+            n_width,
+            slots: Vec::new(),
+            free: Vec::new(),
+            overdue: Vec::new(),
+            buckets: (0..RANKS).map(|_| Vec::new()).collect(),
+            exact: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Queued task count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The exact oracle priority of any task under this queue's
+    /// parameters (also used for shed decisions on not-yet-inserted
+    /// arrivals).
+    pub fn priority_of(&self, task: &Task, now: f64) -> f64 {
+        up_priority(task, &self.params, self.eta, now)
+    }
+
+    fn store(&mut self, task: Task) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(task);
+                i
+            }
+            None => {
+                self.slots.push(Some(task));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn release(&mut self, slot: u32) -> Task {
+        self.free.push(slot);
+        self.slots[slot as usize].take().expect("released slot holds a task")
+    }
+
+    fn task_of(&self, e: &Entry) -> &Task {
+        self.slots[e.slot as usize].as_ref().expect("live entry has a task")
+    }
+
+    /// The task behind a selector-produced handle.
+    pub fn task(&self, r: EntryRef) -> &Task {
+        self.task_of(self.entry(r))
+    }
+
+    fn entry(&self, r: EntryRef) -> &Entry {
+        match r.src {
+            SRC_OVERDUE => &self.overdue[r.idx as usize],
+            SRC_EXACT => &self.exact[r.idx as usize],
+            b => &self.buckets[(b - 1) as usize][r.idx as usize],
+        }
+    }
+
+    fn bucket_of(&self, n: f64) -> usize {
+        if self.n_width <= 0.0 {
+            return 0;
+        }
+        // `as usize` saturates tiny negative slop to 0
+        (((n - self.n_lo) / self.n_width) as usize).min(RANKS - 1)
+    }
+
+    /// Upper edge of bucket `b`'s numerator range, inflated past the
+    /// index-computation rounding slop so it bounds every member's
+    /// true `n`.
+    fn bucket_hi(&self, b: usize) -> f64 {
+        if self.n_width <= 0.0 {
+            return inflate(self.n_hi.max(self.n_lo));
+        }
+        inflate(self.n_lo + (b + 1) as f64 * self.n_width)
+    }
+
+    /// Exact oracle key of an entry at time `now` — computed from the
+    /// stored task by the same expression the full-sort oracle uses.
+    fn key_of(&self, e: &Entry, now: f64) -> f64 {
+        up_priority(self.task_of(e), &self.params, self.eta, now)
+    }
+
+    /// Admit one task with its monotone insertion sequence number.
+    /// Placement needs no clock: an already-overdue entry lands at its
+    /// bucket's hot end and the next pop's promotion sweep moves it.
+    pub fn insert(&mut self, task: Task, seq: u64) {
+        let u_hat = (task.uncertainty / self.params.u_scale).clamp(0.0, 1.0);
+        let n = 1.0 - self.params.alpha * u_hat;
+        let s = task.priority_point - self.eta * task.uncertainty;
+        let arrival = task.arrival;
+        let slot = self.store(task);
+        let e = Entry { s, n, arrival, seq, slot };
+        if n.is_nan() || s.is_nan() {
+            self.exact.push(e);
+        } else {
+            let b = self.bucket_of(n);
+            let q = &mut self.buckets[b];
+            // reversed storage: e goes after every entry with a larger
+            // (s, arrival, seq) — the back of the bucket is the
+            // smallest-s (dispatch-first) end
+            let pos = q.partition_point(|x| {
+                x.s.total_cmp(&e.s)
+                    .then(x.arrival.total_cmp(&e.arrival))
+                    .then(x.seq.cmp(&e.seq))
+                    .is_gt()
+            });
+            q.insert(pos, e);
+        }
+        self.len += 1;
+    }
+
+    fn insert_overdue(&mut self, e: Entry) {
+        let k = e.n - e.s;
+        // reversed storage: x stays before e while x's n-s is *smaller*
+        // (ties: later arrival, later seq first) — the back of the list
+        // is the dispatch-first end
+        let pos = self.overdue.partition_point(|x| {
+            (x.n - x.s)
+                .total_cmp(&k)
+                .then(e.arrival.total_cmp(&x.arrival))
+                .then(e.seq.cmp(&x.seq))
+                .is_lt()
+        });
+        self.overdue.insert(pos, e);
+    }
+
+    /// Move every entry whose regime flipped into the overdue list —
+    /// the "rebucket on ξ-promotion" step. Entries inside the guard
+    /// band go to the exact bin until the oracle's own slack test
+    /// settles them (at most a few clock-instants later).
+    pub fn promote(&mut self, now: f64) {
+        let ms = self.params.min_slack;
+        for b in 0..self.buckets.len() {
+            // smallest-s entries sit at the back (reversed storage), so
+            // the boundary-crossing sweep peels a suffix — O(drained),
+            // no memmove of the survivors
+            let len = self.buckets[b].len();
+            let mut p = len;
+            while p > 0 {
+                let e = &self.buckets[b][p - 1];
+                let g = GUARD_REL * (e.s.abs() + now.abs() + 1.0);
+                if e.s - now < ms + g {
+                    p -= 1;
+                } else {
+                    break;
+                }
+            }
+            if p == len {
+                continue;
+            }
+            let drained: Vec<Entry> = self.buckets[b].drain(p..).collect();
+            for e in drained {
+                // the oracle's branch condition, on the oracle's own
+                // floating-point expression
+                let raw = self.task_of(&e).slack_at(self.eta, now);
+                if raw >= ms {
+                    self.exact.push(e); // boundary: exact-evaluate until it crosses
+                } else {
+                    self.insert_overdue(e);
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.exact.len() {
+            let e = self.exact[i];
+            if e.n.is_nan() || e.s.is_nan() {
+                i += 1;
+                continue;
+            }
+            let raw = self.task_of(&e).slack_at(self.eta, now);
+            if raw >= ms {
+                i += 1;
+            } else {
+                let e = self.exact.swap_remove(i);
+                self.insert_overdue(e);
+            }
+        }
+    }
+
+    /// Remove the given entries (in selection order) and return their
+    /// tasks, preserving that order.
+    pub fn remove_selected(&mut self, picked: &[EntryRef]) -> Vec<Task> {
+        let slots: Vec<u32> = picked.iter().map(|r| self.entry(*r).slot).collect();
+        let mut by = picked.to_vec();
+        by.sort_by(|a, b| (b.src, b.idx).cmp(&(a.src, a.idx)));
+        for r in by {
+            match r.src {
+                SRC_OVERDUE => {
+                    self.overdue.remove(r.idx as usize);
+                }
+                // descending-index removal keeps remaining picks valid —
+                // and because storage is reversed (hot end = back),
+                // selection-order picks are the *highest* indices, so
+                // the common case is `remove(last)`: an O(1) pop, no
+                // memmove. The exact bin is unordered, so swap_remove
+                // is safe (the element it moves sits above every
+                // remaining pick).
+                SRC_EXACT => {
+                    self.exact.swap_remove(r.idx as usize);
+                }
+                b => {
+                    self.buckets[(b - 1) as usize].remove(r.idx as usize);
+                }
+            }
+        }
+        self.len -= picked.len();
+        slots.into_iter().map(|s| self.release(s)).collect()
+    }
+
+    /// Pop the top `k` tasks in exact oracle order (promotes first).
+    pub fn pop_top(&mut self, now: f64, k: usize) -> Vec<Task> {
+        self.promote(now);
+        let mut picked = Vec::with_capacity(k.min(self.len));
+        {
+            let mut sel = Selector::new(self, now);
+            while picked.len() < k {
+                match sel.next() {
+                    Some(r) => picked.push(r),
+                    None => break,
+                }
+            }
+        }
+        self.remove_selected(&picked)
+    }
+
+    /// Pop up to `k` tasks in *insertion* order — the quarantine-lane
+    /// FIFO semantics, kept for direct stepped pops on non-accelerator
+    /// lanes (the engine never issues these; see `UaSched::pop`).
+    pub fn pop_fifo_order(&mut self, k: usize) -> Vec<Task> {
+        let mut refs: Vec<(u64, EntryRef)> = self
+            .entry_refs()
+            .map(|(r, e)| (e.seq, r))
+            .collect();
+        refs.sort_unstable_by_key(|&(seq, _)| seq);
+        refs.truncate(k);
+        let picked: Vec<EntryRef> = refs.into_iter().map(|(_, r)| r).collect();
+        self.remove_selected(&picked)
+    }
+
+    fn entry_refs(&self) -> impl Iterator<Item = (EntryRef, &Entry)> + '_ {
+        let overdue = self
+            .overdue
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (EntryRef { src: SRC_OVERDUE, idx: i as u32 }, e));
+        let buckets = self.buckets.iter().enumerate().flat_map(|(b, q)| {
+            q.iter()
+                .enumerate()
+                .map(move |(i, e)| (EntryRef { src: 1 + b as u32, idx: i as u32 }, e))
+        });
+        let exact = self
+            .exact
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (EntryRef { src: SRC_EXACT, idx: i as u32 }, e));
+        overdue.chain(buckets).chain(exact)
+    }
+
+    /// Iterate the queued tasks (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = &Task> + '_ {
+        self.entry_refs().map(|(_, e)| self.task_of(e))
+    }
+
+    /// Earliest arrival among queued tasks (`+inf` when empty) — the
+    /// ξ-window anchor.
+    pub fn min_arrival(&self) -> f64 {
+        self.entry_refs().map(|(_, e)| e.arrival).fold(f64::INFINITY, f64::min)
+    }
+
+    /// The lowest-priority queued task under the exact oracle order at
+    /// `now` — the `--shed priority` victim (ties: latest arrival, then
+    /// latest insertion). O(n) scan; runs only when a lane is at cap.
+    pub fn worst_by_priority(&self, now: f64) -> Option<(EntryRef, f64, f64)> {
+        let mut worst: Option<(EntryRef, f64, f64, u64)> = None;
+        for (r, e) in self.entry_refs() {
+            let key = self.key_of(e, now);
+            let worse = match &worst {
+                None => true,
+                Some((_, wk, wa, ws)) => matches!(
+                    key.total_cmp(wk)
+                        .then(wa.total_cmp(&e.arrival))
+                        .then(ws.cmp(&e.seq)),
+                    Ordering::Less
+                ),
+            };
+            if worse {
+                worst = Some((r, key, e.arrival, e.seq));
+            }
+        }
+        worst.map(|(r, k, a, _)| (r, k, a))
+    }
+
+    /// The highest-predicted-length queued task — the `--shed length`
+    /// victim (ties: latest insertion).
+    pub fn worst_by_length(&self) -> Option<(EntryRef, f64)> {
+        let mut worst: Option<(EntryRef, f64, u64)> = None;
+        for (r, e) in self.entry_refs() {
+            let u = self.task_of(e).uncertainty;
+            let worse = match &worst {
+                None => true,
+                Some((_, wu, ws)) => matches!(
+                    u.total_cmp(wu).then(e.seq.cmp(ws)),
+                    Ordering::Greater
+                ),
+            };
+            if worse {
+                worst = Some((r, u, e.seq));
+            }
+        }
+        worst.map(|(r, u, _)| (r, u))
+    }
+
+    /// Remove one entry by handle.
+    pub fn remove_at(&mut self, r: EntryRef) -> Task {
+        let slot = self.entry(r).slot;
+        match r.src {
+            SRC_OVERDUE => {
+                self.overdue.remove(r.idx as usize);
+            }
+            SRC_EXACT => {
+                self.exact.swap_remove(r.idx as usize);
+            }
+            b => {
+                self.buckets[(b - 1) as usize].remove(r.idx as usize);
+            }
+        }
+        self.len -= 1;
+        self.release(slot)
+    }
+
+    /// Drain every queued task (overdue first, then buckets, then the
+    /// exact bin) — lane retirement re-admits these elsewhere.
+    pub fn drain_all(&mut self) -> Vec<Task> {
+        let mut entries: Vec<Entry> = Vec::with_capacity(self.len);
+        // .rev() undoes the reversed storage: callers see dispatch-first
+        // order per source, independent of the internal layout
+        entries.extend(self.overdue.drain(..).rev());
+        for b in &mut self.buckets {
+            entries.extend(b.drain(..).rev());
+        }
+        entries.extend(self.exact.drain(..));
+        self.len = 0;
+        entries.into_iter().map(|e| self.release(e.slot)).collect()
+    }
+}
+
+/// Lazy exact-order enumerator over an [`UpQueue`] (call
+/// [`UpQueue::promote`] first). Each `next` returns the handle of the
+/// globally next task in oracle order without mutating the queue, so a
+/// caller can walk, skip, and only then remove what it actually took.
+pub struct Selector<'a> {
+    q: &'a UpQueue,
+    now: f64,
+    heap: BinaryHeap<Cand>,
+    over_cur: usize,
+    taken: Vec<usize>,
+}
+
+impl<'a> Selector<'a> {
+    /// Start a selection pass at time `now` (the same `now` promote ran
+    /// with).
+    pub fn new(q: &'a UpQueue, now: f64) -> Selector<'a> {
+        let mut heap = BinaryHeap::new();
+        // the exact bin is evaluated eagerly — it holds only non-finite
+        // keys and boundary stragglers, so it stays tiny
+        for (i, e) in q.exact.iter().enumerate() {
+            heap.push(Cand {
+                key: q.key_of(e, now),
+                arrival: e.arrival,
+                seq: e.seq,
+                r: EntryRef { src: SRC_EXACT, idx: i as u32 },
+            });
+        }
+        Selector { q, now, heap, over_cur: 0, taken: vec![0; q.buckets.len()] }
+    }
+
+    fn beats_top(&self, bound: f64) -> bool {
+        match self.heap.peek() {
+            None => true,
+            // expand on ties too: an equal-key element may win the
+            // arrival/seq tie-break
+            Some(c) => bound.total_cmp(&c.key) != Ordering::Less,
+        }
+    }
+
+    /// Physical index of the next unexpanded overdue entry — the list
+    /// is stored reversed, so the cursor walks from the back.
+    fn overdue_idx(&self) -> Option<usize> {
+        let n = self.q.overdue.len();
+        (self.over_cur < n).then(|| n - 1 - self.over_cur)
+    }
+
+    fn overdue_bound(&self) -> Option<f64> {
+        self.overdue_idx()
+            .map(|i| inflate(self.q.key_of(&self.q.overdue[i], self.now)))
+    }
+
+    fn expand_overdue(&mut self) {
+        let i = self.overdue_idx().expect("expand past overdue end");
+        let e = &self.q.overdue[i];
+        self.heap.push(Cand {
+            key: self.q.key_of(e, self.now),
+            arrival: e.arrival,
+            seq: e.seq,
+            r: EntryRef { src: SRC_OVERDUE, idx: i as u32 },
+        });
+        self.over_cur += 1;
+    }
+
+    fn bucket_bound(&self, b: usize) -> Option<f64> {
+        let q = &self.q.buckets[b];
+        if self.taken[b] >= q.len() {
+            return None;
+        }
+        let hi = self.q.bucket_hi(b);
+        // hi >= 0: p = n/(s-t) is maximised by small s — and buckets
+        // are stored s-descending, so expand from the back. hi < 0:
+        // maximised by large s — expand from the front. Either way the
+        // cursor element carries the extremal s of the unexpanded
+        // remainder.
+        let e = if hi >= 0.0 {
+            &q[q.len() - 1 - self.taken[b]]
+        } else {
+            &q[self.taken[b]]
+        };
+        Some(inflate(hi / (e.s - self.now)))
+    }
+
+    fn expand_bucket(&mut self, b: usize) {
+        let q = &self.q.buckets[b];
+        let idx = if self.q.bucket_hi(b) >= 0.0 {
+            q.len() - 1 - self.taken[b]
+        } else {
+            self.taken[b]
+        };
+        let e = &q[idx];
+        self.heap.push(Cand {
+            key: self.q.key_of(e, self.now),
+            arrival: e.arrival,
+            seq: e.seq,
+            r: EntryRef { src: 1 + b as u32, idx: idx as u32 },
+        });
+        self.taken[b] += 1;
+    }
+
+    /// The next entry in exact oracle order, or `None` when exhausted.
+    pub fn next(&mut self) -> Option<EntryRef> {
+        loop {
+            let mut grew = false;
+            while let Some(b) = self.overdue_bound() {
+                if self.beats_top(b) {
+                    self.expand_overdue();
+                    grew = true;
+                } else {
+                    break;
+                }
+            }
+            for b in 0..self.taken.len() {
+                while let Some(bound) = self.bucket_bound(b) {
+                    if self.beats_top(bound) {
+                        self.expand_bucket(b);
+                        grew = true;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if !grew {
+                break;
+            }
+        }
+        self.heap.pop().map(|c| c.r)
+    }
+}
+
+/// Per-lane queue storage flavours.
+pub enum LaneQ {
+    /// Insertion-order queue (FIFO baselines, CPU quarantine lanes).
+    Fifo(VecDeque<Task>),
+    /// Key-sorted queue (HPF/LUF/MUF): ascending key, ties by arrival,
+    /// dispatch from the front.
+    Keyed { key: Box<dyn Fn(&Task) -> f64 + Send>, queue: Vec<Task> },
+    /// Indexed UP-priority queue (accelerator lanes of `UaSched`).
+    Up(UpQueue),
+}
+
+impl LaneQ {
+    /// An insertion-order lane queue.
+    pub fn fifo() -> LaneQ {
+        LaneQ::Fifo(VecDeque::new())
+    }
+
+    /// A key-sorted lane queue.
+    pub fn keyed(key: Box<dyn Fn(&Task) -> f64 + Send>) -> LaneQ {
+        LaneQ::Keyed { key, queue: Vec::new() }
+    }
+
+    /// An indexed UP lane queue.
+    pub fn up(params: SchedParams, eta: f64) -> LaneQ {
+        LaneQ::Up(UpQueue::new(params, eta))
+    }
+
+    /// Queued task count.
+    pub fn len(&self) -> usize {
+        match self {
+            LaneQ::Fifo(q) => q.len(),
+            LaneQ::Keyed { queue, .. } => queue.len(),
+            LaneQ::Up(q) => q.len(),
+        }
+    }
+
+    /// Is this lane queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Earliest queued arrival (`+inf` when empty).
+    pub fn min_arrival(&self) -> f64 {
+        match self {
+            LaneQ::Fifo(q) => q.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min),
+            LaneQ::Keyed { queue, .. } => {
+                queue.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min)
+            }
+            LaneQ::Up(q) => q.min_arrival(),
+        }
+    }
+}
+
+/// Shared per-lane queue storage: owns the lane queues, the monotone
+/// insertion sequence that stands in for stable-sort tie-breaking, and
+/// overload admission control (`queue_cap` / [`ShedPolicy`]). Policies
+/// keep only their ordering logic.
+pub struct PolicyQueues {
+    queues: Vec<LaneQ>,
+    /// Lane id reported for sheds out of `queues[i]` (baselines hold a
+    /// single queue labelled with their primary lane).
+    labels: Vec<LaneId>,
+    cap: usize,
+    shed: ShedPolicy,
+    shed_out: Vec<(LaneId, Task)>,
+    seq: u64,
+}
+
+impl PolicyQueues {
+    /// Build the storage from `(reported lane id, queue flavour)` pairs.
+    /// `cap == 0` disables shedding (unbounded queues, the historical
+    /// behaviour — bit-identical dispatch).
+    pub fn new(queues: Vec<(LaneId, LaneQ)>, cap: usize, shed: ShedPolicy) -> PolicyQueues {
+        let (labels, queues): (Vec<LaneId>, Vec<LaneQ>) = queues.into_iter().unzip();
+        PolicyQueues { queues, labels, cap, shed, shed_out: Vec::new(), seq: 0 }
+    }
+
+    /// Reconfigure overload admission control (used by policy builders
+    /// whose constructors predate the shed knobs).
+    pub fn set_overload(&mut self, cap: usize, shed: ShedPolicy) {
+        self.cap = cap;
+        self.shed = shed;
+    }
+
+    /// Number of lane queues.
+    pub fn n_lanes(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// One lane queue.
+    pub fn lane(&self, idx: usize) -> &LaneQ {
+        &self.queues[idx]
+    }
+
+    /// One lane queue, mutably.
+    pub fn lane_mut(&mut self, idx: usize) -> &mut LaneQ {
+        &mut self.queues[idx]
+    }
+
+    /// The [`UpQueue`] of lane `idx`; panics if the lane is not UP-kind.
+    pub fn up_mut(&mut self, idx: usize) -> &mut UpQueue {
+        match &mut self.queues[idx] {
+            LaneQ::Up(q) => q,
+            _ => panic!("lane {idx} is not an UP queue"),
+        }
+    }
+
+    /// Queued tasks on lane `idx`.
+    pub fn len(&self, idx: usize) -> usize {
+        self.queues[idx].len()
+    }
+
+    /// Queued tasks across all lanes.
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(LaneQ::len).sum()
+    }
+
+    /// Is every lane queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Tasks shed since the last call, with the lane that shed them.
+    pub fn take_shed(&mut self) -> Vec<(LaneId, Task)> {
+        std::mem::take(&mut self.shed_out)
+    }
+
+    /// Admit `task` into lane `idx`, shedding per the configured policy
+    /// if the lane is at capacity. Shedding evaluates priorities at the
+    /// incoming task's arrival time (the push instant on the engine
+    /// clock); the victim may be the incoming task itself.
+    pub fn push(&mut self, idx: usize, task: Task) {
+        if self.cap > 0 && self.queues[idx].len() >= self.cap {
+            match self.shed_one(idx, &task) {
+                None => {
+                    // the newcomer is the worst of the lot
+                    self.shed_out.push((self.labels[idx], task));
+                    return;
+                }
+                Some(victim) => self.shed_out.push((self.labels[idx], victim)),
+            }
+        }
+        self.insert(idx, task);
+    }
+
+    /// Re-admit a task the policy itself took out and put back
+    /// (consolidation leftovers). Never sheds: a re-insert cannot push
+    /// the lane above its pre-pop depth.
+    pub fn reinsert(&mut self, idx: usize, task: Task) {
+        self.insert(idx, task);
+    }
+
+    fn insert(&mut self, idx: usize, task: Task) {
+        let seq = self.seq;
+        self.seq += 1;
+        match &mut self.queues[idx] {
+            LaneQ::Fifo(q) => q.push_back(task),
+            LaneQ::Keyed { key, queue } => {
+                // binary insert keeps the queue ordered; ties break by
+                // arrival, equals go after (stable wrt insertion).
+                // total_cmp keeps the order total even for NaN keys.
+                let k = key(&task);
+                let pos = queue.partition_point(|t| {
+                    key(t).total_cmp(&k).then(t.arrival.total_cmp(&task.arrival)).is_le()
+                });
+                queue.insert(pos, task);
+            }
+            LaneQ::Up(q) => q.insert(task, seq),
+        }
+    }
+
+    /// Pick and remove the shed victim from an at-cap lane, or return
+    /// `None` when the incoming task itself is the victim.
+    fn shed_one(&mut self, idx: usize, incoming: &Task) -> Option<Task> {
+        match self.shed {
+            ShedPolicy::Length => {
+                let (at, worst_u) = match &self.queues[idx] {
+                    LaneQ::Fifo(q) => {
+                        worst_len_at(q.iter())?
+                    }
+                    LaneQ::Keyed { queue, .. } => worst_len_at(queue.iter())?,
+                    LaneQ::Up(q) => {
+                        let (r, u) = q.worst_by_length()?;
+                        if incoming.uncertainty.total_cmp(&u) != Ordering::Less {
+                            return None; // newcomer is longest (ties: latest loses)
+                        }
+                        return Some(self.up_mut(idx).remove_at(r));
+                    }
+                };
+                if incoming.uncertainty.total_cmp(&worst_u) != Ordering::Less {
+                    return None;
+                }
+                self.remove_index(idx, at)
+            }
+            ShedPolicy::Priority => match &self.queues[idx] {
+                // FIFO priority is arrival order: the newcomer is by
+                // definition the lowest-priority task — tail drop
+                LaneQ::Fifo(_) => None,
+                LaneQ::Keyed { key, queue } => {
+                    // dispatch order is front-first: the worst task is
+                    // the back; the newcomer loses ties (it would be
+                    // inserted after its equals)
+                    let back = queue.last()?;
+                    let newcomer_worse = key(incoming)
+                        .total_cmp(&key(back))
+                        .then(incoming.arrival.total_cmp(&back.arrival))
+                        != Ordering::Less;
+                    if newcomer_worse {
+                        None
+                    } else {
+                        let last = queue.len() - 1;
+                        self.remove_index(idx, last)
+                    }
+                }
+                LaneQ::Up(q) => {
+                    let now = incoming.arrival;
+                    let (r, wk, wa) = q.worst_by_priority(now)?;
+                    let k_in = q.priority_of(incoming, now);
+                    // the newcomer would carry the latest seq, so it
+                    // loses any full tie
+                    let newcomer_better = matches!(
+                        k_in.total_cmp(&wk).then(wa.total_cmp(&incoming.arrival)),
+                        Ordering::Greater
+                    );
+                    if newcomer_better {
+                        Some(self.up_mut(idx).remove_at(r))
+                    } else {
+                        None
+                    }
+                }
+            },
+        }
+    }
+
+    fn remove_index(&mut self, idx: usize, at: usize) -> Option<Task> {
+        match &mut self.queues[idx] {
+            LaneQ::Fifo(q) => q.remove(at),
+            LaneQ::Keyed { queue, .. } => Some(queue.remove(at)),
+            LaneQ::Up(_) => unreachable!("UP victims are removed by EntryRef"),
+        }
+    }
+
+    /// Pop the first `n` tasks of lane `idx` in stored order (FIFO /
+    /// key-sorted lanes).
+    pub fn pop_front(&mut self, idx: usize, n: usize) -> Vec<Task> {
+        match &mut self.queues[idx] {
+            LaneQ::Fifo(q) => q.drain(..n).collect(),
+            LaneQ::Keyed { queue, .. } => queue.drain(..n).collect(),
+            LaneQ::Up(_) => panic!("UP lanes pop via pop_top/Selector"),
+        }
+    }
+
+    /// Drain every task of lane `idx` (lane retirement).
+    pub fn drain_lane(&mut self, idx: usize) -> Vec<Task> {
+        match &mut self.queues[idx] {
+            LaneQ::Fifo(q) => q.drain(..).collect(),
+            LaneQ::Keyed { queue, .. } => queue.drain(..).collect(),
+            LaneQ::Up(q) => q.drain_all(),
+        }
+    }
+}
+
+/// Index and uncertainty of the longest-predicted task in an iterator
+/// (ties: latest index — the most recently inserted for insertion-
+/// ordered queues).
+fn worst_len_at<'a>(tasks: impl Iterator<Item = &'a Task>) -> Option<(usize, f64)> {
+    let mut worst: Option<(usize, f64)> = None;
+    for (i, t) in tasks.enumerate() {
+        let worse = match &worst {
+            None => true,
+            Some((_, wu)) => t.uncertainty.total_cmp(wu) != Ordering::Less,
+        };
+        if worse {
+            worst = Some((i, t.uncertainty));
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+    use crate::util::prop::check_result;
+    use crate::util::rng::Pcg64;
+
+    /// The historical `UaSched::sort_queue` oracle: recompute every key,
+    /// stable full sort `(p desc, arrival asc)`, drain from the front.
+    /// Residual ties keep the vec's physical order, exactly like the
+    /// old in-place sort between pops.
+    fn oracle_pop(
+        queue: &mut Vec<Task>,
+        params: &SchedParams,
+        eta: f64,
+        now: f64,
+        k: usize,
+    ) -> Vec<Task> {
+        let mut keyed: Vec<(f64, Task)> = queue
+            .drain(..)
+            .map(|t| (up_priority(&t, params, eta, now), t))
+            .collect();
+        keyed.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival)));
+        let mut sorted: Vec<Task> = keyed.into_iter().map(|(_, t)| t).collect();
+        let rest = sorted.split_off(k.min(sorted.len()));
+        *queue = rest;
+        sorted
+    }
+
+    fn gen_task(rng: &mut Pcg64, id: u64, now: f64) -> Task {
+        let arrival = (now - rng.f64() * 0.5).max(0.0);
+        let pp = if rng.f64() < 0.15 {
+            now - rng.f64() * 4.0 // already (possibly deeply) overdue
+        } else {
+            now + rng.f64() * 6.0
+        };
+        let u = if rng.f64() < 0.1 {
+            96.0 + rng.f64() * 40.0 // beyond u_scale: exercises the clamp
+        } else {
+            4.0 + rng.f64() * 92.0
+        };
+        test_task(id, arrival, pp, u)
+    }
+
+    fn ids(tasks: &[Task]) -> Vec<u64> {
+        tasks.iter().map(|t| t.id).collect()
+    }
+
+    fn run_trace(seed: u64) -> Result<(), String> {
+        let mut rng = Pcg64::with_stream(0xBEEF ^ seed, seed);
+        let params = SchedParams {
+            alpha: [0.0, 0.5, 1.0, 1.7][rng.range_usize(0, 4)],
+            min_slack: [1e-3, 0.25][rng.range_usize(0, 2)],
+            ..Default::default()
+        };
+        let eta = 0.008;
+        let mut q = UpQueue::new(params.clone(), eta);
+        let mut oracle: Vec<Task> = Vec::new();
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        let mut next_id = 0u64;
+        let mut round = 0;
+        while round < 30 || !oracle.is_empty() {
+            round += 1;
+            if round > 400 {
+                return Err("trace failed to drain".into());
+            }
+            if round <= 30 {
+                for _ in 0..rng.range_usize(0, 7) {
+                    let t = if !oracle.is_empty() && rng.f64() < 0.25 {
+                        // duplicate (arrival, d, u) under a fresh id: the
+                        // stable-sort tie the seq counter must replicate
+                        let src = &oracle[rng.range_usize(0, oracle.len())];
+                        test_task(next_id, src.arrival, src.priority_point, src.uncertainty)
+                    } else {
+                        gen_task(&mut rng, next_id, now)
+                    };
+                    next_id += 1;
+                    q.insert(t.clone(), seq);
+                    seq += 1;
+                    oracle.push(t);
+                }
+            }
+            // occasional big jumps: whole buckets cross into overdue at once
+            now += rng.f64() * if rng.f64() < 0.2 { 5.0 } else { 0.8 };
+            let k = rng.range_usize(1, 9);
+            let got = q.pop_top(now, k);
+            let want = oracle_pop(&mut oracle, &params, eta, now, k);
+            if ids(&got) != ids(&want) {
+                return Err(format!(
+                    "round {round} t={now:.4}: got {:?}, want {:?}",
+                    ids(&got),
+                    ids(&want)
+                ));
+            }
+            if q.len() != oracle.len() {
+                return Err(format!(
+                    "round {round}: len {} != oracle {}",
+                    q.len(),
+                    oracle.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_pop_order_matches_keyed_sort_oracle() {
+        check_result("up-queue-vs-oracle", 60, |rng| rng.next_u64(), |&seed| run_trace(seed));
+    }
+
+    #[test]
+    fn prop_worst_by_priority_is_oracle_tail() {
+        check_result("worst-vs-oracle-tail", 40, |rng| rng.next_u64(), |&seed| {
+            let mut rng = Pcg64::with_stream(0xFACE ^ seed, seed);
+            let params = SchedParams {
+                alpha: [0.0, 1.0, 1.7][rng.range_usize(0, 3)],
+                ..Default::default()
+            };
+            let eta = 0.008;
+            let mut q = UpQueue::new(params.clone(), eta);
+            let mut oracle = Vec::new();
+            let mut now = 0.0;
+            for i in 0..rng.range_usize(1, 40) as u64 {
+                let t = gen_task(&mut rng, i, now);
+                q.insert(t.clone(), i);
+                oracle.push(t);
+                now += rng.f64() * 0.3;
+            }
+            if rng.f64() < 0.5 {
+                q.promote(now); // the scan must not care about promotion state
+            }
+            let all = oracle_pop(&mut oracle, &params, eta, now, usize::MAX);
+            let want = all.last().unwrap().id;
+            let (r, _, _) = q.worst_by_priority(now).unwrap();
+            let got = q.task(r).id;
+            if got != want {
+                return Err(format!("worst: got {got}, want {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_order_pop_returns_insertion_order() {
+        let mut q = UpQueue::new(SchedParams::default(), 0.01);
+        for i in 0..10u64 {
+            // priorities deliberately anti-correlated with insertion order
+            q.insert(test_task(i, i as f64 * 0.1, 5.0 + (10 - i) as f64, 20.0 + i as f64), i);
+        }
+        assert_eq!(ids(&q.pop_fifo_order(4)), vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+        assert_eq!(ids(&q.pop_fifo_order(100)), vec![4, 5, 6, 7, 8, 9]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn min_arrival_tracks_queue_contents() {
+        let mut q = UpQueue::new(SchedParams::default(), 0.01);
+        assert_eq!(q.min_arrival(), f64::INFINITY);
+        q.insert(test_task(1, 3.0, 9.0, 20.0), 0);
+        q.insert(test_task(2, 1.5, 4.0, 20.0), 1);
+        assert_eq!(q.min_arrival(), 1.5);
+    }
+
+    fn pq_up(cap: usize, shed: ShedPolicy) -> PolicyQueues {
+        PolicyQueues::new(
+            vec![(LaneId(0), LaneQ::up(SchedParams::default(), 0.01))],
+            cap,
+            shed,
+        )
+    }
+
+    #[test]
+    fn cap_zero_never_sheds() {
+        let mut pq = pq_up(0, ShedPolicy::Priority);
+        for i in 0..100 {
+            pq.push(0, test_task(i, 0.0, 5.0, 20.0));
+        }
+        assert_eq!(pq.len(0), 100);
+        assert!(pq.take_shed().is_empty());
+    }
+
+    #[test]
+    fn fifo_priority_shed_is_tail_drop() {
+        let mut pq = PolicyQueues::new(vec![(LaneId(1), LaneQ::fifo())], 3, ShedPolicy::Priority);
+        for i in 0..5 {
+            pq.push(0, test_task(i, i as f64, 5.0, 20.0));
+        }
+        assert_eq!(pq.len(0), 3);
+        let shed: Vec<(usize, u64)> =
+            pq.take_shed().iter().map(|(l, t)| (l.0, t.id)).collect();
+        assert_eq!(shed, vec![(1, 3), (1, 4)], "newcomers drop, labelled with the lane id");
+    }
+
+    #[test]
+    fn up_priority_shed_drops_lowest_priority() {
+        let mut pq = pq_up(2, ShedPolicy::Priority);
+        pq.push(0, test_task(1, 0.0, 50.0, 20.0)); // loose deadline: lowest priority
+        pq.push(0, test_task(2, 0.0, 5.0, 20.0));
+        pq.push(0, test_task(3, 0.1, 2.0, 20.0)); // tight newcomer evicts the loose task
+        let shed = pq.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].1.id, 1);
+        pq.push(0, test_task(4, 0.2, 500.0, 20.0)); // hopeless newcomer sheds itself
+        assert_eq!(pq.take_shed()[0].1.id, 4);
+        assert_eq!(pq.len(0), 2);
+    }
+
+    #[test]
+    fn length_shed_drops_longest_prediction() {
+        let mut pq = pq_up(2, ShedPolicy::Length);
+        pq.push(0, test_task(1, 0.0, 5.0, 90.0));
+        pq.push(0, test_task(2, 0.0, 5.0, 10.0));
+        pq.push(0, test_task(3, 0.1, 5.0, 40.0)); // evicts u=90
+        assert_eq!(pq.take_shed()[0].1.id, 1);
+        pq.push(0, test_task(4, 0.2, 5.0, 95.0)); // longest itself -> shed
+        assert_eq!(pq.take_shed()[0].1.id, 4);
+        assert_eq!(ids(&pq.up_mut(0).pop_top(1.0, 10)), vec![2, 3]);
+    }
+
+    #[test]
+    fn keyed_priority_shed_drops_back_of_queue() {
+        let mut pq = PolicyQueues::new(
+            vec![(LaneId(0), LaneQ::keyed(Box::new(|t: &Task| t.uncertainty)))],
+            2,
+            ShedPolicy::Priority,
+        );
+        pq.push(0, test_task(1, 0.0, 5.0, 10.0));
+        pq.push(0, test_task(2, 0.1, 5.0, 50.0));
+        pq.push(0, test_task(3, 0.2, 5.0, 30.0)); // beats the back (u=50)
+        assert_eq!(pq.take_shed()[0].1.id, 2);
+        pq.push(0, test_task(4, 0.3, 5.0, 99.0)); // worse than the back: sheds itself
+        assert_eq!(pq.take_shed()[0].1.id, 4);
+        assert_eq!(ids(&pq.pop_front(0, 2)), vec![1, 3]);
+    }
+
+    #[test]
+    fn reinsert_bypasses_the_cap() {
+        let mut pq = pq_up(2, ShedPolicy::Priority);
+        pq.push(0, test_task(1, 0.0, 5.0, 20.0));
+        pq.push(0, test_task(2, 0.0, 6.0, 20.0));
+        let popped = pq.up_mut(0).pop_top(0.5, 1);
+        pq.reinsert(0, popped.into_iter().next().unwrap());
+        assert_eq!(pq.len(0), 2);
+        assert!(pq.take_shed().is_empty());
+    }
+}

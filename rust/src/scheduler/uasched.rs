@@ -4,12 +4,14 @@
 //! over an N-lane fleet. The `UP` and `UP+C` ablation arms are the same
 //! machine with offloading and/or consolidation disabled.
 //!
-//! Each lane owns a queue. Arrivals are routed by [`LaneSet::route`]
-//! (first claiming lane wins, unclaimed tasks go to the primary
-//! fallback lane — with offloading disabled everything goes primary).
-//! Accelerator-kind lanes pop with UP priorities + dynamic
-//! consolidation; CPU-kind quarantine lanes pop FIFO, exactly the
-//! historical CPU-lane behaviour.
+//! Each lane owns a queue inside the shared [`PolicyQueues`] storage.
+//! Arrivals are routed by [`LaneSet::route`] (first claiming lane wins,
+//! unclaimed tasks go to the primary fallback lane — with offloading
+//! disabled everything goes primary). Accelerator-kind lanes pop with
+//! UP priorities + dynamic consolidation from an indexed [`UpQueue`]
+//! (order-equivalent to the historical full re-sort, but O(batch)
+//! instead of O(n log n) per pop — see `queue.rs`); CPU-kind quarantine
+//! lanes pop FIFO, exactly the historical CPU-lane behaviour.
 //!
 //! Priorities are *dynamic* (Eq. 2/3's slack is the remaining time until
 //! the priority point at scheduling time), so waiting tasks age upward
@@ -19,9 +21,9 @@ use crate::config::SchedParams;
 
 use super::consolidation::{sort_by_uncertainty, split_point};
 use super::lane::{LaneId, LaneKind, LaneSet};
-use super::policy::{Batch, Policy};
+use super::policy::{Batch, Policy, WHOLE_BATCH};
+use super::queue::{LaneQ, PolicyQueues, Selector};
 use super::task::Task;
-use super::up::up_priority;
 
 /// The UASCHED scheduling machine (UP + consolidation + offloading,
 /// each independently toggleable — the ablation arms are the same
@@ -38,9 +40,10 @@ pub struct UaSched {
     /// Strategic offloading on/off: off routes everything to the
     /// primary lane, the historical `tau = +inf` ablation arms.
     offload: bool,
-    /// One waiting queue per lane (indexed by LaneId); accelerator
-    /// lanes re-prioritise at pop time, CPU lanes are FIFO.
-    queues: Vec<Vec<Task>>,
+    /// One waiting queue per lane (indexed by LaneId): accelerator-kind
+    /// lanes hold an indexed [`UpQueue`], CPU lanes a FIFO. Overload
+    /// shedding (`queue_cap`/`shed`) lives here too.
+    queues: PolicyQueues,
 }
 
 impl UaSched {
@@ -55,7 +58,21 @@ impl UaSched {
         consolidate: bool,
         offload: bool,
     ) -> UaSched {
-        let queues = (0..lanes.len()).map(|_| Vec::new()).collect();
+        let per_lane: Vec<(LaneId, LaneQ)> = lanes
+            .ids()
+            .map(|id| {
+                let q = match lanes.spec(id).kind {
+                    // remote lanes proxy a node's accelerator path and
+                    // pop in UP order, so they index like accelerators
+                    LaneKind::Accelerator | LaneKind::Remote => {
+                        LaneQ::up(params.clone(), eta)
+                    }
+                    LaneKind::Cpu => LaneQ::fifo(),
+                };
+                (id, q)
+            })
+            .collect();
+        let queues = PolicyQueues::new(per_lane, params.queue_cap, params.shed);
         UaSched { params, eta, lanes, consolidate, offload, queues }
     }
 
@@ -69,42 +86,19 @@ impl UaSched {
         self.lanes.spec(lane).batch_size.unwrap_or(self.params.batch_size).max(1)
     }
 
-    /// Sort a lane queue by descending UP priority at time `now`
-    /// (ties broken by arrival order).
-    ///
-    /// Keys are computed once per task per pop: a comparator that calls
-    /// `up_priority` evaluates it ~2·n·log n times per sort, which
-    /// dominated the scheduling hot path (see `benches/hotpath.rs`).
-    /// `total_cmp` keeps the sort total even if a broken regressor ever
-    /// leaks a NaN uncertainty past the estimator clamp.
-    fn sort_queue(&mut self, lane: LaneId, now: f64) {
-        let params = &self.params;
-        let eta = self.eta;
-        let queue = &mut self.queues[lane.index()];
-        let mut keyed: Vec<(f64, Task)> = queue
-            .drain(..)
-            .map(|task| (up_priority(&task, params, eta, now), task))
-            .collect();
-        keyed.sort_by(|a, b| {
-            b.0.total_cmp(&a.0).then(a.1.arrival.total_cmp(&b.1.arrival))
-        });
-        queue.extend(keyed.into_iter().map(|(_, task)| task));
-    }
-
     fn pop_accel(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
         let c = self.lane_batch_size(lane);
-        if self.queues[lane.index()].is_empty() {
+        let idx = lane.index();
+        let len = self.queues.len(idx);
+        if len == 0 {
             return None;
         }
         if !self.consolidate {
             // UP with static batching: first C by priority.
-            if !force && self.queues[lane.index()].len() < c {
+            if !force && len < c {
                 return None;
             }
-            self.sort_queue(lane, now);
-            let queue = &mut self.queues[lane.index()];
-            let n = queue.len().min(c);
-            let tasks: Vec<Task> = queue.drain(..n).collect();
+            let tasks = self.queues.up_mut(idx).pop_top(now, c);
             return Some(Batch { lane, tasks });
         }
 
@@ -115,13 +109,11 @@ impl UaSched {
         // when the queue runs deeper.
         let accumulate = self.params.accumulate_len_for(c);
         let lambda = self.lanes.spec(lane).lambda.unwrap_or(self.params.lambda);
-        if !force && self.queues[lane.index()].len() < c {
+        if !force && len < c {
             return None;
         }
-        self.sort_queue(lane, now);
-        let queue = &mut self.queues[lane.index()];
-        let take = queue.len().min(accumulate);
-        let mut tmp: Vec<Task> = queue.drain(..take).collect();
+        let take = len.min(accumulate);
+        let mut tmp = self.queues.up_mut(idx).pop_top(now, take);
         sort_by_uncertainty(&mut tmp);
 
         // Bounded deferral (anti-starvation, see module docs): if the
@@ -148,25 +140,88 @@ impl UaSched {
         };
         for mut task in rest {
             task.deferrals += 1;
-            queue.push(task); // re-queued; re-prioritised next pop
+            // re-queued with a fresh insertion sequence — the same tail
+            // position the historical append gave it; re-prioritised
+            // (and possibly re-promoted) next pop
+            self.queues.reinsert(idx, task);
         }
         Some(Batch { lane, tasks: batch })
     }
 
+    /// Whole-batch FIFO pop: CPU quarantine lanes always, and the
+    /// direct-call stepped path on remote lanes (insertion order from
+    /// the indexed queue).
     fn pop_fifo(&mut self, lane: LaneId, force: bool) -> Option<Batch> {
         let c = self.lane_batch_size(lane);
-        let queue = &mut self.queues[lane.index()];
-        if queue.is_empty() || (!force && queue.len() < c) {
+        let idx = lane.index();
+        let len = self.queues.len(idx);
+        if len == 0 || (!force && len < c) {
             return None;
         }
-        let n = queue.len().min(c);
-        let tasks = queue.drain(..n).collect();
+        let n = len.min(c);
+        let tasks = if matches!(self.queues.lane(idx), LaneQ::Up(_)) {
+            self.queues.up_mut(idx).pop_fifo_order(n)
+        } else {
+            self.queues.pop_front(idx, n)
+        };
+        Some(Batch { lane, tasks })
+    }
+
+    /// Length-aware slot packing (`--sched step`): fill freed slots in
+    /// UP-priority order, but cap co-admitted *predicted-long* tasks
+    /// (uncertainty ≥ u_scale/2) at `max(1, ⌈free/2⌉)` per fill. A slot
+    /// table packed entirely with long generations stays pinned for the
+    /// whole tail; holding some long tasks back keeps slots churning so
+    /// freed capacity reaches the short traffic. Deferred tasks stay
+    /// queued and age upward under UP, so the cap cannot starve them —
+    /// and the first admitted task is always exempt, so a forced fill
+    /// always makes progress.
+    fn pop_fill_accel(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
+        let c = self.lane_batch_size(lane);
+        let idx = lane.index();
+        let len = self.queues.len(idx);
+        // same admission rule as whole-batch pops, shrunk to the free
+        // slots: wait for a fill's worth of tasks unless xi forces
+        if len == 0 || (!force && len < free.min(c)) {
+            return None;
+        }
+        let long_u = self.params.u_scale * 0.5;
+        let cap_long = free.div_ceil(2).max(1);
+        let q = self.queues.up_mut(idx);
+        q.promote(now);
+        let mut picked = Vec::with_capacity(free.min(len));
+        let mut n_long = 0;
+        {
+            // walk the exact priority order lazily, skipping capped
+            // longs, without disturbing the queue until selection is
+            // final — the indexed replacement for the sorted-vec walk
+            let mut sel = Selector::new(q, now);
+            while picked.len() < free {
+                let Some(r) = sel.next() else { break };
+                let is_long = q.task(r).uncertainty >= long_u;
+                if is_long && n_long >= cap_long && !picked.is_empty() {
+                    continue; // defer: enough long generations co-admitted
+                }
+                n_long += usize::from(is_long);
+                picked.push(r);
+            }
+        }
+        if picked.is_empty() {
+            return None;
+        }
+        let tasks = q.remove_selected(&picked);
         Some(Batch { lane, tasks })
     }
 
     /// The fleet this policy schedules.
     pub fn lanes(&self) -> &LaneSet {
         &self.lanes
+    }
+
+    /// Queued tasks on one lane (test/diagnostic hook).
+    #[cfg(test)]
+    pub(crate) fn lane_queue_len(&self, lane: LaneId) -> usize {
+        self.queues.len(lane.index())
     }
 
     /// Among lanes sharing `routed`'s admission predicate (a union
@@ -178,12 +233,12 @@ impl UaSched {
     fn balanced(&self, routed: LaneId) -> LaneId {
         let adm = self.lanes.spec(routed).admission;
         let mut best = routed;
-        let mut best_len = self.queues[routed.index()].len();
+        let mut best_len = self.queues.len(routed.index());
         for id in self.lanes.ids() {
             if id == routed || self.lanes.spec(id).admission != adm {
                 continue;
             }
-            let len = self.queues[id.index()].len();
+            let len = self.queues.len(id.index());
             if len < best_len || (len == best_len && id.index() < best.index()) {
                 best = id;
                 best_len = len;
@@ -211,36 +266,24 @@ impl Policy for UaSched {
         } else {
             self.lanes.primary()
         };
-        self.queues[lane.index()].push(task);
+        self.queues.push(lane.index(), task);
     }
 
-    fn pop_batch(&mut self, lane: LaneId, now: f64, force: bool) -> Option<Batch> {
-        if lane.index() >= self.lanes.len() {
-            return None;
-        }
-        match self.lanes.spec(lane).kind {
-            // remote lanes proxy a node's accelerator path: same UP +
-            // consolidation ordering, executed over the wire
-            LaneKind::Accelerator | LaneKind::Remote => self.pop_accel(lane, now, force),
-            LaneKind::Cpu => self.pop_fifo(lane, force),
-        }
-    }
-
-    /// Length-aware slot packing (`--sched step`): fill freed slots in
-    /// UP-priority order, but cap co-admitted *predicted-long* tasks
-    /// (uncertainty ≥ u_scale/2) at `max(1, ⌈free/2⌉)` per fill. A slot
-    /// table packed entirely with long generations stays pinned for the
-    /// whole tail; holding some long tasks back keeps slots churning so
-    /// freed capacity reaches the short traffic. Deferred tasks stay
-    /// queued and age upward under UP, so the cap cannot starve them —
-    /// and the first admitted task is always exempt, so a forced fill
-    /// always makes progress.
-    fn pop_fill(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
+    fn pop(&mut self, lane: LaneId, now: f64, force: bool, free: usize) -> Option<Batch> {
         if free == 0 || lane.index() >= self.lanes.len() {
             return None;
         }
+        if free == WHOLE_BATCH {
+            return match self.lanes.spec(lane).kind {
+                // remote lanes proxy a node's accelerator path: same UP
+                // + consolidation ordering, executed over the wire
+                LaneKind::Accelerator | LaneKind::Remote => self.pop_accel(lane, now, force),
+                LaneKind::Cpu => self.pop_fifo(lane, force),
+            };
+        }
         if self.lanes.spec(lane).kind != LaneKind::Accelerator {
-            // quarantine lanes keep whole-batch FIFO semantics
+            // quarantine lanes keep whole-batch FIFO semantics; trim to
+            // the free slots, re-admitting overflow through routing
             let mut batch = self.pop_fifo(lane, force)?;
             if batch.tasks.len() > free {
                 for task in batch.tasks.split_off(free) {
@@ -249,37 +292,15 @@ impl Policy for UaSched {
             }
             return Some(batch);
         }
-        let c = self.lane_batch_size(lane);
-        let queue_len = self.queues[lane.index()].len();
-        // same admission rule as whole-batch pops, shrunk to the free
-        // slots: wait for a fill's worth of tasks unless xi forces
-        if queue_len == 0 || (!force && queue_len < free.min(c)) {
-            return None;
-        }
-        self.sort_queue(lane, now);
-        let long_u = self.params.u_scale * 0.5;
-        let cap_long = free.div_ceil(2).max(1);
-        let queue = &mut self.queues[lane.index()];
-        let mut tasks: Vec<Task> = Vec::with_capacity(free.min(queue_len));
-        let mut n_long = 0;
-        let mut i = 0;
-        while i < queue.len() && tasks.len() < free {
-            let is_long = queue[i].uncertainty >= long_u;
-            if is_long && n_long >= cap_long && !tasks.is_empty() {
-                i += 1; // defer: enough long generations co-admitted
-                continue;
-            }
-            n_long += usize::from(is_long);
-            tasks.push(queue.remove(i));
-        }
-        if tasks.is_empty() {
-            return None;
-        }
-        Some(Batch { lane, tasks })
+        self.pop_fill_accel(lane, now, force, free)
     }
 
     fn queue_len(&self) -> usize {
-        self.queues.iter().map(Vec::len).sum()
+        self.queues.total_len()
+    }
+
+    fn take_shed(&mut self) -> Vec<(LaneId, Task)> {
+        self.queues.take_shed()
     }
 
     fn retire_lane(&mut self, lane: LaneId) -> anyhow::Result<()> {
@@ -288,8 +309,9 @@ impl Policy for UaSched {
         }
         self.lanes.retire(lane)?;
         // re-admit everything the dead lane had queued through the
-        // surviving admissions (same path as ordinary arrivals)
-        let orphans: Vec<Task> = self.queues[lane.index()].drain(..).collect();
+        // surviving admissions (same path as ordinary arrivals — which
+        // means a capped survivor may shed some of the rerouted load)
+        let orphans: Vec<Task> = self.queues.drain_lane(lane.index());
         for task in orphans {
             self.push(task);
         }
@@ -302,11 +324,10 @@ impl Policy for UaSched {
         }
         let mut deadline = f64::INFINITY;
         for id in self.lanes.ids() {
-            let queue = &self.queues[id.index()];
-            if queue.is_empty() {
+            if self.queues.len(id.index()) == 0 {
                 continue;
             }
-            let oldest = queue.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
+            let oldest = self.queues.lane(id.index()).min_arrival();
             let xi = self.lanes.spec(id).xi.unwrap_or(self.params.xi);
             // the engine compares `now >= oldest + xi` — keep the same
             // float expression so the wait deadline and the force test
@@ -320,6 +341,7 @@ impl Policy for UaSched {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ShedPolicy;
     use crate::scheduler::lane::{Admission, LaneSpec};
     use crate::scheduler::task::test_task;
     use crate::util::prop;
@@ -343,7 +365,7 @@ mod tests {
         s.push(test_task(1, 0.0, 9.0, 10.0));
         s.push(test_task(2, 0.0, 1.0, 10.0));
         s.push(test_task(3, 0.0, 4.0, 10.0));
-        let b = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        let b = s.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
@@ -354,12 +376,12 @@ mod tests {
         s.push(test_task(2, 0.0, 5.0, 10.0));
         s.push(test_task(3, 0.0, 5.0, 60.0)); // malicious
         assert_eq!(s.queue_len(), 3);
-        let cpu = s.pop_batch(LaneId::CPU, 0.0, false).unwrap();
+        let cpu = s.pop(LaneId::CPU, 0.0, false, WHOLE_BATCH).unwrap();
         assert_eq!(cpu.lane, LaneId::CPU);
         let mut ids: Vec<u64> = cpu.tasks.iter().map(|t| t.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 3]);
-        let gpu = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        let gpu = s.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(gpu.tasks[0].id, 2);
     }
 
@@ -382,12 +404,12 @@ mod tests {
         s.push(test_task(1, 0.0, 5.0, 10.0)); // -> small
         s.push(test_task(2, 0.0, 5.0, 40.0)); // -> big
         s.push(test_task(3, 0.0, 5.0, 90.0)); // -> cpu
-        let small = s.pop_batch(LaneId(1), 0.0, true).unwrap();
+        let small = s.pop(LaneId(1), 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(small.tasks[0].id, 1);
         assert_eq!(small.tasks.len(), 1, "per-lane batch size respected");
-        let big = s.pop_batch(LaneId(0), 0.0, true).unwrap();
+        let big = s.pop(LaneId(0), 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(big.tasks[0].id, 2);
-        let cpu = s.pop_batch(LaneId(2), 0.0, true).unwrap();
+        let cpu = s.pop(LaneId(2), 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(cpu.tasks[0].id, 3);
         assert_eq!(s.queue_len(), 0);
     }
@@ -398,8 +420,8 @@ mod tests {
         let mut s = UaSched::new(params(2), 0.05, lanes, true, false);
         s.push(test_task(1, 0.0, 5.0, 80.0)); // would quarantine under RT-LM
         s.push(test_task(2, 0.0, 5.0, 10.0));
-        assert!(s.pop_batch(LaneId::CPU, 0.0, true).is_none());
-        let b = s.pop_batch(LaneId::GPU, 0.0, true).unwrap();
+        assert!(s.pop(LaneId::CPU, 0.0, true, WHOLE_BATCH).is_none());
+        let b = s.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.len(), 2);
         assert_eq!(s.name(), "UP+C");
     }
@@ -421,7 +443,7 @@ mod tests {
         for i in 4..8 {
             s.push(test_task(i, 0.0, 5.0, 80.0 + i as f64));
         }
-        let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+        let b = s.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
         // the low-uncertainty group forms the batch
         assert!(b.tasks.iter().all(|t| t.uncertainty < 20.0), "{:?}", b.tasks);
         assert_eq!(b.tasks.len(), 4);
@@ -435,8 +457,8 @@ mod tests {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
         // fewer than C=4 queued -> wait for more arrivals unless forced
-        assert!(s.pop_batch(LaneId::GPU, 0.0, false).is_none());
-        assert!(s.pop_batch(LaneId::GPU, 0.0, true).is_some());
+        assert!(s.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).is_none());
+        assert!(s.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).is_some());
     }
 
     #[test]
@@ -447,7 +469,7 @@ mod tests {
         for i in 0..4 {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
-        let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+        let b = s.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.len(), 4);
     }
 
@@ -463,7 +485,7 @@ mod tests {
         for i in 4..8 {
             s.push(test_task(i, 0.0, 50.0, 10.0)); // short, relaxed
         }
-        let b = s.pop_fill(LaneId::GPU, 0.0, true, 4).unwrap();
+        let b = s.pop(LaneId::GPU, 0.0, true, 4).unwrap();
         assert_eq!(b.tasks.len(), 4);
         let longs = b.tasks.iter().filter(|t| t.uncertainty >= 48.0).count();
         assert_eq!(longs, 2, "cap is ceil(free/2) = 2 predicted-long tasks");
@@ -477,7 +499,7 @@ mod tests {
             s.push(test_task(i, 0.0, 1.0, 90.0));
         }
         // cap = ceil(1/2) = 1: a single freed slot must still admit one
-        let b = s.pop_fill(LaneId::GPU, 0.0, true, 1).unwrap();
+        let b = s.pop(LaneId::GPU, 0.0, true, 1).unwrap();
         assert_eq!(b.tasks.len(), 1);
         assert_eq!(s.queue_len(), 2);
     }
@@ -499,7 +521,7 @@ mod tests {
             for (i, u) in [10.0, 11.0, 80.0, 88.0].into_iter().enumerate() {
                 s.push(test_task(i as u64, 0.0, 5.0, u));
             }
-            let b = s.pop_batch(LaneId::GPU, 0.0, false).unwrap();
+            let b = s.pop(LaneId::GPU, 0.0, false, WHOLE_BATCH).unwrap();
             assert_eq!(b.tasks.len(), expect, "lambda={lambda:?}");
         }
     }
@@ -538,13 +560,13 @@ mod tests {
         for i in 0..4 {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
-        let a = s.pop_batch(LaneId(0), 0.0, true).expect("lane a got traffic");
-        let b = s.pop_batch(LaneId(1), 0.0, true).expect("lane b got traffic");
+        let a = s.pop(LaneId(0), 0.0, true, WHOLE_BATCH).expect("lane a got traffic");
+        let b = s.pop(LaneId(1), 0.0, true, WHOLE_BATCH).expect("lane b got traffic");
         assert_eq!(a.tasks.len() + b.tasks.len(), 4);
         assert_eq!(a.tasks.len(), 2, "fallback traffic split evenly");
         // the claiming lane is a singleton group: untouched by balancing
         s.push(test_task(9, 0.0, 5.0, 90.0));
-        assert_eq!(s.pop_batch(LaneId(2), 0.0, true).unwrap().tasks[0].id, 9);
+        assert_eq!(s.pop(LaneId(2), 0.0, true, WHOLE_BATCH).unwrap().tasks[0].id, 9);
     }
 
     #[test]
@@ -559,13 +581,13 @@ mod tests {
             s.push(test_task(i, 0.0, 5.0, 10.0));
         }
         s.retire_lane(LaneId(0)).unwrap();
-        assert!(s.pop_batch(LaneId(0), 0.0, true).is_none(), "dead lane drained");
-        let b = s.pop_batch(LaneId(1), 0.0, true).unwrap();
+        assert!(s.pop(LaneId(0), 0.0, true, WHOLE_BATCH).is_none(), "dead lane drained");
+        let b = s.pop(LaneId(1), 0.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks.len(), 2, "survivor serves at its batch size");
         assert_eq!(s.queue_len(), 2, "re-routed tasks are queued, not lost");
         // fresh arrivals also avoid the dead lane
         s.push(test_task(9, 0.0, 5.0, 10.0));
-        assert!(s.queues[0].is_empty());
+        assert_eq!(s.lane_queue_len(LaneId(0)), 0);
         // the whole fleet dying is an error
         assert!(s.retire_lane(LaneId(1)).is_err());
     }
@@ -577,7 +599,7 @@ mod tests {
         let mut s = UaSched::two_lane(params(1), 0.05, f64::INFINITY, false);
         s.push(test_task(1, 0.0, 2.0, 90.0)); // old, uncertain
         s.push(test_task(2, 50.0, 60.0, 5.0)); // fresh, certain, far deadline
-        let b = s.pop_batch(LaneId::GPU, 50.0, true).unwrap();
+        let b = s.pop(LaneId::GPU, 50.0, true, WHOLE_BATCH).unwrap();
         assert_eq!(b.tasks[0].id, 1, "aged task must win");
     }
 
@@ -598,12 +620,31 @@ mod tests {
             guard += 1;
             assert!(guard < 100, "queue with NaN task failed to drain");
             for lane in [LaneId::GPU, LaneId::CPU] {
-                if let Some(b) = s.pop_batch(lane, guard as f64, true) {
+                if let Some(b) = s.pop(lane, guard as f64, true, WHOLE_BATCH) {
                     seen += b.tasks.len();
                 }
             }
         }
         assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn capped_uasched_sheds_on_push() {
+        let p = SchedParams {
+            batch_size: 2,
+            queue_cap: 2,
+            shed: ShedPolicy::Priority,
+            ..Default::default()
+        };
+        let mut s = UaSched::two_lane(p, 0.05, f64::INFINITY, true);
+        s.push(test_task(1, 0.0, 50.0, 10.0)); // loose deadline: worst
+        s.push(test_task(2, 0.0, 5.0, 10.0));
+        s.push(test_task(3, 0.1, 2.0, 10.0)); // evicts task 1
+        let shed = s.take_shed();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].0, LaneId::GPU, "shed is attributed to the full lane");
+        assert_eq!(shed[0].1.id, 1);
+        assert_eq!(s.queue_len(), 2);
     }
 
     #[test]
@@ -634,7 +675,7 @@ mod tests {
                         return Err("scheduler did not drain".into());
                     }
                     for lane in [LaneId::GPU, LaneId::CPU] {
-                        if let Some(b) = s.pop_batch(lane, now, true) {
+                        if let Some(b) = s.pop(lane, now, true, WHOLE_BATCH) {
                             if b.tasks.is_empty() {
                                 return Err("empty batch emitted".into());
                             }
@@ -690,7 +731,7 @@ mod tests {
                     if guard > 1000 {
                         return Err("did not drain".into());
                     }
-                    if let Some(b) = s.pop_batch(LaneId::GPU, now, true) {
+                    if let Some(b) = s.pop(LaneId::GPU, now, true, WHOLE_BATCH) {
                         // the bounded-deferral rescue batch intentionally
                         // ignores lambda; every ordinary batch must obey it
                         if b.tasks.iter().any(|t| t.deferrals >= 3) {

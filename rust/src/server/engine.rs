@@ -95,6 +95,9 @@ pub struct ServeReport {
     pub n_evicted: usize,
     /// Pure model-inference seconds, summed over batches.
     pub infer_secs: f64,
+    /// Tasks dropped by overload admission control — each still has an
+    /// outcome (flagged [`TaskOutcome::shed`]) and got a wire reply.
+    pub n_shed: usize,
 }
 
 impl ServeReport {
@@ -169,6 +172,7 @@ pub fn serve_with_factory(
         n_retried: report.n_retried,
         n_evicted: report.n_evicted,
         infer_secs: report.infer_secs,
+        n_shed: report.n_shed,
     };
     if opts.verbose {
         eprintln!(

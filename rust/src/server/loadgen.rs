@@ -19,6 +19,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::metrics::Samples;
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 
 /// Load-generator knobs (`rtlm loadgen` flags).
 #[derive(Clone, Debug)]
@@ -32,6 +33,14 @@ pub struct LoadgenOptions {
     pub reply_timeout: Duration,
     /// How long to retry the initial connect (server still starting).
     pub connect_wait: Duration,
+    /// Open-loop arrival rate in requests/second across the whole run
+    /// (`--rate`). 0 (the default) is the historical closed loop: each
+    /// connection waits for a reply before its next request, so offered
+    /// load can never exceed service capacity. Positive, each
+    /// connection fires its share at Poisson inter-arrival gaps without
+    /// waiting — the arrival process survives server slowdown, which is
+    /// what makes overload (and shedding) actually reachable.
+    pub rate: f64,
 }
 
 impl Default for LoadgenOptions {
@@ -41,6 +50,7 @@ impl Default for LoadgenOptions {
             concurrency: 200,
             reply_timeout: Duration::from_secs(60),
             connect_wait: Duration::from_secs(30),
+            rate: 0.0,
         }
     }
 }
@@ -57,6 +67,11 @@ pub struct LoadReport {
     /// A chaos gate killing a node mid-run accepts these
     /// (`--allow-server-errors`) while still rejecting lost replies.
     pub n_server_err: usize,
+    /// Replies that were explicit `{"error":"shed"}`: overload
+    /// admission control answered the request by dropping it. Counted
+    /// separately from both `n_ok` and `n_err` — a shed is an answered
+    /// request, and the CI overload gate asserts the split directly.
+    pub n_shed: usize,
     /// First few error strings, for diagnostics.
     pub errors: Vec<String>,
     /// Server-reported `response_ms` of every ok reply.
@@ -89,6 +104,7 @@ impl LoadReport {
         self.n_ok += other.n_ok;
         self.n_err += other.n_err;
         self.n_server_err += other.n_server_err;
+        self.n_shed += other.n_shed;
         for e in other.errors {
             if self.errors.len() < 8 {
                 self.errors.push(e);
@@ -139,19 +155,54 @@ pub fn wait_for_server(addr: &str, wait: Duration) -> Result<()> {
     }
 }
 
-fn drive_connection(
-    addr: &str,
-    requests: usize,
-    worker: usize,
-    opts: &LoadgenOptions,
-) -> LoadReport {
-    let mut report = LoadReport::default();
-    // a thundering herd of connects can race the listener backlog:
-    // retry briefly before counting the connection as failed
+/// Parse one reply line into the report's tallies. `rtt_ms` is the
+/// client-measured round trip when the caller paired request and reply
+/// (closed loop); open-loop replies are unpaired and pass `None`.
+fn tally_reply(report: &mut LoadReport, line: &str, rtt_ms: Option<f64>) {
+    match Json::parse(line) {
+        Ok(reply) => {
+            if let Some(err) = reply.get("error").as_str() {
+                if err == "shed" {
+                    report.n_shed += 1;
+                } else {
+                    let id = reply.get("id").as_i64().unwrap_or(-1);
+                    report.n_server_err += 1;
+                    report.record_err(format!("server error (id {id}): {err}"));
+                }
+            } else {
+                match reply.need_f64("response_ms") {
+                    Ok(ms) => {
+                        report.n_ok += 1;
+                        report.response_ms.push(ms);
+                        if let Some(t) = reply.get("ttft_ms").as_f64() {
+                            report.ttft_ms.push(t);
+                        }
+                        if let Some(rtt) = rtt_ms {
+                            report.rtt_ms.push(rtt);
+                        }
+                        if let Some(lane) = reply.get("lane").as_str() {
+                            *report.lane_tasks.entry(lane.to_string()).or_insert(0) += 1;
+                        }
+                        if let Some(node) = reply.get("node").as_str() {
+                            *report.node_tasks.entry(node.to_string()).or_insert(0) += 1;
+                        }
+                    }
+                    Err(e) => report.record_err(format!("bad reply: {e}")),
+                }
+            }
+        }
+        Err(e) => report.record_err(format!("unparseable reply: {e}")),
+    }
+}
+
+/// Connect with brief retries (a thundering herd of connects can race
+/// the listener backlog); on failure, account every request this worker
+/// will now never send.
+fn connect_with_retry(addr: &str, requests: usize, report: &mut LoadReport) -> Option<TcpStream> {
     let mut attempt = 0;
-    let stream = loop {
+    loop {
         match TcpStream::connect(addr) {
-            Ok(s) => break s,
+            Ok(s) => return Some(s),
             Err(_) if attempt < 20 => {
                 attempt += 1;
                 thread::sleep(Duration::from_millis(25 * attempt));
@@ -160,9 +211,21 @@ fn drive_connection(
                 for _ in 0..requests {
                     report.record_err(format!("connect: {e}"));
                 }
-                return report;
+                return None;
             }
         }
+    }
+}
+
+fn drive_connection(
+    addr: &str,
+    requests: usize,
+    worker: usize,
+    opts: &LoadgenOptions,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    let Some(stream) = connect_with_retry(addr, requests, &mut report) else {
+        return report;
     };
     stream.set_read_timeout(Some(opts.reply_timeout)).ok();
     let mut writer = match stream.try_clone() {
@@ -205,33 +268,80 @@ fn drive_connection(
             }
         }
         let rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
-        match Json::parse(line.trim()) {
-            Ok(reply) => {
-                if let Some(err) = reply.get("error").as_str() {
-                    let id = reply.get("id").as_i64().unwrap_or(-1);
-                    report.n_server_err += 1;
-                    report.record_err(format!("server error (id {id}): {err}"));
-                } else {
-                    match reply.need_f64("response_ms") {
-                        Ok(ms) => {
-                            report.n_ok += 1;
-                            report.response_ms.push(ms);
-                            if let Some(t) = reply.get("ttft_ms").as_f64() {
-                                report.ttft_ms.push(t);
-                            }
-                            report.rtt_ms.push(rtt_ms);
-                            if let Some(lane) = reply.get("lane").as_str() {
-                                *report.lane_tasks.entry(lane.to_string()).or_insert(0) += 1;
-                            }
-                            if let Some(node) = reply.get("node").as_str() {
-                                *report.node_tasks.entry(node.to_string()).or_insert(0) += 1;
-                            }
-                        }
-                        Err(e) => report.record_err(format!("bad reply: {e}")),
-                    }
-                }
+        tally_reply(&mut report, line.trim(), Some(rtt_ms));
+    }
+    report
+}
+
+/// Open-loop worker: a writer thread fires this connection's share of
+/// requests at Poisson gaps (fire-and-forget), while this thread reads
+/// and tallies replies as they come back. Totals still add up to
+/// `requests`: unanswered sends and never-attempted requests are
+/// counted as errors at the end.
+fn drive_connection_open(
+    addr: &str,
+    requests: usize,
+    worker: usize,
+    mean_gap_secs: f64,
+    opts: &LoadgenOptions,
+) -> LoadReport {
+    let mut report = LoadReport::default();
+    let Some(stream) = connect_with_retry(addr, requests, &mut report) else {
+        return report;
+    };
+    stream.set_read_timeout(Some(opts.reply_timeout)).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            for _ in 0..requests {
+                report.record_err(format!("clone: {e}"));
             }
-            Err(e) => report.record_err(format!("unparseable reply: {e}")),
+            return report;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    let writer_thread = thread::spawn(move || -> (usize, Option<String>) {
+        let mut rng = Pcg64::new(0x10AD_0000 ^ worker as u64);
+        for i in 0..requests {
+            thread::sleep(Duration::from_secs_f64(rng.exponential(mean_gap_secs)));
+            let text = format!("tell me about the history of art {worker} {i}");
+            if let Err(e) = writeln!(writer, "{text}") {
+                return (i, Some(format!("write: {e}")));
+            }
+        }
+        (requests, None)
+    });
+    // tally replies until this connection's full share is answered or
+    // the read fails; a short writer leaves the reader to time out once
+    let mut replies = 0usize;
+    let mut read_err: Option<String> = None;
+    while replies < requests {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                read_err = Some("server closed the connection".into());
+                break;
+            }
+            Ok(_) => {
+                tally_reply(&mut report, line.trim(), None);
+                replies += 1;
+            }
+            Err(e) => {
+                read_err = Some(format!("read (timeout?): {e}"));
+                break;
+            }
+        }
+    }
+    let (sent, write_err) = writer_thread
+        .join()
+        .unwrap_or((0, Some("writer panicked".into())));
+    for _ in replies..sent {
+        report.record_err(read_err.clone().unwrap_or_else(|| "no reply".into()));
+    }
+    if let Some(e) = write_err {
+        report.record_err(e);
+        for _ in sent + 1..requests {
+            report.record_err("not attempted (connection aborted)".into());
         }
     }
     report
@@ -245,13 +355,19 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<LoadReport> {
     wait_for_server(addr, opts.connect_wait)?;
 
     let concurrency = opts.concurrency.min(opts.n);
+    // open loop: the run-wide Poisson rate splits evenly across the
+    // connections (superposing them restores the target process)
+    let mean_gap_secs = (opts.rate > 0.0).then(|| concurrency as f64 / opts.rate);
     let mut handles = Vec::with_capacity(concurrency);
     for worker in 0..concurrency {
         // spread the remainder so exactly n requests go out
         let requests = opts.n / concurrency + usize::from(worker < opts.n % concurrency);
         let addr = addr.to_string();
         let opts = opts.clone();
-        handles.push(thread::spawn(move || drive_connection(&addr, requests, worker, &opts)));
+        handles.push(thread::spawn(move || match mean_gap_secs {
+            Some(gap) => drive_connection_open(&addr, requests, worker, gap, &opts),
+            None => drive_connection(&addr, requests, worker, &opts),
+        }));
     }
     let mut total = LoadReport::default();
     for handle in handles {

@@ -223,6 +223,12 @@ pub fn serve_tcp_with(
         let Some(reply_tx) = reply_map.lock().unwrap().remove(&o.id) else {
             return;
         };
+        if o.shed {
+            // dropped by overload admission control: id-tagged error so
+            // the client can tell load shedding from a real failure
+            let _ = reply_tx.send((o.id, error_reply(o.id, "shed")));
+            return;
+        }
         let lane = lane_names
             .get(o.lane.index())
             .cloned()

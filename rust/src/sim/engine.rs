@@ -99,6 +99,7 @@ fn run_sim_on(
         n_batches: report.n_batches,
         n_steps: report.n_steps,
         n_preempted: report.n_preempted,
+        n_shed: report.n_shed,
     }
 }
 

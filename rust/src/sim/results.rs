@@ -33,6 +33,10 @@ pub struct TaskOutcome {
     pub malicious: bool,
     /// Pure model-inference time of the batch this task rode in.
     pub infer_secs: f64,
+    /// Dropped by overload admission control instead of executing:
+    /// `completion == first_token == arrival` and `infer_secs == 0`.
+    /// Serving front-ends reply `{"error":"shed"}` for these.
+    pub shed: bool,
 }
 
 impl TaskOutcome {
@@ -77,6 +81,9 @@ pub struct SimResult {
     pub n_steps: Vec<usize>,
     /// Generations preempted mid-flight to another lane (step mode).
     pub n_preempted: usize,
+    /// Tasks dropped by overload admission control (their outcomes are
+    /// still present, flagged [`TaskOutcome::shed`]).
+    pub n_shed: usize,
 }
 
 impl SimResult {
@@ -194,6 +201,7 @@ impl SimResult {
                 ("utype", Json::Str(o.utype.clone())),
                 ("malicious", Json::Bool(o.malicious)),
                 ("missed", Json::Bool(o.missed())),
+                ("shed", Json::Bool(o.shed)),
             ]);
             writeln!(f, "{rec}")?;
         }

@@ -106,7 +106,8 @@ pub fn help_text(experiments: &[&str]) -> String {
          commands:\n\
          \x20 check                      validate artifacts, smoke inference\n\
          \x20 calibrate [--reps N]       measure PJRT latencies -> calib.json\n\
-         \x20 bench <exp|all> [--n N] [--seed S]\n\
+         \x20 bench <exp|all> [--n N] [--seed S] [--sched batch|step]\n\
+         \x20     [--queue-cap N] [--shed priority|length]\n\
          \x20     regenerate paper experiments: {exps}\n\
          \x20 bench --wire [FILTER] [--n N] [--seed S] [--time-scale S]\n\
          \x20     [--parity-rel R] [--parity-slop-ms MS] [--parity-out FILE]\n\
@@ -118,17 +119,21 @@ pub fn help_text(experiments: &[&str]) -> String {
          \x20     contains it (also accepted as --wire FILTER).\n\
          \x20 sim [--model M] [--policy P] [--n N] [--seed S] [--device D]\n\
          \x20     [--variance small|normal|large] [--sched batch|step]\n\
-         \x20     [--slots N] [--overrun-factor F] [--export FILE]\n\
+         \x20     [--slots N] [--overrun-factor F] [--queue-cap N]\n\
+         \x20     [--shed priority|length] [--export FILE]\n\
          \x20 serve [--model M] [--policy P] [--n N] [--seed S] [--beta B]\n\
          \x20     [--time-scale S] [--backend pjrt|modeled] [--device D]\n\
          \x20     [--variance V] [--lanes SPEC] [--sched batch|step] [--slots N]\n\
-         \x20     [--overrun-factor F] [--require-all-lanes] [--verbose]\n\
+         \x20     [--overrun-factor F] [--queue-cap N] [--shed priority|length]\n\
+         \x20     [--require-all-lanes] [--verbose]\n\
          \x20 tcp [--model M] [--addr A] [--policy P] [--backend pjrt|modeled]\n\
          \x20     [--time-scale S] [--device D] [--lanes SPEC] [--pipeline K]\n\
          \x20     [--sched batch|step] [--slots N] [--overrun-factor F]\n\
+         \x20     [--queue-cap N] [--shed priority|length]\n\
          \x20     [--node-name NAME] [--register ADDR]\n\
          \x20 route [--addr A] [--policy P] [--nodes a:p,b:p] [--expect-nodes N]\n\
          \x20     [--heartbeat-s S] [--pipeline K] [--sched batch|step]\n\
+         \x20     [--queue-cap N] [--shed priority|length]\n\
          \x20     distributed-fleet router: unions the lane tables of every\n\
          \x20     node (dialed via --nodes, or registering via their\n\
          \x20     --register flag) into one node/lane fleet, scores\n\
@@ -138,7 +143,11 @@ pub fn help_text(experiments: &[&str]) -> String {
          \x20     ordinary lane admission on the survivors.\n\
          \x20 loadgen [--addr A] [--n N] [--concurrency K] [--p95-ms MS]\n\
          \x20     [--timeout-s S] [--connect-wait-s S] [--expect-lanes a,b]\n\
-         \x20     [--allow-server-errors]\n\
+         \x20     [--allow-server-errors] [--rate R] [--min-shed N]\n\
+         \x20     [--max-shed-rate F]\n\
+         \x20     --rate R fires requests open-loop at R req/s Poisson\n\
+         \x20     arrivals (0 = closed loop); shed replies are tallied\n\
+         \x20     separately and gated by --min-shed / --max-shed-rate.\n\
          \x20 score <text...>            print RULEGEN features + u_J\n\n\
          --lanes describes the fleet: comma-separated kind[:model][:key=value]*\n\
          (keys: name, workers, batch, admit=default|none|above:X|atmost:X|band:L:H,\n\
@@ -149,7 +158,12 @@ pub fn help_text(experiments: &[&str]) -> String {
          --sched step turns on iteration-level (continuous) batching:\n\
          accelerator lanes run a persistent decode loop over --slots slots\n\
          (0 = lane batch size); generations exceeding --overrun-factor x\n\
-         their predicted length are preempted to the CPU lane.",
+         their predicted length are preempted to the CPU lane.\n\n\
+         --queue-cap N bounds every lane's waiting queue (0 = unbounded):\n\
+         a push into a full lane sheds one task per --shed — priority\n\
+         drops the lowest-priority task under the lane's own order,\n\
+         length the highest-predicted-length one. Shed requests answer\n\
+         immediately with an id-tagged {{\"error\":\"shed\"}} reply.",
         exps = experiments.join(",")
     )
 }

@@ -24,7 +24,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use rtlm::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams, ShedPolicy};
 use rtlm::engine::{
     resolve_lanes, run_engine, run_engine_stream, ArrivalSource, SimBackend, ThreadedBackend,
 };
@@ -773,4 +773,104 @@ fn step_mode_counters_match_across_backends() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// overload admission control (--queue-cap / --shed)
+// ---------------------------------------------------------------------------
+
+/// Overload shedding on the virtual clock: 30 simultaneous arrivals
+/// into a cap-8 lane, with the batch size above the cap so no dispatch
+/// can drain the queue mid-admission (the first pop is the ξ-forced
+/// one). Every submitted id gets exactly one outcome — served or shed —
+/// the sheds are exactly the lowest-priority tasks, shed outcomes carry
+/// zero service, and the cap-8 survivors dispatch normally.
+#[test]
+fn overload_sheds_lowest_priority_and_accounts_for_every_task() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = step_latency();
+    let dev = DeviceProfile::edge_server();
+    let lanes = two_lane(60.0);
+    let params = SchedParams {
+        batch_size: 32,
+        queue_cap: 8,
+        shed: ShedPolicy::Priority,
+        ..Default::default()
+    };
+    // priority strictly decreasing in id (equal uncertainty, deadlines
+    // widening): the cap-8 queue must retain exactly ids 0..8
+    let tasks: Vec<Task> =
+        (0..30).map(|i| mk_task(i, 0.0, 2.0 + i as f64, 10.0)).collect();
+
+    let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev, &params);
+    let report = run_engine(&mut backend, &mut *policy, &params, 30).expect("engine");
+
+    assert_eq!(report.outcomes.len(), 30, "every id answered exactly once");
+    let mut ids: Vec<u64> = report.outcomes.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..30u64).collect::<Vec<_>>(), "duplicate or missing ids");
+    assert_eq!(report.n_shed, 22);
+    for o in &report.outcomes {
+        if o.id < 8 {
+            assert!(!o.shed, "high-priority task {} was shed", o.id);
+            assert!(o.completion > o.arrival, "served task {} has no service time", o.id);
+        } else {
+            assert!(o.shed, "low-priority task {} should have been shed", o.id);
+            assert_eq!(o.completion, o.arrival, "shed outcome must carry zero service");
+            assert_eq!(o.infer_secs, 0.0);
+        }
+    }
+}
+
+/// `--shed length` picks the highest-predicted-length victim instead:
+/// with predicted lengths increasing in id, the cap-4 queue retains the
+/// four shortest predictions and sheds the rest — again with exactly
+/// one outcome per submitted id.
+#[test]
+fn overload_length_shed_drops_longest_predictions() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = step_latency();
+    let dev = DeviceProfile::edge_server();
+    let lanes = two_lane(f64::INFINITY); // no quarantine: routing stays put
+    let params = SchedParams {
+        batch_size: 32,
+        queue_cap: 4,
+        shed: ShedPolicy::Length,
+        ..Default::default()
+    };
+    let tasks: Vec<Task> =
+        (0..12u64).map(|i| mk_task(i, 0.0, 5.0, 10.0 + 5.0 * i as f64)).collect();
+
+    let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev, &params);
+    let report = run_engine(&mut backend, &mut *policy, &params, 12).expect("engine");
+
+    assert_eq!(report.outcomes.len(), 12);
+    assert_eq!(report.n_shed, 8);
+    for o in &report.outcomes {
+        assert_eq!(o.shed, o.id >= 4, "length shed must drop the longest predictions");
+    }
+}
+
+/// With the cap at zero (the default) nothing sheds and the report's
+/// shed counter stays zero — the knob off is the historical behaviour.
+#[test]
+fn zero_cap_never_sheds() {
+    let model = ModelEntry::stub("m", 0.05, 0.08);
+    let lat = step_latency();
+    let dev = DeviceProfile::edge_server();
+    let lanes = two_lane(60.0);
+    let params = SchedParams { batch_size: 4, ..Default::default() };
+    let tasks: Vec<Task> =
+        (0..30).map(|i| mk_task(i, 0.0, 2.0 + i as f64, 10.0)).collect();
+    let mut policy = PolicyKind::RtLm.build(&params, model.eta, &lanes);
+    let sim_lanes = resolve_lanes(&lanes, &model_table(&model), &lat, &dev).expect("resolve");
+    let mut backend = SimBackend::new(tasks, &lat, sim_lanes, &dev, &params);
+    let report = run_engine(&mut backend, &mut *policy, &params, 30).expect("engine");
+    assert_eq!(report.outcomes.len(), 30);
+    assert_eq!(report.n_shed, 0);
+    assert!(report.outcomes.iter().all(|o| !o.shed));
 }

@@ -12,7 +12,10 @@
 //! heterogeneous fleet on the modeled backend routing traffic per
 //! admission predicate, id-tagged timeout and execution-failure error
 //! replies, a client disconnecting before its reply never wedging the
-//! dispatcher, and the load generator the CI `tcp-load` gate runs.
+//! dispatcher, overload shedding (`--queue-cap`) answering every
+//! request with either a served reply or an id-tagged
+//! `{"error":"shed"}`, and the load generator the CI `tcp-load` gate
+//! runs — closed loop and open loop (`--rate`).
 
 use std::collections::{BTreeMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
@@ -21,7 +24,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
+use rtlm::config::{DeviceProfile, ModelEntry, SchedParams, ShedPolicy};
 use rtlm::executor::{
     modeled_factory, BatchExecutor, ExecReport, ExecutorFactory, InstantExecutor,
 };
@@ -395,6 +398,7 @@ fn loadgen_drives_concurrent_connections_clean() {
         concurrency: 16,
         reply_timeout: Duration::from_secs(30),
         connect_wait: Duration::from_secs(10),
+        rate: 0.0,
     };
     let mut report = loadgen::run(&addr.to_string(), &opts).expect("loadgen");
     assert_eq!(report.n_err, 0, "errors: {:?}", report.errors);
@@ -406,4 +410,89 @@ fn loadgen_drives_concurrent_connections_clean() {
     let total: usize = report.lane_tasks.values().sum();
     assert_eq!(total, 64, "per-lane counts cover every ok reply: {:?}", report.lane_tasks);
     assert!(report.lane_tasks.keys().all(|l| l == "gpu" || l == "cpu"));
+}
+
+// ---------------------------------------------------------------------------
+// overload admission control on the wire (--queue-cap / --shed)
+// ---------------------------------------------------------------------------
+
+/// A bounded queue behind depth-8 pipelining: the batch size exceeds
+/// the pipelined burst, so no dispatch can fire before the xi deadline
+/// and all eight requests land while the lane queue is capped at four.
+/// Identical prompts score identical uncertainty, so each later arrival
+/// carries a looser priority point — strictly lower UP priority — and
+/// the four newest requests shed themselves with id-tagged
+/// `{"error":"shed"}` replies while the four retained are served.
+/// Every request id is answered exactly once.
+#[test]
+fn overloaded_queue_sheds_with_id_tagged_replies() {
+    let params = SchedParams {
+        batch_size: 32, // > burst: the first pop is the xi-forced one
+        xi: 0.5,
+        queue_cap: 4,
+        shed: ShedPolicy::Priority,
+        ..Default::default()
+    };
+    let cfg =
+        TcpServerConfig { pipeline_depth: 8, ..test_config(params, Duration::from_secs(30)) };
+    let addr = start_server_cfg(instant_factory(), cfg);
+
+    let replies = roundtrip(addr, &["tell me about the history of art"; 8], 8);
+    let mut served = Vec::new();
+    let mut shed = Vec::new();
+    for reply in &replies {
+        let id = reply.need_f64("id").expect("every reply is id-tagged") as u64;
+        match reply.get("error") {
+            Json::Null => served.push(id),
+            err => {
+                assert_eq!(err.as_str(), Some("shed"), "unexpected error: {reply}");
+                shed.push(id);
+            }
+        }
+    }
+    let mut all: Vec<u64> = served.iter().chain(&shed).copied().collect();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), 8, "every request answered exactly once: {replies:?}");
+    assert_eq!(shed.len(), 4, "cap-4 queue must shed the 4-deep overflow: {replies:?}");
+    assert!(
+        served.iter().max().unwrap() < shed.iter().min().unwrap(),
+        "sheds must be the lowest-priority (latest) requests: served {served:?}, shed {shed:?}"
+    );
+}
+
+/// Open-loop load (`--rate`) far above the xi dispatch cadence into a
+/// cap-2 queue: the server must shed, the retained requests must still
+/// be served, and the tallies must cover the whole run — every one of
+/// the `n` requests gets exactly one reply, ok or shed, never silence.
+#[test]
+fn open_loop_overload_answers_every_request() {
+    let params = SchedParams {
+        batch_size: 32,
+        xi: 0.1,
+        queue_cap: 2,
+        shed: ShedPolicy::Priority,
+        ..Default::default()
+    };
+    let cfg =
+        TcpServerConfig { pipeline_depth: 8, ..test_config(params, Duration::from_secs(30)) };
+    let addr = start_server_cfg(instant_factory(), cfg);
+
+    let opts = LoadgenOptions {
+        n: 40,
+        concurrency: 8,
+        reply_timeout: Duration::from_secs(30),
+        connect_wait: Duration::from_secs(10),
+        rate: 500.0,
+    };
+    let report = loadgen::run(&addr.to_string(), &opts).expect("loadgen");
+    assert_eq!(report.n_err, 0, "errors: {:?}", report.errors);
+    assert_eq!(report.n_ok + report.n_shed, 40, "every request answered exactly once");
+    assert!(report.n_shed > 0, "cap-2 queue under 500 req/s offered load must shed");
+    assert!(report.n_ok > 0, "retained requests must still be served");
+    assert_eq!(
+        report.response_ms.len(),
+        report.n_ok,
+        "latency samples cover exactly the ok replies"
+    );
 }

@@ -6,7 +6,9 @@
 use std::collections::BTreeMap;
 
 use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
-use rtlm::scheduler::{up_priority, Fifo, LaneId, LaneSet, Policy, PolicyKind, Task, UaSched};
+use rtlm::scheduler::{
+    up_priority, Fifo, LaneId, LaneSet, Policy, PolicyKind, Task, UaSched, WHOLE_BATCH,
+};
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::util::json::{obj, Json};
 use rtlm::util::rng::Pcg64;
@@ -71,6 +73,11 @@ const PUBLIC_FLAGS: &[&str] = &[
     "--expect-nodes",
     "--heartbeat-s",
     "--allow-server-errors",
+    "--queue-cap",
+    "--shed",
+    "--rate",
+    "--min-shed",
+    "--max-shed-rate",
 ];
 
 #[test]
@@ -186,11 +193,11 @@ fn fifo_pops_in_arrival_order() {
     fifo.push(task(10, 0.0, 9.0, 30.0));
     fifo.push(task(11, 1.0, 2.0, 80.0));
     fifo.push(task(12, 2.0, 5.0, 10.0));
-    let b = fifo.pop_batch(LaneId::GPU, 2.0, false).expect("full batch");
+    let b = fifo.pop(LaneId::GPU, 2.0, false, WHOLE_BATCH).expect("full batch");
     assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![10, 11]);
     assert_eq!(fifo.queue_len(), 1);
     // CPU lane is never used by baselines
-    assert!(fifo.pop_batch(LaneId::CPU, 2.0, true).is_none());
+    assert!(fifo.pop(LaneId::CPU, 2.0, true, WHOLE_BATCH).is_none());
 }
 
 #[test]
@@ -201,7 +208,7 @@ fn uasched_prefers_low_uncertainty_at_equal_slack() {
     sched.push(task(1, 0.0, 5.0, 90.0));
     sched.push(task(2, 0.0, 5.0, 10.0));
     sched.push(task(3, 0.0, 5.0, 60.0));
-    let b = sched.pop_batch(LaneId::GPU, 0.0, true).expect("batch");
+    let b = sched.pop(LaneId::GPU, 0.0, true, WHOLE_BATCH).expect("batch");
     assert_eq!(b.tasks.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 3]);
 }
 
@@ -218,7 +225,7 @@ fn uasched_offloads_above_tau_and_conserves_tasks() {
     while sched.queue_len() > 0 {
         now += 1.0;
         for lane in [LaneId::GPU, LaneId::CPU] {
-            if let Some(b) = sched.pop_batch(lane, now, true) {
+            if let Some(b) = sched.pop(lane, now, true, WHOLE_BATCH) {
                 for t in &b.tasks {
                     assert!(seen.insert(t.id), "task {} dispatched twice", t.id);
                     match lane {

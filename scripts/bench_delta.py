@@ -12,11 +12,15 @@ relative delta (B vs A), so the biggest hot-path movement tops the
 table; benchmarks present in only one snapshot (e.g. PJRT benches that
 need artifacts) are listed separately.
 
-A second per-lane batch table is rendered from the ``batches`` map.
-Older snapshots are handled gracefully: a missing ``batches`` key skips
-the table, and legacy two-field reports carrying flat
-``n_batches_gpu``/``n_batches_cpu`` counts are rendered as a gpu/cpu
-row.
+A second per-lane batch table is rendered from the ``batches`` map, and
+a third table from the ``pop_depth_sweep`` map (``{depth: {"indexed":
+secs, "keyed": secs}}``) — per-pop cost of the indexed UP queue vs the
+historical keyed full re-sort at queue depths 10^3..10^6, with the
+keyed/indexed speedup and the indexed series' growth per 10x depth (the
+sub-linearity evidence). Older snapshots are handled gracefully: a
+missing ``batches``/``pop_depth_sweep`` key skips its table, and legacy
+two-field reports carrying flat ``n_batches_gpu``/``n_batches_cpu``
+counts are rendered as a gpu/cpu row.
 
 Exit code is always 0 — this is a visibility tool for the CI job
 summary, not a gate; the gating happens in the test and load steps.
@@ -77,6 +81,45 @@ def print_lane_table(a: dict, b: dict, la: str, lb: str) -> None:
             )
 
 
+def depth_sweep(snapshot: dict) -> dict:
+    """``{depth: (indexed_secs, keyed_secs)}`` from ``pop_depth_sweep``."""
+    sweep = snapshot.get("pop_depth_sweep")
+    if not isinstance(sweep, dict):
+        return {}
+    out = {}
+    for depth, series in sweep.items():
+        try:
+            out[int(depth)] = (float(series["indexed"]), float(series["keyed"]))
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def print_depth_sweep(a: dict, b: dict, la: str, lb: str) -> None:
+    sa, sb = depth_sweep(a), depth_sweep(b)
+    if not sa and not sb:
+        return
+    print("\n### Pop cost vs queue depth (indexed UpQueue vs keyed full-sort)\n")
+    print(
+        f"| depth | indexed {la} | indexed {lb} | keyed {la} | keyed {lb} "
+        f"| keyed/indexed ({lb}) | indexed growth |"
+    )
+    print("|---:|---:|---:|---:|---:|---:|---:|")
+    fmt = lambda v: "-" if v is None else fmt_secs(v)
+    prev = None
+    for depth in sorted(set(sa) | set(sb)):
+        ia, ka = sa.get(depth, (None, None))
+        ib, kb = sb.get(depth, (None, None))
+        speedup = "-" if not ib or kb is None else f"{kb / ib:.0f}x"
+        growth = "-" if not prev or ib is None else f"{ib / prev:.2f}x per 10x depth"
+        print(
+            f"| {depth} | {fmt(ia)} | {fmt(ib)} | {fmt(ka)} | {fmt(kb)} "
+            f"| {speedup} | {growth} |"
+        )
+        if ib is not None:
+            prev = ib
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("snapshot_a")
@@ -132,6 +175,7 @@ def main() -> int:
         print(f"\nonly in {lb}: " + ", ".join(only_b))
 
     print_lane_table(a, b, la, lb)
+    print_depth_sweep(a, b, la, lb)
     return 0
 
 

@@ -17,10 +17,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use rtlm::config::{DeviceProfile, Manifest, ModelEntry, SchedParams};
+use rtlm::runtime::bundle::{Bundle, Tensor};
 use rtlm::runtime::ArtifactStore;
 use rtlm::scheduler::{up_priority, LaneId, LaneSet, PolicyKind, Task, UpQueue, WHOLE_BATCH};
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
-use rtlm::uncertainty::{rules, Estimator};
+use rtlm::textgen::{Lexicon, ScoreScratch};
+use rtlm::uncertainty::{rules, Estimator, Regressor};
 use rtlm::util::json::{obj, Json};
 use rtlm::util::rng::Pcg64;
 
@@ -86,6 +88,41 @@ fn mk_task(rng: &mut Pcg64, id: u64) -> Task {
     }
 }
 
+/// Artifact-free estimator for the scoring sweep: a lexicon that
+/// exercises every rule list plus a small regressor, so the sweep (and
+/// its legacy-vs-fast speedup) is measured on every CI run, not just
+/// artifact builds.
+fn stub_estimator() -> Estimator {
+    let json = r#"{
+        "vocab": ["<pad>", "<bos>", "<eos>", "<unk>"],
+        "pos_lexicon": {
+            "in": "ADP", "with": "ADP", "of": "ADP", "on": "ADP",
+            "saw": "VERB", "is": "VERB", "do": "VERB", "differ": "VERB",
+            "the": "DET", "a": "DET", "and": "CONJ", "what": "WH",
+            "park": "NOUN", "history": "NOUN", "time": "NOUN"
+        },
+        "suffix_rules": [["ly", "ADV"], ["ing", "VERB"], ["tion", "NOUN"], ["ous", "ADJ"]],
+        "homonyms": {"bank": 3, "bats": 2, "scale": 4},
+        "nv_ambiguous": ["saw", "duck", "watch"],
+        "vague_topics": ["history", "art", "poverty"],
+        "vague_phrases": [["tell", "me", "about"], ["what", "do", "you", "think", "about"]],
+        "open_markers": ["causes", "consequences", "best"],
+        "multipart_markers": ["both", "also"],
+        "relativizers": ["that", "which", "who"],
+        "wh_words": ["what", "why", "how", "who"],
+        "vague_adjectives": ["general", "various", "different"],
+        "open_wh_starters": ["what", "why", "how"]
+    }"#;
+    let lex = Lexicon::from_json(&Json::parse(json).expect("lexicon json")).expect("lexicon");
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32("w0", vec![7, 1], vec![0.2, 0.4, 0.3, 0.5, 0.6, 0.35, 24.0]),
+        Tensor::f32("b0", vec![1], vec![4.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 64.0];
+    let reg = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(Arc::new(lex), Arc::new(reg), 64, 4.0, 96.0)
+}
+
 /// Stand-in model entry for the artifact-free path.
 fn synthetic_model() -> ModelEntry {
     ModelEntry::stub("synthetic", 0.05, 0.08)
@@ -146,6 +183,50 @@ fn main() {
         h.bench("estimator score (features+regressor)", 2000, || {
             std::hint::black_box(estimator.score(text).unwrap());
         });
+    }
+
+    // --- scoring sweep: legacy vs interned fast path (always runs) ----------
+    // Short/median/long prompts through the same estimator: the legacy
+    // allocating pipeline vs the single-pass scratch fast path. Medians
+    // land in the `score_sweep` snapshot map, which
+    // `scripts/bench_delta.py` renders as a speedup table.
+    let sweep_estimator = match &store {
+        Some(store) => {
+            let m = &store.manifest;
+            Estimator::new(
+                store.lexicon.clone(),
+                store.regressor.clone(),
+                m.max_input_len,
+                m.min_output_len as f64,
+                m.max_output_len as f64,
+            )
+        }
+        None => stub_estimator(),
+    };
+    let long_text = "Tell me about the history of art, and what do you think about         the causes and consequences of poverty in developing countries? How do         general topics, various ideas, and different questions differ in theory,         in practice, and in application? What is the best way to think about both?";
+    let mut score_sweep: Vec<(String, usize, f64, f64)> = Vec::new();
+    let mut scratch = ScoreScratch::new();
+    for (label, prompt) in [("short", "What time is it?"), ("median", text), ("long", long_text)] {
+        // sanity gate: never time a fast path that diverged
+        let (legacy_u, legacy_f) =
+            sweep_estimator.score_with_features(prompt).expect("legacy score");
+        let (fast_u, fast_f) = sweep_estimator
+            .score_with_features_scratch(prompt, &mut scratch)
+            .expect("fast score");
+        assert_eq!(legacy_u.to_bits(), fast_u.to_bits(), "fast path diverged on '{label}'");
+        assert_eq!(legacy_f.map(f64::to_bits), fast_f.map(f64::to_bits));
+        let n_tokens = scratch.token_count();
+
+        let iters = if n_tokens > 30 { 1000 } else { 2000 };
+        h.bench(&format!("score legacy ({label})"), iters, || {
+            std::hint::black_box(sweep_estimator.score(prompt).unwrap());
+        });
+        let legacy = h.results.last().unwrap().1;
+        h.bench(&format!("score fast ({label})"), iters, || {
+            std::hint::black_box(sweep_estimator.score_scratch(prompt, &mut scratch).unwrap());
+        });
+        let fast = h.results.last().unwrap().1;
+        score_sweep.push((label.to_string(), n_tokens, legacy, fast));
     }
 
     // --- pure scheduling logic (always runs) --------------------------------
@@ -367,6 +448,21 @@ fn main() {
             )
         })
         .collect();
+    // legacy-vs-fast scoring medians keyed by prompt label, with the
+    // token count so the delta table can sort by prompt length
+    let score_entries: Vec<(String, Json)> = score_sweep
+        .iter()
+        .map(|(label, tokens, legacy, fast)| {
+            (
+                label.clone(),
+                obj(vec![
+                    ("tokens", Json::Num(*tokens as f64)),
+                    ("legacy", Json::Num(*legacy)),
+                    ("fast", Json::Num(*fast)),
+                ]),
+            )
+        })
+        .collect();
     let snapshot = obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("unit", Json::Str("seconds_per_iter".into())),
@@ -383,6 +479,10 @@ fn main() {
         (
             "pop_depth_sweep",
             Json::Obj(sweep_entries.into_iter().collect()),
+        ),
+        (
+            "score_sweep",
+            Json::Obj(score_entries.into_iter().collect()),
         ),
     ]);
     std::fs::write(&out_path, format!("{snapshot}\n")).expect("write bench snapshot");

@@ -65,7 +65,7 @@ fn main() -> Result<()> {
     let chosen = subsets::select(&items, &scores, variance, n, seed);
     let trace = ArrivalTrace::poisson_fixed(n, beta, seed);
     let model = m.model(&model_name)?.clone();
-    let factory = TaskFactory::new(estimator, 2.0);
+    let mut factory = TaskFactory::new(estimator, 2.0);
 
     // offline decisions (Algorithm 1): C_f from calibration, tau from train
     // scores. Real mode uses k=0.98 (not the paper's 0.9): both lanes share

@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         ctx.estimator.score(&crafted.text)?
     );
 
-    let factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
+    let mut factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
     let base: Vec<_> = items.into_iter().take(ctx.n_tasks).collect();
 
     let mut table = Table::new(

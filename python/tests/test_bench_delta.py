@@ -1,0 +1,88 @@
+"""scripts/bench_delta.py: snapshot diffing, table rendering, and the
+score_sweep speedup table, exercised end-to-end through a subprocess
+with JSON fixtures (the same way the CI bench-delta job invokes it)."""
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "bench_delta.py")
+
+
+def run_delta(tmp_path, a, b, labels=("A", "B")):
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    pa.write_text(json.dumps(a))
+    pb.write_text(json.dumps(b))
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, str(pa), str(pb), "--labels", *labels],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    return proc.stdout
+
+
+def snapshot(results=None, **extra):
+    base = {
+        "bench": "hotpath",
+        "unit": "seconds_per_iter",
+        "artifacts": False,
+        "pjrt": False,
+        "results": results or {},
+    }
+    base.update(extra)
+    return base
+
+
+def test_common_benchmarks_sorted_by_delta(tmp_path):
+    a = snapshot({"fast": 1e-6, "slow": 1e-3})
+    b = snapshot({"fast": 2e-6, "slow": 1.05e-3})
+    out = run_delta(tmp_path, a, b)
+    # fast moved +100%, slow +5% -> fast tops the table
+    assert out.index("| fast |") < out.index("| slow |")
+    assert "+100.0%" in out
+
+
+def test_score_sweep_renders_speedup_table(tmp_path):
+    sweep = {
+        "short": {"tokens": 5, "legacy": 2e-6, "fast": 4e-7},
+        "median": {"tokens": 13, "legacy": 5e-6, "fast": 1e-6},
+        "long": {"tokens": 60, "legacy": 2e-5, "fast": 4e-6},
+    }
+    a = snapshot({"score legacy (short)": 2e-6})
+    b = snapshot({"score legacy (short)": 2e-6}, score_sweep=sweep)
+    out = run_delta(tmp_path, a, b, labels=("base", "pr"))
+    assert "Admission scoring cost" in out
+    # rows sorted by token count: short, median, long
+    assert out.index("| short |") < out.index("| median |") < out.index("| long |")
+    # legacy/fast = 5x for every row here
+    assert "5.0x" in out
+    # scores/sec of the fast path: 1 / 4e-7 = 2,500,000
+    assert "2,500,000" in out
+    # the A snapshot has no sweep: its columns render as "-"
+    assert "| - |" in out
+
+
+def test_score_sweep_absent_skips_table(tmp_path):
+    out = run_delta(tmp_path, snapshot({"x": 1.0}), snapshot({"x": 1.0}))
+    assert "Admission scoring cost" not in out
+
+
+def test_score_sweep_malformed_entries_skipped(tmp_path):
+    sweep = {
+        "good": {"tokens": 7, "legacy": 1e-6, "fast": 5e-7},
+        "bad": {"tokens": "??"},
+        "worse": None,
+    }
+    out = run_delta(tmp_path, snapshot(), snapshot(score_sweep=sweep))
+    assert "| good |" in out
+    assert "| bad |" not in out
+    assert "| worse |" not in out
+
+
+def test_depth_sweep_still_renders(tmp_path):
+    sweep = {"1000": {"indexed": 1e-6, "keyed": 1e-3}}
+    out = run_delta(tmp_path, snapshot(), snapshot(pop_depth_sweep=sweep))
+    assert "Pop cost vs queue depth" in out
+    assert "1000x" in out

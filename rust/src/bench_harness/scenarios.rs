@@ -201,7 +201,7 @@ impl ExperimentCtx {
         let step = ArrivalTrace::sweep_step_for(self.n_tasks, lo, hi);
         let trace =
             ArrivalTrace::poisson_sweep_scaled(self.n_tasks, lo, hi, step, seed ^ 0xA11);
-        let factory = TaskFactory::new(self.estimator.clone(), 2.0);
+        let mut factory = TaskFactory::new(self.estimator.clone(), 2.0);
         factory.build_all(&chosen, &trace, model, false)
     }
 
@@ -981,7 +981,7 @@ fn fig13(ctx: &ExperimentCtx) -> Result<()> {
 fn fig14(ctx: &ExperimentCtx) -> Result<()> {
     let dev = DeviceProfile::edge_server();
     let model = ctx.model("dialogpt")?;
-    let factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
+    let mut factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
     let items = ctx.all_test_items();
     let scores: Vec<f64> = items
         .iter()
@@ -1068,9 +1068,10 @@ fn table7(ctx: &ExperimentCtx) -> Result<()> {
         // prioritisation: feature extraction + regressor, measured on text
         let items = ctx.all_test_items();
         let texts: Vec<&str> = items.iter().take(400).map(|i| i.text.as_str()).collect();
+        let mut scratch = crate::textgen::ScoreScratch::new();
         let t0 = Instant::now();
         for text in &texts {
-            let _ = ctx.estimator.score(text)?;
+            let _ = ctx.estimator.score_scratch(text, &mut scratch)?;
         }
         let prior_us = t0.elapsed().as_secs_f64() / texts.len() as f64 * 1e6;
 

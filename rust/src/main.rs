@@ -395,7 +395,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let chosen = subsets::select(&items, &scores, variance, n, seed);
     let trace = ArrivalTrace::poisson_fixed(n, beta, seed);
     let model = store.manifest.model(&model_name)?.clone();
-    let factory = TaskFactory::new(est, 2.0);
+    let mut factory = TaskFactory::new(est, 2.0);
     let mut tasks = factory.build_all(&chosen, &trace, &model, false)?;
     rtlm::server::engine::encode_prompts(&store, &mut tasks);
 

@@ -202,7 +202,11 @@ fn connect_with_retry(addr: &str, requests: usize, report: &mut LoadReport) -> O
     let mut attempt = 0;
     loop {
         match TcpStream::connect(addr) {
-            Ok(s) => return Some(s),
+            Ok(s) => {
+                // measured request/reply latency must not include Nagle
+                let _ = s.set_nodelay(true);
+                return Some(s);
+            }
             Err(_) if attempt < 20 => {
                 attempt += 1;
                 thread::sleep(Duration::from_millis(25 * attempt));

@@ -78,6 +78,8 @@ pub struct NodeInfo {
 pub fn dial_node(addr: &str, timeout: Duration) -> Result<NodeInfo> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("dialing node {addr}"))?;
+    // small framed request/reply hops: Nagle only adds latency here
+    stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(timeout))?;
     let mut writer = stream.try_clone()?;
     wire::write_magic(&mut writer)?;
@@ -161,6 +163,7 @@ pub fn gather_nodes(
 /// peer is not a framed registrant, `Ok(Some(node))` after a
 /// successful dial-back, `Err` on a malformed or unreachable one.
 fn accept_registration(stream: TcpStream, timeout: Duration) -> Result<Option<NodeInfo>> {
+    let _ = stream.set_nodelay(true);
     stream.set_read_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone().context("cloning registration")?);
     if !wire::is_framed_peer(&mut reader)? {
@@ -289,6 +292,8 @@ impl RemoteExecutor {
     ) -> Result<RemoteExecutor> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("lane '{}': dialing node '{node}' at {addr}", spec.name))?;
+        // per-task submit frames must not sit in a Nagle buffer
+        stream.set_nodelay(true)?;
         let mut writer = stream.try_clone()?;
         wire::write_magic(&mut writer)?;
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -457,6 +462,7 @@ fn monitor_node(
 
     let control = (|| -> Result<(TcpStream, BufReader<TcpStream>)> {
         let stream = TcpStream::connect(&node.addr)?;
+        stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(interval.max(Duration::from_millis(50))))?;
         let mut writer = stream.try_clone()?;
         wire::write_magic(&mut writer)?;

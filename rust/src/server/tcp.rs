@@ -52,7 +52,7 @@ use crate::executor::ExecutorFactory;
 use crate::runtime::ArtifactStore;
 use crate::scheduler::{LaneKind, LaneSet, Policy, Task};
 use crate::sim::results::TaskOutcome;
-use crate::textgen::Vocab;
+use crate::textgen::{ScoreScratch, Vocab};
 use crate::uncertainty::Estimator;
 use crate::util::json::{obj, Json};
 
@@ -193,6 +193,9 @@ pub fn serve_tcp_with(
         let arrivals = arrivals.clone();
         thread::spawn(move || {
             for stream in listener.incoming().flatten() {
+                // per-line request/reply traffic: never let Nagle hold
+                // a reply back behind a ~40ms delayed-ACK window
+                let _ = stream.set_nodelay(true);
                 let cfg = cfg.clone();
                 let arrivals = arrivals.clone();
                 let pending = pending.clone();
@@ -350,6 +353,7 @@ fn register_with_router(
     };
     let stream = TcpStream::connect(router)
         .with_context(|| format!("registering with router {router}"))?;
+    stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut writer = stream.try_clone()?;
     wire::write_magic(&mut writer)?;
@@ -531,8 +535,17 @@ fn handle_framed_conn(
 }
 
 /// Score one request line into a task stamped on the engine clock.
-fn build_task(text: String, id: u64, cfg: &TcpServerConfig, now: f64) -> Result<Task> {
-    let (u, feats) = cfg.estimator.score_with_features(&text)?;
+/// Scoring runs through the interned fast path against the caller's
+/// per-connection scratch, so a connection's steady-state request flow
+/// does not allocate in feature extraction.
+fn build_task(
+    text: String,
+    id: u64,
+    cfg: &TcpServerConfig,
+    now: f64,
+    scratch: &mut ScoreScratch,
+) -> Result<Task> {
+    let (u, feats) = cfg.estimator.score_with_features_scratch(&text, scratch)?;
     let input_len = feats[feats.len() - 1] as usize;
     let mut prompt = cfg.vocab.encode(&text, Some(cfg.max_input_len));
     if prompt.is_empty() {
@@ -567,13 +580,16 @@ fn handle_conn(
     }
     let peer = stream.peer_addr()?;
     let mut writer = stream;
+    // one scoring scratch per connection: request N reuses the buffers
+    // request N-1 grew
+    let mut scratch = ScoreScratch::new();
     for line in reader.lines() {
         let text = line?;
         if text.trim().is_empty() {
             continue;
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
-        let task = build_task(text, id, cfg, arrivals.now())?;
+        let task = build_task(text, id, cfg, arrivals.now(), &mut scratch)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         // register the reply slot *before* injecting: the completion
         // callback may fire before this thread runs again
@@ -725,13 +741,14 @@ fn handle_conn_pipelined(
     });
 
     let result = (|| -> Result<()> {
+        let mut scratch = ScoreScratch::new();
         for line in reader.lines() {
             let text = line?;
             if text.trim().is_empty() {
                 continue;
             }
             let id = next_id.fetch_add(1, Ordering::Relaxed);
-            let task = build_task(text, id, cfg, arrivals.now())?;
+            let task = build_task(text, id, cfg, arrivals.now(), &mut scratch)?;
             {
                 let mut state = window.state.lock().unwrap();
                 while state.outstanding.len() >= k && !state.writer_gone {

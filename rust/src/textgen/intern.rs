@@ -1,0 +1,403 @@
+//! Interned-lexicon scoring table: the compiled form of [`Lexicon`]
+//! that the single-pass RULEGEN fast path scores against.
+//!
+//! The legacy scorers in [`crate::uncertainty::rules`] re-hash every
+//! token against ~10 separate `String`-keyed sets (SipHash each time)
+//! and re-scan the suffix rules with an O(len) `chars().count()` per
+//! rule. This module folds all of that into **one** table built once at
+//! [`Lexicon`] load:
+//!
+//! - every word of every rule list is interned into a single arena and
+//!   indexed by an open-addressed FNV-1a table, so the hot loop does one
+//!   non-cryptographic hash + one probe per token;
+//! - each interned word carries a [`WordInfo`]: its PoS tag (when the
+//!   PoS lexicon defines one), a class-flag bitset covering every rule
+//!   list membership, and the homonym sense count;
+//! - multi-word phrases (`vague_phrases` and `open_score`'s hardcoded
+//!   "do you think") are compiled to interned word-id sequences, so
+//!   phrase containment is integer-slice comparison instead of
+//!   per-window `String` equality;
+//! - suffix rules are precompiled with their byte form and char count,
+//!   so the fallback tagger compares byte suffixes and counts the
+//!   token's chars at most once.
+//!
+//! The table is a pure acceleration structure: it holds exactly the
+//! same facts as the `Lexicon`'s sets/maps, and the fast path that
+//! reads it ([`crate::uncertainty::fastpath`]) is asserted bit-identical
+//! to the legacy scorers by the golden and property suites.
+
+use std::collections::BTreeMap;
+
+use super::lexicon::{Lexicon, Tag};
+
+/// Word id of a token that is not in the table (matches no phrase and
+/// carries no flags). Real ids are indices into the entry list, which
+/// is always far smaller than `u32::MAX`.
+pub const NO_WORD: u32 = u32::MAX;
+
+/// Set when the PoS lexicon defines a tag for this word (`tag` field is
+/// meaningful; otherwise tagging falls through to the suffix rules).
+pub const FLAG_POS: u16 = 1 << 0;
+/// Member of `nv_ambiguous` (syntactic-ambiguity rule).
+pub const FLAG_NV_AMBIG: u16 = 1 << 1;
+/// Key of `homonyms` (`senses` field holds the sense count).
+pub const FLAG_HOMONYM: u16 = 1 << 2;
+/// Member of `vague_topics`.
+pub const FLAG_VAGUE_TOPIC: u16 = 1 << 3;
+/// Member of `vague_adjectives`.
+pub const FLAG_VAGUE_ADJ: u16 = 1 << 4;
+/// Member of `open_markers`.
+pub const FLAG_OPEN_MARKER: u16 = 1 << 5;
+/// Member of `multipart_markers`.
+pub const FLAG_MULTIPART: u16 = 1 << 6;
+/// Member of `relativizers`.
+pub const FLAG_RELATIVIZER: u16 = 1 << 7;
+/// Member of `wh_words`.
+pub const FLAG_WH: u16 = 1 << 8;
+/// Member of `open_wh_starters`.
+pub const FLAG_OPEN_WH: u16 = 1 << 9;
+/// Appears in some compiled phrase (vague phrase or "do you think").
+pub const FLAG_PHRASE: u16 = 1 << 10;
+/// The literal word "of" (`open_score`'s `what ... of` pattern).
+pub const FLAG_OF: u16 = 1 << 11;
+/// The literal word "and" (`multipart_score`'s conjunction count).
+pub const FLAG_AND: u16 = 1 << 12;
+
+/// Everything the single-pass scorer needs to know about one interned
+/// word: class-membership flags, the PoS tag (valid when [`FLAG_POS`]
+/// is set), and the homonym sense count (valid when [`FLAG_HOMONYM`]
+/// is set).
+#[derive(Clone, Copy, Debug)]
+pub struct WordInfo {
+    /// Class-membership bitset (`FLAG_*`).
+    pub flags: u16,
+    /// PoS-lexicon tag; meaningful only when `flags` has [`FLAG_POS`].
+    pub tag: Tag,
+    /// Homonym sense count; meaningful only when `flags` has
+    /// [`FLAG_HOMONYM`]. Kept `u32` so the fast path computes the same
+    /// `senses - 1` arithmetic as the legacy scorer.
+    pub senses: u32,
+}
+
+/// One suffix rule, precompiled: byte form for `ends_with`, char count
+/// for the legacy `chars().count() > suffix_chars + 1` length guard.
+#[derive(Debug)]
+struct CompiledSuffix {
+    bytes: Box<[u8]>,
+    chars: usize,
+    tag: Tag,
+}
+
+#[derive(Debug)]
+struct Entry {
+    /// Byte span of the word in the arena.
+    start: u32,
+    end: u32,
+    info: WordInfo,
+}
+
+/// 64-bit FNV-1a over a byte slice — the table's non-cryptographic
+/// hasher (`anyhow` stays the crate's sole dependency).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The compiled scoring table: one unified `word -> WordInfo` map plus
+/// interned phrase-id sequences and precompiled suffix rules. Built
+/// once by [`Lexicon::from_json`]; read-only afterwards (shared freely
+/// across threads behind the `Arc<Lexicon>`).
+#[derive(Debug, Default)]
+pub struct ScoreTable {
+    /// All interned words, concatenated.
+    arena: String,
+    /// Interned words in id order.
+    entries: Vec<Entry>,
+    /// Open-addressed index: `0` = empty, else entry id + 1. Length is
+    /// a power of two with load factor <= 0.5, so probes terminate.
+    slots: Vec<u32>,
+    /// `vague_phrases` as interned word-id sequences, in lexicon order.
+    vague_phrases: Vec<Box<[u32]>>,
+    /// `open_score`'s hardcoded "do you think" as interned word ids.
+    think: Box<[u32]>,
+    /// Suffix rules in lexicon order.
+    suffixes: Vec<CompiledSuffix>,
+}
+
+impl ScoreTable {
+    /// Compile a lexicon's word lists into the unified table. Pure: the
+    /// table holds the same facts the lexicon's sets/maps do.
+    pub fn compile(lex: &Lexicon) -> ScoreTable {
+        // Deterministic build: merge every list into one sorted
+        // word -> WordInfo map (iteration over the HashSets would
+        // scramble ids run to run for no benefit).
+        let mut words: BTreeMap<&str, WordInfo> = BTreeMap::new();
+        let merge = |words: &mut BTreeMap<&str, WordInfo>, word, flags: u16| {
+            let info = words
+                .entry(word)
+                .or_insert(WordInfo { flags: 0, tag: Tag::Other, senses: 0 });
+            info.flags |= flags;
+        };
+        for (word, tag) in &lex.pos_lexicon {
+            let info = words
+                .entry(word)
+                .or_insert(WordInfo { flags: 0, tag: Tag::Other, senses: 0 });
+            info.flags |= FLAG_POS;
+            info.tag = *tag;
+        }
+        for word in &lex.nv_ambiguous {
+            merge(&mut words, word.as_str(), FLAG_NV_AMBIG);
+        }
+        for (word, senses) in &lex.homonyms {
+            let info = words
+                .entry(word)
+                .or_insert(WordInfo { flags: 0, tag: Tag::Other, senses: 0 });
+            info.flags |= FLAG_HOMONYM;
+            info.senses = *senses;
+        }
+        for word in &lex.vague_topics {
+            merge(&mut words, word.as_str(), FLAG_VAGUE_TOPIC);
+        }
+        for word in &lex.vague_adjectives {
+            merge(&mut words, word.as_str(), FLAG_VAGUE_ADJ);
+        }
+        for word in &lex.open_markers {
+            merge(&mut words, word.as_str(), FLAG_OPEN_MARKER);
+        }
+        for word in &lex.multipart_markers {
+            merge(&mut words, word.as_str(), FLAG_MULTIPART);
+        }
+        for word in &lex.relativizers {
+            merge(&mut words, word.as_str(), FLAG_RELATIVIZER);
+        }
+        for word in &lex.wh_words {
+            merge(&mut words, word.as_str(), FLAG_WH);
+        }
+        for word in &lex.open_wh_starters {
+            merge(&mut words, word.as_str(), FLAG_OPEN_WH);
+        }
+        merge(&mut words, "of", FLAG_OF);
+        merge(&mut words, "and", FLAG_AND);
+        for phrase in &lex.vague_phrases {
+            for word in phrase {
+                merge(&mut words, word.as_str(), FLAG_PHRASE);
+            }
+        }
+        for word in THINK_PHRASE {
+            merge(&mut words, word, FLAG_PHRASE);
+        }
+
+        // Freeze: arena + entries in sorted-word order, then the
+        // open-addressed index at load factor <= 0.5.
+        let mut arena = String::new();
+        let mut entries = Vec::with_capacity(words.len());
+        for (word, info) in &words {
+            let start = arena.len() as u32;
+            arena.push_str(word);
+            entries.push(Entry { start, end: arena.len() as u32, info: *info });
+        }
+        let cap = (entries.len() * 2).next_power_of_two().max(4);
+        let mut slots = vec![0u32; cap];
+        for (id, entry) in entries.iter().enumerate() {
+            let word = &arena.as_bytes()[entry.start as usize..entry.end as usize];
+            let mut idx = fnv1a(word) as usize & (cap - 1);
+            while slots[idx] != 0 {
+                idx = (idx + 1) & (cap - 1);
+            }
+            slots[idx] = id as u32 + 1;
+        }
+
+        let mut table = ScoreTable {
+            arena,
+            entries,
+            slots,
+            vague_phrases: Vec::new(),
+            think: Box::new([]),
+            suffixes: lex
+                .suffix_rules
+                .iter()
+                .map(|(suffix, tag)| CompiledSuffix {
+                    bytes: suffix.as_bytes().into(),
+                    chars: suffix.chars().count(),
+                    tag: *tag,
+                })
+                .collect(),
+        };
+        table.vague_phrases = lex
+            .vague_phrases
+            .iter()
+            .map(|phrase| {
+                phrase
+                    .iter()
+                    .map(|w| table.lookup(w.as_bytes()).map(|(id, _)| id).unwrap_or(NO_WORD))
+                    .collect()
+            })
+            .collect();
+        table.think = THINK_PHRASE
+            .iter()
+            .map(|w| table.lookup(w.as_bytes()).map(|(id, _)| id).unwrap_or(NO_WORD))
+            .collect();
+        table
+    }
+
+    /// One-probe lookup of a (lowercased) token: its interned word id
+    /// and [`WordInfo`], or `None` when the word is in no rule list.
+    #[inline]
+    pub fn lookup(&self, word: &[u8]) -> Option<(u32, WordInfo)> {
+        let mask = self.slots.len() - 1;
+        let mut idx = fnv1a(word) as usize & mask;
+        loop {
+            let slot = self.slots[idx];
+            if slot == 0 {
+                return None;
+            }
+            let entry = &self.entries[(slot - 1) as usize];
+            if &self.arena.as_bytes()[entry.start as usize..entry.end as usize] == word {
+                return Some((slot - 1, entry.info));
+            }
+            idx = (idx + 1) & mask;
+        }
+    }
+
+    /// Fallback tag of a token the PoS lexicon does not cover: first
+    /// suffix rule whose byte suffix matches and whose length guard
+    /// holds (the legacy `chars().count() > suffix_chars + 1`), else
+    /// `NOUN`. The token's char count is computed at most once.
+    #[inline]
+    pub fn suffix_tag(&self, token: &[u8]) -> Tag {
+        let mut chars = usize::MAX; // computed lazily on first byte match
+        for rule in &self.suffixes {
+            if token.ends_with(&rule.bytes) {
+                if chars == usize::MAX {
+                    chars = token.iter().filter(|&&b| (b & 0xC0) != 0x80).count();
+                }
+                if chars > rule.chars + 1 {
+                    return rule.tag;
+                }
+            }
+        }
+        Tag::Noun
+    }
+
+    /// The compiled `vague_phrases`, as interned word-id sequences in
+    /// lexicon order.
+    #[inline]
+    pub fn vague_phrases(&self) -> &[Box<[u32]>] {
+        &self.vague_phrases
+    }
+
+    /// The compiled "do you think" phrase (interned word ids).
+    #[inline]
+    pub fn think_phrase(&self) -> &[u32] {
+        &self.think
+    }
+
+    /// Number of interned words (diagnostics / tests).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no word list contributed any word.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The open-endedness scorer's hardcoded phrase (see
+/// [`crate::uncertainty::rules::open_score`]).
+pub const THINK_PHRASE: &[&str] = &["do", "you", "think"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn rich_lexicon() -> Lexicon {
+        let json = r#"{
+            "vocab": ["<pad>", "<bos>", "<eos>", "<unk>"],
+            "pos_lexicon": {"in": "ADP", "runs": "VERB", "happily": "ADV", "and": "CONJ"},
+            "suffix_rules": [["ly", "ADV"], ["ing", "VERB"], ["tion", "NOUN"]],
+            "homonyms": {"bank": 3, "scale": 4},
+            "nv_ambiguous": ["saw", "duck"],
+            "vague_topics": ["history"],
+            "vague_phrases": [["tell", "me", "about"], ["describe"]],
+            "open_markers": ["causes"],
+            "multipart_markers": ["both"],
+            "relativizers": ["that"],
+            "wh_words": ["what", "who"],
+            "vague_adjectives": ["general"],
+            "open_wh_starters": ["what"]
+        }"#;
+        Lexicon::from_json(&Json::parse(json).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn lookup_merges_flags_across_lists() {
+        let lex = rich_lexicon();
+        let t = &lex.compiled;
+        let (_, what) = t.lookup(b"what").expect("'what' interned");
+        assert_ne!(what.flags & FLAG_WH, 0);
+        assert_ne!(what.flags & FLAG_OPEN_WH, 0);
+        assert_eq!(what.flags & FLAG_POS, 0);
+        let (_, and) = t.lookup(b"and").expect("'and' interned");
+        assert_ne!(and.flags & FLAG_AND, 0);
+        assert_ne!(and.flags & FLAG_POS, 0);
+        assert_eq!(and.tag, Tag::Conj);
+        let (_, bank) = t.lookup(b"bank").expect("'bank' interned");
+        assert_ne!(bank.flags & FLAG_HOMONYM, 0);
+        assert_eq!(bank.senses, 3);
+        assert!(t.lookup(b"unlisted").is_none());
+        assert!(t.lookup(b"").is_none());
+    }
+
+    #[test]
+    fn phrases_intern_to_valid_ids() {
+        let lex = rich_lexicon();
+        let t = &lex.compiled;
+        assert_eq!(t.vague_phrases().len(), 2);
+        for phrase in t.vague_phrases() {
+            for &id in phrase.iter() {
+                assert!(id != NO_WORD && (id as usize) < t.len());
+            }
+        }
+        assert_eq!(t.think_phrase().len(), 3);
+        let (do_id, _) = t.lookup(b"do").expect("'do' interned for the think phrase");
+        assert_eq!(t.think_phrase()[0], do_id);
+    }
+
+    #[test]
+    fn suffix_tag_matches_legacy_rules() {
+        let lex = rich_lexicon();
+        let t = &lex.compiled;
+        // "quickly": 7 chars > 2 + 1, ends with "ly" -> ADV
+        assert_eq!(t.suffix_tag(b"quickly"), Tag::Adv);
+        // "fly": 3 chars, not > 2 + 1 -> falls through to NOUN
+        assert_eq!(t.suffix_tag(b"fly"), Tag::Noun);
+        assert_eq!(t.suffix_tag(b"running"), Tag::Verb);
+        assert_eq!(t.suffix_tag(b"station"), Tag::Noun);
+        assert_eq!(t.suffix_tag(b"zebra"), Tag::Noun);
+        // multi-byte chars count as one char, as chars().count() does
+        assert_eq!(t.suffix_tag("caf\u{e9}ly".as_bytes()), Tag::Adv);
+    }
+
+    #[test]
+    fn empty_lexicon_compiles_and_misses() {
+        let json = r#"{
+            "vocab": [], "pos_lexicon": {}, "suffix_rules": [],
+            "homonyms": {}, "nv_ambiguous": [], "vague_topics": [],
+            "vague_phrases": [], "open_markers": [], "multipart_markers": [],
+            "relativizers": [], "wh_words": [], "vague_adjectives": [],
+            "open_wh_starters": []
+        }"#;
+        let lex = Lexicon::from_json(&Json::parse(json).unwrap()).unwrap();
+        // "of", "and", and the think-phrase words are always interned
+        assert!(!lex.compiled.is_empty());
+        assert!(lex.compiled.lookup(b"anything").is_none());
+        assert_eq!(lex.compiled.suffix_tag(b"quickly"), Tag::Noun);
+    }
+}

@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::intern::ScoreTable;
 use crate::util::json::Json;
 
 /// PoS-lite tag inventory (mirror of python's TAG_* constants).
@@ -101,6 +102,11 @@ pub struct Lexicon {
     pub vague_adjectives: HashSet<String>,
     /// Wh-starters marking open-ended questions.
     pub open_wh_starters: HashSet<String>,
+    /// The interned scoring table compiled from the lists above — the
+    /// single-lookup structure the RULEGEN fast path reads. Built once
+    /// at load; holds exactly the same facts as the sets/maps, so it
+    /// never needs separate updating.
+    pub compiled: ScoreTable,
 }
 
 fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
@@ -165,7 +171,7 @@ impl Lexicon {
             })
             .collect::<Result<Vec<_>>>()?;
 
-        Ok(Lexicon {
+        let mut lex = Lexicon {
             vocab_words: str_list(v, "vocab")?,
             pos_lexicon,
             suffix_rules,
@@ -179,6 +185,9 @@ impl Lexicon {
             wh_words: str_set(v, "wh_words")?,
             vague_adjectives: str_set(v, "vague_adjectives")?,
             open_wh_starters: str_set(v, "open_wh_starters")?,
-        })
+            compiled: ScoreTable::default(),
+        };
+        lex.compiled = ScoreTable::compile(&lex);
+        Ok(lex)
     }
 }

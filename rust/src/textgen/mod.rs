@@ -6,11 +6,13 @@
 //! tokenisation, tagging, or vocabulary numbering is a test failure, not
 //! a silent drift.
 
+pub mod intern;
 pub mod lexicon;
 pub mod pos;
 pub mod tokenizer;
 pub mod vocab;
 
+pub use intern::{ScoreTable, WordInfo};
 pub use lexicon::{Lexicon, Tag};
-pub use tokenizer::tokenize;
+pub use tokenizer::{tokenize, tokenize_into, ScoreScratch};
 pub use vocab::Vocab;

@@ -10,6 +10,143 @@ pub fn is_punct(c: char) -> bool {
     PUNCT.contains(&c)
 }
 
+/// Byte-level [`is_punct`]: every split-off punctuation character is a
+/// single ASCII byte, and UTF-8 continuation bytes are >= 0x80, so a
+/// byte test can never false-match inside a multi-byte character.
+#[inline]
+pub fn is_punct_byte(b: u8) -> bool {
+    matches!(b, b'.' | b',' | b'!' | b'?' | b';' | b':' | b'"' | b'(' | b')')
+}
+
+/// Reusable buffers for the allocation-free scoring fast path: the
+/// lowercased text, the token byte-spans into it, the per-token
+/// interned word ids, and the regressor's ping-pong activation buffers.
+///
+/// Contract: a scratch is plumbing, not state — every fast-path entry
+/// point ([`tokenize_into`], `Estimator::score_scratch` and friends)
+/// fully resets the parts it uses, so one scratch can be reused across
+/// arbitrary texts (that reuse is the point: after a few calls the
+/// buffers reach steady-state capacity and scoring stops allocating).
+/// Not `Sync`/shared — keep one per worker (e.g. per connection).
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    /// Lowercased copy of the text being scored.
+    pub(crate) lower: String,
+    /// Token byte-spans `(start, end)` into `lower`, in token order.
+    pub(crate) spans: Vec<(usize, usize)>,
+    /// Interned word id per token (`intern::NO_WORD` when unknown).
+    pub(crate) ids: Vec<u32>,
+    /// Regressor activation ping buffer.
+    pub(crate) reg_a: Vec<f32>,
+    /// Regressor activation pong buffer.
+    pub(crate) reg_b: Vec<f32>,
+}
+
+impl ScoreScratch {
+    /// A fresh scratch with empty buffers (they grow to steady state
+    /// over the first few scoring calls).
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
+    }
+
+    /// Number of tokens produced by the last [`tokenize_into`] call.
+    pub fn token_count(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// The tokens of the last [`tokenize_into`] call, as slices of the
+    /// internal lowercase buffer.
+    pub fn tokens(&self) -> impl Iterator<Item = &str> {
+        self.spans.iter().map(|&(s, e)| &self.lower[s..e])
+    }
+}
+
+/// Lowercase `text` into `buf` (cleared first) without allocating in
+/// the common cases, producing byte-identical output to
+/// `str::to_lowercase`:
+///
+/// - pure-ASCII text: bulk copy + in-place ASCII lowercasing;
+/// - non-ASCII without 'Σ' (U+03A3): per-char `char::to_lowercase`,
+///   which matches `str::to_lowercase` for every char except the
+///   context-sensitive capital sigma (and handles multi-char
+///   expansions like 'İ' -> "i\u{307}");
+/// - text containing 'Σ': fall back to `str::to_lowercase` for its
+///   final-sigma handling — the one documented transient allocation.
+pub fn lowercase_into(text: &str, buf: &mut String) {
+    buf.clear();
+    if text.is_ascii() {
+        buf.push_str(text);
+        buf.make_ascii_lowercase();
+    } else if !text.contains('\u{3a3}') {
+        for c in text.chars() {
+            for lc in c.to_lowercase() {
+                buf.push(lc);
+            }
+        }
+    } else {
+        buf.push_str(&text.to_lowercase());
+    }
+}
+
+/// [`tokenize`] into reusable buffers: lowercases `text` into the
+/// scratch and records each token as a byte-span of that buffer
+/// (no per-token `String`s). Token-for-token identical to
+/// [`tokenize`] — asserted by the equivalence tests below and the
+/// fast-path property suite.
+pub fn tokenize_into(text: &str, scratch: &mut ScoreScratch) {
+    scratch.spans.clear();
+    // Split borrow: lowercase into a temporarily-moved buffer so the
+    // span pushes below can borrow `scratch` mutably.
+    let mut lower = std::mem::take(&mut scratch.lower);
+    lowercase_into(text, &mut lower);
+
+    // Mirror of `split_whitespace` + per-word punctuation stripping,
+    // operating on byte spans of the lowercased buffer. All split-off
+    // punctuation is ASCII, so byte tests are exact (see
+    // [`is_punct_byte`]).
+    let bytes = lower.as_bytes();
+    let mut word_start = None;
+    for (i, c) in lower.char_indices() {
+        if c.is_whitespace() {
+            if let Some(start) = word_start.take() {
+                push_word_spans(bytes, start, i, &mut scratch.spans);
+            }
+        } else if word_start.is_none() {
+            word_start = Some(i);
+        }
+    }
+    if let Some(start) = word_start {
+        push_word_spans(bytes, start, lower.len(), &mut scratch.spans);
+    }
+    scratch.lower = lower;
+}
+
+/// Split one whitespace-delimited word `[start, end)` into its token
+/// spans: leading punctuation bytes (each its own token), the core, and
+/// trailing punctuation bytes in string order — exactly the order
+/// [`tokenize`] emits.
+fn push_word_spans(
+    bytes: &[u8],
+    mut start: usize,
+    end: usize,
+    spans: &mut Vec<(usize, usize)>,
+) {
+    while start < end && is_punct_byte(bytes[start]) {
+        spans.push((start, start + 1));
+        start += 1;
+    }
+    let mut core_end = end;
+    while core_end > start && is_punct_byte(bytes[core_end - 1]) {
+        core_end -= 1;
+    }
+    if core_end > start {
+        spans.push((start, core_end));
+    }
+    for i in core_end..end {
+        spans.push((i, i + 1));
+    }
+}
+
 /// Lowercase, split on whitespace, split off leading/trailing punctuation
 /// as separate tokens (trailing punctuation emitted in string order).
 pub fn tokenize(text: &str) -> Vec<String> {
@@ -60,5 +197,67 @@ mod tests {
     #[test]
     fn all_punct_token() {
         assert_eq!(tokenize("..."), vec![".", ".", "."]);
+    }
+
+    fn assert_into_matches(text: &str) {
+        let mut scratch = ScoreScratch::new();
+        tokenize_into(text, &mut scratch);
+        let got: Vec<&str> = scratch.tokens().collect();
+        let want = tokenize(text);
+        assert_eq!(got, want, "tokenize_into diverged on {text:?}");
+    }
+
+    #[test]
+    fn tokenize_into_matches_tokenize() {
+        for text in [
+            "",
+            "   ",
+            "I love pizza.",
+            "what?  really!",
+            "ok?!",
+            "\"quoted\"",
+            "what's up",
+            "...",
+            "a.b,c!d",
+            "  leading and trailing  ",
+            "tabs\tand\nnewlines\r\nmixed",
+        ] {
+            assert_into_matches(text);
+        }
+    }
+
+    #[test]
+    fn tokenize_into_matches_tokenize_unicode() {
+        for text in [
+            "Καλημέρα ΣΟΦΙΑ",     // capital sigma mid-word
+            "ΟΔΥΣΣΕΥΣ.",          // final sigma before punctuation
+            "İstanbul DİYARBAKIR", // 'İ' lowercases to two chars
+            "ĞÜZEL, naïve!",
+            "e\u{301}toile (cafe\u{301})", // combining accents
+            "ß STRASSE",
+            "中文 没有 空格?",
+        ] {
+            assert_into_matches(text);
+        }
+    }
+
+    #[test]
+    fn lowercase_into_matches_std() {
+        let mut buf = String::new();
+        for text in ["", "ASCII only.", "İΣΣΑ ΣΟΦΟΣ", "Weiß", "ΣΣ", "aΣ"] {
+            lowercase_into(text, &mut buf);
+            assert_eq!(buf, text.to_lowercase(), "diverged on {text:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_texts() {
+        let mut scratch = ScoreScratch::new();
+        tokenize_into("a much longer first text, with punctuation!", &mut scratch);
+        tokenize_into("short", &mut scratch);
+        assert_eq!(scratch.tokens().collect::<Vec<_>>(), vec!["short"]);
+        assert_eq!(scratch.token_count(), 1);
+        tokenize_into("", &mut scratch);
+        assert_eq!(scratch.token_count(), 0);
     }
 }

@@ -6,9 +6,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::fastpath;
 use super::regressor::Regressor;
 use super::rules;
-use crate::textgen::Lexicon;
+use crate::textgen::{Lexicon, ScoreScratch};
 
 /// The combined RULEGEN + LW-regressor estimator (Eq. 1).
 #[derive(Clone)]
@@ -53,6 +54,17 @@ impl Estimator {
         rules::features(&self.lexicon, text, self.max_input_len)
     }
 
+    /// [`Self::features`] via the single-pass interned fast path —
+    /// bit-identical output, allocation-free at steady state when the
+    /// same scratch is reused across calls.
+    pub fn features_scratch(
+        &self,
+        text: &str,
+        scratch: &mut ScoreScratch,
+    ) -> [f64; rules::N_FEATURES] {
+        fastpath::features_scratch(&self.lexicon, text, self.max_input_len, scratch)
+    }
+
     /// Uncertainty score for a text: predicted output length, clamped to
     /// the model family's valid range.
     pub fn score(&self, text: &str) -> Result<f64> {
@@ -72,6 +84,27 @@ impl Estimator {
     pub fn score_with_features(&self, text: &str) -> Result<(f64, [f64; rules::N_FEATURES])> {
         let feats = self.features(text);
         let raw = self.regressor.predict(&feats)?;
+        Ok((self.clamp_score(raw), feats))
+    }
+
+    /// [`Self::score`] via the fast path (bit-identical score, no
+    /// steady-state allocations with a reused scratch).
+    pub fn score_scratch(&self, text: &str, scratch: &mut ScoreScratch) -> Result<f64> {
+        Ok(self.score_with_features_scratch(text, scratch)?.0)
+    }
+
+    /// [`Self::score_with_features`] via the fast path: single-pass
+    /// interned feature extraction plus the regressor's ping-pong
+    /// buffers, all living in the caller's [`ScoreScratch`].
+    pub fn score_with_features_scratch(
+        &self,
+        text: &str,
+        scratch: &mut ScoreScratch,
+    ) -> Result<(f64, [f64; rules::N_FEATURES])> {
+        let feats = fastpath::features_scratch(&self.lexicon, text, self.max_input_len, scratch);
+        let raw = self
+            .regressor
+            .predict_into(&feats, &mut scratch.reg_a, &mut scratch.reg_b)?;
         Ok((self.clamp_score(raw), feats))
     }
 

@@ -1,0 +1,200 @@
+//! Single-pass, zero-steady-state-allocation RULEGEN scoring.
+//!
+//! [`features_scratch`] produces the exact feature vector of
+//! [`super::rules::features`] — bit-identical f64s, asserted by the
+//! golden and property suites — while doing one interned-table lookup
+//! per token instead of ~10 `String`-keyed set probes, tagging from the
+//! same lookup, and writing only into reusable [`ScoreScratch`]
+//! buffers (no per-call `Vec<String>` tokens, no per-token `String`s,
+//! no transient phrase vectors).
+//!
+//! Bit-equality argument: every rule score is a sum/product of small
+//! exact integers (counts times 2.0/3.0/4.0/5.0), each exactly
+//! representable in f64, so the results are exact and association
+//! cannot change them; the accumulation order below still mirrors the
+//! legacy scorers line for line so the equivalence holds trivially,
+//! not just analytically. The one behavioural difference is where the
+//! facts come from — the compiled [`crate::textgen::ScoreTable`],
+//! which holds exactly the same word lists.
+
+use crate::textgen::intern::{
+    FLAG_AND, FLAG_HOMONYM, FLAG_MULTIPART, FLAG_NV_AMBIG, FLAG_OF, FLAG_OPEN_MARKER,
+    FLAG_OPEN_WH, FLAG_POS, FLAG_RELATIVIZER, FLAG_VAGUE_ADJ, FLAG_VAGUE_TOPIC, FLAG_WH, NO_WORD,
+};
+use crate::textgen::lexicon::{Lexicon, Tag};
+use crate::textgen::tokenizer::{is_punct_byte, tokenize_into, ScoreScratch};
+
+use super::rules::N_FEATURES;
+
+/// Does the interned token-id sequence contain `phrase` as a
+/// contiguous run? Mirror of the legacy `contains_phrase` (including
+/// its `false` for empty phrases), over word ids instead of `String`s.
+/// Unknown tokens carry [`NO_WORD`], which never equals an interned
+/// phrase-word id, so they can only ever fail a match — same as an
+/// unknown `String` token.
+#[inline]
+fn contains_phrase_ids(ids: &[u32], phrase: &[u32]) -> bool {
+    if phrase.is_empty() || ids.len() < phrase.len() {
+        return false;
+    }
+    ids.windows(phrase.len()).any(|w| w == phrase)
+}
+
+/// The full RULEGEN feature vector (six rule scores + clamped input
+/// length), computed in a single pass over the tokens with one
+/// [`crate::textgen::ScoreTable`] lookup per token. Bit-identical to
+/// [`super::rules::features`]; allocation-free at steady state (the
+/// scratch buffers grow to capacity over the first few calls, then
+/// every subsequent call reuses them).
+pub fn features_scratch(
+    lex: &Lexicon,
+    text: &str,
+    max_input_len: usize,
+    scratch: &mut ScoreScratch,
+) -> [f64; N_FEATURES] {
+    tokenize_into(text, scratch);
+    scratch.ids.clear();
+    let table = &lex.compiled;
+
+    // Per-class counters, folded from one lookup per token.
+    let mut n_pp = 0usize; // ADP tags (structural)
+    let mut n_rel = 0usize; // relativizer after a NOUN (structural)
+    let mut n_ambig = 0usize; // noun/verb-ambiguous words (syntactic)
+    let mut has_verb = false; // any VERB tag (syntactic)
+    let mut semantic = 0.0f64; // homonym sense mass, in token order
+    let mut n_topic = 0usize; // vague topics
+    let mut n_vadj = 0usize; // vague adjectives
+    let mut n_open = 0usize; // open-endedness markers
+    let mut has_of = false; // literal "of" (open)
+    let mut n_comma = 0usize; // "," tokens (multipart)
+    let mut n_q = 0usize; // "?" tokens (multipart)
+    let mut n_and = 0usize; // literal "and" (multipart, question-gated)
+    let mut n_marker = 0usize; // multipart markers
+    let mut first_open_wh = false; // first token opens a wh-question
+    let mut first_wh = false; // first token is a wh-word
+    let mut prev_tag = Tag::Other;
+
+    let bytes = scratch.lower.as_bytes();
+    for (i, &(start, end)) in scratch.spans.iter().enumerate() {
+        let tok = &bytes[start..end];
+        let hit = table.lookup(tok);
+        scratch.ids.push(hit.map(|(id, _)| id).unwrap_or(NO_WORD));
+
+        // Class-membership flags apply to every token — the legacy
+        // scorers probe their sets with the token string regardless of
+        // whether it is punctuation.
+        if let Some((_, info)) = hit {
+            if info.flags & FLAG_NV_AMBIG != 0 {
+                n_ambig += 1;
+            }
+            if info.flags & FLAG_HOMONYM != 0 {
+                // Same expression as the legacy scorer, summed in the
+                // same token order.
+                semantic += 3.0 * (info.senses - 1) as f64;
+            }
+            if info.flags & FLAG_VAGUE_TOPIC != 0 {
+                n_topic += 1;
+            }
+            if info.flags & FLAG_VAGUE_ADJ != 0 {
+                n_vadj += 1;
+            }
+            if info.flags & FLAG_OPEN_MARKER != 0 {
+                n_open += 1;
+            }
+            if info.flags & FLAG_MULTIPART != 0 {
+                n_marker += 1;
+            }
+            if info.flags & FLAG_RELATIVIZER != 0 && i > 0 && prev_tag == Tag::Noun {
+                n_rel += 1;
+            }
+            if info.flags & FLAG_OF != 0 {
+                has_of = true;
+            }
+            if info.flags & FLAG_AND != 0 {
+                n_and += 1;
+            }
+            if i == 0 {
+                first_open_wh = info.flags & FLAG_OPEN_WH != 0;
+                first_wh = info.flags & FLAG_WH != 0;
+            }
+        }
+
+        // Tagging order mirrors `pos_tag`: punctuation first, then the
+        // PoS lexicon (folded into the same lookup), then suffix rules,
+        // else NOUN.
+        let tag = if is_punct_byte(tok[0]) {
+            Tag::Punct
+        } else {
+            match hit {
+                Some((_, info)) if info.flags & FLAG_POS != 0 => info.tag,
+                _ => table.suffix_tag(tok),
+            }
+        };
+        if tag == Tag::Adp {
+            n_pp += 1;
+        }
+        if tag == Tag::Verb {
+            has_verb = true;
+        }
+        prev_tag = tag;
+
+        // Punctuation counts are plain string equality in the legacy
+        // scorer; only a 1-byte token can equal "," or "?".
+        if end - start == 1 {
+            match tok[0] {
+                b',' => n_comma += 1,
+                b'?' => n_q += 1,
+                _ => {}
+            }
+        }
+    }
+
+    // Post-pass folds, each mirroring its legacy scorer's accumulation
+    // order exactly.
+    let structural = 4.0 * n_pp.saturating_sub(1) as f64 + 2.0 * n_rel as f64;
+
+    let mut syntactic = 3.0 * n_ambig as f64;
+    if n_ambig > 0 && !has_verb {
+        syntactic += 2.0;
+    }
+
+    let mut vague = 0.0;
+    for phrase in table.vague_phrases() {
+        if contains_phrase_ids(&scratch.ids, phrase) {
+            vague += 5.0;
+        }
+    }
+    vague += 4.0 * n_topic as f64;
+    vague += 2.0 * n_vadj as f64;
+
+    let mut open = 0.0;
+    if first_open_wh {
+        open += 3.0;
+        if has_of {
+            open += 2.0;
+        }
+    }
+    open += 3.0 * n_open as f64;
+    if contains_phrase_ids(&scratch.ids, table.think_phrase()) {
+        open += 3.0;
+    }
+
+    let is_question = n_q > 0 || first_wh;
+    if !is_question {
+        n_and = 0;
+    }
+    let multipart = 2.0 * n_comma as f64
+        + 2.0 * n_and as f64
+        + 4.0 * n_q.saturating_sub(1) as f64
+        + 3.0 * n_marker as f64;
+
+    [
+        structural,
+        syntactic,
+        semantic,
+        vague,
+        open,
+        multipart,
+        scratch.spans.len().min(max_input_len) as f64,
+    ]
+}

@@ -4,9 +4,11 @@
 //! length) on the scheduling hot path.
 
 pub mod estimator;
+pub mod fastpath;
 pub mod regressor;
 pub mod rules;
 
 pub use estimator::Estimator;
+pub use fastpath::features_scratch;
 pub use regressor::Regressor;
 pub use rules::{features, rule_scores, single_rule_score, N_FEATURES};

@@ -69,6 +69,22 @@ impl Regressor {
 
     /// Predict the output length for one raw (unnormalised) feature vector.
     pub fn predict(&self, raw_features: &[f64]) -> Result<f64> {
+        self.predict_into(raw_features, &mut Vec::new(), &mut Vec::new())
+    }
+
+    /// [`Self::predict`] into caller-provided ping-pong activation
+    /// buffers — the allocation-free variant the scoring fast path
+    /// uses. The float operation sequence is identical to `predict`
+    /// (same scaling, same sparse matvec skipping zero activations,
+    /// same relu placement), so the result is bit-identical; the only
+    /// difference is where the activations live. The buffers grow to
+    /// the widest layer once, then are reused.
+    pub fn predict_into(
+        &self,
+        raw_features: &[f64],
+        h: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) -> Result<f64> {
         if raw_features.len() != self.n_features() {
             return Err(anyhow!(
                 "expected {} features, got {}",
@@ -76,14 +92,17 @@ impl Regressor {
                 raw_features.len()
             ));
         }
-        let mut h: Vec<f32> = raw_features
-            .iter()
-            .zip(&self.feature_scales)
-            .map(|(x, s)| (*x / *s) as f32)
-            .collect();
+        h.clear();
+        h.extend(
+            raw_features
+                .iter()
+                .zip(&self.feature_scales)
+                .map(|(x, s)| (*x / *s) as f32),
+        );
         let n_layers = self.layers.len();
         for (li, layer) in self.layers.iter().enumerate() {
-            let mut out = layer.b.clone();
+            out.clear();
+            out.extend_from_slice(&layer.b);
             for (i, &x) in h.iter().enumerate() {
                 if x == 0.0 {
                     continue;
@@ -94,11 +113,11 @@ impl Regressor {
                 }
             }
             if li + 1 < n_layers {
-                for o in &mut out {
+                for o in out.iter_mut() {
                     *o = o.max(0.0);
                 }
             }
-            h = out;
+            std::mem::swap(h, out);
         }
         Ok(h[0] as f64)
     }
@@ -157,5 +176,31 @@ mod tests {
     fn wrong_feature_count_errors() {
         let r = tiny_regressor();
         assert!(r.predict(&[1.0]).is_err());
+        assert!(r.predict_into(&[1.0], &mut Vec::new(), &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn predict_into_matches_predict_bitwise() {
+        let r = tiny_regressor();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for feats in [[3.0, 4.0], [0.0, 0.0], [-1.5, 2.5], [1e-9, 7.25]] {
+            let want = r.predict(&feats).unwrap();
+            let got = r.predict_into(&feats, &mut a, &mut b).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "diverged on {feats:?}");
+        }
+
+        // multi-layer with relu and a width change: 2 -> 3 -> 1
+        let bundle = Bundle::from_tensors(vec![
+            Tensor::f32("w0", vec![2, 3], vec![0.3, -1.0, 2.0, 0.7, 0.1, -0.4]),
+            Tensor::f32("b0", vec![3], vec![0.1, -0.2, 0.0]),
+            Tensor::f32("w1", vec![3, 1], vec![1.5, -0.5, 0.25]),
+            Tensor::f32("b1", vec![1], vec![0.05]),
+        ]);
+        let deep = Regressor::from_bundle(&bundle, &[10.0, 64.0]).unwrap();
+        for feats in [[13.0, 9.0], [0.0, 31.0], [2.5, 0.0]] {
+            let want = deep.predict(&feats).unwrap();
+            let got = deep.predict_into(&feats, &mut a, &mut b).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "diverged on {feats:?}");
+        }
     }
 }

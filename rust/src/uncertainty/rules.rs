@@ -5,6 +5,9 @@
 //! the resulting f64s). See the python module for the linguistic
 //! rationale of each rule.
 
+use std::sync::OnceLock;
+
+use crate::textgen::intern::THINK_PHRASE;
 use crate::textgen::lexicon::{Lexicon, Tag};
 use crate::textgen::pos::pos_tag;
 use crate::textgen::tokenizer::tokenize;
@@ -78,8 +81,11 @@ pub fn open_score(lex: &Lexicon, tokens: &[String], _tags: &[Tag]) -> f64 {
         }
     }
     score += 3.0 * tokens.iter().filter(|t| lex.open_markers.contains(t.as_str())).count() as f64;
-    let think: Vec<String> = ["do", "you", "think"].iter().map(|s| s.to_string()).collect();
-    if contains_phrase(tokens, &think) {
+    // Built once, not per call — this scorer runs on the admission hot
+    // path (and doubles as the fast path's test oracle).
+    static THINK: OnceLock<Vec<String>> = OnceLock::new();
+    let think = THINK.get_or_init(|| THINK_PHRASE.iter().map(|s| s.to_string()).collect());
+    if contains_phrase(tokens, think) {
         score += 3.0;
     }
     score

@@ -1,0 +1,147 @@
+//! Zero-allocation guarantee for the scoring fast path: after warmup
+//! (the scratch buffers grown to steady-state capacity), a
+//! `score_with_features_scratch` call performs **zero** heap
+//! allocations. Verified with a counting `#[global_allocator]`.
+//!
+//! This file deliberately holds a single `#[test]`: the default test
+//! harness runs tests on multiple threads, and any concurrent test
+//! would pollute the global allocation counter.
+//!
+//! Documented exception: text containing 'Σ' (U+03A3) falls back to
+//! `str::to_lowercase` for its context-sensitive final-sigma mapping,
+//! which takes one transient allocation — asserted separately.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rtlm::runtime::bundle::{Bundle, Tensor};
+use rtlm::textgen::{Lexicon, ScoreScratch};
+use rtlm::uncertainty::{Estimator, Regressor};
+use rtlm::util::json::Json;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn lexicon() -> Lexicon {
+    let json = r#"{
+        "vocab": ["<pad>", "<bos>", "<eos>", "<unk>"],
+        "pos_lexicon": {
+            "in": "ADP", "with": "ADP", "of": "ADP",
+            "saw": "VERB", "is": "VERB", "the": "DET", "a": "DET",
+            "park": "NOUN", "boy": "NOUN", "what": "WH", "and": "CONJ"
+        },
+        "suffix_rules": [["ly", "ADV"], ["ing", "VERB"], ["tion", "NOUN"]],
+        "homonyms": {"bank": 3, "duck": 2},
+        "nv_ambiguous": ["saw", "duck"],
+        "vague_topics": ["history", "art"],
+        "vague_phrases": [["tell", "me", "about"], ["describe"]],
+        "open_markers": ["causes", "consequences"],
+        "multipart_markers": ["both", "also"],
+        "relativizers": ["that", "which"],
+        "wh_words": ["what", "why", "how"],
+        "vague_adjectives": ["general"],
+        "open_wh_starters": ["what", "why", "how"]
+    }"#;
+    Lexicon::from_json(&Json::parse(json).expect("lexicon json")).expect("lexicon")
+}
+
+fn estimator() -> Estimator {
+    // two layers so the regressor's ping-pong buffers are exercised
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32(
+            "w0",
+            vec![7, 2],
+            vec![0.3, -0.2, 0.8, 0.1, 0.5, 0.4, -0.7, 0.9, 0.2, 0.6, 1.1, -0.3, 0.05, 0.75],
+        ),
+        Tensor::f32("b0", vec![2], vec![0.1, -0.1]),
+        Tensor::f32("w1", vec![2, 1], vec![1.2, 0.7]),
+        Tensor::f32("b1", vec![1], vec![8.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, 64.0];
+    let reg = Regressor::from_bundle(&bundle, &scales).expect("regressor");
+    Estimator::new(Arc::new(lexicon()), Arc::new(reg), 64, 4.0, 96.0)
+}
+
+#[test]
+fn steady_state_scoring_does_not_allocate() {
+    let est = estimator();
+    let mut scratch = ScoreScratch::new();
+    let texts = [
+        "what are the causes and consequences of poverty, both here and there?",
+        "tell me about the history of art.",
+        "the boy that saw a duck in the park, with a telescope!",
+        "İstanbul cafe\u{301} na\u{ef}ve \"quoted\" (parens)...",
+        "short",
+        "",
+    ];
+
+    // warmup: grow every buffer (lowercase text, spans, ids, regressor
+    // activations) to its steady-state capacity
+    for text in &texts {
+        est.score_with_features_scratch(text, &mut scratch).expect("warmup score");
+    }
+
+    // steady state: repeat the same workload; not a single heap
+    // allocation is allowed
+    for round in 0..3 {
+        for text in &texts {
+            let before = allocations();
+            let (u, feats) = est
+                .score_with_features_scratch(text, &mut scratch)
+                .expect("steady-state score");
+            let delta = allocations() - before;
+            assert_eq!(
+                delta, 0,
+                "round {round}: scoring {text:?} allocated {delta} times (u={u}, feats={feats:?})"
+            );
+        }
+    }
+
+    // sanity: the counter works — the legacy path must allocate (token
+    // Strings at minimum)
+    let before = allocations();
+    est.score_with_features(texts[0]).expect("legacy score");
+    assert!(
+        allocations() > before,
+        "counting allocator saw no allocations from the legacy path — counter broken?"
+    );
+
+    // documented exception: 'Σ' falls back to str::to_lowercase (one
+    // transient String); still bounded, and only for sigma inputs
+    est.score_with_features_scratch("ΟΔΥΣΣΕΥΣ ΣΟΦΟΣ", &mut scratch).expect("sigma warmup");
+    let before = allocations();
+    est.score_with_features_scratch("ΟΔΥΣΣΕΥΣ ΣΟΦΟΣ", &mut scratch).expect("sigma score");
+    let sigma_delta = allocations() - before;
+    assert!(
+        sigma_delta <= 2,
+        "sigma fallback should cost at most the one transient lowercase String \
+         (plus a possible growth realloc), saw {sigma_delta}"
+    );
+}

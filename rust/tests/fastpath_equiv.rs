@@ -1,0 +1,241 @@
+//! Bit-equality suite for the interned scoring fast path: on every
+//! input — random word soups, unicode edge cases, every artifact
+//! golden — `uncertainty::fastpath::features_scratch` must produce the
+//! exact same f64 bits as the legacy `uncertainty::rules::features`
+//! (the test oracle, itself pinned to python by the goldens), and the
+//! estimator's scratch scoring must match its allocating twin.
+
+use std::sync::Arc;
+
+use rtlm::runtime::bundle::{Bundle, Tensor};
+use rtlm::textgen::{tokenize, Lexicon, ScoreScratch};
+use rtlm::uncertainty::{fastpath, rules, Estimator, Regressor};
+use rtlm::util::json::Json;
+use rtlm::util::prop;
+
+const MAX_INPUT_LEN: usize = 64;
+
+/// A lexicon that exercises every rule list, with deliberate overlaps
+/// (words in several lists, phrase words that are also topics, a
+/// punctuation "word" in a marker list) and non-ASCII entries.
+fn rich_lexicon() -> Lexicon {
+    let json = r#"{
+        "vocab": ["<pad>", "<bos>", "<eos>", "<unk>"],
+        "pos_lexicon": {
+            "in": "ADP", "with": "ADP", "of": "ADP", "on": "ADP",
+            "saw": "VERB", "runs": "VERB", "is": "VERB",
+            "park": "NOUN", "boy": "NOUN", "telescope": "NOUN",
+            "happily": "ADV", "and": "CONJ", "the": "DET", "a": "DET",
+            "what": "WH", "that": "PRON", "café": "NOUN"
+        },
+        "suffix_rules": [
+            ["ly", "ADV"], ["ing", "VERB"], ["ed", "VERB"],
+            ["tion", "NOUN"], ["ness", "NOUN"], ["ous", "ADJ"]
+        ],
+        "homonyms": {"bank": 3, "scale": 4, "bats": 2, "duck": 2},
+        "nv_ambiguous": ["saw", "duck", "flies", "watch"],
+        "vague_topics": ["history", "art", "science", "poverty"],
+        "vague_phrases": [
+            ["tell", "me", "about"],
+            ["what", "do", "you", "think", "about"],
+            ["talk", "about"],
+            ["describe"]
+        ],
+        "open_markers": ["causes", "consequences", "ways", "best"],
+        "multipart_markers": ["both", "also", ","],
+        "relativizers": ["that", "which", "who"],
+        "wh_words": ["what", "why", "how", "who", "when", "where"],
+        "vague_adjectives": ["general", "various", "different"],
+        "open_wh_starters": ["what", "why", "how"]
+    }"#;
+    Lexicon::from_json(&Json::parse(json).expect("lexicon json")).expect("lexicon")
+}
+
+/// Mixed word pool the generator draws from: list members, phrase
+/// fragments, suffix-rule bait, punctuation, unknowns, unicode.
+const POOL: &[&str] = &[
+    // structural / syntactic / semantic
+    "in", "with", "of", "saw", "duck", "park", "boy", "that", "which", "bank", "scale",
+    // vague / open / multipart
+    "history", "art", "tell", "me", "about", "describe", "talk", "causes", "best", "both",
+    "also", "general", "various",
+    // phrase fragments and question scaffolding
+    "what", "why", "how", "do", "you", "think", "and", "the", "a", "is",
+    // suffix bait and unknowns
+    "happily", "running", "guarded", "station", "darkness", "famous", "zzz", "qwerty",
+    // punctuation tokens (attach to neighbours through the joiner too)
+    ",", "?", ".", "!", "(", ")", "\"", ":",
+    // unicode: multi-byte lowercasing, combining marks, greek sigma
+    "İstanbul", "STRASSE", "ΣΟΦΟΣ", "caf\u{e9}", "cafe\u{301}", "na\u{ef}ve", "中文",
+];
+
+const SEPARATORS: &[&str] = &[" ", "  ", "\t", "\n", " \r\n "];
+
+fn random_text(rng: &mut rtlm::util::rng::Pcg64) -> String {
+    let n_words = rng.range_usize(0, 14);
+    let mut text = String::new();
+    for i in 0..n_words {
+        if i > 0 {
+            text.push_str(rng.choice(SEPARATORS));
+        }
+        // occasionally glue punctuation straight onto the word
+        let word = *rng.choice(POOL);
+        text.push_str(word);
+        if rng.f64() < 0.25 {
+            text.push_str(rng.choice(&[",", "?", ".", "!", "\"", ")"]));
+        }
+    }
+    // sometimes uppercase the whole thing (scoring lowercases first)
+    if rng.f64() < 0.2 {
+        text = text.to_uppercase();
+    }
+    text
+}
+
+fn assert_features_match(lex: &Lexicon, scratch: &mut ScoreScratch, text: &str) {
+    let want = rules::features(lex, text, MAX_INPUT_LEN);
+    let got = fastpath::features_scratch(lex, text, MAX_INPUT_LEN, scratch);
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "feature {j} diverged on {text:?}: fast {g} vs legacy {w}\n\
+             (tokens: {:?})",
+            tokenize(text)
+        );
+    }
+}
+
+#[test]
+fn fastpath_matches_legacy_on_random_texts() {
+    let lex = rich_lexicon();
+    // one scratch reused across every case — the reuse contract is part
+    // of what's under test
+    let mut scratch = ScoreScratch::new();
+    prop::check_result(
+        "fastpath-bit-equality",
+        500,
+        random_text,
+        |text| {
+            let want = rules::features(&lex, text, MAX_INPUT_LEN);
+            let got = fastpath::features_scratch(&lex, text, MAX_INPUT_LEN, &mut scratch);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!(
+                        "feature {j}: fast {g} vs legacy {w} (tokens {:?})",
+                        tokenize(text)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fastpath_matches_legacy_on_edge_cases() {
+    let lex = rich_lexicon();
+    let mut scratch = ScoreScratch::new();
+    for text in [
+        "",
+        " ",
+        "\t\n",
+        "...",
+        "?!?!",
+        "(,)",
+        "what",
+        "what?",
+        "of",
+        "and",
+        "do you think",
+        "so, what do you think about it?",
+        "what do you think of that?",
+        "tell me about the history of art.",
+        "What are the causes and consequences of poverty?",
+        "john saw a boy in the park with a telescope.",
+        "rice flies like sand.",
+        "duck duck duck",
+        "that that that",
+        "the boy that saw",
+        // first-token sensitivities
+        "what of", "of what", "and what?", "what and",
+        // unicode: lowercasing expansions, sigma, combining chars
+        "İstanbul DİYARBAKIR",
+        "ΟΔΥΣΣΕΥΣ kai ΣΟΦΟΣ.",
+        "STRASSE weiß",
+        "caf\u{e9} cafe\u{301}",
+        "e\u{301}toile, (NA\u{cf}VE)!",
+        "中文 测试 ?",
+        // max_input_len clamping (a run past 64 tokens)
+        &"word ".repeat(100),
+        &"what , and ? both ".repeat(20),
+    ] {
+        assert_features_match(&lex, &mut scratch, text);
+    }
+}
+
+#[test]
+fn fastpath_matches_on_empty_rule_lists() {
+    // an all-empty lexicon still scores (everything 0 except length)
+    let json = r#"{
+        "vocab": [], "pos_lexicon": {}, "suffix_rules": [],
+        "homonyms": {}, "nv_ambiguous": [], "vague_topics": [],
+        "vague_phrases": [], "open_markers": [], "multipart_markers": [],
+        "relativizers": [], "wh_words": [], "vague_adjectives": [],
+        "open_wh_starters": []
+    }"#;
+    let lex = Lexicon::from_json(&Json::parse(json).unwrap()).unwrap();
+    let mut scratch = ScoreScratch::new();
+    for text in ["", "hello world?", "tell me about art, and history."] {
+        assert_features_match(&lex, &mut scratch, text);
+    }
+}
+
+#[test]
+fn estimator_scratch_scoring_matches_allocating_path() {
+    let lex = Arc::new(rich_lexicon());
+    // a regressor that weighs every feature, so any feature divergence
+    // shows up in the score
+    let bundle = Bundle::from_tensors(vec![
+        Tensor::f32(
+            "w0",
+            vec![7, 3],
+            vec![
+                0.31, -0.7, 1.1, 0.9, 0.33, -0.21, 1.7, 0.05, -0.6, 0.42, 0.8, 0.13, -1.2, 0.64,
+                0.27, 0.55, -0.44, 0.91, 0.18, 0.72, -0.08,
+            ],
+        ),
+        Tensor::f32("b0", vec![3], vec![0.1, -0.2, 0.3]),
+        Tensor::f32("w1", vec![3, 1], vec![1.4, -0.9, 0.6]),
+        Tensor::f32("b1", vec![1], vec![12.0]),
+    ]);
+    let scales = vec![10.0, 10.0, 10.0, 10.0, 10.0, 10.0, MAX_INPUT_LEN as f64];
+    let reg = Arc::new(Regressor::from_bundle(&bundle, &scales).expect("regressor"));
+    let est = Estimator::new(lex, reg, MAX_INPUT_LEN, 4.0, 96.0);
+
+    let mut scratch = ScoreScratch::new();
+    prop::check_result(
+        "estimator-scratch-bit-equality",
+        200,
+        random_text,
+        |text| {
+            let (want_u, want_f) = est.score_with_features(text).map_err(|e| e.to_string())?;
+            let (got_u, got_f) = est
+                .score_with_features_scratch(text, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            if got_u.to_bits() != want_u.to_bits() {
+                return Err(format!("score: fast {got_u} vs legacy {want_u}"));
+            }
+            for (g, w) in got_f.iter().zip(&want_f) {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!("features: fast {got_f:?} vs legacy {want_f:?}"));
+                }
+            }
+            let solo = est.score_scratch(text, &mut scratch).map_err(|e| e.to_string())?;
+            if solo.to_bits() != want_u.to_bits() {
+                return Err(format!("score_scratch: {solo} vs {want_u}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -8,8 +8,8 @@ use std::path::PathBuf;
 
 use rtlm::config::Manifest;
 use rtlm::textgen::pos::pos_tag;
-use rtlm::textgen::{tokenize, Lexicon, Tag, Vocab};
-use rtlm::uncertainty::rules;
+use rtlm::textgen::{tokenize, tokenize_into, Lexicon, ScoreScratch, Tag, Vocab};
+use rtlm::uncertainty::{fastpath, rules};
 use rtlm::util::json::read_jsonl;
 
 fn artifacts_root() -> Option<PathBuf> {
@@ -33,6 +33,7 @@ fn goldens_match_python_exactly() {
     let goldens = read_jsonl(&manifest.golden_textproc).expect("goldens");
     assert!(goldens.len() > 100, "suspiciously few goldens: {}", goldens.len());
 
+    let mut scratch = ScoreScratch::new();
     for (i, rec) in goldens.iter().enumerate() {
         let text = rec.get("text").as_str().expect("text");
 
@@ -46,6 +47,11 @@ fn goldens_match_python_exactly() {
             .collect();
         let got_tokens = tokenize(text);
         assert_eq!(got_tokens, want_tokens, "golden {i} tokens for {text:?}");
+
+        // scratch tokenizer (the fast path's byte-span variant)
+        tokenize_into(text, &mut scratch);
+        let got_spans: Vec<&str> = scratch.tokens().collect();
+        assert_eq!(got_spans, want_tokens, "golden {i} span tokens for {text:?}");
 
         // PoS tags
         let want_tags: Vec<&str> = rec
@@ -85,6 +91,18 @@ fn goldens_match_python_exactly() {
             assert_eq!(
                 got, want,
                 "golden {i} feature {j} ({}) for {text:?}",
+                manifest.feature_names[j]
+            );
+        }
+
+        // the interned fast path must match the same goldens bit for bit
+        let fast_feats =
+            fastpath::features_scratch(&lexicon, text, manifest.max_input_len, &mut scratch);
+        for (j, (got, want)) in fast_feats.iter().zip(&want_feats).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "golden {i} fast-path feature {j} ({}) for {text:?}: fast {got} vs python {want}",
                 manifest.feature_names[j]
             );
         }

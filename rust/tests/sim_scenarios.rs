@@ -93,7 +93,7 @@ fn rtlm_resilient_to_malicious_tasks() {
     let Some(ctx) = ctx() else { return };
     let dev = DeviceProfile::edge_server();
     let model = ctx.model("dialogpt").unwrap().clone();
-    let factory = TaskFactory::new(
+    let mut factory = TaskFactory::new(
         rtlm::uncertainty::Estimator::new(
             ctx.store.lexicon.clone(),
             ctx.store.regressor.clone(),
@@ -234,7 +234,7 @@ fn slack_policy_runs_and_matches_alpha_zero_up() {
 #[test]
 fn deadline_override_sets_priority_point() {
     let Some(ctx) = ctx() else { return };
-    let factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
+    let mut factory = TaskFactory::new(ctx.estimator.clone(), 2.0);
     let model = ctx.model("t5").unwrap().clone();
     let item = &ctx.all_test_items()[0];
     let t = factory

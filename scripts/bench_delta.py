@@ -17,10 +17,15 @@ a third table from the ``pop_depth_sweep`` map (``{depth: {"indexed":
 secs, "keyed": secs}}``) — per-pop cost of the indexed UP queue vs the
 historical keyed full re-sort at queue depths 10^3..10^6, with the
 keyed/indexed speedup and the indexed series' growth per 10x depth (the
-sub-linearity evidence). Older snapshots are handled gracefully: a
-missing ``batches``/``pop_depth_sweep`` key skips its table, and legacy
-two-field reports carrying flat ``n_batches_gpu``/``n_batches_cpu``
-counts are rendered as a gpu/cpu row.
+sub-linearity evidence). A fourth table renders the ``score_sweep``
+map (``{label: {"tokens": n, "legacy": secs, "fast": secs}}``) —
+admission-time RULEGEN scoring cost for short/median/long prompts,
+legacy allocating pipeline vs the interned single-pass fast path, with
+the speedup and the fast path's scores/sec. Older snapshots are handled
+gracefully: a missing ``batches``/``pop_depth_sweep``/``score_sweep``
+key skips its table, and legacy two-field reports carrying flat
+``n_batches_gpu``/``n_batches_cpu`` counts are rendered as a gpu/cpu
+row.
 
 Exit code is always 0 — this is a visibility tool for the CI job
 summary, not a gate; the gating happens in the test and load steps.
@@ -120,6 +125,49 @@ def print_depth_sweep(a: dict, b: dict, la: str, lb: str) -> None:
             prev = ib
 
 
+def score_sweep(snapshot: dict) -> dict:
+    """``{label: (tokens, legacy_secs, fast_secs)}`` from ``score_sweep``."""
+    sweep = snapshot.get("score_sweep")
+    if not isinstance(sweep, dict):
+        return {}
+    out = {}
+    for label, series in sweep.items():
+        try:
+            out[str(label)] = (
+                int(series["tokens"]),
+                float(series["legacy"]),
+                float(series["fast"]),
+            )
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def print_score_sweep(a: dict, b: dict, la: str, lb: str) -> None:
+    sa, sb = score_sweep(a), score_sweep(b)
+    if not sa and not sb:
+        return
+    print("\n### Admission scoring cost (legacy pipeline vs interned fast path)\n")
+    print(
+        f"| prompt | tokens | legacy {la} | legacy {lb} | fast {la} | fast {lb} "
+        f"| speedup ({lb}) | fast scores/s ({lb}) |"
+    )
+    print("|---|---:|---:|---:|---:|---:|---:|---:|")
+    fmt = lambda v: "-" if v is None else fmt_secs(v)
+    # sort by prompt length so the table reads short -> long
+    tokens_of = lambda label: (sa.get(label) or sb.get(label))[0]
+    for label in sorted(set(sa) | set(sb), key=tokens_of):
+        ta, la_legacy, la_fast = sa.get(label, (None, None, None))
+        tb, lb_legacy, lb_fast = sb.get(label, (None, None, None))
+        tokens = tb if tb is not None else ta
+        speedup = "-" if not lb_fast or lb_legacy is None else f"{lb_legacy / lb_fast:.1f}x"
+        rate = "-" if not lb_fast else f"{1.0 / lb_fast:,.0f}"
+        print(
+            f"| {label} | {tokens} | {fmt(la_legacy)} | {fmt(lb_legacy)} "
+            f"| {fmt(la_fast)} | {fmt(lb_fast)} | {speedup} | {rate} |"
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("snapshot_a")
@@ -176,6 +224,7 @@ def main() -> int:
 
     print_lane_table(a, b, la, lb)
     print_depth_sweep(a, b, la, lb)
+    print_score_sweep(a, b, la, lb)
     return 0
 
 

@@ -85,6 +85,7 @@ fn mk_task(rng: &mut Pcg64, id: u64) -> Task {
         utype: "plain".into(),
         malicious: false,
         deferrals: 0,
+        slo: rtlm::scheduler::SloClass::Standard,
     }
 }
 

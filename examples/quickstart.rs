@@ -51,6 +51,7 @@ fn main() -> Result<()> {
             utype: "quickstart".into(),
             malicious: false,
             deferrals: 0,
+            slo: rtlm::scheduler::SloClass::Standard,
         });
     }
 

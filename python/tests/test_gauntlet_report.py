@@ -1,0 +1,139 @@
+"""scripts/gauntlet_report.py: the `rtlm gauntlet` comparison-table
+renderer and CI gate, exercised end-to-end through a subprocess with
+JSON fixtures (the same way the CI gauntlet-gate step invokes it)."""
+
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "gauntlet_report.py")
+
+
+def run_report(tmp_path, report):
+    path = tmp_path / "gauntlet.json"
+    path.write_text(json.dumps(report))
+    return subprocess.run(
+        [sys.executable, SCRIPT, str(path)],
+        capture_output=True,
+        text=True,
+    )
+
+
+def slo_row(klass, n, met, shed=0):
+    return {
+        "class": klass,
+        "n": n,
+        "met": met,
+        "shed": shed,
+        "attainment": met / n if n else 0.0,
+    }
+
+
+def cell(scenario="nominal", policy="RT-LM", **extra):
+    base = {
+        "scenario": scenario,
+        "policy": policy,
+        "n_tasks": 48,
+        "mean_response": 1.25,
+        "p95_response": 3.5,
+        "p99_response": 4.25,
+        "p95_ttft": 0.75,
+        "makespan": 30.0,
+        "miss_rate": 0.1,
+        "shed_rate": 0.0,
+        "lanes": ["gpu", "cpu"],
+        "lane_tasks": [40, 8],
+        "slo": [slo_row("interactive", 24, 20), slo_row("batch", 24, 24)],
+    }
+    base.update(extra)
+    return base
+
+
+def report(cells):
+    return {"n": 48, "seed": 7, "time_scale": 25.0, "policies": [], "scenarios": [], "cells": cells}
+
+
+def test_clean_report_renders_matrix_and_exits_zero(tmp_path):
+    proc = run_report(
+        tmp_path,
+        report(
+            [
+                cell("nominal", "FIFO"),
+                cell("nominal", "RT-LM", wire={"clean": True, "failures": []}),
+                cell("flash", "RT-LM", shed_rate=0.25, slo=[slo_row("interactive", 24, 12, 6)]),
+            ]
+        ),
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = proc.stdout
+    # matrix rows in report order, with the wire verdict surfaced
+    assert out.index("| nominal | FIFO |") < out.index("| nominal | RT-LM |")
+    assert "ok (wire)" in out
+    # attainment renders as percentages: 20/24 interactive, 24/24 batch
+    assert "83%" in out and "100%" in out
+    # the flash cell's shed rate and per-class table both render
+    assert "25%" in out
+    assert "| flash | RT-LM | interactive | 24 | 12 | 6 | 50% |" in out
+    assert "All 3 cells clean." in out
+
+
+def test_error_cell_fails_but_renders_the_rest(tmp_path):
+    proc = run_report(
+        tmp_path,
+        report(
+            [
+                cell("nominal", "FIFO"),
+                {"scenario": "edge-cpu", "policy": "RT-LM", "error": "building cell: boom"},
+            ]
+        ),
+    )
+    assert proc.returncode == 1
+    assert "| nominal | FIFO |" in proc.stdout
+    assert "ERROR: building cell: boom" in proc.stdout
+    assert "edge-cpu/RT-LM: building cell: boom" in proc.stdout
+
+
+def test_zero_nominal_interactive_attainment_fails(tmp_path):
+    bad = cell("nominal", "RT-LM", slo=[slo_row("interactive", 24, 0), slo_row("batch", 24, 24)])
+    proc = run_report(tmp_path, report([bad]))
+    assert proc.returncode == 1
+    assert "zero interactive attainment" in proc.stdout
+    # the same attainment is tolerated off the nominal scenario
+    ok = cell("flash", "RT-LM", slo=[slo_row("interactive", 24, 0), slo_row("batch", 24, 24)])
+    assert run_report(tmp_path, report([ok])).returncode == 0
+
+
+def test_wire_divergence_fails(tmp_path):
+    bad = cell("nominal", "RT-LM", wire={"clean": False, "failures": ["gpu batches 5 != 6"]})
+    proc = run_report(tmp_path, report([bad]))
+    assert proc.returncode == 1
+    assert "WIRE FAIL (1)" in proc.stdout
+    assert "wire parity diverged" in proc.stdout
+
+
+def test_malformed_cells_render_without_crashing(tmp_path):
+    proc = run_report(
+        tmp_path,
+        report(
+            [
+                cell("nominal", "FIFO"),
+                "not a cell",
+                {"scenario": "diurnal"},  # missing everything else
+                cell("heavytail", "RT-LM", slo=["junk", slo_row("batch", 24, 24)]),
+            ]
+        ),
+    )
+    # the string cell is a problem; the partial dict renders with dashes
+    assert proc.returncode == 1
+    out = proc.stdout
+    assert "MALFORMED" in out
+    assert "| diurnal | ?? |" in out
+    assert "| heavytail | RT-LM | batch | 24 | 24 | 0 | 100% |" in out
+    assert "| nominal | FIFO |" in out
+
+
+def test_empty_report_exits_nonzero(tmp_path):
+    proc = run_report(tmp_path, report([]))
+    assert proc.returncode == 1
+    assert "no cells" in proc.stderr

@@ -1,0 +1,599 @@
+//! The scenario gauntlet: a policy × scenario matrix over diverse
+//! arrival traces, SLO-class mixes, and device profiles, run through
+//! the [`ReplayCell`] machinery and emitted as one deterministic JSON
+//! report (`rtlm gauntlet`; rendered by `scripts/gauntlet_report.py`).
+//!
+//! Every cell is artifact-free — synthetic seeded tasks, a stub model
+//! entry, a hand-built latency calibration — so the whole matrix runs
+//! in `cargo test` and CI without `make artifacts`. Scenarios:
+//!
+//! | scenario    | arrivals                      | lengths      | fleet            |
+//! |-------------|-------------------------------|--------------|------------------|
+//! | `nominal`   | fixed Poisson, under capacity | uniform mix  | gpu+cpu          |
+//! | `diurnal`   | MMPP low/high/medium cycle    | uniform mix  | gpu+cpu          |
+//! | `flash`     | flash-crowd spike + shedding  | uniform mix  | gpu+cpu, cap 16  |
+//! | `heavytail` | fixed Poisson                 | lognormal    | gpu+cpu          |
+//! | `edge-cpu`  | slow fixed Poisson            | uniform mix  | single CPU lane  |
+//!
+//! Tasks carry a 50/50 interactive/batch SLO mix whose class deadlines
+//! are folded into the priority point (see
+//! [`crate::scheduler::SloClass`]), so per-class attainment is pure
+//! accounting over the outcomes.
+//!
+//! ## Determinism contract
+//!
+//! The report contains no wall-clock fields: every metric comes from
+//! the virtual-clock simulation (plus, for wire-replayed cells, the
+//! parity verdict's deterministic counters and pass/fail extras). A
+//! sim-only run of the same configuration is therefore byte-identical
+//! across invocations and machines — the matrix doubles as a
+//! regression suite.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, ModelEntry, SchedParams};
+use crate::metrics::table::fmt_f;
+use crate::metrics::Table;
+use crate::scheduler::{Admission, LaneSet, LaneSpec, PolicyKind, SloClass, Task};
+use crate::sim::results::SloSummary;
+use crate::sim::{Calibration, LatencyModel};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+use crate::workload::{ArrivalTrace, LengthDist, LengthSampler, MmppPhase, SloMix};
+
+use super::replay::{run_parity, CellParity, ParityTolerance, ReplayCell};
+
+/// Offload threshold: uncertainty above this quarantines to the CPU
+/// lane under RT-LM (matches the parity suite's synthetic cells).
+const TAU: f64 = 50.0;
+
+/// One scenario of the gauntlet matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Fixed-rate Poisson arrivals comfortably under capacity — the
+    /// regime the CI gate asserts nonzero interactive attainment in.
+    Nominal,
+    /// Diurnal/bursty MMPP arrivals: a low/high/medium rate cycle
+    /// modelling a day's traffic curve at compressed scale.
+    Diurnal,
+    /// Flash crowd: half the arrivals land in a 2 s spike window, with
+    /// overload admission control on (`queue_cap`) so shedding engages.
+    Flash,
+    /// Heavy-tailed (lognormal) output lengths; uncertainty tracks the
+    /// sampled length, so the tail crosses the quarantine threshold.
+    HeavyTail,
+    /// Accelerator-less edge device: a single CPU fallback lane on the
+    /// [`DeviceProfile::edge_cpu`] profile, slow Poisson arrivals.
+    EdgeCpu,
+}
+
+impl Scenario {
+    /// Every scenario, in report order.
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Nominal,
+        Scenario::Diurnal,
+        Scenario::Flash,
+        Scenario::HeavyTail,
+        Scenario::EdgeCpu,
+    ];
+
+    /// CLI/report token.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Nominal => "nominal",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Flash => "flash",
+            Scenario::HeavyTail => "heavytail",
+            Scenario::EdgeCpu => "edge-cpu",
+        }
+    }
+
+    /// Parse a CLI token produced by [`label`](Self::label).
+    pub fn parse(s: &str) -> Result<Scenario> {
+        Scenario::ALL
+            .iter()
+            .copied()
+            .find(|sc| sc.label() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{s}' (nominal | diurnal | flash | heavytail | edge-cpu)"
+                )
+            })
+    }
+}
+
+/// The gauntlet's serving model: a stub entry whose eta/phi match the
+/// parity suite's synthetic cells.
+fn gauntlet_model() -> ModelEntry {
+    ModelEntry::stub("m", 0.05, 0.08)
+}
+
+/// Hand-built latency tables (same anchors as the parity tests), so
+/// the gauntlet needs no calibration artifact.
+fn gauntlet_latency() -> LatencyModel {
+    let mut c = Calibration::default();
+    c.decode
+        .insert("m".into(), BTreeMap::from([(1, 0.01), (4, 0.018), (16, 0.04)]));
+    c.prefill
+        .insert("m".into(), BTreeMap::from([((1, 16), 0.02), ((16, 64), 0.08)]));
+    LatencyModel::from_calibration(&c)
+}
+
+/// Build one scenario's task set: seeded arrivals from the scenario's
+/// trace generator, a seeded uncertainty/length mix, and the 50/50
+/// interactive (8 s) / batch (60 s) SLO assignment.
+fn scenario_tasks(scenario: Scenario, n: usize, seed: u64) -> Vec<Task> {
+    let trace = match scenario {
+        Scenario::Nominal => ArrivalTrace::poisson_fixed(n, 90.0, seed),
+        Scenario::Diurnal => ArrivalTrace::mmpp(
+            n,
+            &[
+                MmppPhase::new(30.0, 20.0),
+                MmppPhase::new(240.0, 20.0),
+                MmppPhase::new(90.0, 20.0),
+            ],
+            seed,
+        ),
+        Scenario::Flash => ArrivalTrace::flash_crowd(n, 40.0, 4.0, 2.0, 0.5, seed),
+        Scenario::HeavyTail => ArrivalTrace::poisson_fixed(n, 90.0, seed),
+        Scenario::EdgeCpu => ArrivalTrace::poisson_fixed(n, 24.0, seed),
+    };
+    let mut rng = Pcg64::new(seed ^ 0x6AB7_1E7);
+    let sampler = LengthSampler {
+        dist: LengthDist::Lognormal { mu: 2.5, sigma: 0.9 },
+        lo: 4,
+        hi: 96,
+    };
+    let mut tasks: Vec<Task> = trace
+        .times
+        .iter()
+        .enumerate()
+        .map(|(i, &arrival)| {
+            // heavy-tail cells: uncertainty tracks the sampled length
+            // (a perfect predictor), so the tail quarantines; others:
+            // ~1 in 4 tasks above tau, like the parity cells
+            let (u, len) = if scenario == Scenario::HeavyTail {
+                let len = sampler.sample(&mut rng);
+                (len as f64, len)
+            } else {
+                let u = if i % 4 == 0 {
+                    52.0 + rng.f64() * 8.0
+                } else {
+                    5.0 + rng.f64() * 40.0
+                };
+                (u, (u.round() as usize).clamp(4, 96))
+            };
+            Task {
+                id: i as u64,
+                text: String::new(),
+                prompt: vec![],
+                arrival,
+                priority_point: arrival + 3.0, // overwritten by the SLO mix
+                uncertainty: u,
+                true_len: len,
+                input_len: 8,
+                utype: scenario.label().into(),
+                malicious: false,
+                deferrals: 0,
+                slo: SloClass::Standard,
+            }
+        })
+        .collect();
+    let mix = SloMix {
+        interactive_frac: 0.5,
+        interactive_deadline: 8.0,
+        batch_deadline: 60.0,
+    };
+    mix.assign(&mut tasks, seed ^ 0x510);
+    tasks
+}
+
+/// Build the [`ReplayCell`] for one (scenario, policy) pair.
+fn scenario_cell(scenario: Scenario, kind: PolicyKind, n: usize, seed: u64) -> Result<ReplayCell> {
+    let model = gauntlet_model();
+    let mut params = SchedParams { batch_size: 8, ..Default::default() };
+    if scenario == Scenario::Flash {
+        // overload admission control on, so the spike actually sheds
+        params.queue_cap = 16;
+    }
+    let tasks = scenario_tasks(scenario, n, seed);
+    let label = format!("{}/{}", scenario.label(), kind.label());
+    if scenario == Scenario::EdgeCpu {
+        // accelerator-less device: one CPU lane, promoted to fallback
+        let mut spec = LaneSpec::cpu_offload("cpu", &model.name, 0.0);
+        spec.admission = Admission::Fallback;
+        let lanes = LaneSet::new(vec![spec])?;
+        return Ok(ReplayCell {
+            label,
+            kind,
+            params,
+            eta: model.eta,
+            lanes,
+            models: BTreeMap::from([(model.name.clone(), model.clone())]),
+            dev: DeviceProfile::edge_cpu(),
+            tasks,
+        });
+    }
+    Ok(ReplayCell::two_lane(
+        &label,
+        kind,
+        params,
+        &model,
+        TAU,
+        DeviceProfile::edge_server(),
+        tasks,
+    ))
+}
+
+/// One evaluated cell of the gauntlet matrix. All metrics come from
+/// the virtual-clock simulation; `wire` (when present) carries the
+/// deterministic sim-vs-wire parity verdict for the same cell.
+#[derive(Clone, Debug)]
+pub struct GauntletCell {
+    /// Scenario token (row key).
+    pub scenario: String,
+    /// Policy display name (column key), e.g. `RT-LM`.
+    pub policy: String,
+    /// Tasks in the cell (shed tasks included).
+    pub n_tasks: usize,
+    /// Mean response time (virtual seconds).
+    pub mean_response: f64,
+    /// p95 response time.
+    pub p95_response: f64,
+    /// p99 response time.
+    pub p99_response: f64,
+    /// p95 time to first token.
+    pub p95_ttft: f64,
+    /// Virtual time the last task completed at.
+    pub makespan: f64,
+    /// Fraction of tasks completing after their priority point.
+    pub miss_rate: f64,
+    /// Fraction of tasks dropped by overload admission control.
+    pub shed_rate: f64,
+    /// Lane names, in `LaneId` order.
+    pub lanes: Vec<String>,
+    /// Completed tasks per lane, indexed like `lanes`.
+    pub lane_tasks: Vec<usize>,
+    /// Per-SLO-class attainment rows.
+    pub slo: Vec<SloSummary>,
+    /// Sim-vs-wire parity verdict, for cells the wire filter selected.
+    pub wire: Option<CellParity>,
+    /// Populated instead of metrics when the cell failed to run.
+    pub error: Option<String>,
+}
+
+impl GauntletCell {
+    /// Did the cell run (and, if wire-replayed, agree across backends)?
+    pub fn clean(&self) -> bool {
+        if self.error.is_some() {
+            return false;
+        }
+        match &self.wire {
+            Some(w) => w.clean(),
+            None => true,
+        }
+    }
+
+    /// Attainment of one class, if the cell carried any such tasks.
+    pub fn attainment(&self, class: SloClass) -> Option<f64> {
+        self.slo.iter().find(|s| s.class == class).map(|s| s.attainment())
+    }
+}
+
+/// Configuration of one gauntlet run.
+#[derive(Clone, Debug)]
+pub struct GauntletConfig {
+    /// Tasks per cell.
+    pub n: usize,
+    /// Master seed: traces, length mixes and SLO assignment all derive
+    /// from it, so equal configs yield byte-identical reports.
+    pub seed: u64,
+    /// Policies (matrix columns).
+    pub policies: Vec<PolicyKind>,
+    /// Scenarios (matrix rows).
+    pub scenarios: Vec<Scenario>,
+    /// Scenarios to additionally wire-replay (sim-vs-wire parity);
+    /// empty = sim only, which keeps the report fully deterministic.
+    pub wire: Vec<Scenario>,
+    /// Wire-replay clock compression (`--time-scale`).
+    pub time_scale: f64,
+}
+
+impl Default for GauntletConfig {
+    fn default() -> Self {
+        GauntletConfig {
+            n: 48,
+            seed: 7,
+            policies: vec![PolicyKind::Fifo, PolicyKind::RtLm],
+            scenarios: Scenario::ALL.to_vec(),
+            wire: Vec::new(),
+            time_scale: 25.0,
+        }
+    }
+}
+
+/// Evaluate one (scenario, policy) cell: virtual-clock sim always,
+/// plus the wire parity replay when selected.
+fn run_cell(
+    cfg: &GauntletConfig,
+    lat: &LatencyModel,
+    scenario: Scenario,
+    kind: PolicyKind,
+) -> GauntletCell {
+    let err_cell = |msg: String| GauntletCell {
+        scenario: scenario.label().into(),
+        policy: kind.label().into(),
+        n_tasks: 0,
+        mean_response: 0.0,
+        p95_response: 0.0,
+        p99_response: 0.0,
+        p95_ttft: 0.0,
+        makespan: 0.0,
+        miss_rate: 0.0,
+        shed_rate: 0.0,
+        lanes: Vec::new(),
+        lane_tasks: Vec::new(),
+        slo: Vec::new(),
+        wire: None,
+        error: Some(msg),
+    };
+    let cell = match scenario_cell(scenario, kind, cfg.n, cfg.seed) {
+        Ok(c) => c,
+        Err(e) => return err_cell(format!("building cell: {e:#}")),
+    };
+    let sim = match cell.run_sim(lat) {
+        Ok(r) => r,
+        Err(e) => return err_cell(format!("sim run: {e:#}")),
+    };
+    let wire = if cfg.wire.contains(&scenario) {
+        let tol = ParityTolerance::for_time_scale(cfg.time_scale);
+        match run_parity(&cell, lat, cfg.time_scale, &tol) {
+            Ok(p) => Some(p),
+            Err(e) => return err_cell(format!("wire replay: {e:#}")),
+        }
+    } else {
+        None
+    };
+    let mut rt = sim.response_times();
+    let mut ttft = sim.ttft_times();
+    let mut lane_tasks = vec![0usize; sim.lanes.len()];
+    for o in &sim.outcomes {
+        if o.lane.index() < lane_tasks.len() {
+            lane_tasks[o.lane.index()] += 1;
+        }
+    }
+    let n_tasks = sim.outcomes.len();
+    GauntletCell {
+        scenario: scenario.label().into(),
+        policy: sim.policy.clone(),
+        n_tasks,
+        mean_response: rt.mean(),
+        p95_response: rt.p95(),
+        p99_response: rt.p99(),
+        p95_ttft: ttft.p95(),
+        makespan: sim.makespan,
+        miss_rate: sim.miss_rate(),
+        shed_rate: if n_tasks == 0 { 0.0 } else { sim.n_shed as f64 / n_tasks as f64 },
+        lanes: sim.lanes.clone(),
+        lane_tasks,
+        slo: sim.slo_summaries(),
+        wire,
+        error: None,
+    }
+}
+
+/// Run the full policy × scenario matrix. Cells that fail to run are
+/// reported as error cells instead of aborting the matrix, so one bad
+/// combination cannot hide the rest of the report.
+pub fn run_gauntlet(cfg: &GauntletConfig) -> Vec<GauntletCell> {
+    let lat = gauntlet_latency();
+    let mut cells = Vec::with_capacity(cfg.scenarios.len() * cfg.policies.len());
+    for &scenario in &cfg.scenarios {
+        for &kind in &cfg.policies {
+            cells.push(run_cell(cfg, &lat, scenario, kind));
+        }
+    }
+    cells
+}
+
+/// Serialise the matrix as the JSON report `scripts/gauntlet_report.py`
+/// consumes. Contains no wall-clock fields (see the module docs'
+/// determinism contract).
+pub fn gauntlet_json(cfg: &GauntletConfig, cells: &[GauntletCell]) -> Json {
+    let slo_json = |s: &SloSummary| {
+        obj(vec![
+            ("class", Json::Str(s.class.label().to_string())),
+            ("n", Json::Num(s.n as f64)),
+            ("met", Json::Num(s.met as f64)),
+            ("shed", Json::Num(s.shed as f64)),
+            ("attainment", Json::Num(s.attainment())),
+        ])
+    };
+    let cell_json = |c: &GauntletCell| {
+        if let Some(err) = &c.error {
+            return obj(vec![
+                ("scenario", Json::Str(c.scenario.clone())),
+                ("policy", Json::Str(c.policy.clone())),
+                ("error", Json::Str(err.clone())),
+            ]);
+        }
+        let mut fields = vec![
+            ("scenario", Json::Str(c.scenario.clone())),
+            ("policy", Json::Str(c.policy.clone())),
+            ("n_tasks", Json::Num(c.n_tasks as f64)),
+            ("mean_response", Json::Num(c.mean_response)),
+            ("p95_response", Json::Num(c.p95_response)),
+            ("p99_response", Json::Num(c.p99_response)),
+            ("p95_ttft", Json::Num(c.p95_ttft)),
+            ("makespan", Json::Num(c.makespan)),
+            ("miss_rate", Json::Num(c.miss_rate)),
+            ("shed_rate", Json::Num(c.shed_rate)),
+            (
+                "lanes",
+                Json::Arr(c.lanes.iter().map(|l| Json::Str(l.clone())).collect()),
+            ),
+            (
+                "lane_tasks",
+                Json::Arr(c.lane_tasks.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            ("slo", Json::Arr(c.slo.iter().map(slo_json).collect())),
+        ];
+        if let Some(w) = &c.wire {
+            fields.push((
+                "wire",
+                obj(vec![
+                    ("clean", Json::Bool(w.clean())),
+                    (
+                        "failures",
+                        Json::Arr(w.failures.iter().map(|f| Json::Str(f.clone())).collect()),
+                    ),
+                ]),
+            ));
+        }
+        obj(fields)
+    };
+    obj(vec![
+        ("n", Json::Num(cfg.n as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("time_scale", Json::Num(cfg.time_scale)),
+        (
+            "policies",
+            Json::Arr(cfg.policies.iter().map(|p| Json::Str(p.label().into())).collect()),
+        ),
+        (
+            "scenarios",
+            Json::Arr(cfg.scenarios.iter().map(|s| Json::Str(s.label().into())).collect()),
+        ),
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+    ])
+}
+
+/// Render the matrix as the ASCII table `rtlm gauntlet` prints.
+pub fn render_gauntlet(cells: &[GauntletCell]) -> String {
+    let mut table = Table::new(
+        "scenario gauntlet (virtual-clock metrics; attainment = met/total per SLO class)",
+        &[
+            "scenario", "policy", "n", "mean s", "p95 s", "p99 s", "ttft p95 s", "shed",
+            "int att", "batch att", "status",
+        ],
+    );
+    let att = |c: &GauntletCell, class: SloClass| {
+        c.attainment(class).map(|a| fmt_f(a, 2)).unwrap_or_else(|| "-".into())
+    };
+    for c in cells {
+        if let Some(err) = &c.error {
+            table.row(vec![
+                c.scenario.clone(),
+                c.policy.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("ERROR: {err}"),
+            ]);
+            continue;
+        }
+        let status = match &c.wire {
+            Some(w) if w.clean() => "ok (wire)".to_string(),
+            Some(w) => format!("WIRE FAIL ({})", w.failures.len()),
+            None => "ok".to_string(),
+        };
+        table.row(vec![
+            c.scenario.clone(),
+            c.policy.clone(),
+            c.n_tasks.to_string(),
+            fmt_f(c.mean_response, 2),
+            fmt_f(c.p95_response, 2),
+            fmt_f(c.p99_response, 2),
+            fmt_f(c.p95_ttft, 2),
+            fmt_f(c.shed_rate, 2),
+            att(c, SloClass::Interactive),
+            att(c, SloClass::Batch),
+            status,
+        ]);
+    }
+    table.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> GauntletConfig {
+        GauntletConfig { n: 24, ..Default::default() }
+    }
+
+    /// Tentpole acceptance: same config, byte-identical report JSON.
+    #[test]
+    fn sim_only_report_is_byte_identical() {
+        let cfg = test_cfg();
+        let a = gauntlet_json(&cfg, &run_gauntlet(&cfg)).to_string();
+        let b = gauntlet_json(&cfg, &run_gauntlet(&cfg)).to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"scenario\":"));
+        assert!(!a.contains("\"error\""), "matrix has error cells: {a}");
+    }
+
+    /// The full default matrix runs clean and conserves tasks and SLO
+    /// class counts in every cell.
+    #[test]
+    fn matrix_runs_clean_and_conserves_classes() {
+        let cfg = test_cfg();
+        let cells = run_gauntlet(&cfg);
+        assert_eq!(cells.len(), Scenario::ALL.len() * 2);
+        for c in &cells {
+            assert!(c.error.is_none(), "{}/{}: {:?}", c.scenario, c.policy, c.error);
+            assert_eq!(c.n_tasks, cfg.n, "{}/{}", c.scenario, c.policy);
+            assert_eq!(c.lane_tasks.iter().sum::<usize>(), cfg.n);
+            let classed: usize = c.slo.iter().map(|s| s.n).sum();
+            assert_eq!(classed, cfg.n);
+            // the mix assigns only interactive/batch, never standard
+            assert!(c.slo.iter().all(|s| s.class != SloClass::Standard));
+        }
+    }
+
+    /// The CI gate's core assertion: interactive traffic attains its
+    /// deadline under nominal load.
+    #[test]
+    fn nominal_interactive_attainment_positive() {
+        let cfg = test_cfg();
+        let cells = run_gauntlet(&cfg);
+        for policy in ["FIFO", "RT-LM"] {
+            let c = cells
+                .iter()
+                .find(|c| c.scenario == "nominal" && c.policy == policy)
+                .expect("nominal cell present");
+            let att = c.attainment(SloClass::Interactive).expect("interactive row");
+            assert!(att > 0.0, "{policy}: zero interactive attainment under nominal load");
+        }
+    }
+
+    /// The edge-cpu scenario really runs on a single CPU lane.
+    #[test]
+    fn edge_cpu_runs_on_a_single_cpu_lane() {
+        let cfg = test_cfg();
+        let cells = run_gauntlet(&cfg);
+        let c = cells
+            .iter()
+            .find(|c| c.scenario == "edge-cpu" && c.policy == "RT-LM")
+            .expect("edge-cpu cell present");
+        assert!(c.error.is_none());
+        assert_eq!(c.lanes, vec!["cpu".to_string()]);
+        assert_eq!(c.lane_tasks, vec![cfg.n]);
+    }
+
+    /// Scenario tokens round-trip through parse.
+    #[test]
+    fn scenario_parse_round_trips() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.label()).unwrap(), s);
+        }
+        assert!(Scenario::parse("weekend").is_err());
+    }
+}

@@ -9,9 +9,11 @@
 //!
 //! Invoked by `rtlm bench <experiment>` and the `paper_tables` bench.
 
+pub mod gauntlet;
 pub mod internal;
 pub mod replay;
 pub mod scenarios;
 
+pub use gauntlet::{gauntlet_json, render_gauntlet, run_gauntlet, GauntletConfig, Scenario};
 pub use replay::{run_parity, CellParity, ParityTolerance, ReplayCell};
 pub use scenarios::{run_experiment, ExperimentCtx};

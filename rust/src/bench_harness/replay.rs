@@ -575,6 +575,7 @@ mod tests {
             malicious: false,
             infer_secs: completion / 2.0,
             shed: false,
+            slo: crate::scheduler::SloClass::Standard,
         }
     }
 

@@ -624,6 +624,7 @@ fn unit_task(id: u64, d: f64, u: f64) -> Task {
         utype: "plain".into(),
         malicious: false,
         deferrals: 0,
+        slo: crate::scheduler::SloClass::Standard,
     }
 }
 

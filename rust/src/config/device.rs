@@ -70,14 +70,36 @@ impl DeviceProfile {
         }
     }
 
+    /// Accelerator-less edge device ("Edge-First Language Model
+    /// Inference", PAPERS.md): a small-core CPU is the only compute, so
+    /// fleets on this profile run a single CPU lane — no quarantine
+    /// target, no batching amortisation (`batch_knee = 1`), and few
+    /// workers. The `gpu_speed` is set but unreachable: gauntlet
+    /// edge-cpu cells build CPU-only lane sets.
+    pub fn edge_cpu() -> DeviceProfile {
+        DeviceProfile {
+            name: "edge-cpu".into(),
+            gpu_speed: 12.0,
+            // 2x slower than the edge server's EPYC per core
+            cpu_speed: 12.0,
+            batching_exp: 0.70,
+            dispatch_overhead: 4.0e-3,
+            // no PCIe hop: "offload" is a local queue hand-off
+            offload_overhead: 4.0e-3,
+            cpu_workers: 2,
+            batch_knee: 1.0,
+        }
+    }
+
     /// Look a profile up by CLI name (`edge-server`/`edge`,
-    /// `agx-xavier`/`xavier`/`agx`).
+    /// `agx-xavier`/`xavier`/`agx`, `edge-cpu`/`cpu`).
     pub fn by_name(name: &str) -> anyhow::Result<DeviceProfile> {
         match name {
             "edge-server" | "edge" => Ok(Self::edge_server()),
             "agx-xavier" | "xavier" | "agx" => Ok(Self::agx_xavier()),
+            "edge-cpu" | "cpu" => Ok(Self::edge_cpu()),
             other => Err(anyhow::anyhow!(
-                "unknown device profile '{other}' (edge-server | agx-xavier)"
+                "unknown device profile '{other}' (edge-server | agx-xavier | edge-cpu)"
             )),
         }
     }
@@ -99,6 +121,15 @@ mod tests {
     fn lookup_by_name() {
         assert!(DeviceProfile::by_name("edge").is_ok());
         assert!(DeviceProfile::by_name("xavier").is_ok());
+        assert!(DeviceProfile::by_name("edge-cpu").is_ok());
         assert!(DeviceProfile::by_name("tpu-v9000").is_err());
+    }
+
+    #[test]
+    fn edge_cpu_has_no_batching_amortisation() {
+        let d = DeviceProfile::edge_cpu();
+        assert_eq!(d.batch_knee, 1.0);
+        assert!(d.cpu_speed > DeviceProfile::edge_server().cpu_speed);
+        assert!(d.cpu_workers < DeviceProfile::edge_server().cpu_workers);
     }
 }

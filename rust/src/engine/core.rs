@@ -259,6 +259,14 @@ pub struct EngineReport {
     pub dispatch_log: Vec<(LaneId, Vec<u64>)>,
 }
 
+impl EngineReport {
+    /// Per-SLO-class attainment rows over the stored outcomes (empty in
+    /// streaming mode, like `outcomes` itself).
+    pub fn slo_summaries(&self) -> Vec<crate::sim::results::SloSummary> {
+        crate::sim::results::slo_summary(&self.outcomes)
+    }
+}
+
 /// Run `policy` over `n_total` tasks delivered by `backend` until every
 /// task has completed — the closed-workload wrapper around
 /// [`run_engine_stream`]. Panics (like the historical simulator) if the
@@ -524,6 +532,7 @@ pub fn run_engine_stream(
                     malicious: task.malicious,
                     infer_secs: t.infer_secs,
                     shed: false,
+                    slo: task.slo,
                 };
                 if let Some(cb) = on_complete.as_mut() {
                     cb(&outcome, &t.output);
@@ -602,6 +611,7 @@ pub fn run_engine_stream(
                 malicious: task.malicious,
                 infer_secs: 0.0,
                 shed: true,
+                slo: task.slo,
             };
             if let Some(cb) = on_complete.as_mut() {
                 cb(&outcome, &[]);

@@ -4,6 +4,7 @@
 //!   check                 validate artifacts + run a smoke inference
 //!   calibrate             measure PJRT latencies -> artifacts/calib.json
 //!   bench <experiment>    regenerate a paper table/figure ('all' = every one)
+//!   gauntlet              policy x scenario matrix -> deterministic JSON report
 //!   sim                   one simulated serving run with printed summary
 //!   serve                 real-mode serving run over a Poisson trace
 //!   tcp                   interactive line-protocol TCP server
@@ -128,6 +129,7 @@ fn run(args: &Args) -> Result<()> {
         "check" => check(args),
         "calibrate" => calibrate(args),
         "bench" => bench(args),
+        "gauntlet" => gauntlet(args),
         "sim" => sim(args),
         "serve" => serve_cmd(args),
         "tcp" => tcp(args),
@@ -253,6 +255,71 @@ fn bench(args: &Args) -> Result<()> {
         .map(String::as_str)
         .unwrap_or("all");
     run_experiment(&ctx, exp)
+}
+
+/// `rtlm gauntlet`: run the policy × scenario matrix (artifact-free —
+/// synthetic seeded traces, stub model, hand-built calibration) on the
+/// virtual clock, wire-replay the `--wire` subset, print the per-cell
+/// SLO-attainment table, and write the deterministic JSON report
+/// consumed by `scripts/gauntlet_report.py`. Nonzero exit on any cell
+/// error or wire parity failure (the CI gauntlet gate).
+fn gauntlet(args: &Args) -> Result<()> {
+    use rtlm::bench_harness::gauntlet::{
+        gauntlet_json, render_gauntlet, run_gauntlet, GauntletConfig, Scenario,
+    };
+
+    let mut cfg = GauntletConfig {
+        n: args.get_usize("n", 48)?,
+        seed: args.get_u64("seed", 7)?,
+        time_scale: args.get_f64("time-scale", 25.0)?,
+        ..Default::default()
+    };
+    if let Some(spec) = args.get("policies") {
+        cfg.policies =
+            spec.split(',').map(PolicyKind::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("scenarios") {
+        cfg.scenarios = if spec == "all" {
+            Scenario::ALL.to_vec()
+        } else {
+            spec.split(',').map(Scenario::parse).collect::<Result<Vec<_>>>()?
+        };
+    }
+    if let Some(spec) = args.get("wire") {
+        cfg.wire = if spec == "all" {
+            cfg.scenarios.clone()
+        } else {
+            spec.split(',').map(Scenario::parse).collect::<Result<Vec<_>>>()?
+        };
+    }
+    if cfg.policies.is_empty() || cfg.scenarios.is_empty() {
+        return Err(anyhow!("gauntlet needs at least one policy and one scenario"));
+    }
+
+    println!(
+        "gauntlet: {} scenario(s) x {} policy(ies), n={} seed={}{}",
+        cfg.scenarios.len(),
+        cfg.policies.len(),
+        cfg.n,
+        cfg.seed,
+        if cfg.wire.is_empty() {
+            String::new()
+        } else {
+            format!(", wire-replaying {} scenario(s) at {}x", cfg.wire.len(), cfg.time_scale)
+        }
+    );
+    let cells = run_gauntlet(&cfg);
+    print!("{}", render_gauntlet(&cells));
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, gauntlet_json(&cfg, &cells).to_string())?;
+        println!("gauntlet report written to {path}");
+    }
+    let bad = cells.iter().filter(|c| !c.clean()).count();
+    if bad > 0 {
+        return Err(anyhow!("gauntlet failed on {bad} of {} cells", cells.len()));
+    }
+    println!("gauntlet clean on all {} cells", cells.len());
+    Ok(())
 }
 
 /// `rtlm bench --wire`: replay the internal comparison cells on the

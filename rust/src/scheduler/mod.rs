@@ -21,6 +21,6 @@ pub use baselines::{Fifo, Hpf, Luf, Muf};
 pub use lane::{format_lane_counts, Admission, LaneId, LaneKind, LaneSet, LaneSpec};
 pub use policy::{Batch, Policy, PolicyKind, WHOLE_BATCH};
 pub use queue::{LaneQ, PolicyQueues, UpQueue};
-pub use task::Task;
+pub use task::{SloClass, Task};
 pub use uasched::UaSched;
 pub use up::up_priority;

@@ -1,4 +1,48 @@
-//! The unit of work: one LM request with its uncertainty metadata.
+//! The unit of work: one LM request with its uncertainty metadata and
+//! (optionally) a service-level-objective class.
+
+/// Service-level-objective class of a request. A class carries no
+/// scheduler machinery of its own: class deadlines are encoded in the
+/// task's priority point (`d_J = arrival + deadline`), which the UP
+/// priority (Eq. 3) already consumes — so classed and classless tasks
+/// flow through identical scheduling code, and per-class attainment is
+/// pure accounting over the outcomes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// No declared SLO — the historical default; priority points come
+    /// from `deadline_base + phi * |J|`. Reports and JSONL exports omit
+    /// class columns for these, keeping classless runs bit-identical to
+    /// pre-SLO behaviour.
+    #[default]
+    Standard,
+    /// Latency-sensitive (chat-style) traffic with a tight deadline.
+    Interactive,
+    /// Throughput-oriented background traffic with a loose deadline.
+    Batch,
+}
+
+impl SloClass {
+    /// Lower-case display/report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SloClass::Standard => "standard",
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a report/CLI token produced by [`label`](Self::label).
+    pub fn parse(s: &str) -> anyhow::Result<SloClass> {
+        match s {
+            "standard" => Ok(SloClass::Standard),
+            "interactive" => Ok(SloClass::Interactive),
+            "batch" => Ok(SloClass::Batch),
+            other => Err(anyhow::anyhow!(
+                "unknown SLO class '{other}' (standard | interactive | batch)"
+            )),
+        }
+    }
+}
 
 /// A scheduled LM request (paper's task J).
 #[derive(Clone, Debug)]
@@ -27,6 +71,10 @@ pub struct Task {
     /// How many times consolidation has re-queued this task (bounded-
     /// deferral anti-starvation, see uasched.rs).
     pub deferrals: u32,
+    /// Service-level-objective class; [`SloClass::Standard`] for
+    /// classless (historical) traffic. The class deadline is already
+    /// folded into `priority_point`.
+    pub slo: SloClass,
 }
 
 impl Task {
@@ -59,6 +107,7 @@ pub fn test_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -
         utype: "plain".into(),
         malicious: false,
         deferrals: 0,
+        slo: SloClass::Standard,
     }
 }
 

@@ -123,6 +123,11 @@ impl ServeReport {
     pub fn fmt_batches(&self) -> String {
         format_lane_counts(&self.lanes, &self.n_batches)
     }
+
+    /// Per-SLO-class attainment rows (see [`crate::sim::slo_summary`]).
+    pub fn slo_summaries(&self) -> Vec<crate::sim::results::SloSummary> {
+        crate::sim::results::slo_summary(&self.outcomes)
+    }
 }
 
 /// Serve `tasks` with `policy` over the `lanes` fleet, executing

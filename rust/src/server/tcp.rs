@@ -413,6 +413,7 @@ fn task_from_submit(msg: &Json, cfg: &TcpServerConfig, id: u64, now: f64) -> Res
         utype,
         malicious,
         deferrals: 0,
+        slo: crate::scheduler::SloClass::Standard,
     })
 }
 
@@ -564,6 +565,7 @@ fn build_task(
         utype: "interactive".into(),
         malicious: false,
         deferrals: 0,
+        slo: crate::scheduler::SloClass::Standard,
     })
 }
 

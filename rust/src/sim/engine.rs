@@ -145,6 +145,7 @@ mod tests {
             utype: "plain".into(),
             malicious: false,
             deferrals: 0,
+            slo: crate::scheduler::SloClass::Standard,
         }
     }
 

@@ -15,4 +15,4 @@ pub mod results;
 pub use calib::Calibration;
 pub use engine::{run_sim, run_sim_lanes, SimOutcome};
 pub use latency::LatencyModel;
-pub use results::{SimResult, TaskOutcome};
+pub use results::{slo_summary, SimResult, SloSummary, TaskOutcome};

@@ -3,7 +3,7 @@
 //! throughput, priority-point misses).
 
 use crate::metrics::Samples;
-use crate::scheduler::LaneId;
+use crate::scheduler::{LaneId, SloClass};
 use crate::util::json::{obj, Json};
 
 /// Everything the engine accounted for one completed task.
@@ -37,6 +37,9 @@ pub struct TaskOutcome {
     /// `completion == first_token == arrival` and `infer_secs == 0`.
     /// Serving front-ends reply `{"error":"shed"}` for these.
     pub shed: bool,
+    /// SLO class the task was submitted under ([`SloClass::Standard`]
+    /// for classless traffic — such outcomes export no class columns).
+    pub slo: SloClass,
 }
 
 impl TaskOutcome {
@@ -56,6 +59,61 @@ impl TaskOutcome {
     pub fn missed(&self) -> bool {
         self.completion > self.priority_point
     }
+
+    /// SLO attainment for this task: it actually executed (was not
+    /// shed) and completed by its priority point. Shed tasks count as
+    /// violations — dropping a request never satisfies its SLO.
+    pub fn deadline_met(&self) -> bool {
+        !self.shed && !self.missed()
+    }
+}
+
+/// Per-class SLO attainment over one run's outcomes (pure accounting:
+/// classes carry no scheduler state, see [`SloClass`]).
+#[derive(Clone, Debug)]
+pub struct SloSummary {
+    /// The class this row aggregates.
+    pub class: SloClass,
+    /// Tasks submitted under the class (including shed ones).
+    pub n: usize,
+    /// Tasks whose [`TaskOutcome::deadline_met`] held.
+    pub met: usize,
+    /// Tasks dropped by overload admission control (subset of `n - met`).
+    pub shed: usize,
+}
+
+impl SloSummary {
+    /// Fraction of the class's tasks that met their deadline (0 for an
+    /// empty class).
+    pub fn attainment(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.met as f64 / self.n as f64
+    }
+}
+
+/// Group outcomes by SLO class, in declaration order (standard,
+/// interactive, batch), skipping classes with no tasks. Shared by
+/// [`SimResult`], the wire engine's report, and the serving report.
+pub fn slo_summary(outcomes: &[TaskOutcome]) -> Vec<SloSummary> {
+    let mut by_class = std::collections::BTreeMap::<SloClass, SloSummary>::new();
+    for o in outcomes {
+        let row = by_class.entry(o.slo).or_insert(SloSummary {
+            class: o.slo,
+            n: 0,
+            met: 0,
+            shed: 0,
+        });
+        row.n += 1;
+        if o.deadline_met() {
+            row.met += 1;
+        }
+        if o.shed {
+            row.shed += 1;
+        }
+    }
+    by_class.into_values().collect()
 }
 
 /// Aggregate outcome of one simulated serving run.
@@ -188,7 +246,7 @@ impl SimResult {
         use std::io::Write;
         let mut f = std::fs::File::create(path)?;
         for o in &self.outcomes {
-            let rec = obj(vec![
+            let mut fields = vec![
                 ("id", Json::Num(o.id as f64)),
                 ("arrival", Json::Num(o.arrival)),
                 ("completion", Json::Num(o.completion)),
@@ -202,10 +260,22 @@ impl SimResult {
                 ("malicious", Json::Bool(o.malicious)),
                 ("missed", Json::Bool(o.missed())),
                 ("shed", Json::Bool(o.shed)),
-            ]);
+            ];
+            // Class columns only for classed tasks: classless exports
+            // stay byte-identical to the pre-SLO format.
+            if o.slo != SloClass::Standard {
+                fields.push(("slo_class", Json::Str(o.slo.label().to_string())));
+                fields.push(("deadline_met", Json::Bool(o.deadline_met())));
+            }
+            let rec = obj(fields);
             writeln!(f, "{rec}")?;
         }
         Ok(())
+    }
+
+    /// Per-SLO-class attainment rows (see [`slo_summary`]).
+    pub fn slo_summaries(&self) -> Vec<SloSummary> {
+        slo_summary(&self.outcomes)
     }
 
     /// Mean pure-inference latency (Fig. 14's second series).

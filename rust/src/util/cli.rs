@@ -117,6 +117,15 @@ pub fn help_text(experiments: &[&str]) -> String {
          \x20     stats within a time-scale-aware tolerance); nonzero exit\n\
          \x20     on any parity failure. FILTER keeps cells whose label\n\
          \x20     contains it (also accepted as --wire FILTER).\n\
+         \x20 gauntlet [--n N] [--seed S] [--policies p1,p2] [--scenarios s1,s2]\n\
+         \x20     [--wire SCENARIOS] [--time-scale S] [--out FILE]\n\
+         \x20     run the policy x scenario matrix (artifact-free: synthetic\n\
+         \x20     seeded traces — nominal, diurnal, flash, heavytail,\n\
+         \x20     edge-cpu — with a 50/50 interactive/batch SLO mix) on the\n\
+         \x20     virtual clock, wire-replaying the --wire subset (comma\n\
+         \x20     list or 'all'), print the per-cell attainment table, and\n\
+         \x20     write the deterministic JSON report to --out; nonzero\n\
+         \x20     exit on any cell error or wire parity failure.\n\
          \x20 sim [--model M] [--policy P] [--n N] [--seed S] [--device D]\n\
          \x20     [--variance small|normal|large] [--sched batch|step]\n\
          \x20     [--slots N] [--overrun-factor F] [--queue-cap N]\n\

@@ -1,6 +1,7 @@
-//! Workload engine: corpus loading, Poisson arrival traces (Sec. V-A
-//! "Workload setup"), uncertainty-variance subsets (Sec. V-B), and the
-//! adversarial "malicious task" generator (Sec. V-G).
+//! Workload engine: corpus loading, arrival traces (Sec. V-A "Workload
+//! setup" Poisson plus the gauntlet's MMPP / flash-crowd / heavy-tailed
+//! generators), SLO-class assignment, uncertainty-variance subsets
+//! (Sec. V-B), and the adversarial "malicious task" generator (Sec. V-G).
 
 pub mod corpus;
 pub mod malicious;
@@ -11,5 +12,5 @@ pub mod trace;
 
 pub use corpus::WorkItem;
 pub use synth::SynthGenerator;
-pub use tasks::TaskFactory;
-pub use trace::ArrivalTrace;
+pub use tasks::{SloMix, TaskFactory};
+pub use trace::{ArrivalTrace, LengthDist, LengthSampler, MmppPhase};

@@ -5,9 +5,10 @@
 use anyhow::Result;
 
 use crate::config::ModelEntry;
-use crate::scheduler::Task;
+use crate::scheduler::{SloClass, Task};
 use crate::textgen::ScoreScratch;
 use crate::uncertainty::Estimator;
+use crate::util::rng::Pcg64;
 
 use super::corpus::WorkItem;
 use super::malicious;
@@ -81,6 +82,7 @@ impl TaskFactory {
             utype: item.utype.clone(),
             malicious: malicious::is_crafted(item),
             deferrals: 0,
+            slo: SloClass::Standard,
         })
     }
 
@@ -105,5 +107,77 @@ impl TaskFactory {
     /// The estimator tasks are scored with.
     pub fn estimator(&self) -> &Estimator {
         &self.estimator
+    }
+}
+
+/// Seeded two-class SLO assigner: a fraction of tasks becomes
+/// [`SloClass::Interactive`] (tight deadline), the rest
+/// [`SloClass::Batch`] (loose deadline). Assignment rewrites each
+/// task's priority point to `arrival + class deadline`, which is the
+/// entire scheduler interface of an SLO class — UP priority (Eq. 3)
+/// consumes priority points, so classed traffic needs no new
+/// scheduling code and classless runs are untouched.
+#[derive(Clone, Copy, Debug)]
+pub struct SloMix {
+    /// Fraction of tasks assigned the interactive class (clamped to
+    /// [0, 1] by the `rng.f64() < frac` draw).
+    pub interactive_frac: f64,
+    /// Relative deadline (seconds after arrival) for interactive tasks.
+    pub interactive_deadline: f64,
+    /// Relative deadline (seconds after arrival) for batch tasks.
+    pub batch_deadline: f64,
+}
+
+impl SloMix {
+    /// Assign classes task-by-task with a fresh PCG64 stream: the same
+    /// `(tasks, seed)` always yields the same classes and deadlines.
+    pub fn assign(&self, tasks: &mut [Task], seed: u64) {
+        let mut rng = Pcg64::new(seed);
+        for t in tasks.iter_mut() {
+            let (slo, deadline) = if rng.f64() < self.interactive_frac {
+                (SloClass::Interactive, self.interactive_deadline)
+            } else {
+                (SloClass::Batch, self.batch_deadline)
+            };
+            t.slo = slo;
+            t.priority_point = t.arrival + deadline;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::task::test_task;
+
+    #[test]
+    fn slo_mix_is_deterministic_and_rewrites_deadlines() {
+        let mix = SloMix {
+            interactive_frac: 0.5,
+            interactive_deadline: 2.0,
+            batch_deadline: 60.0,
+        };
+        let mk = || (0..64).map(|i| test_task(i, i as f64 * 0.1, 0.0, 10.0)).collect::<Vec<_>>();
+        let mut a = mk();
+        let mut b = mk();
+        mix.assign(&mut a, 9);
+        mix.assign(&mut b, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.slo, y.slo);
+            assert_eq!(x.priority_point, y.priority_point);
+            let expect = match x.slo {
+                SloClass::Interactive => x.arrival + 2.0,
+                SloClass::Batch => x.arrival + 60.0,
+                SloClass::Standard => panic!("mix never assigns Standard"),
+            };
+            assert_eq!(x.priority_point, expect);
+        }
+        // both classes actually occur at frac = 0.5 over 64 draws
+        assert!(a.iter().any(|t| t.slo == SloClass::Interactive));
+        assert!(a.iter().any(|t| t.slo == SloClass::Batch));
+        // a different seed produces a different assignment
+        let mut c = mk();
+        mix.assign(&mut c, 10);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.slo != y.slo));
     }
 }

@@ -1,9 +1,29 @@
-//! Poisson arrival traces (Sec. V-A): inter-arrival times sampled from
-//! an exponential distribution whose rate beta (queries/minute) evolves
-//! over time — the paper iterates integer beta from 10 to 150, one
-//! minute each, covering light-load through high-traffic peaks.
+//! Arrival traces and length mixes (Sec. V-A and the scenario
+//! gauntlet). The paper's workload is a Poisson process whose rate beta
+//! (queries/minute) sweeps 10..150 one minute at a time; the gauntlet
+//! adds diurnal/bursty [Markov-modulated Poisson](ArrivalTrace::mmpp)
+//! arrivals, [flash-crowd spikes](ArrivalTrace::flash_crowd), and
+//! heavy-tailed ([`LengthDist`]) prompt/output-length mixes. Every
+//! generator is seeded and bit-reproducible: same seed, same trace.
 
 use crate::util::rng::Pcg64;
+
+/// One phase of a Markov-modulated Poisson process: a mean arrival
+/// rate held for a fixed span of trace time.
+#[derive(Clone, Copy, Debug)]
+pub struct MmppPhase {
+    /// Mean arrival rate during this phase (queries/minute).
+    pub rate_per_min: f64,
+    /// How long the phase lasts (seconds of trace time).
+    pub dur_secs: f64,
+}
+
+impl MmppPhase {
+    /// Convenience constructor.
+    pub fn new(rate_per_min: f64, dur_secs: f64) -> MmppPhase {
+        MmppPhase { rate_per_min, dur_secs }
+    }
+}
 
 /// A fully materialised arrival schedule.
 #[derive(Clone, Debug)]
@@ -73,6 +93,78 @@ impl ArrivalTrace {
         ArrivalTrace { times }
     }
 
+    /// Markov-modulated Poisson process: the arrival rate holds each
+    /// phase's `rate_per_min` for `dur_secs`, cycling through `phases`
+    /// until `n` arrivals are generated — the diurnal/bursty regime of
+    /// the scenario gauntlet (a low/high/medium cycle models a day's
+    /// traffic curve at compressed scale). Gaps are exponential within
+    /// a phase and clamp at the phase boundary, exactly like the beta
+    /// sweep's step transitions.
+    pub fn mmpp(n: usize, phases: &[MmppPhase], seed: u64) -> ArrivalTrace {
+        assert!(!phases.is_empty(), "an MMPP trace needs at least one phase");
+        assert!(
+            phases.iter().all(|p| p.rate_per_min > 0.0 && p.dur_secs > 0.0),
+            "MMPP phases need positive rates and durations"
+        );
+        let mut rng = Pcg64::new(seed);
+        let mut times = Vec::with_capacity(n);
+        let mut phase_start = 0.0;
+        let mut t = 0.0;
+        let mut i = 0usize;
+        while times.len() < n {
+            let phase = phases[i % phases.len()];
+            let mean_gap = 60.0 / phase.rate_per_min;
+            let phase_end = phase_start + phase.dur_secs;
+            loop {
+                let gap = rng.exponential(mean_gap);
+                if t + gap >= phase_end {
+                    t = phase_end;
+                    break;
+                }
+                t += gap;
+                times.push(t);
+                if times.len() == n {
+                    break;
+                }
+            }
+            phase_start = phase_end;
+            i += 1;
+        }
+        ArrivalTrace { times }
+    }
+
+    /// Flash crowd: a steady background Poisson process at
+    /// `base_per_min`, plus a burst of `spike_frac` of the `n` arrivals
+    /// landing uniformly inside `[spike_start, spike_start +
+    /// spike_dur]` — the thundering-herd regime overload shedding and
+    /// uncertainty-aware ordering are supposed to survive.
+    pub fn flash_crowd(
+        n: usize,
+        base_per_min: f64,
+        spike_start: f64,
+        spike_dur: f64,
+        spike_frac: f64,
+        seed: u64,
+    ) -> ArrivalTrace {
+        assert!(spike_dur > 0.0 && spike_start >= 0.0, "spike window must be positive");
+        let mut rng = Pcg64::new(seed);
+        let frac = spike_frac.clamp(0.0, 1.0);
+        let n_spike = ((n as f64) * frac).round() as usize;
+        let n_base = n.saturating_sub(n_spike);
+        let mut times = Vec::with_capacity(n);
+        let mean_gap = 60.0 / base_per_min.max(1e-9);
+        let mut t = 0.0;
+        for _ in 0..n_base {
+            t += rng.exponential(mean_gap);
+            times.push(t);
+        }
+        for _ in 0..n_spike {
+            times.push(spike_start + rng.f64() * spike_dur);
+        }
+        times.sort_by(f64::total_cmp);
+        ArrivalTrace { times }
+    }
+
     /// Step duration that makes one full `beta_lo..=beta_hi` sweep emit
     /// roughly `n` arrivals.
     pub fn sweep_step_for(n: usize, beta_lo: u32, beta_hi: u32) -> f64 {
@@ -93,6 +185,60 @@ impl ArrivalTrace {
     /// Time of the last arrival (0 when empty).
     pub fn duration(&self) -> f64 {
         self.times.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// A heavy-tailed output-length distribution family. LLM generation
+/// lengths are strongly right-skewed; both classical heavy-tail shapes
+/// are offered so the gauntlet can stress length-aware scheduling.
+#[derive(Clone, Copy, Debug)]
+pub enum LengthDist {
+    /// `exp(N(mu, sigma))` tokens — moderate skew, finite variance.
+    Lognormal {
+        /// Mean of the underlying normal (log-tokens).
+        mu: f64,
+        /// Standard deviation of the underlying normal.
+        sigma: f64,
+    },
+    /// `scale / U^(1/alpha)` tokens — a power-law tail; `alpha <= 2`
+    /// has infinite variance (before the clamp).
+    Pareto {
+        /// Minimum (scale) parameter in tokens.
+        scale: f64,
+        /// Tail exponent; smaller is heavier.
+        alpha: f64,
+    },
+}
+
+/// A clamped heavy-tailed sampler for per-request lengths (tokens).
+/// The clamp keeps samples inside the serving model's output-length
+/// band, so a pathological tail draw cannot generate forever.
+#[derive(Clone, Copy, Debug)]
+pub struct LengthSampler {
+    /// The tail shape.
+    pub dist: LengthDist,
+    /// Minimum length after clamping (tokens).
+    pub lo: usize,
+    /// Maximum length after clamping (tokens).
+    pub hi: usize,
+}
+
+impl LengthSampler {
+    /// Draw one clamped length. Non-finite draws (possible only from
+    /// degenerate parameters) clamp to `hi`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let raw = match self.dist {
+            LengthDist::Lognormal { mu, sigma } => rng.normal(mu, sigma).exp(),
+            LengthDist::Pareto { scale, alpha } => {
+                // invert the CDF on (0, 1]; guard the u=0 endpoint
+                let u = (1.0 - rng.f64()).max(1e-12);
+                scale / u.powf(1.0 / alpha.max(1e-9))
+            }
+        };
+        if !raw.is_finite() {
+            return self.hi;
+        }
+        (raw.round() as usize).clamp(self.lo, self.hi)
     }
 }
 
@@ -132,5 +278,120 @@ mod tests {
         let a = ArrivalTrace::poisson_sweep(100, 10, 50, 7);
         let b = ArrivalTrace::poisson_sweep(100, 10, 50, 7);
         assert_eq!(a.times, b.times);
+    }
+
+    fn diurnal_phases() -> Vec<MmppPhase> {
+        vec![
+            MmppPhase::new(30.0, 60.0),
+            MmppPhase::new(240.0, 60.0),
+            MmppPhase::new(90.0, 60.0),
+        ]
+    }
+
+    /// Satellite property: every generator's arrivals are finite,
+    /// non-negative, and non-decreasing.
+    #[test]
+    fn gauntlet_traces_are_sorted_and_finite() {
+        let traces = [
+            ArrivalTrace::mmpp(800, &diurnal_phases(), 11),
+            ArrivalTrace::flash_crowd(800, 60.0, 5.0, 2.0, 0.5, 12),
+        ];
+        for t in &traces {
+            assert_eq!(t.len(), 800);
+            assert!(t.times.iter().all(|x| x.is_finite() && *x >= 0.0));
+            assert!(t.times.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    /// Satellite property: seeded runs are bit-reproducible; a
+    /// different seed produces a different trace.
+    #[test]
+    fn gauntlet_traces_deterministic_by_seed() {
+        let phases = diurnal_phases();
+        let a = ArrivalTrace::mmpp(300, &phases, 42);
+        let b = ArrivalTrace::mmpp(300, &phases, 42);
+        assert_eq!(a.times, b.times);
+        let c = ArrivalTrace::mmpp(300, &phases, 43);
+        assert_ne!(a.times, c.times);
+
+        let fa = ArrivalTrace::flash_crowd(300, 60.0, 5.0, 2.0, 0.5, 42);
+        let fb = ArrivalTrace::flash_crowd(300, 60.0, 5.0, 2.0, 0.5, 42);
+        assert_eq!(fa.times, fb.times);
+    }
+
+    /// Satellite property: the MMPP empirical rate inside each phase's
+    /// windows lands within tolerance of that phase's configured rate.
+    #[test]
+    fn mmpp_per_phase_empirical_rate_within_tolerance() {
+        let phases = [MmppPhase::new(30.0, 60.0), MmppPhase::new(240.0, 60.0)];
+        let t = ArrivalTrace::mmpp(4000, &phases, 5);
+        let cycle = 120.0;
+        let n_cycles = (t.duration() / cycle).floor() as usize;
+        assert!(n_cycles >= 3, "trace too short for a rate check: {n_cycles} cycles");
+        // tally arrivals per phase position across all complete cycles
+        let mut counts = [0usize; 2];
+        for &x in &t.times {
+            if x >= n_cycles as f64 * cycle {
+                break;
+            }
+            let in_cycle = x % cycle;
+            counts[if in_cycle < 60.0 { 0 } else { 1 }] += 1;
+        }
+        for (i, phase) in phases.iter().enumerate() {
+            let rate = counts[i] as f64 / n_cycles as f64; // arrivals/min (60 s windows)
+            let tol = 0.25 * phase.rate_per_min;
+            assert!(
+                (rate - phase.rate_per_min).abs() < tol,
+                "phase {i}: empirical {rate}/min vs configured {}/min",
+                phase.rate_per_min
+            );
+        }
+    }
+
+    /// Satellite property: the configured fraction of flash-crowd
+    /// arrivals lands inside the spike window.
+    #[test]
+    fn flash_crowd_spike_mass_inside_window() {
+        let (n, frac, start, dur) = (1000usize, 0.4, 8.0, 2.0);
+        let t = ArrivalTrace::flash_crowd(n, 60.0, start, dur, frac, 9);
+        assert_eq!(t.len(), n);
+        let in_window =
+            t.times.iter().filter(|&&x| x >= start && x <= start + dur).count();
+        // every spike arrival lands inside; background adds a few more
+        let spike = (n as f64 * frac).round() as usize;
+        assert!(in_window >= spike, "window holds {in_window} < spike mass {spike}");
+        // the window is genuinely denser than the background: at 60/min
+        // the 2 s window would carry ~2 background arrivals
+        assert!(in_window as f64 >= 0.9 * spike as f64 + 2.0);
+    }
+
+    /// Satellite property: the heavy-tailed length sampler respects its
+    /// clamp for both tail families and actually spreads.
+    #[test]
+    fn length_sampler_respects_clamp() {
+        let samplers = [
+            LengthSampler {
+                dist: LengthDist::Lognormal { mu: 2.5, sigma: 0.9 },
+                lo: 4,
+                hi: 96,
+            },
+            LengthSampler { dist: LengthDist::Pareto { scale: 6.0, alpha: 1.1 }, lo: 4, hi: 96 },
+        ];
+        for s in &samplers {
+            let mut rng = Pcg64::new(77);
+            let draws: Vec<usize> = (0..2000).map(|_| s.sample(&mut rng)).collect();
+            assert!(draws.iter().all(|&x| (s.lo..=s.hi).contains(&x)));
+            let (min, max) = (draws.iter().min().unwrap(), draws.iter().max().unwrap());
+            assert!(max > min, "degenerate sampler: all draws {min}");
+            // heavy tails must actually hit the clamp ceiling sometimes
+            assert!(*max == s.hi, "{:?} never reached hi", s.dist);
+        }
+        // determinism
+        let s = samplers[0];
+        let mut a = Pcg64::new(3);
+        let mut b = Pcg64::new(3);
+        let xa: Vec<usize> = (0..100).map(|_| s.sample(&mut a)).collect();
+        let xb: Vec<usize> = (0..100).map(|_| s.sample(&mut b)).collect();
+        assert_eq!(xa, xb);
     }
 }

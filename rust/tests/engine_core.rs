@@ -30,7 +30,7 @@ use rtlm::engine::{
 };
 use rtlm::executor::{BatchExecutor, ExecutorFactory, InstantExecutor, ModeledExecutor};
 use rtlm::scheduler::{
-    Admission, Batch, Fifo, LaneId, LaneKind, LaneSet, LaneSpec, PolicyKind, Task,
+    Admission, Batch, Fifo, LaneId, LaneKind, LaneSet, LaneSpec, PolicyKind, SloClass, Task,
 };
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::util::rng::Pcg64;
@@ -48,6 +48,7 @@ fn mk_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task
         utype: "test".into(),
         malicious: false,
         deferrals: 0,
+        slo: SloClass::Standard,
     }
 }
 

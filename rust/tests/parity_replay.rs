@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 
 use rtlm::bench_harness::replay::{run_parity, ParityTolerance, ReplayCell};
 use rtlm::config::{DeviceProfile, ModelEntry, SchedMode, SchedParams};
-use rtlm::scheduler::{PolicyKind, Task};
+use rtlm::scheduler::{PolicyKind, SloClass, Task};
 use rtlm::sim::{Calibration, LatencyModel};
 use rtlm::util::rng::Pcg64;
 
@@ -36,6 +36,7 @@ fn mk_task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task
         utype: "test".into(),
         malicious: false,
         deferrals: 0,
+        slo: SloClass::Standard,
     }
 }
 

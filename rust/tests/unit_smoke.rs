@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use rtlm::config::{DeviceProfile, ModelEntry, SchedParams};
 use rtlm::scheduler::{
-    up_priority, Fifo, LaneId, LaneSet, Policy, PolicyKind, Task, UaSched, WHOLE_BATCH,
+    up_priority, Fifo, LaneId, LaneSet, Policy, PolicyKind, SloClass, Task, UaSched, WHOLE_BATCH,
 };
 use rtlm::sim::{run_sim, Calibration, LatencyModel};
 use rtlm::util::json::{obj, Json};
@@ -26,6 +26,7 @@ fn task(id: u64, arrival: f64, priority_point: f64, uncertainty: f64) -> Task {
         utype: "unit".into(),
         malicious: false,
         deferrals: 0,
+        slo: SloClass::Standard,
     }
 }
 
@@ -78,6 +79,9 @@ const PUBLIC_FLAGS: &[&str] = &[
     "--rate",
     "--min-shed",
     "--max-shed-rate",
+    "--policies",
+    "--scenarios",
+    "--out",
 ];
 
 #[test]
@@ -86,11 +90,18 @@ fn help_text_mentions_every_public_flag_and_command() {
     for flag in PUBLIC_FLAGS {
         assert!(help.contains(flag), "help text is missing the {flag} flag");
     }
-    for cmd in ["check", "calibrate", "bench", "sim", "serve", "tcp", "route", "loadgen", "score"] {
+    for cmd in [
+        "check", "calibrate", "bench", "gauntlet", "sim", "serve", "tcp", "route", "loadgen",
+        "score",
+    ] {
         assert!(help.contains(cmd), "help text is missing the {cmd} command");
     }
     for exp in rtlm::bench_harness::scenarios::EXPERIMENTS {
         assert!(help.contains(exp), "help text is missing experiment {exp}");
+    }
+    // the gauntlet's scenario tokens stay documented inline
+    for scenario in ["nominal", "diurnal", "flash", "heavytail", "edge-cpu"] {
+        assert!(help.contains(scenario), "help text is missing the {scenario} scenario");
     }
     // the lane-spec grammar stays documented inline
     assert!(help.contains("kind[:model][:key=value]*"));

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Render an `rtlm gauntlet` JSON report as a markdown summary.
+
+Usage:
+    gauntlet_report.py gauntlet.json
+
+The input is the deterministic report `rtlm gauntlet --out` writes
+(`bench_harness::gauntlet::gauntlet_json`): one cell per policy ×
+scenario pair, each carrying virtual-clock response/TTFT statistics,
+the shed rate, per-SLO-class attainment rows, and (for wire-replayed
+cells) the sim-vs-wire parity verdict.
+
+Prints the comparison matrix plus a per-class attainment table, then
+gates: exit code is 1 when the report has no cells, when any cell
+carries an `error`, when any wire-replayed cell diverged, or when an
+interactive class under the `nominal` scenario attained zero — the
+canary for SLO plumbing silently breaking. Malformed cells (not a
+dict, missing fields) are rendered as `??` rows and counted as errors
+rather than crashing the renderer, so a truncated report still shows
+whatever survived.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fmt_f(value, digits: int = 2) -> str:
+    try:
+        return f"{float(value):.{digits}f}"
+    except (TypeError, ValueError):
+        return "-"
+
+
+def fmt_pct(value) -> str:
+    try:
+        return f"{float(value):.0%}"
+    except (TypeError, ValueError):
+        return "-"
+
+
+def attainment(cell: dict, klass: str):
+    for row in cell.get("slo", []):
+        if isinstance(row, dict) and row.get("class") == klass:
+            return row.get("attainment")
+    return None
+
+
+def cell_status(cell: dict) -> str:
+    if cell.get("error") is not None:
+        return f"ERROR: {cell['error']}"
+    wire = cell.get("wire")
+    if wire is None:
+        return "ok"
+    if wire.get("clean"):
+        return "ok (wire)"
+    return f"WIRE FAIL ({len(wire.get('failures', []))})"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="gauntlet JSON from rtlm gauntlet --out")
+    args = ap.parse_args()
+
+    with open(args.report) as fh:
+        report = json.load(fh)
+    cells = report.get("cells", [])
+    if not cells:
+        print("gauntlet report has no cells", file=sys.stderr)
+        return 1
+
+    problems: list[str] = []
+    print(
+        f"### Scenario gauntlet ({len(cells)} cells, n={report.get('n', '?')} "
+        f"tasks/cell, seed {report.get('seed', '?')}; virtual-clock metrics)\n"
+    )
+    print(
+        "| scenario | policy | n | mean s | p95 s | p99 s | ttft p95 s | shed "
+        "| int att | batch att | status |"
+    )
+    print("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---|")
+    for cell in cells:
+        if not isinstance(cell, dict):
+            problems.append(f"malformed cell (not an object): {cell!r}")
+            print("| ?? | ?? | - | - | - | - | - | - | - | - | MALFORMED |")
+            continue
+        scenario = cell.get("scenario", "??")
+        policy = cell.get("policy", "??")
+        status = cell_status(cell)
+        if cell.get("error") is not None:
+            problems.append(f"{scenario}/{policy}: {cell['error']}")
+        elif cell.get("wire") is not None and not cell["wire"].get("clean"):
+            fails = cell["wire"].get("failures", [])
+            problems.append(f"{scenario}/{policy}: wire parity diverged ({len(fails)} failures)")
+        int_att = attainment(cell, "interactive")
+        if scenario == "nominal" and cell.get("error") is None:
+            # the gate's canary: interactive traffic must attain under
+            # nominal (under-capacity) load, whatever the policy
+            if int_att is None:
+                problems.append(f"{scenario}/{policy}: no interactive SLO row")
+            elif not int_att > 0.0:
+                problems.append(f"{scenario}/{policy}: zero interactive attainment")
+        print(
+            f"| {scenario} | {policy} | {fmt_f(cell.get('n_tasks'), 0)} "
+            f"| {fmt_f(cell.get('mean_response'))} | {fmt_f(cell.get('p95_response'))} "
+            f"| {fmt_f(cell.get('p99_response'))} | {fmt_f(cell.get('p95_ttft'))} "
+            f"| {fmt_pct(cell.get('shed_rate'))} | {fmt_pct(int_att)} "
+            f"| {fmt_pct(attainment(cell, 'batch'))} | {status} |"
+        )
+
+    print("\n### Per-class attainment (met / total; shed counts as a violation)\n")
+    print("| scenario | policy | class | n | met | shed | attainment |")
+    print("|---|---|---|---:|---:|---:|---:|")
+    for cell in cells:
+        if not isinstance(cell, dict) or cell.get("error") is not None:
+            continue
+        for row in cell.get("slo", []):
+            if not isinstance(row, dict):
+                continue
+            print(
+                f"| {cell.get('scenario', '??')} | {cell.get('policy', '??')} "
+                f"| {row.get('class', '??')} | {fmt_f(row.get('n'), 0)} "
+                f"| {fmt_f(row.get('met'), 0)} | {fmt_f(row.get('shed'), 0)} "
+                f"| {fmt_pct(row.get('attainment'))} |"
+            )
+
+    if problems:
+        print("\n### Problems\n")
+        for problem in problems:
+            print(f"- {problem}")
+        print(f"\n**{len(problems)} problem(s) across {len(cells)} cells.**")
+        return 1
+    print(f"\nAll {len(cells)} cells clean.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
